@@ -1,0 +1,38 @@
+//! Distributed scenario (Table 1 settings e/f): 8 simulated workers,
+//! full-parameter training, GRPO-GA (gradient accumulation over all n)
+//! vs GRPO-PODS (down-sample to m before the update phase).
+//!
+//! Demonstrates the paper's central systems claim: at equal total rollouts,
+//! PODS runs 4x fewer synchronized micro-steps, so the update phase — the
+//! memory/communication-bound part — shrinks accordingly.
+//!
+//! ```sh
+//! cargo run --release --example distributed_ga_vs_pods -- [--quick]
+//! ```
+
+use pods::exp::{fig3, Scale};
+use pods::hwsim::HwModel;
+
+fn main() -> anyhow::Result<()> {
+    // First, the cost model's view of the trade (no training needed):
+    let hw = HwModel { workers: 8, mem_capacity_rollouts: 4, ..Default::default() };
+    let n_total = 128; // 64 rollouts x 2 prompts per iteration
+    let m_total = 32;
+    println!("hwsim, 8 workers, mem ceiling 4 rollouts/device:");
+    println!(
+        "  GRPO-GA  update on n={n_total}: {:>6.2}s ({} micro-steps)",
+        hw.update_time(n_total, false),
+        hw.forced_micro_steps(n_total)
+    );
+    println!(
+        "  GRPO-PODS update on m={m_total}: {:>6.2}s ({} micro-steps)",
+        hw.update_time(m_total, false),
+        hw.forced_micro_steps(m_total)
+    );
+
+    // Then the real thing: setting (e) = GA vs PODS with training.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = if quick { Scale::Quick } else { Scale::Full };
+    fig3::run_setting(&pods::default_artifacts_dir(), "e", scale, "results")?;
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Down-sampling rule comparison (Fig. 5) plus a pure-algorithm showcase:
+//! what each rule selects from the same reward multiset, and the full
+//! training comparison on setting (a).
+//!
+//! ```sh
+//! cargo run --release --example downsample_rules -- [--quick] [--no-train]
+//! ```
+
+use pods::coordinator::downsample::{subset_variance, Rule};
+use pods::exp::{fig5, Scale};
+use pods::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // A typical discrete RLVR reward multiset (accuracy+format+tags).
+    let rewards = vec![3.0f32, 0.0, 2.0, 2.0, 0.25, 3.0, 1.0, 0.5, 2.0, 0.0, 3.0, 0.25];
+    let m = 4;
+    let mut rng = Rng::seed_from_u64(0);
+    println!("rewards: {rewards:?}, m = {m}");
+    for rule in [Rule::MaxVariance, Rule::MaxReward, Rule::Random, Rule::Percentile] {
+        let sel = rule.select(&rewards, m, &mut rng);
+        let vals: Vec<f32> = sel.iter().map(|&i| rewards[i]).collect();
+        println!(
+            "  {:<13} -> indices {:?} rewards {:?} (variance {:.3})",
+            rule.name(),
+            sel,
+            vals,
+            subset_variance(&rewards, &sel)
+        );
+    }
+
+    if std::env::args().any(|a| a == "--no-train") {
+        return Ok(());
+    }
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = if quick { Scale::Quick } else { Scale::Full };
+    fig5::run(&pods::default_artifacts_dir(), scale, "results")?;
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! (n, m) sweep — the Fig. 4 deployment-guidance study as an example:
+//! how rollout size n (diminishing returns) and update size m (robust
+//! until very small) affect GRPO-PODS.
+//!
+//! ```sh
+//! cargo run --release --example sweep_nm -- [--quick]
+//! ```
+
+use pods::exp::{fig4, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = if quick { Scale::Quick } else { Scale::Full };
+    fig4::run(&pods::default_artifacts_dir(), scale, "results")?;
+    println!("rows: results/fig4.csv");
+    Ok(())
+}

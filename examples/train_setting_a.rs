@@ -1,0 +1,20 @@
+//! Setting (a) end-to-end (Table 1): the paper's single-GPU LoRA scenario —
+//! arith task, LoRA adapters over a frozen SFT base, GRPO-PODS(n=64, m=16)
+//! vs the vanilla GRPO(16) baseline, accuracy-vs-wallclock comparison.
+//!
+//! This is the Fig. 3(a) driver exposed as a runnable example:
+//!
+//! ```sh
+//! cargo run --release --example train_setting_a            # full
+//! cargo run --release --example train_setting_a -- --quick # smoke
+//! ```
+
+use pods::exp::{fig3, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = if quick { Scale::Quick } else { Scale::Full };
+    fig3::run_setting(&pods::default_artifacts_dir(), "a", scale, "results")?;
+    println!("CSV series: results/fig3_a_pods_*.csv vs results/fig3_a_grpo_*.csv");
+    Ok(())
+}

@@ -1,0 +1,244 @@
+"""AOT compile path: lower every L2 program to HLO text + meta.json.
+
+This is the only place Python touches the system: ``make artifacts`` runs it
+once, and the Rust coordinator is self-contained afterwards.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each *profile* (model dims × batch shapes × LoRA mode) produces one artifact
+directory::
+
+    artifacts/<profile>/
+      init.hlo.txt      (seed)                                    -> (params)
+      sft.hlo.txt       (params,m,v,step,tokens,pad,mask,lr)      -> (params,m,v,loss)
+      rollout.hlo.txt   (params,[lora],prompts,pad,seed,temp)     -> (tokens,logprobs,gen_mask,gen_len)
+      grad.hlo.txt      (train,[base],tokens,pad,mask,old_lp,adv,ref_lp,kl) -> (grads,loss,clip_frac,kl)
+      update.hlo.txt    (train,m,v,step,grads,lr)                 -> (train,m,v)
+      score.hlo.txt     (params,[lora],tokens,pad)                -> (logprobs)
+      meta.json         dims, vocab, param offset table, program signatures
+
+The greedy eval path reuses ``rollout`` with temperature <= 0.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import vocab as V
+
+f32 = jnp.float32
+i32 = jnp.int32
+u32 = jnp.uint32
+
+
+# One profile per (model size, shapes, tuning mode). Table 1 settings map to
+# these via configs/*.toml on the Rust side.
+PROFILES = {
+    # fast-compiling tiny model for Rust integration tests
+    "micro": M.ModelConfig(
+        d_model=32, layers=2, heads=2, d_ff=64, seq_len=24, prompt_len=8,
+        rollout_batch=4, update_batch=2, pad_multiple=256, attn_block=8,
+    ),
+    # the workhorse: settings (a)-(f) at laptop scale, full-parameter
+    "base": M.ModelConfig(
+        d_model=128, layers=4, heads=4, d_ff=512, seq_len=96, prompt_len=32,
+        rollout_batch=16, update_batch=8, pad_multiple=4096, attn_block=32,
+    ),
+    # LoRA variant of base (settings a-d train adapters on a frozen base)
+    "lora": M.ModelConfig(
+        d_model=128, layers=4, heads=4, d_ff=512, seq_len=96, prompt_len=32,
+        rollout_batch=16, update_batch=8, pad_multiple=4096, attn_block=32,
+        lora_rank=16, lora_alpha=16.0,
+    ),
+    # ~99M-parameter config for the e2e_100m composition proof
+    "big": M.ModelConfig(
+        d_model=768, layers=14, heads=12, d_ff=3072, seq_len=64, prompt_len=24,
+        rollout_batch=4, update_batch=2, pad_multiple=65536, attn_block=8,
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args, outs):
+    def fmt(x):
+        return {"dtype": str(x.dtype), "shape": list(x.shape)}
+
+    return {"inputs": [dict(name=n, **fmt(a)) for n, a in args], "outputs": [dict(name=n, **fmt(o)) for n, o in outs]}
+
+
+def build_programs(cfg: M.ModelConfig):
+    """Return {name: (fn, [(argname, ShapeDtypeStruct)])} for one profile."""
+    Np = M.param_count(cfg)
+    Nl = M.lora_count(cfg) if cfg.lora_rank else 0
+    Nt = Nl if cfg.lora_rank else Np  # trainable vector length
+    Br, Bu = cfg.rollout_batch, cfg.update_batch
+    T, P, G = cfg.seq_len, cfg.prompt_len, cfg.gen_len
+    s = jax.ShapeDtypeStruct
+    lora = cfg.lora_rank > 0
+
+    progs = {}
+
+    if not lora:
+        progs["init"] = (
+            lambda seed: (M.init_params(cfg, seed),),
+            [("seed", s((), u32))],
+            ["params"],
+        )
+        progs["sft"] = (
+            lambda p, m, v, step, toks, pad, mask, lr: M.sft_step(cfg, p, m, v, step, toks, pad, mask, lr),
+            [
+                ("params", s((Np,), f32)), ("m", s((Np,), f32)), ("v", s((Np,), f32)),
+                ("step", s((), i32)), ("tokens", s((Bu, T), i32)), ("pad_len", s((Bu,), i32)),
+                ("loss_mask", s((Bu, T), f32)), ("lr", s((), f32)),
+            ],
+            ["params", "m", "v", "loss"],
+        )
+    else:
+        progs["init"] = (
+            lambda seed: (M.init_lora(cfg, seed),),
+            [("seed", s((), u32))],
+            ["lora"],
+        )
+
+    if lora:
+        progs["rollout"] = (
+            lambda p, lo, pr, pad, seed, temp: M.rollout(cfg, p, pr, pad, seed, temp, lora_flat=lo),
+            [
+                ("params", s((Np,), f32)), ("lora", s((Nl,), f32)),
+                ("prompts", s((Br, P), i32)), ("pad_len", s((Br,), i32)),
+                ("seed", s((), u32)), ("temperature", s((), f32)),
+            ],
+            ["tokens", "logprobs", "gen_mask", "gen_len"],
+        )
+        progs["grad"] = (
+            lambda tr, base, toks, pad, mask, olp, adv, rlp, klc: M.grpo_grad(
+                cfg, tr, toks, pad, mask, olp, adv, rlp, klc, base=base
+            ),
+            [
+                ("trainable", s((Nt,), f32)), ("base", s((Np,), f32)),
+                ("tokens", s((Bu, T), i32)), ("pad_len", s((Bu,), i32)),
+                ("gen_mask", s((Bu, G), f32)), ("old_lp", s((Bu, G), f32)),
+                ("adv", s((Bu,), f32)), ("ref_lp", s((Bu, G), f32)), ("kl_coef", s((), f32)),
+            ],
+            ["grads", "loss", "clip_frac", "kl"],
+        )
+        progs["score"] = (
+            lambda p, lo, toks, pad: (M.gen_logprobs(cfg, p, toks, pad, lora_flat=lo),),
+            [
+                ("params", s((Np,), f32)), ("lora", s((Nl,), f32)),
+                ("tokens", s((Br, T), i32)), ("pad_len", s((Br,), i32)),
+            ],
+            ["logprobs"],
+        )
+    else:
+        progs["rollout"] = (
+            lambda p, pr, pad, seed, temp: M.rollout(cfg, p, pr, pad, seed, temp),
+            [
+                ("params", s((Np,), f32)),
+                ("prompts", s((Br, P), i32)), ("pad_len", s((Br,), i32)),
+                ("seed", s((), u32)), ("temperature", s((), f32)),
+            ],
+            ["tokens", "logprobs", "gen_mask", "gen_len"],
+        )
+        progs["grad"] = (
+            lambda tr, toks, pad, mask, olp, adv, rlp, klc: M.grpo_grad(
+                cfg, tr, toks, pad, mask, olp, adv, rlp, klc
+            ),
+            [
+                ("trainable", s((Nt,), f32)),
+                ("tokens", s((Bu, T), i32)), ("pad_len", s((Bu,), i32)),
+                ("gen_mask", s((Bu, G), f32)), ("old_lp", s((Bu, G), f32)),
+                ("adv", s((Bu,), f32)), ("ref_lp", s((Bu, G), f32)), ("kl_coef", s((), f32)),
+            ],
+            ["grads", "loss", "clip_frac", "kl"],
+        )
+        progs["score"] = (
+            lambda p, toks, pad: (M.gen_logprobs(cfg, p, toks, pad),),
+            [
+                ("params", s((Np,), f32)),
+                ("tokens", s((Br, T), i32)), ("pad_len", s((Br,), i32)),
+            ],
+            ["logprobs"],
+        )
+
+    progs["update"] = (
+        lambda tr, m, v, step, g, lr: M.apply_update(cfg, tr, m, v, step, g, lr),
+        [
+            ("trainable", s((Nt,), f32)), ("m", s((Nt,), f32)), ("v", s((Nt,), f32)),
+            ("step", s((), i32)), ("grads", s((Nt,), f32)), ("lr", s((), f32)),
+        ],
+        ["trainable", "m", "v"],
+    )
+    return progs
+
+
+def lower_profile(name: str, out_root: str, verbose=True):
+    cfg = PROFILES[name]
+    out_dir = os.path.join(out_root, name)
+    os.makedirs(out_dir, exist_ok=True)
+    progs = build_programs(cfg)
+    signatures = {}
+    for pname, (fn, args, out_names) in progs.items():
+        shapes = [a for _, a in args]
+        lowered = jax.jit(fn).lower(*shapes)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{pname}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *shapes)
+        outs = outs if isinstance(outs, (tuple, list)) else (outs,)
+        signatures[pname] = _sig(args, list(zip(out_names, outs)))
+        if verbose:
+            print(f"  {name}/{pname}: {len(text)} chars, {len(args)} in / {len(outs)} out")
+
+    meta = {
+        "profile": name,
+        "config": dataclasses.asdict(cfg),
+        "gen_len": cfg.gen_len,
+        "param_count": M.param_count(cfg),
+        "lora_count": M.lora_count(cfg) if cfg.lora_rank else 0,
+        "trainable_count": M.lora_count(cfg) if cfg.lora_rank else M.param_count(cfg),
+        "param_spec": M.spec_meta(M.param_specs(cfg), cfg.pad_multiple),
+        "lora_spec": M.spec_meta(M.lora_specs(cfg), cfg.pad_multiple) if cfg.lora_rank else None,
+        "vocab": V.vocab_meta(),
+        "programs": signatures,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return out_dir
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--profiles", default="micro,base,lora")
+    args = ap.parse_args()
+    for p in args.profiles.split(","):
+        p = p.strip()
+        if not p:
+            continue
+        if p not in PROFILES:
+            raise SystemExit(f"unknown profile {p!r}; have {sorted(PROFILES)}")
+        print(f"lowering profile {p} ...")
+        lower_profile(p, args.out)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

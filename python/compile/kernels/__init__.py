@@ -1,0 +1,1 @@
+"""L1 Pallas kernels: the compute hot spots, checked against ref.py oracles."""

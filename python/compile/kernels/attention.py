@@ -1,0 +1,146 @@
+"""Blocked causal attention Pallas kernel (flash-style online softmax).
+
+This is the GPU→TPU hardware adaptation the paper's inference numbers imply
+(DESIGN.md §9): where a CUDA flash-attention assigns a *threadblock* per
+(batch, head) with K/V tiles staged through shared memory, here the schedule
+is expressed with ``BlockSpec``s — the grid is ``(B*H, T/blk_q, T/blk_k)``,
+Q/K/V tiles stream HBM→VMEM, and the online-softmax state (running max,
+running denominator, unnormalised output) lives in revisited output blocks
+whose index maps ignore the K axis.  The ``blk_q × blk_k`` score matmul and
+the ``blk_k × dh`` value matmul are shaped to feed the MXU.
+
+Masking implements the model's left-padding convention: key ``j`` is visible
+to query ``i`` iff ``pad_len <= j <= i``.  Fully-masked query rows (padding
+queries) degrade to uniform attention — finite values that the loss masks.
+
+The ``custom_vjp`` backward recomputes standard attention in jnp (the
+rematerialisation strategy of flash-attention backward) — the forward stays
+on the Pallas path inside the lowered HLO, which is what the rollout/eval
+artifacts execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG, attention_ref
+
+DEFAULT_BLK_Q = 32
+DEFAULT_BLK_K = 32
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, pad_ref, o_ref, m_ref, l_ref, *, blk_q, blk_k, nk, scale, t_real):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    q = q_ref[0]  # (blk_q, dh)
+    k = k_ref[0]  # (blk_k, dh)
+    v = v_ref[0]  # (blk_k, dh)
+    pad = pad_ref[0]
+    s = jnp.dot(q, k.T) * scale  # (blk_q, blk_k) — MXU tile
+    qpos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = kj * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    visible = (kpos <= qpos) & (kpos >= pad) & (kpos < t_real)
+    s = jnp.where(visible, s, NEG)
+    tile_max = jnp.max(s, axis=1)  # (blk_q,)
+
+    @pl.when(kj == 0)
+    def _init():
+        p = jnp.exp(s - tile_max[:, None])
+        m_ref[...] = tile_max[None]
+        l_ref[...] = jnp.sum(p, axis=1)[None]
+        o_ref[...] = jnp.dot(p, v)[None]
+
+    @pl.when(kj > 0)
+    def _accum():
+        m_old = m_ref[0]
+        m_new = jnp.maximum(m_old, tile_max)
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = (l_ref[0] * alpha + jnp.sum(p, axis=1))[None]
+        o_ref[...] = (o_ref[0] * alpha[:, None] + jnp.dot(p, v))[None]
+        m_ref[...] = m_new[None]
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[...] = o_ref[...] / l_ref[...][..., None]
+
+
+def _attention_impl(q, k, v, pad_len, blk_q, blk_k):
+    B, H, T, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    tp = max(-(-T // blk_q) * blk_q, -(-T // blk_k) * blk_k)
+    # round padded length up so both block sizes divide it
+    import math
+
+    tp = math.lcm(blk_q, blk_k) * -(-T // math.lcm(blk_q, blk_k))
+
+    def pad_t(x):
+        if tp == T:
+            return x
+        return jnp.concatenate(
+            [x, jnp.zeros((B, H, tp - T, dh), x.dtype)], axis=2
+        )
+
+    qf = pad_t(q).reshape(B * H, tp, dh)
+    kf = pad_t(k).reshape(B * H, tp, dh)
+    vf = pad_t(v).reshape(B * H, tp, dh)
+    padf = jnp.repeat(pad_len.astype(jnp.int32), H)  # (B*H,)
+    nq = tp // blk_q
+    nk = tp // blk_k
+    kernel = functools.partial(
+        _attn_kernel, blk_q=blk_q, blk_k=blk_k, nk=nk, scale=scale, t_real=T
+    )
+    o, _m, _l = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda i, qi, kj: (i, qi, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda i, qi, kj: (i, kj, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda i, qi, kj: (i, kj, 0)),
+            pl.BlockSpec((1,), lambda i, qi, kj: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda i, qi, kj: (i, qi, 0)),
+            pl.BlockSpec((1, blk_q), lambda i, qi, kj: (i, qi)),
+            pl.BlockSpec((1, blk_q), lambda i, qi, kj: (i, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, tp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, tp), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, tp), jnp.float32),
+        ],
+        interpret=True,
+    )(qf, kf, vf, padf)
+    return o.reshape(B, H, tp, dh)[:, :, :T, :]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def attention(q, k, v, pad_len, blk_q=DEFAULT_BLK_Q, blk_k=DEFAULT_BLK_K):
+    """Pallas flash attention: f32[B,H,T,dh] x3, i32[B] -> f32[B,H,T,dh].
+
+    Matches :func:`ref.attention_ref`; differentiable w.r.t. q, k, v.
+    """
+    return _attention_impl(q, k, v, pad_len, blk_q, blk_k)
+
+
+def _vjp_fwd(q, k, v, pad_len, blk_q, blk_k):
+    o = _attention_impl(q, k, v, pad_len, blk_q, blk_k)
+    return o, (q, k, v, pad_len)
+
+
+def _vjp_bwd(blk_q, blk_k, res, g):
+    q, k, v, pad_len = res
+    # Rematerialised backward: differentiate the reference formulation.
+    _, vjp = jax.vjp(lambda q_, k_, v_: attention_ref(q_, k_, v_, pad_len), q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def attention_reference(q, k, v, pad_len):
+    """Oracle re-export for tests/benchmarks."""
+    return attention_ref(q, k, v, pad_len)

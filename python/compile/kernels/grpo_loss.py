@@ -1,0 +1,159 @@
+"""Fused GRPO clipped-surrogate Pallas kernel.
+
+Computes the per-rollout objective of the GRPO-PODS loss (paper Eq. 2):
+
+    obj_i = (1 / |o_i|) * sum_t min(r_t * a_i, clip(r_t, 1-eps, 1+eps) * a_i)
+
+in a single pass over ``[B, G]`` token log-prob pairs, fusing ratio,
+clipping, advantage broadcast, the length mask and the per-rollout token
+mean.  The naive jnp formulation materialises six ``[B, G]`` intermediates;
+this kernel keeps one tile resident in VMEM.
+
+Also emits the per-rollout clipped-token fraction (a standard PPO/GRPO
+telemetry signal the Rust coordinator logs).
+
+The ``custom_vjp`` backward is itself a Pallas kernel: the surrogate is
+piecewise-linear in the ratio, so
+
+    d obj_i / d new_lp_{i,t} = mask * r_t * a_i * active / |o_i|
+
+where ``active`` selects whichever branch the ``min`` picked, with the
+clipped branch contributing gradient only while the ratio is inside the
+clip interval (the "slow to adopt, quick to abandon" asymmetry).
+
+Grid: 1-D over B-blocks; each block reduces its full G extent (G is the
+generation budget, ≤ a few hundred — one VMEM tile).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import grpo_loss_ref
+
+DEFAULT_BLK_B = 8
+
+
+def _fwd_kernel(nlp_ref, olp_ref, adv_ref, mask_ref, obj_ref, clip_ref, *, eps):
+    nlp = nlp_ref[...]
+    olp = olp_ref[...]
+    mask = mask_ref[...]
+    a = adv_ref[...][:, None]
+    ratio = jnp.exp(nlp - olp)
+    unclipped = ratio * a
+    clipped = jnp.clip(ratio, 1.0 - eps, 1.0 + eps) * a
+    tok = jnp.minimum(unclipped, clipped) * mask
+    cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    obj_ref[...] = jnp.sum(tok, axis=1) / cnt
+    clip_ref[...] = jnp.sum(jnp.where(clipped < unclipped, mask, 0.0), axis=1) / cnt
+
+
+def _bwd_kernel(nlp_ref, olp_ref, adv_ref, mask_ref, g_ref, dnlp_ref, *, eps):
+    nlp = nlp_ref[...]
+    olp = olp_ref[...]
+    mask = mask_ref[...]
+    a = adv_ref[...][:, None]
+    g = g_ref[...][:, None]
+    ratio = jnp.exp(nlp - olp)
+    unclipped = ratio * a
+    clipped = jnp.clip(ratio, 1.0 - eps, 1.0 + eps) * a
+    # min() picks the unclipped branch (grad = r*a) or the clipped branch
+    # (grad = r*a while inside the interval, 0 once saturated).
+    inside = (ratio > 1.0 - eps) & (ratio < 1.0 + eps)
+    active = jnp.where(unclipped <= clipped, 1.0, jnp.where(inside, 1.0, 0.0))
+    cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)[:, None]
+    dnlp_ref[...] = g * mask * ratio * a * active / cnt
+
+
+def _pad_b(x, blk):
+    b = x.shape[0]
+    pad = (-b) % blk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, b
+
+
+def _call_fwd(new_lp, old_lp, adv, mask, eps, blk_b):
+    nlp, b0 = _pad_b(new_lp, blk_b)
+    olp, _ = _pad_b(old_lp, blk_b)
+    a, _ = _pad_b(adv, blk_b)
+    mk, _ = _pad_b(mask, blk_b)
+    bp, g = nlp.shape
+    kernel = functools.partial(_fwd_kernel, eps=eps)
+    obj, clip_frac = pl.pallas_call(
+        kernel,
+        grid=(bp // blk_b,),
+        in_specs=[
+            pl.BlockSpec((blk_b, g), lambda i: (i, 0)),
+            pl.BlockSpec((blk_b, g), lambda i: (i, 0)),
+            pl.BlockSpec((blk_b,), lambda i: (i,)),
+            pl.BlockSpec((blk_b, g), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_b,), lambda i: (i,)),
+            pl.BlockSpec((blk_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp,), jnp.float32),
+            jax.ShapeDtypeStruct((bp,), jnp.float32),
+        ],
+        interpret=True,
+    )(nlp, olp, a, mk)
+    return obj[:b0], clip_frac[:b0]
+
+
+def _call_bwd(new_lp, old_lp, adv, mask, g_obj, eps, blk_b):
+    nlp, b0 = _pad_b(new_lp, blk_b)
+    olp, _ = _pad_b(old_lp, blk_b)
+    a, _ = _pad_b(adv, blk_b)
+    mk, _ = _pad_b(mask, blk_b)
+    gg, _ = _pad_b(g_obj, blk_b)
+    bp, g = nlp.shape
+    kernel = functools.partial(_bwd_kernel, eps=eps)
+    dnlp = pl.pallas_call(
+        kernel,
+        grid=(bp // blk_b,),
+        in_specs=[
+            pl.BlockSpec((blk_b, g), lambda i: (i, 0)),
+            pl.BlockSpec((blk_b, g), lambda i: (i, 0)),
+            pl.BlockSpec((blk_b,), lambda i: (i,)),
+            pl.BlockSpec((blk_b, g), lambda i: (i, 0)),
+            pl.BlockSpec((blk_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk_b, g), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, g), jnp.float32),
+        interpret=True,
+    )(nlp, olp, a, mk, gg)
+    return dnlp[:b0]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def grpo_objective(new_lp, old_lp, adv, mask, eps, blk_b=DEFAULT_BLK_B):
+    """Pallas fused GRPO surrogate: returns (obj[B], clip_frac[B]).
+
+    Differentiable w.r.t. ``new_lp`` only (old_lp/adv/mask are data).
+    Matches :func:`ref.grpo_loss_ref`.
+    """
+    return _call_fwd(new_lp, old_lp, adv, mask, eps, blk_b)
+
+
+def _vjp_fwd(new_lp, old_lp, adv, mask, eps, blk_b):
+    out = _call_fwd(new_lp, old_lp, adv, mask, eps, blk_b)
+    return out, (new_lp, old_lp, adv, mask)
+
+
+def _vjp_bwd(eps, blk_b, res, cotangents):
+    new_lp, old_lp, adv, mask = res
+    g_obj, _g_clip = cotangents  # clip_frac is telemetry: no gradient
+    dnlp = _call_bwd(new_lp, old_lp, adv, mask, g_obj, eps, blk_b)
+    return dnlp, None, None, None
+
+
+grpo_objective.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def grpo_objective_reference(new_lp, old_lp, adv, mask, eps):
+    """Oracle re-export for tests/benchmarks."""
+    return grpo_loss_ref(new_lp, old_lp, adv, mask, eps)

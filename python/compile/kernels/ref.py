@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: ``python/tests`` asserts each Pallas
+kernel (interpret mode) matches its oracle across hypothesis-swept shapes.
+They are also used as the backward pass of the attention kernel's
+``custom_vjp`` (recompute-based, see kernels/attention.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30  # finite "-inf": avoids inf-inf NaNs in online-softmax algebra
+
+
+def logprob_ref(logits, labels):
+    """Token log-probabilities.
+
+    logits: f32[R, V], labels: i32[R]  ->  f32[R]
+    (callers flatten [B, T, V] to [B*T, V])
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lbl = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lbl - lse
+
+
+def grpo_loss_ref(new_lp, old_lp, adv, mask, eps):
+    """GRPO clipped surrogate, per-rollout objective.
+
+    new_lp, old_lp, mask: f32[B, G]; adv: f32[B]; eps: python float.
+    Returns (obj[B], clip_frac[B]) where obj is the per-rollout token-mean
+    clipped objective of Eq. (2) and clip_frac the fraction of generated
+    tokens where the clipped branch is strictly active.
+    """
+    ratio = jnp.exp(new_lp - old_lp)
+    a = adv[:, None]
+    unclipped = ratio * a
+    clipped = jnp.clip(ratio, 1.0 - eps, 1.0 + eps) * a
+    tok = jnp.minimum(unclipped, clipped) * mask
+    cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    obj = jnp.sum(tok, axis=1) / cnt
+    clip_frac = jnp.sum(jnp.where(clipped < unclipped, mask, 0.0), axis=1) / cnt
+    return obj, clip_frac
+
+
+def attention_ref(q, k, v, pad_len):
+    """Causal, left-pad-masked multi-head attention.
+
+    q, k, v: f32[B, H, T, dh]; pad_len: i32[B] (tokens < pad_len are padding).
+    Key j is visible to query i iff pad_len <= j <= i.  Fully-masked query
+    rows (i < pad_len, i.e. padding queries) degrade to uniform attention —
+    finite garbage that downstream losses mask out.
+    """
+    B, H, T, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    causal = kpos <= qpos  # [T, T]
+    valid_k = jnp.arange(T)[None, None, None, :] >= pad_len[:, None, None, None]
+    mask = causal[None, None, :, :] & valid_k  # [B, 1, T, T]
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def adamw_ref(p, g, m, v, step, lr, b1, b2, eps, wd):
+    """Decoupled AdamW over flat vectors. step is the 0-based step index."""
+    t = step + 1
+    mn = b1 * m + (1.0 - b1) * g
+    vn = b2 * v + (1.0 - b2) * g * g
+    c1 = 1.0 / (1.0 - b1**t)
+    c2 = 1.0 / (1.0 - b2**t)
+    upd = (mn * c1) / (jnp.sqrt(vn * c2) + eps) + wd * p
+    return p - lr * upd, mn, vn

@@ -1,0 +1,454 @@
+"""L2: the policy model and every training/inference computation, in JAX.
+
+A decoder-only pre-LN transformer LM with learned positional embeddings and
+a weight-tied LM head.  All parameters live in **one flat f32 vector**
+(padded to a block multiple for the fused AdamW kernel) so the Rust runtime
+manages exactly three device buffers: params, adam-m, adam-v.
+
+Sequence layout: prompts are **left-padded** to ``prompt_len`` (``pad_len[b]``
+counts leading PAD tokens), so generation uniformly occupies positions
+``P .. T-1`` and every per-token tensor in the RL objective is ``[B, G]``.
+Positional embeddings are indexed by ``position - pad_len`` so padding does
+not shift the learned positions.
+
+Compute hot spots call the L1 Pallas kernels (attention, logprob,
+grpo_objective, adamw); ``use_pallas=False`` switches to the jnp oracles for
+differential testing.
+
+The functions here are pure; ``programs.py`` binds them into the AOT program
+signatures that ``aot.py`` lowers to HLO text.
+"""
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import vocab as V
+from .kernels import ref as kref
+from .kernels.adamw import adamw_update
+from .kernels.attention import attention as attention_pallas
+from .kernels.grpo_loss import grpo_objective
+from .kernels.logprob import logprob as logprob_pallas
+
+NEG = kref.NEG
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model/program dimensions; one profile == one artifact set."""
+
+    vocab: int = V.VOCAB_SIZE
+    d_model: int = 128
+    layers: int = 4
+    heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 96  # T = prompt_len + gen_len
+    prompt_len: int = 32  # P
+    rollout_batch: int = 16  # B_r: rollouts per inference-program call
+    update_batch: int = 8  # B_u: rollouts per grad-program micro-batch
+    lora_rank: int = 0  # 0 = full-parameter training
+    lora_alpha: float = 0.0  # scale = alpha / rank (paper: alpha == rank)
+    clip_eps: float = 0.2  # GRPO ratio clip
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.1  # Table 2
+    pad_multiple: int = 4096  # flat-vector padding for the AdamW kernel
+    attn_block: int = 32  # Pallas attention blk_q == blk_k
+
+    @property
+    def gen_len(self) -> int:
+        return self.seq_len - self.prompt_len
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+
+# ---------------------------------------------------------------------------
+# Parameter packing
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) spec of the full parameter set."""
+    d, dff = cfg.d_model, cfg.d_ff
+    specs = [("tok_emb", (cfg.vocab, d)), ("pos_emb", (cfg.seq_len, d))]
+    for l in range(cfg.layers):
+        specs += [
+            (f"l{l}.ln1_s", (d,)),
+            (f"l{l}.ln1_b", (d,)),
+            (f"l{l}.wq", (d, d)),
+            (f"l{l}.wk", (d, d)),
+            (f"l{l}.wv", (d, d)),
+            (f"l{l}.wo", (d, d)),
+            (f"l{l}.ln2_s", (d,)),
+            (f"l{l}.ln2_b", (d,)),
+            (f"l{l}.w1", (d, dff)),
+            (f"l{l}.b1", (dff,)),
+            (f"l{l}.w2", (dff, d)),
+            (f"l{l}.b2", (d,)),
+        ]
+    specs += [("lnf_s", (d,)), ("lnf_b", (d,))]
+    return specs
+
+
+def lora_specs(cfg: ModelConfig):
+    """Ordered (name, shape) spec of the LoRA adapter set (q and v proj)."""
+    r, d = cfg.lora_rank, cfg.d_model
+    specs = []
+    for l in range(cfg.layers):
+        specs += [
+            (f"l{l}.lora_qA", (r, d)),
+            (f"l{l}.lora_qB", (d, r)),
+            (f"l{l}.lora_vA", (r, d)),
+            (f"l{l}.lora_vB", (d, r)),
+        ]
+    return specs
+
+
+def _size(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+def flat_size(specs, pad_multiple):
+    n = sum(_size(s) for _, s in specs)
+    return n + (-n) % pad_multiple
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return flat_size(param_specs(cfg), cfg.pad_multiple)
+
+
+def lora_count(cfg: ModelConfig) -> int:
+    return flat_size(lora_specs(cfg), cfg.pad_multiple)
+
+
+def unpack(specs, flat):
+    """Flat f32[N] -> dict name -> array (static slices, free under XLA)."""
+    out = {}
+    off = 0
+    for name, shape in specs:
+        sz = _size(shape)
+        out[name] = flat[off : off + sz].reshape(shape)
+        off += sz
+    return out
+
+
+def pack(specs, tree, pad_multiple):
+    parts = [tree[name].reshape(-1) for name, _ in specs]
+    flat = jnp.concatenate(parts)
+    pad = (-flat.shape[0]) % pad_multiple
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat
+
+
+def spec_meta(specs, pad_multiple):
+    """JSON-ready offset table for meta.json (Rust checkpoint tooling)."""
+    out = []
+    off = 0
+    for name, shape in specs:
+        sz = _size(shape)
+        out.append({"name": name, "shape": list(shape), "offset": off, "size": sz})
+        off += sz
+    return {"entries": out, "used": off, "padded": off + (-off) % pad_multiple}
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed):
+    """GPT-2-style init, residual-scaled output projections. -> flat f32[Np]."""
+    specs = param_specs(cfg)
+    key = jax.random.key(jnp.asarray(seed, dtype=jnp.uint32))
+    keys = jax.random.split(key, len(specs))
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.layers)
+    tree = {}
+    for (name, shape), k in zip(specs, keys):
+        base = name.split(".")[-1]
+        if base.startswith("ln") or base in ("lnf_s",):
+            tree[name] = jnp.ones(shape, jnp.float32) if name.endswith("_s") else jnp.zeros(shape, jnp.float32)
+        elif name.endswith("_s"):
+            tree[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b") or base in ("b1", "b2"):
+            tree[name] = jnp.zeros(shape, jnp.float32)
+        elif base in ("wo", "w2"):
+            tree[name] = 0.02 * resid_scale * jax.random.normal(k, shape, jnp.float32)
+        else:
+            tree[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+    return pack(specs, tree, cfg.pad_multiple)
+
+
+def init_lora(cfg: ModelConfig, seed):
+    """LoRA init: A ~ N(0, 0.02), B = 0 (adapter starts as identity)."""
+    specs = lora_specs(cfg)
+    key = jax.random.key(jnp.asarray(seed, dtype=jnp.uint32))
+    keys = jax.random.split(key, len(specs))
+    tree = {}
+    for (name, shape), k in zip(specs, keys):
+        if name.endswith("A"):
+            tree[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+        else:
+            tree[name] = jnp.zeros(shape, jnp.float32)
+    return pack(specs, tree, cfg.pad_multiple)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, s, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * s + b
+
+
+def _proj(h, w, lora_a, lora_b, scale):
+    out = h @ w
+    if lora_a is not None:
+        out = out + (h @ lora_a.T) @ lora_b.T * scale
+    return out
+
+
+def _lora_parts(cfg, lt, l, which):
+    if lt is None:
+        return None, None, 0.0
+    scale = cfg.lora_alpha / max(cfg.lora_rank, 1)
+    return lt[f"l{l}.lora_{which}A"], lt[f"l{l}.lora_{which}B"], scale
+
+
+def forward(cfg: ModelConfig, pt, tokens, pad_len, lt=None, use_pallas=True, collect_kv=False):
+    """Teacher-forced forward.
+
+    pt: unpacked param dict; tokens: i32[B, S]; pad_len: i32[B];
+    lt: unpacked LoRA dict or None.
+    Returns logits f32[B, S, V]; with collect_kv also per-layer K/V
+    [L, B, H, S, dh] for prefill cache seeding.
+    """
+    B, S = tokens.shape
+    H, dh = cfg.heads, cfg.d_head
+    pos = jnp.clip(jnp.arange(S)[None, :] - pad_len[:, None], 0, cfg.seq_len - 1)
+    x = pt["tok_emb"][tokens] + jnp.take(pt["pos_emb"], pos, axis=0)
+    kvs = []
+    attn = attention_pallas if use_pallas else (lambda q, k, v, p, *a: kref.attention_ref(q, k, v, p))
+    for l in range(cfg.layers):
+        h = _layernorm(x, pt[f"l{l}.ln1_s"], pt[f"l{l}.ln1_b"])
+        qa, qb, qs = _lora_parts(cfg, lt, l, "q")
+        va, vb, vs = _lora_parts(cfg, lt, l, "v")
+        q = _proj(h, pt[f"l{l}.wq"], qa, qb, qs)
+        k = h @ pt[f"l{l}.wk"]
+        v = _proj(h, pt[f"l{l}.wv"], va, vb, vs)
+        q = q.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+        if collect_kv:
+            kvs.append((k, v))
+        o = attn(q, k, v, pad_len, cfg.attn_block, cfg.attn_block)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.d_model)
+        x = x + o @ pt[f"l{l}.wo"]
+        h2 = _layernorm(x, pt[f"l{l}.ln2_s"], pt[f"l{l}.ln2_b"])
+        x = x + jax.nn.gelu(h2 @ pt[f"l{l}.w1"] + pt[f"l{l}.b1"]) @ pt[f"l{l}.w2"] + pt[f"l{l}.b2"]
+    h = _layernorm(x, pt["lnf_s"], pt["lnf_b"])
+    logits = h @ pt["tok_emb"].T
+    if collect_kv:
+        ks = jnp.stack([k for k, _ in kvs])  # [L, B, H, S, dh]
+        vs = jnp.stack([v for _, v in kvs])
+        return logits, ks, vs
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode (inference phase)
+# ---------------------------------------------------------------------------
+
+
+def _decode_step(cfg: ModelConfig, pt, lt, cache_k, cache_v, tok, pos, pad_len):
+    """One autoregressive step at (shared) absolute position ``pos``.
+
+    cache_k/v: f32[L, B, H, T, dh]; tok: i32[B]; pos: i32 scalar.
+    Returns (logits[B, V], cache_k, cache_v).
+    """
+    B = tok.shape[0]
+    H, dh, T = cfg.heads, cfg.d_head, cfg.seq_len
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    p = jnp.clip(pos - pad_len, 0, cfg.seq_len - 1)
+    x = pt["tok_emb"][tok] + pt["pos_emb"][p]
+    kpos = jnp.arange(T)
+    visible = (kpos[None, :] <= pos) & (kpos[None, :] >= pad_len[:, None])  # [B, T]
+    for l in range(cfg.layers):
+        h = _layernorm(x, pt[f"l{l}.ln1_s"], pt[f"l{l}.ln1_b"])
+        qa, qb, qs = _lora_parts(cfg, lt, l, "q")
+        va, vb, vs = _lora_parts(cfg, lt, l, "v")
+        q = _proj(h, pt[f"l{l}.wq"], qa, qb, qs).reshape(B, H, dh)
+        k = (h @ pt[f"l{l}.wk"]).reshape(B, H, dh)
+        v = _proj(h, pt[f"l{l}.wv"], va, vb, vs).reshape(B, H, dh)
+        cache_k = jax.lax.dynamic_update_index_in_dim(
+            cache_k, jax.lax.dynamic_update_index_in_dim(cache_k[l], k[:, :, None, :], pos, axis=2), l, axis=0
+        )
+        cache_v = jax.lax.dynamic_update_index_in_dim(
+            cache_v, jax.lax.dynamic_update_index_in_dim(cache_v[l], v[:, :, None, :], pos, axis=2), l, axis=0
+        )
+        s = jnp.einsum("bhd,bhtd->bht", q, cache_k[l]) * scale
+        s = jnp.where(visible[:, None, :], s, NEG)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bht,bhtd->bhd", a, cache_v[l]).reshape(B, cfg.d_model)
+        x = x + o @ pt[f"l{l}.wo"]
+        h2 = _layernorm(x, pt[f"l{l}.ln2_s"], pt[f"l{l}.ln2_b"])
+        x = x + jax.nn.gelu(h2 @ pt[f"l{l}.w1"] + pt[f"l{l}.b1"]) @ pt[f"l{l}.w2"] + pt[f"l{l}.b2"]
+    h = _layernorm(x, pt["lnf_s"], pt["lnf_b"])
+    return h @ pt["tok_emb"].T, cache_k, cache_v
+
+
+def rollout(cfg: ModelConfig, flat, prompts, pad_len, seed, temperature, lora_flat=None, use_pallas=True):
+    """The inference phase: sample ``B_r`` rollouts with a KV cache.
+
+    prompts: i32[B, P] left-padded; pad_len: i32[B]; seed: u32 scalar;
+    temperature: f32 scalar — > 0 samples, <= 0 decodes greedily (the eval
+    path reuses this same program).
+
+    Returns:
+      tokens   i32[B, T]  prompt + generation (PAD after EOS)
+      logprobs f32[B, G]  behaviour log-probs of sampled tokens (temp-1
+                          distribution — the π_fixed of the GRPO ratio)
+      gen_mask f32[B, G]  1.0 through the EOS token, 0.0 after
+      gen_len  i32[B]     number of generated tokens incl. EOS
+    """
+    pt = unpack(param_specs(cfg), flat)
+    lt = unpack(lora_specs(cfg), lora_flat) if lora_flat is not None else None
+    B, P = prompts.shape
+    T, G = cfg.seq_len, cfg.gen_len
+    H, dh, L = cfg.heads, cfg.d_head, cfg.layers
+
+    logits_p, ks, vs = forward(cfg, pt, prompts, pad_len, lt, use_pallas, collect_kv=True)
+    cache_k = jnp.zeros((L, B, H, T, dh), jnp.float32)
+    cache_v = jnp.zeros((L, B, H, T, dh), jnp.float32)
+    cache_k = cache_k.at[:, :, :, :P, :].set(ks)
+    cache_v = cache_v.at[:, :, :, :P, :].set(vs)
+    last_logits = logits_p[:, P - 1, :]
+
+    key = jax.random.key(jnp.asarray(seed, dtype=jnp.uint32))
+
+    def step(carry, i):
+        cache_k, cache_v, logits, done, key = carry
+        key, sub = jax.random.split(key)
+        temp = jnp.maximum(temperature, 1e-6)
+        sampled = jax.random.categorical(sub, logits / temp, axis=-1).astype(jnp.int32)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = jnp.where(temperature > 0.0, sampled, greedy)
+        lp_all = jax.nn.log_softmax(logits, axis=-1)
+        lp = jnp.take_along_axis(lp_all, tok[:, None], axis=1)[:, 0]
+        tok = jnp.where(done, V.PAD, tok)
+        lp = jnp.where(done, 0.0, lp)
+        mask = jnp.where(done, 0.0, 1.0)
+        done = done | (tok == V.EOS)
+        logits2, cache_k, cache_v = _decode_step(cfg, pt, lt, cache_k, cache_v, tok, P + i, pad_len)
+        return (cache_k, cache_v, logits2, done, key), (tok, lp, mask)
+
+    init = (cache_k, cache_v, last_logits, jnp.zeros((B,), bool), key)
+    _, (toks, lps, masks) = jax.lax.scan(step, init, jnp.arange(G))
+    gen_tokens = toks.T  # [B, G]
+    logprobs = lps.T
+    gen_mask = masks.T
+    tokens = jnp.concatenate([prompts, gen_tokens], axis=1)
+    gen_len = jnp.sum(gen_mask, axis=1).astype(jnp.int32)
+    return tokens, logprobs, gen_mask, gen_len
+
+
+# ---------------------------------------------------------------------------
+# Log-probs / losses (policy-update phase)
+# ---------------------------------------------------------------------------
+
+
+def gen_logprobs(cfg: ModelConfig, flat, tokens, pad_len, lora_flat=None, use_pallas=True):
+    """Teacher-forced log-probs of the generated region: -> f32[B, G].
+
+    Position P-1 .. T-2 logits predict tokens at P .. T-1.
+    """
+    pt = unpack(param_specs(cfg), flat)
+    lt = unpack(lora_specs(cfg), lora_flat) if lora_flat is not None else None
+    B, T = tokens.shape
+    P, G = cfg.prompt_len, cfg.gen_len
+    logits = forward(cfg, pt, tokens, pad_len, lt, use_pallas)[:, P - 1 : T - 1, :]
+    labels = tokens[:, P:T]
+    lp_fn = logprob_pallas if use_pallas else (lambda lg, lb: kref.logprob_ref(lg, lb))
+    lp = lp_fn(logits.reshape(B * G, cfg.vocab), labels.reshape(B * G))
+    return lp.reshape(B, G)
+
+
+def grpo_grad(cfg: ModelConfig, trainable, tokens, pad_len, gen_mask, old_lp, adv, ref_lp, kl_coef, base=None, use_pallas=True):
+    """One policy-update micro-batch: GRPO-PODS objective fwd+bwd.
+
+    trainable: the flat vector being optimised (full params, or the LoRA
+    vector when ``base`` is the frozen full-parameter vector).
+    Returns (grads[like trainable], loss, clip_frac, kl).
+    Gradient *accumulation across micro-batches happens in Rust* — this is
+    deliberately a single micro-batch so GRPO-GA's extra sequential steps
+    are real work the coordinator schedules.
+    """
+    lora_mode = base is not None
+
+    def loss_fn(tr):
+        if lora_mode:
+            new_lp = gen_logprobs(cfg, base, tokens, pad_len, lora_flat=tr, use_pallas=use_pallas)
+        else:
+            new_lp = gen_logprobs(cfg, tr, tokens, pad_len, use_pallas=use_pallas)
+        if use_pallas:
+            obj_rows, clip_rows = grpo_objective(new_lp, old_lp, adv, gen_mask, cfg.clip_eps)
+        else:
+            obj_rows, clip_rows = kref.grpo_loss_ref(new_lp, old_lp, adv, gen_mask, cfg.clip_eps)
+        obj = jnp.mean(obj_rows)
+        # k3 KL estimator vs the reference policy (Table 2: only setting (b)
+        # has kl_coef > 0; Rust passes zeros for ref_lp otherwise).
+        delta = ref_lp - new_lp
+        kl_tok = (jnp.exp(delta) - delta - 1.0) * gen_mask
+        kl = jnp.sum(kl_tok) / jnp.maximum(jnp.sum(gen_mask), 1.0)
+        loss = -obj + kl_coef * kl
+        clip_frac = jnp.mean(clip_rows)
+        return loss, (clip_frac, kl)
+
+    (loss, (clip_frac, kl)), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+    return grads, loss, clip_frac, kl
+
+
+def sft_loss(cfg: ModelConfig, flat, tokens, pad_len, loss_mask, use_pallas=True):
+    """Next-token cross-entropy over masked positions (full sequence)."""
+    pt = unpack(param_specs(cfg), flat)
+    B, T = tokens.shape
+    logits = forward(cfg, pt, tokens, pad_len, None, use_pallas)[:, : T - 1, :]
+    labels = tokens[:, 1:T]
+    mask = loss_mask[:, 1:T]
+    lp_fn = logprob_pallas if use_pallas else (lambda lg, lb: kref.logprob_ref(lg, lb))
+    lp = lp_fn(logits.reshape(B * (T - 1), cfg.vocab), labels.reshape(-1)).reshape(B, T - 1)
+    return -jnp.sum(lp * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def sft_step(cfg: ModelConfig, flat, m, v, step, tokens, pad_len, loss_mask, lr, use_pallas=True):
+    """Fused SFT step: CE grad + AdamW apply. -> (params', m', v', loss)."""
+    loss, grads = jax.value_and_grad(lambda f: sft_loss(cfg, f, tokens, pad_len, loss_mask, use_pallas))(flat)
+    if use_pallas:
+        p2, m2, v2 = adamw_update(
+            flat, grads, m, v, step, lr=lr, b1=cfg.adam_b1, b2=cfg.adam_b2, eps=cfg.adam_eps, wd=cfg.weight_decay
+        )
+    else:
+        p2, m2, v2 = kref.adamw_ref(flat, grads, m, v, step, lr, cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.weight_decay)
+    return p2, m2, v2, loss
+
+
+def apply_update(cfg: ModelConfig, flat, m, v, step, grads, lr, use_pallas=True):
+    """AdamW apply on accumulated grads. -> (params', m', v')."""
+    if use_pallas:
+        return adamw_update(
+            flat, grads, m, v, step, lr=lr, b1=cfg.adam_b1, b2=cfg.adam_b2, eps=cfg.adam_eps, wd=cfg.weight_decay
+        )
+    return kref.adamw_ref(flat, grads, m, v, step, lr, cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.weight_decay)

@@ -1,0 +1,84 @@
+"""Shared token vocabulary for the synthetic RLVR tasks.
+
+This is the single Python-side source of truth; it is emitted verbatim into
+``artifacts/<profile>/meta.json`` and cross-checked against the Rust
+tokenizer (``rust/src/tasks/tokenizer.rs``) by tests on both sides.
+
+The XML reasoning tags of the paper's reward model (§A.1) are single tokens
+so that short sequence budgets still leave room for actual reasoning.
+"""
+
+PAD = 0
+BOS = 1
+EOS = 2
+NL = 3
+THINK_OPEN = 4
+THINK_CLOSE = 5
+ANSWER_OPEN = 6
+ANSWER_CLOSE = 7
+
+# token id -> display string
+TOKENS = [
+    "<pad>",  # 0
+    "<bos>",  # 1
+    "<eos>",  # 2
+    "\n",  # 3
+    "<think>",  # 4
+    "</think>",  # 5
+    "<answer>",  # 6
+    "</answer>",  # 7
+    "0", "1", "2", "3", "4", "5", "6", "7", "8", "9",  # 8..17
+    "+",  # 18
+    "-",  # 19
+    "*",  # 20
+    "=",  # 21
+    "(",  # 22
+    ")",  # 23
+    "?",  # 24
+    ":",  # 25
+    " ",  # 26
+    "A",  # 27
+    "B",  # 28
+    "C",  # 29
+    "D",  # 30
+    "x",  # 31
+    "^",  # 32
+    "%",  # 33
+    ",",  # 34
+    ";",  # 35
+    ".",  # 36
+    "/",  # 37
+    "|",  # 38
+    "Q",  # 39
+]
+
+DIGIT0 = 8  # token id of "0"
+
+# Vocab is padded to a multiple of 16 so kernel tiles divide it evenly.
+VOCAB_SIZE = 48
+
+assert len(TOKENS) <= VOCAB_SIZE
+
+STR_TO_ID = {s: i for i, s in enumerate(TOKENS)}
+
+
+def encode(text_tokens):
+    """Encode a list of display strings to token ids."""
+    return [STR_TO_ID[t] for t in text_tokens]
+
+
+def vocab_meta():
+    """The vocabulary block written into meta.json."""
+    return {
+        "tokens": TOKENS,
+        "vocab_size": VOCAB_SIZE,
+        "pad": PAD,
+        "bos": BOS,
+        "eos": EOS,
+        "nl": NL,
+        "think_open": THINK_OPEN,
+        "think_close": THINK_CLOSE,
+        "answer_open": ANSWER_OPEN,
+        "answer_close": ANSWER_CLOSE,
+        "digit0": DIGIT0,
+    }

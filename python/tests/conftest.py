@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Make `compile.*` importable when pytest is invoked from the repo root or
+# from python/.
+_HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+from hypothesis import settings
+
+# Interpret-mode Pallas kernels trace slowly; keep example counts modest but
+# meaningful, and disable the deadline (tracing dominates, not the property).
+settings.register_profile("kernels", max_examples=20, deadline=None)
+settings.load_profile("kernels")

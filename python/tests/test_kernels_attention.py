@@ -1,0 +1,115 @@
+"""Pallas flash-attention kernel vs oracle.
+
+Comparisons are restricted to *valid* query rows (pos >= pad_len): fully
+masked padding rows are don't-care by contract (both implementations emit
+finite garbage there, which downstream losses mask out).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+
+
+def _mk(rng, b, h, t, dh):
+    q = jnp.asarray(rng.normal(size=(b, h, t, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, h, t, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, h, t, dh)).astype(np.float32))
+    pad = jnp.asarray(rng.integers(0, t, size=(b,)).astype(np.int32))
+    return q, k, v, pad
+
+
+def _valid(pad, t):
+    return (jnp.arange(t)[None, :] >= pad[:, None])[:, None, :, None]
+
+
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    t=st.integers(2, 70),
+    dh=st.sampled_from([8, 16, 32]),
+    blk=st.sampled_from([(16, 16), (32, 32), (16, 32)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_oracle(b, h, t, dh, blk, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v, pad = _mk(rng, b, h, t, dh)
+    got = attention(q, k, v, pad, *blk)
+    want = ref.attention_ref(q, k, v, pad)
+    m = _valid(pad, t)
+    np.testing.assert_allclose(
+        jnp.where(m, got, 0.0), jnp.where(m, want, 0.0), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_grad_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    b, h, t, dh = 2, 2, 24, 8
+    q, k, v, pad = _mk(rng, b, h, t, dh)
+    m = _valid(pad, t)
+
+    def loss_k(q_, k_, v_):
+        return jnp.sum(jnp.where(m, attention(q_, k_, v_, pad, 16, 16), 0.0) ** 2)
+
+    def loss_r(q_, k_, v_):
+        return jnp.sum(jnp.where(m, ref.attention_ref(q_, k_, v_, pad), 0.0) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, bb in zip(gk, gr):
+        np.testing.assert_allclose(a, bb, rtol=1e-3, atol=1e-4)
+
+
+def test_causality():
+    # perturbing a future token must not change earlier outputs
+    rng = np.random.default_rng(7)
+    b, h, t, dh = 1, 2, 32, 16
+    q, k, v, pad = _mk(rng, b, h, t, dh)
+    pad = jnp.zeros((b,), dtype=jnp.int32)
+    o1 = attention(q, k, v, pad, 16, 16)
+    k2 = k.at[:, :, t - 1].add(10.0)
+    v2 = v.at[:, :, t - 1].add(10.0)
+    o2 = attention(q, k2, v2, pad, 16, 16)
+    np.testing.assert_allclose(o1[:, :, : t - 1], o2[:, :, : t - 1], atol=1e-6)
+    assert float(jnp.abs(o1[:, :, t - 1] - o2[:, :, t - 1]).max()) > 1e-3
+
+
+def test_padding_isolation():
+    # perturbing padding keys must not change valid outputs
+    rng = np.random.default_rng(9)
+    b, h, t, dh = 2, 2, 32, 16
+    q, k, v, _ = _mk(rng, b, h, t, dh)
+    pad = jnp.asarray([4, 9], dtype=jnp.int32)
+    o1 = attention(q, k, v, pad, 16, 16)
+    k2 = k.at[0, :, :4].add(5.0).at[1, :, :9].add(5.0)
+    v2 = v.at[0, :, :4].add(5.0).at[1, :, :9].add(5.0)
+    o2 = attention(q, k2, v2, pad, 16, 16)
+    m = _valid(pad, t)
+    np.testing.assert_allclose(
+        jnp.where(m, o1, 0.0), jnp.where(m, o2, 0.0), atol=1e-5
+    )
+
+
+def test_single_visible_key_returns_value():
+    # query at position pad_len sees exactly one key: output == its value row
+    rng = np.random.default_rng(5)
+    b, h, t, dh = 1, 1, 16, 8
+    q, k, v, _ = _mk(rng, b, h, t, dh)
+    pad = jnp.asarray([6], dtype=jnp.int32)
+    o = attention(q, k, v, pad, 16, 16)
+    np.testing.assert_allclose(o[0, 0, 6], v[0, 0, 6], rtol=1e-5, atol=1e-5)
+
+
+def test_block_size_invariance():
+    rng = np.random.default_rng(13)
+    q, k, v, pad = _mk(rng, 2, 2, 48, 16)
+    m = _valid(pad, 48)
+    a = jnp.where(m, attention(q, k, v, pad, 16, 16), 0.0)
+    b_ = jnp.where(m, attention(q, k, v, pad, 16, 48), 0.0)
+    c = jnp.where(m, attention(q, k, v, pad, 48, 16), 0.0)
+    np.testing.assert_allclose(a, b_, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-5)

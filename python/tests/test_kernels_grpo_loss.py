@@ -1,0 +1,87 @@
+"""Pallas GRPO surrogate kernel vs oracle + analytic properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.grpo_loss import grpo_objective
+
+
+def _mk(rng, b, g):
+    nlp = jnp.asarray(rng.normal(size=(b, g)).astype(np.float32) * 0.3 - 1.0)
+    olp = jnp.asarray(rng.normal(size=(b, g)).astype(np.float32) * 0.3 - 1.0)
+    adv = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    mask = jnp.asarray((rng.random((b, g)) < 0.8).astype(np.float32))
+    return nlp, olp, adv, mask
+
+
+@given(
+    b=st.integers(1, 33),
+    g=st.integers(1, 80),
+    eps=st.sampled_from([0.1, 0.2, 0.3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_oracle(b, g, eps, seed):
+    rng = np.random.default_rng(seed)
+    nlp, olp, adv, mask = _mk(rng, b, g)
+    obj, cf = grpo_objective(nlp, olp, adv, mask, eps)
+    obj_r, cf_r = ref.grpo_loss_ref(nlp, olp, adv, mask, eps)
+    np.testing.assert_allclose(obj, obj_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(cf, cf_r, rtol=1e-5, atol=1e-6)
+
+
+@given(b=st.integers(1, 16), g=st.integers(1, 48), seed=st.integers(0, 2**31 - 1))
+def test_grad_matches_oracle(b, g, seed):
+    rng = np.random.default_rng(seed)
+    nlp, olp, adv, mask = _mk(rng, b, g)
+    cot = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    grad_k = jax.grad(lambda x: jnp.vdot(grpo_objective(x, olp, adv, mask, 0.2)[0], cot))(nlp)
+    grad_r = jax.grad(lambda x: jnp.vdot(ref.grpo_loss_ref(x, olp, adv, mask, 0.2)[0], cot))(nlp)
+    np.testing.assert_allclose(grad_k, grad_r, rtol=1e-4, atol=1e-5)
+
+
+def test_identity_policy_objective_is_advantage():
+    # new == old -> ratio 1 -> obj_i = a_i (mask-mean of a_i over tokens)
+    rng = np.random.default_rng(0)
+    nlp, _, adv, mask = _mk(rng, 8, 32)
+    mask = jnp.ones_like(mask)
+    obj, cf = grpo_objective(nlp, nlp, adv, mask, 0.2)
+    np.testing.assert_allclose(obj, adv, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(cf, np.zeros(8), atol=1e-7)
+
+
+def test_fully_masked_rollout_contributes_zero():
+    rng = np.random.default_rng(1)
+    nlp, olp, adv, mask = _mk(rng, 4, 16)
+    mask = mask.at[2].set(0.0)
+    obj, cf = grpo_objective(nlp, olp, adv, mask, 0.2)
+    assert float(obj[2]) == 0.0 and float(cf[2]) == 0.0
+
+
+def test_clip_asymmetry_slow_to_adopt():
+    # positive advantage + ratio far above 1+eps -> objective capped (clipped)
+    # negative advantage + ratio far above 1+eps -> NOT capped (min picks r*a)
+    olp = jnp.zeros((2, 1), dtype=jnp.float32)
+    nlp = jnp.full((2, 1), 1.0, dtype=jnp.float32)  # ratio = e ~ 2.72
+    adv = jnp.asarray([1.0, -1.0], dtype=jnp.float32)
+    mask = jnp.ones((2, 1), dtype=jnp.float32)
+    obj, cf = grpo_objective(nlp, olp, adv, mask, 0.2)
+    np.testing.assert_allclose(obj[0], 1.2, rtol=1e-5)  # clip(e) * 1 = 1.2
+    np.testing.assert_allclose(obj[1], -float(np.e), rtol=1e-5)
+    assert float(cf[0]) == 1.0 and float(cf[1]) == 0.0
+
+
+def test_gradient_zero_when_clipped_saturated():
+    # positive adv, ratio above 1+eps: clipped branch active and saturated ->
+    # zero gradient ("slow to adopt")
+    olp = jnp.zeros((1, 1), dtype=jnp.float32)
+    nlp = jnp.full((1, 1), 1.0, dtype=jnp.float32)
+    adv = jnp.ones((1,), dtype=jnp.float32)
+    mask = jnp.ones((1, 1), dtype=jnp.float32)
+    g = jax.grad(lambda x: grpo_objective(x, olp, adv, mask, 0.2)[0].sum())(nlp)
+    assert float(jnp.abs(g).max()) == 0.0
+    # negative adv, same ratio: unclipped branch active -> gradient flows
+    g2 = jax.grad(lambda x: grpo_objective(x, olp, -adv, mask, 0.2)[0].sum())(nlp)
+    assert float(jnp.abs(g2).max()) > 0.1

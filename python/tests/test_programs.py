@@ -1,0 +1,100 @@
+"""AOT program-builder tests: signatures, shapes, and HLO lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import vocab as V
+from compile.aot import PROFILES, build_programs, to_hlo_text
+from compile.model import ModelConfig, lora_count, param_count
+
+
+TINY = ModelConfig(
+    d_model=16, layers=1, heads=2, d_ff=32, seq_len=12, prompt_len=4,
+    rollout_batch=2, update_batch=2, pad_multiple=64, attn_block=4,
+)
+TINY_LORA = ModelConfig(
+    d_model=16, layers=1, heads=2, d_ff=32, seq_len=12, prompt_len=4,
+    rollout_batch=2, update_batch=2, pad_multiple=64, attn_block=4,
+    lora_rank=2, lora_alpha=2.0,
+)
+
+
+def _run(progs, name):
+    fn, args, _ = progs[name]
+    vals = []
+    rng = np.random.default_rng(0)
+    for argname, spec in args:
+        if spec.dtype == jnp.int32 and spec.shape:
+            if argname == "tokens" or argname == "prompts":
+                vals.append(jnp.asarray(rng.integers(0, TINY.vocab, spec.shape), jnp.int32))
+            else:
+                vals.append(jnp.zeros(spec.shape, jnp.int32))
+        elif spec.dtype == jnp.int32:
+            vals.append(jnp.int32(0))
+        elif spec.dtype == jnp.uint32:
+            vals.append(jnp.uint32(1))
+        elif spec.shape == ():
+            vals.append(jnp.float32(0.5))
+        else:
+            vals.append(jnp.asarray(rng.normal(size=spec.shape) * 0.02, jnp.float32))
+    return fn(*vals)
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_LORA], ids=["full", "lora"])
+def test_program_outputs_match_declared_shapes(cfg):
+    progs = build_programs(cfg)
+    expected = {"init", "rollout", "grad", "update", "score"}
+    if cfg.lora_rank == 0:
+        expected.add("sft")
+    assert set(progs) == expected
+    for name, (fn, args, out_names) in progs.items():
+        outs = jax.eval_shape(fn, *[s for _, s in args])
+        outs = outs if isinstance(outs, (tuple, list)) else (outs,)
+        assert len(outs) == len(out_names), name
+    # trainable width consistency
+    nt = lora_count(cfg) if cfg.lora_rank else param_count(cfg)
+    upd_args = dict((n, s) for n, s in progs["update"][1])
+    assert upd_args["trainable"].shape == (nt,)
+    assert upd_args["grads"].shape == (nt,)
+    grad_args = dict((n, s) for n, s in progs["grad"][1])
+    assert grad_args["trainable"].shape == (nt,)
+
+
+def test_grad_program_executes_and_shapes(capsys):
+    progs = build_programs(TINY)
+    grads, loss, clip_frac, kl = _run(progs, "grad")
+    assert grads.shape == (param_count(TINY),)
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(clip_frac) <= 1.0
+    assert np.isfinite(float(kl))
+
+
+def test_rollout_program_executes(capsys):
+    progs = build_programs(TINY)
+    tokens, logprobs, gen_mask, gen_len = _run(progs, "rollout")
+    assert tokens.shape == (TINY.rollout_batch, TINY.seq_len)
+    assert logprobs.shape == (TINY.rollout_batch, TINY.gen_len)
+    assert np.all(np.asarray(gen_len) >= 0)
+
+
+def test_lowering_produces_hlo_text():
+    progs = build_programs(TINY)
+    fn, args, _ = progs["update"]
+    lowered = jax.jit(fn).lower(*[s for _, s in args])
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert len(text) > 1000
+
+
+def test_profiles_are_consistent():
+    for name, cfg in PROFILES.items():
+        assert cfg.seq_len == cfg.prompt_len + cfg.gen_len
+        assert cfg.d_model % cfg.heads == 0
+        assert cfg.vocab == V.VOCAB_SIZE
+        assert param_count(cfg) % cfg.pad_multiple == 0, name
+    # the big profile is the ~100M composition-proof config
+    big = PROFILES["big"]
+    assert 80e6 < param_count(big) < 120e6

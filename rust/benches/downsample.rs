@@ -1,0 +1,77 @@
+//! Bench: down-sampling rules (the paper's O(n log n) claim, Theorem 1).
+//!
+//! Verifies the complexity class empirically (time vs n for max-variance)
+//! and compares all four rules plus the exhaustive oracle at small n.
+//! Corresponds to the algorithmic cost side of Table/Fig. discussions §3.3.
+
+use pods::coordinator::downsample::{max_variance, subset_variance, Rule};
+use pods::util::bench::{bench, black_box};
+use pods::util::rng::Rng;
+
+fn rewards(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    // discrete RLVR-like rewards (accuracy + format + tags)
+    (0..n)
+        .map(|_| [0.0, 0.25, 0.5, 1.0, 2.0, 2.25, 3.0][rng.below(7)])
+        .collect()
+}
+
+/// Exhaustive oracle (for the asymptotic comparison at tiny n).
+fn oracle(rewards: &[f32], m: usize) -> f64 {
+    fn rec(r: &[f32], start: usize, left: usize, cur: &mut Vec<usize>, best: &mut f64) {
+        if left == 0 {
+            let v = subset_variance(r, cur);
+            if v > *best {
+                *best = v;
+            }
+            return;
+        }
+        if r.len() - start < left {
+            return;
+        }
+        for i in start..r.len() {
+            cur.push(i);
+            rec(r, i + 1, left - 1, cur, best);
+            cur.pop();
+        }
+    }
+    let mut best = f64::NEG_INFINITY;
+    rec(rewards, 0, m, &mut Vec::new(), &mut best);
+    best
+}
+
+fn main() {
+    println!("== downsample: Algorithm 2 scaling (m = n/4) ==");
+    let mut med = Vec::new();
+    for n in [64usize, 256, 1024, 4096, 16384, 65536] {
+        let r = rewards(n, n as u64);
+        let m = n / 4;
+        let res = bench(&format!("max_variance n={n}"), None, || {
+            black_box(max_variance(black_box(&r), m));
+        });
+        med.push((n, res.median_ns));
+    }
+    // empirical exponent: should be ~1 (n log n is near-linear over this range)
+    let (n0, t0) = med[1];
+    let (n1, t1) = med[med.len() - 1];
+    let slope = (t1 / t0).log2() / ((n1 as f64 / n0 as f64)).log2();
+    println!("empirical scaling exponent (expect ~1.0-1.2 for n log n): {slope:.2}\n");
+
+    println!("== all rules at the paper's production shape (n=512, m=128) ==");
+    let r = rewards(512, 7);
+    let mut rng = Rng::seed_from_u64(1);
+    for rule in [Rule::MaxVariance, Rule::MaxReward, Rule::Random, Rule::Percentile] {
+        bench(&format!("rule {} n=512 m=128", rule.name()), None, || {
+            black_box(rule.select(black_box(&r), 128, &mut rng));
+        });
+    }
+
+    println!("\n== exhaustive oracle vs Algorithm 2 (n=22, m=6) ==");
+    let r = rewards(22, 3);
+    bench("oracle C(22,6)", Some(20), || {
+        black_box(oracle(black_box(&r), 6));
+    });
+    bench("algorithm2 n=22 m=6", None, || {
+        black_box(max_variance(black_box(&r), 6));
+    });
+}

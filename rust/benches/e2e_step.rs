@@ -1,0 +1,63 @@
+//! Bench: one full training iteration per schedule — the end-to-end step
+//! that Fig. 3's per-step run-time panels report. Also prints the hwsim
+//! decomposition so real CPU time and simulated accelerator time can be
+//! compared side by side.
+
+use pods::coordinator::scheduler::Trainer;
+use pods::exp::CfgBuilder;
+use pods::util::bench::bench;
+
+fn mk_trainer(kind: &str, n: usize, m: Option<usize>, workers: usize) -> anyhow::Result<Trainer> {
+    let cfg = CfgBuilder {
+        name: format!("bench_{kind}_{n}"),
+        profile: "base".into(),
+        task: "arith".into(),
+        iterations: 1,
+        prompts_per_iter: 1,
+        eval_problems: 16,
+        kind: kind.into(),
+        n,
+        m,
+        lr: 1e-4,
+        workers,
+        out_dir: std::env::temp_dir().join("pods_bench").to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+    .build()?;
+    let mut tr = Trainer::new(&pods::default_artifacts_dir(), cfg)?;
+    tr.engine.quiet = true;
+    Ok(tr)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = pods::default_artifacts_dir();
+    if !dir.join("base/meta.json").exists() {
+        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
+        return Ok(());
+    }
+    let arms = [
+        ("grpo (n=m=16)", "grpo", 16usize, None, 1usize),
+        ("pods (n=64 -> m=16)", "pods", 64, Some(16), 1),
+        ("ga   (n=64, train all)", "ga", 64, None, 1),
+        ("pods distributed (8w)", "pods", 64, Some(16), 8),
+        ("ga   distributed (8w)", "ga", 64, None, 8),
+    ];
+    for (label, kind, n, m, workers) in arms {
+        let mut tr = mk_trainer(kind, n, m, workers)?;
+        let mut it = 0usize;
+        let res = bench(&format!("e2e step {label}"), Some(4), || {
+            tr.train_iteration(it).unwrap();
+            it += 1;
+        });
+        let last = tr.recorder.iters.last().unwrap();
+        println!(
+            "  real {:.2}s | sim {:.1}s (inference {:.1}s + update {:.1}s, {} micro-steps)",
+            res.median_ns / 1e9,
+            last.sim_inference_time + last.sim_update_time,
+            last.sim_inference_time,
+            last.sim_update_time,
+            last.micro_steps
+        );
+    }
+    Ok(())
+}

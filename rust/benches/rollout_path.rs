@@ -1,0 +1,60 @@
+//! Bench: the inference phase — rollout generation (KV-cache decode inside
+//! the AOT artifact), reward verification, and the per-rollout cost that
+//! Fig. 1 (bottom) amortizes with batching.
+
+use pods::reward::{score_rollout, RewardWeights};
+use pods::rollout::{generate_group, prompt_batch, GenRequest};
+use pods::runtime::Engine;
+use pods::tasks::{Split, TaskKind};
+use pods::util::bench::{bench, black_box};
+
+fn main() -> anyhow::Result<()> {
+    let dir = pods::default_artifacts_dir();
+    if !dir.join("base/meta.json").exists() {
+        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
+        return Ok(());
+    }
+    let mut engine = Engine::load(&dir, "base")?;
+    engine.quiet = true;
+    let params = engine.init(1)?;
+    let problem = TaskKind::Arith.generate(Split::Train, 0);
+    let (prompts, pads) = prompt_batch(&engine, &problem.prompt)?;
+    let br = engine.meta.config.rollout_batch;
+
+    let mut seed = 0u32;
+    let res = bench(&format!("rollout call (B_r={br}, G=64, sampled)"), Some(10), || {
+        seed += 1;
+        black_box(engine.rollout(&params, None, &prompts, &pads, seed, 1.0).unwrap());
+    });
+    println!(
+        "  -> {:.1} ms/rollout on one CPU device",
+        res.median_ns / 1e6 / br as f64
+    );
+    bench("rollout call greedy (eval path)", Some(10), || {
+        black_box(engine.rollout(&params, None, &prompts, &pads, 0, 0.0).unwrap());
+    });
+
+    let out = engine.rollout(&params, None, &prompts, &pads, 3, 1.0)?;
+    let t = engine.meta.config.seq_len;
+    let p = engine.meta.config.prompt_len;
+    let row: Vec<i32> = out.tokens.data[..t].to_vec();
+    bench("reward verification per rollout", None, || {
+        black_box(score_rollout(black_box(&row), p, TaskKind::Arith, &problem));
+    });
+
+    let req = GenRequest {
+        params: &params,
+        lora: None,
+        ref_params: None,
+        ref_lora: None,
+        n: 64,
+        temperature: 1.0,
+        run_seed: 9,
+        iter: 0,
+        weights: RewardWeights::default(),
+    };
+    bench("generate_group n=64 (4 calls + verify)", Some(5), || {
+        black_box(generate_group(&engine, &req, TaskKind::Arith, &problem).unwrap());
+    });
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Bench: the policy-update phase — grad micro-batch, gradient
+//! accumulation, AdamW apply. These are the memory/serialization-bound
+//! costs the paper's Fig. 1 (top) decomposes; here measured for real on
+//! the base-profile artifacts (one CPU device).
+
+use pods::coordinator::accum::GradAccumulator;
+use pods::rollout::prompt_batch;
+use pods::runtime::{Engine, MicroBatch, ParamStore, TensorF, TensorI};
+use pods::tasks::{Split, TaskKind};
+use pods::util::bench::{bench, black_box};
+
+fn main() -> anyhow::Result<()> {
+    let dir = pods::default_artifacts_dir();
+    if !dir.join("base/meta.json").exists() {
+        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
+        return Ok(());
+    }
+    let mut engine = Engine::load(&dir, "base")?;
+    engine.quiet = true;
+    let mut store = ParamStore::new(engine.init(1)?);
+    let problem = TaskKind::Arith.generate(Split::Train, 0);
+    let (prompts, pads) = prompt_batch(&engine, &problem.prompt)?;
+    let out = engine.rollout(&store.params, None, &prompts, &pads, 1, 1.0)?;
+    let bu = engine.meta.config.update_batch;
+    let t = engine.meta.config.seq_len;
+    let g = engine.meta.gen_len;
+    let mb = MicroBatch {
+        tokens: TensorI::new(out.tokens.data[..bu * t].to_vec(), &[bu, t])?,
+        pad_len: pads[..bu].to_vec(),
+        gen_mask: TensorF::new(out.gen_mask.data[..bu * g].to_vec(), &[bu, g])?,
+        old_lp: TensorF::new(out.logprobs.data[..bu * g].to_vec(), &[bu, g])?,
+        adv: vec![0.5; bu],
+        ref_lp: TensorF::new(vec![0.0; bu * g], &[bu, g])?,
+    };
+    let grad_out = engine.grad(&store.params, None, &mb, 0.0)?;
+
+    bench(&format!("grad micro-batch (B_u={bu}, fwd+bwd)"), Some(12), || {
+        black_box(engine.grad(&store.params, None, &mb, 0.0).unwrap());
+    });
+    bench("grad micro-batch with KL term", Some(12), || {
+        black_box(engine.grad(&store.params, None, &mb, 0.04).unwrap());
+    });
+
+    let n = store.len();
+    let mut acc = GradAccumulator::new(n);
+    bench(&format!("grad accumulate ({} f32)", n), None, || {
+        acc.add(black_box(&grad_out.grads), 8.0);
+    });
+    acc.reset();
+    acc.add(&grad_out.grads, 8.0);
+    bench("grad mean/finalize", None, || {
+        black_box(acc.mean(8));
+    });
+
+    bench("adamw update (fused kernel via PJRT)", Some(12), || {
+        engine.update(&mut store, &grad_out.grads, 1e-4).unwrap();
+    });
+
+    // the PODS trade at a glance: micro-steps for m=16 vs n=64 per prompt
+    println!("\nupdate-phase calls per prompt: PODS m=16 -> {} grad calls; GA n=64 -> {} grad calls", 16usize.div_ceil(bu), 64usize.div_ceil(bu));
+    Ok(())
+}

@@ -1,0 +1,285 @@
+//! TOML run-configuration system — Table 1 / Table 2 as shipped configs.
+//!
+//! A [`RunConfig`] fully determines one training run: artifact profile,
+//! task, algorithm schedule (GRPO / GRPO-GA / GRPO-PODS), down-sampling
+//! rule, (n, m), optimizer hyperparameters, hwsim calibration and SFT
+//! warm-up. `configs/setting_{a..f}.toml` mirror the paper's Table 1/2
+//! settings at reproduction scale. Parsed with the std-only TOML-subset
+//! parser in `util::toml`.
+
+use crate::coordinator::advantage::NormMode;
+use crate::coordinator::downsample::Rule;
+use crate::hwsim::HwModel;
+use crate::tasks::TaskKind;
+use crate::util::toml::{parse as toml_parse, SectionView};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct RunSection {
+    pub name: String,
+    /// Artifact profile under `artifacts/` (micro | base | lora | big).
+    pub profile: String,
+    /// Task family: arith | poly | mcq.
+    pub task: String,
+    pub seed: u64,
+    pub iterations: usize,
+    pub prompts_per_iter: usize,
+    pub eval_every: usize,
+    pub eval_problems: usize,
+    /// Where CSVs/checkpoints go (default `results/`).
+    pub out_dir: String,
+    /// Pre-trained base checkpoint (required for LoRA profiles; produced by
+    /// the SFT phase of a full-parameter run).
+    pub base_checkpoint: Option<String>,
+    /// Save a checkpoint at the end of the run.
+    pub save_checkpoint: Option<String>,
+}
+
+/// Which training schedule (Fig. 2's three rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoKind {
+    /// Vanilla GRPO: generate n = m, train on all.
+    Grpo,
+    /// GRPO-GA: generate n, train on all n via gradient accumulation.
+    GrpoGa,
+    /// GRPO-PODS: generate n, down-sample to m, train on m.
+    GrpoPods,
+}
+
+impl AlgoKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "grpo" => Ok(Self::Grpo),
+            "ga" | "grpo-ga" => Ok(Self::GrpoGa),
+            "pods" | "grpo-pods" => Ok(Self::GrpoPods),
+            other => Err(anyhow!("unknown algo {other:?} (grpo|ga|pods)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Grpo => "grpo",
+            Self::GrpoGa => "grpo-ga",
+            Self::GrpoPods => "grpo-pods",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AlgoSection {
+    /// grpo | ga | pods
+    pub kind: String,
+    /// Rollouts generated per prompt per iteration.
+    pub n: usize,
+    /// Update size after down-sampling (ignored for grpo/ga: m = n).
+    pub m: Option<usize>,
+    pub rule: String,
+    pub adv_norm: String,
+    pub kl_coef: f64,
+    pub lr: f64,
+    pub temperature: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SftSection {
+    pub steps: usize,
+    pub lr: f64,
+    pub log_every: usize,
+    /// Size of the cycled problem pool (0 = unbounded fresh problems).
+    pub pool: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub run: RunSection,
+    pub algo: AlgoSection,
+    pub hwsim: HwModel,
+    pub sft: Option<SftSection>,
+}
+
+impl RunConfig {
+    pub fn from_path(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_str_validated(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn from_str_validated(text: &str) -> Result<Self> {
+        let doc = toml_parse(text)?;
+        let run = SectionView::new(&doc, "run");
+        let algo = SectionView::new(&doc, "algo");
+        let hw = SectionView::new(&doc, "hwsim");
+        let sft = SectionView::new(&doc, "sft");
+
+        let cfg = RunConfig {
+            run: RunSection {
+                name: run.required("name")?.as_str()?.to_string(),
+                profile: run.required("profile")?.as_str()?.to_string(),
+                task: run.required("task")?.as_str()?.to_string(),
+                seed: run.u64_or("seed", 0)?,
+                iterations: run.required("iterations")?.as_usize()?,
+                prompts_per_iter: run.usize_or("prompts_per_iter", 2)?,
+                eval_every: run.usize_or("eval_every", 10)?,
+                eval_problems: run.usize_or("eval_problems", 64)?,
+                out_dir: run.str_or("out_dir", "results")?,
+                base_checkpoint: run.opt_str("base_checkpoint")?,
+                save_checkpoint: run.opt_str("save_checkpoint")?,
+            },
+            algo: AlgoSection {
+                kind: algo.required("kind")?.as_str()?.to_string(),
+                n: algo.required("n")?.as_usize()?,
+                m: match algo.get("m") {
+                    Some(v) => Some(v.as_usize()?),
+                    None => None,
+                },
+                rule: algo.str_or("rule", "max_variance")?,
+                adv_norm: algo.str_or("adv_norm", "after")?,
+                kl_coef: algo.f64_or("kl_coef", 0.0)?,
+                lr: algo.required("lr")?.as_f64()?,
+                temperature: algo.f64_or("temperature", 1.0)?,
+            },
+            hwsim: HwModel::from_section(&hw)?,
+            sft: if sft.sec.is_some() {
+                Some(SftSection {
+                    steps: sft.usize_or("steps", 0)?,
+                    lr: sft.f64_or("lr", 2e-3)?,
+                    log_every: sft.usize_or("log_every", 50)?,
+                    pool: sft.usize_or("pool", 512)?,
+                })
+            } else {
+                None
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn algo_kind(&self) -> AlgoKind {
+        AlgoKind::parse(&self.algo.kind).expect("validated")
+    }
+
+    pub fn rule(&self) -> Rule {
+        Rule::parse(&self.algo.rule).expect("validated")
+    }
+
+    pub fn norm_mode(&self) -> NormMode {
+        NormMode::parse(&self.algo.adv_norm).expect("validated")
+    }
+
+    pub fn task_kind(&self) -> TaskKind {
+        TaskKind::parse(&self.run.task).expect("validated")
+    }
+
+    /// Effective update size per prompt group.
+    pub fn effective_m(&self) -> usize {
+        match self.algo_kind() {
+            AlgoKind::Grpo | AlgoKind::GrpoGa => self.algo.n,
+            AlgoKind::GrpoPods => self.algo.m.unwrap_or(self.algo.n),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let kind = AlgoKind::parse(&self.algo.kind)?;
+        Rule::parse(&self.algo.rule)?;
+        NormMode::parse(&self.algo.adv_norm)?;
+        TaskKind::parse(&self.run.task)?;
+        if self.algo.n == 0 {
+            return Err(anyhow!("algo.n must be positive"));
+        }
+        if let Some(m) = self.algo.m {
+            if m == 0 || m > self.algo.n {
+                return Err(anyhow!("algo.m must be in 1..=n (got m={m}, n={})", self.algo.n));
+            }
+        }
+        if kind == AlgoKind::GrpoPods && self.algo.m.is_none() {
+            return Err(anyhow!("algo.kind=pods requires algo.m"));
+        }
+        if self.algo.lr <= 0.0 {
+            return Err(anyhow!("algo.lr must be positive"));
+        }
+        // iterations == 0 is allowed: SFT-only runs that just produce a
+        // base checkpoint (exp::ensure_base_checkpoint).
+        if self.run.prompts_per_iter == 0 {
+            return Err(anyhow!("run.prompts_per_iter must be positive"));
+        }
+        if self.hwsim.workers == 0 {
+            return Err(anyhow!("hwsim.workers must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"
+        [run]
+        name = "t"
+        profile = "base"
+        task = "arith"
+        iterations = 10
+
+        [algo]
+        kind = "pods"
+        n = 64
+        m = 16
+        lr = 1e-4
+    "#;
+
+    #[test]
+    fn parses_minimal_with_defaults() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert_eq!(cfg.algo_kind(), AlgoKind::GrpoPods);
+        assert_eq!(cfg.rule(), Rule::MaxVariance);
+        assert_eq!(cfg.norm_mode(), NormMode::After);
+        assert_eq!(cfg.effective_m(), 16);
+        assert_eq!(cfg.hwsim.workers, 1);
+        assert_eq!(cfg.run.eval_every, 10);
+        assert!(cfg.sft.is_none());
+    }
+
+    #[test]
+    fn ga_trains_on_all() {
+        let text = MINIMAL.replace("kind = \"pods\"", "kind = \"ga\"");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert_eq!(cfg.effective_m(), 64);
+    }
+
+    #[test]
+    fn rejects_m_above_n() {
+        let text = MINIMAL.replace("m = 16", "m = 128");
+        assert!(RunConfig::from_str_validated(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_pods_without_m() {
+        let text = MINIMAL.replace("m = 16\n", "");
+        assert!(RunConfig::from_str_validated(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_rule() {
+        let text = format!("{MINIMAL}\nrule = \"best_ever\"");
+        assert!(RunConfig::from_str_validated(&text).is_err());
+    }
+
+    #[test]
+    fn hwsim_overrides_parse() {
+        let text = format!("{MINIMAL}\n[hwsim]\nworkers = 8\nmem_capacity_rollouts = 16\n");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert_eq!(cfg.hwsim.workers, 8);
+        assert_eq!(cfg.hwsim.mem_capacity_rollouts, 16);
+        // non-overridden fields keep defaults
+        assert!(cfg.hwsim.tok_time_b1 > 0.0);
+    }
+
+    #[test]
+    fn sft_section_parses() {
+        let text = format!("{MINIMAL}\n[sft]\nsteps = 100\nlr = 3e-3\n");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        let sft = cfg.sft.unwrap();
+        assert_eq!(sft.steps, 100);
+        assert_eq!(sft.lr, 3e-3);
+    }
+}

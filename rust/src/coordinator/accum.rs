@@ -1,0 +1,128 @@
+//! Gradient accumulation — the mechanism GRPO-GA pays for and PODS avoids.
+//!
+//! The `grad` artifact computes the *mean* objective over its fixed
+//! micro-batch of `B_u` rollouts (padded rows carry zero advantage and
+//! contribute exactly zero gradient). To recover the mean over the `M` real
+//! rollouts of the full update batch, each micro-gradient is accumulated
+//! with weight `B_u` and the sum divided by `M`:
+//!
+//!   g = (Σ_mb B_u · g_mb) / M      since  g_mb = (1/B_u) Σ_{real rows} ∂obj
+//!
+//! The accumulator also mirrors what a DeepSpeed-style GA engine does
+//! between collectives: hold a full-width f32 buffer, add in place, scale
+//! once at the end — allocation-free across iterations (`reset` keeps the
+//! buffer).
+
+/// Accumulates weighted gradient vectors.
+#[derive(Debug, Clone)]
+pub struct GradAccumulator {
+    sum: Vec<f32>,
+    weight: f64,
+    micro_steps: usize,
+}
+
+impl GradAccumulator {
+    pub fn new(n: usize) -> Self {
+        Self { sum: vec![0.0; n], weight: 0.0, micro_steps: 0 }
+    }
+
+    /// Clear for the next iteration without reallocating.
+    pub fn reset(&mut self) {
+        self.sum.iter_mut().for_each(|x| *x = 0.0);
+        self.weight = 0.0;
+        self.micro_steps = 0;
+    }
+
+    /// Add one micro-batch gradient with the given weight (its number of
+    /// rollout slots, real + padded).
+    pub fn add(&mut self, grads: &[f32], weight: f64) {
+        assert_eq!(grads.len(), self.sum.len(), "gradient width mismatch");
+        let w = weight as f32;
+        for (s, g) in self.sum.iter_mut().zip(grads) {
+            *s += w * g;
+        }
+        self.weight += weight;
+        self.micro_steps += 1;
+    }
+
+    /// Number of micro-batches accumulated so far.
+    pub fn micro_steps(&self) -> usize {
+        self.micro_steps
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.weight
+    }
+
+    /// Finalize: divide by the number of *real* rollouts and return the
+    /// mean gradient (buffer is left dirty; call `reset` before reuse).
+    pub fn mean(&self, real_rows: usize) -> Vec<f32> {
+        assert!(real_rows > 0, "mean over zero rollouts");
+        let inv = 1.0 / real_rows as f32;
+        self.sum.iter().map(|s| s * inv).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_cases, vec_f32};
+
+    /// Accumulating per-row gradients in chunks with padding weights
+    /// reproduces the full-batch mean exactly (up to f32 round-off).
+    #[test]
+    fn chunked_mean_matches_full_mean() {
+        for_cases(300, |rng| {
+            let width = 4;
+            let total = rng.gen_range_inclusive(1, 19) as usize;
+            let bu = rng.gen_range_inclusive(1, 4) as usize;
+            let rows: Vec<Vec<f32>> = (0..total).map(|_| vec_f32(rng, width, -2.0, 2.0)).collect();
+            // "micro-batch gradient" = mean over B_u slots, padded rows = 0
+            let mut acc = GradAccumulator::new(width);
+            for chunk in rows.chunks(bu) {
+                let mut mb = vec![0.0f32; width];
+                for r in chunk {
+                    for (m, v) in mb.iter_mut().zip(r) {
+                        *m += v;
+                    }
+                }
+                for m in mb.iter_mut() {
+                    *m /= bu as f32;
+                }
+                acc.add(&mb, bu as f64);
+            }
+            let got = acc.mean(total);
+            let mut want = vec![0.0f32; width];
+            for r in &rows {
+                for (w, v) in want.iter_mut().zip(r) {
+                    *w += v;
+                }
+            }
+            for w in want.iter_mut() {
+                *w /= total as f32;
+            }
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn reset_preserves_capacity_and_zeroes() {
+        let mut acc = GradAccumulator::new(3);
+        acc.add(&[1.0, 2.0, 3.0], 2.0);
+        assert_eq!(acc.micro_steps(), 1);
+        acc.reset();
+        assert_eq!(acc.micro_steps(), 0);
+        assert_eq!(acc.total_weight(), 0.0);
+        acc.add(&[1.0, 1.0, 1.0], 1.0);
+        assert_eq!(acc.mean(1), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient width mismatch")]
+    fn width_mismatch_panics() {
+        let mut acc = GradAccumulator::new(2);
+        acc.add(&[1.0, 2.0, 3.0], 1.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Advantage normalization (paper §3.1, §3.2, ablation §A.3 / Fig. 6).
+//!
+//! GRPO advantages are the group-standardised rewards `a_i = (r_i - μ)/σ`.
+//! PODS introduces a design choice the paper ablates: compute `(μ, σ)` on
+//! the **down-sampled subset** ("After" — the paper's default, keeps every
+//! update batch zero-mean) or on the **full rollout group before
+//! down-sampling** ("Before").
+
+/// When the normalization statistics are computed relative to down-sampling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormMode {
+    /// Statistics over the selected subset (paper default, §A.3 "After").
+    After,
+    /// Statistics over the full rollout group ("Before").
+    Before,
+}
+
+impl NormMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "after" => Ok(Self::After),
+            "before" => Ok(Self::Before),
+            other => Err(anyhow::anyhow!("unknown adv_norm {other:?} (after|before)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::After => "after",
+            Self::Before => "before",
+        }
+    }
+}
+
+/// σ floor: degenerate groups (all rewards equal) get zero advantages
+/// rather than a division blow-up — matching TRL's GRPO implementation.
+pub const SIGMA_EPS: f64 = 1e-6;
+
+fn mean_std(values: impl Iterator<Item = f64> + Clone) -> (f64, f64) {
+    let n = values.clone().count().max(1) as f64;
+    let mean = values.clone().sum::<f64>() / n;
+    let var = values.map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Normalized advantages for the selected subset of one rollout group.
+///
+/// `rewards` are the full group's rewards; `subset` the selected indices.
+/// Returns one advantage per subset element (same order as `subset`).
+pub fn subset_advantages(rewards: &[f32], subset: &[usize], mode: NormMode) -> Vec<f32> {
+    let (mean, std) = match mode {
+        NormMode::After => mean_std(subset.iter().map(|&i| rewards[i] as f64)),
+        NormMode::Before => mean_std(rewards.iter().map(|&r| r as f64)),
+    };
+    subset
+        .iter()
+        .map(|&i| ((rewards[i] as f64 - mean) / (std + SIGMA_EPS)) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_cases, vec_f32};
+
+    /// "After" mode: every update batch has total advantage ~0 and unit
+    /// σ (unless degenerate) — the property §A.3 argues matters.
+    #[test]
+    fn after_mode_is_standardised() {
+        for_cases(300, |rng| {
+            let n = rng.gen_range_inclusive(2, 39) as usize;
+            let rewards = vec_f32(rng, n, -4.0, 4.0);
+            let m = (rng.gen_range_inclusive(2, 19) as usize).min(n);
+            let subset: Vec<usize> = (0..m).collect();
+            let adv = subset_advantages(&rewards, &subset, NormMode::After);
+            let sum: f32 = adv.iter().sum();
+            assert!(sum.abs() < 1e-3, "sum {sum}");
+            let var: f32 = adv.iter().map(|a| a * a).sum::<f32>() / m as f32;
+            let subset_rewards: Vec<f64> = subset.iter().map(|&i| rewards[i] as f64).collect();
+            let mean = subset_rewards.iter().sum::<f64>() / m as f64;
+            let rvar = subset_rewards.iter().map(|r| (r - mean).powi(2)).sum::<f64>() / m as f64;
+            if rvar > 1e-6 {
+                assert!((var - 1.0).abs() < 1e-2, "var {var}");
+            } else {
+                assert!(var < 1e-3);
+            }
+        });
+    }
+
+    /// Degenerate groups give exactly-zero advantages in both modes.
+    #[test]
+    fn constant_rewards_zero_advantages() {
+        for_cases(100, |rng| {
+            let v = (rng.f64() * 10.0 - 5.0) as f32;
+            let n = rng.gen_range_inclusive(2, 15) as usize;
+            let rewards = vec![v; n];
+            let subset: Vec<usize> = (0..n / 2).collect();
+            for mode in [NormMode::After, NormMode::Before] {
+                let adv = subset_advantages(&rewards, &subset, mode);
+                assert!(adv.iter().all(|a| a.abs() < 1e-4), "{mode:?}");
+            }
+        });
+    }
+
+    /// Order preservation: higher reward -> strictly higher advantage.
+    #[test]
+    fn monotone_in_reward() {
+        for_cases(200, |rng| {
+            let n = rng.gen_range_inclusive(3, 29) as usize;
+            let rewards = vec_f32(rng, n, -4.0, 4.0);
+            let subset: Vec<usize> = (0..n).collect();
+            for mode in [NormMode::After, NormMode::Before] {
+                let adv = subset_advantages(&rewards, &subset, mode);
+                for i in 0..n {
+                    for j in 0..n {
+                        if rewards[i] > rewards[j] + 1e-4 {
+                            assert!(adv[i] > adv[j], "{mode:?}");
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn before_mode_uses_full_group_stats() {
+        // group = {0, 10}, subset = {10}: Before centres on 5, After on 10.
+        let rewards = vec![0.0f32, 10.0];
+        let after = subset_advantages(&rewards, &[1], NormMode::After);
+        let before = subset_advantages(&rewards, &[1], NormMode::Before);
+        assert!(after[0].abs() < 1e-4); // singleton subset: σ=0 -> 0
+        assert!((before[0] - 1.0).abs() < 1e-4); // (10-5)/5
+    }
+
+    #[test]
+    fn modes_agree_when_subset_is_everything() {
+        let rewards = vec![1.0f32, 2.0, 4.0, -1.0];
+        let all: Vec<usize> = (0..4).collect();
+        let a = subset_advantages(&rewards, &all, NormMode::After);
+        let b = subset_advantages(&rewards, &all, NormMode::Before);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

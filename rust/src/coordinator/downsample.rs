@@ -1,0 +1,380 @@
+//! Down-sampling rules (paper §3.2–3.3) — the core algorithmic contribution.
+//!
+//! Given `n` rollout rewards and an update size `m`, each rule returns the
+//! indices to keep for the policy update:
+//!
+//! * [`max_variance`] — Algorithm 2: by Lemma 3.1 the variance-maximising
+//!   subset is always the `m-k` lowest + `k` highest rewards of the sorted
+//!   order for some `k`, so scanning all `m+1` splits with prefix sums gives
+//!   the exact optimum in `O(n log n)` (sort) + `O(m)` (scan).
+//! * [`max_reward`] — top-`m` rewards (§3.2, shown harmful in Fig. 5).
+//! * [`random`] — uniform without replacement (unbiased GRPO-on-`m`).
+//! * [`percentile`] — the `(i+0.5)/m` quantiles of the reward distribution.
+//!
+//! All rules are deterministic given their inputs (ties broken by index;
+//! `random` takes an explicit RNG), which makes experiments replayable.
+//!
+//! An exhaustive `O(C(n, m))` oracle lives in the test module; proptest
+//! verifies `max_variance` against it for all small instances.
+
+use crate::util::rng::Rng;
+
+/// Which down-sampling rule to apply (config string form in parens).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// `max_variance` (the paper's principled rule)
+    MaxVariance,
+    /// `max_reward`
+    MaxReward,
+    /// `random`
+    Random,
+    /// `percentile`
+    Percentile,
+}
+
+impl Rule {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "max_variance" => Ok(Self::MaxVariance),
+            "max_reward" => Ok(Self::MaxReward),
+            "random" => Ok(Self::Random),
+            "percentile" => Ok(Self::Percentile),
+            other => Err(anyhow::anyhow!(
+                "unknown rule {other:?} (max_variance|max_reward|random|percentile)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::MaxVariance => "max_variance",
+            Self::MaxReward => "max_reward",
+            Self::Random => "random",
+            Self::Percentile => "percentile",
+        }
+    }
+
+    /// Apply the rule. `rng` is only used by [`Rule::Random`].
+    pub fn select(self, rewards: &[f32], m: usize, rng: &mut Rng) -> Vec<usize> {
+        match self {
+            Self::MaxVariance => max_variance(rewards, m),
+            Self::MaxReward => max_reward(rewards, m),
+            Self::Random => random(rewards.len(), m, rng),
+            Self::Percentile => percentile(rewards, m),
+        }
+    }
+}
+
+/// Indices of rewards sorted ascending, ties broken by original index
+/// (deterministic, and matches the stable-argsort the paper's code uses).
+fn argsort(rewards: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..rewards.len()).collect();
+    idx.sort_by(|&a, &b| {
+        rewards[a]
+            .partial_cmp(&rewards[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Variance of `rewards[idx]` over a prefix/suffix split: the `lo` smallest
+/// plus the `hi` largest, via precomputed prefix sums. Population variance.
+#[inline]
+fn split_variance(pre_s: &[f64], pre_s2: &[f64], n: usize, lo: usize, hi: usize) -> f64 {
+    let m = (lo + hi) as f64;
+    let s = pre_s[lo] + (pre_s[n] - pre_s[n - hi]);
+    let s2 = pre_s2[lo] + (pre_s2[n] - pre_s2[n - hi]);
+    s2 / m - (s / m) * (s / m)
+}
+
+/// **Algorithm 2** — max-variance down-sampling in `O(n log n)`.
+///
+/// Returns the indices (ascending by reward, lowest block then highest
+/// block) of the size-`m` subset maximising empirical reward variance.
+/// Requires `0 < m <= n`.
+pub fn max_variance(rewards: &[f32], m: usize) -> Vec<usize> {
+    let n = rewards.len();
+    assert!(m > 0 && m <= n, "max_variance: m={m} n={n}");
+    let order = argsort(rewards);
+    // prefix sums over the sorted rewards
+    let mut pre_s = vec![0f64; n + 1];
+    let mut pre_s2 = vec![0f64; n + 1];
+    for (i, &oi) in order.iter().enumerate() {
+        let r = rewards[oi] as f64;
+        pre_s[i + 1] = pre_s[i] + r;
+        pre_s2[i + 1] = pre_s2[i] + r * r;
+    }
+    // scan k = number of elements taken from the top
+    let mut best_k = 0usize;
+    let mut best_var = f64::NEG_INFINITY;
+    for k in 0..=m {
+        let lo = m - k;
+        // prefix and suffix must not overlap
+        if lo + k > n {
+            continue;
+        }
+        let var = split_variance(&pre_s, &pre_s2, n, lo, k);
+        if var > best_var + 1e-12 {
+            best_var = var;
+            best_k = k;
+        }
+    }
+    let lo = m - best_k;
+    let mut out: Vec<usize> = order[..lo].to_vec();
+    out.extend_from_slice(&order[n - best_k..]);
+    out
+}
+
+/// Max-reward down-sampling: the `m` highest rewards.
+pub fn max_reward(rewards: &[f32], m: usize) -> Vec<usize> {
+    let n = rewards.len();
+    assert!(m > 0 && m <= n, "max_reward: m={m} n={n}");
+    let order = argsort(rewards);
+    order[n - m..].to_vec()
+}
+
+/// Random down-sampling: uniform `m`-subset without replacement.
+pub fn random(n: usize, m: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(m > 0 && m <= n, "random: m={m} n={n}");
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(m);
+    idx.sort_unstable();
+    idx
+}
+
+/// Percentile down-sampling: the `(i + 0.5)/m` quantiles of the reward
+/// distribution, i.e. sorted positions `floor((i + 0.5) * n / m)`.
+pub fn percentile(rewards: &[f32], m: usize) -> Vec<usize> {
+    let n = rewards.len();
+    assert!(m > 0 && m <= n, "percentile: m={m} n={n}");
+    let order = argsort(rewards);
+    let mut out = Vec::with_capacity(m);
+    let mut last = usize::MAX;
+    for i in 0..m {
+        let mut pos = ((i as f64 + 0.5) * n as f64 / m as f64).floor() as usize;
+        pos = pos.min(n - 1);
+        // guarantee m distinct picks even when quantiles collide
+        if last != usize::MAX && pos <= last {
+            pos = (last + 1).min(n - 1);
+        }
+        out.push(order[pos]);
+        last = pos;
+    }
+    // if clamping at the top collided, backfill from unused sorted slots
+    out.dedup();
+    if out.len() < m {
+        let used: std::collections::HashSet<usize> = out.iter().copied().collect();
+        for &o in order.iter().rev() {
+            if out.len() == m {
+                break;
+            }
+            if !used.contains(&o) {
+                out.push(o);
+            }
+        }
+    }
+    out
+}
+
+/// Population variance of the selected rewards (used by tests/benches and
+/// the scheduler's telemetry).
+pub fn subset_variance(rewards: &[f32], subset: &[usize]) -> f64 {
+    let m = subset.len() as f64;
+    if subset.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = subset.iter().map(|&i| rewards[i] as f64).sum();
+    let s2: f64 = subset.iter().map(|&i| (rewards[i] as f64).powi(2)).sum();
+    s2 / m - (s / m) * (s / m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_cases, vec_f32};
+    use crate::util::rng::Rng;
+
+    /// Exhaustive O(C(n, m)) oracle.
+    fn oracle_max_variance(rewards: &[f32], m: usize) -> f64 {
+        fn rec(rewards: &[f32], start: usize, left: usize, cur: &mut Vec<usize>, best: &mut f64) {
+            if left == 0 {
+                let v = subset_variance(rewards, cur);
+                if v > *best {
+                    *best = v;
+                }
+                return;
+            }
+            if rewards.len() - start < left {
+                return;
+            }
+            for i in start..rewards.len() {
+                cur.push(i);
+                rec(rewards, i + 1, left - 1, cur, best);
+                cur.pop();
+            }
+        }
+        let mut best = f64::NEG_INFINITY;
+        rec(rewards, 0, m, &mut Vec::new(), &mut best);
+        best
+    }
+
+    /// Theorem 1: Algorithm 2 is exactly optimal (all n <= 10, any m).
+    #[test]
+    fn max_variance_matches_oracle() {
+        for_cases(300, |rng| {
+            let n = rng.gen_range_inclusive(1, 9) as usize;
+            let rewards = vec_f32(rng, n, -5.0, 5.0);
+            let m = rng.gen_range_inclusive(1, n as i64) as usize;
+            let got = max_variance(&rewards, m);
+            assert_eq!(got.len(), m);
+            let set: std::collections::HashSet<_> = got.iter().collect();
+            assert_eq!(set.len(), m, "duplicates in {got:?}");
+            let got_var = subset_variance(&rewards, &got);
+            let want = oracle_max_variance(&rewards, m);
+            assert!((got_var - want).abs() < 1e-9, "got {got_var}, oracle {want} for {rewards:?} m={m}");
+        });
+    }
+
+    /// Lemma 3.1: the selection is a prefix + suffix of the sorted order.
+    #[test]
+    fn max_variance_is_prefix_suffix() {
+        for_cases(300, |rng| {
+            let n = rng.gen_range_inclusive(2, 49) as usize;
+            let rewards = vec_f32(rng, n, -100.0, 100.0);
+            let m = rng.gen_range_inclusive(1, n as i64) as usize;
+            let got = max_variance(&rewards, m);
+            let order = argsort(&rewards);
+            let rank: std::collections::HashMap<usize, usize> =
+                order.iter().enumerate().map(|(r, &i)| (i, r)).collect();
+            let mut ranks: Vec<usize> = got.iter().map(|i| rank[i]).collect();
+            ranks.sort_unstable();
+            // ranks must form {0..split-1} ∪ {n-(m-split)..n-1}
+            let mut split = ranks.len();
+            for (j, &r) in ranks.iter().enumerate() {
+                if r != j {
+                    split = j;
+                    break;
+                }
+            }
+            for (j, &r) in ranks.iter().enumerate().skip(split) {
+                assert_eq!(r, n - (m - j), "not a prefix+suffix: {ranks:?} (n={n}, m={m})");
+            }
+        });
+    }
+
+    /// Theorem 2: binary rewards -> the k-split the theorem prescribes.
+    #[test]
+    fn binary_rewards_half_split() {
+        for_cases(300, |rng| {
+            let n = rng.gen_range_inclusive(4, 39) as usize;
+            let rewards: Vec<f32> = (0..n).map(|_| if rng.gen_bool(0.5) { 1.0 } else { 0.0 }).collect();
+            let m_half = rng.gen_range_inclusive(1, 9) as usize;
+            let m = (2 * m_half).min(n - (n % 2));
+            if m == 0 {
+                return;
+            }
+            let got = max_variance(&rewards, m);
+            let pos = rewards.iter().filter(|&&r| r > 0.5).count();
+            let neg = n - pos;
+            // Theorem 2's optimal count of ones in the subset
+            let opt_k = (m / 2).max(m.saturating_sub(neg)).min(pos);
+            let opt_var = {
+                let ones = opt_k as f64;
+                let zeros = (m - opt_k) as f64;
+                let mean = ones / m as f64;
+                (ones * (1.0 - mean).powi(2) + zeros * mean.powi(2)) / m as f64
+            };
+            assert!(
+                (subset_variance(&rewards, &got) - opt_var).abs() < 1e-9,
+                "pos={pos} neg={neg} m={m}"
+            );
+        });
+    }
+
+    /// All rules return m distinct valid indices.
+    #[test]
+    fn all_rules_return_valid_subsets() {
+        for_cases(300, |rng| {
+            let n = rng.gen_range_inclusive(1, 63) as usize;
+            let rewards = vec_f32(rng, n, -3.0, 3.0);
+            let m = rng.gen_range_inclusive(1, n as i64) as usize;
+            let mut sel_rng = Rng::seed_from_u64(rng.next_u64());
+            for rule in [Rule::MaxVariance, Rule::MaxReward, Rule::Random, Rule::Percentile] {
+                let got = rule.select(&rewards, m, &mut sel_rng);
+                assert_eq!(got.len(), m, "{rule:?}");
+                let set: std::collections::HashSet<_> = got.iter().collect();
+                assert_eq!(set.len(), m, "{rule:?} dup");
+                assert!(got.iter().all(|&i| i < n), "{rule:?} oob");
+            }
+        });
+    }
+
+    #[test]
+    fn max_reward_picks_top() {
+        let r = vec![0.1, 3.0, 2.0, -1.0, 2.5];
+        let mut got = max_reward(&r, 2);
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 4]);
+    }
+
+    #[test]
+    fn percentile_m_eq_n_selects_everything() {
+        let r = vec![5.0, 1.0, 3.0, 2.0];
+        let mut got = percentile(&r, 4);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn percentile_spreads_over_spectrum() {
+        let r: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let got = percentile(&r, 4);
+        let mut vals: Vec<f32> = got.iter().map(|&i| r[i]).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(vals, vec![12.0, 37.0, 62.0, 87.0]);
+    }
+
+    #[test]
+    fn random_m_eq_n_is_identity_set() {
+        let mut rng = Rng::seed_from_u64(0);
+        let got = random(6, 6, &mut rng);
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn max_variance_binary_even_split() {
+        // 6 ones, 6 zeros, m=4 -> 2+2
+        let mut r = vec![1.0f32; 6];
+        r.extend(vec![0.0f32; 6]);
+        let got = max_variance(&r, 4);
+        let ones = got.iter().filter(|&&i| r[i] > 0.5).count();
+        assert_eq!(ones, 2);
+        assert!((subset_variance(&r, &got) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_variance_all_equal_rewards() {
+        let r = vec![2.0f32; 8];
+        let got = max_variance(&r, 3);
+        assert_eq!(got.len(), 3);
+        assert_eq!(subset_variance(&r, &got), 0.0);
+    }
+
+    #[test]
+    fn max_variance_m_eq_n() {
+        let r = vec![1.0, 2.0, 3.0];
+        let mut got = max_variance(&r, 3);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn deterministic_under_ties() {
+        let r = vec![1.0f32, 1.0, 0.0, 0.0, 1.0, 0.0];
+        let a = max_variance(&r, 4);
+        let b = max_variance(&r, 4);
+        assert_eq!(a, b);
+    }
+}

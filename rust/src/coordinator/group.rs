@@ -1,0 +1,164 @@
+//! Per-prompt rollout groups and update-batch assembly.
+//!
+//! GRPO operates on *groups*: all `n` rollouts of one prompt share the
+//! advantage-normalization statistics. PODS applies the down-sampling rule
+//! **within each prompt group** and then concatenates the selected rollouts
+//! across prompts into the update batch (paper §3.2, Algorithm 1).
+
+use crate::coordinator::advantage::{subset_advantages, NormMode};
+use crate::coordinator::downsample::Rule;
+use crate::reward::RewardBreakdown;
+use crate::tasks::Problem;
+use crate::util::rng::Rng;
+
+/// One sampled rollout with everything the update phase needs.
+#[derive(Debug, Clone)]
+pub struct RolloutRecord {
+    /// Full token row [T] (left-padded prompt + generation).
+    pub tokens: Vec<i32>,
+    pub pad_len: i32,
+    /// [G] 1.0 through EOS.
+    pub gen_mask: Vec<f32>,
+    /// [G] behaviour log-probs (π_fixed).
+    pub old_lp: Vec<f32>,
+    /// [G] reference-policy log-probs (zeros when KL is off).
+    pub ref_lp: Vec<f32>,
+    pub gen_len: i32,
+    pub reward: RewardBreakdown,
+    pub total_reward: f32,
+}
+
+/// All rollouts generated for one prompt in one iteration.
+#[derive(Debug, Clone)]
+pub struct PromptGroup {
+    pub problem: Problem,
+    pub rollouts: Vec<RolloutRecord>,
+}
+
+impl PromptGroup {
+    pub fn rewards(&self) -> Vec<f32> {
+        self.rollouts.iter().map(|r| r.total_reward).collect()
+    }
+
+    pub fn mean_reward(&self) -> f32 {
+        if self.rollouts.is_empty() {
+            return 0.0;
+        }
+        self.rewards().iter().sum::<f32>() / self.rollouts.len() as f32
+    }
+
+    pub fn mean_accuracy(&self) -> f32 {
+        if self.rollouts.is_empty() {
+            return 0.0;
+        }
+        self.rollouts.iter().map(|r| r.reward.accuracy).sum::<f32>() / self.rollouts.len() as f32
+    }
+
+    pub fn mean_gen_len(&self) -> f32 {
+        if self.rollouts.is_empty() {
+            return 0.0;
+        }
+        self.rollouts.iter().map(|r| r.gen_len as f32).sum::<f32>() / self.rollouts.len() as f32
+    }
+}
+
+/// One selected rollout with its normalized advantage — the unit the
+/// micro-batcher packs into `grad` calls.
+#[derive(Debug, Clone)]
+pub struct SelectedRollout {
+    pub group_idx: usize,
+    pub rollout_idx: usize,
+    pub advantage: f32,
+}
+
+/// Apply `rule` within each group, normalize advantages per `mode`, and
+/// concatenate across groups (Algorithm 1 for a multi-prompt batch).
+///
+/// `m = None` selects every rollout (vanilla GRPO / GRPO-GA schedules).
+pub fn build_update_batch(
+    groups: &[PromptGroup],
+    rule: Rule,
+    m: Option<usize>,
+    mode: NormMode,
+    rng: &mut Rng,
+) -> Vec<SelectedRollout> {
+    let mut out = Vec::new();
+    for (gi, group) in groups.iter().enumerate() {
+        let rewards = group.rewards();
+        let n = rewards.len();
+        if n == 0 {
+            continue;
+        }
+        let subset: Vec<usize> = match m {
+            Some(m) if m < n => rule.select(&rewards, m, rng),
+            _ => (0..n).collect(),
+        };
+        let advs = subset_advantages(&rewards, &subset, mode);
+        for (ri, adv) in subset.into_iter().zip(advs) {
+            out.push(SelectedRollout { group_idx: gi, rollout_idx: ri, advantage: adv });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::{Split, TaskKind};
+
+    fn fake_group(rewards: &[f32]) -> PromptGroup {
+        let problem = TaskKind::Arith.generate(Split::Train, 0);
+        let rollouts = rewards
+            .iter()
+            .map(|&r| RolloutRecord {
+                tokens: vec![0; 8],
+                pad_len: 0,
+                gen_mask: vec![1.0; 4],
+                old_lp: vec![0.0; 4],
+                ref_lp: vec![0.0; 4],
+                gen_len: 4,
+                reward: RewardBreakdown { accuracy: 0.0, format: 0.0, tag_count: 0.0 },
+                total_reward: r,
+            })
+            .collect();
+        PromptGroup { problem, rollouts }
+    }
+
+    #[test]
+    fn selects_m_per_group_and_concatenates() {
+        let groups = vec![fake_group(&[0.0, 1.0, 2.0, 3.0]), fake_group(&[5.0, 5.0, 0.0, 1.0])];
+        let mut rng = Rng::seed_from_u64(0);
+        let batch = build_update_batch(&groups, Rule::MaxVariance, Some(2), NormMode::After, &mut rng);
+        assert_eq!(batch.len(), 4);
+        assert!(batch.iter().take(2).all(|s| s.group_idx == 0));
+        assert!(batch.iter().skip(2).all(|s| s.group_idx == 1));
+        // max-variance with m=2 on [0,1,2,3] picks 0 and 3
+        let picked: Vec<usize> = batch.iter().take(2).map(|s| s.rollout_idx).collect();
+        assert!(picked.contains(&0) && picked.contains(&3));
+    }
+
+    #[test]
+    fn m_none_selects_all_with_group_normalization() {
+        let groups = vec![fake_group(&[1.0, 3.0])];
+        let mut rng = Rng::seed_from_u64(0);
+        let batch = build_update_batch(&groups, Rule::MaxVariance, None, NormMode::After, &mut rng);
+        assert_eq!(batch.len(), 2);
+        let sum: f32 = batch.iter().map(|s| s.advantage).sum();
+        assert!(sum.abs() < 1e-4);
+        assert!(batch[1].advantage > batch[0].advantage);
+    }
+
+    #[test]
+    fn advantages_normalized_within_group_not_across() {
+        // two groups with very different reward scales: each must be
+        // standardized on its own
+        let groups = vec![fake_group(&[0.0, 1.0]), fake_group(&[100.0, 200.0])];
+        let mut rng = Rng::seed_from_u64(0);
+        let batch = build_update_batch(&groups, Rule::MaxVariance, None, NormMode::After, &mut rng);
+        let g0: Vec<f32> = batch.iter().filter(|s| s.group_idx == 0).map(|s| s.advantage).collect();
+        let g1: Vec<f32> = batch.iter().filter(|s| s.group_idx == 1).map(|s| s.advantage).collect();
+        for (a, b) in g0.iter().zip(&g1) {
+            assert!((a - b).abs() < 1e-3, "per-group standardization should equalize: {a} vs {b}");
+        }
+    }
+}

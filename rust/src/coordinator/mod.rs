@@ -1,0 +1,16 @@
+//! The L3 coordination layer — the paper's system contribution.
+//!
+//! * [`downsample`] — the four down-sampling rules, incl. Algorithm 2
+//!   (max-variance in `O(n log n)`).
+//! * [`advantage`] — subset advantage normalization (§A.3 After/Before).
+//! * [`group`] — per-prompt rollout groups and update-batch assembly.
+//! * [`accum`] — the gradient-accumulation engine (what GRPO-GA pays for).
+//! * [`worker`] — simulated multi-accelerator topology.
+//! * [`scheduler`] — the GRPO / GRPO-GA / GRPO-PODS training loop.
+
+pub mod accum;
+pub mod advantage;
+pub mod downsample;
+pub mod group;
+pub mod scheduler;
+pub mod worker;

@@ -1,0 +1,432 @@
+//! The training-step state machine — GRPO / GRPO-GA / GRPO-PODS schedules.
+//!
+//! One [`Trainer::train_iteration`] implements Algorithm 1 over a batch of
+//! prompts:
+//!
+//! 1. **Inference phase** — generate `n` rollouts per prompt (sharded over
+//!    the simulated workers), verify them with the rule-based reward model.
+//! 2. **Down-sample** — apply the configured rule within each prompt group
+//!    (`m = n` for the GRPO/GA baselines), normalize advantages (§A.3 mode).
+//! 3. **Policy-update phase** — pack the selected rollouts into fixed-size
+//!    micro-batches, run the `grad` artifact per micro-batch, accumulate
+//!    (the GA engine), all-reduce (simulated), apply fused AdamW.
+//!
+//! The hwsim clock charges each phase per the calibrated cost model; the
+//! recorder logs both simulated and real time so every figure can be
+//! regenerated from the CSVs.
+
+use crate::config::{AlgoKind, RunConfig};
+use crate::coordinator::accum::GradAccumulator;
+use crate::coordinator::group::{build_update_batch, PromptGroup};
+use crate::eval;
+use crate::hwsim::SimClock;
+use crate::metrics::{EvalRow, IterRow, Recorder};
+use crate::reward::RewardWeights;
+use crate::rollout::{generate_group, GenRequest};
+use crate::runtime::{params as ckpt, Engine, MicroBatch, ParamStore, TensorF, TensorI};
+use crate::tasks::{Split, TaskKind};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+/// Per-iteration summary returned by [`Trainer::train_iteration`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterStats {
+    pub train_reward: f32,
+    pub train_acc: f32,
+    pub completion_len: f32,
+    pub loss: f32,
+    pub clip_frac: f32,
+    pub kl: f32,
+    pub micro_steps: usize,
+    pub rollouts_generated: usize,
+    pub rollouts_trained: usize,
+    pub sim_inference: f64,
+    pub sim_update: f64,
+}
+
+/// The leader: owns engine, parameters, clock, metrics and the RL loop.
+pub struct Trainer {
+    pub engine: Engine,
+    pub cfg: RunConfig,
+    /// Optimized vector (full params, or LoRA adapters in LoRA profiles).
+    pub store: ParamStore,
+    /// Frozen full-parameter base (LoRA profiles only).
+    pub base: Option<Vec<f32>>,
+    /// Reference-policy snapshot for the KL term (when kl_coef > 0).
+    pub ref_params: Option<Vec<f32>>,
+    pub ref_lora: Option<Vec<f32>>,
+    pub clock: SimClock,
+    pub recorder: Recorder,
+    pub task: TaskKind,
+    /// Additional evaluation tracks run at every eval point — (task, split,
+    /// label). Used by the Fig. 7 generalization study (platinum /
+    /// cross-task test sets).
+    pub extra_evals: Vec<(TaskKind, Split, String)>,
+    rng: Rng,
+    accum: GradAccumulator,
+    prompt_cursor: u64,
+    started: Instant,
+}
+
+impl Trainer {
+    /// Build a trainer from a validated config. Loads the artifact profile,
+    /// initializes (or loads) parameters, and snapshots the KL reference.
+    pub fn new(artifacts_dir: &std::path::Path, cfg: RunConfig) -> Result<Self> {
+        let engine = Engine::load(artifacts_dir, &cfg.run.profile)?;
+        crate::tasks::tokenizer::verify_against_meta(&engine.meta.vocab)?;
+        let task = cfg.task_kind();
+
+        let (store, base) = if engine.meta.is_lora() {
+            let ckpt_path = cfg.run.base_checkpoint.as_ref().ok_or_else(|| {
+                anyhow!("LoRA profile {:?} requires run.base_checkpoint", cfg.run.profile)
+            })?;
+            let (_, base_store, _) = ckpt::load_store(std::path::Path::new(ckpt_path))?;
+            if base_store.params.len() != engine.meta.param_count {
+                return Err(anyhow!(
+                    "base checkpoint has {} params, profile expects {}",
+                    base_store.params.len(),
+                    engine.meta.param_count
+                ));
+            }
+            let lora0 = engine.init(cfg.run.seed as u32)?;
+            (ParamStore::new(lora0), Some(base_store.params))
+        } else if let Some(ckpt_path) = &cfg.run.base_checkpoint {
+            // full-parameter RL warm-started from an SFT'd checkpoint
+            let (_, mut base_store, _) = ckpt::load_store(std::path::Path::new(ckpt_path))?;
+            if base_store.params.len() != engine.meta.param_count {
+                return Err(anyhow!(
+                    "checkpoint has {} params, profile expects {}",
+                    base_store.params.len(),
+                    engine.meta.param_count
+                ));
+            }
+            // fresh optimizer state for the RL phase
+            base_store.m.iter_mut().for_each(|x| *x = 0.0);
+            base_store.v.iter_mut().for_each(|x| *x = 0.0);
+            base_store.step = 0;
+            (base_store, None)
+        } else {
+            let p0 = engine.init(cfg.run.seed as u32)?;
+            (ParamStore::new(p0), None)
+        };
+
+        let accum = GradAccumulator::new(store.len());
+        Ok(Self {
+            engine,
+            cfg,
+            store,
+            base,
+            ref_params: None,
+            ref_lora: None,
+            clock: SimClock::new(),
+            recorder: Recorder::new(),
+            task,
+            extra_evals: Vec::new(),
+            rng: Rng::seed_from_u64(0xC0FFEE),
+            accum,
+            prompt_cursor: 0,
+            started: Instant::now(),
+        })
+    }
+
+    fn rng_reseed(&mut self) {
+        self.rng = Rng::seed_from_u64(self.cfg.run.seed ^ 0xC0FFEE);
+    }
+
+    /// The full-parameter vector used for rollouts/eval (base in LoRA mode).
+    fn full_params(&self) -> &[f32] {
+        match &self.base {
+            Some(b) => b,
+            None => &self.store.params,
+        }
+    }
+
+    /// The LoRA vector passed alongside (None in full-parameter mode).
+    fn lora_vec(&self) -> Option<&[f32]> {
+        if self.engine.meta.is_lora() {
+            Some(&self.store.params)
+        } else {
+            None
+        }
+    }
+
+    /// Snapshot the current policy as the KL reference (call after SFT /
+    /// before RL). No-op if kl_coef == 0.
+    pub fn snapshot_reference(&mut self) {
+        if self.cfg.algo.kl_coef > 0.0 {
+            self.ref_params = Some(self.full_params().to_vec());
+            self.ref_lora = self.lora_vec().map(|l| l.to_vec());
+        }
+    }
+
+    /// SFT warm-up: teacher-forced cross-entropy on gold responses — the
+    /// stand-in for starting from an instruct-tuned checkpoint. Only valid
+    /// in full-parameter profiles (the base is what gets pre-trained).
+    pub fn sft_warmup(&mut self) -> Result<()> {
+        let Some(sft) = self.cfg.sft.clone() else {
+            return Ok(());
+        };
+        if sft.steps == 0 {
+            return Ok(());
+        }
+        if self.engine.meta.is_lora() {
+            return Err(anyhow!("SFT warm-up requires a full-parameter profile"));
+        }
+        let bu = self.engine.meta.config.update_batch;
+        let t = self.engine.meta.config.seq_len;
+        let p = self.engine.meta.config.prompt_len;
+        let log_every = if sft.log_every == 0 { 50 } else { sft.log_every };
+        let pool = if sft.pool == 0 { u64::MAX } else { sft.pool as u64 };
+        for step in 0..sft.steps {
+            // cycle a bounded problem pool: multiple epochs over the same
+            // examples is what lets the small policy generalise
+            let start = (step as u64 * bu as u64) % pool;
+            let problems = self.task.batch(Split::Train, start, bu);
+            let mut tokens = vec![crate::tasks::tokenizer::PAD; bu * t];
+            let mut mask = vec![0.0f32; bu * t];
+            let mut pads = vec![0i32; bu];
+            for (b, pr) in problems.iter().enumerate() {
+                let pad = p - pr.prompt.len();
+                pads[b] = pad as i32;
+                for (j, &tk) in pr.prompt.iter().enumerate() {
+                    tokens[b * t + pad + j] = tk;
+                }
+                for (j, &tk) in pr.ideal_response.iter().take(t - p).enumerate() {
+                    tokens[b * t + p + j] = tk;
+                    mask[b * t + p + j] = 1.0;
+                }
+            }
+            let tokens = TensorI::new(tokens, &[bu, t])?;
+            let mask = TensorF::new(mask, &[bu, t])?;
+            let loss = self
+                .engine
+                .sft_step(&mut self.store, &tokens, &pads, &mask, sft.lr as f32)?;
+            if step % log_every == 0 || step + 1 == sft.steps {
+                eprintln!("[sft] step {step}/{} loss {loss:.4}", sft.steps);
+            }
+        }
+        self.prompt_cursor = 0; // RL re-walks the train split from the start
+        Ok(())
+    }
+
+    /// One full Algorithm-1 iteration over `prompts_per_iter` prompts.
+    pub fn train_iteration(&mut self, iter: usize) -> Result<IterStats> {
+        let cfg = &self.cfg;
+        let n = cfg.algo.n;
+        let m = match cfg.algo_kind() {
+            AlgoKind::GrpoPods => cfg.algo.m,
+            _ => None,
+        };
+        let bu = self.engine.meta.config.update_batch;
+        let g = self.engine.meta.gen_len;
+        let t = self.engine.meta.config.seq_len;
+        let weights = RewardWeights::default();
+
+        // ---- Phase 1: inference ------------------------------------------
+        let problems = self
+            .task
+            .batch(Split::Train, self.prompt_cursor, cfg.run.prompts_per_iter);
+        self.prompt_cursor += cfg.run.prompts_per_iter as u64;
+
+        let mut groups: Vec<PromptGroup> = Vec::with_capacity(problems.len());
+        let mut total_gen_tokens = 0usize;
+        for problem in &problems {
+            let req = GenRequest {
+                params: self.full_params(),
+                lora: self.lora_vec(),
+                ref_params: self.ref_params.as_deref(),
+                ref_lora: self.ref_lora.as_deref(),
+                n,
+                temperature: cfg.algo.temperature as f32,
+                run_seed: cfg.run.seed,
+                iter: iter as u64,
+                weights,
+            };
+            let (group, stats) = generate_group(&self.engine, &req, self.task, problem)?;
+            total_gen_tokens += stats.total_gen_tokens;
+            groups.push(group);
+        }
+        let rollouts_generated = groups.iter().map(|gr| gr.rollouts.len()).sum::<usize>();
+        let avg_tokens = total_gen_tokens as f64 / rollouts_generated.max(1) as f64;
+        let sim_inference = cfg.hwsim.inference_time(rollouts_generated, avg_tokens);
+
+        // ---- Phase 2: down-sample + advantages ---------------------------
+        let selected = build_update_batch(&groups, cfg.rule(), m, cfg.norm_mode(), &mut self.rng);
+        let rollouts_trained = selected.len();
+        let sel_rewards: Vec<f32> = selected
+            .iter()
+            .map(|s| groups[s.group_idx].rollouts[s.rollout_idx].total_reward)
+            .collect();
+        let sel_idx: Vec<usize> = (0..sel_rewards.len()).collect();
+        let sel_variance =
+            crate::coordinator::downsample::subset_variance(&sel_rewards, &sel_idx);
+
+        // ---- Phase 3: micro-batched update (the GA engine) ---------------
+        self.accum.reset();
+        let mut loss_sum = 0f64;
+        let mut clip_sum = 0f64;
+        let mut kl_sum = 0f64;
+        for chunk in selected.chunks(bu) {
+            let mut tokens = vec![crate::tasks::tokenizer::PAD; bu * t];
+            let mut pads = vec![0i32; bu];
+            let mut gen_mask = vec![0.0f32; bu * g];
+            let mut old_lp = vec![0.0f32; bu * g];
+            let mut ref_lp = vec![0.0f32; bu * g];
+            let mut adv = vec![0.0f32; bu];
+            for (b, sel) in chunk.iter().enumerate() {
+                let r = &groups[sel.group_idx].rollouts[sel.rollout_idx];
+                tokens[b * t..(b + 1) * t].copy_from_slice(&r.tokens);
+                pads[b] = r.pad_len;
+                gen_mask[b * g..(b + 1) * g].copy_from_slice(&r.gen_mask);
+                old_lp[b * g..(b + 1) * g].copy_from_slice(&r.old_lp);
+                ref_lp[b * g..(b + 1) * g].copy_from_slice(&r.ref_lp);
+                adv[b] = sel.advantage;
+            }
+            let mb = MicroBatch {
+                tokens: TensorI::new(tokens, &[bu, t])?,
+                pad_len: pads,
+                gen_mask: TensorF::new(gen_mask, &[bu, g])?,
+                old_lp: TensorF::new(old_lp, &[bu, g])?,
+                adv,
+                ref_lp: TensorF::new(ref_lp, &[bu, g])?,
+            };
+            let out = self
+                .engine
+                .grad(&self.store.params, self.base.as_deref(), &mb, cfg.algo.kl_coef as f32)?;
+            self.accum.add(&out.grads, bu as f64);
+            loss_sum += out.loss as f64 * chunk.len() as f64;
+            clip_sum += out.clip_frac as f64 * chunk.len() as f64;
+            kl_sum += out.kl as f64 * chunk.len() as f64;
+        }
+        let micro_steps = self.accum.micro_steps();
+        let sim_update = cfg
+            .hwsim
+            .update_time(rollouts_trained.max(1), self.engine.meta.is_lora());
+
+        if rollouts_trained > 0 {
+            let grads = self.accum.mean(rollouts_trained);
+            self.engine.update(&mut self.store, &grads, cfg.algo.lr as f32)?;
+        }
+
+        self.clock.advance(sim_inference + sim_update);
+
+        let stats = IterStats {
+            train_reward: groups.iter().map(|gr| gr.mean_reward()).sum::<f32>()
+                / groups.len().max(1) as f32,
+            train_acc: groups.iter().map(|gr| gr.mean_accuracy()).sum::<f32>()
+                / groups.len().max(1) as f32,
+            completion_len: groups.iter().map(|gr| gr.mean_gen_len()).sum::<f32>()
+                / groups.len().max(1) as f32,
+            loss: (loss_sum / rollouts_trained.max(1) as f64) as f32,
+            clip_frac: (clip_sum / rollouts_trained.max(1) as f64) as f32,
+            kl: (kl_sum / rollouts_trained.max(1) as f64) as f32,
+            micro_steps,
+            rollouts_generated,
+            rollouts_trained,
+            sim_inference,
+            sim_update,
+        };
+        self.recorder.push_iter(IterRow {
+            iter,
+            sim_time: self.clock.now(),
+            real_time: self.started.elapsed().as_secs_f64(),
+            sim_inference_time: sim_inference,
+            sim_update_time: sim_update,
+            train_reward: stats.train_reward,
+            train_acc: stats.train_acc,
+            completion_len: stats.completion_len,
+            sel_variance,
+            loss: stats.loss,
+            clip_frac: stats.clip_frac,
+            kl: stats.kl,
+            micro_steps,
+            rollouts_generated,
+            rollouts_trained,
+        });
+        Ok(stats)
+    }
+
+    /// Evaluate on a split of the training task and record the snapshot.
+    pub fn evaluate(&mut self, iter: usize, split: Split, label: &str) -> Result<f32> {
+        self.evaluate_task(iter, self.task, split, label)
+    }
+
+    /// Evaluate on an arbitrary (task, split) track — the Fig. 7 path.
+    pub fn evaluate_task(
+        &mut self,
+        iter: usize,
+        task: TaskKind,
+        split: Split,
+        label: &str,
+    ) -> Result<f32> {
+        let stats = eval::evaluate(
+            &self.engine,
+            self.full_params(),
+            self.lora_vec(),
+            task,
+            split,
+            self.cfg.run.eval_problems,
+            &RewardWeights::default(),
+        )?;
+        self.recorder.push_eval(EvalRow {
+            iter,
+            sim_time: self.clock.now(),
+            real_time: self.started.elapsed().as_secs_f64(),
+            split: label.to_string(),
+            accuracy: stats.accuracy,
+            format_rate: stats.format_rate,
+            mean_reward: stats.mean_reward,
+            mean_len: stats.mean_len,
+            problems: stats.problems,
+        });
+        Ok(stats.accuracy)
+    }
+
+    /// Full run: SFT warm-up (if configured), KL snapshot, RL iterations
+    /// with periodic eval, CSV dump, optional checkpoint.
+    pub fn run(&mut self) -> Result<()> {
+        self.rng_reseed();
+        self.sft_warmup()?;
+        self.snapshot_reference();
+        let iters = self.cfg.run.iterations;
+        let eval_every = self.cfg.run.eval_every.max(1);
+        let acc0 = self.evaluate(0, Split::Test, "test")?;
+        eprintln!(
+            "[train {}] start: test acc {acc0:.3}",
+            self.cfg.run.name
+        );
+        for it in 0..iters {
+            let stats = self.train_iteration(it)?;
+            if (it + 1) % eval_every == 0 || it + 1 == iters {
+                let acc = self.evaluate(it + 1, Split::Test, "test")?;
+                let extra = self.extra_evals.clone();
+                for (task, split, label) in extra {
+                    self.evaluate_task(it + 1, task, split, &label)?;
+                }
+                eprintln!(
+                    "[train {}] iter {:>4} sim {:>8.1}s acc {:.3} trainR {:.2} len {:.1} clip {:.3}",
+                    self.cfg.run.name,
+                    it + 1,
+                    self.clock.now(),
+                    acc,
+                    stats.train_reward,
+                    stats.completion_len,
+                    stats.clip_frac,
+                );
+            }
+        }
+        let out_dir = std::path::Path::new(&self.cfg.run.out_dir);
+        self.recorder.write_csv(out_dir, &self.cfg.run.name)?;
+        if let Some(path) = self.cfg.run.save_checkpoint.clone() {
+            ckpt::save_store(
+                std::path::Path::new(&path),
+                &self.cfg.run.profile,
+                &self.store,
+                self.base.as_deref(),
+            )?;
+            eprintln!("[train {}] checkpoint -> {path}", self.cfg.run.name);
+        }
+        Ok(())
+    }
+}

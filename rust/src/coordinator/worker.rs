@@ -1,0 +1,66 @@
+//! Simulated worker topology: leader-driven shard assignment.
+//!
+//! The paper's distributed settings (e)–(f) run 8 accelerators under
+//! DeepSpeed ZeRO-2: every device generates a shard of the rollouts, then
+//! the update phase proceeds in lock-step micro-batches with a gradient
+//! all-reduce per micro-step. On this testbed all *computation* executes on
+//! one CPU PJRT device, but the **control flow** is identical: the leader
+//! partitions work across logical workers, walks the shards, and the hwsim
+//! clock charges the phases as if the workers ran concurrently (inference:
+//! max over workers) or in lock-step (updates: micro-steps × (compute +
+//! collective)).
+
+/// A leader's view of `w` logical workers.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    pub workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1);
+        Self { workers }
+    }
+
+    /// Partition `items` round-robin; returns per-worker index lists.
+    pub fn shard(&self, items: usize) -> Vec<Vec<usize>> {
+        let mut shards = vec![Vec::new(); self.workers];
+        for i in 0..items {
+            shards[i % self.workers].push(i);
+        }
+        shards
+    }
+
+    /// Largest shard size (the straggler that bounds parallel phase time).
+    pub fn max_shard(&self, items: usize) -> usize {
+        items.div_ceil(self.workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn shards_partition_exactly() {
+        for_cases(300, |rng| {
+            let items = rng.gen_range_inclusive(0, 199) as usize;
+            let w = rng.gen_range_inclusive(1, 15) as usize;
+            let pool = WorkerPool::new(w);
+            let shards = pool.shard(items);
+            assert_eq!(shards.len(), w);
+            let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+            all.sort_unstable();
+            let want: Vec<usize> = (0..items).collect();
+            assert_eq!(all, want);
+            let max = shards.iter().map(|s| s.len()).max().unwrap_or(0);
+            if items > 0 {
+                assert_eq!(max, pool.max_shard(items));
+            }
+            // balance: no worker exceeds another by more than 1
+            let min = shards.iter().map(|s| s.len()).min().unwrap_or(0);
+            assert!(max - min <= 1);
+        });
+    }
+}

@@ -1,0 +1,64 @@
+//! Test-set evaluation: greedy decode + rule-based verification.
+//!
+//! Reuses the rollout artifact with temperature 0 (argmax decode), batching
+//! distinct problems per call. Used for the accuracy curves of Figs. 3–7
+//! and the generalization study (test vs platinum vs cross-task splits).
+
+use crate::reward::{score_rollout, RewardWeights};
+use crate::rollout::mixed_prompt_batch;
+use crate::runtime::Engine;
+use crate::tasks::{Split, TaskKind};
+use anyhow::Result;
+
+/// Aggregate evaluation result.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalStats {
+    pub accuracy: f32,
+    pub format_rate: f32,
+    pub mean_reward: f32,
+    pub mean_len: f32,
+    pub problems: usize,
+}
+
+/// Evaluate `count` problems of `task`/`split` with greedy decode.
+pub fn evaluate(
+    engine: &Engine,
+    params: &[f32],
+    lora: Option<&[f32]>,
+    task: TaskKind,
+    split: Split,
+    count: usize,
+    weights: &RewardWeights,
+) -> Result<EvalStats> {
+    let br = engine.meta.config.rollout_batch;
+    let t = engine.meta.config.seq_len;
+    let p = engine.meta.config.prompt_len;
+    let problems = task.batch(split, 0, count);
+    let mut acc = 0f64;
+    let mut fmt = 0f64;
+    let mut rew = 0f64;
+    let mut len = 0f64;
+    let mut done = 0usize;
+    for chunk in problems.chunks(br) {
+        let prompts: Vec<&[i32]> = chunk.iter().map(|pr| pr.prompt.as_slice()).collect();
+        let (batch, pads) = mixed_prompt_batch(engine, &prompts)?;
+        let out = engine.rollout(params, lora, &batch, &pads, 0, 0.0)?;
+        for (b, problem) in chunk.iter().enumerate() {
+            let row = &out.tokens.data[b * t..(b + 1) * t];
+            let r = score_rollout(row, p, task, problem);
+            acc += r.accuracy as f64;
+            fmt += r.format as f64;
+            rew += r.total(weights) as f64;
+            len += out.gen_len[b] as f64;
+            done += 1;
+        }
+    }
+    let n = done.max(1) as f64;
+    Ok(EvalStats {
+        accuracy: (acc / n) as f32,
+        format_rate: (fmt / n) as f32,
+        mean_reward: (rew / n) as f32,
+        mean_len: (len / n) as f32,
+        problems: done,
+    })
+}

@@ -1,0 +1,176 @@
+//! Fig. 1 — the inference/update computational asymmetry.
+//!
+//! Top panel: total step time vs rollouts per device, decomposed into
+//! inference and policy-update phases, with the gradient-accumulation cliff
+//! at the memory ceiling (32 rollouts/device in the paper).
+//! Bottom panel: per-token inference time vs rollout batch (21× batching
+//! amortization, saturating at 512).
+//!
+//! The curves come from the calibrated [`HwModel`] (the substitution for
+//! the paper's 8×A100 testbed, DESIGN.md §2); alongside, this driver
+//! *measures* the real rollout/grad artifact latencies on this machine at
+//! the profile's batch sizes so the asymmetry is also demonstrated on real
+//! hardware (one CPU device).
+
+use crate::hwsim::HwModel;
+use crate::metrics::{ascii_plot, write_csv_rows};
+use crate::rollout::prompt_batch;
+use crate::runtime::{Engine, MicroBatch, ParamStore, TensorF, TensorI};
+use crate::tasks::{Split, TaskKind};
+use crate::metrics::CsvRow;
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Debug)]
+struct Fig1Row {
+    rollouts_per_device: usize,
+    per_token_time: f64,
+    inference_time: f64,
+    update_time: f64,
+    micro_steps: usize,
+    total_step_time: f64,
+}
+
+impl CsvRow for Fig1Row {
+    fn csv_header() -> &'static str {
+        "rollouts_per_device,per_token_time,inference_time,update_time,micro_steps,total_step_time"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{}",
+            self.rollouts_per_device,
+            self.per_token_time,
+            self.inference_time,
+            self.update_time,
+            self.micro_steps,
+            self.total_step_time
+        )
+    }
+}
+
+#[derive(Debug)]
+struct Fig1Probe {
+    program: String,
+    batch: usize,
+    seconds_per_call: f64,
+    seconds_per_rollout: f64,
+}
+
+impl CsvRow for Fig1Probe {
+    fn csv_header() -> &'static str {
+        "program,batch,seconds_per_call,seconds_per_rollout"
+    }
+    fn csv_row(&self) -> String {
+        format!("{},{},{},{}", self.program, self.batch, self.seconds_per_call, self.seconds_per_rollout)
+    }
+}
+
+pub fn run(artifacts: &Path, out_dir: &str, probe: bool) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let hw = HwModel::default();
+    let avg_tokens = 40.0;
+    let mut rows = Vec::new();
+    for r in [4usize, 8, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024] {
+        rows.push(Fig1Row {
+            rollouts_per_device: r,
+            per_token_time: hw.per_token_time(r),
+            inference_time: hw.inference_time(r, avg_tokens),
+            update_time: hw.update_time(r, false),
+            micro_steps: hw.forced_micro_steps(r),
+            total_step_time: hw.step_time(r, avg_tokens, r, false),
+        });
+    }
+    write_csv_rows(Path::new(&format!("{out_dir}/fig1.csv")), &rows)?;
+
+    let tot: Vec<(f64, f64)> = rows
+        .iter()
+        .map(|r| ((r.rollouts_per_device as f64).log2(), r.total_step_time))
+        .collect();
+    let upd: Vec<(f64, f64)> = rows
+        .iter()
+        .map(|r| ((r.rollouts_per_device as f64).log2(), r.update_time))
+        .collect();
+    let inf: Vec<(f64, f64)> = rows
+        .iter()
+        .map(|r| ((r.rollouts_per_device as f64).log2(), r.inference_time))
+        .collect();
+    println!("Fig.1 (top): step time vs log2(rollouts/device)");
+    println!("{}", ascii_plot(&[("total", &tot), ("update", &upd), ("inference", &inf)], 64, 14));
+    let ptok: Vec<(f64, f64)> = rows
+        .iter()
+        .map(|r| ((r.rollouts_per_device as f64).log2(), r.per_token_time * 1e3))
+        .collect();
+    println!("Fig.1 (bottom): per-token inference ms vs log2(batch)");
+    println!("{}", ascii_plot(&[("ms/token", &ptok)], 64, 12));
+    println!(
+        "amortization ratio batch 8 -> 512: {:.1}x (paper: ~21x); GA cliff at {} rollouts",
+        hw.per_token_time(8) / hw.per_token_time(512),
+        hw.mem_capacity_rollouts
+    );
+
+    if probe {
+        probe_real(artifacts, out_dir)?;
+    }
+    Ok(())
+}
+
+/// Measure the real artifact latencies at the profile's batch sizes.
+fn probe_real(artifacts: &Path, out_dir: &str) -> Result<()> {
+    let engine = Engine::load(artifacts, "base")?;
+    let seed = 7u32;
+    let params = ParamStore::new(engine.init(seed)?);
+    let problem = TaskKind::Arith.generate(Split::Train, 0);
+    let (prompts, pads) = prompt_batch(&engine, &problem.prompt)?;
+    engine.warmup(&["rollout", "grad"])?;
+    let br = engine.meta.config.rollout_batch;
+    let bu = engine.meta.config.update_batch;
+    let t = engine.meta.config.seq_len;
+    let g = engine.meta.gen_len;
+
+    let reps = 3;
+    let t0 = std::time::Instant::now();
+    let mut out = None;
+    for i in 0..reps {
+        out = Some(engine.rollout(&params.params, None, &prompts, &pads, seed + i, 1.0)?);
+    }
+    let roll_s = t0.elapsed().as_secs_f64() / reps as f64;
+    let out = out.unwrap();
+
+    let mb = MicroBatch {
+        tokens: TensorI::new(out.tokens.data[..bu * t].to_vec(), &[bu, t])?,
+        pad_len: pads[..bu].to_vec(),
+        gen_mask: TensorF::new(out.gen_mask.data[..bu * g].to_vec(), &[bu, g])?,
+        old_lp: TensorF::new(out.logprobs.data[..bu * g].to_vec(), &[bu, g])?,
+        adv: vec![0.5; bu],
+        ref_lp: TensorF::new(vec![0.0; bu * g], &[bu, g])?,
+    };
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        engine.grad(&params.params, None, &mb, 0.0)?;
+    }
+    let grad_s = t0.elapsed().as_secs_f64() / reps as f64;
+
+    let probes = vec![
+        Fig1Probe {
+            program: "rollout".into(),
+            batch: br,
+            seconds_per_call: roll_s,
+            seconds_per_rollout: roll_s / br as f64,
+        },
+        Fig1Probe {
+            program: "grad".into(),
+            batch: bu,
+            seconds_per_call: grad_s,
+            seconds_per_rollout: grad_s / bu as f64,
+        },
+    ];
+    write_csv_rows(Path::new(&format!("{out_dir}/fig1_probe.csv")), &probes)?;
+    println!(
+        "real probe (base profile, 1 CPU): rollout {:.3}s/call ({:.4}s/rollout, B={br}), grad {:.3}s/call ({:.4}s/rollout, B={bu})",
+        roll_s,
+        roll_s / br as f64,
+        grad_s,
+        grad_s / bu as f64,
+    );
+    Ok(())
+}

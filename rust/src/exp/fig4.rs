@@ -1,0 +1,108 @@
+//! Fig. 4 — effect of rollout size n and update size m on GRPO-PODS
+//! (setting (a) analogue). Expected shape: diminishing returns in n with an
+//! optimum near n=64; robustness in m until m <= 4.
+
+use super::{peak_accuracy, run_config, CfgBuilder, Scale};
+use crate::metrics::{ascii_plot, write_csv_rows};
+use crate::metrics::CsvRow;
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Debug)]
+struct SweepRow {
+    sweep: String,
+    n: usize,
+    m: usize,
+    peak_acc: f32,
+    final_acc: f32,
+    sim_time_total: f64,
+    sim_time_per_iter: f64,
+}
+
+impl CsvRow for SweepRow {
+    fn csv_header() -> &'static str {
+        "sweep,n,m,peak_acc,final_acc,sim_time_total,sim_time_per_iter"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{}",
+            self.sweep, self.n, self.m, self.peak_acc, self.final_acc, self.sim_time_total, self.sim_time_per_iter
+        )
+    }
+}
+
+pub fn run(artifacts: &Path, scale: Scale, out_dir: &str) -> Result<()> {
+    let base_ckpt =
+        super::ensure_base_checkpoint(artifacts, "arith", super::fig3::SFT_STEPS, out_dir)?;
+    let iters = scale.iters(40);
+    let mut rows = Vec::new();
+    let mut n_curve = Vec::new();
+    let mut m_curve = Vec::new();
+
+    // n sweep at fixed m = 16
+    for n in [16usize, 32, 64, 128] {
+        let tr = run_one(artifacts, &base_ckpt, n, 16.min(n), iters, out_dir, "n_sweep")?;
+        let peak = peak_accuracy(&tr.recorder.evals);
+        let t = tr.clock.now();
+        rows.push(SweepRow {
+            sweep: "n".into(),
+            n,
+            m: 16.min(n),
+            peak_acc: peak,
+            final_acc: tr.recorder.last_eval_accuracy("test").unwrap_or(0.0),
+            sim_time_total: t,
+            sim_time_per_iter: t / iters.max(1) as f64,
+        });
+        n_curve.push(((n as f64).log2(), peak as f64));
+    }
+    // m sweep at fixed n = 64
+    for m in [2usize, 4, 8, 16, 32, 64] {
+        let tr = run_one(artifacts, &base_ckpt, 64, m, iters, out_dir, "m_sweep")?;
+        let peak = peak_accuracy(&tr.recorder.evals);
+        let t = tr.clock.now();
+        rows.push(SweepRow {
+            sweep: "m".into(),
+            n: 64,
+            m,
+            peak_acc: peak,
+            final_acc: tr.recorder.last_eval_accuracy("test").unwrap_or(0.0),
+            sim_time_total: t,
+            sim_time_per_iter: t / iters.max(1) as f64,
+        });
+        m_curve.push(((m as f64).log2(), peak as f64));
+    }
+    write_csv_rows(Path::new(&format!("{out_dir}/fig4.csv")), &rows)?;
+    println!("Fig.4 left: peak acc vs log2(n) at m=16");
+    println!("{}", ascii_plot(&[("peak", &n_curve)], 56, 10));
+    println!("Fig.4 right: peak acc vs log2(m) at n=64");
+    println!("{}", ascii_plot(&[("peak", &m_curve)], 56, 10));
+    Ok(())
+}
+
+fn run_one(
+    artifacts: &Path,
+    base_ckpt: &str,
+    n: usize,
+    m: usize,
+    iters: usize,
+    out_dir: &str,
+    sweep: &str,
+) -> Result<crate::coordinator::scheduler::Trainer> {
+    let cfg = CfgBuilder {
+        name: format!("fig4_{sweep}_n{n}_m{m}"),
+        profile: "lora".into(),
+        task: "arith".into(),
+        iterations: iters,
+        eval_every: 5,
+        eval_problems: 48,
+        out_dir: out_dir.into(),
+        base_checkpoint: Some(base_ckpt.into()),
+        kind: if m < n { "pods".into() } else { "ga".into() },
+        n,
+        m: if m < n { Some(m) } else { None },
+        lr: 3e-3,
+        ..Default::default()
+    }
+    .build()?;
+    run_config(artifacts, cfg)
+}

@@ -1,0 +1,83 @@
+//! Fig. 5 — down-sampling rule comparison on setting (a):
+//! max-variance vs max-reward vs random vs percentile.
+//! Expected shape: max-variance on top throughout; max-reward degrades
+//! (no negative feedback).
+
+use super::{peak_accuracy, run_config, CfgBuilder, Scale};
+use crate::metrics::{ascii_plot, write_csv_rows};
+use crate::metrics::CsvRow;
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Debug)]
+struct RuleRow {
+    rule: String,
+    peak_acc: f32,
+    final_acc: f32,
+    mean_sel_variance: f64,
+}
+
+impl CsvRow for RuleRow {
+    fn csv_header() -> &'static str {
+        "rule,peak_acc,final_acc,mean_sel_variance"
+    }
+    fn csv_row(&self) -> String {
+        format!("{},{},{},{}", self.rule, self.peak_acc, self.final_acc, self.mean_sel_variance)
+    }
+}
+
+pub fn run(artifacts: &Path, scale: Scale, out_dir: &str) -> Result<()> {
+    let base_ckpt =
+        super::ensure_base_checkpoint(artifacts, "arith", super::fig3::SFT_STEPS, out_dir)?;
+    let iters = scale.iters(48);
+    let mut rows = Vec::new();
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for rule in ["max_variance", "max_reward", "random", "percentile"] {
+        let cfg = CfgBuilder {
+            name: format!("fig5_{rule}"),
+            profile: "lora".into(),
+            task: "arith".into(),
+            iterations: iters,
+            eval_every: 4,
+            eval_problems: scale.eval_problems(48),
+            out_dir: out_dir.into(),
+            base_checkpoint: Some(base_ckpt.clone().into()),
+            kind: "pods".into(),
+            n: 64,
+            m: Some(16),
+            rule: rule.into(),
+            lr: 3e-3,
+            ..Default::default()
+        }
+        .build()?;
+        let tr = run_config(artifacts, cfg)?;
+        let curve: Vec<(f64, f64)> = tr
+            .recorder
+            .evals
+            .iter()
+            .filter(|e| e.split == "test")
+            .map(|e| (e.sim_time, e.accuracy as f64))
+            .collect();
+        let mean_var = tr.recorder.iters.iter().map(|i| i.sel_variance).sum::<f64>()
+            / tr.recorder.iters.len().max(1) as f64;
+        rows.push(RuleRow {
+            rule: rule.into(),
+            peak_acc: peak_accuracy(&tr.recorder.evals),
+            final_acc: tr.recorder.last_eval_accuracy("test").unwrap_or(0.0),
+            mean_sel_variance: mean_var,
+        });
+        series.push((rule.to_string(), curve));
+    }
+    write_csv_rows(Path::new(&format!("{out_dir}/fig5.csv")), &rows)?;
+    let plots: Vec<(&str, &[(f64, f64)])> =
+        series.iter().map(|(n, c)| (n.as_str(), c.as_slice())).collect();
+    println!("Fig.5: accuracy vs sim time by down-sampling rule");
+    println!("{}", ascii_plot(&plots, 64, 14));
+    for r in &rows {
+        println!(
+            "  {:<13} peak {:.3} final {:.3} mean selected-batch reward variance {:.3}",
+            r.rule, r.peak_acc, r.final_acc, r.mean_sel_variance
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Fig. 6 (§A.3) — advantage-normalization ablation: statistics computed on
+//! the down-sampled batch ("after", the paper's default — every update
+//! batch is zero-mean) vs on the full rollout group ("before").
+
+use super::{peak_accuracy, run_config, CfgBuilder, Scale};
+use crate::metrics::{ascii_plot, write_csv_rows};
+use crate::metrics::CsvRow;
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Debug)]
+struct NormRow {
+    adv_norm: String,
+    peak_acc: f32,
+    final_acc: f32,
+}
+
+impl CsvRow for NormRow {
+    fn csv_header() -> &'static str {
+        "adv_norm,peak_acc,final_acc"
+    }
+    fn csv_row(&self) -> String {
+        format!("{},{},{}", self.adv_norm, self.peak_acc, self.final_acc)
+    }
+}
+
+pub fn run(artifacts: &Path, scale: Scale, out_dir: &str) -> Result<()> {
+    let base_ckpt =
+        super::ensure_base_checkpoint(artifacts, "arith", super::fig3::SFT_STEPS, out_dir)?;
+    let iters = scale.iters(48);
+    let mut rows = Vec::new();
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for mode in ["after", "before"] {
+        let cfg = CfgBuilder {
+            name: format!("fig6_{mode}"),
+            profile: "lora".into(),
+            task: "arith".into(),
+            iterations: iters,
+            eval_every: 4,
+            eval_problems: scale.eval_problems(48),
+            out_dir: out_dir.into(),
+            base_checkpoint: Some(base_ckpt.clone().into()),
+            kind: "pods".into(),
+            n: 64,
+            m: Some(16),
+            adv_norm: mode.into(),
+            lr: 3e-3,
+            ..Default::default()
+        }
+        .build()?;
+        let tr = run_config(artifacts, cfg)?;
+        let curve: Vec<(f64, f64)> = tr
+            .recorder
+            .evals
+            .iter()
+            .filter(|e| e.split == "test")
+            .map(|e| (e.sim_time, e.accuracy as f64))
+            .collect();
+        rows.push(NormRow {
+            adv_norm: mode.into(),
+            peak_acc: peak_accuracy(&tr.recorder.evals),
+            final_acc: tr.recorder.last_eval_accuracy("test").unwrap_or(0.0),
+        });
+        series.push((mode.to_string(), curve));
+    }
+    write_csv_rows(Path::new(&format!("{out_dir}/fig6.csv")), &rows)?;
+    let plots: Vec<(&str, &[(f64, f64)])> =
+        series.iter().map(|(n, c)| (n.as_str(), c.as_slice())).collect();
+    println!("Fig.6: advantage normalization After vs Before");
+    println!("{}", ascii_plot(&plots, 64, 12));
+    Ok(())
+}

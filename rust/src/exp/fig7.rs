@@ -1,0 +1,79 @@
+//! Fig. 7 (§A.5) — generalization: models trained on `arith` (settings
+//! (a)/(b) analogues) evaluated on the contamination-resistant platinum
+//! split and on the cross-task `poly` test set at every eval point.
+//! Expected shape: PODS' advantage persists across all test tracks.
+
+use super::{CfgBuilder, Scale};
+use crate::coordinator::scheduler::Trainer;
+use crate::metrics::ascii_plot;
+use crate::tasks::{Split, TaskKind};
+use anyhow::Result;
+use std::path::Path;
+
+fn with_tracks(artifacts: &Path, cfg: crate::config::RunConfig) -> Result<Trainer> {
+    let mut tr = Trainer::new(artifacts, cfg)?;
+    tr.extra_evals = vec![
+        (TaskKind::Arith, Split::Platinum, "platinum".to_string()),
+        (TaskKind::Poly, Split::Test, "poly_test".to_string()),
+    ];
+    tr.run()?;
+    Ok(tr)
+}
+
+pub fn run(artifacts: &Path, scale: Scale, out_dir: &str) -> Result<()> {
+    let base_ckpt =
+        super::ensure_base_checkpoint(artifacts, "arith", super::fig3::SFT_STEPS, out_dir)?;
+    let iters = scale.iters(48);
+    let mk = |name: &str, kind: &str, n: usize, m: Option<usize>, seed: u64, kl: f64| {
+        CfgBuilder {
+            name: name.into(),
+            profile: "lora".into(),
+            task: "arith".into(),
+            seed,
+            iterations: iters,
+            eval_every: 4,
+            eval_problems: scale.eval_problems(48),
+            out_dir: out_dir.into(),
+            base_checkpoint: Some(base_ckpt.clone().into()),
+            kind: kind.into(),
+            n,
+            m,
+            kl_coef: kl,
+            lr: 3e-3,
+            ..Default::default()
+        }
+        .build()
+    };
+    // settings (a) and (b) analogues, PODS vs vanilla GRPO
+    let arms: Vec<(&str, crate::config::RunConfig)> = vec![
+        ("a_pods", mk("fig7_a_pods", "pods", 64, Some(16), 0, 0.0)?),
+        ("a_grpo", mk("fig7_a_grpo", "grpo", 16, None, 0, 0.0)?),
+        ("b_pods", mk("fig7_b_pods", "pods", 64, Some(16), 1, 0.04)?),
+        ("b_grpo", mk("fig7_b_grpo", "grpo", 16, None, 1, 0.04)?),
+    ];
+    let mut results = Vec::new();
+    for (label, cfg) in arms {
+        let tr = with_tracks(artifacts, cfg)?;
+        results.push((label, tr));
+    }
+    for track in ["test", "platinum", "poly_test"] {
+        let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+        for (label, tr) in &results {
+            let curve: Vec<(f64, f64)> = tr
+                .recorder
+                .evals
+                .iter()
+                .filter(|e| e.split == track)
+                .map(|e| (e.sim_time, e.accuracy as f64))
+                .collect();
+            if !curve.is_empty() {
+                series.push((label.to_string(), curve));
+            }
+        }
+        let plots: Vec<(&str, &[(f64, f64)])> =
+            series.iter().map(|(n, c)| (n.as_str(), c.as_slice())).collect();
+        println!("Fig.7 [{track}]: accuracy vs sim time");
+        println!("{}", ascii_plot(&plots, 64, 12));
+    }
+    Ok(())
+}

@@ -1,0 +1,246 @@
+//! Experiment harness: one driver per paper table/figure (DESIGN.md §4).
+//!
+//! Each driver assembles the right [`RunConfig`]s, runs the trainer(s), and
+//! writes `results/<figure>*.csv` plus an ASCII preview plot. Absolute
+//! numbers live on the hwsim clock; what must reproduce is the *shape*
+//! (who wins, by what factor, where crossovers fall).
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table3;
+
+use crate::config::{AlgoSection, RunConfig, RunSection, SftSection};
+use crate::hwsim::HwModel;
+use anyhow::Result;
+use std::path::Path;
+
+/// Scale knob for experiment drivers: `quick` shrinks iteration counts ~8x
+/// for smoke runs; `full` is the EXPERIMENTS.md configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn iters(self, full: usize) -> usize {
+        match self {
+            Scale::Quick => (full / 8).max(3),
+            Scale::Full => full,
+        }
+    }
+
+    pub fn eval_problems(self, full: usize) -> usize {
+        match self {
+            Scale::Quick => (full / 2).max(16),
+            Scale::Full => full,
+        }
+    }
+}
+
+/// Programmatic [`RunConfig`] builder used by every experiment driver.
+#[derive(Debug, Clone)]
+pub struct CfgBuilder {
+    pub name: String,
+    pub profile: String,
+    pub task: String,
+    pub seed: u64,
+    pub iterations: usize,
+    pub prompts_per_iter: usize,
+    pub eval_every: usize,
+    pub eval_problems: usize,
+    pub out_dir: String,
+    pub base_checkpoint: Option<String>,
+    pub save_checkpoint: Option<String>,
+    pub kind: String,
+    pub n: usize,
+    pub m: Option<usize>,
+    pub rule: String,
+    pub adv_norm: String,
+    pub kl_coef: f64,
+    pub lr: f64,
+    pub temperature: f64,
+    pub workers: usize,
+    /// Override the hwsim per-device memory ceiling (None = default 32).
+    pub mem_capacity: Option<usize>,
+    pub sft_steps: usize,
+    pub sft_lr: f64,
+    pub sft_pool: usize,
+}
+
+impl Default for CfgBuilder {
+    fn default() -> Self {
+        Self {
+            name: "run".into(),
+            profile: "base".into(),
+            task: "arith".into(),
+            seed: 0,
+            iterations: 40,
+            prompts_per_iter: 2,
+            eval_every: 5,
+            eval_problems: 48,
+            out_dir: "results".into(),
+            base_checkpoint: None,
+            save_checkpoint: None,
+            kind: "pods".into(),
+            n: 64,
+            m: Some(16),
+            rule: "max_variance".into(),
+            adv_norm: "after".into(),
+            kl_coef: 0.0,
+            lr: 2e-4,
+            temperature: 1.0,
+            workers: 1,
+            mem_capacity: None,
+            sft_steps: 0,
+            sft_lr: 2e-3,
+            sft_pool: 512,
+        }
+    }
+}
+
+impl CfgBuilder {
+    pub fn build(&self) -> Result<RunConfig> {
+        let cfg = RunConfig {
+            run: RunSection {
+                name: self.name.clone(),
+                profile: self.profile.clone(),
+                task: self.task.clone(),
+                seed: self.seed,
+                iterations: self.iterations,
+                prompts_per_iter: self.prompts_per_iter,
+                eval_every: self.eval_every,
+                eval_problems: self.eval_problems,
+                out_dir: self.out_dir.clone(),
+                base_checkpoint: self.base_checkpoint.clone(),
+                save_checkpoint: self.save_checkpoint.clone(),
+            },
+            algo: AlgoSection {
+                kind: self.kind.clone(),
+                n: self.n,
+                m: self.m,
+                rule: self.rule.clone(),
+                adv_norm: self.adv_norm.clone(),
+                kl_coef: self.kl_coef,
+                lr: self.lr,
+                temperature: self.temperature,
+            },
+            hwsim: HwModel {
+                workers: self.workers,
+                mem_capacity_rollouts: self.mem_capacity.unwrap_or(HwModel::default().mem_capacity_rollouts),
+                ..Default::default()
+            },
+            sft: if self.sft_steps > 0 {
+                Some(SftSection {
+                    steps: self.sft_steps,
+                    lr: self.sft_lr,
+                    log_every: 100,
+                    pool: self.sft_pool,
+                })
+            } else {
+                None
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Ensure a task-specific SFT'd base checkpoint exists (the stand-in for
+/// "start from an instruct model"); returns its path. Shared by every
+/// driver so the expensive SFT runs once per task.
+pub fn ensure_base_checkpoint(
+    artifacts: &Path,
+    task: &str,
+    sft_steps: usize,
+    out_dir: &str,
+) -> Result<String> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = format!("{out_dir}/base_{task}_{sft_steps}.ckpt");
+    if Path::new(&path).exists() {
+        return Ok(path);
+    }
+    eprintln!("[exp] building base checkpoint {path} ({sft_steps} SFT steps)");
+    let cfg = CfgBuilder {
+        name: format!("sft_{task}"),
+        task: task.into(),
+        iterations: 0, // SFT only: no RL before the checkpoint is saved
+        kind: "grpo".into(),
+        n: 16,
+        m: None,
+        sft_steps,
+        save_checkpoint: Some(path.clone()),
+        out_dir: out_dir.into(),
+        ..Default::default()
+    }
+    .build()?;
+    run_config(artifacts, cfg)?;
+    Ok(path)
+}
+
+/// Run one config end-to-end and return the trainer (for CSV access).
+pub fn run_config(
+    artifacts: &Path,
+    cfg: RunConfig,
+) -> Result<crate::coordinator::scheduler::Trainer> {
+    let mut tr = crate::coordinator::scheduler::Trainer::new(artifacts, cfg)?;
+    tr.run()?;
+    Ok(tr)
+}
+
+/// Time (sim seconds) at which a run first reaches `target` test accuracy;
+/// None if never. Used by Table 3 (speed-up ratio).
+pub fn time_to_accuracy(evals: &[crate::metrics::EvalRow], target: f32) -> Option<f64> {
+    evals
+        .iter()
+        .filter(|e| e.split == "test")
+        .find(|e| e.accuracy >= target)
+        .map(|e| e.sim_time)
+}
+
+/// Peak test accuracy of a run.
+pub fn peak_accuracy(evals: &[crate::metrics::EvalRow]) -> f32 {
+    evals
+        .iter()
+        .filter(|e| e.split == "test")
+        .map(|e| e.accuracy)
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EvalRow;
+
+    fn row(iter: usize, t: f64, acc: f32) -> EvalRow {
+        EvalRow {
+            iter,
+            sim_time: t,
+            real_time: 0.0,
+            split: "test".into(),
+            accuracy: acc,
+            format_rate: 0.0,
+            mean_reward: 0.0,
+            mean_len: 0.0,
+            problems: 1,
+        }
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let evals = vec![row(0, 0.0, 0.1), row(1, 10.0, 0.5), row(2, 20.0, 0.4), row(3, 30.0, 0.6)];
+        assert_eq!(time_to_accuracy(&evals, 0.45), Some(10.0));
+        assert_eq!(time_to_accuracy(&evals, 0.9), None);
+        assert_eq!(peak_accuracy(&evals), 0.6);
+    }
+
+    #[test]
+    fn scale_shrinks_quick() {
+        assert_eq!(Scale::Quick.iters(80), 10);
+        assert_eq!(Scale::Full.iters(80), 80);
+    }
+}

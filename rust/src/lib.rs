@@ -1,0 +1,41 @@
+//! # PODS — Policy Optimization with Down-Sampling
+//!
+//! A full-stack reproduction of *"Not All Rollouts are Useful: Down-Sampling
+//! Rollouts in LLM Reinforcement Learning"* (Xu, Savani, Fang, Kolter, 2025).
+//!
+//! Architecture (three layers, Python only at build time):
+//!
+//! * **L1 — Pallas kernels** (`python/compile/kernels/`): fused attention,
+//!   token log-prob, GRPO surrogate and AdamW kernels.
+//! * **L2 — JAX model** (`python/compile/model.py`): the policy transformer,
+//!   rollout sampling with a KV cache, GRPO loss fwd/bwd — AOT-lowered to
+//!   HLO text artifacts by `python/compile/aot.py`.
+//! * **L3 — this crate**: the Rust coordinator owning the training loop,
+//!   rollout scheduling, **down-sampling** (the paper's contribution),
+//!   gradient accumulation, the simulated multi-worker topology, rewards,
+//!   evaluation and the experiment harness. Executes the artifacts through
+//!   PJRT (`runtime`).
+//!
+//! Start at [`coordinator::scheduler::Trainer`] for the training step state
+//! machine, and [`coordinator::downsample`] for the paper's Algorithm 2.
+
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod exp;
+pub mod hwsim;
+pub mod metrics;
+pub mod reward;
+pub mod rollout;
+pub mod runtime;
+pub mod tasks;
+pub mod util;
+
+/// Default artifacts directory (relative to the crate root at dev time;
+/// override with `--artifacts` or `PODS_ARTIFACTS`).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PODS_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,220 @@
+//! `pods` — the leader binary: train / eval / experiment drivers.
+//!
+//! ```text
+//! pods train --config configs/setting_a.toml [--iterations N]
+//! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test
+//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|table3|all [--setting a] [--quick] [--probe]
+//! pods info  --profile base
+//! ```
+//!
+//! (CLI is hand-rolled over std::env::args — clap is unavailable in this
+//! offline environment; DESIGN.md §Substitutions.)
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use pods::config::RunConfig;
+use pods::coordinator::scheduler::Trainer;
+use pods::exp::{self, Scale};
+use pods::reward::RewardWeights;
+use pods::runtime::{params as ckpt, Engine};
+use pods::tasks::{Split, TaskKind};
+
+const USAGE: &str = "\
+pods — Policy Optimization with Down-Sampling (paper reproduction)
+
+USAGE:
+  pods train --config <path> [--iterations N] [--artifacts DIR]
+  pods eval  --ckpt <path> [--task arith|poly|mcq] [--split train|test|platinum]
+             [--profile NAME] [--problems N]
+  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|table3|all>
+             [--setting a-f] [--quick] [--out-dir DIR] [--probe]
+  pods info  [--profile NAME]
+";
+
+/// Tiny flag parser: positionals + `--key value` + boolean `--key`.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+const BOOL_FLAGS: &[&str] = &["quick", "probe", "help"];
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&name) {
+                    flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn split_of(s: &str) -> Result<Split> {
+    match s {
+        "train" => Ok(Split::Train),
+        "test" => Ok(Split::Test),
+        "platinum" => Ok(Split::Platinum),
+        other => Err(anyhow!("unknown split {other:?}")),
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..])?;
+    if args.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts: PathBuf = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(pods::default_artifacts_dir);
+
+    match cmd.as_str() {
+        "train" => {
+            let config = args.get("config").ok_or_else(|| anyhow!("train needs --config"))?;
+            let mut cfg = RunConfig::from_path(std::path::Path::new(config))?;
+            if let Some(it) = args.get("iterations") {
+                cfg.run.iterations = it.parse()?;
+            }
+            let mut tr = Trainer::new(&artifacts, cfg)?;
+            tr.run()?;
+        }
+        "eval" => {
+            let ckpt_path = args.get("ckpt").ok_or_else(|| anyhow!("eval needs --ckpt"))?;
+            let profile = args.get_or("profile", "base");
+            let engine = Engine::load(&artifacts, &profile)?;
+            let (_, store, base) = ckpt::load_store(std::path::Path::new(ckpt_path))?;
+            let task = TaskKind::parse(&args.get_or("task", "arith"))?;
+            let split = split_of(&args.get_or("split", "test"))?;
+            let problems: usize = args.get_or("problems", "64").parse()?;
+            let (params, lora): (&[f32], Option<&[f32]>) = match &base {
+                Some(b) => (b, Some(&store.params)),
+                None => (&store.params, None),
+            };
+            let stats = pods::eval::evaluate(
+                &engine,
+                params,
+                if engine.meta.is_lora() { lora } else { None },
+                task,
+                split,
+                problems,
+                &RewardWeights::default(),
+            )?;
+            println!(
+                "task {} split {:?}: accuracy {:.3} format {:.3} reward {:.3} len {:.1} over {} problems",
+                task.name(),
+                split,
+                stats.accuracy,
+                stats.format_rate,
+                stats.mean_reward,
+                stats.mean_len,
+                stats.problems
+            );
+        }
+        "exp" => {
+            let which = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("exp needs a figure name"))?
+                .clone();
+            let scale = if args.has("quick") { Scale::Quick } else { Scale::Full };
+            let out_dir = args.get_or("out-dir", "results");
+            let probe = args.has("probe");
+            match which.as_str() {
+                "fig1" => exp::fig1::run(&artifacts, &out_dir, probe)?,
+                "fig3" => match args.get("setting") {
+                    Some(s) => exp::fig3::run_setting(&artifacts, s, scale, &out_dir)?,
+                    None => exp::fig3::run_all(&artifacts, scale, &out_dir)?,
+                },
+                "fig4" => exp::fig4::run(&artifacts, scale, &out_dir)?,
+                "fig5" => exp::fig5::run(&artifacts, scale, &out_dir)?,
+                "fig6" => exp::fig6::run(&artifacts, scale, &out_dir)?,
+                "fig7" => exp::fig7::run(&artifacts, scale, &out_dir)?,
+                "table3" => exp::table3::run(&out_dir)?,
+                "all" => {
+                    exp::fig1::run(&artifacts, &out_dir, probe)?;
+                    exp::fig3::run_all(&artifacts, scale, &out_dir)?;
+                    exp::fig4::run(&artifacts, scale, &out_dir)?;
+                    exp::fig5::run(&artifacts, scale, &out_dir)?;
+                    exp::fig6::run(&artifacts, scale, &out_dir)?;
+                    exp::fig7::run(&artifacts, scale, &out_dir)?;
+                    exp::table3::run(&out_dir)?;
+                }
+                other => bail!("unknown experiment {other:?}"),
+            }
+        }
+        "info" => {
+            let profile = args.get_or("profile", "base");
+            let engine = Engine::load(&artifacts, &profile)?;
+            let m = &engine.meta;
+            println!("profile {}", m.profile);
+            println!(
+                "  model: d={} L={} H={} dff={} vocab={} T={} P={} G={}",
+                m.config.d_model,
+                m.config.layers,
+                m.config.heads,
+                m.config.d_ff,
+                m.config.vocab,
+                m.config.seq_len,
+                m.config.prompt_len,
+                m.gen_len
+            );
+            println!(
+                "  params: {} (trainable {}, lora rank {})",
+                m.param_count, m.trainable_count, m.config.lora_rank
+            );
+            println!(
+                "  batches: rollout {} update {}",
+                m.config.rollout_batch, m.config.update_batch
+            );
+            let mut names: Vec<&String> = m.programs.keys().collect();
+            names.sort();
+            for name in names {
+                let sig = &m.programs[name];
+                println!(
+                    "  program {name}: {} inputs -> {} outputs",
+                    sig.inputs.len(),
+                    sig.outputs.len()
+                );
+            }
+        }
+        other => {
+            eprint!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

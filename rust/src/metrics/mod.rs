@@ -1,0 +1,243 @@
+//! Training telemetry: per-iteration rows, CSV sinks, run manifests.
+//!
+//! Every experiment figure is regenerated from these CSVs (exp module), so
+//! the schema is stable and explicit: one row per training iteration plus
+//! interleaved evaluation snapshots. CSV serialization is a tiny trait
+//! (std-only environment; DESIGN.md §Substitutions).
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// A struct that knows how to print itself as one CSV line.
+pub trait CsvRow {
+    fn csv_header() -> &'static str;
+    fn csv_row(&self) -> String;
+}
+
+/// One training-iteration record.
+#[derive(Debug, Clone, Default)]
+pub struct IterRow {
+    pub iter: usize,
+    /// Simulated wall-clock (hwsim) — the x-axis of the paper's figures.
+    pub sim_time: f64,
+    /// Real CPU wall-clock consumed by this process so far.
+    pub real_time: f64,
+    pub sim_inference_time: f64,
+    pub sim_update_time: f64,
+    /// Mean total reward over all generated rollouts this iteration.
+    pub train_reward: f32,
+    /// Mean accuracy-component over all generated rollouts.
+    pub train_acc: f32,
+    /// Mean generated length (tokens incl. EOS) — Figs. 8–10.
+    pub completion_len: f32,
+    /// Reward variance of the *selected* update batch.
+    pub sel_variance: f64,
+    pub loss: f32,
+    pub clip_frac: f32,
+    pub kl: f32,
+    pub micro_steps: usize,
+    pub rollouts_generated: usize,
+    pub rollouts_trained: usize,
+}
+
+impl CsvRow for IterRow {
+    fn csv_header() -> &'static str {
+        "iter,sim_time,real_time,sim_inference_time,sim_update_time,train_reward,train_acc,\
+         completion_len,sel_variance,loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained"
+    }
+
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.iter,
+            self.sim_time,
+            self.real_time,
+            self.sim_inference_time,
+            self.sim_update_time,
+            self.train_reward,
+            self.train_acc,
+            self.completion_len,
+            self.sel_variance,
+            self.loss,
+            self.clip_frac,
+            self.kl,
+            self.micro_steps,
+            self.rollouts_generated,
+            self.rollouts_trained
+        )
+    }
+}
+
+/// One evaluation snapshot.
+#[derive(Debug, Clone)]
+pub struct EvalRow {
+    pub iter: usize,
+    pub sim_time: f64,
+    pub real_time: f64,
+    pub split: String,
+    pub accuracy: f32,
+    pub format_rate: f32,
+    pub mean_reward: f32,
+    pub mean_len: f32,
+    pub problems: usize,
+}
+
+impl CsvRow for EvalRow {
+    fn csv_header() -> &'static str {
+        "iter,sim_time,real_time,split,accuracy,format_rate,mean_reward,mean_len,problems"
+    }
+
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{}",
+            self.iter,
+            self.sim_time,
+            self.real_time,
+            self.split,
+            self.accuracy,
+            self.format_rate,
+            self.mean_reward,
+            self.mean_len,
+            self.problems
+        )
+    }
+}
+
+/// In-memory recorder; flushed to `<dir>/<run>_train.csv` and `_eval.csv`.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub iters: Vec<IterRow>,
+    pub evals: Vec<EvalRow>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_iter(&mut self, row: IterRow) {
+        self.iters.push(row);
+    }
+
+    pub fn push_eval(&mut self, row: EvalRow) {
+        self.evals.push(row);
+    }
+
+    pub fn last_eval_accuracy(&self, split: &str) -> Option<f32> {
+        self.evals.iter().rev().find(|e| e.split == split).map(|e| e.accuracy)
+    }
+
+    /// Write both CSVs. Returns the paths written.
+    pub fn write_csv(&self, dir: &Path, run_name: &str) -> Result<Vec<PathBuf>> {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let train = dir.join(format!("{run_name}_train.csv"));
+        write_csv_rows(&train, &self.iters)?;
+        let eval = dir.join(format!("{run_name}_eval.csv"));
+        write_csv_rows(&eval, &self.evals)?;
+        Ok(vec![train, eval])
+    }
+}
+
+/// Write a header + rows CSV file.
+pub fn write_csv_rows<T: CsvRow>(path: &Path, rows: &[T]) -> Result<()> {
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    writeln!(f, "{}", T::csv_header().replace(char::is_whitespace, ""))?;
+    for row in rows {
+        writeln!(f, "{}", row.csv_row())?;
+    }
+    Ok(())
+}
+
+/// ASCII line plot for terminal-friendly figure previews.
+pub fn ascii_plot(series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+    if all.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts.iter() {
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("y: [{y0:.3}, {y1:.3}]\n"));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.extend(std::iter::repeat('-').take(width));
+    out.push('\n');
+    out.push_str(&format!("x: [{x0:.1}, {x1:.1}]  "));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", marks[si % marks.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let mut rec = Recorder::new();
+        rec.push_iter(IterRow { iter: 0, sim_time: 1.0, train_acc: 0.5, ..Default::default() });
+        rec.push_iter(IterRow { iter: 1, sim_time: 2.0, train_acc: 0.6, ..Default::default() });
+        rec.push_eval(EvalRow {
+            iter: 1,
+            sim_time: 2.0,
+            real_time: 0.1,
+            split: "test".into(),
+            accuracy: 0.7,
+            format_rate: 0.9,
+            mean_reward: 2.0,
+            mean_len: 30.0,
+            problems: 64,
+        });
+        let paths = rec.write_csv(dir.path(), "t").unwrap();
+        let train = std::fs::read_to_string(&paths[0]).unwrap();
+        assert_eq!(train.lines().count(), 3); // header + 2 rows
+        let header = train.lines().next().unwrap();
+        assert!(header.contains("sim_time"));
+        assert_eq!(
+            header.split(',').count(),
+            train.lines().nth(1).unwrap().split(',').count(),
+            "header/row column mismatch"
+        );
+        let eval = std::fs::read_to_string(&paths[1]).unwrap();
+        assert!(eval.contains("test"));
+        assert_eq!(rec.last_eval_accuracy("test"), Some(0.7));
+        assert_eq!(rec.last_eval_accuracy("platinum"), None);
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let pts: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, (i * i) as f64)).collect();
+        let s = ascii_plot(&[("quad", &pts)], 40, 10);
+        assert!(s.contains('*'));
+        assert!(s.lines().count() > 10);
+    }
+}

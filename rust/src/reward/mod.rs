@@ -1,0 +1,269 @@
+//! Rule-based reward models (paper §A.1), operating on raw token streams.
+//!
+//! Three components, summed into a discrete but non-binary reward:
+//!
+//! * **accuracy** (1/0) — the `<answer>` content matches the ground truth:
+//!   numeric equivalence for arith/poly (so `07`, ` 7`, `7` all count),
+//!   exact letter for mcq.
+//! * **format** (1/0) — the response follows the exact XML pattern
+//!   `<think>\n…\n</think>\n<answer>\n…\n</answer>` (checked structurally on
+//!   the token stream, the analogue of the paper's regex).
+//! * **tag count** (0..1 partial credit, 0.25 per tag) — correct placement
+//!   of `<think>\n`, `\n</think>\n`, `\n<answer>\n` and `\n</answer>`.
+//!   (The paper's text lists three 0.25 tags; we score the natural four so
+//!   the component spans 0..1 as its heading states.)
+
+use crate::tasks::tokenizer as tok;
+use crate::tasks::{Problem, TaskKind};
+
+/// Per-component reward breakdown for one rollout.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RewardBreakdown {
+    pub accuracy: f32,
+    pub format: f32,
+    pub tag_count: f32,
+}
+
+impl RewardBreakdown {
+    pub fn total(&self, w: &RewardWeights) -> f32 {
+        w.accuracy * self.accuracy + w.format * self.format + w.tags * self.tag_count
+    }
+}
+
+/// Component weights (all 1.0 in the paper; configurable for ablations).
+#[derive(Debug, Clone, Copy)]
+pub struct RewardWeights {
+    pub accuracy: f32,
+    pub format: f32,
+    pub tags: f32,
+}
+
+impl Default for RewardWeights {
+    fn default() -> Self {
+        Self { accuracy: 1.0, format: 1.0, tags: 1.0 }
+    }
+}
+
+/// Extract the generated region of a rollout row: tokens after the prompt,
+/// up to (excluding) EOS / first PAD.
+pub fn generated_region(row: &[i32], prompt_len: usize) -> &[i32] {
+    let gen = &row[prompt_len.min(row.len())..];
+    let end = gen
+        .iter()
+        .position(|&t| t == tok::EOS || t == tok::PAD)
+        .unwrap_or(gen.len());
+    &gen[..end]
+}
+
+/// Find the content between the first `<answer>` and `</answer>` tokens.
+fn answer_span(gen: &[i32]) -> Option<&[i32]> {
+    let start = gen.iter().position(|&t| t == tok::ANSWER_OPEN)? + 1;
+    let len = gen[start..].iter().position(|&t| t == tok::ANSWER_CLOSE)?;
+    Some(&gen[start..start + len])
+}
+
+/// Numeric-equivalence comparison (trims whitespace/newlines, parses i64).
+fn numeric_eq(content: &str, truth: &str) -> bool {
+    let c = content.trim().trim_matches('\n').trim();
+    match (c.parse::<i64>(), truth.trim().parse::<i64>()) {
+        (Ok(a), Ok(b)) => a == b,
+        _ => c == truth.trim(),
+    }
+}
+
+/// Accuracy component.
+pub fn accuracy(gen: &[i32], task: TaskKind, problem: &Problem) -> f32 {
+    let Some(span) = answer_span(gen) else { return 0.0 };
+    let content = tok::decode(span);
+    let ok = if task.numeric_answer() {
+        numeric_eq(&content, &problem.answer)
+    } else {
+        content.trim().trim_matches('\n').trim() == problem.answer
+    };
+    if ok {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Format component: the exact structural pattern
+/// `<think> NL … NL </think> NL <answer> NL … NL </answer>` with no stray
+/// tag tokens, matching the paper's `<think>\n...\n</think>\n<answer>\n...\n</answer>`.
+pub fn format_compliant(gen: &[i32]) -> f32 {
+    // locate the four tags, in order, each appearing exactly once
+    let tags = [tok::THINK_OPEN, tok::THINK_CLOSE, tok::ANSWER_OPEN, tok::ANSWER_CLOSE];
+    let mut pos = [0usize; 4];
+    for (i, &t) in tags.iter().enumerate() {
+        let occurrences: Vec<usize> = gen
+            .iter()
+            .enumerate()
+            .filter_map(|(j, &g)| (g == t).then_some(j))
+            .collect();
+        if occurrences.len() != 1 {
+            return 0.0;
+        }
+        pos[i] = occurrences[0];
+    }
+    let [to, tc, ao, ac] = pos;
+    let ok = to == 0
+        && to < tc
+        && tc < ao
+        && ao < ac
+        && ac == gen.len() - 1
+        // <think>\n ... \n</think>
+        && gen.get(to + 1) == Some(&tok::NL)
+        && tc >= 1 && gen[tc - 1] == tok::NL
+        // </think>\n<answer>
+        && ao == tc + 2 && gen[tc + 1] == tok::NL
+        // <answer>\n ... \n</answer>
+        && gen.get(ao + 1) == Some(&tok::NL)
+        && ac >= 1 && gen[ac - 1] == tok::NL
+        // non-empty think and answer bodies
+        && tc > to + 2
+        && ac > ao + 2;
+    if ok {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Tag-count component: 0.25 per correctly placed tag pattern.
+pub fn tag_count(gen: &[i32]) -> f32 {
+    let count = |pat: &[i32]| gen.windows(pat.len()).filter(|w| *w == pat).count();
+    let mut score = 0.0;
+    // <think>\n at the start
+    if gen.len() >= 2 && gen[0] == tok::THINK_OPEN && gen[1] == tok::NL {
+        score += 0.25;
+    }
+    // \n</think>\n exactly once
+    if count(&[tok::NL, tok::THINK_CLOSE, tok::NL]) == 1 {
+        score += 0.25;
+    }
+    // \n<answer>\n exactly once
+    if count(&[tok::NL, tok::ANSWER_OPEN, tok::NL]) == 1 {
+        score += 0.25;
+    }
+    // \n</answer> at the very end
+    if gen.len() >= 2 && gen[gen.len() - 1] == tok::ANSWER_CLOSE && gen[gen.len() - 2] == tok::NL {
+        score += 0.25;
+    }
+    score
+}
+
+/// Score one rollout row (full sequence incl. prompt).
+pub fn score_rollout(row: &[i32], prompt_len: usize, task: TaskKind, problem: &Problem) -> RewardBreakdown {
+    let gen = generated_region(row, prompt_len);
+    RewardBreakdown {
+        accuracy: accuracy(gen, task, problem),
+        format: format_compliant(gen),
+        tag_count: tag_count(gen),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Split;
+
+    fn ideal(task: TaskKind, i: u64) -> (Problem, Vec<i32>) {
+        let p = task.generate(Split::Train, i);
+        let mut row = p.prompt.clone();
+        row.extend(&p.ideal_response);
+        (p, row)
+    }
+
+    #[test]
+    fn ideal_responses_score_max() {
+        for task in [TaskKind::Arith, TaskKind::Poly, TaskKind::Mcq] {
+            for i in 0..50 {
+                let (p, row) = ideal(task, i);
+                let r = score_rollout(&row, p.prompt.len(), task, &p);
+                assert_eq!(r.accuracy, 1.0, "{task:?} #{i}: {}", tok::decode(&row));
+                assert_eq!(r.format, 1.0, "{task:?} #{i}");
+                assert_eq!(r.tag_count, 1.0, "{task:?} #{i}");
+                assert_eq!(r.total(&RewardWeights::default()), 3.0);
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_answer_still_gets_format_credit() {
+        let p = TaskKind::Arith.generate(Split::Train, 1);
+        let resp = tok::encode("<think>\n1+1=2\n</think>\n<answer>\n999999\n</answer>").unwrap();
+        let mut row = p.prompt.clone();
+        row.extend(&resp);
+        row.push(tok::EOS);
+        let r = score_rollout(&row, p.prompt.len(), TaskKind::Arith, &p);
+        assert_eq!(r.accuracy, 0.0);
+        assert_eq!(r.format, 1.0);
+        assert_eq!(r.tag_count, 1.0);
+    }
+
+    #[test]
+    fn numeric_equivalence_tolerates_leading_zeros() {
+        let p = TaskKind::Arith.generate(Split::Train, 2);
+        let padded = format!("0{}", p.answer);
+        let resp = tok::encode(&format!("<think>\nx\n</think>\n<answer>\n{padded}\n</answer>")).unwrap();
+        let mut row = p.prompt.clone();
+        row.extend(&resp);
+        let r = score_rollout(&row, p.prompt.len(), TaskKind::Arith, &p);
+        assert_eq!(r.accuracy, 1.0);
+    }
+
+    #[test]
+    fn mcq_requires_exact_letter() {
+        let p = TaskKind::Mcq.generate(Split::Train, 3);
+        let wrong = if p.answer == "A" { "B" } else { "A" };
+        let resp = tok::encode(&format!("<think>\nx\n</think>\n<answer>\n{wrong}\n</answer>")).unwrap();
+        let mut row = p.prompt.clone();
+        row.extend(&resp);
+        let r = score_rollout(&row, p.prompt.len(), TaskKind::Mcq, &p);
+        assert_eq!(r.accuracy, 0.0);
+    }
+
+    #[test]
+    fn garbage_scores_zero() {
+        let p = TaskKind::Arith.generate(Split::Train, 4);
+        let mut row = p.prompt.clone();
+        row.extend(tok::encode("12345").unwrap());
+        let r = score_rollout(&row, p.prompt.len(), TaskKind::Arith, &p);
+        assert_eq!(r.total(&RewardWeights::default()), 0.0);
+    }
+
+    #[test]
+    fn partial_tags_get_partial_credit() {
+        let p = TaskKind::Arith.generate(Split::Train, 5);
+        // think block well-formed, answer block missing entirely
+        let resp = tok::encode("<think>\n1+1=2\n</think>\n7").unwrap();
+        let mut row = p.prompt.clone();
+        row.extend(&resp);
+        let r = score_rollout(&row, p.prompt.len(), TaskKind::Arith, &p);
+        assert_eq!(r.format, 0.0);
+        assert_eq!(r.tag_count, 0.5); // <think>\n and \n</think>\n
+        assert_eq!(r.accuracy, 0.0);
+    }
+
+    #[test]
+    fn duplicate_tags_break_format() {
+        let p = TaskKind::Arith.generate(Split::Train, 6);
+        let resp = tok::encode(&format!(
+            "<think>\nx\n</think>\n<answer>\n{}\n</answer>\n<answer>\n3\n</answer>",
+            p.answer
+        ))
+        .unwrap();
+        let mut row = p.prompt.clone();
+        row.extend(&resp);
+        let r = score_rollout(&row, p.prompt.len(), TaskKind::Arith, &p);
+        assert_eq!(r.format, 0.0);
+        // accuracy still reads the FIRST answer span
+        assert_eq!(r.accuracy, 1.0);
+    }
+
+    #[test]
+    fn generated_region_stops_at_eos() {
+        let row = vec![9, 9, tok::ANSWER_OPEN, tok::EOS, 9, 9];
+        assert_eq!(generated_region(&row, 2), &[tok::ANSWER_OPEN]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Inference-phase orchestration: batched rollout generation for a prompt.
+//!
+//! The rollout artifact samples a fixed batch of `B_r` rollouts per call;
+//! this module assembles prompt batches (left-padded, per the model's
+//! sequence layout), shards the `n` requested rollouts over as many calls
+//! as needed with decorrelated seeds, verifies each rollout with the
+//! rule-based reward model, and returns a [`PromptGroup`].
+//!
+//! Seeds are derived as `hash(run_seed, iter, prompt_id, call)` so runs are
+//! exactly replayable and calls are decorrelated across all axes.
+
+use crate::coordinator::group::{PromptGroup, RolloutRecord};
+use crate::reward::{score_rollout, RewardWeights};
+use crate::runtime::{Engine, TensorI};
+use crate::tasks::{tokenizer as tok, Problem, TaskKind};
+use anyhow::{anyhow, Result};
+
+/// Statistics of one group's inference phase (drives hwsim charging).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InferenceStats {
+    pub calls: usize,
+    pub total_gen_tokens: usize,
+    pub rollouts: usize,
+}
+
+/// Deterministic seed mixer (splitmix64 finalizer).
+pub fn mix_seed(run_seed: u64, iter: u64, prompt: u64, call: u64) -> u32 {
+    let mut z = run_seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(iter.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        .wrapping_add(prompt.wrapping_mul(0x94D0_49BB_1331_11EB))
+        .wrapping_add(call.wrapping_add(1));
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    z as u32
+}
+
+/// Left-pad `prompt` into a `[B_r, P]` batch of identical rows.
+/// Returns (prompts tensor, pad_len vector).
+pub fn prompt_batch(engine: &Engine, prompt: &[i32]) -> Result<(TensorI, Vec<i32>)> {
+    let br = engine.meta.config.rollout_batch;
+    let p = engine.meta.config.prompt_len;
+    if prompt.len() > p {
+        return Err(anyhow!("prompt of {} tokens exceeds prompt_len {p}", prompt.len()));
+    }
+    let pad = p - prompt.len();
+    let mut row = vec![tok::PAD; pad];
+    row.extend_from_slice(prompt);
+    let mut data = Vec::with_capacity(br * p);
+    for _ in 0..br {
+        data.extend_from_slice(&row);
+    }
+    Ok((TensorI::new(data, &[br, p])?, vec![pad as i32; br]))
+}
+
+/// Left-pad *distinct* prompts into a `[B_r, P]` batch (eval path).
+/// Unused rows are filled with the last prompt (results discarded).
+pub fn mixed_prompt_batch(engine: &Engine, prompts: &[&[i32]]) -> Result<(TensorI, Vec<i32>)> {
+    let br = engine.meta.config.rollout_batch;
+    let p = engine.meta.config.prompt_len;
+    if prompts.is_empty() || prompts.len() > br {
+        return Err(anyhow!("need 1..={br} prompts, got {}", prompts.len()));
+    }
+    let mut data = Vec::with_capacity(br * p);
+    let mut pads = Vec::with_capacity(br);
+    for i in 0..br {
+        let pr = prompts[i.min(prompts.len() - 1)];
+        if pr.len() > p {
+            return Err(anyhow!("prompt of {} tokens exceeds prompt_len {p}", pr.len()));
+        }
+        let pad = p - pr.len();
+        data.extend(std::iter::repeat(tok::PAD).take(pad));
+        data.extend_from_slice(pr);
+        pads.push(pad as i32);
+    }
+    Ok((TensorI::new(data, &[br, p])?, pads))
+}
+
+/// Parameters of one group-generation request.
+pub struct GenRequest<'a> {
+    pub params: &'a [f32],
+    pub lora: Option<&'a [f32]>,
+    /// Score rollouts under these reference parameters for the KL term
+    /// (full-parameter vector; lora taken from `ref_lora`).
+    pub ref_params: Option<&'a [f32]>,
+    pub ref_lora: Option<&'a [f32]>,
+    pub n: usize,
+    pub temperature: f32,
+    pub run_seed: u64,
+    pub iter: u64,
+    pub weights: RewardWeights,
+}
+
+/// Generate `n` rollouts for `problem`, score them, and assemble the group.
+pub fn generate_group(
+    engine: &Engine,
+    req: &GenRequest,
+    task: TaskKind,
+    problem: &Problem,
+) -> Result<(PromptGroup, InferenceStats)> {
+    let br = engine.meta.config.rollout_batch;
+    let t = engine.meta.config.seq_len;
+    let g = engine.meta.gen_len;
+    let p = engine.meta.config.prompt_len;
+    let (prompts, pads) = prompt_batch(engine, &problem.prompt)?;
+    let calls = req.n.div_ceil(br);
+    let mut rollouts = Vec::with_capacity(req.n);
+    let mut stats = InferenceStats::default();
+    for c in 0..calls {
+        let seed = mix_seed(req.run_seed, req.iter, problem.id, c as u64);
+        let out = engine.rollout(req.params, req.lora, &prompts, &pads, seed, req.temperature)?;
+        // reference log-probs for the KL term, if requested
+        let ref_lp_all = match req.ref_params {
+            Some(rp) => Some(engine.score(rp, req.ref_lora, &out.tokens, &pads)?),
+            None => None,
+        };
+        stats.calls += 1;
+        for b in 0..br {
+            if rollouts.len() >= req.n {
+                break;
+            }
+            let tokens: Vec<i32> = out.tokens.data[b * t..(b + 1) * t].to_vec();
+            let gen_mask: Vec<f32> = out.gen_mask.data[b * g..(b + 1) * g].to_vec();
+            let old_lp: Vec<f32> = out.logprobs.data[b * g..(b + 1) * g].to_vec();
+            let ref_lp: Vec<f32> = match &ref_lp_all {
+                Some(r) => r.data[b * g..(b + 1) * g].to_vec(),
+                None => vec![0.0; g],
+            };
+            let gen_len = out.gen_len[b];
+            stats.total_gen_tokens += gen_len as usize;
+            let reward = score_rollout(&tokens, p, task, problem);
+            let total_reward = reward.total(&req.weights);
+            rollouts.push(RolloutRecord {
+                tokens,
+                pad_len: pads[b],
+                gen_mask,
+                old_lp,
+                ref_lp,
+                gen_len,
+                reward,
+                total_reward,
+            });
+        }
+    }
+    stats.rollouts = rollouts.len();
+    Ok((PromptGroup { problem: problem.clone(), rollouts }, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_mixer_decorrelates() {
+        let a = mix_seed(0, 0, 0, 0);
+        let b = mix_seed(0, 0, 0, 1);
+        let c = mix_seed(0, 0, 1, 0);
+        let d = mix_seed(0, 1, 0, 0);
+        let e = mix_seed(1, 0, 0, 0);
+        let set: std::collections::HashSet<u32> = [a, b, c, d, e].into_iter().collect();
+        assert_eq!(set.len(), 5, "seed collisions: {:?}", [a, b, c, d, e]);
+    }
+
+    #[test]
+    fn seed_mixer_deterministic() {
+        assert_eq!(mix_seed(7, 3, 9, 2), mix_seed(7, 3, 9, 2));
+    }
+}

@@ -1,0 +1,241 @@
+//! Typed bindings for `artifacts/<profile>/meta.json`.
+//!
+//! The AOT pipeline (python/compile/aot.py) emits, next to the HLO text of
+//! every program, a JSON description of the profile: model dimensions, the
+//! flat-parameter offset table, the shared vocabulary, and the exact
+//! input/output signature of each program. The runtime validates every call
+//! against these signatures so shape drift between the Python and Rust
+//! halves fails loudly instead of corrupting buffers.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Static model/program dimensions of one artifact profile
+/// (mirror of python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ProfileConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub prompt_len: usize,
+    pub rollout_batch: usize,
+    pub update_batch: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub clip_eps: f64,
+    pub weight_decay: f64,
+    pub pad_multiple: usize,
+}
+
+impl ProfileConfig {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            vocab: j.get("vocab")?.usize()?,
+            d_model: j.get("d_model")?.usize()?,
+            layers: j.get("layers")?.usize()?,
+            heads: j.get("heads")?.usize()?,
+            d_ff: j.get("d_ff")?.usize()?,
+            seq_len: j.get("seq_len")?.usize()?,
+            prompt_len: j.get("prompt_len")?.usize()?,
+            rollout_batch: j.get("rollout_batch")?.usize()?,
+            update_batch: j.get("update_batch")?.usize()?,
+            lora_rank: j.get("lora_rank")?.usize()?,
+            lora_alpha: j.get("lora_alpha")?.f64()?,
+            clip_eps: j.get("clip_eps")?.f64()?,
+            weight_decay: j.get("weight_decay")?.f64()?,
+            pad_multiple: j.get("pad_multiple")?.usize()?,
+        })
+    }
+}
+
+/// One entry of the flat-parameter offset table.
+#[derive(Debug, Clone)]
+pub struct SpecEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub entries: Vec<SpecEntry>,
+    pub used: usize,
+    pub padded: usize,
+}
+
+impl ParamSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let entries = j
+            .get("entries")?
+            .arr()?
+            .iter()
+            .map(|e| {
+                Ok(SpecEntry {
+                    name: e.get("name")?.str()?.to_string(),
+                    shape: e.get("shape")?.arr()?.iter().map(|s| s.usize()).collect::<Result<_>>()?,
+                    offset: e.get("offset")?.usize()?,
+                    size: e.get("size")?.usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            entries,
+            used: j.get("used")?.usize()?,
+            padded: j.get("padded")?.usize()?,
+        })
+    }
+}
+
+/// The shared token vocabulary (single source of truth is
+/// python/compile/vocab.py; `tasks::tokenizer` cross-checks its Rust mirror
+/// against this at engine load).
+#[derive(Debug, Clone)]
+pub struct VocabMeta {
+    pub tokens: Vec<String>,
+    pub vocab_size: usize,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub nl: i32,
+    pub think_open: i32,
+    pub think_close: i32,
+    pub answer_open: i32,
+    pub answer_close: i32,
+    pub digit0: i32,
+}
+
+impl VocabMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        let tok = |k: &str| -> Result<i32> { Ok(j.get(k)?.i64()? as i32) };
+        Ok(Self {
+            tokens: j.get("tokens")?.arr()?.iter().map(|t| Ok(t.str()?.to_string())).collect::<Result<_>>()?,
+            vocab_size: j.get("vocab_size")?.usize()?,
+            pad: tok("pad")?,
+            bos: tok("bos")?,
+            eos: tok("eos")?,
+            nl: tok("nl")?,
+            think_open: tok("think_open")?,
+            think_close: tok("think_close")?,
+            answer_open: tok("answer_open")?,
+            answer_close: tok("answer_close")?,
+            digit0: tok("digit0")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name")?.str()?.to_string(),
+            dtype: j.get("dtype")?.str()?.to_string(),
+            shape: j.get("shape")?.arr()?.iter().map(|s| s.usize()).collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramSig {
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub profile: String,
+    pub config: ProfileConfig,
+    pub gen_len: usize,
+    pub param_count: usize,
+    pub lora_count: usize,
+    pub trainable_count: usize,
+    pub param_spec: ParamSpec,
+    pub lora_spec: Option<ParamSpec>,
+    pub vocab: VocabMeta,
+    pub programs: HashMap<String, ProgramSig>,
+}
+
+impl Meta {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let mut programs = HashMap::new();
+        for (name, sig) in j.get("programs")?.obj()? {
+            let inputs = sig.get("inputs")?.arr()?.iter().map(TensorSig::from_json).collect::<Result<_>>()?;
+            let outputs = sig.get("outputs")?.arr()?.iter().map(TensorSig::from_json).collect::<Result<_>>()?;
+            programs.insert(name.clone(), ProgramSig { inputs, outputs });
+        }
+        Ok(Self {
+            profile: j.get("profile")?.str()?.to_string(),
+            config: ProfileConfig::from_json(j.get("config")?)?,
+            gen_len: j.get("gen_len")?.usize()?,
+            param_count: j.get("param_count")?.usize()?,
+            lora_count: j.get("lora_count")?.usize()?,
+            trainable_count: j.get("trainable_count")?.usize()?,
+            param_spec: ParamSpec::from_json(j.get("param_spec")?)?,
+            lora_spec: match j.opt("lora_spec") {
+                Some(ls) => Some(ParamSpec::from_json(ls)?),
+                None => None,
+            },
+            vocab: VocabMeta::from_json(j.get("vocab")?)?,
+            programs,
+        })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSig> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("profile {} has no program {name:?}", self.profile))
+    }
+
+    /// Whether this profile trains LoRA adapters over a frozen base.
+    pub fn is_lora(&self) -> bool {
+        self.config.lora_rank > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_micro_meta_when_present() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/micro/meta.json");
+        if !p.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Meta::load(&p).unwrap();
+        assert_eq!(m.profile, "micro");
+        assert!(m.param_count % m.config.pad_multiple == 0);
+        assert_eq!(m.vocab.vocab_size, m.config.vocab);
+        let r = m.program("rollout").unwrap();
+        assert_eq!(r.outputs.len(), 4);
+        assert_eq!(r.outputs[0].shape, vec![m.config.rollout_batch, m.config.seq_len]);
+        // offset table is contiguous
+        let mut off = 0;
+        for e in &m.param_spec.entries {
+            assert_eq!(e.offset, off);
+            assert_eq!(e.size, e.shape.iter().product::<usize>());
+            off += e.size;
+        }
+        assert_eq!(off, m.param_spec.used);
+        assert!(m.param_spec.padded >= off);
+    }
+}

@@ -1,0 +1,310 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from the hot path.
+//!
+//! This wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (see python/compile/aot.py for why).
+//!
+//! One [`Engine`] owns the PJRT client plus the lazily-compiled executables
+//! of a single artifact profile, and exposes typed wrappers for each program
+//! (`rollout`, `grad`, `update`, ...). Python never runs at this layer —
+//! after `make artifacts` the binary is self-contained.
+
+pub mod meta;
+pub mod params;
+pub mod tensor;
+
+pub use meta::{Meta, ProfileConfig};
+pub use params::ParamStore;
+pub use tensor::{TensorF, TensorI};
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use tensor::{lit_f32, lit_f32_scalar, lit_i32, lit_i32_scalar, lit_u32_scalar, to_vec_f32, to_vec_i32};
+
+/// Wall-clock telemetry for one program's executions.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CallStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// The PJRT execution engine for one artifact profile.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: Meta,
+    exes: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<HashMap<String, CallStats>>,
+    pub quiet: bool,
+}
+
+/// Outputs of the `rollout` program (the inference phase).
+#[derive(Debug, Clone)]
+pub struct RolloutOut {
+    /// i32[B, T]: prompt + generation, PAD after EOS.
+    pub tokens: TensorI,
+    /// f32[B, G]: behaviour log-probs of sampled tokens (π_fixed).
+    pub logprobs: TensorF,
+    /// f32[B, G]: 1.0 through EOS, 0.0 after.
+    pub gen_mask: TensorF,
+    /// i32[B]: generated length incl. EOS.
+    pub gen_len: Vec<i32>,
+}
+
+/// Outputs of the `grad` program (one policy-update micro-batch).
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    pub grads: Vec<f32>,
+    pub loss: f32,
+    pub clip_frac: f32,
+    pub kl: f32,
+}
+
+/// Inputs to one `grad` micro-batch, shaped [B_u, ...].
+#[derive(Debug, Clone)]
+pub struct MicroBatch {
+    pub tokens: TensorI,
+    pub pad_len: Vec<i32>,
+    pub gen_mask: TensorF,
+    pub old_lp: TensorF,
+    pub adv: Vec<f32>,
+    pub ref_lp: TensorF,
+}
+
+impl Engine {
+    /// Load a profile from `<artifacts_dir>/<profile>/`. Compilation of the
+    /// individual programs is lazy (first call), so tools that only need one
+    /// program don't pay for all six.
+    pub fn load(artifacts_dir: &Path, profile: &str) -> Result<Self> {
+        let dir = artifacts_dir.join(profile);
+        let meta = Meta::load(&dir.join("meta.json"))
+            .with_context(|| format!("profile {profile:?}: did you run `make artifacts`?"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            dir,
+            meta,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+            quiet: false,
+        })
+    }
+
+    fn exe(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        if !self.quiet {
+            eprintln!(
+                "[runtime] compiled {}/{name} in {:.2}s",
+                self.meta.profile,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Force-compile a set of programs up front (e.g. before timing loops).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.exe(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with positional literals; returns the decomposed tuple.
+    pub fn call(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let sig = self.meta.program(name)?;
+        if sig.inputs.len() != inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.exe(name)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_secs += dt;
+        if outs.len() != sig.outputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} outputs, got {}",
+                sig.outputs.len(),
+                outs.len()
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Per-program wall-clock stats accumulated so far.
+    pub fn call_stats(&self) -> HashMap<String, CallStats> {
+        self.stats.borrow().clone()
+    }
+
+    // ---- typed program wrappers --------------------------------------
+
+    /// `init`: seed → fresh trainable vector (full params, or the LoRA
+    /// vector in LoRA profiles).
+    pub fn init(&self, seed: u32) -> Result<Vec<f32>> {
+        let outs = self.call("init", &[lit_u32_scalar(seed)?])?;
+        to_vec_f32(&outs[0])
+    }
+
+    /// `sft`: one fused supervised step. Returns loss; state is updated
+    /// in-place in `store`.
+    pub fn sft_step(
+        &self,
+        store: &mut ParamStore,
+        tokens: &TensorI,
+        pad_len: &[i32],
+        loss_mask: &TensorF,
+        lr: f32,
+    ) -> Result<f32> {
+        let outs = self.call(
+            "sft",
+            &[
+                lit_f32(&store.params, &[store.params.len()])?,
+                lit_f32(&store.m, &[store.m.len()])?,
+                lit_f32(&store.v, &[store.v.len()])?,
+                lit_i32_scalar(store.step),
+                lit_i32(&tokens.data, &tokens.dims)?,
+                lit_i32(pad_len, &[pad_len.len()])?,
+                lit_f32(&loss_mask.data, &loss_mask.dims)?,
+                lit_f32_scalar(lr),
+            ],
+        )?;
+        let p = to_vec_f32(&outs[0])?;
+        let m = to_vec_f32(&outs[1])?;
+        let v = to_vec_f32(&outs[2])?;
+        let loss = tensor::to_f32_scalar(&outs[3])?;
+        store.adopt(p, m, v);
+        Ok(loss)
+    }
+
+    /// `rollout`: the inference phase. `base` is the full-parameter vector;
+    /// `lora` must be Some(trainable) in LoRA profiles and None otherwise.
+    /// `temperature <= 0` decodes greedily (the eval path reuses this).
+    pub fn rollout(
+        &self,
+        base: &[f32],
+        lora: Option<&[f32]>,
+        prompts: &TensorI,
+        pad_len: &[i32],
+        seed: u32,
+        temperature: f32,
+    ) -> Result<RolloutOut> {
+        let mut inputs = vec![lit_f32(base, &[base.len()])?];
+        match (self.meta.is_lora(), lora) {
+            (true, Some(l)) => inputs.push(lit_f32(l, &[l.len()])?),
+            (false, None) => {}
+            (true, None) => return Err(anyhow!("LoRA profile requires a lora vector")),
+            (false, Some(_)) => return Err(anyhow!("non-LoRA profile got a lora vector")),
+        }
+        inputs.push(lit_i32(&prompts.data, &prompts.dims)?);
+        inputs.push(lit_i32(pad_len, &[pad_len.len()])?);
+        inputs.push(lit_u32_scalar(seed)?);
+        inputs.push(lit_f32_scalar(temperature));
+        let outs = self.call("rollout", &inputs)?;
+        let b = self.meta.config.rollout_batch;
+        let t = self.meta.config.seq_len;
+        let g = self.meta.gen_len;
+        Ok(RolloutOut {
+            tokens: TensorI::new(to_vec_i32(&outs[0])?, &[b, t])?,
+            logprobs: TensorF::new(to_vec_f32(&outs[1])?, &[b, g])?,
+            gen_mask: TensorF::new(to_vec_f32(&outs[2])?, &[b, g])?,
+            gen_len: to_vec_i32(&outs[3])?,
+        })
+    }
+
+    /// `grad`: one GRPO-PODS policy-update micro-batch.
+    /// `trainable` is what the optimizer updates; `base` the frozen full
+    /// vector in LoRA mode (None otherwise).
+    pub fn grad(
+        &self,
+        trainable: &[f32],
+        base: Option<&[f32]>,
+        mb: &MicroBatch,
+        kl_coef: f32,
+    ) -> Result<GradOut> {
+        let mut inputs = vec![lit_f32(trainable, &[trainable.len()])?];
+        match (self.meta.is_lora(), base) {
+            (true, Some(b)) => inputs.push(lit_f32(b, &[b.len()])?),
+            (false, None) => {}
+            (true, None) => return Err(anyhow!("LoRA profile requires a base vector")),
+            (false, Some(_)) => return Err(anyhow!("non-LoRA profile got a base vector")),
+        }
+        inputs.push(lit_i32(&mb.tokens.data, &mb.tokens.dims)?);
+        inputs.push(lit_i32(&mb.pad_len, &[mb.pad_len.len()])?);
+        inputs.push(lit_f32(&mb.gen_mask.data, &mb.gen_mask.dims)?);
+        inputs.push(lit_f32(&mb.old_lp.data, &mb.old_lp.dims)?);
+        inputs.push(lit_f32(&mb.adv, &[mb.adv.len()])?);
+        inputs.push(lit_f32(&mb.ref_lp.data, &mb.ref_lp.dims)?);
+        inputs.push(lit_f32_scalar(kl_coef));
+        let outs = self.call("grad", &inputs)?;
+        Ok(GradOut {
+            grads: to_vec_f32(&outs[0])?,
+            loss: tensor::to_f32_scalar(&outs[1])?,
+            clip_frac: tensor::to_f32_scalar(&outs[2])?,
+            kl: tensor::to_f32_scalar(&outs[3])?,
+        })
+    }
+
+    /// `update`: apply accumulated grads with fused AdamW; bumps `store.step`.
+    pub fn update(&self, store: &mut ParamStore, grads: &[f32], lr: f32) -> Result<()> {
+        let outs = self.call(
+            "update",
+            &[
+                lit_f32(&store.params, &[store.params.len()])?,
+                lit_f32(&store.m, &[store.m.len()])?,
+                lit_f32(&store.v, &[store.v.len()])?,
+                lit_i32_scalar(store.step),
+                lit_f32(grads, &[grads.len()])?,
+                lit_f32_scalar(lr),
+            ],
+        )?;
+        let p = to_vec_f32(&outs[0])?;
+        let m = to_vec_f32(&outs[1])?;
+        let v = to_vec_f32(&outs[2])?;
+        store.adopt(p, m, v);
+        Ok(())
+    }
+
+    /// `score`: teacher-forced log-probs of the generated region under the
+    /// given parameters (the KL reference policy path).
+    pub fn score(
+        &self,
+        base: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &TensorI,
+        pad_len: &[i32],
+    ) -> Result<TensorF> {
+        let mut inputs = vec![lit_f32(base, &[base.len()])?];
+        if self.meta.is_lora() {
+            let l = lora.ok_or_else(|| anyhow!("LoRA profile requires a lora vector"))?;
+            inputs.push(lit_f32(l, &[l.len()])?);
+        }
+        inputs.push(lit_i32(&tokens.data, &tokens.dims)?);
+        inputs.push(lit_i32(pad_len, &[pad_len.len()])?);
+        let outs = self.call("score", &inputs)?;
+        let b = self.meta.config.rollout_batch;
+        let g = self.meta.gen_len;
+        TensorF::new(to_vec_f32(&outs[0])?, &[b, g])
+    }
+}

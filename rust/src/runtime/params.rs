@@ -1,0 +1,244 @@
+//! Flat parameter / optimizer-state store + checkpoint format.
+//!
+//! The L2 packer lays every model parameter into one flat f32 vector (padded
+//! to the AdamW kernel's block multiple), so the training state the Rust
+//! side owns is exactly: `params`, Adam `m`, Adam `v`, and the step counter.
+//! In LoRA profiles there is additionally a frozen `base` vector.
+//!
+//! Checkpoint format (`.pods.ckpt`): a one-line JSON header (versioned,
+//! records profile + lengths + step) followed by the raw little-endian f32
+//! payloads in order. Written atomically via a temp file + rename.
+
+use crate::util::json::{obj, Json};
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Trainable state: the vector the optimizer updates + Adam moments.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl ParamStore {
+    pub fn new(params: Vec<f32>) -> Self {
+        let n = params.len();
+        Self { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    /// Adopt the three vectors returned by the `update`/`sft` programs.
+    pub fn adopt(&mut self, params: Vec<f32>, m: Vec<f32>, v: Vec<f32>) {
+        debug_assert_eq!(params.len(), self.params.len());
+        self.params = params;
+        self.m = m;
+        self.v = v;
+        self.step += 1;
+    }
+}
+
+#[derive(Debug)]
+struct CkptHeader {
+    magic: String,
+    version: u32,
+    profile: String,
+    step: i32,
+    sections: Vec<(String, usize)>, // (name, f32 length) in payload order
+}
+
+impl CkptHeader {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("magic", Json::Str(self.magic.clone())),
+            ("version", Json::Num(self.version as f64)),
+            ("profile", Json::Str(self.profile.clone())),
+            ("step", Json::Num(self.step as f64)),
+            (
+                "sections",
+                Json::Arr(
+                    self.sections
+                        .iter()
+                        .map(|(n, l)| {
+                            Json::Arr(vec![Json::Str(n.clone()), Json::Num(*l as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let sections = j
+            .get("sections")?
+            .arr()?
+            .iter()
+            .map(|e| {
+                let pair = e.arr()?;
+                Ok((pair[0].str()?.to_string(), pair[1].usize()?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            magic: j.get("magic")?.str()?.to_string(),
+            version: j.get("version")?.usize()? as u32,
+            profile: j.get("profile")?.str()?.to_string(),
+            step: j.get("step")?.i64()? as i32,
+            sections,
+        })
+    }
+}
+
+const MAGIC: &str = "pods-ckpt";
+
+/// Write `sections` (name -> f32 slice) with a JSON header line.
+pub fn save_checkpoint(
+    path: &Path,
+    profile: &str,
+    step: i32,
+    sections: &[(&str, &[f32])],
+) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        let mut w = BufWriter::new(f);
+        let header = CkptHeader {
+            magic: MAGIC.into(),
+            version: 1,
+            profile: profile.into(),
+            step,
+            sections: sections.iter().map(|(n, d)| (n.to_string(), d.len())).collect(),
+        };
+        w.write_all(header.to_json().dump().as_bytes())?;
+        w.write_all(b"\n")?;
+        for (_, data) in sections {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?}"))?;
+    Ok(())
+}
+
+/// Load a checkpoint; returns (profile, step, sections).
+pub fn load_checkpoint(path: &Path) -> Result<(String, i32, Vec<(String, Vec<f32>)>)> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut header_line = Vec::new();
+    loop {
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b)?;
+        if b[0] == b'\n' {
+            break;
+        }
+        header_line.push(b[0]);
+        if header_line.len() > 1 << 20 {
+            return Err(anyhow!("checkpoint header too large"));
+        }
+    }
+    let header = CkptHeader::from_json(&Json::parse(std::str::from_utf8(&header_line)?)?)?;
+    if header.magic != MAGIC {
+        return Err(anyhow!("not a pods checkpoint: {path:?}"));
+    }
+    let mut out = Vec::new();
+    for (name, len) in header.sections {
+        let mut bytes = vec![0u8; len * 4];
+        r.read_exact(&mut bytes)
+            .with_context(|| format!("reading section {name} ({len} f32)"))?;
+        let mut data = vec![0f32; len];
+        for (i, c) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        out.push((name, data));
+    }
+    Ok((header.profile, header.step, out))
+}
+
+/// Convenience: save a ParamStore (plus optional frozen base).
+pub fn save_store(path: &Path, profile: &str, store: &ParamStore, base: Option<&[f32]>) -> Result<()> {
+    let mut sections: Vec<(&str, &[f32])> = vec![
+        ("params", &store.params),
+        ("m", &store.m),
+        ("v", &store.v),
+    ];
+    if let Some(b) = base {
+        sections.push(("base", b));
+    }
+    save_checkpoint(path, profile, store.step, &sections)
+}
+
+/// Convenience: load a ParamStore (plus optional base) saved by `save_store`.
+pub fn load_store(path: &Path) -> Result<(String, ParamStore, Option<Vec<f32>>)> {
+    let (profile, step, sections) = load_checkpoint(path)?;
+    let mut params = None;
+    let mut m = None;
+    let mut v = None;
+    let mut base = None;
+    for (name, data) in sections {
+        match name.as_str() {
+            "params" => params = Some(data),
+            "m" => m = Some(data),
+            "v" => v = Some(data),
+            "base" => base = Some(data),
+            other => return Err(anyhow!("unknown checkpoint section {other:?}")),
+        }
+    }
+    let params = params.ok_or_else(|| anyhow!("checkpoint missing params"))?;
+    let n = params.len();
+    let store = ParamStore {
+        params,
+        m: m.unwrap_or_else(|| vec![0.0; n]),
+        v: v.unwrap_or_else(|| vec![0.0; n]),
+        step,
+    };
+    Ok((profile, store, base))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("t.pods.ckpt");
+        let mut store = ParamStore::new(vec![1.0, -2.5, 3.25, 0.0]);
+        store.m[1] = 9.0;
+        store.step = 42;
+        save_store(&path, "micro", &store, Some(&[7.0, 8.0])).unwrap();
+        let (profile, loaded, base) = load_store(&path).unwrap();
+        assert_eq!(profile, "micro");
+        assert_eq!(loaded.step, 42);
+        assert_eq!(loaded.params, store.params);
+        assert_eq!(loaded.m, store.m);
+        assert_eq!(loaded.v, store.v);
+        assert_eq!(base.unwrap(), vec![7.0, 8.0]);
+    }
+
+    #[test]
+    fn adopt_bumps_step() {
+        let mut s = ParamStore::new(vec![0.0; 3]);
+        s.adopt(vec![1.0; 3], vec![2.0; 3], vec![3.0; 3]);
+        assert_eq!(s.step, 1);
+        assert_eq!(s.params, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("bad.ckpt");
+        std::fs::write(&path, b"{\"magic\":\"nope\",\"version\":1,\"profile\":\"x\",\"step\":0,\"sections\":[]}\n").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Minimal host-side tensors + literal marshalling helpers.
+//!
+//! The runtime deals in three dtypes only (f32 / i32 / u32 scalars), so a
+//! tiny enum-free design keeps the hot path allocation-predictable: every
+//! tensor is a flat `Vec` plus dims, and conversion to/from `xla::Literal`
+//! is a single memcpy.
+
+use anyhow::{anyhow, Result};
+
+/// Host tensor of f32 values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+/// Host tensor of i32 values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI {
+    pub data: Vec<i32>,
+    pub dims: Vec<usize>,
+}
+
+impl TensorF {
+    pub fn new(data: Vec<f32>, dims: &[usize]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("TensorF: {} elements for dims {dims:?}", data.len()));
+        }
+        Ok(Self { data, dims: dims.to_vec() })
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Self { data: vec![0.0; n], dims: dims.to_vec() }
+    }
+
+    /// Row-major 2-D accessor (debug/test convenience).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+}
+
+impl TensorI {
+    pub fn new(data: Vec<i32>, dims: &[usize]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("TensorI: {} elements for dims {dims:?}", data.len()));
+        }
+        Ok(Self { data, dims: dims.to_vec() })
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Self { data: vec![0; n], dims: dims.to_vec() }
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> i32 {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+}
+
+// ---- literal construction -------------------------------------------------
+
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+pub fn lit_f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_u32_scalar(v: u32) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U32,
+        &[],
+        &v.to_le_bytes(),
+    )?)
+}
+
+// ---- literal extraction ---------------------------------------------------
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(TensorF::new(vec![1.0, 2.0], &[3]).is_err());
+        let t = TensorF::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(t.at2(1, 0), 3.0);
+        let ti = TensorI::zeros(&[4, 5]);
+        assert_eq!(ti.data.len(), 20);
+        assert_eq!(ti.at2(3, 4), 0);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.5f32, -2.0, 0.25, 7.0, 0.0, 3.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+        let ints = vec![1i32, -5, 7];
+        let lit = lit_i32(&ints, &[3]).unwrap();
+        assert_eq!(to_vec_i32(&lit).unwrap(), ints);
+        let s = lit_u32_scalar(0xdeadbeef).unwrap();
+        assert_eq!(s.to_vec::<u32>().unwrap(), vec![0xdeadbeef]);
+    }
+}

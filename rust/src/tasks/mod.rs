@@ -1,0 +1,339 @@
+//! Synthetic verifiable-reasoning task families.
+//!
+//! These stand in for the paper's benchmarks (DESIGN.md §2): `arith` ≈
+//! GSM8K (multi-step integer arithmetic), `poly` ≈ MATH (modular polynomial
+//! evaluation), `mcq` ≈ SciKnowEval-Chemistry (4-choice A–D questions).
+//!
+//! Every problem is generated deterministically from `(task, split, index)`
+//! via ChaCha8, giving reproducible train/test/platinum splits with no data
+//! files. Each task also emits an *ideal completion* (gold chain-of-thought
+//! in the paper's `<think>/<answer>` format) used by the SFT warm-up phase
+//! that stands in for "start from an instruct-tuned model".
+
+pub mod tokenizer;
+
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+use tokenizer as tok;
+
+/// Data split; disjoint by construction (index spaces are offset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+    /// Contamination-resistant re-generation with a distinct seed space —
+    /// the stand-in for GSM8K-Platinum in the Fig. 7 generalization study.
+    Platinum,
+}
+
+impl Split {
+    fn offset(self) -> u64 {
+        match self {
+            Split::Train => 0,
+            Split::Test => 1_000_000_007,
+            Split::Platinum => 2_000_000_011,
+        }
+    }
+}
+
+/// One generated problem.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    /// Prompt token ids (unpadded; the batcher left-pads to prompt_len).
+    pub prompt: Vec<i32>,
+    /// Canonical answer string (as it should appear inside `<answer>`).
+    pub answer: String,
+    /// Gold response (think + answer, paper format) for SFT.
+    pub ideal_response: Vec<i32>,
+    pub id: u64,
+}
+
+/// Task family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Arith,
+    Poly,
+    Mcq,
+}
+
+impl TaskKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "arith" => Ok(Self::Arith),
+            "poly" => Ok(Self::Poly),
+            "mcq" => Ok(Self::Mcq),
+            other => Err(anyhow::anyhow!("unknown task {other:?} (arith|poly|mcq)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Arith => "arith",
+            Self::Poly => "poly",
+            Self::Mcq => "mcq",
+        }
+    }
+
+    /// Whether answers are compared numerically (vs. literal letter match).
+    pub fn numeric_answer(self) -> bool {
+        !matches!(self, Self::Mcq)
+    }
+
+    fn rng(self, split: Split, index: u64) -> Rng {
+        let tag = match self {
+            Self::Arith => 0x11u64,
+            Self::Poly => 0x22,
+            Self::Mcq => 0x33,
+        };
+        Rng::seed_from_u64(
+            tag.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ split.offset().wrapping_add(index).wrapping_mul(0x2545_F491_4F6C_DD1D),
+        )
+    }
+
+    /// Deterministically generate problem `index` of `split`.
+    pub fn generate(self, split: Split, index: u64) -> Problem {
+        let mut rng = self.rng(split, index);
+        match self {
+            Self::Arith => gen_arith(&mut rng, index),
+            Self::Poly => gen_poly(&mut rng, index),
+            Self::Mcq => gen_mcq(&mut rng, index),
+        }
+    }
+
+    /// Generate a batch of problems `[start, start+count)`.
+    pub fn batch(self, split: Split, start: u64, count: usize) -> Vec<Problem> {
+        (0..count as u64).map(|i| self.generate(split, start + i)).collect()
+    }
+}
+
+fn response_tokens(think: &str, answer: &str) -> Vec<i32> {
+    let text = format!("<think>\n{think}\n</think>\n<answer>\n{answer}\n</answer>");
+    let mut ids = tok::encode(&text).expect("ideal response must be encodable");
+    ids.push(tok::EOS);
+    ids
+}
+
+/// GSM8K-sim: left-to-right chain of 1–2 (+,-,*) operations over small
+/// ints, intermediate values kept in [0, 99] — scaled to what a ~1M-param
+/// char-level policy can learn while staying genuinely multi-step.
+/// Prompt: `Q:17+25-3=?`
+fn gen_arith(rng: &mut Rng, id: u64) -> Problem {
+    // difficulty mixture: 45% single-op/single-digit, 35% single-op with a
+    // two-digit operand, 20% two-op chains — keeps post-SFT accuracy in the
+    // mid-range where GRPO's group variance is maximal
+    let roll = rng.f64();
+    let (n_ops, lo, hi) = if roll < 0.45 {
+        (1, 2, 9)
+    } else if roll < 0.80 {
+        (1, 2, 29)
+    } else {
+        (2, 2, 29)
+    };
+    let n_ops = n_ops as i64;
+    let mut acc: i64 = rng.gen_range_inclusive(lo, hi);
+    let mut expr = acc.to_string();
+    let mut steps: Vec<String> = Vec::new();
+    for _ in 0..n_ops {
+        // pick an op that keeps the running value in [0, 99]
+        let can_add = acc < 99;
+        let can_mul = acc >= 2 && acc <= 33;
+        let op = loop {
+            let o = rng.gen_range_inclusive(0, 2);
+            match o {
+                0 if can_add => break 0,
+                1 => break 1,
+                2 if can_mul => break 2,
+                _ => continue,
+            }
+        };
+        let cap = hi.min(99 - acc).max(1);
+        let (sym, operand, next) = match op {
+            0 => {
+                let b = rng.gen_range_inclusive(1, cap);
+                ('+', b, acc + b)
+            }
+            1 => {
+                let b = rng.gen_range_inclusive(0, acc.min(hi));
+                ('-', b, acc - b)
+            }
+            _ => {
+                let mhi = (99 / acc).min(5).max(2);
+                let b = rng.gen_range_inclusive(2, mhi);
+                ('*', b, acc * b)
+            }
+        };
+        steps.push(format!("{acc}{sym}{operand}={next}"));
+        expr.push(sym);
+        expr.push_str(&operand.to_string());
+        acc = next;
+    }
+    let answer = acc.to_string();
+    let think = steps.join(";");
+    let prompt = tok::encode(&format!("Q:{expr}=?")).unwrap();
+    Problem { prompt, answer: answer.clone(), ideal_response: response_tokens(&think, &answer), id }
+}
+
+/// MATH-sim: evaluate `a*x^2+b*x+c mod p` at a given x.
+/// Prompt: `Q:3x^2+2x+1;x=5;%7=?`
+fn gen_poly(rng: &mut Rng, id: u64) -> Problem {
+    let p: i64 = [5, 7][rng.below(2)];
+    let a = rng.gen_range_inclusive(1, 3);
+    let b = rng.gen_range_inclusive(0, 5);
+    let c = rng.gen_range_inclusive(0, 5);
+    let x = rng.gen_range_inclusive(2, 5);
+    let x2 = x * x;
+    let t1 = a * x2;
+    let t2 = b * x;
+    let total = t1 + t2 + c;
+    let answer = (total % p).to_string();
+    let think = format!("{x}^2={x2};{a}*{x2}={t1};{b}*{x}={t2};{t1}+{t2}+{c}={total};{total}%{p}={answer}");
+    let prompt = tok::encode(&format!("Q:{a}x^2+{b}x+{c};x={x};%{p}=?")).unwrap();
+    Problem { prompt, answer: answer.clone(), ideal_response: response_tokens(&think, &answer), id }
+}
+
+/// SciKnowEval-sim: a single-step product fact with 4 candidate answers;
+/// answer is the letter. Prompt: `Q:8*7=?A:54B:56C:58D:52`
+fn gen_mcq(rng: &mut Rng, id: u64) -> Problem {
+    let a = rng.gen_range_inclusive(2, 9);
+    let b = rng.gen_range_inclusive(2, 9);
+    let correct = a * b;
+    let mut options = vec![correct];
+    while options.len() < 4 {
+        let delta = rng.gen_range_inclusive(1, 6) * if rng.gen_bool(0.5) { 1 } else { -1 };
+        let cand = correct + delta;
+        if cand > 0 && !options.contains(&cand) {
+            options.push(cand);
+        }
+    }
+    // shuffle deterministic
+    for i in (1..4).rev() {
+        let j = rng.below(i + 1);
+        options.swap(i, j);
+    }
+    let pos = options.iter().position(|&o| o == correct).unwrap();
+    let letter = ["A", "B", "C", "D"][pos];
+    let prompt_txt = format!(
+        "Q:{a}*{b}=?A:{}B:{}C:{}D:{}",
+        options[0], options[1], options[2], options[3]
+    );
+    let think = format!("{a}*{b}={correct};{letter}");
+    let prompt = tok::encode(&prompt_txt).unwrap();
+    Problem {
+        prompt,
+        answer: letter.to_string(),
+        ideal_response: response_tokens(&think, letter),
+        id,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        for kind in [TaskKind::Arith, TaskKind::Poly, TaskKind::Mcq] {
+            let a = kind.generate(Split::Train, 5);
+            let b = kind.generate(Split::Train, 5);
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.answer, b.answer);
+            let c = kind.generate(Split::Train, 6);
+            assert!(a.prompt != c.prompt || a.answer != c.answer);
+        }
+    }
+
+    #[test]
+    fn splits_are_disjointly_seeded() {
+        let a = TaskKind::Arith.generate(Split::Train, 0);
+        let b = TaskKind::Arith.generate(Split::Test, 0);
+        let c = TaskKind::Arith.generate(Split::Platinum, 0);
+        assert!(a.prompt != b.prompt || a.answer != b.answer);
+        assert!(b.prompt != c.prompt || b.answer != c.answer);
+    }
+
+    #[test]
+    fn arith_answers_verify() {
+        for i in 0..200 {
+            let p = TaskKind::Arith.generate(Split::Train, i);
+            let text = tokenizer::decode(&p.prompt);
+            assert!(text.starts_with("Q:") && text.ends_with("=?"), "{text}");
+            let expr = &text[2..text.len() - 2];
+            // left-to-right evaluation must reproduce the recorded answer
+            let mut acc: i64 = 0;
+            let mut cur = String::new();
+            let mut pending = '+';
+            for ch in expr.chars().chain(std::iter::once('\0')) {
+                if ch.is_ascii_digit() {
+                    cur.push(ch);
+                } else {
+                    let v: i64 = cur.parse().unwrap();
+                    acc = match pending {
+                        '+' => acc + v,
+                        '-' => acc - v,
+                        '*' => acc * v,
+                        _ => unreachable!(),
+                    };
+                    cur.clear();
+                    pending = ch;
+                }
+            }
+            assert_eq!(acc.to_string(), p.answer, "expr {expr}");
+            assert!((0..=99).contains(&acc), "final value out of range in {expr}");
+        }
+    }
+
+    #[test]
+    fn poly_answers_verify() {
+        for i in 0..200 {
+            let p = TaskKind::Poly.generate(Split::Test, i);
+            let text = tokenizer::decode(&p.prompt);
+            // Q:{a}x^2+{b}x+{c};x={x};%{p}=?
+            let body = text.strip_prefix("Q:").unwrap().strip_suffix("=?").unwrap();
+            let parts: Vec<&str> = body.split(';').collect();
+            let poly = parts[0];
+            let x: i64 = parts[1].strip_prefix("x=").unwrap().parse().unwrap();
+            let pm: i64 = parts[2].strip_prefix('%').unwrap().parse().unwrap();
+            let a: i64 = poly.split('x').next().unwrap().parse().unwrap();
+            let rest = poly.split_once("x^2+").unwrap().1;
+            let b: i64 = rest.split('x').next().unwrap().parse().unwrap();
+            let c: i64 = rest.split_once("x+").unwrap().1.parse().unwrap();
+            let want = (a * x * x + b * x + c) % pm;
+            assert_eq!(want.to_string(), p.answer);
+        }
+    }
+
+    #[test]
+    fn mcq_answers_are_letters_and_unique_options() {
+        for i in 0..200 {
+            let p = TaskKind::Mcq.generate(Split::Train, i);
+            assert!(["A", "B", "C", "D"].contains(&p.answer.as_str()));
+        }
+    }
+
+    #[test]
+    fn prompts_fit_base_profile() {
+        for kind in [TaskKind::Arith, TaskKind::Poly, TaskKind::Mcq] {
+            for i in 0..500 {
+                let p = kind.generate(Split::Train, i);
+                assert!(p.prompt.len() <= 32, "{:?} prompt {} tokens", kind, p.prompt.len());
+                assert!(
+                    p.ideal_response.len() <= 64,
+                    "{:?} ideal response {} tokens: {}",
+                    kind,
+                    p.ideal_response.len(),
+                    tokenizer::decode(&p.ideal_response),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ideal_response_is_format_compliant() {
+        let p = TaskKind::Arith.generate(Split::Train, 3);
+        let text = tokenizer::decode(&p.ideal_response);
+        assert!(text.starts_with("<think>\n"));
+        assert!(text.contains("\n</think>\n<answer>\n"));
+        assert!(text.ends_with("\n</answer><eos>"));
+    }
+}

@@ -1,0 +1,171 @@
+//! The shared character/tag tokenizer — Rust mirror of python/compile/vocab.py.
+//!
+//! The table below MUST stay in lockstep with the Python side; the runtime
+//! cross-checks it against `meta.json` at engine load (`verify_against_meta`)
+//! and an integration test asserts equality, so drift fails loudly.
+
+use anyhow::{anyhow, Result};
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const NL: i32 = 3;
+pub const THINK_OPEN: i32 = 4;
+pub const THINK_CLOSE: i32 = 5;
+pub const ANSWER_OPEN: i32 = 6;
+pub const ANSWER_CLOSE: i32 = 7;
+pub const DIGIT0: i32 = 8;
+pub const VOCAB_SIZE: usize = 48;
+
+/// Display strings, indexed by token id.
+pub const TOKENS: &[&str] = &[
+    "<pad>", "<bos>", "<eos>", "\n", "<think>", "</think>", "<answer>", "</answer>",
+    "0", "1", "2", "3", "4", "5", "6", "7", "8", "9",
+    "+", "-", "*", "=", "(", ")", "?", ":", " ",
+    "A", "B", "C", "D", "x", "^", "%", ",", ";", ".", "/", "|", "Q",
+];
+
+/// Encode plain text (multi-char tags spelled out) into token ids.
+/// Digits/operators are one char each; `<think>` etc. must appear verbatim.
+pub fn encode(text: &str) -> Result<Vec<i32>> {
+    let mut out = Vec::with_capacity(text.len());
+    let mut rest = text;
+    'outer: while !rest.is_empty() {
+        // longest-first match over multi-char tags
+        for (id, tok) in TOKENS.iter().enumerate() {
+            if tok.len() > 1 && rest.starts_with(tok) {
+                out.push(id as i32);
+                rest = &rest[tok.len()..];
+                continue 'outer;
+            }
+        }
+        let c = &rest[..rest.chars().next().map(|c| c.len_utf8()).unwrap_or(1)];
+        let id = TOKENS
+            .iter()
+            .position(|t| *t == c)
+            .ok_or_else(|| anyhow!("unencodable char {c:?} in {text:?}"))?;
+        out.push(id as i32);
+        rest = &rest[c.len()..];
+    }
+    Ok(out)
+}
+
+/// Decode ids to a display string; PAD renders as nothing, unknown ids as `�`.
+pub fn decode(ids: &[i32]) -> String {
+    let mut s = String::new();
+    for &id in ids {
+        if id == PAD {
+            continue;
+        }
+        match TOKENS.get(id as usize) {
+            Some(t) => s.push_str(t),
+            None => s.push('�'),
+        }
+    }
+    s
+}
+
+/// Encode a decimal unsigned integer.
+pub fn encode_uint(mut v: u64) -> Vec<i32> {
+    if v == 0 {
+        return vec![DIGIT0];
+    }
+    let mut digits = Vec::new();
+    while v > 0 {
+        digits.push(DIGIT0 + (v % 10) as i32);
+        v /= 10;
+    }
+    digits.reverse();
+    digits
+}
+
+/// Encode a decimal signed integer ('-' prefix for negatives).
+pub fn encode_int(v: i64) -> Vec<i32> {
+    if v < 0 {
+        let mut out = vec![encode("-").unwrap()[0]];
+        out.extend(encode_uint(v.unsigned_abs()));
+        out
+    } else {
+        encode_uint(v as u64)
+    }
+}
+
+/// Cross-check this mirror against the AOT-emitted vocabulary table.
+pub fn verify_against_meta(vm: &crate::runtime::meta::VocabMeta) -> Result<()> {
+    if vm.vocab_size != VOCAB_SIZE {
+        return Err(anyhow!("vocab size mismatch: rust {VOCAB_SIZE}, meta {}", vm.vocab_size));
+    }
+    if vm.tokens.len() != TOKENS.len() {
+        return Err(anyhow!("token table length mismatch: rust {}, meta {}", TOKENS.len(), vm.tokens.len()));
+    }
+    for (i, (r, p)) in TOKENS.iter().zip(vm.tokens.iter()).enumerate() {
+        if r != p {
+            return Err(anyhow!("token {i} mismatch: rust {r:?}, meta {p:?}"));
+        }
+    }
+    for (name, rust, meta) in [
+        ("pad", PAD, vm.pad),
+        ("bos", BOS, vm.bos),
+        ("eos", EOS, vm.eos),
+        ("nl", NL, vm.nl),
+        ("think_open", THINK_OPEN, vm.think_open),
+        ("think_close", THINK_CLOSE, vm.think_close),
+        ("answer_open", ANSWER_OPEN, vm.answer_open),
+        ("answer_close", ANSWER_CLOSE, vm.answer_close),
+        ("digit0", DIGIT0, vm.digit0),
+    ] {
+        if rust != meta {
+            return Err(anyhow!("special token {name} mismatch: rust {rust}, meta {meta}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain() {
+        let ids = encode("Q:17+25=?").unwrap();
+        assert_eq!(decode(&ids), "Q:17+25=?");
+    }
+
+    #[test]
+    fn roundtrip_tags() {
+        let text = "<think>\n1+2=3\n</think>\n<answer>\n3\n</answer>";
+        let ids = encode(text).unwrap();
+        assert_eq!(ids[0], THINK_OPEN);
+        assert_eq!(ids[1], NL);
+        assert_eq!(decode(&ids), text);
+    }
+
+    #[test]
+    fn encode_numbers() {
+        assert_eq!(decode(&encode_uint(0)), "0");
+        assert_eq!(decode(&encode_uint(907)), "907");
+        assert_eq!(decode(&encode_int(-42)), "-42");
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(encode("hello").is_err()); // lowercase letters not in vocab
+    }
+
+    #[test]
+    fn pad_decodes_to_nothing() {
+        assert_eq!(decode(&[PAD, DIGIT0 + 5, PAD]), "5");
+    }
+
+    #[test]
+    fn table_is_consistent() {
+        assert!(TOKENS.len() <= VOCAB_SIZE);
+        assert_eq!(TOKENS[DIGIT0 as usize], "0");
+        assert_eq!(TOKENS[(DIGIT0 + 9) as usize], "9");
+        // no duplicate tokens
+        let mut set = std::collections::HashSet::new();
+        for t in TOKENS {
+            assert!(set.insert(t), "duplicate token {t:?}");
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Tiny bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the `rust/benches/*.rs` mains, which use [`bench`] to
+//! time closures: warmup, then timed iterations with mean / median / p95 /
+//! min reporting, plus a machine-readable line (`BENCH\t<name>\t<ns>`) that
+//! the perf log in EXPERIMENTS.md is built from.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+/// Time `f` (called once per iteration). Chooses iteration count to hit a
+/// target budget unless `iters` is given.
+pub fn bench<F: FnMut()>(name: &str, iters: Option<usize>, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_secs_f64();
+    let iters = iters.unwrap_or_else(|| {
+        let budget = 1.0; // seconds
+        ((budget / first.max(1e-9)) as usize).clamp(5, 10_000)
+    });
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e9);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let median = samples[samples.len() / 2];
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    let min = samples[0];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        median_ns: median,
+        p95_ns: p95,
+        min_ns: min,
+    };
+    println!(
+        "{:<44} {:>7} iters  mean {:>12}  median {:>12}  p95 {:>12}  min {:>12}",
+        r.name,
+        r.iters,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.median_ns),
+        fmt_ns(r.p95_ns),
+        fmt_ns(r.min_ns)
+    );
+    println!("BENCH\t{}\t{:.1}", r.name, r.median_ns);
+    r
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// `black_box` shim: prevents the optimizer from deleting the benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,69 @@
+//! Std-only infrastructure substrates (this environment is offline; only
+//! `xla` + `anyhow` resolve). DESIGN.md §Substitutions documents each:
+//!
+//! * [`json`] — JSON parser/writer (serde_json stand-in) for meta.json,
+//!   checkpoints, manifests.
+//! * [`toml`] — TOML-subset parser (toml crate stand-in) for run configs.
+//! * [`rng`] — xoshiro256++ deterministic RNG (rand/rand_chacha stand-in).
+//! * [`prop`] — seeded property-testing harness (proptest stand-in).
+//! * [`bench`] — timing harness (criterion stand-in) for `cargo bench`.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod toml;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique scratch directory under the system temp dir (tempfile stand-in).
+/// Removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new() -> std::io::Result<Self> {
+        let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "pods-{}-{}-{n}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.subsec_nanos())
+                .unwrap_or(0)
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_creates_and_cleans() {
+        let p;
+        {
+            let d = TempDir::new().unwrap();
+            p = d.path().to_path_buf();
+            assert!(p.exists());
+            std::fs::write(p.join("x"), b"hi").unwrap();
+        }
+        assert!(!p.exists());
+    }
+}

@@ -1,0 +1,31 @@
+//! Mini property-testing harness (std-only proptest replacement).
+//!
+//! [`for_cases`] runs a closure over `n` deterministically-seeded cases;
+//! on failure it reports the case seed so the exact input reproduces with
+//! `case_rng(seed)`. Shrinking is out of scope — generators here produce
+//! small instances by construction.
+
+use super::rng::Rng;
+
+/// Deterministic RNG for one case.
+pub fn case_rng(case_seed: u64) -> Rng {
+    Rng::seed_from_u64(case_seed ^ 0x505E_C1A1)
+}
+
+/// Run `f` over `n` cases; panics with the failing case seed.
+pub fn for_cases(n: u64, f: impl Fn(&mut Rng)) {
+    for case in 0..n {
+        let seed = 0x5EED_0000u64 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random f32 vector with values in [lo, hi).
+pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| lo + (hi - lo) * rng.f64() as f32).collect()
+}

@@ -1,0 +1,266 @@
+//! Minimal TOML-subset parser for run configs (std-only, offline env).
+//!
+//! Supported grammar — exactly what `configs/*.toml` uses:
+//! `[section]` headers (one level), `key = value` with string / integer /
+//! float / bool values, `#` comments, blank lines. Produces a two-level
+//! `section -> key -> value` map the config module consumes.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+pub type Section = BTreeMap<String, TomlValue>;
+pub type TomlDoc = BTreeMap<String, Section>;
+
+/// Parse a TOML-subset document. Keys before the first section header go
+/// into the "" section.
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut current = String::new();
+    doc.insert(current.clone(), Section::new());
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: malformed section header {raw:?}", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') {
+                bail!("line {}: bad section name {name:?}", lineno + 1);
+            }
+            current = name.to_string();
+            doc.entry(current.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value, got {raw:?}", lineno + 1))?;
+        let key = k.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(v.trim())
+            .with_context(|| format!("line {}: bad value for {key:?}", lineno + 1))?;
+        doc.get_mut(&current).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').context("unterminated string")?;
+        // basic escapes
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => bail!("bad escape \\{other:?}"),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if !clean.contains(['.', 'e', 'E']) {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("unparseable value {s:?} (strings need quotes)")
+}
+
+/// Typed getters over one section with defaulting.
+pub struct SectionView<'a> {
+    pub name: &'a str,
+    pub sec: Option<&'a Section>,
+}
+
+impl<'a> SectionView<'a> {
+    pub fn new(doc: &'a TomlDoc, name: &'a str) -> Self {
+        Self { name, sec: doc.get(name) }
+    }
+
+    pub fn required(&self, key: &str) -> Result<&'a TomlValue> {
+        self.sec
+            .and_then(|s| s.get(key))
+            .with_context(|| format!("config missing [{}] {key}", self.name))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&'a TomlValue> {
+        self.sec.and_then(|s| s.get(key))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.as_usize(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.as_u64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.as_f64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn opt_str(&self, key: &str) -> Result<Option<String>> {
+        match self.get(key) {
+            Some(v) => Ok(Some(v.as_str()?.to_string())),
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+        # top comment
+        [run]
+        name = "setting_a"   # inline comment
+        seed = 3
+        lr = 5e-6
+        big = 1_000_000
+        neg = -2.5
+        flag = true
+        path = "a#b"
+
+        [hwsim]
+        workers = 8
+    "#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(DOC).unwrap();
+        let run = SectionView::new(&doc, "run");
+        assert_eq!(run.required("name").unwrap().as_str().unwrap(), "setting_a");
+        assert_eq!(run.required("seed").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(run.required("lr").unwrap().as_f64().unwrap(), 5e-6);
+        assert_eq!(run.required("big").unwrap().as_usize().unwrap(), 1_000_000);
+        assert_eq!(run.required("neg").unwrap().as_f64().unwrap(), -2.5);
+        assert!(run.required("flag").unwrap().as_bool().unwrap());
+        assert_eq!(run.required("path").unwrap().as_str().unwrap(), "a#b");
+        let hw = SectionView::new(&doc, "hwsim");
+        assert_eq!(hw.usize_or("workers", 1).unwrap(), 8);
+        assert_eq!(hw.usize_or("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_section_uses_defaults() {
+        let doc = parse("[run]\nname = \"x\"\n").unwrap();
+        let sft = SectionView::new(&doc, "sft");
+        assert!(sft.sec.is_none());
+        assert_eq!(sft.usize_or("steps", 0).unwrap(), 0);
+        assert!(sft.required("steps").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[run\nname = 1").is_err());
+        assert!(parse("[run]\nname measure").is_err());
+        assert!(parse("[run]\nname = unquoted").is_err());
+        assert!(parse("[run]\nname = \"open").is_err());
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = parse("[a]\ni = 3\nf = 3.0\n").unwrap();
+        let a = SectionView::new(&doc, "a");
+        assert!(matches!(a.required("i").unwrap(), TomlValue::Int(3)));
+        assert!(matches!(a.required("f").unwrap(), TomlValue::Float(_)));
+        // ints coerce to f64 where a float is wanted
+        assert_eq!(a.required("i").unwrap().as_f64().unwrap(), 3.0);
+    }
+}

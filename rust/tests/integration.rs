@@ -1,0 +1,162 @@
+//! End-to-end integration: the full Trainer loop (SFT warm-up -> rollouts
+//! -> verify -> down-sample -> micro-batched grad -> AdamW) over the real
+//! base-profile artifacts, plus cross-module contracts that don't need the
+//! engine. Skipped when artifacts are absent.
+
+use pods::config::RunConfig;
+use pods::coordinator::scheduler::Trainer;
+use pods::exp::CfgBuilder;
+use pods::tasks::{Split, TaskKind};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pods::default_artifacts_dir();
+    if dir.join("base/meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn tiny_cfg(name: &str, kind: &str, n: usize, m: Option<usize>) -> RunConfig {
+    CfgBuilder {
+        name: name.into(),
+        profile: "base".into(),
+        task: "arith".into(),
+        iterations: 2,
+        prompts_per_iter: 1,
+        eval_every: 2,
+        eval_problems: 16,
+        kind: kind.into(),
+        n,
+        m,
+        lr: 1e-4,
+        sft_steps: 4,
+        sft_lr: 2e-3,
+        out_dir: std::env::temp_dir()
+            .join("pods_itest")
+            .to_string_lossy()
+            .into_owned(),
+        ..Default::default()
+    }
+    .build()
+    .unwrap()
+}
+
+#[test]
+fn full_pods_training_loop() {
+    let Some(dir) = artifacts() else { return };
+    let mut tr = Trainer::new(&dir, tiny_cfg("itest_pods", "pods", 16, Some(4))).unwrap();
+    tr.engine.quiet = true;
+    tr.run().unwrap();
+    assert_eq!(tr.recorder.iters.len(), 2);
+    let it = &tr.recorder.iters[0];
+    assert_eq!(it.rollouts_generated, 16);
+    assert_eq!(it.rollouts_trained, 4);
+    assert_eq!(it.micro_steps, 1); // 4 rollouts fit one B_u=8 micro-batch
+    assert!(it.sim_inference_time > 0.0 && it.sim_update_time > 0.0);
+    assert!(tr.clock.now() > 0.0);
+    // two optimizer steps happened (params moved twice)
+    assert_eq!(tr.store.step, 2 + 4); // 4 SFT + 2 RL
+    // eval rows recorded: initial + final
+    assert!(tr.recorder.evals.len() >= 2);
+    // CSVs written
+    let out = std::path::Path::new(&tr.cfg.run.out_dir);
+    assert!(out.join("itest_pods_train.csv").exists());
+    assert!(out.join("itest_pods_eval.csv").exists());
+}
+
+#[test]
+fn ga_schedule_runs_more_micro_steps_than_pods() {
+    let Some(dir) = artifacts() else { return };
+    let mut ga = Trainer::new(&dir, tiny_cfg("itest_ga", "ga", 16, None)).unwrap();
+    ga.engine.quiet = true;
+    ga.sft_warmup().unwrap();
+    let ga_stats = ga.train_iteration(0).unwrap();
+    assert_eq!(ga_stats.rollouts_trained, 16);
+    assert_eq!(ga_stats.micro_steps, 2); // 16 rollouts / B_u=8
+
+    let mut pods_tr = Trainer::new(&dir, tiny_cfg("itest_pods2", "pods", 16, Some(8))).unwrap();
+    pods_tr.engine.quiet = true;
+    pods_tr.sft_warmup().unwrap();
+    let pods_stats = pods_tr.train_iteration(0).unwrap();
+    assert_eq!(pods_stats.rollouts_trained, 8);
+    assert_eq!(pods_stats.micro_steps, 1);
+    assert!(pods_stats.sim_update < ga_stats.sim_update);
+    // same inference phase (both generated n = 16)
+    assert_eq!(pods_stats.rollouts_generated, ga_stats.rollouts_generated);
+}
+
+#[test]
+fn trainer_is_replayable() {
+    let Some(dir) = artifacts() else { return };
+    let run = |seed: u64| {
+        let mut cfg = tiny_cfg("itest_replay", "pods", 8, Some(4));
+        cfg.run.seed = seed;
+        let mut tr = Trainer::new(&dir, cfg).unwrap();
+        tr.engine.quiet = true;
+        tr.run().unwrap();
+        (
+            tr.recorder.iters.iter().map(|i| i.train_reward).collect::<Vec<_>>(),
+            tr.store.params.iter().take(64).copied().collect::<Vec<f32>>(),
+        )
+    };
+    let (r1, p1) = run(7);
+    let (r2, p2) = run(7);
+    assert_eq!(r1, r2, "same seed must replay identically");
+    assert_eq!(p1, p2);
+    let (r3, _) = run(8);
+    assert!(r1 != r3 || true, "different seed (may coincide, no assert)");
+}
+
+#[test]
+fn config_files_parse_and_validate() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let configs = std::fs::read_dir(root.join("configs")).unwrap();
+    let mut count = 0;
+    for entry in configs {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) == Some("toml") {
+            let cfg = RunConfig::from_path(&path)
+                .unwrap_or_else(|e| panic!("config {path:?} invalid: {e}"));
+            assert!(!cfg.run.name.is_empty());
+            count += 1;
+        }
+    }
+    assert!(count >= 7, "expected the Table-1 setting configs, found {count}");
+}
+
+#[test]
+fn tokenizer_matches_all_profile_metas() {
+    let dir = pods::default_artifacts_dir();
+    let mut checked = 0;
+    for profile in ["micro", "base", "lora", "big"] {
+        let meta_path = dir.join(profile).join("meta.json");
+        if !meta_path.exists() {
+            continue;
+        }
+        let meta = pods::runtime::Meta::load(&meta_path).unwrap();
+        pods::tasks::tokenizer::verify_against_meta(&meta.vocab).unwrap();
+        checked += 1;
+    }
+    assert!(checked > 0 || !dir.exists(), "no profiles found to check");
+}
+
+#[test]
+fn eval_problems_are_disjoint_from_training_cursor() {
+    // splits must not leak: the first 10k train ids and test ids share no
+    // (prompt, answer) pair on the arith generator
+    let train: std::collections::HashSet<Vec<i32>> = (0..2000)
+        .map(|i| TaskKind::Arith.generate(Split::Train, i).prompt)
+        .collect();
+    let mut overlap = 0;
+    for i in 0..200 {
+        let t = TaskKind::Arith.generate(Split::Test, i);
+        if train.contains(&t.prompt) {
+            overlap += 1;
+        }
+    }
+    // the task space is small; some prompt collisions are expected, but the
+    // split seeding must not make test a subset of train
+    assert!(overlap < 150, "test split nearly contained in train ({overlap}/200)");
+}

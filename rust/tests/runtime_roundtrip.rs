@@ -1,0 +1,249 @@
+//! Runtime round-trip tests: load the `micro` artifacts, execute every
+//! program through PJRT, and check the cross-layer contracts (shapes,
+//! determinism, masking, gradient/optimizer semantics) from the Rust side.
+//!
+//! Requires `make artifacts` (micro profile). Tests are skipped with a
+//! notice when artifacts are absent so `cargo test` stays green pre-build.
+
+use pods::reward::RewardWeights;
+use pods::rollout::{generate_group, prompt_batch, GenRequest};
+use pods::runtime::{Engine, MicroBatch, ParamStore, TensorF, TensorI};
+use pods::tasks::tokenizer as tok;
+use pods::tasks::{Split, TaskKind};
+
+fn engine() -> Option<Engine> {
+    let dir = pods::default_artifacts_dir();
+    if !dir.join("micro/meta.json").exists() {
+        eprintln!("skipping: micro artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let mut e = Engine::load(&dir, "micro").expect("engine load");
+    e.quiet = true;
+    Some(e)
+}
+
+#[test]
+fn init_is_deterministic_and_padded() {
+    let Some(e) = engine() else { return };
+    let p1 = e.init(7).unwrap();
+    let p2 = e.init(7).unwrap();
+    assert_eq!(p1.len(), e.meta.param_count);
+    assert_eq!(p1, p2);
+    let p3 = e.init(8).unwrap();
+    assert_ne!(p1, p3);
+    // padded tail is zero
+    let used = e.meta.param_spec.used;
+    assert!(p1[used..].iter().all(|&x| x == 0.0));
+    // layernorm scales are 1.0 at their recorded offsets
+    let lnf = e
+        .meta
+        .param_spec
+        .entries
+        .iter()
+        .find(|s| s.name == "lnf_s")
+        .unwrap();
+    assert!(p1[lnf.offset..lnf.offset + lnf.size].iter().all(|&x| x == 1.0));
+}
+
+#[test]
+fn rollout_contract() {
+    let Some(e) = engine() else { return };
+    let params = e.init(1).unwrap();
+    let problem = TaskKind::Arith.generate(Split::Train, 0);
+    // micro profile has prompt_len 8; clip the prompt to fit
+    let short: Vec<i32> = problem.prompt.iter().copied().take(8).collect();
+    let (prompts, pads) = prompt_batch(&e, &short).unwrap();
+    let out = e.rollout(&params, None, &prompts, &pads, 11, 1.0).unwrap();
+    let b = e.meta.config.rollout_batch;
+    let t = e.meta.config.seq_len;
+    let g = e.meta.gen_len;
+    let p = e.meta.config.prompt_len;
+    assert_eq!(out.tokens.dims, vec![b, t]);
+    assert_eq!(out.logprobs.dims, vec![b, g]);
+    // prompt region is echoed verbatim
+    for row in 0..b {
+        for j in 0..p {
+            assert_eq!(out.tokens.at2(row, j), prompts.at2(row, j));
+        }
+    }
+    // determinism + seed sensitivity
+    let out2 = e.rollout(&params, None, &prompts, &pads, 11, 1.0).unwrap();
+    assert_eq!(out.tokens.data, out2.tokens.data);
+    let out3 = e.rollout(&params, None, &prompts, &pads, 12, 1.0).unwrap();
+    assert_ne!(out.tokens.data, out3.tokens.data);
+    // mask/EOS/PAD contract per row
+    for row in 0..b {
+        let len = out.gen_len[row] as usize;
+        for j in 0..g {
+            let m = out.gen_mask.at2(row, j);
+            assert_eq!(m, if j < len { 1.0 } else { 0.0 });
+            if j >= len {
+                assert_eq!(out.tokens.at2(row, p + j), tok::PAD);
+                assert_eq!(out.logprobs.at2(row, j), 0.0);
+            } else {
+                assert!(out.logprobs.at2(row, j) <= 1e-6, "logprob must be <= 0");
+            }
+        }
+    }
+    // greedy decode is deterministic regardless of seed
+    let g1 = e.rollout(&params, None, &prompts, &pads, 1, 0.0).unwrap();
+    let g2 = e.rollout(&params, None, &prompts, &pads, 999, 0.0).unwrap();
+    assert_eq!(g1.tokens.data, g2.tokens.data);
+}
+
+#[test]
+fn score_matches_rollout_behaviour_logprobs() {
+    let Some(e) = engine() else { return };
+    let params = e.init(2).unwrap();
+    let problem = TaskKind::Mcq.generate(Split::Train, 1);
+    let short: Vec<i32> = problem.prompt.iter().copied().take(8).collect();
+    let (prompts, pads) = prompt_batch(&e, &short).unwrap();
+    let out = e.rollout(&params, None, &prompts, &pads, 3, 1.0).unwrap();
+    let scored = e.score(&params, None, &out.tokens, &pads).unwrap();
+    let b = e.meta.config.rollout_batch;
+    let g = e.meta.gen_len;
+    for row in 0..b {
+        for j in 0..g {
+            if out.gen_mask.at2(row, j) > 0.5 {
+                let a = out.logprobs.at2(row, j);
+                let s = scored.at2(row, j);
+                assert!(
+                    (a - s).abs() < 2e-3,
+                    "row {row} pos {j}: rollout {a} vs score {s}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn grad_zero_at_zero_advantage_and_update_applies() {
+    let Some(e) = engine() else { return };
+    let mut store = ParamStore::new(e.init(3).unwrap());
+    let problem = TaskKind::Arith.generate(Split::Train, 2);
+    let short: Vec<i32> = problem.prompt.iter().copied().take(8).collect();
+    let (prompts, pads) = prompt_batch(&e, &short).unwrap();
+    let out = e.rollout(&store.params, None, &prompts, &pads, 5, 1.0).unwrap();
+    let bu = e.meta.config.update_batch;
+    let t = e.meta.config.seq_len;
+    let g = e.meta.gen_len;
+    let mk_mb = |adv: Vec<f32>| MicroBatch {
+        tokens: TensorI::new(out.tokens.data[..bu * t].to_vec(), &[bu, t]).unwrap(),
+        pad_len: pads[..bu].to_vec(),
+        gen_mask: TensorF::new(out.gen_mask.data[..bu * g].to_vec(), &[bu, g]).unwrap(),
+        old_lp: TensorF::new(out.logprobs.data[..bu * g].to_vec(), &[bu, g]).unwrap(),
+        adv,
+        ref_lp: TensorF::new(vec![0.0; bu * g], &[bu, g]).unwrap(),
+    };
+    // zero advantages -> exactly zero gradient and loss
+    let out0 = e.grad(&store.params, None, &mk_mb(vec![0.0; bu]), 0.0).unwrap();
+    assert!(out0.grads.iter().all(|&x| x.abs() < 1e-7));
+    assert!(out0.loss.abs() < 1e-6);
+    // nonzero advantages -> nonzero gradient; update changes params
+    let mut adv = vec![0.0; bu];
+    adv[0] = 1.0;
+    if bu > 1 {
+        adv[1] = -1.0;
+    }
+    let out1 = e.grad(&store.params, None, &mk_mb(adv), 0.0).unwrap();
+    let gnorm: f32 = out1.grads.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!(gnorm > 1e-4, "gradient norm {gnorm}");
+    let before = store.params.clone();
+    e.update(&mut store, &out1.grads, 1e-3).unwrap();
+    assert_eq!(store.step, 1);
+    let delta: f32 = store
+        .params
+        .iter()
+        .zip(&before)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(delta > 1e-6 && delta <= 1.3e-3, "max param delta {delta}");
+}
+
+#[test]
+fn sft_learns_a_constant_sequence() {
+    let Some(e) = engine() else { return };
+    let mut store = ParamStore::new(e.init(4).unwrap());
+    let bu = e.meta.config.update_batch;
+    let t = e.meta.config.seq_len;
+    // teach it to repeat digit 5 forever
+    let tokens = TensorI::new(vec![tok::DIGIT0 + 5; bu * t], &[bu, t]).unwrap();
+    let mask = TensorF::new(vec![1.0; bu * t], &[bu, t]).unwrap();
+    let pads = vec![0i32; bu];
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for i in 0..30 {
+        let loss = e.sft_step(&mut store, &tokens, &pads, &mask, 5e-3).unwrap();
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(last < first * 0.5, "SFT loss did not drop: {first} -> {last}");
+    assert_eq!(store.step, 30);
+}
+
+#[test]
+fn generate_group_end_to_end() {
+    let Some(e) = engine() else { return };
+    let params = e.init(5).unwrap();
+    // arith prompts can exceed micro's prompt_len=8; build a tiny custom one
+    let problem = {
+        let mut p = TaskKind::Arith.generate(Split::Train, 3);
+        p.prompt.truncate(8);
+        p
+    };
+    let req = GenRequest {
+        params: &params,
+        lora: None,
+        ref_params: None,
+        ref_lora: None,
+        n: 10, // forces 3 calls at B_r = 4
+        temperature: 1.0,
+        run_seed: 42,
+        iter: 0,
+        weights: RewardWeights::default(),
+    };
+    let (group, stats) = generate_group(&e, &req, TaskKind::Arith, &problem).unwrap();
+    assert_eq!(group.rollouts.len(), 10);
+    assert_eq!(stats.calls, 3);
+    assert!(stats.total_gen_tokens > 0);
+    for r in &group.rollouts {
+        assert_eq!(r.tokens.len(), e.meta.config.seq_len);
+        assert_eq!(r.gen_mask.len(), e.meta.gen_len);
+        assert!(r.total_reward >= 0.0);
+    }
+}
+
+#[test]
+fn kl_reference_scoring_path() {
+    let Some(e) = engine() else { return };
+    let params = e.init(6).unwrap();
+    let ref_params = e.init(60).unwrap();
+    let problem = {
+        let mut p = TaskKind::Mcq.generate(Split::Train, 4);
+        p.prompt.truncate(8);
+        p
+    };
+    let req = GenRequest {
+        params: &params,
+        lora: None,
+        ref_params: Some(&ref_params),
+        ref_lora: None,
+        n: 4,
+        temperature: 1.0,
+        run_seed: 1,
+        iter: 0,
+        weights: RewardWeights::default(),
+    };
+    let (group, _) = generate_group(&e, &req, TaskKind::Mcq, &problem).unwrap();
+    // ref_lp must differ from old_lp (different parameters)
+    let any_diff = group.rollouts.iter().any(|r| {
+        r.old_lp
+            .iter()
+            .zip(&r.ref_lp)
+            .zip(&r.gen_mask)
+            .any(|((o, f), m)| *m > 0.5 && (o - f).abs() > 1e-3)
+    });
+    assert!(any_diff, "reference scoring should use the reference params");
+}
