@@ -1,32 +1,65 @@
-//! Down-sampling rule comparison (Fig. 5) plus a pure-algorithm showcase:
-//! what each rule selects from the same reward multiset, and the full
-//! training comparison on setting (a).
+//! Selection-pipeline showcase (Fig. 5) — what each registered selector
+//! keeps from the same synthetic prompt group, how pipelines compose, and
+//! the full training comparison on setting (a).
 //!
 //! ```sh
 //! cargo run --release --example downsample_rules -- [--quick] [--no-train]
 //! ```
 
-use pods::coordinator::downsample::{subset_variance, Rule};
+use pods::coordinator::group::PromptGroup;
+use pods::coordinator::select::{Pipeline, SelectionContext};
 use pods::exp::{fig5, Scale};
-use pods::util::rng::Rng;
+
+/// A synthetic group: a typical discrete RLVR reward multiset
+/// (accuracy+format+tags) with spread-out generation lengths.
+fn demo_group(rewards: &[f32], lens: &[i32]) -> PromptGroup {
+    PromptGroup::synthetic(0, rewards, Some(lens))
+}
+
+fn show(group: &PromptGroup, spec: &str, m: usize) -> anyhow::Result<()> {
+    let pipeline = Pipeline::parse_default(spec)?;
+    let sel = pipeline.select(&SelectionContext::new(group, m, 0, 0))?;
+    let vals: Vec<f32> = sel.kept.iter().map(|&i| group.rollouts[i].total_reward).collect();
+    println!(
+        "  {:<40} -> indices {:?} rewards {:?}\n  {:<40}    variance {:.3}, tokens kept {} / dropped {}{}",
+        spec,
+        sel.kept,
+        vals,
+        "",
+        sel.diag.reward_variance,
+        sel.diag.tokens_kept,
+        sel.diag.tokens_dropped,
+        if sel.kept.is_empty() { "  (group dropped: no learning signal)" } else { "" },
+    );
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
-    // A typical discrete RLVR reward multiset (accuracy+format+tags).
-    let rewards = vec![3.0f32, 0.0, 2.0, 2.0, 0.25, 3.0, 1.0, 0.5, 2.0, 0.0, 3.0, 0.25];
+    let rewards = [3.0f32, 0.0, 2.0, 2.0, 0.25, 3.0, 1.0, 0.5, 2.0, 0.0, 3.0, 0.25];
+    let lens = [22i32, 64, 30, 31, 120, 24, 45, 80, 28, 70, 26, 95];
+    let group = demo_group(&rewards, &lens);
     let m = 4;
-    let mut rng = Rng::seed_from_u64(0);
-    println!("rewards: {rewards:?}, m = {m}");
-    for rule in [Rule::MaxVariance, Rule::MaxReward, Rule::Random, Rule::Percentile] {
-        let sel = rule.select(&rewards, m, &mut rng);
-        let vals: Vec<f32> = sel.iter().map(|&i| rewards[i]).collect();
-        println!(
-            "  {:<13} -> indices {:?} rewards {:?} (variance {:.3})",
-            rule.name(),
-            sel,
-            vals,
-            subset_variance(&rewards, &sel)
-        );
+    println!("rewards: {rewards:?}");
+    println!("lengths: {lens:?}, m = {m}");
+    for spec in [
+        "max_variance",
+        "max_reward",
+        "random",
+        "percentile",
+        "first",
+        "drop_zero_variance | max_variance",
+        "prune(max_tokens=64) | percentile",
+        "prune(budget=128) | max_variance",
+    ] {
+        show(&group, spec, m)?;
     }
+
+    // a zero-signal group (all rollouts correct): drop_zero_variance
+    // removes it from the update entirely
+    println!("\nall-equal rewards (no GRPO signal):");
+    let flat = demo_group(&[1.0; 6], &[30, 30, 30, 30, 30, 30]);
+    show(&flat, "max_variance", m)?;
+    show(&flat, "drop_zero_variance | max_variance", m)?;
 
     if std::env::args().any(|a| a == "--no-train") {
         return Ok(());

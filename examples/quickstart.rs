@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
 
     // 1. The core algorithm, standalone: Algorithm 2 in O(n log n).
     let rewards = vec![0.0f32, 3.0, 1.0, 2.0, 3.0, 0.0, 1.0, 2.0];
-    let picked = max_variance(&rewards, 4);
+    let picked = max_variance(&rewards, 4)?;
     println!(
         "max-variance subset of {rewards:?} (m=4): {picked:?} (variance {:.3})",
         subset_variance(&rewards, &picked)

@@ -1,10 +1,14 @@
-//! Bench: down-sampling rules (the paper's O(n log n) claim, Theorem 1).
+//! Bench: selection kernels and pipelines (the paper's O(n log n) claim,
+//! Theorem 1, plus the selector-subsystem overhead).
 //!
-//! Verifies the complexity class empirically (time vs n for max-variance)
-//! and compares all four rules plus the exhaustive oracle at small n.
-//! Corresponds to the algorithmic cost side of Table/Fig. discussions §3.3.
+//! Verifies the complexity class empirically (time vs n for max-variance),
+//! compares every registered selection pipeline at the paper's production
+//! shape — including the context-aware `drop_zero_variance` and `prune`
+//! stages — and pits Algorithm 2 against the exhaustive oracle at small n.
 
-use pods::coordinator::downsample::{max_variance, subset_variance, Rule};
+use pods::coordinator::downsample::{max_variance, subset_variance};
+use pods::coordinator::group::PromptGroup;
+use pods::coordinator::select::{Pipeline, SelectionContext};
 use pods::util::bench::{bench, black_box};
 use pods::util::rng::Rng;
 
@@ -14,6 +18,13 @@ fn rewards(n: usize, seed: u64) -> Vec<f32> {
     (0..n)
         .map(|_| [0.0, 0.25, 0.5, 1.0, 2.0, 2.25, 3.0][rng.below(7)])
         .collect()
+}
+
+/// Synthetic prompt group with RLVR-like rewards and spread-out lengths.
+fn group(n: usize, seed: u64) -> PromptGroup {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x9E37);
+    let lens: Vec<i32> = (0..n).map(|_| rng.gen_range_inclusive(8, 512) as i32).collect();
+    PromptGroup::synthetic(0, &rewards(n, seed), Some(&lens))
 }
 
 /// Exhaustive oracle (for the asymptotic comparison at tiny n).
@@ -47,7 +58,7 @@ fn main() {
         let r = rewards(n, n as u64);
         let m = n / 4;
         let res = bench(&format!("max_variance n={n}"), None, || {
-            black_box(max_variance(black_box(&r), m));
+            black_box(max_variance(black_box(&r), m).unwrap());
         });
         med.push((n, res.median_ns));
     }
@@ -57,12 +68,23 @@ fn main() {
     let slope = (t1 / t0).log2() / ((n1 as f64 / n0 as f64)).log2();
     println!("empirical scaling exponent (expect ~1.0-1.2 for n log n): {slope:.2}\n");
 
-    println!("== all rules at the paper's production shape (n=512, m=128) ==");
-    let r = rewards(512, 7);
-    let mut rng = Rng::seed_from_u64(1);
-    for rule in [Rule::MaxVariance, Rule::MaxReward, Rule::Random, Rule::Percentile] {
-        bench(&format!("rule {} n=512 m=128", rule.name()), None, || {
-            black_box(rule.select(black_box(&r), 128, &mut rng));
+    println!("== selection pipelines at the paper's production shape (n=512, m=128) ==");
+    let g = group(512, 7);
+    let specs = [
+        "max_variance",
+        "max_reward",
+        "random",
+        "percentile",
+        "first",
+        "drop_zero_variance | max_variance",
+        "prune(quantile=0.75) | max_variance",
+        "prune(budget=16384) | percentile",
+    ];
+    for spec in specs {
+        let pipeline = Pipeline::parse_default(spec).unwrap();
+        let ctx = SelectionContext::new(&g, 128, 0, 0);
+        bench(&format!("pipeline [{spec}] n=512 m=128"), None, || {
+            black_box(pipeline.select(black_box(&ctx)).unwrap());
         });
     }
 
@@ -72,6 +94,6 @@ fn main() {
         black_box(oracle(black_box(&r), 6));
     });
     bench("algorithm2 n=22 m=6", None, || {
-        black_box(max_variance(black_box(&r), 6));
+        black_box(max_variance(black_box(&r), 6).unwrap());
     });
 }

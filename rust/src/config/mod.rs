@@ -1,14 +1,18 @@
 //! TOML run-configuration system — Table 1 / Table 2 as shipped configs.
 //!
 //! A [`RunConfig`] fully determines one training run: artifact profile,
-//! task, algorithm schedule (GRPO / GRPO-GA / GRPO-PODS), down-sampling
-//! rule, (n, m), optimizer hyperparameters, hwsim calibration and SFT
+//! task, algorithm schedule (GRPO / GRPO-GA / GRPO-PODS), rollout-selection
+//! pipeline, (n, m), optimizer hyperparameters, hwsim calibration and SFT
 //! warm-up. `configs/setting_{a..f}.toml` mirror the paper's Table 1/2
 //! settings at reproduction scale. Parsed with the std-only TOML-subset
 //! parser in `util::toml`.
+//!
+//! `algo.rule` is a selector pipeline spec (see
+//! [`crate::coordinator::select::spec`]); the four legacy rule names are
+//! valid one-stage specs, so existing TOML files keep working unchanged.
 
 use crate::coordinator::advantage::NormMode;
-use crate::coordinator::downsample::Rule;
+use crate::coordinator::select::Pipeline;
 use crate::hwsim::HwModel;
 use crate::tasks::TaskKind;
 use crate::util::toml::{parse as toml_parse, SectionView};
@@ -74,6 +78,8 @@ pub struct AlgoSection {
     pub n: usize,
     /// Update size after down-sampling (ignored for grpo/ga: m = n).
     pub m: Option<usize>,
+    /// Selector pipeline spec, e.g. `"max_variance"` or
+    /// `"drop_zero_variance | prune(max_tokens=4096) | percentile"`.
     pub rule: String,
     pub adv_norm: String,
     pub kl_coef: f64,
@@ -158,8 +164,10 @@ impl RunConfig {
         AlgoKind::parse(&self.algo.kind).expect("validated")
     }
 
-    pub fn rule(&self) -> Rule {
-        Rule::parse(&self.algo.rule).expect("validated")
+    /// Build the selection pipeline from the `algo.rule` spec (resolved
+    /// against the built-in registry; validated at parse time).
+    pub fn selector(&self) -> Pipeline {
+        Pipeline::parse_default(&self.algo.rule).expect("validated")
     }
 
     pub fn norm_mode(&self) -> NormMode {
@@ -180,7 +188,7 @@ impl RunConfig {
 
     pub fn validate(&self) -> Result<()> {
         let kind = AlgoKind::parse(&self.algo.kind)?;
-        Rule::parse(&self.algo.rule)?;
+        Pipeline::parse_default(&self.algo.rule)?;
         NormMode::parse(&self.algo.adv_norm)?;
         TaskKind::parse(&self.run.task)?;
         if self.algo.n == 0 {
@@ -231,7 +239,7 @@ mod tests {
     fn parses_minimal_with_defaults() {
         let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
         assert_eq!(cfg.algo_kind(), AlgoKind::GrpoPods);
-        assert_eq!(cfg.rule(), Rule::MaxVariance);
+        assert_eq!(cfg.selector().stage_names(), vec!["max_variance"]);
         assert_eq!(cfg.norm_mode(), NormMode::After);
         assert_eq!(cfg.effective_m(), 16);
         assert_eq!(cfg.hwsim.workers, 1);
@@ -261,6 +269,23 @@ mod tests {
     #[test]
     fn rejects_unknown_rule() {
         let text = format!("{MINIMAL}\nrule = \"best_ever\"");
+        assert!(RunConfig::from_str_validated(&text).is_err());
+    }
+
+    #[test]
+    fn composed_pipeline_specs_parse() {
+        let text =
+            MINIMAL.replace("lr = 1e-4", "lr = 1e-4\nrule = \"drop_zero_variance | max_variance\"");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert_eq!(cfg.selector().stage_names(), vec!["drop_zero_variance", "max_variance"]);
+
+        let text = MINIMAL
+            .replace("lr = 1e-4", "lr = 1e-4\nrule = \"prune(max_tokens=4096) | percentile\"");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert_eq!(cfg.selector().stage_names(), vec!["prune", "percentile"]);
+
+        // malformed stage args fail validation, not training
+        let text = MINIMAL.replace("lr = 1e-4", "lr = 1e-4\nrule = \"prune(quantile=2)\"");
         assert!(RunConfig::from_str_validated(&text).is_err());
     }
 

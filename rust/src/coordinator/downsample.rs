@@ -1,7 +1,12 @@
-//! Down-sampling rules (paper §3.2–3.3) — the core algorithmic contribution.
+//! Down-sampling kernels (paper §3.2–3.3) — the core algorithmic
+//! contribution, exposed to the training loop through the pluggable
+//! [`crate::coordinator::select`] subsystem (the old closed `Rule` enum
+//! was replaced by selector pipelines; the config strings
+//! `max_variance` / `max_reward` / `random` / `percentile` still resolve
+//! to these exact functions).
 //!
-//! Given `n` rollout rewards and an update size `m`, each rule returns the
-//! indices to keep for the policy update:
+//! Given `n` rollout rewards and an update size `m`, each kernel returns
+//! the indices to keep for the policy update:
 //!
 //! * [`max_variance`] — Algorithm 2: by Lemma 3.1 the variance-maximising
 //!   subset is always the `m-k` lowest + `k` highest rewards of the sorted
@@ -11,59 +16,17 @@
 //! * [`random`] — uniform without replacement (unbiased GRPO-on-`m`).
 //! * [`percentile`] — the `(i+0.5)/m` quantiles of the reward distribution.
 //!
-//! All rules are deterministic given their inputs (ties broken by index;
+//! All kernels are deterministic given their inputs (ties broken by index;
 //! `random` takes an explicit RNG), which makes experiments replayable.
+//! Degenerate sizes (`m == 0` or `m > n`) are errors, not UB or panics —
+//! the selector layer clamps before calling, so a kernel error always
+//! indicates a caller bug.
 //!
 //! An exhaustive `O(C(n, m))` oracle lives in the test module; proptest
 //! verifies `max_variance` against it for all small instances.
 
 use crate::util::rng::Rng;
-
-/// Which down-sampling rule to apply (config string form in parens).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Rule {
-    /// `max_variance` (the paper's principled rule)
-    MaxVariance,
-    /// `max_reward`
-    MaxReward,
-    /// `random`
-    Random,
-    /// `percentile`
-    Percentile,
-}
-
-impl Rule {
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
-            "max_variance" => Ok(Self::MaxVariance),
-            "max_reward" => Ok(Self::MaxReward),
-            "random" => Ok(Self::Random),
-            "percentile" => Ok(Self::Percentile),
-            other => Err(anyhow::anyhow!(
-                "unknown rule {other:?} (max_variance|max_reward|random|percentile)"
-            )),
-        }
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Self::MaxVariance => "max_variance",
-            Self::MaxReward => "max_reward",
-            Self::Random => "random",
-            Self::Percentile => "percentile",
-        }
-    }
-
-    /// Apply the rule. `rng` is only used by [`Rule::Random`].
-    pub fn select(self, rewards: &[f32], m: usize, rng: &mut Rng) -> Vec<usize> {
-        match self {
-            Self::MaxVariance => max_variance(rewards, m),
-            Self::MaxReward => max_reward(rewards, m),
-            Self::Random => random(rewards.len(), m, rng),
-            Self::Percentile => percentile(rewards, m),
-        }
-    }
-}
+use anyhow::{ensure, Result};
 
 /// Indices of rewards sorted ascending, ties broken by original index
 /// (deterministic, and matches the stable-argsort the paper's code uses).
@@ -92,10 +55,10 @@ fn split_variance(pre_s: &[f64], pre_s2: &[f64], n: usize, lo: usize, hi: usize)
 ///
 /// Returns the indices (ascending by reward, lowest block then highest
 /// block) of the size-`m` subset maximising empirical reward variance.
-/// Requires `0 < m <= n`.
-pub fn max_variance(rewards: &[f32], m: usize) -> Vec<usize> {
+/// Errors unless `0 < m <= n`.
+pub fn max_variance(rewards: &[f32], m: usize) -> Result<Vec<usize>> {
     let n = rewards.len();
-    assert!(m > 0 && m <= n, "max_variance: m={m} n={n}");
+    ensure!(m > 0 && m <= n, "max_variance: m must be in 1..=n (got m={m}, n={n})");
     let order = argsort(rewards);
     // prefix sums over the sorted rewards
     let mut pre_s = vec![0f64; n + 1];
@@ -123,32 +86,35 @@ pub fn max_variance(rewards: &[f32], m: usize) -> Vec<usize> {
     let lo = m - best_k;
     let mut out: Vec<usize> = order[..lo].to_vec();
     out.extend_from_slice(&order[n - best_k..]);
-    out
+    Ok(out)
 }
 
 /// Max-reward down-sampling: the `m` highest rewards.
-pub fn max_reward(rewards: &[f32], m: usize) -> Vec<usize> {
+/// Errors unless `0 < m <= n`.
+pub fn max_reward(rewards: &[f32], m: usize) -> Result<Vec<usize>> {
     let n = rewards.len();
-    assert!(m > 0 && m <= n, "max_reward: m={m} n={n}");
+    ensure!(m > 0 && m <= n, "max_reward: m must be in 1..=n (got m={m}, n={n})");
     let order = argsort(rewards);
-    order[n - m..].to_vec()
+    Ok(order[n - m..].to_vec())
 }
 
 /// Random down-sampling: uniform `m`-subset without replacement.
-pub fn random(n: usize, m: usize, rng: &mut Rng) -> Vec<usize> {
-    assert!(m > 0 && m <= n, "random: m={m} n={n}");
+/// Errors unless `0 < m <= n`.
+pub fn random(n: usize, m: usize, rng: &mut Rng) -> Result<Vec<usize>> {
+    ensure!(m > 0 && m <= n, "random: m must be in 1..=n (got m={m}, n={n})");
     let mut idx: Vec<usize> = (0..n).collect();
     rng.shuffle(&mut idx);
     idx.truncate(m);
     idx.sort_unstable();
-    idx
+    Ok(idx)
 }
 
 /// Percentile down-sampling: the `(i + 0.5)/m` quantiles of the reward
 /// distribution, i.e. sorted positions `floor((i + 0.5) * n / m)`.
-pub fn percentile(rewards: &[f32], m: usize) -> Vec<usize> {
+/// Errors unless `0 < m <= n`.
+pub fn percentile(rewards: &[f32], m: usize) -> Result<Vec<usize>> {
     let n = rewards.len();
-    assert!(m > 0 && m <= n, "percentile: m={m} n={n}");
+    ensure!(m > 0 && m <= n, "percentile: m must be in 1..=n (got m={m}, n={n})");
     let order = argsort(rewards);
     let mut out = Vec::with_capacity(m);
     let mut last = usize::MAX;
@@ -175,7 +141,7 @@ pub fn percentile(rewards: &[f32], m: usize) -> Vec<usize> {
             }
         }
     }
-    out
+    Ok(out)
 }
 
 /// Population variance of the selected rewards (used by tests/benches and
@@ -227,7 +193,7 @@ mod tests {
             let n = rng.gen_range_inclusive(1, 9) as usize;
             let rewards = vec_f32(rng, n, -5.0, 5.0);
             let m = rng.gen_range_inclusive(1, n as i64) as usize;
-            let got = max_variance(&rewards, m);
+            let got = max_variance(&rewards, m).unwrap();
             assert_eq!(got.len(), m);
             let set: std::collections::HashSet<_> = got.iter().collect();
             assert_eq!(set.len(), m, "duplicates in {got:?}");
@@ -244,7 +210,7 @@ mod tests {
             let n = rng.gen_range_inclusive(2, 49) as usize;
             let rewards = vec_f32(rng, n, -100.0, 100.0);
             let m = rng.gen_range_inclusive(1, n as i64) as usize;
-            let got = max_variance(&rewards, m);
+            let got = max_variance(&rewards, m).unwrap();
             let order = argsort(&rewards);
             let rank: std::collections::HashMap<usize, usize> =
                 order.iter().enumerate().map(|(r, &i)| (i, r)).collect();
@@ -275,7 +241,7 @@ mod tests {
             if m == 0 {
                 return;
             }
-            let got = max_variance(&rewards, m);
+            let got = max_variance(&rewards, m).unwrap();
             let pos = rewards.iter().filter(|&&r| r > 0.5).count();
             let neg = n - pos;
             // Theorem 2's optimal count of ones in the subset
@@ -293,28 +259,61 @@ mod tests {
         });
     }
 
-    /// All rules return m distinct valid indices.
+    /// All kernels return m distinct valid indices on valid inputs.
     #[test]
-    fn all_rules_return_valid_subsets() {
+    fn all_kernels_return_valid_subsets() {
         for_cases(300, |rng| {
             let n = rng.gen_range_inclusive(1, 63) as usize;
             let rewards = vec_f32(rng, n, -3.0, 3.0);
             let m = rng.gen_range_inclusive(1, n as i64) as usize;
             let mut sel_rng = Rng::seed_from_u64(rng.next_u64());
-            for rule in [Rule::MaxVariance, Rule::MaxReward, Rule::Random, Rule::Percentile] {
-                let got = rule.select(&rewards, m, &mut sel_rng);
-                assert_eq!(got.len(), m, "{rule:?}");
+            let all = [
+                max_variance(&rewards, m).unwrap(),
+                max_reward(&rewards, m).unwrap(),
+                random(n, m, &mut sel_rng).unwrap(),
+                percentile(&rewards, m).unwrap(),
+            ];
+            for got in all {
+                assert_eq!(got.len(), m);
                 let set: std::collections::HashSet<_> = got.iter().collect();
-                assert_eq!(set.len(), m, "{rule:?} dup");
-                assert!(got.iter().all(|&i| i < n), "{rule:?} oob");
+                assert_eq!(set.len(), m, "dup in {got:?}");
+                assert!(got.iter().all(|&i| i < n), "oob in {got:?}");
             }
         });
+    }
+
+    /// Satellite: degenerate `m == 0` and `m > n` are proper errors on
+    /// every kernel (the seed implementation panicked via assert!).
+    #[test]
+    fn m_zero_is_an_error() {
+        let r = vec![1.0f32, 2.0, 3.0];
+        let mut rng = Rng::seed_from_u64(0);
+        assert!(max_variance(&r, 0).is_err());
+        assert!(max_reward(&r, 0).is_err());
+        assert!(random(r.len(), 0, &mut rng).is_err());
+        assert!(percentile(&r, 0).is_err());
+    }
+
+    #[test]
+    fn m_above_n_is_an_error() {
+        let r = vec![1.0f32, 2.0, 3.0];
+        let mut rng = Rng::seed_from_u64(0);
+        assert!(max_variance(&r, 4).is_err());
+        assert!(max_reward(&r, 4).is_err());
+        assert!(random(r.len(), 4, &mut rng).is_err());
+        assert!(percentile(&r, 4).is_err());
+        // empty input: every m is degenerate
+        assert!(max_variance(&[], 1).is_err());
+        assert!(percentile(&[], 1).is_err());
+        // and the error message names the bounds
+        let msg = max_variance(&r, 9).unwrap_err().to_string();
+        assert!(msg.contains("m=9") && msg.contains("n=3"), "{msg}");
     }
 
     #[test]
     fn max_reward_picks_top() {
         let r = vec![0.1, 3.0, 2.0, -1.0, 2.5];
-        let mut got = max_reward(&r, 2);
+        let mut got = max_reward(&r, 2).unwrap();
         got.sort_unstable();
         assert_eq!(got, vec![1, 4]);
     }
@@ -322,7 +321,7 @@ mod tests {
     #[test]
     fn percentile_m_eq_n_selects_everything() {
         let r = vec![5.0, 1.0, 3.0, 2.0];
-        let mut got = percentile(&r, 4);
+        let mut got = percentile(&r, 4).unwrap();
         got.sort_unstable();
         assert_eq!(got, vec![0, 1, 2, 3]);
     }
@@ -330,7 +329,7 @@ mod tests {
     #[test]
     fn percentile_spreads_over_spectrum() {
         let r: Vec<f32> = (0..100).map(|i| i as f32).collect();
-        let got = percentile(&r, 4);
+        let got = percentile(&r, 4).unwrap();
         let mut vals: Vec<f32> = got.iter().map(|&i| r[i]).collect();
         vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(vals, vec![12.0, 37.0, 62.0, 87.0]);
@@ -339,7 +338,7 @@ mod tests {
     #[test]
     fn random_m_eq_n_is_identity_set() {
         let mut rng = Rng::seed_from_u64(0);
-        let got = random(6, 6, &mut rng);
+        let got = random(6, 6, &mut rng).unwrap();
         assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
     }
 
@@ -348,7 +347,7 @@ mod tests {
         // 6 ones, 6 zeros, m=4 -> 2+2
         let mut r = vec![1.0f32; 6];
         r.extend(vec![0.0f32; 6]);
-        let got = max_variance(&r, 4);
+        let got = max_variance(&r, 4).unwrap();
         let ones = got.iter().filter(|&&i| r[i] > 0.5).count();
         assert_eq!(ones, 2);
         assert!((subset_variance(&r, &got) - 0.25).abs() < 1e-12);
@@ -357,7 +356,7 @@ mod tests {
     #[test]
     fn max_variance_all_equal_rewards() {
         let r = vec![2.0f32; 8];
-        let got = max_variance(&r, 3);
+        let got = max_variance(&r, 3).unwrap();
         assert_eq!(got.len(), 3);
         assert_eq!(subset_variance(&r, &got), 0.0);
     }
@@ -365,7 +364,7 @@ mod tests {
     #[test]
     fn max_variance_m_eq_n() {
         let r = vec![1.0, 2.0, 3.0];
-        let mut got = max_variance(&r, 3);
+        let mut got = max_variance(&r, 3).unwrap();
         got.sort_unstable();
         assert_eq!(got, vec![0, 1, 2]);
     }
@@ -373,8 +372,8 @@ mod tests {
     #[test]
     fn deterministic_under_ties() {
         let r = vec![1.0f32, 1.0, 0.0, 0.0, 1.0, 0.0];
-        let a = max_variance(&r, 4);
-        let b = max_variance(&r, 4);
+        let a = max_variance(&r, 4).unwrap();
+        let b = max_variance(&r, 4).unwrap();
         assert_eq!(a, b);
     }
 }

@@ -1,15 +1,20 @@
 //! Per-prompt rollout groups and update-batch assembly.
 //!
 //! GRPO operates on *groups*: all `n` rollouts of one prompt share the
-//! advantage-normalization statistics. PODS applies the down-sampling rule
+//! advantage-normalization statistics. PODS applies the selection pipeline
 //! **within each prompt group** and then concatenates the selected rollouts
 //! across prompts into the update batch (paper §3.2, Algorithm 1).
+//!
+//! Selection is delegated to a [`Pipeline`] from
+//! [`crate::coordinator::select`]; each group gets a [`SelectionContext`]
+//! carrying its rollouts, the target `m` and a deterministic per-group RNG
+//! seed, so the assembled batch does not depend on group iteration order.
 
 use crate::coordinator::advantage::{subset_advantages, NormMode};
-use crate::coordinator::downsample::Rule;
+use crate::coordinator::select::{Pipeline, SelectionContext, SelectionDiag};
 use crate::reward::RewardBreakdown;
 use crate::tasks::Problem;
-use crate::util::rng::Rng;
+use anyhow::Result;
 
 /// One sampled rollout with everything the update phase needs.
 #[derive(Debug, Clone)]
@@ -36,6 +41,28 @@ pub struct PromptGroup {
 }
 
 impl PromptGroup {
+    /// Synthetic group for tests, benches and examples: zeroed token
+    /// tensors, the given rewards, and optional per-rollout generated
+    /// lengths (default 4).
+    pub fn synthetic(problem_idx: u64, rewards: &[f32], gen_lens: Option<&[i32]>) -> Self {
+        let problem = crate::tasks::TaskKind::Arith.generate(crate::tasks::Split::Train, problem_idx);
+        let rollouts = rewards
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| RolloutRecord {
+                tokens: vec![0; 4],
+                pad_len: 0,
+                gen_mask: vec![1.0; 4],
+                old_lp: vec![0.0; 4],
+                ref_lp: vec![0.0; 4],
+                gen_len: gen_lens.map_or(4, |l| l[i]),
+                reward: RewardBreakdown { accuracy: 0.0, format: 0.0, tag_count: 0.0 },
+                total_reward: r,
+            })
+            .collect();
+        PromptGroup { problem, rollouts }
+    }
+
     pub fn rewards(&self) -> Vec<f32> {
         self.rollouts.iter().map(|r| r.total_reward).collect()
     }
@@ -71,94 +98,178 @@ pub struct SelectedRollout {
     pub advantage: f32,
 }
 
-/// Apply `rule` within each group, normalize advantages per `mode`, and
-/// concatenate across groups (Algorithm 1 for a multi-prompt batch).
+/// Batch-level selection telemetry, aggregated over the iteration's groups
+/// from the per-group [`SelectionDiag`]s. Recorded into the train CSV.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchSelectionStats {
+    /// Non-empty groups seen.
+    pub groups: usize,
+    /// Groups whose selection came back empty (e.g. zero-signal groups
+    /// removed by `drop_zero_variance`) — they contribute nothing to the
+    /// update.
+    pub groups_dropped: usize,
+    /// Generated tokens in kept rollouts (update-phase token budget).
+    pub tokens_kept: usize,
+    /// Generated tokens in dropped rollouts.
+    pub tokens_dropped: usize,
+}
+
+/// Run the selection pipeline within each group, normalize advantages per
+/// `mode`, and concatenate across groups (Algorithm 1 for a multi-prompt
+/// batch).
 ///
-/// `m = None` selects every rollout (vanilla GRPO / GRPO-GA schedules).
+/// `m = None` selects every rollout without invoking the pipeline — the
+/// vanilla GRPO / GRPO-GA schedules. With `m = Some(_)` (GRPO-PODS) the
+/// pipeline always runs, even when `m >= n`: exact stages then keep
+/// everything, but filter stages (`drop_zero_variance`, `prune`) still
+/// apply. `run_seed` and `iter` seed each group's selection RNG from
+/// `(run_seed, iter, prompt_id)`, so stochastic selectors are replayable
+/// independent of group order.
 pub fn build_update_batch(
     groups: &[PromptGroup],
-    rule: Rule,
+    pipeline: &Pipeline,
     m: Option<usize>,
     mode: NormMode,
-    rng: &mut Rng,
-) -> Vec<SelectedRollout> {
+    run_seed: u64,
+    iter: u64,
+) -> Result<(Vec<SelectedRollout>, BatchSelectionStats)> {
     let mut out = Vec::new();
+    let mut stats = BatchSelectionStats::default();
     for (gi, group) in groups.iter().enumerate() {
-        let rewards = group.rewards();
-        let n = rewards.len();
+        let n = group.rollouts.len();
         if n == 0 {
             continue;
         }
-        let subset: Vec<usize> = match m {
-            Some(m) if m < n => rule.select(&rewards, m, rng),
-            _ => (0..n).collect(),
+        stats.groups += 1;
+        let rewards = group.rewards();
+        let (subset, diag) = match m {
+            Some(mm) => {
+                let ctx = SelectionContext::new(group, mm, run_seed, iter);
+                let sel = pipeline.select(&ctx)?;
+                (sel.kept, sel.diag)
+            }
+            None => {
+                let all: Vec<usize> = (0..n).collect();
+                let diag = SelectionDiag::for_kept(group, &all);
+                (all, diag)
+            }
         };
+        stats.tokens_kept += diag.tokens_kept;
+        stats.tokens_dropped += diag.tokens_dropped;
+        if subset.is_empty() {
+            stats.groups_dropped += 1;
+            continue;
+        }
         let advs = subset_advantages(&rewards, &subset, mode);
         for (ri, adv) in subset.into_iter().zip(advs) {
             out.push(SelectedRollout { group_idx: gi, rollout_idx: ri, advantage: adv });
         }
     }
-    out
+    Ok((out, stats))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tasks::{Split, TaskKind};
 
-    fn fake_group(rewards: &[f32]) -> PromptGroup {
-        let problem = TaskKind::Arith.generate(Split::Train, 0);
-        let rollouts = rewards
-            .iter()
-            .map(|&r| RolloutRecord {
-                tokens: vec![0; 8],
-                pad_len: 0,
-                gen_mask: vec![1.0; 4],
-                old_lp: vec![0.0; 4],
-                ref_lp: vec![0.0; 4],
-                gen_len: 4,
-                reward: RewardBreakdown { accuracy: 0.0, format: 0.0, tag_count: 0.0 },
-                total_reward: r,
-            })
-            .collect();
-        PromptGroup { problem, rollouts }
+    fn fake_group(problem_idx: u64, rewards: &[f32]) -> PromptGroup {
+        PromptGroup::synthetic(problem_idx, rewards, None)
+    }
+
+    fn max_variance() -> Pipeline {
+        Pipeline::parse_default("max_variance").unwrap()
     }
 
     #[test]
     fn selects_m_per_group_and_concatenates() {
-        let groups = vec![fake_group(&[0.0, 1.0, 2.0, 3.0]), fake_group(&[5.0, 5.0, 0.0, 1.0])];
-        let mut rng = Rng::seed_from_u64(0);
-        let batch = build_update_batch(&groups, Rule::MaxVariance, Some(2), NormMode::After, &mut rng);
+        let groups =
+            vec![fake_group(0, &[0.0, 1.0, 2.0, 3.0]), fake_group(1, &[5.0, 5.0, 0.0, 1.0])];
+        let (batch, stats) =
+            build_update_batch(&groups, &max_variance(), Some(2), NormMode::After, 0, 0).unwrap();
         assert_eq!(batch.len(), 4);
         assert!(batch.iter().take(2).all(|s| s.group_idx == 0));
         assert!(batch.iter().skip(2).all(|s| s.group_idx == 1));
         // max-variance with m=2 on [0,1,2,3] picks 0 and 3
         let picked: Vec<usize> = batch.iter().take(2).map(|s| s.rollout_idx).collect();
         assert!(picked.contains(&0) && picked.contains(&3));
+        assert_eq!(stats.groups, 2);
+        assert_eq!(stats.groups_dropped, 0);
+        assert_eq!(stats.tokens_kept, 16);
+        assert_eq!(stats.tokens_dropped, 16);
     }
 
     #[test]
     fn m_none_selects_all_with_group_normalization() {
-        let groups = vec![fake_group(&[1.0, 3.0])];
-        let mut rng = Rng::seed_from_u64(0);
-        let batch = build_update_batch(&groups, Rule::MaxVariance, None, NormMode::After, &mut rng);
+        let groups = vec![fake_group(0, &[1.0, 3.0])];
+        let (batch, stats) =
+            build_update_batch(&groups, &max_variance(), None, NormMode::After, 0, 0).unwrap();
         assert_eq!(batch.len(), 2);
         let sum: f32 = batch.iter().map(|s| s.advantage).sum();
         assert!(sum.abs() < 1e-4);
         assert!(batch[1].advantage > batch[0].advantage);
+        assert_eq!(stats.tokens_dropped, 0);
     }
 
     #[test]
     fn advantages_normalized_within_group_not_across() {
         // two groups with very different reward scales: each must be
         // standardized on its own
-        let groups = vec![fake_group(&[0.0, 1.0]), fake_group(&[100.0, 200.0])];
-        let mut rng = Rng::seed_from_u64(0);
-        let batch = build_update_batch(&groups, Rule::MaxVariance, None, NormMode::After, &mut rng);
+        let groups = vec![fake_group(0, &[0.0, 1.0]), fake_group(1, &[100.0, 200.0])];
+        let (batch, _) =
+            build_update_batch(&groups, &max_variance(), None, NormMode::After, 0, 0).unwrap();
         let g0: Vec<f32> = batch.iter().filter(|s| s.group_idx == 0).map(|s| s.advantage).collect();
         let g1: Vec<f32> = batch.iter().filter(|s| s.group_idx == 1).map(|s| s.advantage).collect();
         for (a, b) in g0.iter().zip(&g1) {
             assert!((a - b).abs() < 1e-3, "per-group standardization should equalize: {a} vs {b}");
         }
+    }
+
+    /// Satellite: stochastic selection is seeded per group from
+    /// `(run_seed, iter, prompt_id)` — permuting the group order must not
+    /// change what each prompt's group keeps.
+    #[test]
+    fn random_selection_is_group_order_independent() {
+        let a = fake_group(10, &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let b = fake_group(11, &[7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0, 0.0]);
+        let pipeline = Pipeline::parse_default("random").unwrap();
+        let kept_by_id = |groups: &[PromptGroup]| {
+            let (batch, _) =
+                build_update_batch(groups, &pipeline, Some(3), NormMode::After, 7, 5).unwrap();
+            let mut map: std::collections::BTreeMap<u64, Vec<usize>> = Default::default();
+            for s in batch {
+                map.entry(groups[s.group_idx].problem.id).or_default().push(s.rollout_idx);
+            }
+            map
+        };
+        let ab = kept_by_id(&[a.clone(), b.clone()]);
+        let ba = kept_by_id(&[b, a]);
+        assert_eq!(ab, ba, "selection must not depend on group iteration order");
+    }
+
+    /// Filter stages apply whenever `m` is set — including `m == n`,
+    /// where exact stages alone would keep everything.
+    #[test]
+    fn filters_apply_even_when_m_equals_n() {
+        let groups = vec![fake_group(0, &[2.0, 2.0, 2.0, 2.0]), fake_group(1, &[0.0, 1.0, 2.0, 3.0])];
+        let pipeline = Pipeline::parse_default("drop_zero_variance | max_variance").unwrap();
+        let (batch, stats) =
+            build_update_batch(&groups, &pipeline, Some(4), NormMode::After, 0, 0).unwrap();
+        assert_eq!(stats.groups_dropped, 1, "zero-signal group filtered at m == n");
+        assert_eq!(batch.len(), 4);
+        assert!(batch.iter().all(|s| s.group_idx == 1));
+    }
+
+    #[test]
+    fn zero_variance_groups_are_dropped_from_the_batch() {
+        let groups = vec![fake_group(0, &[2.0, 2.0, 2.0, 2.0]), fake_group(1, &[0.0, 1.0, 2.0, 3.0])];
+        let pipeline = Pipeline::parse_default("drop_zero_variance | max_variance").unwrap();
+        let (batch, stats) =
+            build_update_batch(&groups, &pipeline, Some(2), NormMode::After, 0, 0).unwrap();
+        assert_eq!(stats.groups, 2);
+        assert_eq!(stats.groups_dropped, 1);
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|s| s.group_idx == 1), "only the informative group trains");
+        assert_eq!(stats.tokens_kept, 8);
+        assert_eq!(stats.tokens_dropped, 24);
     }
 }

@@ -1,7 +1,9 @@
 //! The L3 coordination layer — the paper's system contribution.
 //!
-//! * [`downsample`] — the four down-sampling rules, incl. Algorithm 2
-//!   (max-variance in `O(n log n)`).
+//! * [`select`] — the pluggable rollout-selection subsystem: `Selector`
+//!   trait, spec registry, composable pipelines.
+//! * [`downsample`] — the numeric down-sampling kernels, incl. Algorithm 2
+//!   (max-variance in `O(n log n)`), which the built-in selectors wrap.
 //! * [`advantage`] — subset advantage normalization (§A.3 After/Before).
 //! * [`group`] — per-prompt rollout groups and update-batch assembly.
 //! * [`accum`] — the gradient-accumulation engine (what GRPO-GA pays for).
@@ -13,4 +15,5 @@ pub mod advantage;
 pub mod downsample;
 pub mod group;
 pub mod scheduler;
+pub mod select;
 pub mod worker;

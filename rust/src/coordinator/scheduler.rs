@@ -5,8 +5,9 @@
 //!
 //! 1. **Inference phase** — generate `n` rollouts per prompt (sharded over
 //!    the simulated workers), verify them with the rule-based reward model.
-//! 2. **Down-sample** — apply the configured rule within each prompt group
-//!    (`m = n` for the GRPO/GA baselines), normalize advantages (§A.3 mode).
+//! 2. **Select** — run the configured selector pipeline within each prompt
+//!    group (`m = n` for the GRPO/GA baselines), normalize advantages
+//!    (§A.3 mode), and record the per-iteration selection diagnostics.
 //! 3. **Policy-update phase** — pack the selected rollouts into fixed-size
 //!    micro-batches, run the `grad` artifact per micro-batch, accumulate
 //!    (the GA engine), all-reduce (simulated), apply fused AdamW.
@@ -18,6 +19,7 @@
 use crate::config::{AlgoKind, RunConfig};
 use crate::coordinator::accum::GradAccumulator;
 use crate::coordinator::group::{build_update_batch, PromptGroup};
+use crate::coordinator::select::Pipeline;
 use crate::eval;
 use crate::hwsim::SimClock;
 use crate::metrics::{EvalRow, IterRow, Recorder};
@@ -25,7 +27,6 @@ use crate::reward::RewardWeights;
 use crate::rollout::{generate_group, GenRequest};
 use crate::runtime::{params as ckpt, Engine, MicroBatch, ParamStore, TensorF, TensorI};
 use crate::tasks::{Split, TaskKind};
-use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::time::Instant;
 
@@ -63,7 +64,10 @@ pub struct Trainer {
     /// label). Used by the Fig. 7 generalization study (platinum /
     /// cross-task test sets).
     pub extra_evals: Vec<(TaskKind, Split, String)>,
-    rng: Rng,
+    /// The rollout-selection pipeline built from `algo.rule`. Stochastic
+    /// stages reseed per group from `(run_seed, iter, prompt_id)`, so no
+    /// trainer-level RNG is involved in selection.
+    pipeline: Pipeline,
     accum: GradAccumulator,
     prompt_cursor: u64,
     started: Instant,
@@ -112,6 +116,7 @@ impl Trainer {
         };
 
         let accum = GradAccumulator::new(store.len());
+        let pipeline = cfg.selector();
         Ok(Self {
             engine,
             cfg,
@@ -123,15 +128,11 @@ impl Trainer {
             recorder: Recorder::new(),
             task,
             extra_evals: Vec::new(),
-            rng: Rng::seed_from_u64(0xC0FFEE),
+            pipeline,
             accum,
             prompt_cursor: 0,
             started: Instant::now(),
         })
-    }
-
-    fn rng_reseed(&mut self) {
-        self.rng = Rng::seed_from_u64(self.cfg.run.seed ^ 0xC0FFEE);
     }
 
     /// The full-parameter vector used for rollouts/eval (base in LoRA mode).
@@ -251,8 +252,15 @@ impl Trainer {
         let avg_tokens = total_gen_tokens as f64 / rollouts_generated.max(1) as f64;
         let sim_inference = cfg.hwsim.inference_time(rollouts_generated, avg_tokens);
 
-        // ---- Phase 2: down-sample + advantages ---------------------------
-        let selected = build_update_batch(&groups, cfg.rule(), m, cfg.norm_mode(), &mut self.rng);
+        // ---- Phase 2: select + advantages --------------------------------
+        let (selected, sel_stats) = build_update_batch(
+            &groups,
+            &self.pipeline,
+            m,
+            cfg.norm_mode(),
+            cfg.run.seed,
+            iter as u64,
+        )?;
         let rollouts_trained = selected.len();
         let sel_rewards: Vec<f32> = selected
             .iter()
@@ -300,9 +308,13 @@ impl Trainer {
             kl_sum += out.kl as f64 * chunk.len() as f64;
         }
         let micro_steps = self.accum.micro_steps();
-        let sim_update = cfg
-            .hwsim
-            .update_time(rollouts_trained.max(1), self.engine.meta.is_lora());
+        // an iteration whose selection dropped every group (all groups
+        // zero-signal) performs no update and must not be charged for one
+        let sim_update = if rollouts_trained > 0 {
+            cfg.hwsim.update_time(rollouts_trained, self.engine.meta.is_lora())
+        } else {
+            0.0
+        };
 
         if rollouts_trained > 0 {
             let grads = self.accum.mean(rollouts_trained);
@@ -337,6 +349,9 @@ impl Trainer {
             train_acc: stats.train_acc,
             completion_len: stats.completion_len,
             sel_variance,
+            sel_tokens_kept: sel_stats.tokens_kept,
+            sel_tokens_dropped: sel_stats.tokens_dropped,
+            sel_groups_dropped: sel_stats.groups_dropped,
             loss: stats.loss,
             clip_frac: stats.clip_frac,
             kl: stats.kl,
@@ -386,7 +401,6 @@ impl Trainer {
     /// Full run: SFT warm-up (if configured), KL snapshot, RL iterations
     /// with periodic eval, CSV dump, optional checkpoint.
     pub fn run(&mut self) -> Result<()> {
-        self.rng_reseed();
         self.sft_warmup()?;
         self.snapshot_reference();
         let iters = self.cfg.run.iterations;

@@ -1,0 +1,242 @@
+//! Context-aware filter stages motivated by the post-PODS literature.
+//!
+//! * [`DropZeroVariance`] — filter out whole groups whose rewards carry no
+//!   learning signal (all equal ⇒ every GRPO advantage is ~0), following
+//!   *"RLVR without Ineffective Samples: Group Prioritized Off-Policy
+//!   Optimization for LLM Reasoning"*: all-correct / all-wrong groups are
+//!   ineffective samples and their update compute is wasted.
+//! * [`Prune`] — token-cost-aware pruning of over-long rollouts, following
+//!   *"Prune as You Generate: Online Rollout Pruning for Faster and Better
+//!   RLVR"*: the longest tail of a group dominates the update-phase token
+//!   bill (and padding) while contributing the least reward signal per
+//!   token.
+//!
+//! Both are [`StageKind::Filter`]s: they shrink the candidate set and are
+//! typically composed before an exact rule, e.g.
+//! `"drop_zero_variance | max_variance"` or
+//! `"prune(max_tokens=4096) | percentile"`.
+
+use super::{SelectionContext, Selector, SpecArgs, StageKind};
+use crate::coordinator::downsample::subset_variance;
+use anyhow::{bail, Result};
+
+/// Drop the whole group when the candidate rewards are (near-)constant.
+///
+/// Returns the candidates unchanged when their population reward variance
+/// exceeds `eps`, and an empty set (group dropped from the update batch)
+/// otherwise. Groups a later exact stage would select from anyway are
+/// untouched — this stage only decides group-level life or death.
+#[derive(Debug, Clone, Copy)]
+pub struct DropZeroVariance {
+    /// Variance threshold below which the group counts as zero-signal.
+    pub eps: f64,
+}
+
+pub const DEFAULT_ZERO_VARIANCE_EPS: f64 = 1e-6;
+
+impl Selector for DropZeroVariance {
+    fn name(&self) -> &str {
+        "drop_zero_variance"
+    }
+    fn kind(&self) -> StageKind {
+        StageKind::Filter
+    }
+    fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>> {
+        let rewards = ctx.rewards();
+        if subset_variance(&rewards, candidates) <= self.eps {
+            Ok(Vec::new())
+        } else {
+            Ok(candidates.to_vec())
+        }
+    }
+}
+
+pub fn drop_zero_variance_factory(args: &SpecArgs) -> Result<Box<dyn Selector>> {
+    args.expect_known(&["eps"])?;
+    let eps = args.f64("eps")?.unwrap_or(DEFAULT_ZERO_VARIANCE_EPS);
+    if eps.is_nan() || eps < 0.0 {
+        bail!("drop_zero_variance: eps must be >= 0 (got {eps})");
+    }
+    Ok(Box::new(DropZeroVariance { eps }))
+}
+
+/// Token-budget / length-aware pruning of candidates.
+///
+/// Three composable criteria (any combination; each omitted one is off):
+///
+/// * `max_tokens=K` — drop rollouts whose generated length exceeds `K`
+///   tokens (absolute cap).
+/// * `quantile=Q` — drop rollouts longer than the nearest-rank `Q`-quantile
+///   of the candidate lengths (scale-free cap; `0 < Q <= 1`).
+/// * `budget=B` — keep rollouts shortest-first (ties by index) while the
+///   cumulative generated-token count stays within `B` (total update-phase
+///   token budget).
+///
+/// With no arguments, defaults to `quantile=0.75` (drop the longest
+/// quartile). If every candidate violates the caps, the single shortest
+/// one is kept instead of starving the group — a length cap should shape
+/// the update, not silently drop prompts.
+#[derive(Debug, Clone, Copy)]
+pub struct Prune {
+    pub max_tokens: Option<usize>,
+    pub quantile: Option<f64>,
+    pub budget: Option<usize>,
+}
+
+pub const DEFAULT_PRUNE_QUANTILE: f64 = 0.75;
+
+impl Selector for Prune {
+    fn name(&self) -> &str {
+        "prune"
+    }
+    fn kind(&self) -> StageKind {
+        StageKind::Filter
+    }
+    fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>> {
+        let lens = ctx.gen_lens();
+        // effective per-rollout cap: the tightest of the provided caps
+        let mut cap = self.max_tokens;
+        if let Some(q) = self.quantile {
+            let mut sorted: Vec<usize> = candidates.iter().map(|&i| lens[i]).collect();
+            sorted.sort_unstable();
+            // nearest-rank quantile over the candidate lengths
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let qcap = sorted[rank - 1];
+            cap = Some(cap.map_or(qcap, |c| c.min(qcap)));
+        }
+        let mut kept: Vec<usize> = match cap {
+            Some(c) => candidates.iter().copied().filter(|&i| lens[i] <= c).collect(),
+            None => candidates.to_vec(),
+        };
+        if let Some(budget) = self.budget {
+            // admit shortest-first (ties by index), then restore candidate order
+            let mut by_len: Vec<usize> = kept.clone();
+            by_len.sort_by_key(|&i| (lens[i], i));
+            let mut admitted = std::collections::HashSet::new();
+            let mut spent = 0usize;
+            for i in by_len {
+                if spent + lens[i] > budget {
+                    continue;
+                }
+                spent += lens[i];
+                admitted.insert(i);
+            }
+            kept.retain(|i| admitted.contains(i));
+        }
+        if kept.is_empty() && !candidates.is_empty() {
+            // guard: never starve the group on a length cap alone
+            let shortest =
+                candidates.iter().copied().min_by_key(|&i| (lens[i], i)).expect("non-empty");
+            kept.push(shortest);
+        }
+        Ok(kept)
+    }
+}
+
+pub fn prune_factory(args: &SpecArgs) -> Result<Box<dyn Selector>> {
+    args.expect_known(&["max_tokens", "quantile", "budget"])?;
+    let max_tokens = args.usize("max_tokens")?;
+    let quantile = args.f64("quantile")?;
+    let budget = args.usize("budget")?;
+    if let Some(q) = quantile {
+        if q.is_nan() || q <= 0.0 || q > 1.0 {
+            bail!("prune: quantile must be in (0, 1] (got {q})");
+        }
+    }
+    let quantile = if max_tokens.is_none() && quantile.is_none() && budget.is_none() {
+        Some(DEFAULT_PRUNE_QUANTILE)
+    } else {
+        quantile
+    };
+    Ok(Box::new(Prune { max_tokens, quantile, budget }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::fake_group;
+    use super::super::{Pipeline, SelectionContext};
+
+    fn ctx_m(m: usize) -> (usize, u64, u64) {
+        (m, 0, 0)
+    }
+
+    #[test]
+    fn zero_variance_group_is_dropped() {
+        let flat = fake_group(0, &[2.0, 2.0, 2.0, 2.0], None);
+        let p = Pipeline::parse_default("drop_zero_variance | max_variance").unwrap();
+        let (m, s, i) = ctx_m(2);
+        let sel = p.select(&SelectionContext::new(&flat, m, s, i)).unwrap();
+        assert!(sel.kept.is_empty(), "all-equal rewards carry no GRPO signal");
+        assert_eq!(sel.diag.kept, 0);
+        assert_eq!(sel.diag.tokens_dropped, 16);
+
+        let mixed = fake_group(0, &[2.0, 2.0, 0.0, 2.0], None);
+        let sel = p.select(&SelectionContext::new(&mixed, m, s, i)).unwrap();
+        assert_eq!(sel.kept.len(), 2, "informative group passes through");
+    }
+
+    #[test]
+    fn zero_variance_eps_is_tunable() {
+        // variance of [0, 0.01, 0, 0.01] is 2.5e-5: dropped at eps=1e-3,
+        // kept at the default 1e-6
+        let g = fake_group(0, &[0.0, 0.01, 0.0, 0.01], None);
+        let loose = Pipeline::parse_default("drop_zero_variance(eps=1e-3) | first").unwrap();
+        let tight = Pipeline::parse_default("drop_zero_variance | first").unwrap();
+        let ctx = SelectionContext::new(&g, 2, 0, 0);
+        assert!(loose.select(&ctx).unwrap().kept.is_empty());
+        assert_eq!(tight.select(&ctx).unwrap().kept.len(), 2);
+    }
+
+    #[test]
+    fn prune_max_tokens_drops_long_rollouts() {
+        let g = fake_group(0, &[3.0, 0.0, 2.0, 1.0], Some(&[10, 50, 20, 40]));
+        let p = Pipeline::parse_default("prune(max_tokens=32) | max_reward").unwrap();
+        let sel = p.select(&SelectionContext::new(&g, 2, 0, 0)).unwrap();
+        let mut kept = sel.kept.clone();
+        kept.sort_unstable();
+        // candidates after prune: {0, 2}; max_reward keeps both (m=2)
+        assert_eq!(kept, vec![0, 2]);
+        assert_eq!(sel.diag.tokens_kept, 30);
+        assert_eq!(sel.diag.tokens_dropped, 90);
+    }
+
+    #[test]
+    fn prune_quantile_drops_longest_tail() {
+        let g = fake_group(0, &[1.0, 2.0, 3.0, 4.0], Some(&[10, 20, 30, 1000]));
+        let p = Pipeline::parse_default("prune(quantile=0.75) | first").unwrap();
+        let sel = p.select(&SelectionContext::new(&g, 4, 0, 0)).unwrap();
+        assert_eq!(sel.kept, vec![0, 1, 2], "75th-percentile cap cuts the outlier");
+    }
+
+    #[test]
+    fn prune_budget_admits_shortest_first() {
+        let g = fake_group(0, &[1.0, 2.0, 3.0, 4.0], Some(&[30, 10, 20, 25]));
+        let p = Pipeline::parse_default("prune(budget=55) | first").unwrap();
+        let sel = p.select(&SelectionContext::new(&g, 4, 0, 0)).unwrap();
+        // shortest-first admission: 10 + 20 + 25 = 55 fits; 30 does not
+        assert_eq!(sel.kept, vec![1, 2, 3], "candidate order restored after admission");
+    }
+
+    #[test]
+    fn prune_never_starves_a_group() {
+        let g = fake_group(0, &[1.0, 2.0], Some(&[80, 90]));
+        let p = Pipeline::parse_default("prune(max_tokens=10) | max_variance").unwrap();
+        let sel = p.select(&SelectionContext::new(&g, 1, 0, 0)).unwrap();
+        assert_eq!(sel.kept, vec![0], "shortest survivor kept despite the cap");
+    }
+
+    #[test]
+    fn prune_default_is_quantile() {
+        let g = fake_group(0, &[1.0; 8], Some(&[1, 2, 3, 4, 5, 6, 7, 100]));
+        let p = Pipeline::parse_default("prune | first").unwrap();
+        let sel = p.select(&SelectionContext::new(&g, 8, 0, 0)).unwrap();
+        assert_eq!(sel.kept.len(), 6, "default quantile=0.75 keeps the shortest 6");
+    }
+
+    #[test]
+    fn prune_rejects_bad_quantile() {
+        assert!(Pipeline::parse_default("prune(quantile=0)").is_err());
+        assert!(Pipeline::parse_default("prune(quantile=1.5)").is_err());
+        assert!(Pipeline::parse_default("drop_zero_variance(eps=-1)").is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! The paper's four down-sampling rules as selector stages, plus the
+//! `first` truncation baseline.
+//!
+//! Each stage runs the corresponding numeric kernel from
+//! [`crate::coordinator::downsample`] over the *candidate subset* and maps
+//! the result back to original rollout indices. With the full candidate
+//! set (a one-stage pipeline) the output is identical to the seed
+//! implementation — golden-tested in `rust/tests/selector_golden.rs`.
+//! `random` draws from the context's per-group RNG
+//! ([`SelectionContext::rng`]), so its choice depends only on
+//! `(run_seed, iter, prompt_id)` — not on how many groups were selected
+//! before it.
+
+use super::{SelectionContext, Selector, SpecArgs, StageKind};
+use crate::coordinator::downsample as ds;
+use anyhow::Result;
+
+/// Target size for a stage: the context `m` clamped to the candidates.
+fn target(ctx: &SelectionContext, candidates: &[usize]) -> usize {
+    ctx.m.min(candidates.len())
+}
+
+/// Rewards of the candidate subset, candidate order.
+fn sub_rewards(ctx: &SelectionContext, candidates: &[usize]) -> Vec<f32> {
+    candidates.iter().map(|&i| ctx.group.rollouts[i].total_reward).collect()
+}
+
+/// Map kernel output (positions into the candidate slice) back to rollout
+/// indices, preserving the kernel's output order.
+fn map_back(candidates: &[usize], picked: Vec<usize>) -> Vec<usize> {
+    picked.into_iter().map(|p| candidates[p]).collect()
+}
+
+macro_rules! no_arg_factory {
+    ($fname:ident, $ty:ident) => {
+        pub fn $fname(args: &SpecArgs) -> Result<Box<dyn Selector>> {
+            args.expect_known(&[])?;
+            Ok(Box::new($ty))
+        }
+    };
+}
+
+/// `max_variance` — Algorithm 2: the variance-maximising `m`-subset.
+#[derive(Debug, Clone, Copy)]
+pub struct MaxVariance;
+
+impl Selector for MaxVariance {
+    fn name(&self) -> &str {
+        "max_variance"
+    }
+    fn kind(&self) -> StageKind {
+        StageKind::Exact
+    }
+    fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>> {
+        let m = target(ctx, candidates);
+        if m == 0 {
+            return Ok(Vec::new());
+        }
+        Ok(map_back(candidates, ds::max_variance(&sub_rewards(ctx, candidates), m)?))
+    }
+}
+
+no_arg_factory!(max_variance_factory, MaxVariance);
+
+/// `max_reward` — the `m` highest rewards (§3.2, shown harmful in Fig. 5).
+#[derive(Debug, Clone, Copy)]
+pub struct MaxReward;
+
+impl Selector for MaxReward {
+    fn name(&self) -> &str {
+        "max_reward"
+    }
+    fn kind(&self) -> StageKind {
+        StageKind::Exact
+    }
+    fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>> {
+        let m = target(ctx, candidates);
+        if m == 0 {
+            return Ok(Vec::new());
+        }
+        Ok(map_back(candidates, ds::max_reward(&sub_rewards(ctx, candidates), m)?))
+    }
+}
+
+no_arg_factory!(max_reward_factory, MaxReward);
+
+/// `random` — uniform `m`-subset without replacement, drawn from the
+/// per-group deterministic RNG.
+#[derive(Debug, Clone, Copy)]
+pub struct Random;
+
+impl Selector for Random {
+    fn name(&self) -> &str {
+        "random"
+    }
+    fn kind(&self) -> StageKind {
+        StageKind::Exact
+    }
+    fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>> {
+        let m = target(ctx, candidates);
+        if m == 0 {
+            return Ok(Vec::new());
+        }
+        let mut rng = ctx.rng();
+        Ok(map_back(candidates, ds::random(candidates.len(), m, &mut rng)?))
+    }
+}
+
+no_arg_factory!(random_factory, Random);
+
+/// `percentile` — the `(i+0.5)/m` quantiles of the reward distribution.
+#[derive(Debug, Clone, Copy)]
+pub struct Percentile;
+
+impl Selector for Percentile {
+    fn name(&self) -> &str {
+        "percentile"
+    }
+    fn kind(&self) -> StageKind {
+        StageKind::Exact
+    }
+    fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>> {
+        let m = target(ctx, candidates);
+        if m == 0 {
+            return Ok(Vec::new());
+        }
+        Ok(map_back(candidates, ds::percentile(&sub_rewards(ctx, candidates), m)?))
+    }
+}
+
+no_arg_factory!(percentile_factory, Percentile);
+
+/// `first` — keep the first `m` candidates in index order: the
+/// "no selection" baseline (equivalent to truncating generation at `m`),
+/// and the explicit form of the pipeline's trailing clamp.
+#[derive(Debug, Clone, Copy)]
+pub struct First;
+
+impl Selector for First {
+    fn name(&self) -> &str {
+        "first"
+    }
+    fn kind(&self) -> StageKind {
+        StageKind::Exact
+    }
+    fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>> {
+        Ok(candidates[..target(ctx, candidates)].to_vec())
+    }
+}
+
+no_arg_factory!(first_factory, First);
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::fake_group;
+    use super::super::{Pipeline, SelectionContext};
+    use crate::coordinator::downsample as ds;
+    use crate::util::prop::{for_cases, vec_f32};
+
+    /// As pipeline stages over a filtered candidate set, the legacy
+    /// kernels see only the surviving rewards: a stage fed the prefix
+    /// candidates equals the kernel run on the prefix rewards.
+    #[test]
+    fn stages_operate_on_the_candidate_subset() {
+        use super::super::Selector;
+        for_cases(150, |rng| {
+            let n = rng.gen_range_inclusive(2, 20) as usize;
+            let rewards = vec_f32(rng, n, -2.0, 2.0);
+            let keep = rng.gen_range_inclusive(1, n as i64) as usize;
+            let m = rng.gen_range_inclusive(1, keep as i64) as usize;
+            let g = fake_group(0, &rewards, None);
+            let ctx = SelectionContext::new(&g, m, 0, 0);
+            let candidates: Vec<usize> = (0..keep).collect();
+            let prefix = &rewards[..keep];
+            let got = super::MaxVariance.select(&ctx, &candidates).unwrap();
+            assert_eq!(got, ds::max_variance(prefix, m).unwrap());
+            let got = super::MaxReward.select(&ctx, &candidates).unwrap();
+            assert_eq!(got, ds::max_reward(prefix, m).unwrap());
+            let got = super::Percentile.select(&ctx, &candidates).unwrap();
+            assert_eq!(got, ds::percentile(prefix, m).unwrap());
+        });
+    }
+
+    #[test]
+    fn random_is_replayable_from_context_only() {
+        let g = fake_group(3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], None);
+        let p = Pipeline::parse_default("random").unwrap();
+        let a = p.select(&SelectionContext::new(&g, 3, 11, 4)).unwrap().kept;
+        let b = p.select(&SelectionContext::new(&g, 3, 11, 4)).unwrap().kept;
+        assert_eq!(a, b, "same (seed, iter, prompt) must replay identically");
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn first_keeps_prefix() {
+        let g = fake_group(0, &[5.0, 1.0, 4.0, 2.0], None);
+        let p = Pipeline::parse_default("first").unwrap();
+        assert_eq!(p.select(&SelectionContext::new(&g, 2, 0, 0)).unwrap().kept, vec![0, 1]);
+    }
+}

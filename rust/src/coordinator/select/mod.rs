@@ -1,0 +1,476 @@
+//! Pluggable rollout-selection subsystem — the open successor of the old
+//! closed `Rule` enum.
+//!
+//! PODS' core contribution is *which rollouts to train on*. The seed tree
+//! hard-coded that decision as an enum over bare reward scalars; every new
+//! selection idea (token-cost-aware pruning, zero-signal-group filtering,
+//! …) meant editing the enum, the batch assembler and every experiment.
+//! This module makes selection a first-class API instead:
+//!
+//! * [`SelectionContext`] — what a selector may look at: the full
+//!   [`PromptGroup`] (rewards, generation lengths, log-probs), the target
+//!   update size `m`, the iteration number, and a **per-group
+//!   deterministic RNG** derived from `(run_seed, iter, prompt_id)` so
+//!   stochastic selectors replay identically regardless of the order in
+//!   which groups are processed.
+//! * [`Selector`] — one selection stage. [`StageKind::Exact`] stages cut
+//!   the candidate set to exactly `min(m, candidates)`; [`StageKind::Filter`]
+//!   stages may drop any number of candidates (including all of them,
+//!   which drops the whole group from the update).
+//! * [`Pipeline`] — a `|`-composed chain of stages parsed from a config
+//!   spec string, e.g. `"drop_zero_variance | max_variance"` or
+//!   `"prune(max_tokens=4096) | percentile"`. See [`spec`] for the
+//!   grammar and the [`Registry`] that maps names to factories.
+//! * [`Selection`] — the kept indices plus per-group
+//!   [`SelectionDiag`] diagnostics (achieved reward variance, token
+//!   budget spent/saved) that the metrics layer records every iteration.
+//!
+//! The four legacy rules (`max_variance`, `max_reward`, `random`,
+//! `percentile`) are registered as built-in selectors and produce
+//! selections identical to the seed implementation (golden-tested in
+//! `rust/tests/selector_golden.rs`); the numeric kernels themselves still
+//! live in [`crate::coordinator::downsample`].
+
+pub mod filters;
+pub mod legacy;
+pub mod spec;
+
+pub use spec::{default_registry, Registry, SpecArgs};
+
+use crate::coordinator::downsample::subset_variance;
+use crate::coordinator::group::PromptGroup;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Everything a selector may condition on for one prompt group.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectionContext<'a> {
+    /// The full group: rewards, generation lengths, behaviour log-probs.
+    pub group: &'a PromptGroup,
+    /// Target update size (the paper's `m`). Stages clamp to the candidate
+    /// count, so `m > n` selects everything rather than erroring.
+    pub m: usize,
+    /// Run seed — one axis of the per-group RNG derivation.
+    pub run_seed: u64,
+    /// Training iteration — second axis of the per-group RNG derivation.
+    pub iter: u64,
+    /// Position of the current stage in its pipeline (set by
+    /// [`Pipeline::select`]). Folded into [`Self::rng`] so two stochastic
+    /// stages in one pipeline draw decorrelated streams; stage 0 keeps
+    /// the bare `group_seed`, matching the documented seeding.
+    pub stage: u64,
+}
+
+impl<'a> SelectionContext<'a> {
+    pub fn new(group: &'a PromptGroup, m: usize, run_seed: u64, iter: u64) -> Self {
+        Self { group, m, run_seed, iter, stage: 0 }
+    }
+
+    /// Number of rollouts in the group (the paper's `n`).
+    pub fn n(&self) -> usize {
+        self.group.rollouts.len()
+    }
+
+    /// Deterministic id of the group's prompt.
+    pub fn prompt_id(&self) -> u64 {
+        self.group.problem.id
+    }
+
+    /// Total rewards, one per rollout.
+    pub fn rewards(&self) -> Vec<f32> {
+        self.group.rewards()
+    }
+
+    /// Generated lengths (tokens incl. EOS), one per rollout.
+    pub fn gen_lens(&self) -> Vec<usize> {
+        self.group.rollouts.iter().map(|r| r.gen_len.max(0) as usize).collect()
+    }
+
+    /// Per-group deterministic RNG, seeded from
+    /// `(run_seed, iter, prompt_id)` — plus the stage position for stages
+    /// past the first, so stochastic stages in one pipeline are mutually
+    /// decorrelated. Two calls return identically-seeded generators, and
+    /// the stream does not depend on how many groups were processed
+    /// before this one — stochastic selections are replayable independent
+    /// of group iteration order.
+    pub fn rng(&self) -> Rng {
+        let mut seed = group_seed(self.run_seed, self.iter, self.prompt_id());
+        if self.stage > 0 {
+            seed = group_seed(seed, self.stage, 0x57A6E);
+        }
+        Rng::seed_from_u64(seed)
+    }
+}
+
+/// Deterministic per-group selection seed (splitmix64-style finalizer over
+/// the three axes plus a domain salt so selection never shares a stream
+/// with rollout sampling).
+pub fn group_seed(run_seed: u64, iter: u64, prompt_id: u64) -> u64 {
+    let mut z = run_seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(iter.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        .wrapping_add(prompt_id.wrapping_mul(0x94D0_49BB_1331_11EB))
+        .wrapping_add(0x5E1E_C70A_0000_0001); // selection-domain salt
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// What a stage guarantees about its output size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// May drop any number of candidates (including all — dropping the
+    /// whole group); never guarantees reaching `m`.
+    Filter,
+    /// Returns exactly `min(m, candidates.len())` indices.
+    Exact,
+}
+
+/// One selection stage. Implementations must return a subset of
+/// `candidates` (distinct, in-range indices into `ctx.group.rollouts`);
+/// the [`Pipeline`] validates this after every stage.
+pub trait Selector: std::fmt::Debug + Send + Sync {
+    /// Registry name (what the spec grammar calls this stage).
+    fn name(&self) -> &str;
+
+    /// Output-size contract; see [`StageKind`].
+    fn kind(&self) -> StageKind;
+
+    /// Reduce `candidates` to the indices to keep. `candidates` is always
+    /// distinct and in-range; the first stage of a pipeline receives
+    /// `0..n`.
+    fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>>;
+}
+
+/// Per-group selection diagnostics, recorded every iteration.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SelectionDiag {
+    /// Rollouts the pipeline saw (the group's `n`).
+    pub candidates: usize,
+    /// Rollouts kept for the update.
+    pub kept: usize,
+    /// Mean total reward of the kept rollouts.
+    pub reward_mean: f64,
+    /// Population reward variance of the kept rollouts — the quantity
+    /// Algorithm 2 maximises.
+    pub reward_variance: f64,
+    /// Generated tokens in the kept rollouts (update-phase token budget).
+    pub tokens_kept: usize,
+    /// Generated tokens in the dropped rollouts (inference spend that the
+    /// update phase does not pay for again).
+    pub tokens_dropped: usize,
+}
+
+impl SelectionDiag {
+    /// Compute diagnostics for `kept` indices of `group`.
+    pub fn for_kept(group: &PromptGroup, kept: &[usize]) -> Self {
+        let rewards = group.rewards();
+        let total_tokens: usize =
+            group.rollouts.iter().map(|r| r.gen_len.max(0) as usize).sum();
+        let tokens_kept: usize =
+            kept.iter().map(|&i| group.rollouts[i].gen_len.max(0) as usize).sum();
+        let reward_mean = if kept.is_empty() {
+            0.0
+        } else {
+            kept.iter().map(|&i| rewards[i] as f64).sum::<f64>() / kept.len() as f64
+        };
+        Self {
+            candidates: group.rollouts.len(),
+            kept: kept.len(),
+            reward_mean,
+            reward_variance: subset_variance(&rewards, kept),
+            tokens_kept,
+            tokens_dropped: total_tokens - tokens_kept,
+        }
+    }
+}
+
+/// Result of running a pipeline on one group.
+#[derive(Debug, Clone, Default)]
+pub struct Selection {
+    /// Indices into `group.rollouts` to train on. Order is
+    /// selector-defined (e.g. `max_variance` returns the low block then
+    /// the high block); empty means the group is dropped from the update.
+    pub kept: Vec<usize>,
+    pub diag: SelectionDiag,
+}
+
+/// A `|`-composed chain of selection stages.
+///
+/// Stages run left to right; each receives the survivors of the previous
+/// one. After the last stage the kept set is clamped to `m` by truncation
+/// in stage-output order (only reachable when the final stage is a
+/// [`StageKind::Filter`] — `Exact` stages already cut to `min(m, ·)`).
+#[derive(Debug)]
+pub struct Pipeline {
+    spec: String,
+    stages: Vec<Box<dyn Selector>>,
+}
+
+impl Pipeline {
+    /// Parse a spec string against a registry. Grammar in [`spec`].
+    pub fn parse(text: &str, registry: &Registry) -> Result<Self> {
+        let stages = registry.parse_pipeline(text)?;
+        Ok(Self { spec: text.trim().to_string(), stages })
+    }
+
+    /// Parse against the built-in [`default_registry`].
+    pub fn parse_default(text: &str) -> Result<Self> {
+        Self::parse(text, default_registry())
+    }
+
+    /// Build directly from stages (for programmatic composition).
+    pub fn from_stages(spec: impl Into<String>, stages: Vec<Box<dyn Selector>>) -> Result<Self> {
+        if stages.is_empty() {
+            bail!("selector pipeline needs at least one stage");
+        }
+        Ok(Self { spec: spec.into(), stages })
+    }
+
+    /// The spec string this pipeline was parsed from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Stage names, pipeline order.
+    pub fn stage_names(&self) -> Vec<&str> {
+        self.stages.iter().map(|s| s.name()).collect()
+    }
+
+    /// Run the pipeline over the whole group.
+    ///
+    /// Degenerate targets are clamped, not errors: `m == 0` yields an
+    /// empty selection, `m >= n` lets `Exact` stages keep everything.
+    pub fn select(&self, ctx: &SelectionContext) -> Result<Selection> {
+        let n = ctx.n();
+        let mut kept: Vec<usize> = (0..n).collect();
+        if ctx.m == 0 {
+            kept.clear();
+        }
+        for (si, stage) in self.stages.iter().enumerate() {
+            if kept.is_empty() {
+                break;
+            }
+            let stage_ctx = SelectionContext { stage: si as u64, ..*ctx };
+            let next = stage.select(&stage_ctx, &kept)?;
+            check_stage_output(stage.name(), n, &kept, &next)?;
+            kept = next;
+        }
+        kept.truncate(ctx.m);
+        Ok(Selection { diag: SelectionDiag::for_kept(ctx.group, &kept), kept })
+    }
+}
+
+/// Validate a stage's output: a distinct subset of the candidates it was
+/// given (guards registry-loaded custom selectors).
+fn check_stage_output(stage: &str, n: usize, prev: &[usize], out: &[usize]) -> Result<()> {
+    let mut allowed = vec![false; n];
+    for &i in prev {
+        allowed[i] = true;
+    }
+    for &i in out {
+        if i >= n {
+            bail!("selector {stage:?} returned out-of-range index {i} (n={n})");
+        }
+        if !allowed[i] {
+            bail!("selector {stage:?} returned index {i} twice or outside its candidate set");
+        }
+        allowed[i] = false; // consumed: also catches duplicates
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::coordinator::group::PromptGroup;
+
+    /// Synthetic group: rewards plus (optionally) per-rollout gen lengths.
+    pub fn fake_group(problem_idx: u64, rewards: &[f32], lens: Option<&[i32]>) -> PromptGroup {
+        PromptGroup::synthetic(problem_idx, rewards, lens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::fake_group;
+    use super::*;
+    use crate::util::prop::{for_cases, vec_f32};
+
+    #[test]
+    fn group_seed_is_deterministic_and_decorrelated() {
+        assert_eq!(group_seed(1, 2, 3), group_seed(1, 2, 3));
+        let seeds = [
+            group_seed(0, 0, 0),
+            group_seed(1, 0, 0),
+            group_seed(0, 1, 0),
+            group_seed(0, 0, 1),
+        ];
+        let set: std::collections::HashSet<u64> = seeds.iter().copied().collect();
+        assert_eq!(set.len(), seeds.len(), "seed collisions: {seeds:?}");
+    }
+
+    #[test]
+    fn context_rng_ignores_group_order() {
+        let a = fake_group(0, &[1.0, 2.0], None);
+        let b = fake_group(1, &[3.0, 4.0], None);
+        let ra = SelectionContext::new(&a, 1, 7, 5).rng().next_u64();
+        // processing b in between must not perturb a's stream
+        let _ = SelectionContext::new(&b, 1, 7, 5).rng().next_u64();
+        let ra2 = SelectionContext::new(&a, 1, 7, 5).rng().next_u64();
+        assert_eq!(ra, ra2);
+    }
+
+    #[test]
+    fn later_stages_draw_decorrelated_streams() {
+        let g = fake_group(0, &[1.0, 2.0], None);
+        let base = SelectionContext::new(&g, 1, 7, 5);
+        let s1 = SelectionContext { stage: 1, ..base };
+        let s2 = SelectionContext { stage: 2, ..base };
+        let (r0, r1, r2) = (base.rng().next_u64(), s1.rng().next_u64(), s2.rng().next_u64());
+        assert_ne!(r0, r1, "stage 1 must not replay stage 0's stream");
+        assert_ne!(r1, r2);
+        // stage 0 keeps the bare group seed (golden-tested seeding)
+        assert_eq!(r0, crate::util::rng::Rng::seed_from_u64(group_seed(7, 5, g.problem.id)).next_u64());
+    }
+
+    #[test]
+    fn pipeline_m_zero_is_empty_and_m_above_n_keeps_all() {
+        let g = fake_group(0, &[1.0, 3.0, 2.0], None);
+        let p = Pipeline::parse_default("max_variance").unwrap();
+        let none = p.select(&SelectionContext::new(&g, 0, 0, 0)).unwrap();
+        assert!(none.kept.is_empty());
+        assert_eq!(none.diag.kept, 0);
+        let all = p.select(&SelectionContext::new(&g, 10, 0, 0)).unwrap();
+        let mut kept = all.kept.clone();
+        kept.sort_unstable();
+        assert_eq!(kept, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn filter_final_pipeline_is_clamped_to_m() {
+        // drop_zero_variance keeps everything on a non-degenerate group;
+        // the pipeline clamp then truncates to m in candidate order.
+        let g = fake_group(0, &[1.0, 2.0, 3.0, 4.0], None);
+        let p = Pipeline::parse_default("drop_zero_variance").unwrap();
+        let sel = p.select(&SelectionContext::new(&g, 2, 0, 0)).unwrap();
+        assert_eq!(sel.kept, vec![0, 1]);
+        assert_eq!(sel.diag.candidates, 4);
+        assert_eq!(sel.diag.kept, 2);
+    }
+
+    #[test]
+    fn diag_accounts_tokens_and_variance() {
+        let g = fake_group(0, &[0.0, 1.0, 2.0, 3.0], Some(&[10, 20, 30, 40]));
+        let p = Pipeline::parse_default("max_variance").unwrap();
+        let sel = p.select(&SelectionContext::new(&g, 2, 0, 0)).unwrap();
+        // m=2 on [0,1,2,3] picks the extremes 0 and 3
+        let mut kept = sel.kept.clone();
+        kept.sort_unstable();
+        assert_eq!(kept, vec![0, 3]);
+        assert_eq!(sel.diag.tokens_kept, 50);
+        assert_eq!(sel.diag.tokens_dropped, 50);
+        assert!((sel.diag.reward_mean - 1.5).abs() < 1e-12);
+        assert!((sel.diag.reward_variance - 2.25).abs() < 1e-12);
+    }
+
+    /// Satellite invariant: every registered selector, run as a one-stage
+    /// pipeline, returns distinct in-range indices; `Exact` stages return
+    /// exactly `min(m, n)` of them.
+    #[test]
+    fn every_registered_selector_returns_valid_subsets() {
+        let reg = default_registry();
+        for_cases(120, |rng| {
+            let n = rng.gen_range_inclusive(1, 24) as usize;
+            let rewards = vec_f32(rng, n, -3.0, 3.0);
+            let lens: Vec<i32> = (0..n).map(|_| rng.gen_range_inclusive(1, 64) as i32).collect();
+            let g = fake_group(rng.next_u64() % 1000, &rewards, Some(&lens));
+            let m = rng.gen_range_inclusive(1, n as i64) as usize;
+            let ctx = SelectionContext::new(&g, m, rng.next_u64(), rng.next_u64());
+            for name in reg.names() {
+                let stage = reg.build_stage(name).unwrap();
+                let kind = stage.kind();
+                let p = Pipeline::from_stages(name.to_string(), vec![stage]).unwrap();
+                let sel = p.select(&ctx).unwrap();
+                let set: std::collections::HashSet<usize> = sel.kept.iter().copied().collect();
+                assert_eq!(set.len(), sel.kept.len(), "{name}: duplicates {:?}", sel.kept);
+                assert!(sel.kept.iter().all(|&i| i < n), "{name}: oob {:?}", sel.kept);
+                match kind {
+                    StageKind::Exact => {
+                        assert_eq!(sel.kept.len(), m.min(n), "{name}: not exact")
+                    }
+                    StageKind::Filter => assert!(sel.kept.len() <= m.min(n), "{name}"),
+                }
+            }
+        });
+    }
+
+    /// Satellite invariant: percentile tie-breaking is deterministic — on
+    /// tie-heavy discrete rewards the selector output is reproducible and
+    /// matches the seed kernel exactly.
+    #[test]
+    fn percentile_tie_breaking_is_deterministic() {
+        let p = Pipeline::parse_default("percentile").unwrap();
+        for_cases(200, |rng| {
+            let n = rng.gen_range_inclusive(1, 32) as usize;
+            let rewards: Vec<f32> =
+                (0..n).map(|_| [0.0, 1.0][rng.below(2)]).collect();
+            let m = rng.gen_range_inclusive(1, n as i64) as usize;
+            let g = fake_group(0, &rewards, None);
+            let ctx = SelectionContext::new(&g, m, 0, 0);
+            let a = p.select(&ctx).unwrap().kept;
+            let b = p.select(&ctx).unwrap().kept;
+            assert_eq!(a, b);
+            let want = crate::coordinator::downsample::percentile(&rewards, m).unwrap();
+            assert_eq!(a, want);
+        });
+        // all-ties golden: argsort tie-break by index makes the picks the
+        // canonical sorted positions 1 and 3
+        let g = fake_group(0, &[1.0, 1.0, 1.0, 1.0], None);
+        let sel = p.select(&SelectionContext::new(&g, 2, 0, 0)).unwrap();
+        assert_eq!(sel.kept, vec![1, 3]);
+    }
+
+    #[test]
+    fn stage_output_validation_catches_bad_selectors() {
+        #[derive(Debug)]
+        struct Broken;
+        impl Selector for Broken {
+            fn name(&self) -> &str {
+                "broken"
+            }
+            fn kind(&self) -> StageKind {
+                StageKind::Filter
+            }
+            fn select(&self, _: &SelectionContext, _: &[usize]) -> Result<Vec<usize>> {
+                Ok(vec![0, 0, 99])
+            }
+        }
+        let g = fake_group(0, &[1.0, 2.0], None);
+        let p = Pipeline::from_stages("broken", vec![Box::new(Broken)]).unwrap();
+        assert!(p.select(&SelectionContext::new(&g, 2, 0, 0)).is_err());
+
+        // a stage resurrecting an index a previous stage dropped is caught
+        #[derive(Debug)]
+        struct Resurrect;
+        impl Selector for Resurrect {
+            fn name(&self) -> &str {
+                "resurrect"
+            }
+            fn kind(&self) -> StageKind {
+                StageKind::Filter
+            }
+            fn select(&self, ctx: &SelectionContext, _: &[usize]) -> Result<Vec<usize>> {
+                Ok((0..ctx.n()).collect())
+            }
+        }
+        let g = fake_group(0, &[1.0, 2.0, 3.0, 4.0], None);
+        let p = Pipeline::from_stages(
+            "max_variance | resurrect",
+            vec![Box::new(legacy::MaxVariance), Box::new(Resurrect)],
+        )
+        .unwrap();
+        assert!(p.select(&SelectionContext::new(&g, 2, 0, 0)).is_err());
+    }
+}

@@ -1,0 +1,295 @@
+//! Selector spec grammar and registry.
+//!
+//! A pipeline spec is a `|`-separated chain of stages; each stage is a
+//! registered name with optional `key=value` arguments:
+//!
+//! ```text
+//! spec  := stage ( "|" stage )*
+//! stage := name [ "(" [ arg ("," arg)* ] ")" ]
+//! arg   := key "=" value
+//! name  := [A-Za-z_][A-Za-z0-9_]*
+//! ```
+//!
+//! Examples (all valid `algo.rule` config values):
+//!
+//! ```text
+//! rule = "max_variance"
+//! rule = "drop_zero_variance | max_variance"
+//! rule = "prune(max_tokens=4096) | percentile"
+//! rule = "drop_zero_variance(eps=1e-4) | prune(quantile=0.75) | random"
+//! ```
+//!
+//! The [`Registry`] maps names to factories. [`default_registry`] carries
+//! the built-ins; embedders extend selection by building their own
+//! registry (`Registry::with_builtins()` + [`Registry::register`]) and
+//! parsing pipelines against it — no enum to edit.
+
+use super::{filters, legacy, Selector};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+/// Parsed `key=value` arguments of one stage, with typed accessors.
+#[derive(Debug, Clone)]
+pub struct SpecArgs {
+    stage: String,
+    args: Vec<(String, String)>,
+}
+
+impl SpecArgs {
+    pub fn new(stage: impl Into<String>, args: Vec<(String, String)>) -> Self {
+        Self { stage: stage.into(), args }
+    }
+
+    /// Stage name these args belong to (for error messages).
+    pub fn stage(&self) -> &str {
+        &self.stage
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.args.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| anyhow!("{}: {key}={v:?} is not a number", self.stage)),
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| anyhow!("{}: {key}={v:?} is not a non-negative integer", self.stage)),
+        }
+    }
+
+    /// Reject typos: every provided key must be in `known`.
+    pub fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for (k, _) in &self.args {
+            if !known.contains(&k.as_str()) {
+                bail!(
+                    "{}: unknown argument {k:?} (accepted: {})",
+                    self.stage,
+                    if known.is_empty() { "none".to_string() } else { known.join(", ") }
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Builds one configured stage from its parsed arguments.
+pub type Factory = fn(&SpecArgs) -> Result<Box<dyn Selector>>;
+
+/// Name → factory table the spec parser resolves stages against.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    factories: BTreeMap<String, Factory>,
+}
+
+impl Registry {
+    /// An empty registry (embedders compose their own selector set).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// All built-in selectors: the four legacy rules, the `first`
+    /// truncation baseline, and the two context-aware filters.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        r.register("max_variance", legacy::max_variance_factory);
+        r.register("max_reward", legacy::max_reward_factory);
+        r.register("random", legacy::random_factory);
+        r.register("percentile", legacy::percentile_factory);
+        r.register("first", legacy::first_factory);
+        r.register("drop_zero_variance", filters::drop_zero_variance_factory);
+        r.register("prune", filters::prune_factory);
+        r
+    }
+
+    /// Register (or replace) a selector factory under `name`.
+    pub fn register(&mut self, name: &str, factory: Factory) {
+        debug_assert!(is_valid_name(name), "invalid selector name {name:?}");
+        self.factories.insert(name.to_string(), factory);
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.factories.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Parse and build one stage, e.g. `"prune(max_tokens=4096)"`.
+    pub fn build_stage(&self, stage: &str) -> Result<Box<dyn Selector>> {
+        let (name, args) = parse_stage(stage)?;
+        let factory = self.factories.get(&name).ok_or_else(|| {
+            anyhow!("unknown selector {name:?} (registered: {})", self.names().join("|"))
+        })?;
+        factory(&args)
+    }
+
+    /// Parse a full `|`-composed pipeline spec into its stages.
+    pub fn parse_pipeline(&self, spec: &str) -> Result<Vec<Box<dyn Selector>>> {
+        if spec.trim().is_empty() {
+            bail!("empty selector spec");
+        }
+        spec.split('|').map(|stage| self.build_stage(stage)).collect()
+    }
+}
+
+/// The process-wide registry of built-in selectors (what config strings
+/// resolve against).
+pub fn default_registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::with_builtins)
+}
+
+fn is_valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse `name` or `name(k=v, ...)` into the name and its arguments.
+fn parse_stage(stage: &str) -> Result<(String, SpecArgs)> {
+    let s = stage.trim();
+    if s.is_empty() {
+        bail!("empty selector stage (stray '|'?)");
+    }
+    let (name, inner) = match s.find('(') {
+        None => (s, None),
+        Some(i) => {
+            let Some(inner) = s[i + 1..].strip_suffix(')') else {
+                bail!("stage {s:?}: missing closing ')'");
+            };
+            (s[..i].trim_end(), Some(inner))
+        }
+    };
+    if !is_valid_name(name) {
+        bail!("bad selector name {name:?} in stage {s:?}");
+    }
+    let mut args = Vec::new();
+    if let Some(inner) = inner {
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                if inner.trim().is_empty() && args.is_empty() {
+                    break; // `name()` — empty arg list
+                }
+                bail!("stage {s:?}: empty argument");
+            }
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("stage {s:?}: argument {part:?} is not key=value");
+            };
+            let (k, v) = (k.trim(), v.trim());
+            if k.is_empty() || v.is_empty() {
+                bail!("stage {s:?}: argument {part:?} has an empty key or value");
+            }
+            args.push((k.to_string(), v.to_string()));
+        }
+    }
+    Ok((name.to_string(), SpecArgs::new(name, args)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::select::Pipeline;
+
+    #[test]
+    fn parses_bare_and_argful_stages() {
+        let (name, args) = parse_stage(" max_variance ").unwrap();
+        assert_eq!(name, "max_variance");
+        assert!(args.get("x").is_none());
+
+        let (name, args) = parse_stage("prune(max_tokens=4096, quantile=0.9)").unwrap();
+        assert_eq!(name, "prune");
+        assert_eq!(args.usize("max_tokens").unwrap(), Some(4096));
+        assert_eq!(args.f64("quantile").unwrap(), Some(0.9));
+        assert_eq!(args.usize("budget").unwrap(), None);
+
+        let (name, args) = parse_stage("random()").unwrap();
+        assert_eq!(name, "random");
+        assert!(args.expect_known(&[]).is_ok());
+    }
+
+    #[test]
+    fn rejects_malformed_stages() {
+        for bad in [
+            "",
+            "  ",
+            "9lives",
+            "prune(",
+            "prune(max_tokens)",
+            "prune(=3)",
+            "prune(max_tokens=)",
+            "pr une",
+            "a | | b",
+        ] {
+            assert!(
+                default_registry().parse_pipeline(bad).is_err(),
+                "{bad:?} should not parse"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_name_lists_registered() {
+        let err = default_registry().build_stage("best_ever").unwrap_err().to_string();
+        assert!(err.contains("max_variance"), "{err}");
+    }
+
+    #[test]
+    fn typoed_argument_is_rejected() {
+        assert!(default_registry().build_stage("drop_zero_variance(epss=1.0)").is_err());
+        assert!(default_registry().build_stage("max_variance(m=3)").is_err());
+    }
+
+    #[test]
+    fn pipeline_composes_stages_in_order() {
+        let p = Pipeline::parse_default("drop_zero_variance | prune(quantile=0.75) | percentile")
+            .unwrap();
+        assert_eq!(p.stage_names(), vec!["drop_zero_variance", "prune", "percentile"]);
+        assert_eq!(p.spec(), "drop_zero_variance | prune(quantile=0.75) | percentile");
+    }
+
+    #[test]
+    fn custom_registry_extends_selection() {
+        use crate::coordinator::select::{SelectionContext, Selector, StageKind};
+        #[derive(Debug)]
+        struct Evens;
+        impl Selector for Evens {
+            fn name(&self) -> &str {
+                "evens"
+            }
+            fn kind(&self) -> StageKind {
+                StageKind::Filter
+            }
+            fn select(&self, _: &SelectionContext, c: &[usize]) -> Result<Vec<usize>> {
+                Ok(c.iter().copied().filter(|i| i % 2 == 0).collect())
+            }
+        }
+        fn evens_factory(args: &SpecArgs) -> Result<Box<dyn Selector>> {
+            args.expect_known(&[])?;
+            Ok(Box::new(Evens))
+        }
+        let mut reg = Registry::with_builtins();
+        reg.register("evens", evens_factory);
+        let p = Pipeline::parse("evens | max_variance", &reg).unwrap();
+        let g = crate::coordinator::select::testutil::fake_group(
+            0,
+            &[0.0, 9.0, 1.0, 9.0, 2.0, 9.0],
+            None,
+        );
+        let sel = p.select(&SelectionContext::new(&g, 2, 0, 0)).unwrap();
+        let mut kept = sel.kept.clone();
+        kept.sort_unstable();
+        assert_eq!(kept, vec![0, 4], "extremes of the even-indexed rewards");
+    }
+}

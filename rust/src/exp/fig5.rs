@@ -1,13 +1,40 @@
-//! Fig. 5 — down-sampling rule comparison on setting (a):
-//! max-variance vs max-reward vs random vs percentile.
+//! Fig. 5 — selection-pipeline comparison on setting (a):
+//! the paper's four rules (max-variance vs max-reward vs random vs
+//! percentile) plus two context-aware pipelines from the selector
+//! registry (zero-signal-group filtering and length-aware pruning).
 //! Expected shape: max-variance on top throughout; max-reward degrades
-//! (no negative feedback).
+//! (no negative feedback); the filtered/pruned pipelines track
+//! max-variance while spending fewer update tokens.
 
 use super::{peak_accuracy, run_config, CfgBuilder, Scale};
-use crate::metrics::{ascii_plot, write_csv_rows};
 use crate::metrics::CsvRow;
+use crate::metrics::{ascii_plot, write_csv_rows};
 use anyhow::Result;
 use std::path::Path;
+
+/// The pipelines Fig. 5 compares. The first four are the paper's rules;
+/// the last two exercise the composable selector API end-to-end.
+pub const SPECS: &[&str] = &[
+    "max_variance",
+    "max_reward",
+    "random",
+    "percentile",
+    "drop_zero_variance | max_variance",
+    "prune(quantile=0.75) | max_variance",
+];
+
+/// File-system-safe tag for a pipeline spec (run names, CSV fields).
+pub fn spec_slug(spec: &str) -> String {
+    let mut out = String::with_capacity(spec.len());
+    for c in spec.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else if !out.ends_with('_') {
+            out.push('_');
+        }
+    }
+    out.trim_matches('_').to_string()
+}
 
 #[derive(Debug)]
 struct RuleRow {
@@ -15,14 +42,27 @@ struct RuleRow {
     peak_acc: f32,
     final_acc: f32,
     mean_sel_variance: f64,
+    /// Fraction of generated tokens that selection dropped before the
+    /// update phase (the compute the pipeline saved).
+    tokens_dropped_frac: f64,
+    /// Total prompt groups dropped as zero-signal over the run.
+    groups_dropped: usize,
 }
 
 impl CsvRow for RuleRow {
     fn csv_header() -> &'static str {
-        "rule,peak_acc,final_acc,mean_sel_variance"
+        "rule,peak_acc,final_acc,mean_sel_variance,tokens_dropped_frac,groups_dropped"
     }
     fn csv_row(&self) -> String {
-        format!("{},{},{},{}", self.rule, self.peak_acc, self.final_acc, self.mean_sel_variance)
+        format!(
+            "{},{},{},{},{},{}",
+            self.rule,
+            self.peak_acc,
+            self.final_acc,
+            self.mean_sel_variance,
+            self.tokens_dropped_frac,
+            self.groups_dropped
+        )
     }
 }
 
@@ -32,20 +72,21 @@ pub fn run(artifacts: &Path, scale: Scale, out_dir: &str) -> Result<()> {
     let iters = scale.iters(48);
     let mut rows = Vec::new();
     let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
-    for rule in ["max_variance", "max_reward", "random", "percentile"] {
+    for spec in SPECS {
+        let slug = spec_slug(spec);
         let cfg = CfgBuilder {
-            name: format!("fig5_{rule}"),
+            name: format!("fig5_{slug}"),
             profile: "lora".into(),
             task: "arith".into(),
             iterations: iters,
             eval_every: 4,
             eval_problems: scale.eval_problems(48),
             out_dir: out_dir.into(),
-            base_checkpoint: Some(base_ckpt.clone().into()),
+            base_checkpoint: Some(base_ckpt.clone()),
             kind: "pods".into(),
             n: 64,
             m: Some(16),
-            rule: rule.into(),
+            rule: spec.to_string(),
             lr: 3e-3,
             ..Default::default()
         }
@@ -58,26 +99,60 @@ pub fn run(artifacts: &Path, scale: Scale, out_dir: &str) -> Result<()> {
             .filter(|e| e.split == "test")
             .map(|e| (e.sim_time, e.accuracy as f64))
             .collect();
-        let mean_var = tr.recorder.iters.iter().map(|i| i.sel_variance).sum::<f64>()
-            / tr.recorder.iters.len().max(1) as f64;
+        let iters_n = tr.recorder.iters.len().max(1) as f64;
+        let mean_var = tr.recorder.iters.iter().map(|i| i.sel_variance).sum::<f64>() / iters_n;
+        let kept: usize = tr.recorder.iters.iter().map(|i| i.sel_tokens_kept).sum();
+        let dropped: usize = tr.recorder.iters.iter().map(|i| i.sel_tokens_dropped).sum();
         rows.push(RuleRow {
-            rule: rule.into(),
+            rule: slug.clone(),
             peak_acc: peak_accuracy(&tr.recorder.evals),
             final_acc: tr.recorder.last_eval_accuracy("test").unwrap_or(0.0),
             mean_sel_variance: mean_var,
+            tokens_dropped_frac: dropped as f64 / (kept + dropped).max(1) as f64,
+            groups_dropped: tr.recorder.iters.iter().map(|i| i.sel_groups_dropped).sum(),
         });
-        series.push((rule.to_string(), curve));
+        series.push((spec.to_string(), curve));
     }
     write_csv_rows(Path::new(&format!("{out_dir}/fig5.csv")), &rows)?;
     let plots: Vec<(&str, &[(f64, f64)])> =
         series.iter().map(|(n, c)| (n.as_str(), c.as_slice())).collect();
-    println!("Fig.5: accuracy vs sim time by down-sampling rule");
+    println!("Fig.5: accuracy vs sim time by selection pipeline");
     println!("{}", ascii_plot(&plots, 64, 14));
-    for r in &rows {
+    for (spec, r) in SPECS.iter().zip(&rows) {
         println!(
-            "  {:<13} peak {:.3} final {:.3} mean selected-batch reward variance {:.3}",
-            r.rule, r.peak_acc, r.final_acc, r.mean_sel_variance
+            "  {:<38} peak {:.3} final {:.3} sel-variance {:.3} tokens-dropped {:.1}% groups-dropped {}",
+            spec,
+            r.peak_acc,
+            r.final_acc,
+            r.mean_sel_variance,
+            100.0 * r.tokens_dropped_frac,
+            r.groups_dropped
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slugs_are_fs_safe_and_distinct() {
+        let slugs: Vec<String> = SPECS.iter().map(|s| spec_slug(s)).collect();
+        for s in &slugs {
+            assert!(!s.is_empty());
+            assert!(s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'), "{s}");
+        }
+        let set: std::collections::HashSet<&String> = slugs.iter().collect();
+        assert_eq!(set.len(), slugs.len(), "slug collision: {slugs:?}");
+        assert_eq!(spec_slug("prune(quantile=0.75) | max_variance"), "prune_quantile_0_75_max_variance");
+    }
+
+    #[test]
+    fn all_fig5_specs_parse() {
+        for spec in SPECS {
+            crate::coordinator::select::Pipeline::parse_default(spec)
+                .unwrap_or_else(|e| panic!("fig5 spec {spec:?} invalid: {e}"));
+        }
+    }
 }

@@ -41,6 +41,40 @@ pub fn read_eval_csv(path: &Path) -> Result<Vec<(String, f64, f32, f32)>> {
     Ok(out)
 }
 
+/// Selection token totals `(kept, dropped)` summed over a run's train CSV.
+/// Returns zeros when the CSV predates the selector subsystem's columns.
+pub fn read_train_tokens(path: &Path) -> Result<(u64, u64)> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let mut lines = text.lines();
+    let header: Vec<&str> = lines
+        .next()
+        .ok_or_else(|| anyhow!("empty csv {path:?}"))?
+        .split(',')
+        .collect();
+    let (Some(ci_kept), Some(ci_dropped)) = (
+        header.iter().position(|h| *h == "sel_tokens_kept"),
+        header.iter().position(|h| *h == "sel_tokens_dropped"),
+    ) else {
+        return Ok((0, 0));
+    };
+    let (mut kept, mut dropped) = (0u64, 0u64);
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        // tolerate a truncated trailing line (run killed mid-write):
+        // anything short of the full column count is skipped, so a row cut
+        // mid-number can't be mistaken for a smaller value
+        if f.len() != header.len() {
+            continue;
+        }
+        kept += f[ci_kept].parse::<u64>()?;
+        dropped += f[ci_dropped].parse::<u64>()?;
+    }
+    Ok((kept, dropped))
+}
+
 /// Metric selector: 0 = accuracy, 1 = mean total reward.
 fn metric(row: &(String, f64, f32, f32), which: usize) -> f32 {
     if which == 0 {
@@ -75,15 +109,19 @@ struct Table3Row {
     t_baseline: f64,
     t_pods: f64,
     speedup: f64,
+    /// Fraction of PODS' generated tokens its selection pipeline kept for
+    /// the update phase (from the train CSV's selection diagnostics; 0
+    /// when the columns are absent).
+    pods_token_keep_frac: f64,
 }
 
 impl CsvRow for Table3Row {
     fn csv_header() -> &'static str {
-        "setting,baseline,metric,baseline_peak,target,t_baseline,t_pods,speedup"
+        "setting,baseline,metric,baseline_peak,target,t_baseline,t_pods,speedup,pods_token_keep_frac"
     }
     fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{}",
             self.setting,
             self.baseline,
             self.metric,
@@ -91,7 +129,8 @@ impl CsvRow for Table3Row {
             self.target,
             self.t_baseline,
             self.t_pods,
-            self.speedup
+            self.speedup,
+            self.pods_token_keep_frac
         )
     }
 }
@@ -109,6 +148,17 @@ pub fn run(out_dir: &str) -> Result<()> {
         }
         let pods = read_eval_csv(Path::new(&pods_path))?;
         let base = read_eval_csv(Path::new(&base_path))?;
+        let train_path = format!("{out_dir}/fig3_{}_pods_train.csv", s.id);
+        let (kept, dropped) = if Path::new(&train_path).exists() {
+            read_train_tokens(Path::new(&train_path))?
+        } else {
+            (0, 0)
+        };
+        let keep_frac = if kept + dropped > 0 {
+            kept as f64 / (kept + dropped) as f64
+        } else {
+            0.0
+        };
         // paper metric: test accuracy; at this reproduction scale the
         // accuracy curve can be flat/noisy, so the composite reward (the
         // objective RL maximises) is reported alongside
@@ -132,19 +182,27 @@ pub fn run(out_dir: &str) -> Result<()> {
                 t_baseline: tb,
                 t_pods: tp,
                 speedup: tb / tp.max(1e-9),
+                pods_token_keep_frac: keep_frac,
             });
         }
     }
     write_csv_rows(Path::new(&format!("{out_dir}/table3.csv")), &rows)?;
     println!("Table 3: speed-up of GRPO-PODS over the baseline (paper: 1.7x-3.0x on accuracy)");
     println!(
-        "{:<8} {:<9} {:<12} {:>9} {:>10} {:>10} {:>8}",
-        "setting", "baseline", "metric", "peak", "t_base(s)", "t_pods(s)", "speedup"
+        "{:<8} {:<9} {:<12} {:>9} {:>10} {:>10} {:>8} {:>10}",
+        "setting", "baseline", "metric", "peak", "t_base(s)", "t_pods(s)", "speedup", "tok-kept"
     );
     for r in &rows {
         println!(
-            "{:<8} {:<9} {:<12} {:>9.3} {:>10.1} {:>10.1} {:>7.2}x",
-            r.setting, r.baseline, r.metric, r.baseline_peak, r.t_baseline, r.t_pods, r.speedup
+            "{:<8} {:<9} {:<12} {:>9.3} {:>10.1} {:>10.1} {:>7.2}x {:>9.1}%",
+            r.setting,
+            r.baseline,
+            r.metric,
+            r.baseline_peak,
+            r.t_baseline,
+            r.t_pods,
+            r.speedup,
+            100.0 * r.pods_token_keep_frac
         );
     }
     Ok(())
@@ -171,5 +229,22 @@ mod tests {
         assert_eq!(time_to(&rows, 0, 0.6), Some(200.0));
         assert_eq!(time_to(&rows, 0, 0.9), None);
         assert_eq!(peak(&rows, 1), 2.0);
+    }
+
+    #[test]
+    fn train_tokens_sum_and_tolerate_old_schemas() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("t.csv");
+        std::fs::write(
+            &p,
+            "iter,sel_tokens_kept,sel_tokens_dropped\n0,100,300\n1,50,150\n2,9",
+        )
+        .unwrap();
+        // the truncated trailing line is skipped, not a panic
+        assert_eq!(read_train_tokens(&p).unwrap(), (150, 450));
+        // pre-selector schema: columns absent -> zeros, not an error
+        let old = dir.path().join("old.csv");
+        std::fs::write(&old, "iter,sim_time\n0,1.0\n").unwrap();
+        assert_eq!(read_train_tokens(&old).unwrap(), (0, 0));
     }
 }

@@ -3,21 +3,56 @@
 //! A full-stack reproduction of *"Not All Rollouts are Useful: Down-Sampling
 //! Rollouts in LLM Reinforcement Learning"* (Xu, Savani, Fang, Kolter, 2025).
 //!
-//! Architecture (three layers, Python only at build time):
+//! ## Architecture (three layers, Python only at build time)
 //!
 //! * **L1 — Pallas kernels** (`python/compile/kernels/`): fused attention,
 //!   token log-prob, GRPO surrogate and AdamW kernels.
 //! * **L2 — JAX model** (`python/compile/model.py`): the policy transformer,
 //!   rollout sampling with a KV cache, GRPO loss fwd/bwd — AOT-lowered to
 //!   HLO text artifacts by `python/compile/aot.py`.
-//! * **L3 — this crate**: the Rust coordinator owning the training loop,
-//!   rollout scheduling, **down-sampling** (the paper's contribution),
-//!   gradient accumulation, the simulated multi-worker topology, rewards,
-//!   evaluation and the experiment harness. Executes the artifacts through
-//!   PJRT (`runtime`).
+//! * **L3 — this crate**: the Rust coordinator owning the training loop and
+//!   executing the artifacts through PJRT ([`runtime`]).
 //!
-//! Start at [`coordinator::scheduler::Trainer`] for the training step state
-//! machine, and [`coordinator::downsample`] for the paper's Algorithm 2.
+//! ## The L3 training loop, one iteration
+//!
+//! ```text
+//!  tasks ──► rollout ──► reward ──► coordinator::group (PromptGroup)
+//!                                        │
+//!                       coordinator::select  ◄── config `algo.rule` spec
+//!                (Selector pipelines: registry-resolved,
+//!                 per-group deterministic RNG, diagnostics)
+//!                                        │
+//!              coordinator::advantage ──► coordinator::accum ──► runtime
+//!                                        │
+//!                     hwsim clock ──► metrics CSVs ──► exp figures
+//! ```
+//!
+//! **Rollout selection** — the paper's contribution — is a first-class,
+//! extensible subsystem: [`coordinator::select`] defines a `Selector`
+//! trait over a `SelectionContext` (the full rollout group with rewards,
+//! generation lengths and log-probs, plus `n`, `m`, the iteration and a
+//! per-group deterministic RNG), a spec grammar
+//! (`"drop_zero_variance | max_variance"`,
+//! `"prune(max_tokens=4096) | percentile"`) and a registry that embedders
+//! extend without touching this crate. The numeric kernels — including
+//! Algorithm 2, max-variance down-sampling in `O(n log n)` — live in
+//! [`coordinator::downsample`].
+//!
+//! Key modules:
+//!
+//! * [`config`] — TOML run configs (Table 1/2 settings under `configs/`).
+//! * [`coordinator::scheduler`] — the GRPO / GRPO-GA / GRPO-PODS state
+//!   machine ([`coordinator::scheduler::Trainer`]).
+//! * [`coordinator::select`] — the pluggable selection subsystem.
+//! * [`hwsim`] — calibrated accelerator-cost model (the simulated clock
+//!   all figures plot against).
+//! * [`tasks`] / [`reward`] / [`eval`] — synthetic verifiable-reasoning
+//!   task families, rule-based rewards, evaluation tracks.
+//! * [`exp`] — one driver per paper figure/table; [`metrics`] — the CSV
+//!   schema they consume.
+//!
+//! Start at [`coordinator::scheduler::Trainer`] for the training step,
+//! and [`coordinator::select`] for the selection API.
 
 pub mod config;
 pub mod coordinator;

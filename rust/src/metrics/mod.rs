@@ -33,6 +33,14 @@ pub struct IterRow {
     pub completion_len: f32,
     /// Reward variance of the *selected* update batch.
     pub sel_variance: f64,
+    /// Generated tokens in the rollouts kept by selection this iteration.
+    pub sel_tokens_kept: usize,
+    /// Generated tokens in the rollouts selection dropped (inference spend
+    /// the update phase does not pay for again).
+    pub sel_tokens_dropped: usize,
+    /// Prompt groups whose selection came back empty (e.g. zero-signal
+    /// groups removed by `drop_zero_variance`).
+    pub sel_groups_dropped: usize,
     pub loss: f32,
     pub clip_frac: f32,
     pub kl: f32,
@@ -44,12 +52,13 @@ pub struct IterRow {
 impl CsvRow for IterRow {
     fn csv_header() -> &'static str {
         "iter,sim_time,real_time,sim_inference_time,sim_update_time,train_reward,train_acc,\
-         completion_len,sel_variance,loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained"
+         completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
+         loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained"
     }
 
     fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.iter,
             self.sim_time,
             self.real_time,
@@ -59,6 +68,9 @@ impl CsvRow for IterRow {
             self.train_acc,
             self.completion_len,
             self.sel_variance,
+            self.sel_tokens_kept,
+            self.sel_tokens_dropped,
+            self.sel_groups_dropped,
             self.loss,
             self.clip_frac,
             self.kl,
