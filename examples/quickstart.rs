@@ -24,7 +24,9 @@ fn main() -> anyhow::Result<()> {
         subset_variance(&rewards, &picked)
     );
 
-    // 2. The full stack: three RL iterations of GRPO-PODS on `arith`.
+    // 2. The full stack: three RL iterations of GRPO-PODS on `arith`,
+    //    under the pipelined executor — iteration t+1's rollouts are
+    //    generated on the rollout pool while iteration t updates.
     let cfg = CfgBuilder {
         name: "quickstart".into(),
         profile: "base".into(),
@@ -37,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         n: 32,
         m: Some(8),
         lr: 2e-4,
+        schedule: "pipelined".into(),
         sft_steps: 60, // tiny warm-up so rollouts aren't pure noise
         sft_lr: 3e-3,
         out_dir: "results".into(),
@@ -49,11 +52,21 @@ fn main() -> anyhow::Result<()> {
     let last = trainer.recorder.iters.last().unwrap();
     println!(
         "\nquickstart done: {} rollouts generated/iter, {} trained/iter, \
-         final train reward {:.2}, sim step time {:.1}s",
+         final train reward {:.2}, sim step {:.1}s charged \
+         (inference {:.1}s + update {:.1}s, {:.1}s hidden by overlap)",
         last.rollouts_generated,
         last.rollouts_trained,
         last.train_reward,
-        last.sim_inference_time + last.sim_update_time,
+        last.sim_step_time,
+        last.sim_inference_time,
+        last.sim_update_time,
+        last.sim_overlap_saved,
+    );
+    println!(
+        "schedule {}: total sim {:.1}s, {:.1}s saved vs sync",
+        last.schedule,
+        trainer.clock.now(),
+        trainer.clock.overlap_saved(),
     );
     println!("metrics: results/quickstart_train.csv, results/quickstart_eval.csv");
     Ok(())

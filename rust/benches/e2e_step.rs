@@ -1,15 +1,28 @@
 //! Bench: one full training iteration per schedule — the end-to-end step
 //! that Fig. 3's per-step run-time panels report. Also prints the hwsim
 //! decomposition so real CPU time and simulated accelerator time can be
-//! compared side by side.
+//! compared side by side, and writes `BENCH_e2e.json` (name, wall times,
+//! rollout throughput per arm) so the perf trajectory is machine-readable
+//! across PRs.
+//!
+//! The `workers > 1` arms exercise the real rollout thread pool (one
+//! engine replica per worker thread); the `pipelined` arm additionally
+//! overlaps generation of the next iteration with the current update on
+//! this host's cores.
 
 use pods::coordinator::scheduler::Trainer;
 use pods::exp::CfgBuilder;
-use pods::util::bench::bench;
+use pods::util::bench::{bench, BenchReport};
 
-fn mk_trainer(kind: &str, n: usize, m: Option<usize>, workers: usize) -> anyhow::Result<Trainer> {
+fn mk_trainer(
+    kind: &str,
+    n: usize,
+    m: Option<usize>,
+    workers: usize,
+    schedule: &str,
+) -> anyhow::Result<Trainer> {
     let cfg = CfgBuilder {
-        name: format!("bench_{kind}_{n}"),
+        name: format!("bench_{kind}_{n}_{workers}w_{schedule}"),
         profile: "base".into(),
         task: "arith".into(),
         iterations: 1,
@@ -20,6 +33,7 @@ fn mk_trainer(kind: &str, n: usize, m: Option<usize>, workers: usize) -> anyhow:
         m,
         lr: 1e-4,
         workers,
+        schedule: schedule.into(),
         out_dir: std::env::temp_dir().join("pods_bench").to_string_lossy().into_owned(),
         ..Default::default()
     }
@@ -35,29 +49,41 @@ fn main() -> anyhow::Result<()> {
         eprintln!("skipping: base artifacts missing (run `make artifacts`)");
         return Ok(());
     }
+    // (label, kind, n, m, workers, schedule)
     let arms = [
-        ("grpo (n=m=16)", "grpo", 16usize, None, 1usize),
-        ("pods (n=64 -> m=16)", "pods", 64, Some(16), 1),
-        ("ga   (n=64, train all)", "ga", 64, None, 1),
-        ("pods distributed (8w)", "pods", 64, Some(16), 8),
-        ("ga   distributed (8w)", "ga", 64, None, 8),
+        ("grpo (n=m=16)", "grpo", 16usize, None, 1usize, "sync"),
+        ("pods (n=64 -> m=16)", "pods", 64, Some(16), 1, "sync"),
+        ("ga   (n=64, train all)", "ga", 64, None, 1, "sync"),
+        ("pods real-threads (4w)", "pods", 64, Some(16), 4, "sync"),
+        ("pods pipelined (4w)", "pods", 64, Some(16), 4, "pipelined"),
+        ("pods distributed (8w)", "pods", 64, Some(16), 8, "sync"),
+        ("ga   distributed (8w)", "ga", 64, None, 8, "sync"),
     ];
-    for (label, kind, n, m, workers) in arms {
-        let mut tr = mk_trainer(kind, n, m, workers)?;
+    let mut report = BenchReport::new();
+    for (label, kind, n, m, workers, schedule) in arms {
+        let mut tr = mk_trainer(kind, n, m, workers, schedule)?;
+        let pipelined = schedule == "pipelined";
         let mut it = 0usize;
         let res = bench(&format!("e2e step {label}"), Some(4), || {
-            tr.train_iteration(it).unwrap();
+            // pipelined arms keep a prefetch in flight every step so the
+            // bench measures the steady-state overlapped iteration
+            tr.step(it, pipelined).unwrap();
             it += 1;
         });
         let last = tr.recorder.iters.last().unwrap();
         println!(
-            "  real {:.2}s | sim {:.1}s (inference {:.1}s + update {:.1}s, {} micro-steps)",
+            "  real {:.2}s | sim {:.1}s charged (inf {:.1}s + upd {:.1}s, \
+             {:.1}s hidden, {} micro-steps)",
             res.median_ns / 1e9,
-            last.sim_inference_time + last.sim_update_time,
+            last.sim_step_time,
             last.sim_inference_time,
             last.sim_update_time,
+            last.sim_overlap_saved,
             last.micro_steps
         );
+        let rollouts_per_sec = last.rollouts_generated as f64 / (res.median_ns / 1e9);
+        report.push_with_throughput(res, rollouts_per_sec);
     }
+    report.write_json(std::path::Path::new("BENCH_e2e.json"))?;
     Ok(())
 }

@@ -1,12 +1,16 @@
 //! Bench: the inference phase — rollout generation (KV-cache decode inside
-//! the AOT artifact), reward verification, and the per-rollout cost that
-//! Fig. 1 (bottom) amortizes with batching.
+//! the AOT artifact), reward verification, the per-rollout cost that
+//! Fig. 1 (bottom) amortizes with batching, and the real thread-pool
+//! speedup of the exec RolloutEngine (`hwsim.workers > 1` = that many
+//! engine replicas decoding concurrently on this host).
 
+use pods::coordinator::exec::{GenBatch, RolloutEngine};
 use pods::reward::{score_rollout, RewardWeights};
 use pods::rollout::{generate_group, prompt_batch, GenRequest};
 use pods::runtime::Engine;
 use pods::tasks::{Split, TaskKind};
 use pods::util::bench::{bench, black_box};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let dir = pods::default_artifacts_dir();
@@ -56,5 +60,34 @@ fn main() -> anyhow::Result<()> {
     bench("generate_group n=64 (4 calls + verify)", Some(5), || {
         black_box(generate_group(&engine, &req, TaskKind::Arith, &problem).unwrap());
     });
+
+    // Real multi-threaded generation: the same 4-prompt iteration fanned
+    // over 1/2/4 worker threads (each its own engine replica). Results
+    // are bit-identical across pool sizes; only wall time changes.
+    let problems: Vec<_> =
+        (0..4u64).map(|i| TaskKind::Arith.generate(Split::Train, i)).collect();
+    let shared_problems = Arc::new(problems);
+    let shared_params = Arc::new(params.clone());
+    for workers in [1usize, 2, 4] {
+        let mut pool = RolloutEngine::new(dir.clone(), "base", workers);
+        let mut iter = 0u64;
+        bench(&format!("parallel generate 4 prompts x n=16 ({workers}w)"), Some(5), || {
+            iter += 1;
+            let batch = GenBatch {
+                params: Arc::clone(&shared_params),
+                lora: None,
+                ref_params: None,
+                ref_lora: None,
+                problems: Arc::clone(&shared_problems),
+                n: 16,
+                temperature: 1.0,
+                run_seed: 9,
+                iter,
+                task: TaskKind::Arith,
+                weights: RewardWeights::default(),
+            };
+            black_box(pool.generate(&engine, batch).unwrap());
+        });
+    }
     Ok(())
 }

@@ -192,7 +192,10 @@ impl RunConfig {
         NormMode::parse(&self.algo.adv_norm)?;
         TaskKind::parse(&self.run.task)?;
         if self.algo.n == 0 {
-            return Err(anyhow!("algo.n must be positive"));
+            return Err(anyhow!(
+                "algo.n must be >= 1 (rollouts generated per prompt; \
+                 the paper's settings use n in 16..=64)"
+            ));
         }
         if let Some(m) = self.algo.m {
             if m == 0 || m > self.algo.n {
@@ -210,9 +213,10 @@ impl RunConfig {
         if self.run.prompts_per_iter == 0 {
             return Err(anyhow!("run.prompts_per_iter must be positive"));
         }
-        if self.hwsim.workers == 0 {
-            return Err(anyhow!("hwsim.workers must be >= 1"));
-        }
+        // the full [hwsim] validation (workers >= 1, positive cost-model
+        // times, schedule) — also applied to programmatically-built
+        // configs that bypass from_section
+        self.hwsim.validate()?;
         Ok(())
     }
 }
@@ -297,6 +301,37 @@ mod tests {
         assert_eq!(cfg.hwsim.mem_capacity_rollouts, 16);
         // non-overridden fields keep defaults
         assert!(cfg.hwsim.tok_time_b1 > 0.0);
+        assert_eq!(cfg.hwsim.schedule, crate::hwsim::Schedule::Sync);
+    }
+
+    #[test]
+    fn schedule_parses_from_hwsim_section() {
+        let text = format!("{MINIMAL}\n[hwsim]\nschedule = \"pipelined\"\n");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert_eq!(cfg.hwsim.schedule, crate::hwsim::Schedule::Pipelined);
+        let text = format!("{MINIMAL}\n[hwsim]\nschedule = \"warp-speed\"\n");
+        let err = RunConfig::from_str_validated(&text).unwrap_err();
+        assert!(format!("{err:#}").contains("schedule"), "undescriptive: {err:#}");
+    }
+
+    /// Satellite: degenerate `[hwsim]` / `[algo]` values fail at parse
+    /// time with descriptive errors instead of tripping downstream
+    /// asserts or being silently clamped.
+    #[test]
+    fn zero_workers_and_zero_n_fail_at_parse_with_descriptive_errors() {
+        let text = format!("{MINIMAL}\n[hwsim]\nworkers = 0\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("hwsim.workers"), "undescriptive: {err}");
+        assert!(err.contains(">= 1"), "undescriptive: {err}");
+
+        let text = MINIMAL.replace("n = 64", "n = 0").replace("m = 16\n", "");
+        let text = text.replace("kind = \"pods\"", "kind = \"grpo\"");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("algo.n"), "undescriptive: {err}");
+
+        let text = format!("{MINIMAL}\n[hwsim]\nmem_capacity_rollouts = 0\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("mem_capacity_rollouts"), "undescriptive: {err}");
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! The staged training executor.
+//!
+//! The seed trainer was a single-threaded monolith: groups generated
+//! prompt-by-prompt, then the update, strictly back-to-back. This
+//! subsystem decomposes one Algorithm-1 step into three composable
+//! pieces:
+//!
+//! * [`RolloutEngine`] — the inference phase on a real thread pool sized
+//!   by `hwsim.workers` (per-thread engine replicas; cross-group call
+//!   packing via [`crate::rollout::plan_calls`]).
+//! * [`UpdateEngine`] — micro-batch packing + gradient accumulation +
+//!   the fused optimizer apply.
+//! * [`TrainLoop`] — the driver composing them under the config-selected
+//!   [`Schedule`]:
+//!
+//! ```text
+//!   sync:       gen(t) ──► select(t) ──► update(t) ──► gen(t+1) ──► …
+//!
+//!   pipelined:  gen(t) ──► select(t) ──► update(t)   ┌ main thread
+//!                                  └──► gen(t+1) ……… ┘ rollout pool
+//! ```
+//!
+//! The pipelined schedule prefetches iteration *t+1*'s rollouts (under
+//! the pre-update policy θ_t — one-step off-policy, sound because the
+//! GRPO loss ratios use the stored behaviour log-probs) while the main
+//! thread runs update *t*. The simulated clock then charges
+//! `max(inference, update)` for the overlapped portion
+//! ([`crate::hwsim::SimClock::advance_hidden`]) and the hidden time is
+//! reported per iteration as `sim_overlap_saved`.
+//!
+//! With `schedule = "sync"` the executor reproduces the seed trainer's
+//! selections, losses and simulated times exactly (golden-tested in
+//! `rust/tests/exec_golden.rs`). Sole exception: multi-prompt iterations
+//! where `n % B_r != 0` pack remainder rows across groups into shared
+//! calls (see [`crate::rollout::plan_calls`]) and so sample those rows
+//! from a different — still deterministic — stream; all shipped configs
+//! use `n` divisible by `B_r`.
+
+pub mod rollout_engine;
+pub mod update_engine;
+
+pub use crate::hwsim::Schedule;
+pub use rollout_engine::{GenBatch, PendingGen, RolloutEngine};
+pub use update_engine::{UpdateEngine, UpdateOut};
+
+use crate::config::{AlgoKind, RunConfig};
+use crate::coordinator::group::{build_update_batch, BatchSelectionStats};
+use crate::coordinator::select::Pipeline;
+use crate::hwsim::SimClock;
+use crate::reward::RewardWeights;
+use crate::runtime::{Engine, ParamStore};
+use crate::tasks::{Split, TaskKind};
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Borrowed trainer state one step operates on (the [`TrainLoop`] owns no
+/// model state itself — only executor state).
+pub struct StepCtx<'a> {
+    pub engine: &'a Engine,
+    pub store: &'a mut ParamStore,
+    /// Frozen full-parameter base (LoRA profiles only).
+    pub base: Option<&'a [f32]>,
+    /// Reference-policy snapshot (Arc handles — cloning into a GenBatch
+    /// shares the vector instead of re-copying it every iteration).
+    pub ref_params: Option<Arc<Vec<f32>>>,
+    pub ref_lora: Option<Arc<Vec<f32>>>,
+    pub cfg: &'a RunConfig,
+    pub pipeline: &'a Pipeline,
+    pub task: TaskKind,
+    pub clock: &'a mut SimClock,
+    pub prompt_cursor: &'a mut u64,
+}
+
+/// Everything one executed step reports back to the recorder.
+#[derive(Debug, Clone, Default)]
+pub struct StepReport {
+    pub train_reward: f32,
+    pub train_acc: f32,
+    pub completion_len: f32,
+    pub loss: f32,
+    pub clip_frac: f32,
+    pub kl: f32,
+    pub micro_steps: usize,
+    pub rollouts_generated: usize,
+    pub rollouts_trained: usize,
+    /// Simulated cost of this iteration's inference phase (regardless of
+    /// where on the timeline it was charged).
+    pub sim_inference: f64,
+    /// Simulated cost of this iteration's update phase.
+    pub sim_update: f64,
+    /// What the clock actually advanced during this step.
+    pub sim_step: f64,
+    /// Portion of `sim_inference` hidden behind the previous update
+    /// (zero under the sync schedule).
+    pub sim_overlap_saved: f64,
+    pub sel_stats: BatchSelectionStats,
+    pub sel_variance: f64,
+}
+
+/// The schedule-aware driver for one training run.
+pub struct TrainLoop {
+    pub rollout: RolloutEngine,
+    pub update: UpdateEngine,
+    pub schedule: Schedule,
+    /// Prefetched generation for a future iteration (pipelined only).
+    pending: Option<(usize, PendingGen)>,
+    /// Previous iteration's simulated update time — what a prefetched
+    /// inference phase overlapped with.
+    last_update_time: f64,
+}
+
+impl TrainLoop {
+    pub fn new(
+        artifacts: PathBuf,
+        profile: &str,
+        workers: usize,
+        schedule: Schedule,
+        param_width: usize,
+    ) -> Self {
+        Self {
+            rollout: RolloutEngine::new(artifacts, profile, workers),
+            update: UpdateEngine::new(param_width),
+            schedule,
+            pending: None,
+            last_update_time: 0.0,
+        }
+    }
+
+    /// One full Algorithm-1 step for `iter`. `prefetch_next` permits the
+    /// pipelined schedule to start generating `iter + 1` while this
+    /// step's update runs (the driver passes `false` on the final
+    /// iteration so the run doesn't pay for an overhanging generation).
+    pub fn step(&mut self, ctx: StepCtx, iter: usize, prefetch_next: bool) -> Result<StepReport> {
+        let cfg = ctx.cfg;
+        let m = match cfg.algo_kind() {
+            AlgoKind::GrpoPods => cfg.algo.m,
+            _ => None,
+        };
+
+        // ---- Phase 1: rollouts for this iteration ---------------------
+        // Redeem the prefetched batch if it matches `iter`. A stale batch
+        // (the caller stepped out of order, or retried after an error) is
+        // drained and discarded — and the prompt window its prefetch
+        // consumed is handed back to the cursor, so no prompts are
+        // silently skipped.
+        let ready = match self.pending.take() {
+            Some((i, p)) if i == iter => Some(self.rollout.collect(p)?),
+            Some((_, p)) => {
+                let _ = self.rollout.collect(p);
+                *ctx.prompt_cursor =
+                    ctx.prompt_cursor.saturating_sub(cfg.run.prompts_per_iter as u64);
+                None
+            }
+            None => None,
+        };
+        let (groups, gen_stats, prefetched) = match ready {
+            Some((g, s)) => (g, s, true),
+            None => {
+                let batch = snapshot_batch(&ctx, iter);
+                *ctx.prompt_cursor += cfg.run.prompts_per_iter as u64;
+                let (g, s) = self.rollout.generate(ctx.engine, batch)?;
+                (g, s, false)
+            }
+        };
+        let rollouts_generated = gen_stats.rollouts;
+        let avg_tokens = gen_stats.total_gen_tokens as f64 / rollouts_generated.max(1) as f64;
+        let sim_inference = cfg.hwsim.inference_time(rollouts_generated, avg_tokens);
+
+        // ---- Phase 2: select + advantages -----------------------------
+        let (selected, sel_stats) = build_update_batch(
+            &groups,
+            ctx.pipeline,
+            m,
+            cfg.norm_mode(),
+            cfg.run.seed,
+            iter as u64,
+        )?;
+        let sel_rewards: Vec<f32> = selected
+            .iter()
+            .map(|s| groups[s.group_idx].rollouts[s.rollout_idx].total_reward)
+            .collect();
+        let sel_idx: Vec<usize> = (0..sel_rewards.len()).collect();
+        let sel_variance =
+            crate::coordinator::downsample::subset_variance(&sel_rewards, &sel_idx);
+
+        // ---- Phase 2.5: pipelined prefetch of iteration t+1 -----------
+        // Snapshot the *pre-update* policy θ_t: the rollout pool decodes
+        // iteration t+1 with it while the main thread updates to θ_{t+1}.
+        if self.schedule == Schedule::Pipelined && prefetch_next {
+            let batch = snapshot_batch(&ctx, iter + 1);
+            *ctx.prompt_cursor += cfg.run.prompts_per_iter as u64;
+            let br = ctx.engine.meta.config.rollout_batch;
+            let pending = self.rollout.submit(br, batch)?;
+            self.pending = Some((iter + 1, pending));
+        }
+
+        // ---- Phase 3: micro-batched update ----------------------------
+        let upd = self.update.run(
+            ctx.engine,
+            ctx.store,
+            ctx.base,
+            &groups,
+            &selected,
+            cfg.algo.kl_coef as f32,
+            cfg.algo.lr as f32,
+            &cfg.hwsim,
+        )?;
+
+        // ---- Clock: overlap-aware charging ----------------------------
+        // A prefetched inference phase ran concurrently with the previous
+        // update; only its overhang advances the clock.
+        let concurrent = if prefetched { self.last_update_time } else { 0.0 };
+        let charged_inference = ctx.clock.advance_hidden(sim_inference, concurrent);
+        ctx.clock.advance(upd.sim_update);
+        self.last_update_time = upd.sim_update;
+
+        let n_groups = groups.len().max(1) as f32;
+        Ok(StepReport {
+            train_reward: groups.iter().map(|gr| gr.mean_reward()).sum::<f32>() / n_groups,
+            train_acc: groups.iter().map(|gr| gr.mean_accuracy()).sum::<f32>() / n_groups,
+            completion_len: groups.iter().map(|gr| gr.mean_gen_len()).sum::<f32>() / n_groups,
+            loss: upd.loss,
+            clip_frac: upd.clip_frac,
+            kl: upd.kl,
+            micro_steps: upd.micro_steps,
+            rollouts_generated,
+            rollouts_trained: upd.rollouts_trained,
+            sim_inference,
+            sim_update: upd.sim_update,
+            sim_step: charged_inference + upd.sim_update,
+            sim_overlap_saved: sim_inference - charged_inference,
+            sel_stats,
+            sel_variance,
+        })
+    }
+
+}
+
+/// Snapshot everything generation for `iter` needs from the live trainer
+/// state. The parameter clones are what make the pipelined overlap sound:
+/// the pool decodes against frozen copies while the optimizer mutates the
+/// store. The inline sync path pays one extra params copy per iteration,
+/// which is noise next to the per-call literal upload the engine already
+/// does (`lit_f32` copies the full vector on every rollout call).
+fn snapshot_batch(ctx: &StepCtx, iter: usize) -> GenBatch {
+    let cfg = ctx.cfg;
+    let full: &[f32] = match ctx.base {
+        Some(b) => b,
+        None => &ctx.store.params,
+    };
+    let lora: Option<&[f32]> =
+        if ctx.engine.meta.is_lora() { Some(&ctx.store.params) } else { None };
+    let problems = ctx.task.batch(Split::Train, *ctx.prompt_cursor, cfg.run.prompts_per_iter);
+    GenBatch {
+        params: Arc::new(full.to_vec()),
+        lora: lora.map(|l| Arc::new(l.to_vec())),
+        ref_params: ctx.ref_params.clone(),
+        ref_lora: ctx.ref_lora.clone(),
+        problems: Arc::new(problems),
+        n: cfg.algo.n,
+        temperature: cfg.algo.temperature as f32,
+        run_seed: cfg.run.seed,
+        iter: iter as u64,
+        task: ctx.task,
+        weights: RewardWeights::default(),
+    }
+}

@@ -1,0 +1,331 @@
+//! Real multi-threaded rollout generation.
+//!
+//! The hwsim clock always *simulated* `hwsim.workers` parallel devices,
+//! but the seed trainer generated groups prompt-by-prompt on one thread —
+//! the worker parallelism existed only on paper. [`RolloutEngine`] makes
+//! it real: an iteration's rollout calls (planned by
+//! [`crate::rollout::plan_calls`], which also packs partial batches across
+//! prompt groups) are fanned over a pool of OS threads via a shared work
+//! queue, so generation saturates however many cores the host has.
+//!
+//! The PJRT [`Engine`] is not `Send`/`Sync` (single-threaded client,
+//! `Rc`-cached executables), so the pool cannot share the trainer's
+//! engine. Instead **each worker thread lazily loads its own engine
+//! replica** of the same artifact profile — the replica compiles the
+//! rollout program once on first use and is reused for the rest of the
+//! run. Inputs cross the thread boundary as [`GenBatch`] snapshots
+//! (`Arc`-shared parameter vectors + problems), which is exactly the
+//! snapshot semantics the pipelined schedule needs anyway: generation of
+//! iteration *t+1* runs against the pre-update policy while the main
+//! thread updates.
+//!
+//! Determinism: every call carries its own seed from the plan, and
+//! results are reassembled in plan order regardless of which worker
+//! finished first — `workers = 16` produces bit-identical rollouts to
+//! `workers = 1`.
+
+use crate::coordinator::group::PromptGroup;
+use crate::reward::RewardWeights;
+use crate::rollout::{execute_call, plan_calls, CallRollout, InferenceStats, PlannedCall};
+use crate::runtime::Engine;
+use crate::tasks::{Problem, TaskKind};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Everything one iteration's generation needs, snapshotted so worker
+/// threads (and the pipelined schedule) can run it independently of the
+/// trainer's live parameter store.
+#[derive(Debug, Clone)]
+pub struct GenBatch {
+    /// Full-parameter vector rollouts decode with (the frozen base in
+    /// LoRA profiles).
+    pub params: Arc<Vec<f32>>,
+    /// Trainable adapter vector (LoRA profiles only).
+    pub lora: Option<Arc<Vec<f32>>>,
+    /// Reference-policy parameters for the KL term (when kl_coef > 0).
+    pub ref_params: Option<Arc<Vec<f32>>>,
+    pub ref_lora: Option<Arc<Vec<f32>>>,
+    /// The iteration's prompt batch, one group per problem.
+    pub problems: Arc<Vec<Problem>>,
+    /// Rollouts per prompt (the paper's `n`).
+    pub n: usize,
+    pub temperature: f32,
+    pub run_seed: u64,
+    pub iter: u64,
+    pub task: TaskKind,
+    pub weights: RewardWeights,
+}
+
+/// One queued rollout call for a worker thread.
+struct Job {
+    batch_id: u64,
+    call_idx: usize,
+    call: PlannedCall,
+    batch: Arc<GenBatch>,
+}
+
+type CallOut = (Vec<CallRollout>, usize);
+type CallResult = (u64, usize, Result<CallOut>);
+
+struct Pool {
+    job_tx: mpsc::Sender<Job>,
+    result_rx: mpsc::Receiver<CallResult>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Handle to an in-flight generation batch (pipelined prefetch). Redeem
+/// with [`RolloutEngine::collect`].
+pub struct PendingGen {
+    batch_id: u64,
+    plan: Vec<PlannedCall>,
+    batch: Arc<GenBatch>,
+}
+
+/// A pool of rollout worker threads, each owning an engine replica.
+///
+/// With `workers <= 1`, [`Self::generate`] runs inline on the trainer's
+/// engine (no replica, no thread hop) — byte-identical to the sequential
+/// path and free of the second compile. [`Self::submit`] always uses the
+/// pool: a dedicated thread is what lets generation overlap the
+/// main-thread update even with one simulated worker.
+pub struct RolloutEngine {
+    artifacts: PathBuf,
+    profile: String,
+    pub workers: usize,
+    pool: Option<Pool>,
+    next_batch_id: u64,
+    in_flight: bool,
+}
+
+impl RolloutEngine {
+    pub fn new(artifacts: PathBuf, profile: impl Into<String>, workers: usize) -> Self {
+        Self {
+            artifacts,
+            profile: profile.into(),
+            workers,
+            pool: None,
+            next_batch_id: 0,
+            in_flight: false,
+        }
+    }
+
+    /// Spawn the worker threads on first use (engine replicas load lazily
+    /// inside each thread, on its first job). The real thread count is
+    /// capped at the host's parallelism — simulating 8 accelerators on a
+    /// 4-core laptop must not oversubscribe it with 8 engine replicas;
+    /// results are bit-identical for any pool size.
+    fn ensure_pool(&mut self) -> Result<&Pool> {
+        if self.pool.is_none() {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let threads = self.workers.clamp(1, cores.max(1));
+            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            let job_rx = Arc::new(Mutex::new(job_rx));
+            let (res_tx, result_rx) = mpsc::channel::<CallResult>();
+            let mut handles = Vec::with_capacity(threads);
+            for w in 0..threads {
+                let rx = Arc::clone(&job_rx);
+                let tx = res_tx.clone();
+                let artifacts = self.artifacts.clone();
+                let profile = self.profile.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("rollout-worker-{w}"))
+                    .spawn(move || worker_main(artifacts, profile, rx, tx))
+                    .with_context(|| format!("spawning rollout worker {w}"))?;
+                handles.push(handle);
+            }
+            self.pool = Some(Pool { job_tx, result_rx, handles });
+        }
+        Ok(self.pool.as_ref().expect("just ensured"))
+    }
+
+    /// Generate every group of `batch` synchronously and return them in
+    /// prompt order with the aggregated inference stats.
+    pub fn generate(
+        &mut self,
+        engine: &Engine,
+        batch: GenBatch,
+    ) -> Result<(Vec<PromptGroup>, InferenceStats)> {
+        let br = engine.meta.config.rollout_batch;
+        let plan = plan_calls(&batch.problems, batch.n, br, batch.run_seed, batch.iter);
+        if self.workers <= 1 {
+            let mut outs = Vec::with_capacity(plan.len());
+            for call in &plan {
+                outs.push(run_call(engine, &batch, call)?);
+            }
+            return Ok(assemble(&batch, &plan, outs));
+        }
+        let pending = self.submit_plan(plan, Arc::new(batch))?;
+        self.collect(pending)
+    }
+
+    /// Start generating `batch` on the pool and return immediately — the
+    /// pipelined schedule's prefetch. `br` is the profile's rollout batch
+    /// size (`engine.meta.config.rollout_batch`). At most one batch may be
+    /// in flight.
+    pub fn submit(&mut self, br: usize, batch: GenBatch) -> Result<PendingGen> {
+        let plan = plan_calls(&batch.problems, batch.n, br, batch.run_seed, batch.iter);
+        self.submit_plan(plan, Arc::new(batch))
+    }
+
+    fn submit_plan(&mut self, plan: Vec<PlannedCall>, batch: Arc<GenBatch>) -> Result<PendingGen> {
+        if self.in_flight {
+            bail!("a rollout generation batch is already in flight");
+        }
+        let batch_id = self.next_batch_id;
+        self.next_batch_id += 1;
+        let pool = self.ensure_pool()?;
+        for (call_idx, call) in plan.iter().enumerate() {
+            pool.job_tx
+                .send(Job { batch_id, call_idx, call: call.clone(), batch: Arc::clone(&batch) })
+                .map_err(|_| anyhow!("rollout worker threads exited; pool is gone"))?;
+        }
+        self.in_flight = true;
+        Ok(PendingGen { batch_id, plan, batch })
+    }
+
+    /// Block until every call of `pending` finished and assemble the
+    /// groups in plan order (independent of worker completion order).
+    pub fn collect(&mut self, pending: PendingGen) -> Result<(Vec<PromptGroup>, InferenceStats)> {
+        // collect() consumes the in-flight batch whatever happens next —
+        // a broken pool must surface its own error on later submits, not
+        // a misleading "already in flight".
+        self.in_flight = false;
+        let pool = self
+            .pool
+            .as_ref()
+            .ok_or_else(|| anyhow!("collect without a running pool"))?;
+        let mut slots: Vec<Option<Result<CallOut>>> =
+            (0..pending.plan.len()).map(|_| None).collect();
+        let mut got = 0;
+        while got < pending.plan.len() {
+            let (bid, idx, res) = pool
+                .result_rx
+                .recv()
+                .map_err(|_| anyhow!("rollout workers hung up mid-batch"))?;
+            if bid != pending.batch_id {
+                continue; // stragglers of a discarded batch
+            }
+            slots[idx] = Some(res);
+            got += 1;
+        }
+        let mut outs = Vec::with_capacity(slots.len());
+        for s in slots {
+            outs.push(s.expect("all slots filled")?);
+        }
+        Ok(assemble(&pending.batch, &pending.plan, outs))
+    }
+}
+
+impl Drop for RolloutEngine {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            drop(pool.job_tx); // workers exit when the job channel closes
+            drop(pool.result_rx);
+            for h in pool.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Execute one planned call against an engine (worker replica or the
+/// trainer's own engine on the inline path).
+fn run_call(engine: &Engine, batch: &GenBatch, call: &PlannedCall) -> Result<CallOut> {
+    execute_call(
+        engine,
+        &batch.params,
+        batch.lora.as_deref().map(|v| v.as_slice()),
+        batch.ref_params.as_deref().map(|v| v.as_slice()),
+        batch.ref_lora.as_deref().map(|v| v.as_slice()),
+        batch.temperature,
+        call,
+        &batch.problems,
+        batch.task,
+        &batch.weights,
+    )
+}
+
+/// Reassemble per-call outputs (plan order) into per-prompt groups. Each
+/// group's rollout order matches the sequential path: full calls first,
+/// remainder rows after.
+fn assemble(
+    batch: &GenBatch,
+    plan: &[PlannedCall],
+    outs: Vec<CallOut>,
+) -> (Vec<PromptGroup>, InferenceStats) {
+    debug_assert_eq!(plan.len(), outs.len());
+    let mut groups: Vec<PromptGroup> = batch
+        .problems
+        .iter()
+        .map(|p| PromptGroup { problem: p.clone(), rollouts: Vec::with_capacity(batch.n) })
+        .collect();
+    let mut stats = InferenceStats::default();
+    for (kept, gen_tokens) in outs {
+        stats.calls += 1;
+        stats.total_gen_tokens += gen_tokens;
+        for cr in kept {
+            groups[cr.group_idx].rollouts.push(cr.record);
+        }
+    }
+    stats.rollouts = groups.iter().map(|g| g.rollouts.len()).sum();
+    (groups, stats)
+}
+
+/// Worker thread body: pull calls off the shared queue until the channel
+/// closes. The engine replica is loaded on the first job so idle pools
+/// (e.g. sync schedule with one worker) never pay a compile.
+fn worker_main(
+    artifacts: PathBuf,
+    profile: String,
+    jobs: Arc<Mutex<mpsc::Receiver<Job>>>,
+    results: mpsc::Sender<CallResult>,
+) {
+    let mut engine: Option<Engine> = None;
+    loop {
+        // Holding the lock only while blocked in recv: exactly one idle
+        // worker waits inside recv at a time; the others queue on the
+        // mutex and all of them *process* jobs concurrently.
+        let job = match jobs.lock() {
+            Ok(rx) => rx.recv(),
+            Err(_) => return, // poisoned: a sibling panicked
+        };
+        let Ok(job) = job else { return }; // channel closed: shutdown
+        if engine.is_none() {
+            match Engine::load(&artifacts, &profile) {
+                Ok(mut e) => {
+                    e.quiet = true;
+                    engine = Some(e);
+                }
+                Err(e) => {
+                    let msg = anyhow!("rollout worker failed to load engine replica: {e}");
+                    let _ = results.send((job.batch_id, job.call_idx, Err(msg)));
+                    continue;
+                }
+            }
+        }
+        // A panicking call must still produce a CallResult — otherwise
+        // collect() would wait forever for the missing slot. The replica
+        // is discarded after a panic (its internal state is suspect).
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_call(engine.as_ref().expect("loaded above"), &job.batch, &job.call)
+        }));
+        let res = match caught {
+            Ok(r) => r,
+            Err(panic) => {
+                engine = None;
+                let what = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                Err(anyhow!("rollout worker panicked executing call: {what}"))
+            }
+        };
+        if results.send((job.batch_id, job.call_idx, res)).is_err() {
+            return; // receiver gone: engine shut down
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! The policy-update phase as a reusable engine: micro-batch packing,
+//! gradient accumulation, and the fused optimizer apply.
+//!
+//! Owns the [`GradAccumulator`] buffer across iterations (allocation-free
+//! after the first) and reproduces the seed trainer's update semantics
+//! exactly: selected rollouts are packed into fixed-size `B_u`
+//! micro-batches, each runs the `grad` artifact, gradients accumulate
+//! with padded-slot weighting, and one AdamW apply finishes the
+//! iteration. The hwsim charge (`update_time`) is computed here so every
+//! caller — sync or pipelined — prices the phase identically, and an
+//! iteration whose selection dropped every group performs (and is
+//! charged) nothing.
+
+use crate::coordinator::accum::GradAccumulator;
+use crate::coordinator::group::{PromptGroup, SelectedRollout};
+use crate::hwsim::HwModel;
+use crate::runtime::{Engine, MicroBatch, ParamStore, TensorF, TensorI};
+use anyhow::Result;
+
+/// Summary of one update phase.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UpdateOut {
+    pub loss: f32,
+    pub clip_frac: f32,
+    pub kl: f32,
+    pub micro_steps: usize,
+    pub rollouts_trained: usize,
+    /// Simulated phase time (zero when nothing was selected).
+    pub sim_update: f64,
+}
+
+/// Micro-batch packer + gradient-accumulation engine.
+pub struct UpdateEngine {
+    accum: GradAccumulator,
+}
+
+impl UpdateEngine {
+    /// `param_width` is the trainable-vector length (`store.len()`).
+    pub fn new(param_width: usize) -> Self {
+        Self { accum: GradAccumulator::new(param_width) }
+    }
+
+    /// Run one full update phase over `selected` and apply the optimizer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &mut self,
+        engine: &Engine,
+        store: &mut ParamStore,
+        base: Option<&[f32]>,
+        groups: &[PromptGroup],
+        selected: &[SelectedRollout],
+        kl_coef: f32,
+        lr: f32,
+        hw: &HwModel,
+    ) -> Result<UpdateOut> {
+        let bu = engine.meta.config.update_batch;
+        let g = engine.meta.gen_len;
+        let t = engine.meta.config.seq_len;
+        self.accum.reset();
+        let mut loss_sum = 0f64;
+        let mut clip_sum = 0f64;
+        let mut kl_sum = 0f64;
+        for chunk in selected.chunks(bu) {
+            let mut tokens = vec![crate::tasks::tokenizer::PAD; bu * t];
+            let mut pads = vec![0i32; bu];
+            let mut gen_mask = vec![0.0f32; bu * g];
+            let mut old_lp = vec![0.0f32; bu * g];
+            let mut ref_lp = vec![0.0f32; bu * g];
+            let mut adv = vec![0.0f32; bu];
+            for (b, sel) in chunk.iter().enumerate() {
+                let r = &groups[sel.group_idx].rollouts[sel.rollout_idx];
+                tokens[b * t..(b + 1) * t].copy_from_slice(&r.tokens);
+                pads[b] = r.pad_len;
+                gen_mask[b * g..(b + 1) * g].copy_from_slice(&r.gen_mask);
+                old_lp[b * g..(b + 1) * g].copy_from_slice(&r.old_lp);
+                ref_lp[b * g..(b + 1) * g].copy_from_slice(&r.ref_lp);
+                adv[b] = sel.advantage;
+            }
+            let mb = MicroBatch {
+                tokens: TensorI::new(tokens, &[bu, t])?,
+                pad_len: pads,
+                gen_mask: TensorF::new(gen_mask, &[bu, g])?,
+                old_lp: TensorF::new(old_lp, &[bu, g])?,
+                adv,
+                ref_lp: TensorF::new(ref_lp, &[bu, g])?,
+            };
+            let out = engine.grad(&store.params, base, &mb, kl_coef)?;
+            self.accum.add(&out.grads, bu as f64);
+            loss_sum += out.loss as f64 * chunk.len() as f64;
+            clip_sum += out.clip_frac as f64 * chunk.len() as f64;
+            kl_sum += out.kl as f64 * chunk.len() as f64;
+        }
+        let micro_steps = self.accum.micro_steps();
+        let rollouts_trained = selected.len();
+        // an iteration whose selection dropped every group (all groups
+        // zero-signal) performs no update and must not be charged for one
+        let sim_update = if rollouts_trained > 0 {
+            hw.update_time(rollouts_trained, engine.meta.is_lora())
+        } else {
+            0.0
+        };
+        if rollouts_trained > 0 {
+            let grads = self.accum.mean(rollouts_trained);
+            engine.update(store, &grads, lr)?;
+        }
+        Ok(UpdateOut {
+            loss: (loss_sum / rollouts_trained.max(1) as f64) as f32,
+            clip_frac: (clip_sum / rollouts_trained.max(1) as f64) as f32,
+            kl: (kl_sum / rollouts_trained.max(1) as f64) as f32,
+            micro_steps,
+            rollouts_trained,
+            sim_update,
+        })
+    }
+}

@@ -7,12 +7,19 @@
 //! * [`advantage`] — subset advantage normalization (§A.3 After/Before).
 //! * [`group`] — per-prompt rollout groups and update-batch assembly.
 //! * [`accum`] — the gradient-accumulation engine (what GRPO-GA pays for).
-//! * [`worker`] — simulated multi-accelerator topology.
-//! * [`scheduler`] — the GRPO / GRPO-GA / GRPO-PODS training loop.
+//! * [`exec`] — the staged training executor: real multi-threaded rollout
+//!   generation ([`exec::RolloutEngine`]), the update phase
+//!   ([`exec::UpdateEngine`]), and the schedule-aware driver
+//!   ([`exec::TrainLoop`], `sync` | `pipelined`).
+//! * [`worker`] — simulated multi-accelerator topology (shard math the
+//!   hwsim charges with; `exec` provides the real threads).
+//! * [`scheduler`] — the GRPO / GRPO-GA / GRPO-PODS trainer façade over
+//!   [`exec`].
 
 pub mod accum;
 pub mod advantage;
 pub mod downsample;
+pub mod exec;
 pub mod group;
 pub mod scheduler;
 pub mod select;

@@ -1,31 +1,37 @@
-//! The training-step state machine — GRPO / GRPO-GA / GRPO-PODS schedules.
+//! The trainer façade — GRPO / GRPO-GA / GRPO-PODS over the staged
+//! executor.
 //!
 //! One [`Trainer::train_iteration`] implements Algorithm 1 over a batch of
-//! prompts:
+//! prompts by driving [`crate::coordinator::exec::TrainLoop`]:
 //!
-//! 1. **Inference phase** — generate `n` rollouts per prompt (sharded over
-//!    the simulated workers), verify them with the rule-based reward model.
+//! 1. **Inference phase** — `n` rollouts per prompt via the
+//!    [`crate::coordinator::exec::RolloutEngine`] (real thread pool sized
+//!    by `hwsim.workers`, cross-group call packing), verified with the
+//!    rule-based reward model.
 //! 2. **Select** — run the configured selector pipeline within each prompt
 //!    group (`m = n` for the GRPO/GA baselines), normalize advantages
 //!    (§A.3 mode), and record the per-iteration selection diagnostics.
-//! 3. **Policy-update phase** — pack the selected rollouts into fixed-size
-//!    micro-batches, run the `grad` artifact per micro-batch, accumulate
-//!    (the GA engine), all-reduce (simulated), apply fused AdamW.
+//! 3. **Policy-update phase** — the
+//!    [`crate::coordinator::exec::UpdateEngine`]: fixed-size micro-batches
+//!    through the `grad` artifact, gradient accumulation, all-reduce
+//!    (simulated), fused AdamW.
 //!
-//! The hwsim clock charges each phase per the calibrated cost model; the
-//! recorder logs both simulated and real time so every figure can be
-//! regenerated from the CSVs.
+//! Under `hwsim.schedule = "pipelined"` the executor additionally starts
+//! generating iteration *t+1* (on the rollout pool, against the
+//! pre-update policy) while phase 3 of iteration *t* runs on this thread;
+//! the hwsim clock then charges `max(inference, update)` for the
+//! overlapped portion. The recorder logs simulated and real time plus the
+//! per-iteration overlap savings so every figure can be regenerated from
+//! the CSVs.
 
-use crate::config::{AlgoKind, RunConfig};
-use crate::coordinator::accum::GradAccumulator;
-use crate::coordinator::group::{build_update_batch, PromptGroup};
+use crate::config::RunConfig;
+use crate::coordinator::exec::{StepCtx, TrainLoop};
 use crate::coordinator::select::Pipeline;
 use crate::eval;
 use crate::hwsim::SimClock;
 use crate::metrics::{EvalRow, IterRow, Recorder};
 use crate::reward::RewardWeights;
-use crate::rollout::{generate_group, GenRequest};
-use crate::runtime::{params as ckpt, Engine, MicroBatch, ParamStore, TensorF, TensorI};
+use crate::runtime::{params as ckpt, Engine, ParamStore, TensorF, TensorI};
 use crate::tasks::{Split, TaskKind};
 use anyhow::{anyhow, Result};
 use std::time::Instant;
@@ -44,6 +50,12 @@ pub struct IterStats {
     pub rollouts_trained: usize,
     pub sim_inference: f64,
     pub sim_update: f64,
+    /// What the simulated clock actually advanced during this step (less
+    /// than `sim_inference + sim_update` when phases overlapped).
+    pub sim_step: f64,
+    /// Simulated time hidden by overlapping this iteration's generation
+    /// with the previous update (zero under the sync schedule).
+    pub sim_overlap_saved: f64,
 }
 
 /// The leader: owns engine, parameters, clock, metrics and the RL loop.
@@ -55,8 +67,9 @@ pub struct Trainer {
     /// Frozen full-parameter base (LoRA profiles only).
     pub base: Option<Vec<f32>>,
     /// Reference-policy snapshot for the KL term (when kl_coef > 0).
-    pub ref_params: Option<Vec<f32>>,
-    pub ref_lora: Option<Vec<f32>>,
+    /// Arc-shared: generation snapshots clone the handle, not the vector.
+    pub ref_params: Option<std::sync::Arc<Vec<f32>>>,
+    pub ref_lora: Option<std::sync::Arc<Vec<f32>>>,
     pub clock: SimClock,
     pub recorder: Recorder,
     pub task: TaskKind,
@@ -68,7 +81,9 @@ pub struct Trainer {
     /// stages reseed per group from `(run_seed, iter, prompt_id)`, so no
     /// trainer-level RNG is involved in selection.
     pipeline: Pipeline,
-    accum: GradAccumulator,
+    /// The staged executor: rollout thread pool, update engine, schedule
+    /// state (pipelined prefetch + overlap accounting).
+    pub exec: TrainLoop,
     prompt_cursor: u64,
     started: Instant,
 }
@@ -115,7 +130,13 @@ impl Trainer {
             (ParamStore::new(p0), None)
         };
 
-        let accum = GradAccumulator::new(store.len());
+        let exec = TrainLoop::new(
+            artifacts_dir.to_path_buf(),
+            &cfg.run.profile,
+            cfg.hwsim.workers,
+            cfg.hwsim.schedule,
+            store.len(),
+        );
         let pipeline = cfg.selector();
         Ok(Self {
             engine,
@@ -129,7 +150,7 @@ impl Trainer {
             task,
             extra_evals: Vec::new(),
             pipeline,
-            accum,
+            exec,
             prompt_cursor: 0,
             started: Instant::now(),
         })
@@ -156,8 +177,8 @@ impl Trainer {
     /// before RL). No-op if kl_coef == 0.
     pub fn snapshot_reference(&mut self) {
         if self.cfg.algo.kl_coef > 0.0 {
-            self.ref_params = Some(self.full_params().to_vec());
-            self.ref_lora = self.lora_vec().map(|l| l.to_vec());
+            self.ref_params = Some(std::sync::Arc::new(self.full_params().to_vec()));
+            self.ref_lora = self.lora_vec().map(|l| std::sync::Arc::new(l.to_vec()));
         }
     }
 
@@ -212,152 +233,69 @@ impl Trainer {
     }
 
     /// One full Algorithm-1 iteration over `prompts_per_iter` prompts.
+    ///
+    /// Under the pipelined schedule this also prefetches generation of
+    /// `iter + 1` (unless `iter` is the run's final iteration), so the
+    /// rollout pool works while the update runs here.
     pub fn train_iteration(&mut self, iter: usize) -> Result<IterStats> {
-        let cfg = &self.cfg;
-        let n = cfg.algo.n;
-        let m = match cfg.algo_kind() {
-            AlgoKind::GrpoPods => cfg.algo.m,
-            _ => None,
+        let prefetch_next = iter + 1 < self.cfg.run.iterations;
+        self.step(iter, prefetch_next)
+    }
+
+    /// One executor step with explicit prefetch control (drivers that
+    /// know their horizon — benches, sweeps — call this directly).
+    pub fn step(&mut self, iter: usize, prefetch_next: bool) -> Result<IterStats> {
+        let ctx = StepCtx {
+            engine: &self.engine,
+            store: &mut self.store,
+            base: self.base.as_deref(),
+            ref_params: self.ref_params.clone(),
+            ref_lora: self.ref_lora.clone(),
+            cfg: &self.cfg,
+            pipeline: &self.pipeline,
+            task: self.task,
+            clock: &mut self.clock,
+            prompt_cursor: &mut self.prompt_cursor,
         };
-        let bu = self.engine.meta.config.update_batch;
-        let g = self.engine.meta.gen_len;
-        let t = self.engine.meta.config.seq_len;
-        let weights = RewardWeights::default();
-
-        // ---- Phase 1: inference ------------------------------------------
-        let problems = self
-            .task
-            .batch(Split::Train, self.prompt_cursor, cfg.run.prompts_per_iter);
-        self.prompt_cursor += cfg.run.prompts_per_iter as u64;
-
-        let mut groups: Vec<PromptGroup> = Vec::with_capacity(problems.len());
-        let mut total_gen_tokens = 0usize;
-        for problem in &problems {
-            let req = GenRequest {
-                params: self.full_params(),
-                lora: self.lora_vec(),
-                ref_params: self.ref_params.as_deref(),
-                ref_lora: self.ref_lora.as_deref(),
-                n,
-                temperature: cfg.algo.temperature as f32,
-                run_seed: cfg.run.seed,
-                iter: iter as u64,
-                weights,
-            };
-            let (group, stats) = generate_group(&self.engine, &req, self.task, problem)?;
-            total_gen_tokens += stats.total_gen_tokens;
-            groups.push(group);
-        }
-        let rollouts_generated = groups.iter().map(|gr| gr.rollouts.len()).sum::<usize>();
-        let avg_tokens = total_gen_tokens as f64 / rollouts_generated.max(1) as f64;
-        let sim_inference = cfg.hwsim.inference_time(rollouts_generated, avg_tokens);
-
-        // ---- Phase 2: select + advantages --------------------------------
-        let (selected, sel_stats) = build_update_batch(
-            &groups,
-            &self.pipeline,
-            m,
-            cfg.norm_mode(),
-            cfg.run.seed,
-            iter as u64,
-        )?;
-        let rollouts_trained = selected.len();
-        let sel_rewards: Vec<f32> = selected
-            .iter()
-            .map(|s| groups[s.group_idx].rollouts[s.rollout_idx].total_reward)
-            .collect();
-        let sel_idx: Vec<usize> = (0..sel_rewards.len()).collect();
-        let sel_variance =
-            crate::coordinator::downsample::subset_variance(&sel_rewards, &sel_idx);
-
-        // ---- Phase 3: micro-batched update (the GA engine) ---------------
-        self.accum.reset();
-        let mut loss_sum = 0f64;
-        let mut clip_sum = 0f64;
-        let mut kl_sum = 0f64;
-        for chunk in selected.chunks(bu) {
-            let mut tokens = vec![crate::tasks::tokenizer::PAD; bu * t];
-            let mut pads = vec![0i32; bu];
-            let mut gen_mask = vec![0.0f32; bu * g];
-            let mut old_lp = vec![0.0f32; bu * g];
-            let mut ref_lp = vec![0.0f32; bu * g];
-            let mut adv = vec![0.0f32; bu];
-            for (b, sel) in chunk.iter().enumerate() {
-                let r = &groups[sel.group_idx].rollouts[sel.rollout_idx];
-                tokens[b * t..(b + 1) * t].copy_from_slice(&r.tokens);
-                pads[b] = r.pad_len;
-                gen_mask[b * g..(b + 1) * g].copy_from_slice(&r.gen_mask);
-                old_lp[b * g..(b + 1) * g].copy_from_slice(&r.old_lp);
-                ref_lp[b * g..(b + 1) * g].copy_from_slice(&r.ref_lp);
-                adv[b] = sel.advantage;
-            }
-            let mb = MicroBatch {
-                tokens: TensorI::new(tokens, &[bu, t])?,
-                pad_len: pads,
-                gen_mask: TensorF::new(gen_mask, &[bu, g])?,
-                old_lp: TensorF::new(old_lp, &[bu, g])?,
-                adv,
-                ref_lp: TensorF::new(ref_lp, &[bu, g])?,
-            };
-            let out = self
-                .engine
-                .grad(&self.store.params, self.base.as_deref(), &mb, cfg.algo.kl_coef as f32)?;
-            self.accum.add(&out.grads, bu as f64);
-            loss_sum += out.loss as f64 * chunk.len() as f64;
-            clip_sum += out.clip_frac as f64 * chunk.len() as f64;
-            kl_sum += out.kl as f64 * chunk.len() as f64;
-        }
-        let micro_steps = self.accum.micro_steps();
-        // an iteration whose selection dropped every group (all groups
-        // zero-signal) performs no update and must not be charged for one
-        let sim_update = if rollouts_trained > 0 {
-            cfg.hwsim.update_time(rollouts_trained, self.engine.meta.is_lora())
-        } else {
-            0.0
-        };
-
-        if rollouts_trained > 0 {
-            let grads = self.accum.mean(rollouts_trained);
-            self.engine.update(&mut self.store, &grads, cfg.algo.lr as f32)?;
-        }
-
-        self.clock.advance(sim_inference + sim_update);
+        let r = self.exec.step(ctx, iter, prefetch_next)?;
 
         let stats = IterStats {
-            train_reward: groups.iter().map(|gr| gr.mean_reward()).sum::<f32>()
-                / groups.len().max(1) as f32,
-            train_acc: groups.iter().map(|gr| gr.mean_accuracy()).sum::<f32>()
-                / groups.len().max(1) as f32,
-            completion_len: groups.iter().map(|gr| gr.mean_gen_len()).sum::<f32>()
-                / groups.len().max(1) as f32,
-            loss: (loss_sum / rollouts_trained.max(1) as f64) as f32,
-            clip_frac: (clip_sum / rollouts_trained.max(1) as f64) as f32,
-            kl: (kl_sum / rollouts_trained.max(1) as f64) as f32,
-            micro_steps,
-            rollouts_generated,
-            rollouts_trained,
-            sim_inference,
-            sim_update,
+            train_reward: r.train_reward,
+            train_acc: r.train_acc,
+            completion_len: r.completion_len,
+            loss: r.loss,
+            clip_frac: r.clip_frac,
+            kl: r.kl,
+            micro_steps: r.micro_steps,
+            rollouts_generated: r.rollouts_generated,
+            rollouts_trained: r.rollouts_trained,
+            sim_inference: r.sim_inference,
+            sim_update: r.sim_update,
+            sim_step: r.sim_step,
+            sim_overlap_saved: r.sim_overlap_saved,
         };
         self.recorder.push_iter(IterRow {
             iter,
             sim_time: self.clock.now(),
             real_time: self.started.elapsed().as_secs_f64(),
-            sim_inference_time: sim_inference,
-            sim_update_time: sim_update,
+            sim_inference_time: r.sim_inference,
+            sim_update_time: r.sim_update,
             train_reward: stats.train_reward,
             train_acc: stats.train_acc,
             completion_len: stats.completion_len,
-            sel_variance,
-            sel_tokens_kept: sel_stats.tokens_kept,
-            sel_tokens_dropped: sel_stats.tokens_dropped,
-            sel_groups_dropped: sel_stats.groups_dropped,
+            sel_variance: r.sel_variance,
+            sel_tokens_kept: r.sel_stats.tokens_kept,
+            sel_tokens_dropped: r.sel_stats.tokens_dropped,
+            sel_groups_dropped: r.sel_stats.groups_dropped,
             loss: stats.loss,
             clip_frac: stats.clip_frac,
             kl: stats.kl,
-            micro_steps,
-            rollouts_generated,
-            rollouts_trained,
+            micro_steps: r.micro_steps,
+            rollouts_generated: r.rollouts_generated,
+            rollouts_trained: r.rollouts_trained,
+            sim_step_time: r.sim_step,
+            sim_overlap_saved: r.sim_overlap_saved,
+            schedule: self.cfg.hwsim.schedule.name().to_string(),
         });
         Ok(stats)
     }
@@ -429,6 +367,15 @@ impl Trainer {
                     stats.clip_frac,
                 );
             }
+        }
+        if self.clock.overlap_saved() > 0.0 {
+            eprintln!(
+                "[train {}] schedule {}: sim {:.1}s total, {:.1}s hidden by overlap",
+                self.cfg.run.name,
+                self.cfg.hwsim.schedule.name(),
+                self.clock.now(),
+                self.clock.overlap_saved(),
+            );
         }
         let out_dir = std::path::Path::new(&self.cfg.run.out_dir);
         self.recorder.write_csv(out_dir, &self.cfg.run.name)?;

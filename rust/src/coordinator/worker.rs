@@ -3,12 +3,18 @@
 //! The paper's distributed settings (e)–(f) run 8 accelerators under
 //! DeepSpeed ZeRO-2: every device generates a shard of the rollouts, then
 //! the update phase proceeds in lock-step micro-batches with a gradient
-//! all-reduce per micro-step. On this testbed all *computation* executes on
-//! one CPU PJRT device, but the **control flow** is identical: the leader
-//! partitions work across logical workers, walks the shards, and the hwsim
-//! clock charges the phases as if the workers ran concurrently (inference:
-//! max over workers) or in lock-step (updates: micro-steps × (compute +
-//! collective)).
+//! all-reduce per micro-step. The hwsim clock charges the phases as if
+//! the workers ran concurrently (inference: max over workers) or in
+//! lock-step (updates: micro-steps × (compute + collective)); this module
+//! provides the shard math that charging is built on.
+//!
+//! Since the staged-executor refactor the *inference* phase is also
+//! genuinely parallel: [`crate::coordinator::exec::RolloutEngine`] runs
+//! `workers` real OS threads (one PJRT engine replica each, capped at
+//! host parallelism) pulling rollout calls off a shared queue. The update
+//! phase still executes on the leader thread — exactly the asymmetry the
+//! paper exploits (generation scales out, updates are memory-bound and
+//! sequential).
 
 /// A leader's view of `w` logical workers.
 #[derive(Debug, Clone, Copy)]

@@ -11,6 +11,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod sched;
 pub mod table3;
 
 use crate::config::{AlgoSection, RunConfig, RunSection, SftSection};
@@ -67,6 +68,8 @@ pub struct CfgBuilder {
     pub workers: usize,
     /// Override the hwsim per-device memory ceiling (None = default 32).
     pub mem_capacity: Option<usize>,
+    /// Executor schedule: "sync" | "pipelined" (hwsim.schedule).
+    pub schedule: String,
     pub sft_steps: usize,
     pub sft_lr: f64,
     pub sft_pool: usize,
@@ -96,6 +99,7 @@ impl Default for CfgBuilder {
             temperature: 1.0,
             workers: 1,
             mem_capacity: None,
+            schedule: "sync".into(),
             sft_steps: 0,
             sft_lr: 2e-3,
             sft_pool: 512,
@@ -132,6 +136,7 @@ impl CfgBuilder {
             hwsim: HwModel {
                 workers: self.workers,
                 mem_capacity_rollouts: self.mem_capacity.unwrap_or(HwModel::default().mem_capacity_rollouts),
+                schedule: crate::hwsim::Schedule::parse(&self.schedule)?,
                 ..Default::default()
             },
             sft: if self.sft_steps > 0 {

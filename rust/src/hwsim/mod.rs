@@ -16,6 +16,47 @@
 //! (defaults calibrated to Fig. 1's curves); [`SimClock`] integrates phase
 //! times into the simulated wall-clock that the experiment figures use as
 //! their x-axis. Real CPU time is logged alongside — see metrics.
+//!
+//! The `[hwsim]` section also selects the executor [`Schedule`]: `"sync"`
+//! runs the two phases back-to-back (Algorithm 1 as written), while
+//! `"pipelined"` overlaps generation of iteration *t+1* with the policy
+//! update of iteration *t* (one-step off-policy; sound because the loss
+//! uses stored behaviour log-probs). Under overlap the clock charges
+//! `max(inference, update)` instead of the sum — [`SimClock`] tracks the
+//! hidden time as `overlap_saved`.
+
+use anyhow::{anyhow, Result};
+
+/// Executor schedule: how the inference and update phases interleave
+/// across iterations (see [`crate::coordinator::exec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Schedule {
+    /// Generate, select, update, strictly in sequence — the paper's
+    /// Algorithm 1 and the seed trainer's behaviour.
+    #[default]
+    Sync,
+    /// Overlap generation of iteration t+1 with the update of iteration t
+    /// (one-step off-policy). Simulated step time becomes
+    /// `max(inference, update)` for the overlapped portion.
+    Pipelined,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sync" => Ok(Self::Sync),
+            "pipelined" => Ok(Self::Pipelined),
+            other => Err(anyhow!("unknown hwsim.schedule {other:?} (sync|pipelined)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Sync => "sync",
+            Self::Pipelined => "pipelined",
+        }
+    }
+}
 
 /// Calibrated cost model. All times in (simulated) seconds.
 #[derive(Debug, Clone)]
@@ -46,6 +87,9 @@ pub struct HwModel {
     pub optimizer_time: f64,
     /// LoRA update discount: optimizer/comm touch only adapter weights.
     pub lora_update_scale: f64,
+    /// Executor schedule: `sync` (phases back-to-back) or `pipelined`
+    /// (generation of t+1 overlaps the update of t).
+    pub schedule: Schedule,
 }
 
 impl Default for HwModel {
@@ -65,15 +109,18 @@ impl Default for HwModel {
             comm_base: 0.55,
             optimizer_time: 0.35,
             lora_update_scale: 0.25,
+            schedule: Schedule::Sync,
         }
     }
 }
 
 impl HwModel {
     /// Parse from a `[hwsim]` config section; absent keys keep defaults.
+    /// Validation happens here, so a bad `[hwsim]` fails at config parse
+    /// with a descriptive error instead of tripping downstream asserts.
     pub fn from_section(sec: &crate::util::toml::SectionView) -> anyhow::Result<Self> {
         let d = Self::default();
-        Ok(Self {
+        let hw = Self {
             workers: sec.usize_or("workers", d.workers)?,
             tok_time_b1: sec.f64_or("tok_time_b1", d.tok_time_b1)?,
             tok_time_floor: sec.f64_or("tok_time_floor", d.tok_time_floor)?,
@@ -85,7 +132,50 @@ impl HwModel {
             comm_base: sec.f64_or("comm_base", d.comm_base)?,
             optimizer_time: sec.f64_or("optimizer_time", d.optimizer_time)?,
             lora_update_scale: sec.f64_or("lora_update_scale", d.lora_update_scale)?,
-        })
+            schedule: Schedule::parse(&sec.str_or("schedule", d.schedule.name())?)?,
+        };
+        hw.validate()?;
+        Ok(hw)
+    }
+
+    /// Reject configurations that would only fail deep inside the trainer
+    /// (`workers = 0` used to survive parsing and die on a downstream
+    /// assert / get silently clamped by `max(1)`).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.workers == 0 {
+            anyhow::bail!(
+                "hwsim.workers must be >= 1 (0 workers cannot generate rollouts; \
+                 use workers = 1 for the single-accelerator settings)"
+            );
+        }
+        if self.mem_capacity_rollouts == 0 {
+            anyhow::bail!(
+                "hwsim.mem_capacity_rollouts must be >= 1 (the per-device memory \
+                 ceiling bounds one update micro-batch)"
+            );
+        }
+        if self.batch_saturation < 1.0 || self.batch_half <= 0.0 {
+            anyhow::bail!(
+                "hwsim.batch_saturation must be >= 1 and hwsim.batch_half > 0 \
+                 (got saturation={}, half={})",
+                self.batch_saturation,
+                self.batch_half
+            );
+        }
+        for (name, v) in [
+            ("tok_time_b1", self.tok_time_b1),
+            ("tok_time_floor", self.tok_time_floor),
+            ("microbatch_fixed", self.microbatch_fixed),
+            ("microbatch_time", self.microbatch_time),
+            ("comm_base", self.comm_base),
+            ("optimizer_time", self.optimizer_time),
+            ("lora_update_scale", self.lora_update_scale),
+        ] {
+            if v < 0.0 {
+                anyhow::bail!("hwsim.{name} must be non-negative (got {v})");
+            }
+        }
+        Ok(())
     }
 
     /// Per-token decode time at a given per-device rollout batch size
@@ -135,12 +225,26 @@ impl HwModel {
     pub fn step_time(&self, n_rollouts: usize, avg_tokens: f64, m_update: usize, lora: bool) -> f64 {
         self.inference_time(n_rollouts, avg_tokens) + self.update_time(m_update, lora)
     }
+
+    /// Steady-state step time when generation of the next iteration runs
+    /// concurrently with the current update: the slower phase bounds the
+    /// step, the faster one is hidden.
+    pub fn overlapped_step_time(&self, inference: f64, update: f64) -> f64 {
+        inference.max(update)
+    }
 }
 
-/// Simulated wall clock.
+/// Simulated wall clock with overlap accounting.
+///
+/// Phases that run concurrently with already-charged work advance the
+/// clock only by the portion that sticks out past the concurrent phase
+/// ([`Self::advance_hidden`]); the hidden remainder accumulates in
+/// [`Self::overlap_saved`], so `sync_total == now() + overlap_saved()`
+/// always holds for a pipelined run.
 #[derive(Debug, Clone, Default)]
 pub struct SimClock {
     now: f64,
+    overlap_saved: f64,
 }
 
 impl SimClock {
@@ -153,8 +257,26 @@ impl SimClock {
         self.now += dt;
     }
 
+    /// Charge a phase of `cost` seconds that ran concurrently with
+    /// `concurrent` seconds of already-charged work: the clock advances by
+    /// `max(cost - concurrent, 0)` and the hidden `min(cost, concurrent)`
+    /// is recorded as overlap savings. Returns the amount actually charged.
+    pub fn advance_hidden(&mut self, cost: f64, concurrent: f64) -> f64 {
+        debug_assert!(cost >= 0.0 && concurrent >= 0.0, "negative phase time");
+        let charged = (cost - concurrent).max(0.0);
+        self.overlap_saved += cost.min(concurrent);
+        self.now += charged;
+        charged
+    }
+
     pub fn now(&self) -> f64 {
         self.now
+    }
+
+    /// Total simulated time hidden by phase overlap so far (zero for a
+    /// purely sequential run).
+    pub fn overlap_saved(&self) -> f64 {
+        self.overlap_saved
     }
 }
 
@@ -249,5 +371,61 @@ mod tests {
         c.advance(1.5);
         c.advance(2.5);
         assert_eq!(c.now(), 4.0);
+        assert_eq!(c.overlap_saved(), 0.0);
+    }
+
+    #[test]
+    fn overlap_charges_max_and_tracks_savings() {
+        // inference 3s fully hidden behind a 5s update: nothing charged
+        let mut c = SimClock::new();
+        assert_eq!(c.advance_hidden(3.0, 5.0), 0.0);
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.overlap_saved(), 3.0);
+        // inference 7s behind a 5s update: only the 2s overhang is charged
+        assert_eq!(c.advance_hidden(7.0, 5.0), 2.0);
+        assert_eq!(c.now(), 2.0);
+        assert_eq!(c.overlap_saved(), 8.0);
+        // charged + saved always reconstructs the sequential total
+        assert_eq!(c.now() + c.overlap_saved(), 3.0 + 7.0);
+    }
+
+    /// `advance(update) + advance_hidden(inference, update)` together charge
+    /// exactly `max(inference, update)` — the pipelined steady-state step.
+    #[test]
+    fn overlap_accounting_matches_overlapped_step_time() {
+        let hw = HwModel::default();
+        for_cases(200, |rng| {
+            let inf = rng.gen_range_inclusive(0, 400) as f64 / 10.0;
+            let upd = rng.gen_range_inclusive(0, 400) as f64 / 10.0;
+            let mut c = SimClock::new();
+            c.advance_hidden(inf, upd);
+            c.advance(upd);
+            assert!((c.now() - hw.overlapped_step_time(inf, upd)).abs() < 1e-12);
+            assert!((c.now() + c.overlap_saved() - (inf + upd)).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn schedule_parses_and_rejects_unknown() {
+        assert_eq!(Schedule::parse("sync").unwrap(), Schedule::Sync);
+        assert_eq!(Schedule::parse("pipelined").unwrap(), Schedule::Pipelined);
+        assert!(Schedule::parse("async").is_err());
+        assert_eq!(Schedule::default(), Schedule::Sync);
+        assert_eq!(Schedule::Pipelined.name(), "pipelined");
+    }
+
+    #[test]
+    fn hwmodel_validation_rejects_degenerate_sections() {
+        let mut hw = HwModel::default();
+        hw.validate().unwrap();
+        hw.workers = 0;
+        let err = hw.validate().unwrap_err().to_string();
+        assert!(err.contains("hwsim.workers"), "undescriptive error: {err}");
+        hw.workers = 1;
+        hw.mem_capacity_rollouts = 0;
+        assert!(hw.validate().is_err());
+        hw.mem_capacity_rollouts = 32;
+        hw.tok_time_b1 = -1.0;
+        assert!(hw.validate().unwrap_err().to_string().contains("tok_time_b1"));
     }
 }

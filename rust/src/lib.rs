@@ -13,19 +13,37 @@
 //! * **L3 — this crate**: the Rust coordinator owning the training loop and
 //!   executing the artifacts through PJRT ([`runtime`]).
 //!
-//! ## The L3 training loop, one iteration
+//! ## The L3 training loop: a staged executor
+//!
+//! One iteration is driven by [`coordinator::exec::TrainLoop`], which
+//! composes two engines under a config-selected schedule
+//! (`[hwsim] schedule = "sync" | "pipelined"`):
 //!
 //! ```text
+//!            coordinator::exec::RolloutEngine      ◄── hwsim.workers
+//!    (REAL thread pool: one PJRT engine replica per worker;
+//!     rollout::plan_calls packs partial batches across prompts)
+//!                         │
 //!  tasks ──► rollout ──► reward ──► coordinator::group (PromptGroup)
 //!                                        │
 //!                       coordinator::select  ◄── config `algo.rule` spec
 //!                (Selector pipelines: registry-resolved,
 //!                 per-group deterministic RNG, diagnostics)
 //!                                        │
-//!              coordinator::advantage ──► coordinator::accum ──► runtime
+//!       coordinator::advantage ──► coordinator::exec::UpdateEngine
+//!                 (micro-batch packing ──► accum ──► runtime)
 //!                                        │
-//!                     hwsim clock ──► metrics CSVs ──► exp figures
+//!          hwsim clock (overlap-aware) ──► metrics CSVs ──► exp figures
 //! ```
+//!
+//! **Schedules.** `sync` runs the phases back-to-back and replays the
+//! original sequential trainer exactly (golden-tested). `pipelined`
+//! prefetches generation of iteration *t+1* on the rollout pool — against
+//! the pre-update policy, one-step off-policy, sound because the GRPO
+//! loss ratios use stored behaviour log-probs — while the main thread
+//! updates; the simulated clock then charges `max(inference, update)`
+//! for the overlapped portion and records the hidden time per iteration
+//! (`sim_overlap_saved` in the train CSV).
 //!
 //! **Rollout selection** — the paper's contribution — is a first-class,
 //! extensible subsystem: [`coordinator::select`] defines a `Selector`
@@ -41,18 +59,23 @@
 //! Key modules:
 //!
 //! * [`config`] — TOML run configs (Table 1/2 settings under `configs/`).
-//! * [`coordinator::scheduler`] — the GRPO / GRPO-GA / GRPO-PODS state
-//!   machine ([`coordinator::scheduler::Trainer`]).
+//! * [`coordinator::exec`] — the staged executor: rollout thread pool,
+//!   update engine, schedule-aware driver.
+//! * [`coordinator::scheduler`] — the GRPO / GRPO-GA / GRPO-PODS trainer
+//!   façade ([`coordinator::scheduler::Trainer`]) over the executor.
 //! * [`coordinator::select`] — the pluggable selection subsystem.
-//! * [`hwsim`] — calibrated accelerator-cost model (the simulated clock
-//!   all figures plot against).
+//! * [`hwsim`] — calibrated accelerator-cost model, the executor
+//!   [`hwsim::Schedule`], and the overlap-aware simulated clock all
+//!   figures plot against.
 //! * [`tasks`] / [`reward`] / [`eval`] — synthetic verifiable-reasoning
 //!   task families, rule-based rewards, evaluation tracks.
-//! * [`exp`] — one driver per paper figure/table; [`metrics`] — the CSV
-//!   schema they consume.
+//! * [`exp`] — one driver per paper figure/table (plus the sync-vs-
+//!   pipelined schedule study); [`metrics`] — the CSV schema they
+//!   consume.
 //!
 //! Start at [`coordinator::scheduler::Trainer`] for the training step,
-//! and [`coordinator::select`] for the selection API.
+//! [`coordinator::exec`] for the executor, and [`coordinator::select`]
+//! for the selection API.
 
 pub mod config;
 pub mod coordinator;

@@ -3,7 +3,7 @@
 //! ```text
 //! pods train --config configs/setting_a.toml [--iterations N]
 //! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test
-//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|table3|all [--setting a] [--quick] [--probe]
+//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|table3|all [--setting a] [--quick] [--probe]
 //! pods info  --profile base
 //! ```
 //!
@@ -28,7 +28,7 @@ USAGE:
   pods train --config <path> [--iterations N] [--artifacts DIR]
   pods eval  --ckpt <path> [--task arith|poly|mcq] [--split train|test|platinum]
              [--profile NAME] [--problems N]
-  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|table3|all>
+  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|table3|all>
              [--setting a-f] [--quick] [--out-dir DIR] [--probe]
   pods info  [--profile NAME]
 ";
@@ -163,6 +163,7 @@ fn main() -> Result<()> {
                 "fig5" => exp::fig5::run(&artifacts, scale, &out_dir)?,
                 "fig6" => exp::fig6::run(&artifacts, scale, &out_dir)?,
                 "fig7" => exp::fig7::run(&artifacts, scale, &out_dir)?,
+                "sched" => exp::sched::run(&artifacts, scale, &out_dir)?,
                 "table3" => exp::table3::run(&out_dir)?,
                 "all" => {
                     exp::fig1::run(&artifacts, &out_dir, probe)?;
@@ -171,6 +172,7 @@ fn main() -> Result<()> {
                     exp::fig5::run(&artifacts, scale, &out_dir)?;
                     exp::fig6::run(&artifacts, scale, &out_dir)?;
                     exp::fig7::run(&artifacts, scale, &out_dir)?;
+                    exp::sched::run(&artifacts, scale, &out_dir)?;
                     exp::table3::run(&out_dir)?;
                 }
                 other => bail!("unknown experiment {other:?}"),

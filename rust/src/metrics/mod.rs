@@ -47,18 +47,29 @@ pub struct IterRow {
     pub micro_steps: usize,
     pub rollouts_generated: usize,
     pub rollouts_trained: usize,
+    /// What the simulated clock actually advanced during this iteration —
+    /// `sim_inference_time + sim_update_time` under the sync schedule,
+    /// less when the pipelined executor hid generation behind an update.
+    pub sim_step_time: f64,
+    /// Simulated time hidden by inference/update overlap this iteration
+    /// (zero under the sync schedule).
+    pub sim_overlap_saved: f64,
+    /// Executor schedule the run used (`sync` | `pipelined`). New columns
+    /// append at the end: figure readers resolve columns by header name.
+    pub schedule: String,
 }
 
 impl CsvRow for IterRow {
     fn csv_header() -> &'static str {
         "iter,sim_time,real_time,sim_inference_time,sim_update_time,train_reward,train_acc,\
          completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
-         loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained"
+         loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
+         sim_step_time,sim_overlap_saved,schedule"
     }
 
     fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.iter,
             self.sim_time,
             self.real_time,
@@ -76,7 +87,10 @@ impl CsvRow for IterRow {
             self.kl,
             self.micro_steps,
             self.rollouts_generated,
-            self.rollouts_trained
+            self.rollouts_trained,
+            self.sim_step_time,
+            self.sim_overlap_saved,
+            self.schedule
         )
     }
 }
@@ -243,6 +257,86 @@ mod tests {
         assert!(eval.contains("test"));
         assert_eq!(rec.last_eval_accuracy("test"), Some(0.7));
         assert_eq!(rec.last_eval_accuracy("platinum"), None);
+    }
+
+    /// Golden: the exact train-CSV schema the figure scripts consume.
+    /// Changing columns must be a conscious act — update this test AND
+    /// every header-name-based reader (exp::table3, figure scripts)
+    /// together.
+    #[test]
+    fn iter_row_header_is_golden() {
+        let header = IterRow::csv_header().replace(char::is_whitespace, "");
+        assert_eq!(
+            header,
+            "iter,sim_time,real_time,sim_inference_time,sim_update_time,train_reward,train_acc,\
+             completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
+             loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
+             sim_step_time,sim_overlap_saved,schedule"
+                .replace(char::is_whitespace, "")
+        );
+        // the overlap + schedule columns append at the end, so CSVs from
+        // older runs stay parseable by position-tolerant readers
+        let cols: Vec<&str> = header.split(',').collect();
+        assert_eq!(
+            cols[cols.len() - 3..].to_vec(),
+            vec!["sim_step_time", "sim_overlap_saved", "schedule"]
+        );
+    }
+
+    /// Golden: one fully-populated row round-trips, header and row column
+    /// counts agree, and every value lands under its own header name.
+    #[test]
+    fn iter_row_roundtrips_with_overlap_columns() {
+        let row = IterRow {
+            iter: 3,
+            sim_time: 12.5,
+            real_time: 0.25,
+            sim_inference_time: 8.0,
+            sim_update_time: 4.5,
+            train_reward: 1.5,
+            train_acc: 0.5,
+            completion_len: 24.0,
+            sel_variance: 0.75,
+            sel_tokens_kept: 96,
+            sel_tokens_dropped: 32,
+            sel_groups_dropped: 1,
+            loss: -0.125,
+            clip_frac: 0.0625,
+            kl: 0.03125,
+            micro_steps: 2,
+            rollouts_generated: 64,
+            rollouts_trained: 16,
+            sim_step_time: 9.5,
+            sim_overlap_saved: 3.0,
+            schedule: "pipelined".into(),
+        };
+        let header = IterRow::csv_header().replace(char::is_whitespace, "");
+        let line = row.csv_row();
+        let names: Vec<&str> = header.split(',').collect();
+        let vals: Vec<&str> = line.split(',').collect();
+        assert_eq!(names.len(), vals.len(), "header/row column mismatch");
+        let get = |name: &str| vals[names.iter().position(|n| *n == name).unwrap()];
+        assert_eq!(get("iter"), "3");
+        assert_eq!(get("sim_inference_time"), "8");
+        assert_eq!(get("sim_update_time"), "4.5");
+        assert_eq!(get("sim_step_time"), "9.5");
+        assert_eq!(get("sim_overlap_saved"), "3");
+        assert_eq!(get("schedule"), "pipelined");
+        assert_eq!(get("rollouts_trained"), "16");
+        // the overlap identity the exec layer maintains:
+        // step + saved == inference + update
+        let step: f64 = get("sim_step_time").parse().unwrap();
+        let saved: f64 = get("sim_overlap_saved").parse().unwrap();
+        assert_eq!(step + saved, 8.0 + 4.5);
+        // written CSV keeps the schema
+        let dir = crate::util::TempDir::new().unwrap();
+        let mut rec = Recorder::new();
+        rec.push_iter(row);
+        let paths = rec.write_csv(dir.path(), "golden").unwrap();
+        let text = std::fs::read_to_string(&paths[0]).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), header);
+        assert_eq!(lines.next().unwrap(), line);
     }
 
     #[test]

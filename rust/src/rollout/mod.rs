@@ -1,13 +1,22 @@
-//! Inference-phase orchestration: batched rollout generation for a prompt.
+//! Inference-phase orchestration: batched rollout generation.
 //!
 //! The rollout artifact samples a fixed batch of `B_r` rollouts per call;
 //! this module assembles prompt batches (left-padded, per the model's
-//! sequence layout), shards the `n` requested rollouts over as many calls
-//! as needed with decorrelated seeds, verifies each rollout with the
-//! rule-based reward model, and returns a [`PromptGroup`].
+//! sequence layout), plans the calls an iteration needs ([`plan_calls`]),
+//! executes one call ([`execute_call`]) — sampling, optional reference
+//! scoring for the KL term, and rule-based reward verification — and
+//! returns per-row [`RolloutRecord`]s tagged with their prompt group.
 //!
-//! Seeds are derived as `hash(run_seed, iter, prompt_id, call)` so runs are
-//! exactly replayable and calls are decorrelated across all axes.
+//! **Cross-group packing**: a prompt whose `n` is not a multiple of `B_r`
+//! used to pay a full under-filled call for its remainder rows. The plan
+//! instead packs remainder rows from *different* prompts into shared
+//! mixed-prompt calls, so every batch the accelerator sees is as full as
+//! the iteration allows (the Fig. 1 amortization the hwsim charges for).
+//! Full per-prompt calls and single-prompt remainder calls keep the exact
+//! seed derivation of the original per-group path —
+//! `hash(run_seed, iter, prompt_id, call)` — so those calls replay the
+//! seed trainer bit-for-bit; only genuinely packed multi-prompt calls
+//! (first prompt's id and call index) sample a different stream.
 
 use crate::coordinator::group::{PromptGroup, RolloutRecord};
 use crate::reward::{score_rollout, RewardWeights};
@@ -79,6 +88,148 @@ pub fn mixed_prompt_batch(engine: &Engine, prompts: &[&[i32]]) -> Result<(Tensor
     Ok((TensorI::new(data, &[br, p])?, pads))
 }
 
+/// One planned engine call: up to `B_r` rollout rows, each tagged with the
+/// index (into the iteration's problem list) of the prompt group it
+/// belongs to. Rows beyond `rows.len()` in the physical batch are filler
+/// and discarded.
+#[derive(Debug, Clone)]
+pub struct PlannedCall {
+    /// Sampling seed for the whole call (one seed per rollout invocation).
+    pub seed: u32,
+    /// Group index per kept row; `rows.len() <= B_r`.
+    pub rows: Vec<usize>,
+}
+
+impl PlannedCall {
+    /// True when every row belongs to one prompt group — such calls are
+    /// built with [`prompt_batch`] and replay the per-group path exactly.
+    pub fn single_group(&self) -> bool {
+        self.rows.windows(2).all(|w| w[0] == w[1])
+    }
+}
+
+/// Plan the engine calls for `n` rollouts of each of `problems`.
+///
+/// Per group: `n / br` full calls seeded `mix_seed(run_seed, iter, id, c)`
+/// — identical to the sequential per-group path. The `n % br` remainder
+/// rows of all groups are then packed greedily (group order) into shared
+/// calls; a packed call is seeded by its *first* group's id at that
+/// group's next call index, so a call whose rows all come from one group
+/// degenerates to exactly the sequential remainder call.
+pub fn plan_calls(
+    problems: &[Problem],
+    n: usize,
+    br: usize,
+    run_seed: u64,
+    iter: u64,
+) -> Vec<PlannedCall> {
+    assert!(br >= 1, "rollout batch must be >= 1");
+    let full_calls = n / br;
+    let rem = n % br;
+    let mut plan = Vec::with_capacity(problems.len() * full_calls.max(1));
+    for (g, problem) in problems.iter().enumerate() {
+        for c in 0..full_calls {
+            plan.push(PlannedCall {
+                seed: mix_seed(run_seed, iter, problem.id, c as u64),
+                rows: vec![g; br],
+            });
+        }
+    }
+    if rem > 0 {
+        // remainder queue: (group, rows still needed), group order
+        let mut queue: std::collections::VecDeque<(usize, usize)> =
+            (0..problems.len()).map(|g| (g, rem)).collect();
+        while let Some(&(first, _)) = queue.front() {
+            let seed = mix_seed(run_seed, iter, problems[first].id, full_calls as u64);
+            let mut rows = Vec::with_capacity(br);
+            while rows.len() < br {
+                let Some((g, need)) = queue.front_mut() else { break };
+                let take = (*need).min(br - rows.len());
+                rows.extend(std::iter::repeat(*g).take(take));
+                *need -= take;
+                if *need == 0 {
+                    queue.pop_front();
+                }
+            }
+            plan.push(PlannedCall { seed, rows });
+        }
+    }
+    plan
+}
+
+/// One rollout produced by [`execute_call`], tagged with its group.
+#[derive(Debug, Clone)]
+pub struct CallRollout {
+    pub group_idx: usize,
+    pub record: RolloutRecord,
+}
+
+/// Execute one planned call on `engine`: build the prompt batch (pure
+/// per-group, or mixed across groups for packed calls), sample, optionally
+/// score under the reference policy for the KL term, verify rewards, and
+/// return the kept rows in plan order plus their generated-token count.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_call(
+    engine: &Engine,
+    params: &[f32],
+    lora: Option<&[f32]>,
+    ref_params: Option<&[f32]>,
+    ref_lora: Option<&[f32]>,
+    temperature: f32,
+    call: &PlannedCall,
+    problems: &[Problem],
+    task: TaskKind,
+    weights: &RewardWeights,
+) -> Result<(Vec<CallRollout>, usize)> {
+    if call.rows.is_empty() {
+        return Ok((Vec::new(), 0));
+    }
+    let t = engine.meta.config.seq_len;
+    let g = engine.meta.gen_len;
+    let p = engine.meta.config.prompt_len;
+    let (prompts, pads) = if call.single_group() {
+        prompt_batch(engine, &problems[call.rows[0]].prompt)?
+    } else {
+        let refs: Vec<&[i32]> =
+            call.rows.iter().map(|&gi| problems[gi].prompt.as_slice()).collect();
+        mixed_prompt_batch(engine, &refs)?
+    };
+    let out = engine.rollout(params, lora, &prompts, &pads, call.seed, temperature)?;
+    let ref_lp_all = match ref_params {
+        Some(rp) => Some(engine.score(rp, ref_lora, &out.tokens, &pads)?),
+        None => None,
+    };
+    let mut kept = Vec::with_capacity(call.rows.len());
+    let mut gen_tokens = 0usize;
+    for (b, &gi) in call.rows.iter().enumerate() {
+        let tokens: Vec<i32> = out.tokens.data[b * t..(b + 1) * t].to_vec();
+        let gen_mask: Vec<f32> = out.gen_mask.data[b * g..(b + 1) * g].to_vec();
+        let old_lp: Vec<f32> = out.logprobs.data[b * g..(b + 1) * g].to_vec();
+        let ref_lp: Vec<f32> = match &ref_lp_all {
+            Some(r) => r.data[b * g..(b + 1) * g].to_vec(),
+            None => vec![0.0; g],
+        };
+        let gen_len = out.gen_len[b];
+        gen_tokens += gen_len as usize;
+        let reward = score_rollout(&tokens, p, task, &problems[gi]);
+        let total_reward = reward.total(weights);
+        kept.push(CallRollout {
+            group_idx: gi,
+            record: RolloutRecord {
+                tokens,
+                pad_len: pads[b],
+                gen_mask,
+                old_lp,
+                ref_lp,
+                gen_len,
+                reward,
+                total_reward,
+            },
+        });
+    }
+    Ok((kept, gen_tokens))
+}
+
 /// Parameters of one group-generation request.
 pub struct GenRequest<'a> {
     pub params: &'a [f32],
@@ -95,6 +246,10 @@ pub struct GenRequest<'a> {
 }
 
 /// Generate `n` rollouts for `problem`, score them, and assemble the group.
+///
+/// Single-group convenience over [`plan_calls`] + [`execute_call`]; for a
+/// lone problem the plan degenerates to the original sequential call
+/// structure, so this replays the seed path exactly.
 pub fn generate_group(
     engine: &Engine,
     req: &GenRequest,
@@ -102,48 +257,26 @@ pub fn generate_group(
     problem: &Problem,
 ) -> Result<(PromptGroup, InferenceStats)> {
     let br = engine.meta.config.rollout_batch;
-    let t = engine.meta.config.seq_len;
-    let g = engine.meta.gen_len;
-    let p = engine.meta.config.prompt_len;
-    let (prompts, pads) = prompt_batch(engine, &problem.prompt)?;
-    let calls = req.n.div_ceil(br);
+    let problems = std::slice::from_ref(problem);
+    let plan = plan_calls(problems, req.n, br, req.run_seed, req.iter);
     let mut rollouts = Vec::with_capacity(req.n);
     let mut stats = InferenceStats::default();
-    for c in 0..calls {
-        let seed = mix_seed(req.run_seed, req.iter, problem.id, c as u64);
-        let out = engine.rollout(req.params, req.lora, &prompts, &pads, seed, req.temperature)?;
-        // reference log-probs for the KL term, if requested
-        let ref_lp_all = match req.ref_params {
-            Some(rp) => Some(engine.score(rp, req.ref_lora, &out.tokens, &pads)?),
-            None => None,
-        };
+    for call in &plan {
+        let (kept, gen_tokens) = execute_call(
+            engine,
+            req.params,
+            req.lora,
+            req.ref_params,
+            req.ref_lora,
+            req.temperature,
+            call,
+            problems,
+            task,
+            &req.weights,
+        )?;
         stats.calls += 1;
-        for b in 0..br {
-            if rollouts.len() >= req.n {
-                break;
-            }
-            let tokens: Vec<i32> = out.tokens.data[b * t..(b + 1) * t].to_vec();
-            let gen_mask: Vec<f32> = out.gen_mask.data[b * g..(b + 1) * g].to_vec();
-            let old_lp: Vec<f32> = out.logprobs.data[b * g..(b + 1) * g].to_vec();
-            let ref_lp: Vec<f32> = match &ref_lp_all {
-                Some(r) => r.data[b * g..(b + 1) * g].to_vec(),
-                None => vec![0.0; g],
-            };
-            let gen_len = out.gen_len[b];
-            stats.total_gen_tokens += gen_len as usize;
-            let reward = score_rollout(&tokens, p, task, problem);
-            let total_reward = reward.total(&req.weights);
-            rollouts.push(RolloutRecord {
-                tokens,
-                pad_len: pads[b],
-                gen_mask,
-                old_lp,
-                ref_lp,
-                gen_len,
-                reward,
-                total_reward,
-            });
-        }
+        stats.total_gen_tokens += gen_tokens;
+        rollouts.extend(kept.into_iter().map(|c| c.record));
     }
     stats.rollouts = rollouts.len();
     Ok((PromptGroup { problem: problem.clone(), rollouts }, stats))
@@ -167,5 +300,85 @@ mod tests {
     #[test]
     fn seed_mixer_deterministic() {
         assert_eq!(mix_seed(7, 3, 9, 2), mix_seed(7, 3, 9, 2));
+    }
+
+    fn problems(k: usize) -> Vec<Problem> {
+        (0..k as u64).map(|i| TaskKind::Arith.generate(crate::tasks::Split::Train, i)).collect()
+    }
+
+    /// n a multiple of B_r: the plan is exactly the sequential per-group
+    /// call structure — same group-major order, same seeds, full rows.
+    #[test]
+    fn plan_matches_sequential_structure_when_batches_divide() {
+        let ps = problems(3);
+        let plan = plan_calls(&ps, 16, 8, 7, 5);
+        assert_eq!(plan.len(), 6);
+        for (g, p) in ps.iter().enumerate() {
+            for c in 0..2usize {
+                let call = &plan[g * 2 + c];
+                assert_eq!(call.rows, vec![g; 8]);
+                assert!(call.single_group());
+                assert_eq!(call.seed, mix_seed(7, 5, p.id, c as u64));
+            }
+        }
+    }
+
+    /// A lone group's remainder call keeps the sequential seed index, so
+    /// `generate_group` over the plan replays the seed path bit-for-bit.
+    #[test]
+    fn plan_single_group_remainder_keeps_sequential_seed() {
+        let ps = problems(1);
+        let plan = plan_calls(&ps, 13, 8, 3, 2);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].rows, vec![0; 8]);
+        assert_eq!(plan[0].seed, mix_seed(3, 2, ps[0].id, 0));
+        assert_eq!(plan[1].rows, vec![0; 5]);
+        assert!(plan[1].single_group());
+        // remainder call = sequential call index 1
+        assert_eq!(plan[1].seed, mix_seed(3, 2, ps[0].id, 1));
+    }
+
+    /// Remainders from different groups share packed calls: 3 groups with
+    /// 5 leftover rows each fill toward B_r=8 instead of paying three
+    /// under-filled calls.
+    #[test]
+    fn plan_packs_remainders_across_groups() {
+        let ps = problems(3);
+        let plan = plan_calls(&ps, 5, 8, 0, 0);
+        // 15 remainder rows -> 2 calls (8 + 7) instead of 3 under-filled
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].rows, vec![0, 0, 0, 0, 0, 1, 1, 1]);
+        assert!(!plan[0].single_group());
+        assert_eq!(plan[0].seed, mix_seed(0, 0, ps[0].id, 0));
+        assert_eq!(plan[1].rows, vec![1, 1, 2, 2, 2, 2, 2]);
+        assert_eq!(plan[1].seed, mix_seed(0, 0, ps[1].id, 0));
+        // every group got exactly n rows across the plan
+        for g in 0..3 {
+            let total: usize =
+                plan.iter().map(|c| c.rows.iter().filter(|&&r| r == g).count()).sum();
+            assert_eq!(total, 5);
+        }
+    }
+
+    /// Property: the plan always delivers exactly n rows per group, never
+    /// overfills a call, and keeps rows of one group contiguous per call.
+    #[test]
+    fn plan_rows_partition_exactly() {
+        use crate::util::prop::for_cases;
+        for_cases(200, |rng| {
+            let k = rng.gen_range_inclusive(1, 6) as usize;
+            let n = rng.gen_range_inclusive(1, 40) as usize;
+            let br = rng.gen_range_inclusive(1, 16) as usize;
+            let ps = problems(k);
+            let plan = plan_calls(&ps, n, br, rng.next_u64(), rng.next_u64());
+            let mut per_group = vec![0usize; k];
+            for call in &plan {
+                assert!(!call.rows.is_empty() && call.rows.len() <= br);
+                for &g in &call.rows {
+                    per_group[g] += 1;
+                }
+            }
+            assert_eq!(per_group, vec![n; k]);
+        });
     }
 }

@@ -4,7 +4,15 @@
 //! time closures: warmup, then timed iterations with mean / median / p95 /
 //! min reporting, plus a machine-readable line (`BENCH\t<name>\t<ns>`) that
 //! the perf log in EXPERIMENTS.md is built from.
+//!
+//! [`BenchReport`] additionally collects results into a machine-readable
+//! JSON file (e.g. `BENCH_e2e.json` from the e2e_step bench) so the perf
+//! trajectory across PRs can be tracked by tooling instead of scraped
+//! from logs: per-bench name, iteration count, mean/median/p95/min wall
+//! time in seconds, and — where the bench knows it — rollout throughput.
 
+use crate::util::json::{obj, Json};
+use std::path::Path;
 use std::time::Instant;
 
 /// Result of one benchmark.
@@ -77,4 +85,99 @@ fn fmt_ns(ns: f64) -> String {
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Collects [`BenchResult`]s and writes them as one JSON document.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    entries: Vec<(BenchResult, Option<f64>)>,
+}
+
+impl BenchReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a result with no throughput dimension.
+    pub fn push(&mut self, r: BenchResult) {
+        self.entries.push((r, None));
+    }
+
+    /// Record a result alongside its rollout throughput (rollouts/s of
+    /// simulated-training work per real second, median-based).
+    pub fn push_with_throughput(&mut self, r: BenchResult, rollouts_per_sec: f64) {
+        self.entries.push((r, Some(rollouts_per_sec)));
+    }
+
+    fn to_json(&self) -> Json {
+        let benches: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|(r, tp)| {
+                let mut pairs = vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("iters", Json::Num(r.iters as f64)),
+                    ("mean_s", Json::Num(r.mean_ns / 1e9)),
+                    ("median_s", Json::Num(r.median_ns / 1e9)),
+                    ("p95_s", Json::Num(r.p95_ns / 1e9)),
+                    ("min_s", Json::Num(r.min_ns / 1e9)),
+                ];
+                if let Some(tp) = tp {
+                    pairs.push(("rollouts_per_sec", Json::Num(*tp)));
+                }
+                obj(pairs)
+            })
+            .collect();
+        obj(vec![("benches", Json::Arr(benches))])
+    }
+
+    /// Write the report (e.g. `BENCH_e2e.json`). Parent directories must
+    /// exist; the file is overwritten so each run snapshots this host.
+    pub fn write_json(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().dump())
+            .map_err(|e| anyhow::anyhow!("writing bench report {}: {e}", path.display()))?;
+        println!("BENCH_JSON\t{}\t{} benches", path.display(), self.entries.len());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrips_as_json() {
+        let mut rep = BenchReport::new();
+        rep.push(BenchResult {
+            name: "unit".into(),
+            iters: 5,
+            mean_ns: 2.0e9,
+            median_ns: 1.5e9,
+            p95_ns: 3.0e9,
+            min_ns: 1.0e9,
+        });
+        rep.push_with_throughput(
+            BenchResult {
+                name: "e2e step pods".into(),
+                iters: 4,
+                mean_ns: 4.0e9,
+                median_ns: 4.0e9,
+                p95_ns: 4.0e9,
+                min_ns: 4.0e9,
+            },
+            16.0,
+        );
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("BENCH_e2e.json");
+        rep.write_json(&path).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let benches = parsed.get("benches").unwrap().arr().unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(benches[0].get("name").unwrap().str().unwrap(), "unit");
+        assert_eq!(benches[0].get("mean_s").unwrap().f64().unwrap(), 2.0);
+        assert_eq!(benches[0].get("min_s").unwrap().f64().unwrap(), 1.0);
+        assert!(benches[0].opt("rollouts_per_sec").is_none());
+        assert_eq!(benches[1].get("rollouts_per_sec").unwrap().f64().unwrap(), 16.0);
+        assert_eq!(benches[1].get("iters").unwrap().usize().unwrap(), 4);
+    }
 }

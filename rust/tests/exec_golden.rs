@@ -1,0 +1,229 @@
+//! Golden tests for the staged executor (coordinator::exec).
+//!
+//! * The sync schedule must reproduce the sequential reference — the seed
+//!   trainer's inference phase (`generate_group` prompt-by-prompt), its
+//!   selections, losses, parameter updates and simulated times — exactly.
+//! * Pool generation must be bit-deterministic across worker counts.
+//! * The pipelined schedule must report strictly lower simulated
+//!   wall-clock than sync at equal iteration count, with the overlap
+//!   identity `now() + overlap_saved() == sequential total` intact.
+//!
+//! Skipped when artifacts are absent (CI without `make artifacts`).
+
+use pods::config::RunConfig;
+use pods::coordinator::exec::{GenBatch, RolloutEngine, UpdateEngine};
+use pods::coordinator::group::build_update_batch;
+use pods::coordinator::scheduler::Trainer;
+use pods::exp::CfgBuilder;
+use pods::reward::RewardWeights;
+use pods::rollout::{generate_group, GenRequest};
+use pods::runtime::ParamStore;
+use pods::tasks::{Split, TaskKind};
+use std::sync::Arc;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pods::default_artifacts_dir();
+    if dir.join("base/meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn cfg(name: &str, schedule: &str, workers: usize, iterations: usize) -> RunConfig {
+    CfgBuilder {
+        name: name.into(),
+        profile: "base".into(),
+        task: "arith".into(),
+        iterations,
+        prompts_per_iter: 2,
+        eval_every: iterations.max(1),
+        eval_problems: 16,
+        kind: "pods".into(),
+        n: 16,
+        m: Some(4),
+        lr: 1e-4,
+        workers,
+        schedule: schedule.into(),
+        out_dir: std::env::temp_dir().join("pods_exec_golden").to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+    .build()
+    .unwrap()
+}
+
+/// The sync executor's first iteration equals a hand-run of the seed
+/// trainer's sequential semantics: same rollouts (via `generate_group`
+/// prompt-by-prompt), same selection, same loss, same post-update
+/// parameters, same simulated phase times.
+#[test]
+fn sync_executor_reproduces_sequential_reference() {
+    let Some(dir) = artifacts() else { return };
+    let c = cfg("golden_sync", "sync", 1, 1);
+    let mut tr = Trainer::new(&dir, c.clone()).unwrap();
+    tr.engine.quiet = true;
+
+    // ---- sequential reference, from the same initial parameters -------
+    let params0 = tr.store.params.clone();
+    let problems = TaskKind::Arith.batch(Split::Train, 0, c.run.prompts_per_iter);
+    let mut groups = Vec::new();
+    let mut total_gen_tokens = 0usize;
+    for problem in &problems {
+        let req = GenRequest {
+            params: &params0,
+            lora: None,
+            ref_params: None,
+            ref_lora: None,
+            n: c.algo.n,
+            temperature: c.algo.temperature as f32,
+            run_seed: c.run.seed,
+            iter: 0,
+            weights: RewardWeights::default(),
+        };
+        let (group, stats) = generate_group(&tr.engine, &req, TaskKind::Arith, problem).unwrap();
+        total_gen_tokens += stats.total_gen_tokens;
+        groups.push(group);
+    }
+    let rollouts_generated: usize = groups.iter().map(|g| g.rollouts.len()).sum();
+    let avg_tokens = total_gen_tokens as f64 / rollouts_generated.max(1) as f64;
+    let want_sim_inference = c.hwsim.inference_time(rollouts_generated, avg_tokens);
+    let (selected, _) = build_update_batch(
+        &groups,
+        &c.selector(),
+        c.algo.m,
+        c.norm_mode(),
+        c.run.seed,
+        0,
+    )
+    .unwrap();
+    let mut ref_store = ParamStore::new(params0);
+    let mut ref_update = UpdateEngine::new(ref_store.len());
+    let want = ref_update
+        .run(
+            &tr.engine,
+            &mut ref_store,
+            None,
+            &groups,
+            &selected,
+            c.algo.kl_coef as f32,
+            c.algo.lr as f32,
+            &c.hwsim,
+        )
+        .unwrap();
+
+    // ---- the executor ------------------------------------------------
+    let stats = tr.train_iteration(0).unwrap();
+    assert_eq!(stats.rollouts_generated, rollouts_generated);
+    assert_eq!(stats.rollouts_trained, want.rollouts_trained);
+    assert_eq!(stats.micro_steps, want.micro_steps);
+    assert_eq!(stats.loss, want.loss, "sync loss must replay the sequential reference");
+    assert_eq!(stats.clip_frac, want.clip_frac);
+    assert_eq!(stats.sim_inference, want_sim_inference, "sim inference time drifted");
+    assert_eq!(stats.sim_update, want.sim_update, "sim update time drifted");
+    assert_eq!(
+        stats.sim_step,
+        stats.sim_inference + stats.sim_update,
+        "sync must charge the phase sum"
+    );
+    assert_eq!(stats.sim_overlap_saved, 0.0);
+    assert_eq!(tr.clock.overlap_saved(), 0.0);
+    assert_eq!(tr.store.params, ref_store.params, "post-update parameters must be identical");
+}
+
+/// Pool generation is deterministic: 1 worker (inline) and 4 workers
+/// (thread pool with engine replicas) produce bit-identical rollouts.
+#[test]
+fn pool_generation_is_deterministic_across_worker_counts() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = pods::runtime::Engine::load(&dir, "base").unwrap();
+    engine.quiet = true;
+    let params = Arc::new(engine.init(3).unwrap());
+    let problems = Arc::new(TaskKind::Arith.batch(Split::Train, 0, 3));
+    let gen_with = |workers: usize| {
+        let mut pool = RolloutEngine::new(dir.clone(), "base", workers);
+        let batch = GenBatch {
+            params: Arc::clone(&params),
+            lora: None,
+            ref_params: None,
+            ref_lora: None,
+            problems: Arc::clone(&problems),
+            n: 12, // not a multiple of B_r: exercises cross-group packing
+            temperature: 1.0,
+            run_seed: 11,
+            iter: 2,
+            task: TaskKind::Arith,
+            weights: RewardWeights::default(),
+        };
+        pool.generate(&engine, batch).unwrap()
+    };
+    let (g1, s1) = gen_with(1);
+    let (g4, s4) = gen_with(4);
+    assert_eq!(s1.rollouts, s4.rollouts);
+    assert_eq!(s1.total_gen_tokens, s4.total_gen_tokens);
+    assert_eq!(g1.len(), g4.len());
+    for (a, b) in g1.iter().zip(&g4) {
+        assert_eq!(a.problem.id, b.problem.id);
+        assert_eq!(a.rollouts.len(), b.rollouts.len());
+        for (ra, rb) in a.rollouts.iter().zip(&b.rollouts) {
+            assert_eq!(ra.tokens, rb.tokens, "worker count changed sampled tokens");
+            assert_eq!(ra.old_lp, rb.old_lp);
+            assert_eq!(ra.total_reward, rb.total_reward);
+            assert_eq!(ra.gen_len, rb.gen_len);
+        }
+    }
+}
+
+/// Acceptance: pipelined reports strictly lower simulated wall-clock than
+/// sync at equal iteration count, the overlap identity holds, and the
+/// pipelined run is itself replayable.
+#[test]
+fn pipelined_beats_sync_simulated_wall_clock() {
+    let Some(dir) = artifacts() else { return };
+    let iters = 3;
+    let run = |schedule: &str| {
+        let mut tr = Trainer::new(&dir, cfg("golden_sched", schedule, 1, iters)).unwrap();
+        tr.engine.quiet = true;
+        for it in 0..iters {
+            tr.train_iteration(it).unwrap();
+        }
+        tr
+    };
+    let sync = run("sync");
+    let pipe = run("pipelined");
+    assert!(
+        pipe.clock.now() < sync.clock.now(),
+        "pipelined {:.2}s must beat sync {:.2}s at {iters} iterations",
+        pipe.clock.now(),
+        sync.clock.now()
+    );
+    assert!(pipe.clock.overlap_saved() > 0.0);
+    // identity: hidden time + charged time == the run's sequential total
+    let seq_total: f64 = pipe
+        .recorder
+        .iters
+        .iter()
+        .map(|r| r.sim_inference_time + r.sim_update_time)
+        .sum();
+    assert!(
+        (pipe.clock.now() + pipe.clock.overlap_saved() - seq_total).abs() < 1e-9,
+        "overlap accounting leaked time"
+    );
+    // every iteration's row carries the schedule + step columns
+    for r in &pipe.recorder.iters {
+        assert_eq!(r.schedule, "pipelined");
+        assert!(
+            (r.sim_step_time + r.sim_overlap_saved
+                - (r.sim_inference_time + r.sim_update_time))
+                .abs()
+                < 1e-9
+        );
+    }
+    // iteration 0 pays its inference un-overlapped; later ones hide some
+    assert_eq!(pipe.recorder.iters[0].sim_overlap_saved, 0.0);
+    assert!(pipe.recorder.iters[1].sim_overlap_saved > 0.0);
+    // replayable: a second pipelined run lands on identical parameters
+    let pipe2 = run("pipelined");
+    assert_eq!(pipe.store.params, pipe2.store.params);
+    assert_eq!(pipe.clock.now(), pipe2.clock.now());
+}
