@@ -14,13 +14,22 @@ directory::
     artifacts/<profile>/
       init.hlo.txt      (seed)                                    -> (params)
       sft.hlo.txt       (params,m,v,step,tokens,pad,mask,lr)      -> (params,m,v,loss)
-      rollout.hlo.txt   (params,[lora],prompts,pad,seed,temp)     -> (tokens,logprobs,gen_mask,gen_len)
+      rollout.hlo.txt   (params,[lora],prompts,pad,seeds,temp)    -> (tokens,logprobs,gen_mask,gen_len)
+      prefill.hlo.txt   (params,[lora],prompts,pad)               -> (cache_k,cache_v,logits)
+      decode_chunk<C>.hlo.txt
+                        (params,[lora],cache_k,cache_v,logits,seeds,step,done,pad,temp)
+                                                                  -> (tokens,logprobs,mask,cache_k,cache_v,logits,step,done)
       grad.hlo.txt      (train,[base],tokens,pad,mask,old_lp,adv,ref_lp,kl) -> (grads,loss,clip_frac,kl)
       update.hlo.txt    (train,m,v,step,grads,lr)                 -> (train,m,v)
       score.hlo.txt     (params,[lora],tokens,pad)                -> (logprobs)
-      meta.json         dims, vocab, param offset table, program signatures
+      meta.json         dims, vocab, param offset table, program signatures,
+                        decode_chunks (the lowered chunk sizes)
 
-The greedy eval path reuses ``rollout`` with temperature <= 0.
+``rollout`` is the monolithic reference (one chunk of G); the Rust rollout
+engine drives ``prefill`` + ``decode_chunk<C>`` as a slot-based continuous
+batcher with early exit. RNG is per-row (``seeds`` i32[B], counter-based
+streams), so both paths sample bit-identical tokens. The greedy eval path
+reuses the chunked programs with temperature <= 0.
 """
 
 import argparse
@@ -65,6 +74,12 @@ PROFILES = {
         rollout_batch=4, update_batch=2, pad_multiple=65536, attn_block=8,
     ),
 }
+
+
+def decode_chunk_sizes(cfg: M.ModelConfig):
+    """Chunk sizes lowered per profile: {1, 4, 16} clipped to G, plus G
+    itself (the monolithic-equivalent chunk)."""
+    return sorted({c for c in (1, 4, 16) if c <= cfg.gen_len} | {cfg.gen_len})
 
 
 def to_hlo_text(lowered) -> str:
@@ -116,16 +131,41 @@ def build_programs(cfg: M.ModelConfig):
             ["lora"],
         )
 
+    # decode-path shapes shared by prefill / decode_chunk
+    L, H, dh, Vv = cfg.layers, cfg.heads, cfg.d_head, cfg.vocab
+    cache = s((L, Br, H, T, dh), f32)
+
     if lora:
         progs["rollout"] = (
-            lambda p, lo, pr, pad, seed, temp: M.rollout(cfg, p, pr, pad, seed, temp, lora_flat=lo),
+            lambda p, lo, pr, pad, seeds, temp: M.rollout(cfg, p, pr, pad, seeds, temp, lora_flat=lo),
             [
                 ("params", s((Np,), f32)), ("lora", s((Nl,), f32)),
                 ("prompts", s((Br, P), i32)), ("pad_len", s((Br,), i32)),
-                ("seed", s((), u32)), ("temperature", s((), f32)),
+                ("seeds", s((Br,), i32)), ("temperature", s((), f32)),
             ],
             ["tokens", "logprobs", "gen_mask", "gen_len"],
         )
+        progs["prefill"] = (
+            lambda p, lo, pr, pad: M.prefill(cfg, p, pr, pad, lora_flat=lo),
+            [
+                ("params", s((Np,), f32)), ("lora", s((Nl,), f32)),
+                ("prompts", s((Br, P), i32)), ("pad_len", s((Br,), i32)),
+            ],
+            ["cache_k", "cache_v", "logits"],
+        )
+        for c in decode_chunk_sizes(cfg):
+            progs[f"decode_chunk{c}"] = (
+                (lambda c: lambda p, lo, ck, cv, lg, sd, st, dn, pad, temp: M.decode_chunk(
+                    cfg, c, p, ck, cv, lg, sd, st, dn, pad, temp, lora_flat=lo
+                ))(c),
+                [
+                    ("params", s((Np,), f32)), ("lora", s((Nl,), f32)),
+                    ("cache_k", cache), ("cache_v", cache), ("logits", s((Br, Vv), f32)),
+                    ("seeds", s((Br,), i32)), ("step", s((Br,), i32)), ("done", s((Br,), i32)),
+                    ("pad_len", s((Br,), i32)), ("temperature", s((), f32)),
+                ],
+                ["tokens", "logprobs", "mask", "cache_k", "cache_v", "logits", "step", "done"],
+            )
         progs["grad"] = (
             lambda tr, base, toks, pad, mask, olp, adv, rlp, klc: M.grpo_grad(
                 cfg, tr, toks, pad, mask, olp, adv, rlp, klc, base=base
@@ -148,14 +188,35 @@ def build_programs(cfg: M.ModelConfig):
         )
     else:
         progs["rollout"] = (
-            lambda p, pr, pad, seed, temp: M.rollout(cfg, p, pr, pad, seed, temp),
+            lambda p, pr, pad, seeds, temp: M.rollout(cfg, p, pr, pad, seeds, temp),
             [
                 ("params", s((Np,), f32)),
                 ("prompts", s((Br, P), i32)), ("pad_len", s((Br,), i32)),
-                ("seed", s((), u32)), ("temperature", s((), f32)),
+                ("seeds", s((Br,), i32)), ("temperature", s((), f32)),
             ],
             ["tokens", "logprobs", "gen_mask", "gen_len"],
         )
+        progs["prefill"] = (
+            lambda p, pr, pad: M.prefill(cfg, p, pr, pad),
+            [
+                ("params", s((Np,), f32)),
+                ("prompts", s((Br, P), i32)), ("pad_len", s((Br,), i32)),
+            ],
+            ["cache_k", "cache_v", "logits"],
+        )
+        for c in decode_chunk_sizes(cfg):
+            progs[f"decode_chunk{c}"] = (
+                (lambda c: lambda p, ck, cv, lg, sd, st, dn, pad, temp: M.decode_chunk(
+                    cfg, c, p, ck, cv, lg, sd, st, dn, pad, temp
+                ))(c),
+                [
+                    ("params", s((Np,), f32)),
+                    ("cache_k", cache), ("cache_v", cache), ("logits", s((Br, Vv), f32)),
+                    ("seeds", s((Br,), i32)), ("step", s((Br,), i32)), ("done", s((Br,), i32)),
+                    ("pad_len", s((Br,), i32)), ("temperature", s((), f32)),
+                ],
+                ["tokens", "logprobs", "mask", "cache_k", "cache_v", "logits", "step", "done"],
+            )
         progs["grad"] = (
             lambda tr, toks, pad, mask, olp, adv, rlp, klc: M.grpo_grad(
                 cfg, tr, toks, pad, mask, olp, adv, rlp, klc
@@ -176,6 +237,17 @@ def build_programs(cfg: M.ModelConfig):
             ],
             ["logprobs"],
         )
+
+    # slot-admission merge for the continuous-batching driver (no params)
+    progs["admit_merge"] = (
+        M.merge_slots,
+        [
+            ("cache_k_live", cache), ("cache_v_live", cache), ("logits_live", s((Br, Vv), f32)),
+            ("cache_k_new", cache), ("cache_v_new", cache), ("logits_new", s((Br, Vv), f32)),
+            ("admit", s((Br,), i32)),
+        ],
+        ["cache_k", "cache_v", "logits"],
+    )
 
     progs["update"] = (
         lambda tr, m, v, step, g, lr: M.apply_update(cfg, tr, m, v, step, g, lr),
@@ -211,6 +283,7 @@ def lower_profile(name: str, out_root: str, verbose=True):
         "profile": name,
         "config": dataclasses.asdict(cfg),
         "gen_len": cfg.gen_len,
+        "decode_chunks": decode_chunk_sizes(cfg),
         "param_count": M.param_count(cfg),
         "lora_count": M.lora_count(cfg) if cfg.lora_rank else 0,
         "trainable_count": M.lora_count(cfg) if cfg.lora_rank else M.param_count(cfg),

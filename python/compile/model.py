@@ -271,12 +271,30 @@ def forward(cfg: ModelConfig, pt, tokens, pad_len, lt=None, use_pallas=True, col
 # ---------------------------------------------------------------------------
 # KV-cache decode (inference phase)
 # ---------------------------------------------------------------------------
+#
+# The decode path is split into two programs so the Rust driver can run
+# slot-based continuous batching with early exit:
+#
+#   * ``prefill``      — teacher-forced pass over the prompts, returns the
+#                        seeded KV caches plus the last prompt logits.
+#   * ``decode_chunk`` — scan over a static chunk of ``C`` tokens with the
+#                        caches carried across calls; per-row positions and
+#                        per-row done flags let rows at different depths
+#                        share one batch (refilled slots restart at step 0
+#                        while their neighbours keep decoding).
+#
+# RNG ownership is per-row: each row folds a counter-based stream from its
+# own seed (``fold_in(key(seed_b), step_b)``), so sampled tokens are
+# bit-invariant to chunk size, slot assignment, refill order and batch
+# composition — the property the Rust goldens pin.
 
 
 def _decode_step(cfg: ModelConfig, pt, lt, cache_k, cache_v, tok, pos, pad_len):
-    """One autoregressive step at (shared) absolute position ``pos``.
+    """One autoregressive step at per-row absolute positions ``pos``.
 
-    cache_k/v: f32[L, B, H, T, dh]; tok: i32[B]; pos: i32 scalar.
+    cache_k/v: f32[L, B, H, T, dh]; tok: i32[B]; pos: i32[B].
+    Rows with ``pos >= T`` write nothing (the one-hot scatter misses) —
+    overshooting rows are masked out by the caller's done flag.
     Returns (logits[B, V], cache_k, cache_v).
     """
     B = tok.shape[0]
@@ -285,7 +303,8 @@ def _decode_step(cfg: ModelConfig, pt, lt, cache_k, cache_v, tok, pos, pad_len):
     p = jnp.clip(pos - pad_len, 0, cfg.seq_len - 1)
     x = pt["tok_emb"][tok] + pt["pos_emb"][p]
     kpos = jnp.arange(T)
-    visible = (kpos[None, :] <= pos) & (kpos[None, :] >= pad_len[:, None])  # [B, T]
+    hit = kpos[None, :] == pos[:, None]  # [B, T] one-hot write position
+    visible = (kpos[None, :] <= pos[:, None]) & (kpos[None, :] >= pad_len[:, None])  # [B, T]
     for l in range(cfg.layers):
         h = _layernorm(x, pt[f"l{l}.ln1_s"], pt[f"l{l}.ln1_b"])
         qa, qb, qs = _lora_parts(cfg, lt, l, "q")
@@ -293,16 +312,14 @@ def _decode_step(cfg: ModelConfig, pt, lt, cache_k, cache_v, tok, pos, pad_len):
         q = _proj(h, pt[f"l{l}.wq"], qa, qb, qs).reshape(B, H, dh)
         k = (h @ pt[f"l{l}.wk"]).reshape(B, H, dh)
         v = _proj(h, pt[f"l{l}.wv"], va, vb, vs).reshape(B, H, dh)
-        cache_k = jax.lax.dynamic_update_index_in_dim(
-            cache_k, jax.lax.dynamic_update_index_in_dim(cache_k[l], k[:, :, None, :], pos, axis=2), l, axis=0
-        )
-        cache_v = jax.lax.dynamic_update_index_in_dim(
-            cache_v, jax.lax.dynamic_update_index_in_dim(cache_v[l], v[:, :, None, :], pos, axis=2), l, axis=0
-        )
-        s = jnp.einsum("bhd,bhtd->bht", q, cache_k[l]) * scale
+        ck = jnp.where(hit[:, None, :, None], k[:, :, None, :], cache_k[l])
+        cv = jnp.where(hit[:, None, :, None], v[:, :, None, :], cache_v[l])
+        cache_k = cache_k.at[l].set(ck)
+        cache_v = cache_v.at[l].set(cv)
+        s = jnp.einsum("bhd,bhtd->bht", q, ck) * scale
         s = jnp.where(visible[:, None, :], s, NEG)
         a = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bht,bhtd->bhd", a, cache_v[l]).reshape(B, cfg.d_model)
+        o = jnp.einsum("bht,bhtd->bhd", a, cv).reshape(B, cfg.d_model)
         x = x + o @ pt[f"l{l}.wo"]
         h2 = _layernorm(x, pt[f"l{l}.ln2_s"], pt[f"l{l}.ln2_b"])
         x = x + jax.nn.gelu(h2 @ pt[f"l{l}.w1"] + pt[f"l{l}.b1"]) @ pt[f"l{l}.w2"] + pt[f"l{l}.b2"]
@@ -310,12 +327,108 @@ def _decode_step(cfg: ModelConfig, pt, lt, cache_k, cache_v, tok, pos, pad_len):
     return h @ pt["tok_emb"].T, cache_k, cache_v
 
 
-def rollout(cfg: ModelConfig, flat, prompts, pad_len, seed, temperature, lora_flat=None, use_pallas=True):
+def prefill(cfg: ModelConfig, flat, prompts, pad_len, lora_flat=None, use_pallas=True):
+    """Prompt pass: seed the KV caches and return the last prompt logits.
+
+    prompts: i32[B, P] left-padded; pad_len: i32[B].
+    Returns (cache_k f32[L,B,H,T,dh], cache_v, logits f32[B, V]).
+    """
+    pt = unpack(param_specs(cfg), flat)
+    lt = unpack(lora_specs(cfg), lora_flat) if lora_flat is not None else None
+    B, P = prompts.shape
+    T = cfg.seq_len
+    H, dh, L = cfg.heads, cfg.d_head, cfg.layers
+    logits_p, ks, vs = forward(cfg, pt, prompts, pad_len, lt, use_pallas, collect_kv=True)
+    cache_k = jnp.zeros((L, B, H, T, dh), jnp.float32)
+    cache_v = jnp.zeros((L, B, H, T, dh), jnp.float32)
+    cache_k = cache_k.at[:, :, :, :P, :].set(ks)
+    cache_v = cache_v.at[:, :, :, :P, :].set(vs)
+    return cache_k, cache_v, logits_p[:, P - 1, :]
+
+
+def merge_slots(cache_k_live, cache_v_live, logits_live, cache_k_new, cache_v_new, logits_new, admit):
+    """Slot-admission merge, on device: slots with ``admit != 0`` take the
+    fresh prefill state, the rest keep the carried decode state.
+
+    cache_*: f32[L, B, H, T, dh]; logits_*: f32[B, V]; admit: i32[B].
+    Keeps the continuous-batching driver free of host cache round-trips.
+    """
+    m = admit != 0
+    ck = jnp.where(m[None, :, None, None, None], cache_k_new, cache_k_live)
+    cv = jnp.where(m[None, :, None, None, None], cache_v_new, cache_v_live)
+    lg = jnp.where(m[:, None], logits_new, logits_live)
+    return ck, cv, lg
+
+
+def _sample_rows(seeds_u32, step, logits, temperature):
+    """Per-row counter-based sampling: fold_in(key(seed_b), step_b).
+
+    seeds_u32: u32[B]; step: i32[B]; logits: f32[B, V].
+    Returns (tok i32[B], lp f32[B]) — the sampled (or greedy) token and its
+    temperature-1 log-prob. Independent of batch composition by design.
+    """
+    temp = jnp.maximum(temperature, 1e-6)
+
+    def row(seed, t, logit_row):
+        k = jax.random.fold_in(jax.random.key(seed), t)
+        return jax.random.categorical(k, logit_row / temp).astype(jnp.int32)
+
+    sampled = jax.vmap(row)(seeds_u32, step, logits)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    tok = jnp.where(temperature > 0.0, sampled, greedy)
+    lp_all = jax.nn.log_softmax(logits, axis=-1)
+    lp = jnp.take_along_axis(lp_all, tok[:, None], axis=1)[:, 0]
+    return tok, lp
+
+
+def decode_chunk(cfg: ModelConfig, chunk, flat, cache_k, cache_v, logits, seeds, step, done, pad_len, temperature, lora_flat=None):
+    """Decode ``chunk`` tokens for every row, carrying caches across calls.
+
+    cache_k/v: f32[L,B,H,T,dh]; logits: f32[B,V] (next-token logits);
+    seeds: i32[B] per-row RNG seeds; step: i32[B] decode steps executed
+    per row (>= tokens generated: it advances past EOS too; the mask is
+    the generated-token count); done: i32[B] 0/1; pad_len: i32[B];
+    temperature: f32 scalar.
+
+    Returns (tokens i32[B,C], logprobs f32[B,C], mask f32[B,C], cache_k,
+    cache_v, logits, step, done). Rows that are done (or have reached the
+    generation budget G) emit PAD/0/0 and stop touching their cache.
+    """
+    pt = unpack(param_specs(cfg), flat)
+    lt = unpack(lora_specs(cfg), lora_flat) if lora_flat is not None else None
+    P, G = cfg.prompt_len, cfg.gen_len
+    seeds_u32 = seeds.astype(jnp.uint32)
+
+    def one(carry, _):
+        cache_k, cache_v, logits, step, done = carry
+        done = done | (step >= G).astype(done.dtype)
+        tok, lp = _sample_rows(seeds_u32, step, logits, temperature)
+        live = done == 0
+        tok = jnp.where(live, tok, V.PAD)
+        lp = jnp.where(live, lp, 0.0)
+        mask = jnp.where(live, 1.0, 0.0)
+        done = done | (tok == V.EOS).astype(done.dtype)
+        logits2, cache_k, cache_v = _decode_step(cfg, pt, lt, cache_k, cache_v, tok, P + step, pad_len)
+        return (cache_k, cache_v, logits2, step + 1, done), (tok, lp, mask)
+
+    init = (cache_k, cache_v, logits, step, done)
+    (cache_k, cache_v, logits, step, done), (toks, lps, masks) = jax.lax.scan(
+        one, init, None, length=chunk
+    )
+    return toks.T, lps.T, masks.T, cache_k, cache_v, logits, step, done
+
+
+def rollout(cfg: ModelConfig, flat, prompts, pad_len, seeds, temperature, lora_flat=None, use_pallas=True, chunk=None):
     """The inference phase: sample ``B_r`` rollouts with a KV cache.
 
-    prompts: i32[B, P] left-padded; pad_len: i32[B]; seed: u32 scalar;
-    temperature: f32 scalar — > 0 samples, <= 0 decodes greedily (the eval
-    path reuses this same program).
+    Composed of ``prefill`` + ``decode_chunk`` calls (``chunk`` defaults to
+    the full generation budget G, i.e. one monolithic chunk) so the
+    monolithic program and the Rust chunked driver share one computation
+    per step — any chunking produces bit-identical streams.
+
+    prompts: i32[B, P] left-padded; pad_len: i32[B]; seeds: i32[B] per-row
+    RNG seeds; temperature: f32 scalar — > 0 samples, <= 0 decodes greedily
+    (the eval path reuses this).
 
     Returns:
       tokens   i32[B, T]  prompt + generation (PAD after EOS)
@@ -324,42 +437,26 @@ def rollout(cfg: ModelConfig, flat, prompts, pad_len, seed, temperature, lora_fl
       gen_mask f32[B, G]  1.0 through the EOS token, 0.0 after
       gen_len  i32[B]     number of generated tokens incl. EOS
     """
-    pt = unpack(param_specs(cfg), flat)
-    lt = unpack(lora_specs(cfg), lora_flat) if lora_flat is not None else None
-    B, P = prompts.shape
-    T, G = cfg.seq_len, cfg.gen_len
-    H, dh, L = cfg.heads, cfg.d_head, cfg.layers
-
-    logits_p, ks, vs = forward(cfg, pt, prompts, pad_len, lt, use_pallas, collect_kv=True)
-    cache_k = jnp.zeros((L, B, H, T, dh), jnp.float32)
-    cache_v = jnp.zeros((L, B, H, T, dh), jnp.float32)
-    cache_k = cache_k.at[:, :, :, :P, :].set(ks)
-    cache_v = cache_v.at[:, :, :, :P, :].set(vs)
-    last_logits = logits_p[:, P - 1, :]
-
-    key = jax.random.key(jnp.asarray(seed, dtype=jnp.uint32))
-
-    def step(carry, i):
-        cache_k, cache_v, logits, done, key = carry
-        key, sub = jax.random.split(key)
-        temp = jnp.maximum(temperature, 1e-6)
-        sampled = jax.random.categorical(sub, logits / temp, axis=-1).astype(jnp.int32)
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        tok = jnp.where(temperature > 0.0, sampled, greedy)
-        lp_all = jax.nn.log_softmax(logits, axis=-1)
-        lp = jnp.take_along_axis(lp_all, tok[:, None], axis=1)[:, 0]
-        tok = jnp.where(done, V.PAD, tok)
-        lp = jnp.where(done, 0.0, lp)
-        mask = jnp.where(done, 0.0, 1.0)
-        done = done | (tok == V.EOS)
-        logits2, cache_k, cache_v = _decode_step(cfg, pt, lt, cache_k, cache_v, tok, P + i, pad_len)
-        return (cache_k, cache_v, logits2, done, key), (tok, lp, mask)
-
-    init = (cache_k, cache_v, last_logits, jnp.zeros((B,), bool), key)
-    _, (toks, lps, masks) = jax.lax.scan(step, init, jnp.arange(G))
-    gen_tokens = toks.T  # [B, G]
-    logprobs = lps.T
-    gen_mask = masks.T
+    B, _ = prompts.shape
+    G = cfg.gen_len
+    chunk = G if chunk is None else chunk
+    cache_k, cache_v, logits = prefill(cfg, flat, prompts, pad_len, lora_flat, use_pallas)
+    step = jnp.zeros((B,), jnp.int32)
+    done = jnp.zeros((B,), jnp.int32)
+    toks, lps, masks = [], [], []
+    g = 0
+    while g < G:
+        c = min(chunk, G - g)
+        tk, lp, mk, cache_k, cache_v, logits, step, done = decode_chunk(
+            cfg, c, flat, cache_k, cache_v, logits, seeds, step, done, pad_len, temperature, lora_flat
+        )
+        toks.append(tk)
+        lps.append(lp)
+        masks.append(mk)
+        g += c
+    gen_tokens = jnp.concatenate(toks, axis=1)  # [B, G]
+    logprobs = jnp.concatenate(lps, axis=1)
+    gen_mask = jnp.concatenate(masks, axis=1)
     tokens = jnp.concatenate([prompts, gen_tokens], axis=1)
     gen_len = jnp.sum(gen_mask, axis=1).astype(jnp.int32)
     return tokens, logprobs, gen_mask, gen_len

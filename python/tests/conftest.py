@@ -7,9 +7,20 @@ _HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _HERE not in sys.path:
     sys.path.insert(0, _HERE)
 
-from hypothesis import settings
-
 # Interpret-mode Pallas kernels trace slowly; keep example counts modest but
 # meaningful, and disable the deadline (tracing dominates, not the property).
-settings.register_profile("kernels", max_examples=20, deadline=None)
-settings.load_profile("kernels")
+# hypothesis is optional: without it the property-based kernel tests skip at
+# import time but the rest of the suite still collects and runs.
+try:
+    from hypothesis import settings
+except ImportError:
+    settings = None
+
+if settings is not None:
+    settings.register_profile("kernels", max_examples=20, deadline=None)
+    settings.load_profile("kernels")
+
+collect_ignore_glob = []
+if settings is None:
+    # the kernel property suites import hypothesis at module scope
+    collect_ignore_glob += ["test_kernels_*.py"]

@@ -42,6 +42,11 @@ def _prompts(cfg, b, rng):
     return jnp.asarray(toks), jnp.asarray(pad)
 
 
+def _seeds(b, base):
+    """Distinct per-row RNG seeds (the rollout signature is seeds i32[B])."""
+    return jnp.asarray(np.arange(b) + base * 1000, jnp.int32)
+
+
 def test_param_count_padding():
     n = param_count(TINY)
     assert n % TINY.pad_multiple == 0
@@ -92,21 +97,21 @@ def test_forward_pallas_matches_ref(params):
 def test_rollout_shapes_and_determinism(params):
     rng = np.random.default_rng(3)
     prompts, pad = _prompts(TINY, 4, rng)
-    toks, lps, mask, glen = rollout(TINY, params, prompts, pad, jnp.uint32(7), jnp.float32(1.0))
+    toks, lps, mask, glen = rollout(TINY, params, prompts, pad, _seeds(4, 7), jnp.float32(1.0))
     assert toks.shape == (4, TINY.seq_len)
     assert lps.shape == (4, TINY.gen_len)
     assert mask.shape == (4, TINY.gen_len)
     np.testing.assert_array_equal(np.asarray(toks[:, : TINY.prompt_len]), np.asarray(prompts))
-    toks2, lps2, _, _ = rollout(TINY, params, prompts, pad, jnp.uint32(7), jnp.float32(1.0))
+    toks2, lps2, _, _ = rollout(TINY, params, prompts, pad, _seeds(4, 7), jnp.float32(1.0))
     np.testing.assert_array_equal(toks, toks2)
-    toks3, _, _, _ = rollout(TINY, params, prompts, pad, jnp.uint32(8), jnp.float32(1.0))
+    toks3, _, _, _ = rollout(TINY, params, prompts, pad, _seeds(4, 8), jnp.float32(1.0))
     assert np.any(np.asarray(toks) != np.asarray(toks3))
 
 
 def test_rollout_mask_eos_contract(params):
     rng = np.random.default_rng(4)
     prompts, pad = _prompts(TINY, 6, rng)
-    toks, lps, mask, glen = rollout(TINY, params, prompts, pad, jnp.uint32(1), jnp.float32(1.5))
+    toks, lps, mask, glen = rollout(TINY, params, prompts, pad, _seeds(6, 1), jnp.float32(1.5))
     toks, lps, mask, glen = map(np.asarray, (toks, lps, mask, glen))
     gen = toks[:, TINY.prompt_len :]
     for b in range(6):
@@ -125,7 +130,7 @@ def test_rollout_greedy_matches_forward_argmax(params):
     # temp<=0: each generated token must equal argmax of teacher-forced logits
     rng = np.random.default_rng(5)
     prompts, pad = _prompts(TINY, 3, rng)
-    toks, _, mask, _ = rollout(TINY, params, prompts, pad, jnp.uint32(0), jnp.float32(0.0))
+    toks, _, mask, _ = rollout(TINY, params, prompts, pad, _seeds(3, 0), jnp.float32(0.0))
     pt = unpack(param_specs(TINY), params)
     logits = forward(TINY, pt, toks, pad)
     P = TINY.prompt_len
@@ -139,7 +144,7 @@ def test_rollout_logprobs_match_teacher_forced(params):
     # behaviour logprobs recorded during decode == teacher-forced gen_logprobs
     rng = np.random.default_rng(6)
     prompts, pad = _prompts(TINY, 4, rng)
-    toks, lps, mask, _ = rollout(TINY, params, prompts, pad, jnp.uint32(2), jnp.float32(1.0))
+    toks, lps, mask, _ = rollout(TINY, params, prompts, pad, _seeds(4, 2), jnp.float32(1.0))
     lp_tf = gen_logprobs(TINY, params, toks, pad)
     m = np.asarray(mask).astype(bool)
     np.testing.assert_allclose(np.asarray(lps)[m], np.asarray(lp_tf)[m], rtol=1e-3, atol=1e-3)
@@ -148,7 +153,7 @@ def test_rollout_logprobs_match_teacher_forced(params):
 def test_grpo_grad_zero_at_identity_with_zero_adv(params):
     rng = np.random.default_rng(7)
     prompts, pad = _prompts(TINY, 2, rng)
-    toks, lps, mask, _ = rollout(TINY, params, prompts, pad, jnp.uint32(3), jnp.float32(1.0))
+    toks, lps, mask, _ = rollout(TINY, params, prompts, pad, _seeds(2, 3), jnp.float32(1.0))
     adv = jnp.zeros((2,), jnp.float32)
     zeros = jnp.zeros_like(lps)
     grads, loss, cf, kl = grpo_grad(TINY, params, toks, pad, mask, lps, adv, zeros, jnp.float32(0.0))
@@ -160,7 +165,7 @@ def test_grpo_grad_direction(params):
     # positive advantage should increase logprob of that rollout after a step
     rng = np.random.default_rng(8)
     prompts, pad = _prompts(TINY, 2, rng)
-    toks, lps, mask, _ = rollout(TINY, params, prompts, pad, jnp.uint32(4), jnp.float32(1.0))
+    toks, lps, mask, _ = rollout(TINY, params, prompts, pad, _seeds(2, 4), jnp.float32(1.0))
     adv = jnp.asarray([1.0, -1.0], jnp.float32)
     zeros = jnp.zeros_like(lps)
     grads, loss, _, _ = grpo_grad(TINY, params, toks, pad, mask, lps, adv, zeros, jnp.float32(0.0))
@@ -200,8 +205,8 @@ def test_lora_mode(params):
     rng = np.random.default_rng(10)
     prompts, pad = _prompts(cfg, 2, rng)
     # B=0 at init => adapters are identity: rollout must match base model
-    t1, l1, m1, _ = rollout(cfg, params, prompts, pad, jnp.uint32(5), jnp.float32(1.0), lora_flat=lora)
-    t2, l2, m2, _ = rollout(cfg, params, prompts, pad, jnp.uint32(5), jnp.float32(1.0))
+    t1, l1, m1, _ = rollout(cfg, params, prompts, pad, _seeds(2, 5), jnp.float32(1.0), lora_flat=lora)
+    t2, l2, m2, _ = rollout(cfg, params, prompts, pad, _seeds(2, 5), jnp.float32(1.0))
     np.testing.assert_array_equal(t1, t2)
     # grads flow to the lora vector and have its shape
     adv = jnp.asarray([1.0, -1.0], jnp.float32)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from compile import vocab as V
-from compile.aot import PROFILES, build_programs, to_hlo_text
+from compile.aot import PROFILES, build_programs, decode_chunk_sizes, to_hlo_text
 from compile.model import ModelConfig, lora_count, param_count
 
 
@@ -45,7 +45,8 @@ def _run(progs, name):
 @pytest.mark.parametrize("cfg", [TINY, TINY_LORA], ids=["full", "lora"])
 def test_program_outputs_match_declared_shapes(cfg):
     progs = build_programs(cfg)
-    expected = {"init", "rollout", "grad", "update", "score"}
+    expected = {"init", "rollout", "prefill", "admit_merge", "grad", "update", "score"}
+    expected |= {f"decode_chunk{c}" for c in decode_chunk_sizes(cfg)}
     if cfg.lora_rank == 0:
         expected.add("sft")
     assert set(progs) == expected
@@ -77,6 +78,24 @@ def test_rollout_program_executes(capsys):
     assert tokens.shape == (TINY.rollout_batch, TINY.seq_len)
     assert logprobs.shape == (TINY.rollout_batch, TINY.gen_len)
     assert np.all(np.asarray(gen_len) >= 0)
+
+
+def test_decode_path_programs_execute(capsys):
+    progs = build_programs(TINY)
+    L, B, H, T, dh = 1, 2, 2, 12, 8
+    ck, cv, lg = _run(progs, "prefill")
+    assert ck.shape == (L, B, H, T, dh)
+    assert cv.shape == (L, B, H, T, dh)
+    assert lg.shape == (B, TINY.vocab)
+    assert decode_chunk_sizes(TINY) == [1, 4, 8]  # G=8 for this config
+    toks, lps, mask, ck2, cv2, lg2, step, done = _run(progs, "decode_chunk4")
+    assert toks.shape == (B, 4)
+    assert ck2.shape == (L, B, H, T, dh)
+    assert step.shape == (B,) and done.shape == (B,)
+    assert np.all(np.asarray(step) == 4)
+    mk, mv, ml = _run(progs, "admit_merge")
+    assert mk.shape == (L, B, H, T, dh) and mv.shape == mk.shape
+    assert ml.shape == (B, TINY.vocab)
 
 
 def test_lowering_produces_hlo_text():

@@ -14,12 +14,15 @@ use pods::coordinator::scheduler::Trainer;
 use pods::exp::CfgBuilder;
 use pods::util::bench::{bench, BenchReport};
 
+#[allow(clippy::too_many_arguments)]
 fn mk_trainer(
     kind: &str,
     n: usize,
     m: Option<usize>,
     workers: usize,
     schedule: &str,
+    decode_chunk: usize,
+    refill: &str,
 ) -> anyhow::Result<Trainer> {
     let cfg = CfgBuilder {
         name: format!("bench_{kind}_{n}_{workers}w_{schedule}"),
@@ -34,6 +37,8 @@ fn mk_trainer(
         lr: 1e-4,
         workers,
         schedule: schedule.into(),
+        decode_chunk,
+        refill: refill.into(),
         out_dir: std::env::temp_dir().join("pods_bench").to_string_lossy().into_owned(),
         ..Default::default()
     }
@@ -49,19 +54,25 @@ fn main() -> anyhow::Result<()> {
         eprintln!("skipping: base artifacts missing (run `make artifacts`)");
         return Ok(());
     }
-    // (label, kind, n, m, workers, schedule)
+    // (label, kind, n, m, workers, schedule, decode_chunk, refill)
+    // The "full-G batch" arm decodes every rollout to the budget with no
+    // mid-batch refill — the closest stand-in for the old monolithic
+    // decode path; the default arms use chunked early exit (C=16,
+    // continuous refill). Their throughput ratio is the acceptance
+    // number.
     let arms = [
-        ("grpo (n=m=16)", "grpo", 16usize, None, 1usize, "sync"),
-        ("pods (n=64 -> m=16)", "pods", 64, Some(16), 1, "sync"),
-        ("ga   (n=64, train all)", "ga", 64, None, 1, "sync"),
-        ("pods real-threads (4w)", "pods", 64, Some(16), 4, "sync"),
-        ("pods pipelined (4w)", "pods", 64, Some(16), 4, "pipelined"),
-        ("pods distributed (8w)", "pods", 64, Some(16), 8, "sync"),
-        ("ga   distributed (8w)", "ga", 64, None, 8, "sync"),
+        ("grpo (n=m=16)", "grpo", 16usize, None, 1usize, "sync", 16usize, "continuous"),
+        ("pods (n=64 -> m=16)", "pods", 64, Some(16), 1, "sync", 16, "continuous"),
+        ("pods full-G batch (no early exit)", "pods", 64, Some(16), 1, "sync", 64, "batch"),
+        ("ga   (n=64, train all)", "ga", 64, None, 1, "sync", 16, "continuous"),
+        ("pods real-threads (4w)", "pods", 64, Some(16), 4, "sync", 16, "continuous"),
+        ("pods pipelined (4w)", "pods", 64, Some(16), 4, "pipelined", 16, "continuous"),
+        ("pods distributed (8w)", "pods", 64, Some(16), 8, "sync", 16, "continuous"),
+        ("ga   distributed (8w)", "ga", 64, None, 8, "sync", 16, "continuous"),
     ];
     let mut report = BenchReport::new();
-    for (label, kind, n, m, workers, schedule) in arms {
-        let mut tr = mk_trainer(kind, n, m, workers, schedule)?;
+    for (label, kind, n, m, workers, schedule, chunk, refill) in arms {
+        let mut tr = mk_trainer(kind, n, m, workers, schedule, chunk, refill)?;
         let pipelined = schedule == "pipelined";
         let mut it = 0usize;
         let res = bench(&format!("e2e step {label}"), Some(4), || {
@@ -73,13 +84,15 @@ fn main() -> anyhow::Result<()> {
         let last = tr.recorder.iters.last().unwrap();
         println!(
             "  real {:.2}s | sim {:.1}s charged (inf {:.1}s + upd {:.1}s, \
-             {:.1}s hidden, {} micro-steps)",
+             {:.1}s hidden, {} micro-steps) | decoded {} tok ({} wasted)",
             res.median_ns / 1e9,
             last.sim_step_time,
             last.sim_inference_time,
             last.sim_update_time,
             last.sim_overlap_saved,
-            last.micro_steps
+            last.micro_steps,
+            last.gen_tokens_decoded,
+            last.gen_tokens_wasted
         );
         let rollouts_per_sec = last.rollouts_generated as f64 / (res.median_ns / 1e9);
         report.push_with_throughput(res, rollouts_per_sec);

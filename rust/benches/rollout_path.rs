@@ -1,12 +1,13 @@
-//! Bench: the inference phase — rollout generation (KV-cache decode inside
-//! the AOT artifact), reward verification, the per-rollout cost that
-//! Fig. 1 (bottom) amortizes with batching, and the real thread-pool
-//! speedup of the exec RolloutEngine (`hwsim.workers > 1` = that many
-//! engine replicas decoding concurrently on this host).
+//! Bench: the inference phase — monolithic full-`G` decode vs the chunked
+//! early-exit driver (prefill + decode_chunk with continuous slot refill),
+//! reward verification, and the real thread-pool speedup of the exec
+//! RolloutEngine (`hwsim.workers > 1` = that many engine replicas decoding
+//! concurrently on this host). The monolithic-vs-chunked arms are the
+//! ground truth behind the BENCH_e2e.json throughput acceptance.
 
 use pods::coordinator::exec::{GenBatch, RolloutEngine};
 use pods::reward::{score_rollout, RewardWeights};
-use pods::rollout::{generate_group, prompt_batch, GenRequest};
+use pods::rollout::{generate_group, prompt_batch, GenRequest, RefillMode};
 use pods::runtime::Engine;
 use pods::tasks::{Split, TaskKind};
 use pods::util::bench::{bench, black_box};
@@ -24,21 +25,46 @@ fn main() -> anyhow::Result<()> {
     let problem = TaskKind::Arith.generate(Split::Train, 0);
     let (prompts, pads) = prompt_batch(&engine, &problem.prompt)?;
     let br = engine.meta.config.rollout_batch;
+    let g = engine.meta.gen_len;
 
-    let mut seed = 0u32;
-    let res = bench(&format!("rollout call (B_r={br}, G=64, sampled)"), Some(10), || {
-        seed += 1;
-        black_box(engine.rollout(&params, None, &prompts, &pads, seed, 1.0).unwrap());
+    // ---- monolithic reference: always decodes B_r x G ------------------
+    let mut base_seed = 0i32;
+    let res = bench(&format!("rollout monolithic (B_r={br}, G={g}, sampled)"), Some(10), || {
+        base_seed += br as i32;
+        let seeds: Vec<i32> = (0..br as i32).map(|i| base_seed + i).collect();
+        black_box(engine.rollout(&params, None, &prompts, &pads, &seeds, 1.0).unwrap());
     });
     println!(
         "  -> {:.1} ms/rollout on one CPU device",
         res.median_ns / 1e6 / br as f64
     );
-    bench("rollout call greedy (eval path)", Some(10), || {
-        black_box(engine.rollout(&params, None, &prompts, &pads, 0, 0.0).unwrap());
-    });
 
-    let out = engine.rollout(&params, None, &prompts, &pads, 3, 1.0)?;
+    // ---- chunked early-exit driver over the same work ------------------
+    // n = B_r rollouts of the same prompt: identical sampled streams, but
+    // decode stops at ceil(longest rollout / C) chunks.
+    for chunk in engine.meta.decode_chunks.clone() {
+        let mut iter = 0u64;
+        bench(&format!("rollout chunked C={chunk} (n={br}, early exit)"), Some(10), || {
+            iter += 1;
+            let req = GenRequest {
+                params: &params,
+                lora: None,
+                ref_params: None,
+                ref_lora: None,
+                n: br,
+                temperature: 1.0,
+                run_seed: 9,
+                iter,
+                weights: RewardWeights::default(),
+                decode_chunk: chunk,
+                refill: RefillMode::Continuous,
+            };
+            black_box(generate_group(&engine, &req, TaskKind::Arith, &problem).unwrap());
+        });
+    }
+
+    let seeds: Vec<i32> = (0..br as i32).collect();
+    let out = engine.rollout(&params, None, &prompts, &pads, &seeds, 1.0)?;
     let t = engine.meta.config.seq_len;
     let p = engine.meta.config.prompt_len;
     let row: Vec<i32> = out.tokens.data[..t].to_vec();
@@ -46,6 +72,7 @@ fn main() -> anyhow::Result<()> {
         black_box(score_rollout(black_box(&row), p, TaskKind::Arith, &problem));
     });
 
+    // generate_group with continuous refill: 64 rows through B_r slots
     let req = GenRequest {
         params: &params,
         lora: None,
@@ -56,14 +83,17 @@ fn main() -> anyhow::Result<()> {
         run_seed: 9,
         iter: 0,
         weights: RewardWeights::default(),
+        decode_chunk: 16,
+        refill: RefillMode::Continuous,
     };
-    bench("generate_group n=64 (4 calls + verify)", Some(5), || {
+    bench("generate_group n=64 (chunked refill + verify)", Some(5), || {
         black_box(generate_group(&engine, &req, TaskKind::Arith, &problem).unwrap());
     });
 
     // Real multi-threaded generation: the same 4-prompt iteration fanned
-    // over 1/2/4 worker threads (each its own engine replica). Results
-    // are bit-identical across pool sizes; only wall time changes.
+    // over 1/2/4 worker threads (each its own engine replica, each running
+    // the chunked driver over its row shard). Results are bit-identical
+    // across pool sizes; only wall time changes.
     let problems: Vec<_> =
         (0..4u64).map(|i| TaskKind::Arith.generate(Split::Train, i)).collect();
     let shared_problems = Arc::new(problems);
@@ -85,6 +115,8 @@ fn main() -> anyhow::Result<()> {
                 iter,
                 task: TaskKind::Arith,
                 weights: RewardWeights::default(),
+                decode_chunk: 16,
+                refill: RefillMode::Continuous,
             };
             black_box(pool.generate(&engine, batch).unwrap());
         });

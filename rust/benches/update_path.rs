@@ -20,7 +20,8 @@ fn main() -> anyhow::Result<()> {
     let mut store = ParamStore::new(engine.init(1)?);
     let problem = TaskKind::Arith.generate(Split::Train, 0);
     let (prompts, pads) = prompt_batch(&engine, &problem.prompt)?;
-    let out = engine.rollout(&store.params, None, &prompts, &pads, 1, 1.0)?;
+    let seeds: Vec<i32> = (0..engine.meta.config.rollout_batch as i32).collect();
+    let out = engine.rollout(&store.params, None, &prompts, &pads, &seeds, 1.0)?;
     let bu = engine.meta.config.update_batch;
     let t = engine.meta.config.seq_len;
     let g = engine.meta.gen_len;

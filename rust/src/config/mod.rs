@@ -14,6 +14,7 @@
 use crate::coordinator::advantage::NormMode;
 use crate::coordinator::select::Pipeline;
 use crate::hwsim::HwModel;
+use crate::rollout::RefillMode;
 use crate::tasks::TaskKind;
 use crate::util::toml::{parse as toml_parse, SectionView};
 use anyhow::{anyhow, Context, Result};
@@ -87,6 +88,47 @@ pub struct AlgoSection {
     pub temperature: f64,
 }
 
+/// `[rollout]` — the chunked early-exit decode driver.
+#[derive(Debug, Clone)]
+pub struct RolloutSection {
+    /// Tokens decoded per `decode_chunk` call. Must match a lowered
+    /// program (`meta.json` `decode_chunks`; profiles ship {1, 4, 16, G}).
+    /// Smaller chunks exit earlier after EOS but pay more call overhead.
+    pub decode_chunk: usize,
+    /// Slot-refill policy between chunks: `"continuous"` (default) admits
+    /// queued rows into freed slots; `"batch"` drains the whole batch
+    /// first (the legacy call-shaped schedule, kept as a comparison arm).
+    pub refill: RefillMode,
+}
+
+impl Default for RolloutSection {
+    fn default() -> Self {
+        Self { decode_chunk: 16, refill: RefillMode::Continuous }
+    }
+}
+
+impl RolloutSection {
+    fn from_section(sec: &SectionView) -> Result<Self> {
+        let d = Self::default();
+        let r = Self {
+            decode_chunk: sec.usize_or("decode_chunk", d.decode_chunk)?,
+            refill: RefillMode::parse(&sec.str_or("refill", d.refill.name())?)?,
+        };
+        r.validate()?;
+        Ok(r)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.decode_chunk == 0 {
+            return Err(anyhow!(
+                "rollout.decode_chunk must be >= 1 (tokens decoded per chunk call; \
+                 the artifact set lowers {{1, 4, 16, G}})"
+            ));
+        }
+        Ok(())
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct SftSection {
     pub steps: usize,
@@ -101,6 +143,7 @@ pub struct RunConfig {
     pub run: RunSection,
     pub algo: AlgoSection,
     pub hwsim: HwModel,
+    pub rollout: RolloutSection,
     pub sft: Option<SftSection>,
 }
 
@@ -115,6 +158,7 @@ impl RunConfig {
         let run = SectionView::new(&doc, "run");
         let algo = SectionView::new(&doc, "algo");
         let hw = SectionView::new(&doc, "hwsim");
+        let rollout = SectionView::new(&doc, "rollout");
         let sft = SectionView::new(&doc, "sft");
 
         let cfg = RunConfig {
@@ -145,6 +189,7 @@ impl RunConfig {
                 temperature: algo.f64_or("temperature", 1.0)?,
             },
             hwsim: HwModel::from_section(&hw)?,
+            rollout: RolloutSection::from_section(&rollout)?,
             sft: if sft.sec.is_some() {
                 Some(SftSection {
                     steps: sft.usize_or("steps", 0)?,
@@ -213,10 +258,11 @@ impl RunConfig {
         if self.run.prompts_per_iter == 0 {
             return Err(anyhow!("run.prompts_per_iter must be positive"));
         }
-        // the full [hwsim] validation (workers >= 1, positive cost-model
-        // times, schedule) — also applied to programmatically-built
-        // configs that bypass from_section
+        // the full [hwsim]/[rollout] validation (workers >= 1, positive
+        // cost-model times, schedule, chunk size) — also applied to
+        // programmatically-built configs that bypass from_section
         self.hwsim.validate()?;
+        self.rollout.validate()?;
         Ok(())
     }
 }
@@ -332,6 +378,29 @@ mod tests {
         let text = format!("{MINIMAL}\n[hwsim]\nmem_capacity_rollouts = 0\n");
         let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
         assert!(err.contains("mem_capacity_rollouts"), "undescriptive: {err}");
+    }
+
+    #[test]
+    fn rollout_section_defaults_and_overrides() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert_eq!(cfg.rollout.decode_chunk, 16);
+        assert_eq!(cfg.rollout.refill, crate::rollout::RefillMode::Continuous);
+
+        let text = format!("{MINIMAL}\n[rollout]\ndecode_chunk = 4\nrefill = \"batch\"\n");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert_eq!(cfg.rollout.decode_chunk, 4);
+        assert_eq!(cfg.rollout.refill, crate::rollout::RefillMode::Batch);
+    }
+
+    #[test]
+    fn rollout_section_rejects_degenerate_values() {
+        let text = format!("{MINIMAL}\n[rollout]\ndecode_chunk = 0\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("rollout.decode_chunk"), "undescriptive: {err}");
+
+        let text = format!("{MINIMAL}\n[rollout]\nrefill = \"eager\"\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("refill"), "undescriptive: {err}");
     }
 
     #[test]

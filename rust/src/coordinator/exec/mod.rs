@@ -6,8 +6,9 @@
 //! pieces:
 //!
 //! * [`RolloutEngine`] — the inference phase on a real thread pool sized
-//!   by `hwsim.workers` (per-thread engine replicas; cross-group call
-//!   packing via [`crate::rollout::plan_calls`]).
+//!   by `hwsim.workers` (per-thread engine replicas), each worker running
+//!   the chunked early-exit continuous batcher over its shard of the
+//!   iteration's row queue ([`crate::rollout::plan_rows`]).
 //! * [`UpdateEngine`] — micro-batch packing + gradient accumulation +
 //!   the fused optimizer apply.
 //! * [`TrainLoop`] — the driver composing them under the config-selected
@@ -28,13 +29,11 @@
 //! ([`crate::hwsim::SimClock::advance_hidden`]) and the hidden time is
 //! reported per iteration as `sim_overlap_saved`.
 //!
-//! With `schedule = "sync"` the executor reproduces the seed trainer's
-//! selections, losses and simulated times exactly (golden-tested in
-//! `rust/tests/exec_golden.rs`). Sole exception: multi-prompt iterations
-//! where `n % B_r != 0` pack remainder rows across groups into shared
-//! calls (see [`crate::rollout::plan_calls`]) and so sample those rows
-//! from a different — still deterministic — stream; all shipped configs
-//! use `n` divisible by `B_r`.
+//! With `schedule = "sync"` the executor reproduces the sequential
+//! reference (`generate_group` prompt-by-prompt) exactly — per-row RNG
+//! seeds make rollout streams independent of packing, sharding, chunking
+//! and refill order (golden-tested in `rust/tests/exec_golden.rs` and
+//! `rust/tests/decode_golden.rs`).
 
 pub mod rollout_engine;
 pub mod update_engine;
@@ -84,6 +83,11 @@ pub struct StepReport {
     pub micro_steps: usize,
     pub rollouts_generated: usize,
     pub rollouts_trained: usize,
+    /// Decode-step slots physically executed this iteration (chunked
+    /// driver: `B_r × C` per chunk call, post-EOS + filler included).
+    pub gen_tokens_decoded: usize,
+    /// `gen_tokens_decoded` minus the useful generated tokens.
+    pub gen_tokens_wasted: usize,
     /// Simulated cost of this iteration's inference phase (regardless of
     /// where on the timeline it was charged).
     pub sim_inference: f64,
@@ -164,8 +168,16 @@ impl TrainLoop {
             }
         };
         let rollouts_generated = gen_stats.rollouts;
-        let avg_tokens = gen_stats.total_gen_tokens as f64 / rollouts_generated.max(1) as f64;
-        let sim_inference = cfg.hwsim.inference_time(rollouts_generated, avg_tokens);
+        // chunk-granular charging: a chunk runs to completion even when a
+        // row finishes mid-chunk, so each rollout's decode time rounds up
+        // to the configured chunk size (per-rollout lengths are partition-
+        // invariant, unlike the physical call counts)
+        let gen_lens: Vec<usize> = groups
+            .iter()
+            .flat_map(|g| g.rollouts.iter().map(|r| r.gen_len as usize))
+            .collect();
+        let sim_inference =
+            cfg.hwsim.chunked_inference_time(&gen_lens, cfg.rollout.decode_chunk);
 
         // ---- Phase 2: select + advantages -----------------------------
         let (selected, sel_stats) = build_update_batch(
@@ -226,6 +238,8 @@ impl TrainLoop {
             micro_steps: upd.micro_steps,
             rollouts_generated,
             rollouts_trained: upd.rollouts_trained,
+            gen_tokens_decoded: gen_stats.gen_tokens_decoded,
+            gen_tokens_wasted: gen_stats.gen_tokens_wasted,
             sim_inference,
             sim_update: upd.sim_update,
             sim_step: charged_inference + upd.sim_update,
@@ -264,5 +278,7 @@ fn snapshot_batch(ctx: &StepCtx, iter: usize) -> GenBatch {
         iter: iter as u64,
         task: ctx.task,
         weights: RewardWeights::default(),
+        decode_chunk: cfg.rollout.decode_chunk,
+        refill: cfg.rollout.refill,
     }
 }

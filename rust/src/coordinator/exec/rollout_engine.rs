@@ -1,32 +1,33 @@
-//! Real multi-threaded rollout generation.
+//! Real multi-threaded rollout generation over the chunked decode driver.
 //!
-//! The hwsim clock always *simulated* `hwsim.workers` parallel devices,
-//! but the seed trainer generated groups prompt-by-prompt on one thread —
-//! the worker parallelism existed only on paper. [`RolloutEngine`] makes
-//! it real: an iteration's rollout calls (planned by
-//! [`crate::rollout::plan_calls`], which also packs partial batches across
-//! prompt groups) are fanned over a pool of OS threads via a shared work
-//! queue, so generation saturates however many cores the host has.
+//! An iteration's generation is planned as a refill queue of rows
+//! ([`crate::rollout::plan_rows`] — one row per rollout, each with a
+//! private RNG seed) and fanned over a pool of OS threads as contiguous
+//! **row shards**: every worker runs its own slot-based continuous
+//! batcher ([`crate::rollout::decode_rows`]) over its shard — retiring
+//! rows at EOS, admitting queued rows into freed slots, exiting early
+//! when its shard drains.
 //!
 //! The PJRT [`Engine`] is not `Send`/`Sync` (single-threaded client,
 //! `Rc`-cached executables), so the pool cannot share the trainer's
 //! engine. Instead **each worker thread lazily loads its own engine
 //! replica** of the same artifact profile — the replica compiles the
-//! rollout program once on first use and is reused for the rest of the
+//! decode programs once on first use and is reused for the rest of the
 //! run. Inputs cross the thread boundary as [`GenBatch`] snapshots
 //! (`Arc`-shared parameter vectors + problems), which is exactly the
 //! snapshot semantics the pipelined schedule needs anyway: generation of
 //! iteration *t+1* runs against the pre-update policy while the main
 //! thread updates.
 //!
-//! Determinism: every call carries its own seed from the plan, and
-//! results are reassembled in plan order regardless of which worker
-//! finished first — `workers = 16` produces bit-identical rollouts to
-//! `workers = 1`.
+//! Determinism: every row's token stream is a counter-based function of
+//! its own seed, so sharding — like chunking and refill order — cannot
+//! change what any rollout samples. `workers = 16` produces bit-identical
+//! rollouts to `workers = 1`; only the call-count/decoded-token telemetry
+//! (how the physical work was batched) varies with the partition.
 
 use crate::coordinator::group::PromptGroup;
 use crate::reward::RewardWeights;
-use crate::rollout::{execute_call, plan_calls, CallRollout, InferenceStats, PlannedCall};
+use crate::rollout::{execute_rows, plan_rows, CallRollout, InferenceStats, RefillMode, RowSpec};
 use crate::runtime::Engine;
 use crate::tasks::{Problem, TaskKind};
 use anyhow::{anyhow, bail, Context, Result};
@@ -57,22 +58,26 @@ pub struct GenBatch {
     pub iter: u64,
     pub task: TaskKind,
     pub weights: RewardWeights,
+    /// Tokens decoded per `decode_chunk` call (`[rollout] decode_chunk`).
+    pub decode_chunk: usize,
+    /// Slot-refill policy (`[rollout] refill`).
+    pub refill: RefillMode,
 }
 
-/// One queued rollout call for a worker thread.
+/// One queued shard of generation rows for a worker thread.
 struct Job {
     batch_id: u64,
-    call_idx: usize,
-    call: PlannedCall,
+    shard_idx: usize,
+    rows: Vec<RowSpec>,
     batch: Arc<GenBatch>,
 }
 
-type CallOut = (Vec<CallRollout>, usize);
-type CallResult = (u64, usize, Result<CallOut>);
+type ShardOut = (Vec<CallRollout>, InferenceStats);
+type ShardResult = (u64, usize, Result<ShardOut>);
 
 struct Pool {
     job_tx: mpsc::Sender<Job>,
-    result_rx: mpsc::Receiver<CallResult>,
+    result_rx: mpsc::Receiver<ShardResult>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -80,15 +85,15 @@ struct Pool {
 /// with [`RolloutEngine::collect`].
 pub struct PendingGen {
     batch_id: u64,
-    plan: Vec<PlannedCall>,
+    shards: usize,
     batch: Arc<GenBatch>,
 }
 
 /// A pool of rollout worker threads, each owning an engine replica.
 ///
 /// With `workers <= 1`, [`Self::generate`] runs inline on the trainer's
-/// engine (no replica, no thread hop) — byte-identical to the sequential
-/// path and free of the second compile. [`Self::submit`] always uses the
+/// engine (no replica, no thread hop) with a single refill queue — the
+/// maximum continuous-batching benefit. [`Self::submit`] always uses the
 /// pool: a dedicated thread is what lets generation overlap the
 /// main-thread update even with one simulated worker.
 pub struct RolloutEngine {
@@ -98,6 +103,29 @@ pub struct RolloutEngine {
     pool: Option<Pool>,
     next_batch_id: u64,
     in_flight: bool,
+}
+
+/// Split the row queue into contiguous, size-balanced shards: at most
+/// one per worker, but never more than `ceil(rows / B_r)` — a shard
+/// smaller than the rollout batch decodes mostly filler slots, so spare
+/// workers are better left idle than fed under-full batches. Empty
+/// shards are never produced.
+fn shard_rows(rows: &[RowSpec], workers: usize, br: usize) -> Vec<Vec<RowSpec>> {
+    let full_batches = rows.len().div_ceil(br.max(1));
+    let shards = workers.min(full_batches).clamp(1, rows.len().max(1));
+    let base = rows.len() / shards;
+    let extra = rows.len() % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut off = 0;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        if len == 0 {
+            continue;
+        }
+        out.push(rows[off..off + len].to_vec());
+        off += len;
+    }
+    out
 }
 
 impl RolloutEngine {
@@ -123,7 +151,7 @@ impl RolloutEngine {
             let threads = self.workers.clamp(1, cores.max(1));
             let (job_tx, job_rx) = mpsc::channel::<Job>();
             let job_rx = Arc::new(Mutex::new(job_rx));
-            let (res_tx, result_rx) = mpsc::channel::<CallResult>();
+            let (res_tx, result_rx) = mpsc::channel::<ShardResult>();
             let mut handles = Vec::with_capacity(threads);
             for w in 0..threads {
                 let rx = Arc::clone(&job_rx);
@@ -148,45 +176,51 @@ impl RolloutEngine {
         engine: &Engine,
         batch: GenBatch,
     ) -> Result<(Vec<PromptGroup>, InferenceStats)> {
-        let br = engine.meta.config.rollout_batch;
-        let plan = plan_calls(&batch.problems, batch.n, br, batch.run_seed, batch.iter);
+        let rows = plan_rows(&batch.problems, batch.n, batch.run_seed, batch.iter);
         if self.workers <= 1 {
-            let mut outs = Vec::with_capacity(plan.len());
-            for call in &plan {
-                outs.push(run_call(engine, &batch, call)?);
-            }
-            return Ok(assemble(&batch, &plan, outs));
+            // inline: one continuous queue over all rows — no replica, no
+            // thread hop, maximal refill packing
+            let out = run_shard(engine, &batch, &rows)?;
+            return Ok(assemble(&batch, vec![out]));
         }
-        let pending = self.submit_plan(plan, Arc::new(batch))?;
+        let br = engine.meta.config.rollout_batch;
+        let pending = self.submit_rows(rows, Arc::new(batch), br)?;
         self.collect(pending)
     }
 
     /// Start generating `batch` on the pool and return immediately — the
     /// pipelined schedule's prefetch. `br` is the profile's rollout batch
-    /// size (`engine.meta.config.rollout_batch`). At most one batch may be
-    /// in flight.
+    /// size (`engine.meta.config.rollout_batch`), which bounds how finely
+    /// the rows are sharded. At most one batch may be in flight.
     pub fn submit(&mut self, br: usize, batch: GenBatch) -> Result<PendingGen> {
-        let plan = plan_calls(&batch.problems, batch.n, br, batch.run_seed, batch.iter);
-        self.submit_plan(plan, Arc::new(batch))
+        let rows = plan_rows(&batch.problems, batch.n, batch.run_seed, batch.iter);
+        self.submit_rows(rows, Arc::new(batch), br)
     }
 
-    fn submit_plan(&mut self, plan: Vec<PlannedCall>, batch: Arc<GenBatch>) -> Result<PendingGen> {
+    fn submit_rows(
+        &mut self,
+        rows: Vec<RowSpec>,
+        batch: Arc<GenBatch>,
+        br: usize,
+    ) -> Result<PendingGen> {
         if self.in_flight {
             bail!("a rollout generation batch is already in flight");
         }
         let batch_id = self.next_batch_id;
         self.next_batch_id += 1;
+        let shards = shard_rows(&rows, self.workers.max(1), br);
+        let n_shards = shards.len();
         let pool = self.ensure_pool()?;
-        for (call_idx, call) in plan.iter().enumerate() {
+        for (shard_idx, rows) in shards.into_iter().enumerate() {
             pool.job_tx
-                .send(Job { batch_id, call_idx, call: call.clone(), batch: Arc::clone(&batch) })
+                .send(Job { batch_id, shard_idx, rows, batch: Arc::clone(&batch) })
                 .map_err(|_| anyhow!("rollout worker threads exited; pool is gone"))?;
         }
         self.in_flight = true;
-        Ok(PendingGen { batch_id, plan, batch })
+        Ok(PendingGen { batch_id, shards: n_shards, batch })
     }
 
-    /// Block until every call of `pending` finished and assemble the
+    /// Block until every shard of `pending` finished and assemble the
     /// groups in plan order (independent of worker completion order).
     pub fn collect(&mut self, pending: PendingGen) -> Result<(Vec<PromptGroup>, InferenceStats)> {
         // collect() consumes the in-flight batch whatever happens next —
@@ -197,10 +231,10 @@ impl RolloutEngine {
             .pool
             .as_ref()
             .ok_or_else(|| anyhow!("collect without a running pool"))?;
-        let mut slots: Vec<Option<Result<CallOut>>> =
-            (0..pending.plan.len()).map(|_| None).collect();
+        let mut slots: Vec<Option<Result<ShardOut>>> =
+            (0..pending.shards).map(|_| None).collect();
         let mut got = 0;
-        while got < pending.plan.len() {
+        while got < pending.shards {
             let (bid, idx, res) = pool
                 .result_rx
                 .recv()
@@ -215,7 +249,7 @@ impl RolloutEngine {
         for s in slots {
             outs.push(s.expect("all slots filled")?);
         }
-        Ok(assemble(&pending.batch, &pending.plan, outs))
+        Ok(assemble(&pending.batch, outs))
     }
 }
 
@@ -231,41 +265,37 @@ impl Drop for RolloutEngine {
     }
 }
 
-/// Execute one planned call against an engine (worker replica or the
+/// Execute one row shard against an engine (worker replica or the
 /// trainer's own engine on the inline path).
-fn run_call(engine: &Engine, batch: &GenBatch, call: &PlannedCall) -> Result<CallOut> {
-    execute_call(
+fn run_shard(engine: &Engine, batch: &GenBatch, rows: &[RowSpec]) -> Result<ShardOut> {
+    execute_rows(
         engine,
         &batch.params,
         batch.lora.as_deref().map(|v| v.as_slice()),
         batch.ref_params.as_deref().map(|v| v.as_slice()),
         batch.ref_lora.as_deref().map(|v| v.as_slice()),
         batch.temperature,
-        call,
+        batch.decode_chunk,
+        batch.refill,
+        rows,
         &batch.problems,
         batch.task,
         &batch.weights,
     )
 }
 
-/// Reassemble per-call outputs (plan order) into per-prompt groups. Each
-/// group's rollout order matches the sequential path: full calls first,
-/// remainder rows after.
-fn assemble(
-    batch: &GenBatch,
-    plan: &[PlannedCall],
-    outs: Vec<CallOut>,
-) -> (Vec<PromptGroup>, InferenceStats) {
-    debug_assert_eq!(plan.len(), outs.len());
+/// Reassemble per-shard outputs (shard order) into per-prompt groups.
+/// Shards are contiguous cuts of the group-major row queue, so appending
+/// in shard order preserves each group's rollout order.
+fn assemble(batch: &GenBatch, outs: Vec<ShardOut>) -> (Vec<PromptGroup>, InferenceStats) {
     let mut groups: Vec<PromptGroup> = batch
         .problems
         .iter()
         .map(|p| PromptGroup { problem: p.clone(), rollouts: Vec::with_capacity(batch.n) })
         .collect();
     let mut stats = InferenceStats::default();
-    for (kept, gen_tokens) in outs {
-        stats.calls += 1;
-        stats.total_gen_tokens += gen_tokens;
+    for (kept, shard_stats) in outs {
+        stats.absorb(&shard_stats);
         for cr in kept {
             groups[cr.group_idx].rollouts.push(cr.record);
         }
@@ -274,14 +304,14 @@ fn assemble(
     (groups, stats)
 }
 
-/// Worker thread body: pull calls off the shared queue until the channel
+/// Worker thread body: pull shards off the shared queue until the channel
 /// closes. The engine replica is loaded on the first job so idle pools
 /// (e.g. sync schedule with one worker) never pay a compile.
 fn worker_main(
     artifacts: PathBuf,
     profile: String,
     jobs: Arc<Mutex<mpsc::Receiver<Job>>>,
-    results: mpsc::Sender<CallResult>,
+    results: mpsc::Sender<ShardResult>,
 ) {
     let mut engine: Option<Engine> = None;
     loop {
@@ -301,16 +331,16 @@ fn worker_main(
                 }
                 Err(e) => {
                     let msg = anyhow!("rollout worker failed to load engine replica: {e}");
-                    let _ = results.send((job.batch_id, job.call_idx, Err(msg)));
+                    let _ = results.send((job.batch_id, job.shard_idx, Err(msg)));
                     continue;
                 }
             }
         }
-        // A panicking call must still produce a CallResult — otherwise
+        // A panicking shard must still produce a ShardResult — otherwise
         // collect() would wait forever for the missing slot. The replica
         // is discarded after a panic (its internal state is suspect).
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_call(engine.as_ref().expect("loaded above"), &job.batch, &job.call)
+            run_shard(engine.as_ref().expect("loaded above"), &job.batch, &job.rows)
         }));
         let res = match caught {
             Ok(r) => r,
@@ -321,11 +351,51 @@ fn worker_main(
                     .map(|s| (*s).to_string())
                     .or_else(|| panic.downcast_ref::<String>().cloned())
                     .unwrap_or_else(|| "non-string panic payload".to_string());
-                Err(anyhow!("rollout worker panicked executing call: {what}"))
+                Err(anyhow!("rollout worker panicked executing shard: {what}"))
             }
         };
-        if results.send((job.batch_id, job.call_idx, res)).is_err() {
+        if results.send((job.batch_id, job.shard_idx, res)).is_err() {
             return; // receiver gone: engine shut down
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: usize) -> Vec<RowSpec> {
+        (0..n).map(|i| RowSpec { group_idx: i / 4, rollout_idx: i % 4, seed: i as i32 }).collect()
+    }
+
+    /// Sharding is contiguous, balanced, covers every row exactly once,
+    /// never emits empty shards, and never splits finer than the rollout
+    /// batch allows (under-full decode batches waste slots on filler).
+    #[test]
+    fn shard_rows_partitions_contiguously() {
+        for (n, w, br) in [
+            (12usize, 4usize, 4usize),
+            (13, 4, 4),
+            (3, 8, 4),
+            (1, 1, 4),
+            (16, 1, 4),
+            (64, 8, 16),
+        ] {
+            let all = rows(n);
+            let shards = shard_rows(&all, w, br);
+            assert!(shards.len() <= w.max(1));
+            assert!(shards.len() <= n.div_ceil(br).max(1), "over-sharded at n={n} w={w}");
+            assert!(shards.iter().all(|s| !s.is_empty()));
+            let flat: Vec<i32> = shards.iter().flatten().map(|r| r.seed).collect();
+            let want: Vec<i32> = all.iter().map(|r| r.seed).collect();
+            assert_eq!(flat, want, "sharding reordered rows at n={n} w={w}");
+            let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced shards {sizes:?}");
+        }
+        // 64 rows, 8 workers, B_r=16: only 4 shards — each worker batch full
+        assert_eq!(shard_rows(&rows(64), 8, 16).len(), 4);
+        // 3 rows on 8 workers collapse to one shard
+        assert_eq!(shard_rows(&rows(3), 8, 4).len(), 1);
     }
 }

@@ -48,6 +48,10 @@ pub struct IterStats {
     pub micro_steps: usize,
     pub rollouts_generated: usize,
     pub rollouts_trained: usize,
+    /// Decode-step slots the chunked driver physically executed.
+    pub gen_tokens_decoded: usize,
+    /// Decoded slots that produced no trainable token.
+    pub gen_tokens_wasted: usize,
     pub sim_inference: f64,
     pub sim_update: f64,
     /// What the simulated clock actually advanced during this step (less
@@ -269,6 +273,8 @@ impl Trainer {
             micro_steps: r.micro_steps,
             rollouts_generated: r.rollouts_generated,
             rollouts_trained: r.rollouts_trained,
+            gen_tokens_decoded: r.gen_tokens_decoded,
+            gen_tokens_wasted: r.gen_tokens_wasted,
             sim_inference: r.sim_inference,
             sim_update: r.sim_update,
             sim_step: r.sim_step,
@@ -296,6 +302,8 @@ impl Trainer {
             sim_step_time: r.sim_step,
             sim_overlap_saved: r.sim_overlap_saved,
             schedule: self.cfg.hwsim.schedule.name().to_string(),
+            gen_tokens_decoded: r.gen_tokens_decoded,
+            gen_tokens_wasted: r.gen_tokens_wasted,
         });
         Ok(stats)
     }
@@ -321,6 +329,7 @@ impl Trainer {
             split,
             self.cfg.run.eval_problems,
             &RewardWeights::default(),
+            self.cfg.rollout.decode_chunk,
         )?;
         self.recorder.push_eval(EvalRow {
             iter,

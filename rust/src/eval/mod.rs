@@ -1,11 +1,17 @@
 //! Test-set evaluation: greedy decode + rule-based verification.
 //!
-//! Reuses the rollout artifact with temperature 0 (argmax decode), batching
-//! distinct problems per call. Used for the accuracy curves of Figs. 3–7
-//! and the generalization study (test vs platinum vs cross-task splits).
+//! Runs on the chunked early-exit driver ([`crate::rollout::decode_rows`])
+//! with temperature 0 (argmax decode): one row per problem, `B_r` slots
+//! decoding concurrently with continuous refill, so eval — which used to
+//! pay the full `G`-step monolithic scan per batch — stops decoding each
+//! problem at its EOS. Greedy decode is RNG-free, so the chunked outputs
+//! are identical to the monolithic program's (pinned by
+//! `rust/tests/decode_golden.rs`). Used for the accuracy curves of
+//! Figs. 3–7 and the generalization study (test vs platinum vs cross-task
+//! splits).
 
 use crate::reward::{score_rollout, RewardWeights};
-use crate::rollout::mixed_prompt_batch;
+use crate::rollout::{decode_rows, RefillMode, RowSpec};
 use crate::runtime::Engine;
 use crate::tasks::{Split, TaskKind};
 use anyhow::Result;
@@ -18,9 +24,14 @@ pub struct EvalStats {
     pub mean_reward: f32,
     pub mean_len: f32,
     pub problems: usize,
+    /// Decode-step slots physically executed (early exit makes this track
+    /// actual generated tokens, not problems × G).
+    pub gen_tokens_decoded: usize,
 }
 
-/// Evaluate `count` problems of `task`/`split` with greedy decode.
+/// Evaluate `count` problems of `task`/`split` with greedy decode,
+/// `decode_chunk` tokens per decode call.
+#[allow(clippy::too_many_arguments)]
 pub fn evaluate(
     engine: &Engine,
     params: &[f32],
@@ -29,36 +40,42 @@ pub fn evaluate(
     split: Split,
     count: usize,
     weights: &RewardWeights,
+    decode_chunk: usize,
 ) -> Result<EvalStats> {
-    let br = engine.meta.config.rollout_batch;
-    let t = engine.meta.config.seq_len;
-    let p = engine.meta.config.prompt_len;
     let problems = task.batch(split, 0, count);
+    // one greedy row per problem; seeds are irrelevant at temperature 0
+    let rows: Vec<RowSpec> = (0..problems.len())
+        .map(|i| RowSpec { group_idx: i, rollout_idx: 0, seed: 0 })
+        .collect();
+    let (outs, dstats) = decode_rows(
+        engine,
+        params,
+        lora,
+        0.0,
+        decode_chunk,
+        RefillMode::Continuous,
+        &rows,
+        &problems,
+    )?;
+    let p = engine.meta.config.prompt_len;
     let mut acc = 0f64;
     let mut fmt = 0f64;
     let mut rew = 0f64;
     let mut len = 0f64;
-    let mut done = 0usize;
-    for chunk in problems.chunks(br) {
-        let prompts: Vec<&[i32]> = chunk.iter().map(|pr| pr.prompt.as_slice()).collect();
-        let (batch, pads) = mixed_prompt_batch(engine, &prompts)?;
-        let out = engine.rollout(params, lora, &batch, &pads, 0, 0.0)?;
-        for (b, problem) in chunk.iter().enumerate() {
-            let row = &out.tokens.data[b * t..(b + 1) * t];
-            let r = score_rollout(row, p, task, problem);
-            acc += r.accuracy as f64;
-            fmt += r.format as f64;
-            rew += r.total(weights) as f64;
-            len += out.gen_len[b] as f64;
-            done += 1;
-        }
+    for out in &outs {
+        let r = score_rollout(&out.tokens, p, task, &problems[out.group_idx]);
+        acc += r.accuracy as f64;
+        fmt += r.format as f64;
+        rew += r.total(weights) as f64;
+        len += out.gen_len as f64;
     }
-    let n = done.max(1) as f64;
+    let n = outs.len().max(1) as f64;
     Ok(EvalStats {
         accuracy: (acc / n) as f32,
         format_rate: (fmt / n) as f32,
         mean_reward: (rew / n) as f32,
         mean_len: (len / n) as f32,
-        problems: done,
+        problems: outs.len(),
+        gen_tokens_decoded: dstats.gen_tokens_decoded,
     })
 }

@@ -131,7 +131,8 @@ fn probe_real(artifacts: &Path, out_dir: &str) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut out = None;
     for i in 0..reps {
-        out = Some(engine.rollout(&params.params, None, &prompts, &pads, seed + i, 1.0)?);
+        let seeds: Vec<i32> = (0..br as i32).map(|b| (seed + i) as i32 * 1000 + b).collect();
+        out = Some(engine.rollout(&params.params, None, &prompts, &pads, &seeds, 1.0)?);
     }
     let roll_s = t0.elapsed().as_secs_f64() / reps as f64;
     let out = out.unwrap();

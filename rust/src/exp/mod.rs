@@ -14,7 +14,7 @@ pub mod fig7;
 pub mod sched;
 pub mod table3;
 
-use crate::config::{AlgoSection, RunConfig, RunSection, SftSection};
+use crate::config::{AlgoSection, RolloutSection, RunConfig, RunSection, SftSection};
 use crate::hwsim::HwModel;
 use anyhow::Result;
 use std::path::Path;
@@ -70,6 +70,10 @@ pub struct CfgBuilder {
     pub mem_capacity: Option<usize>,
     /// Executor schedule: "sync" | "pipelined" (hwsim.schedule).
     pub schedule: String,
+    /// Tokens per decode_chunk call (rollout.decode_chunk).
+    pub decode_chunk: usize,
+    /// Slot-refill policy: "continuous" | "batch" (rollout.refill).
+    pub refill: String,
     pub sft_steps: usize,
     pub sft_lr: f64,
     pub sft_pool: usize,
@@ -100,6 +104,8 @@ impl Default for CfgBuilder {
             workers: 1,
             mem_capacity: None,
             schedule: "sync".into(),
+            decode_chunk: RolloutSection::default().decode_chunk,
+            refill: "continuous".into(),
             sft_steps: 0,
             sft_lr: 2e-3,
             sft_pool: 512,
@@ -138,6 +144,10 @@ impl CfgBuilder {
                 mem_capacity_rollouts: self.mem_capacity.unwrap_or(HwModel::default().mem_capacity_rollouts),
                 schedule: crate::hwsim::Schedule::parse(&self.schedule)?,
                 ..Default::default()
+            },
+            rollout: RolloutSection {
+                decode_chunk: self.decode_chunk,
+                refill: crate::rollout::RefillMode::parse(&self.refill)?,
             },
             sft: if self.sft_steps > 0 {
                 Some(SftSection {

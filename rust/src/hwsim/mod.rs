@@ -193,6 +193,25 @@ impl HwModel {
         shard as f64 * avg_tokens * self.per_token_time(shard)
     }
 
+    /// Chunk-granular inference time: the chunked decode driver runs a
+    /// chunk to completion even when a row finishes mid-chunk, so **each
+    /// rollout's** generated-token count rounds up to a multiple of
+    /// `chunk` before the batch-amortized per-token price applies
+    /// (ceil-to-chunk, per rollout — a 2-token and a 30-token rollout at
+    /// chunk 16 charge 16 + 32, not 2 × 16). `gen_lens` are the
+    /// per-rollout generated lengths; the worker model matches
+    /// [`Self::inference_time`].
+    pub fn chunked_inference_time(&self, gen_lens: &[usize], chunk: usize) -> f64 {
+        let n = gen_lens.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let c = chunk.max(1) as f64;
+        let total: f64 = gen_lens.iter().map(|&t| (t as f64 / c).ceil() * c).sum();
+        let shard = n.div_ceil(self.workers.max(1));
+        shard as f64 * (total / n as f64) * self.per_token_time(shard)
+    }
+
     /// Number of gradient-accumulation micro-steps forced by the memory
     /// ceiling for an update on `m` rollouts sharded over workers.
     pub fn forced_micro_steps(&self, m: usize) -> usize {
@@ -319,6 +338,37 @@ mod tests {
             let one = HwModel { workers: 1, ..Default::default() };
             let many = HwModel { workers: w, ..Default::default() };
             assert!(many.inference_time(n, 40.0) <= one.inference_time(n, 40.0) + 1e-9);
+        });
+    }
+
+    /// Ceil-to-chunk: the chunked charge rounds each rollout up
+    /// individually, never undercuts the raw charge, and equals it when
+    /// every length divides the chunk.
+    #[test]
+    fn chunked_inference_time_rounds_each_rollout_up() {
+        let hw = HwModel::default();
+        // exact multiples: no rounding penalty
+        let lens = vec![32usize; 16];
+        assert!((hw.chunked_inference_time(&lens, 16) - hw.inference_time(16, 32.0)).abs() < 1e-12);
+        // heterogeneous lengths round per rollout, not on the mean:
+        // (2, 30) at chunk 16 -> 16 + 32 = 48 total, even though the mean
+        // (16) divides the chunk exactly
+        assert!(
+            (hw.chunked_inference_time(&[2, 30], 16) - hw.inference_time(2, 24.0)).abs() < 1e-12
+        );
+        assert_eq!(hw.chunked_inference_time(&[], 16), 0.0);
+        for_cases(200, |rng| {
+            let hw = HwModel::default();
+            let n = rng.gen_range_inclusive(1, 64) as usize;
+            let chunk = rng.gen_range_inclusive(1, 64) as usize;
+            let lens: Vec<usize> =
+                (0..n).map(|_| rng.gen_range_inclusive(1, 64) as usize).collect();
+            let avg = lens.iter().sum::<usize>() as f64 / n as f64;
+            let chunked = hw.chunked_inference_time(&lens, chunk);
+            assert!(chunked >= hw.inference_time(n, avg) - 1e-9, "ceil-to-chunk undercut");
+            // rounding waste is bounded by one chunk per rollout
+            let bound = hw.inference_time(n, avg + chunk as f64);
+            assert!(chunked <= bound + 1e-9);
         });
     }
 

@@ -22,9 +22,12 @@
 //! ```text
 //!            coordinator::exec::RolloutEngine      ◄── hwsim.workers
 //!    (REAL thread pool: one PJRT engine replica per worker;
-//!     rollout::plan_calls packs partial batches across prompts)
+//!     rollout::plan_rows builds the iteration's refill queue)
 //!                         │
-//!  tasks ──► rollout ──► reward ──► coordinator::group (PromptGroup)
+//!  tasks ──► rollout::chunked (slot-based continuous batching:
+//!            prefill ──► decode_chunk × ceil(tokens/C) ──► early exit)
+//!                         │
+//!            reward ──► coordinator::group (PromptGroup)
 //!                                        │
 //!                       coordinator::select  ◄── config `algo.rule` spec
 //!                (Selector pipelines: registry-resolved,
@@ -36,8 +39,23 @@
 //!          hwsim clock (overlap-aware) ──► metrics CSVs ──► exp figures
 //! ```
 //!
+//! **Decode path.** Generation runs on two AOT programs instead of one
+//! monolithic `G`-step scan: `prefill` seeds the KV caches from the
+//! prompts, and `decode_chunk<C>` advances every slot `C` tokens with the
+//! caches carried across calls. The [`rollout::chunked`] driver retires
+//! rows at EOS between chunks, admits queued rows into the freed slots
+//! (`[rollout] refill = "continuous"`), and stops as soon as the queue
+//! drains — decode work tracks actual generated tokens (ceil-to-chunk),
+//! not `rows × G`. RNG is **per-row and counter-based**
+//! (`fold_in(key(row_seed), step)` with `row_seed` keyed by
+//! `(run_seed, iter, prompt, rollout_idx)`), so sampled streams are
+//! bit-invariant to chunk size, slot assignment, refill order and worker
+//! sharding — packing is purely a throughput decision. The hwsim clock
+//! charges the same shape ([`hwsim::HwModel::chunked_inference_time`]),
+//! and the train CSV reports `gen_tokens_decoded` / `gen_tokens_wasted`.
+//!
 //! **Schedules.** `sync` runs the phases back-to-back and replays the
-//! original sequential trainer exactly (golden-tested). `pipelined`
+//! sequential reference exactly (golden-tested). `pipelined`
 //! prefetches generation of iteration *t+1* on the rollout pool — against
 //! the pre-update policy, one-step off-policy, sound because the GRPO
 //! loss ratios use stored behaviour log-probs — while the main thread

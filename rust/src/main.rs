@@ -5,6 +5,7 @@
 //! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test
 //! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|table3|all [--setting a] [--quick] [--probe]
 //! pods info  --profile base
+//! pods bench-check [--fresh BENCH_e2e.json] [--baseline rust/benches/BENCH_baseline.json]
 //! ```
 //!
 //! (CLI is hand-rolled over std::env::args — clap is unavailable in this
@@ -27,10 +28,12 @@ pods — Policy Optimization with Down-Sampling (paper reproduction)
 USAGE:
   pods train --config <path> [--iterations N] [--artifacts DIR]
   pods eval  --ckpt <path> [--task arith|poly|mcq] [--split train|test|platinum]
-             [--profile NAME] [--problems N]
+             [--profile NAME] [--problems N] [--chunk C]
   pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|table3|all>
              [--setting a-f] [--quick] [--out-dir DIR] [--probe]
   pods info  [--profile NAME]
+  pods bench-check [--fresh PATH] [--baseline PATH] [--max-regression FRAC]
+             [--min-speedup RATIO]
 ";
 
 /// Tiny flag parser: positionals + `--key value` + boolean `--key`.
@@ -124,6 +127,15 @@ fn main() -> Result<()> {
                 Some(b) => (b, Some(&store.params)),
                 None => (&store.params, None),
             };
+            let chunk = match args.get("chunk") {
+                Some(c) => c.parse()?,
+                None => engine.meta.default_decode_chunk().ok_or_else(|| {
+                    anyhow!(
+                        "profile {} has no decode_chunk programs; re-run `make artifacts`",
+                        engine.meta.profile
+                    )
+                })?,
+            };
             let stats = pods::eval::evaluate(
                 &engine,
                 params,
@@ -132,6 +144,7 @@ fn main() -> Result<()> {
                 split,
                 problems,
                 &RewardWeights::default(),
+                chunk,
             )?;
             println!(
                 "task {} split {:?}: accuracy {:.3} format {:.3} reward {:.3} len {:.1} over {} problems",
@@ -211,6 +224,41 @@ fn main() -> Result<()> {
                     sig.inputs.len(),
                     sig.outputs.len()
                 );
+            }
+        }
+        "bench-check" => {
+            let fresh = args.get_or("fresh", "BENCH_e2e.json");
+            let baseline = args.get_or("baseline", "rust/benches/BENCH_baseline.json");
+            let max_reg: f64 = args.get_or("max-regression", "0.15").parse()?;
+            let report = pods::util::bench::check_regression(
+                std::path::Path::new(&fresh),
+                std::path::Path::new(&baseline),
+                max_reg,
+            )?;
+            for line in &report.lines {
+                println!("{line}");
+            }
+            if !report.regressions.is_empty() {
+                for r in &report.regressions {
+                    eprintln!("REGRESSION: {r}");
+                }
+                bail!(
+                    "{} bench(es) regressed more than {:.0}% vs {baseline}",
+                    report.regressions.len(),
+                    max_reg * 100.0
+                );
+            }
+            // machine-independent guard: the chunked arm must keep beating
+            // the full-G (no early exit) arm within this same run
+            let min_speedup: f64 = args.get_or("min-speedup", "1.1").parse()?;
+            match pods::util::bench::check_speedup(
+                std::path::Path::new(&fresh),
+                "e2e step pods (n=64 -> m=16)",
+                "e2e step pods full-G batch (no early exit)",
+                min_speedup,
+            )? {
+                Some(line) => println!("{line}"),
+                None => println!("speedup guard: comparison arms absent from {fresh} — skipped"),
             }
         }
         other => {

@@ -57,6 +57,13 @@ pub struct IterRow {
     /// Executor schedule the run used (`sync` | `pipelined`). New columns
     /// append at the end: figure readers resolve columns by header name.
     pub schedule: String,
+    /// Decode-step slots the chunked driver physically executed this
+    /// iteration (`B_r × C` per chunk call, post-EOS + filler included).
+    pub gen_tokens_decoded: usize,
+    /// `gen_tokens_decoded` minus the useful generated tokens
+    /// (`total_gen_tokens`) — decode spend that produced nothing
+    /// trainable. The monolithic decoder wasted `rollouts × G - useful`.
+    pub gen_tokens_wasted: usize,
 }
 
 impl CsvRow for IterRow {
@@ -64,12 +71,12 @@ impl CsvRow for IterRow {
         "iter,sim_time,real_time,sim_inference_time,sim_update_time,train_reward,train_acc,\
          completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
          loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
-         sim_step_time,sim_overlap_saved,schedule"
+         sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted"
     }
 
     fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.iter,
             self.sim_time,
             self.real_time,
@@ -90,7 +97,9 @@ impl CsvRow for IterRow {
             self.rollouts_trained,
             self.sim_step_time,
             self.sim_overlap_saved,
-            self.schedule
+            self.schedule,
+            self.gen_tokens_decoded,
+            self.gen_tokens_wasted
         )
     }
 }
@@ -271,15 +280,21 @@ mod tests {
             "iter,sim_time,real_time,sim_inference_time,sim_update_time,train_reward,train_acc,\
              completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
              loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
-             sim_step_time,sim_overlap_saved,schedule"
+             sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted"
                 .replace(char::is_whitespace, "")
         );
-        // the overlap + schedule columns append at the end, so CSVs from
-        // older runs stay parseable by position-tolerant readers
+        // new columns append at the end, so CSVs from older runs stay
+        // parseable by position-tolerant readers
         let cols: Vec<&str> = header.split(',').collect();
         assert_eq!(
-            cols[cols.len() - 3..].to_vec(),
-            vec!["sim_step_time", "sim_overlap_saved", "schedule"]
+            cols[cols.len() - 5..].to_vec(),
+            vec![
+                "sim_step_time",
+                "sim_overlap_saved",
+                "schedule",
+                "gen_tokens_decoded",
+                "gen_tokens_wasted"
+            ]
         );
     }
 
@@ -309,6 +324,8 @@ mod tests {
             sim_step_time: 9.5,
             sim_overlap_saved: 3.0,
             schedule: "pipelined".into(),
+            gen_tokens_decoded: 1536,
+            gen_tokens_wasted: 512,
         };
         let header = IterRow::csv_header().replace(char::is_whitespace, "");
         let line = row.csv_row();
@@ -323,6 +340,8 @@ mod tests {
         assert_eq!(get("sim_overlap_saved"), "3");
         assert_eq!(get("schedule"), "pipelined");
         assert_eq!(get("rollouts_trained"), "16");
+        assert_eq!(get("gen_tokens_decoded"), "1536");
+        assert_eq!(get("gen_tokens_wasted"), "512");
         // the overlap identity the exec layer maintains:
         // step + saved == inference + update
         let step: f64 = get("sim_step_time").parse().unwrap();

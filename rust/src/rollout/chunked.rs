@@ -1,0 +1,341 @@
+//! Slot-based continuous-batching decode driver.
+//!
+//! The monolithic `rollout` program decoded a fixed `G`-step scan for
+//! every row of every call — a rollout that finished in 10 tokens still
+//! paid `G` attention passes, and a partially-filled batch paid them for
+//! filler rows too. This driver rebuilds generation on the split
+//! `prefill` / `decode_chunk` programs:
+//!
+//! * `B_r` **slots** decode in lock-step, `C` tokens per call, with the
+//!   KV caches carried across calls as XLA literals;
+//! * between chunks, rows that emitted EOS (or hit the budget `G`)
+//!   **retire** and queued rows are **admitted** into the freed slots
+//!   (prefill on admission, caches merged on device by `admit_merge`);
+//! * the loop **exits early** the moment every slot is drained — decode
+//!   work is proportional to actual generated tokens rounded up to the
+//!   chunk size, not `rows × G`.
+//!
+//! Per-row RNG makes this sound: each row's token stream is a
+//! counter-based function of its own seed, so chunk size, slot
+//! assignment and refill order cannot change what any row samples
+//! (pinned by `python/tests/test_chunked.py` and the Rust goldens).
+
+use crate::runtime::{DecodeState, Engine, TensorI};
+use crate::tasks::{tokenizer as tok, Problem};
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+
+/// When freed slots are refilled from the row queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RefillMode {
+    /// Admit queued rows into freed slots between chunks (default) — the
+    /// batch stays as full as the queue allows.
+    #[default]
+    Continuous,
+    /// Drain the whole batch before admitting the next `B_r` rows — the
+    /// legacy call-shaped behaviour, kept as a comparison arm.
+    Batch,
+}
+
+impl RefillMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "continuous" => Ok(Self::Continuous),
+            "batch" => Ok(Self::Batch),
+            other => Err(anyhow!("unknown rollout.refill {other:?} (continuous|batch)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Continuous => "continuous",
+            Self::Batch => "batch",
+        }
+    }
+}
+
+/// One queued generation row: which prompt group it belongs to, its index
+/// within the group, and its private RNG seed.
+#[derive(Debug, Clone, Copy)]
+pub struct RowSpec {
+    pub group_idx: usize,
+    pub rollout_idx: usize,
+    pub seed: i32,
+}
+
+/// One finished row, in the same layout the monolithic program produced.
+#[derive(Debug, Clone)]
+pub struct RowOut {
+    pub group_idx: usize,
+    pub rollout_idx: usize,
+    pub pad_len: i32,
+    /// i32[T]: prompt + generation, PAD after EOS.
+    pub tokens: Vec<i32>,
+    /// f32[G]: behaviour log-probs (0 after EOS).
+    pub logprobs: Vec<f32>,
+    /// f32[G]: 1.0 through EOS, 0.0 after.
+    pub gen_mask: Vec<f32>,
+    /// Generated tokens incl. EOS.
+    pub gen_len: i32,
+}
+
+/// Engine-call accounting for one driver run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecodeStats {
+    pub prefill_calls: usize,
+    pub chunk_calls: usize,
+    /// On-device slot-admission merges (one per refill event after the
+    /// initial fill).
+    pub merge_calls: usize,
+    /// Decode-step slots actually executed: `B_r × C` per chunk call —
+    /// the physical work, including post-EOS and filler slots.
+    pub gen_tokens_decoded: usize,
+}
+
+/// Per-slot bookkeeping for a row mid-decode.
+struct Slot {
+    row: usize, // index into `rows`
+    tokens: Vec<i32>,
+    logprobs: Vec<f32>,
+    gen_mask: Vec<f32>,
+    prompt_row: Vec<i32>,
+}
+
+/// Left-pad one prompt to `[P]`.
+fn pad_prompt(prompt: &[i32], p: usize) -> Result<(Vec<i32>, i32)> {
+    if prompt.len() > p {
+        bail!("prompt of {} tokens exceeds prompt_len {p}", prompt.len());
+    }
+    let pad = p - prompt.len();
+    let mut row = vec![tok::PAD; pad];
+    row.extend_from_slice(prompt);
+    Ok((row, pad as i32))
+}
+
+struct Driver<'a> {
+    engine: &'a Engine,
+    params: &'a [f32],
+    lora: Option<&'a [f32]>,
+    rows: &'a [RowSpec],
+    problems: &'a [Problem],
+    b: usize,
+    p: usize,
+    g: usize,
+    queue: VecDeque<usize>,
+    slots: Vec<Option<Slot>>,
+    // program-visible per-slot state (host mirrors)
+    seeds: Vec<i32>,
+    step: Vec<i32>,
+    done: Vec<i32>,
+    pads: Vec<i32>,
+    state: Option<DecodeState>,
+    outs: Vec<Option<RowOut>>,
+    stats: DecodeStats,
+}
+
+impl<'a> Driver<'a> {
+    /// Admit queued rows into `free` slots: one prefill call carrying the
+    /// new prompts in their target slots (other slots repeat the first new
+    /// prompt — filler that stays masked done), then merge the admitted
+    /// slots' cache blocks and logits rows into the carried state.
+    fn admit(&mut self, free: &[usize]) -> Result<()> {
+        let mut admitted: Vec<(usize, usize)> = Vec::new(); // (slot, row)
+        for &s in free {
+            match self.queue.pop_front() {
+                Some(r) => admitted.push((s, r)),
+                None => break,
+            }
+        }
+        if admitted.is_empty() {
+            return Ok(());
+        }
+        let (b, p) = (self.b, self.p);
+        let (filler, filler_pad) =
+            pad_prompt(&self.problems[self.rows[admitted[0].1].group_idx].prompt, p)?;
+        let mut batch = vec![tok::PAD; b * p];
+        let mut batch_pads = vec![filler_pad; b];
+        for s in 0..b {
+            batch[s * p..(s + 1) * p].copy_from_slice(&filler);
+        }
+        let mut slot_rows: Vec<(Vec<i32>, i32)> = Vec::with_capacity(admitted.len());
+        for &(s, r) in &admitted {
+            let (row, pad) = pad_prompt(&self.problems[self.rows[r].group_idx].prompt, p)?;
+            batch[s * p..(s + 1) * p].copy_from_slice(&row);
+            batch_pads[s] = pad;
+            slot_rows.push((row, pad));
+        }
+        let prompts = TensorI::new(batch, &[b, p])?;
+        let fresh = self.engine.prefill(self.params, self.lora, &prompts, &batch_pads)?;
+        self.stats.prefill_calls += 1;
+        match self.state.take() {
+            None => self.state = Some(fresh),
+            Some(live) => {
+                // on-device merge: admitted slots take the fresh prefill
+                // state, the rest keep their carried caches — no host
+                // cache round-trip
+                let mut mask = vec![0i32; b];
+                for &(s, _) in &admitted {
+                    mask[s] = 1;
+                }
+                self.state = Some(self.engine.admit_merge(live, fresh, &mask)?);
+                self.stats.merge_calls += 1;
+            }
+        }
+        for ((s, r), (prompt_row, pad)) in admitted.into_iter().zip(slot_rows) {
+            self.seeds[s] = self.rows[r].seed;
+            self.step[s] = 0;
+            self.done[s] = 0;
+            self.pads[s] = pad;
+            self.slots[s] = Some(Slot {
+                row: r,
+                tokens: vec![tok::PAD; self.g],
+                logprobs: vec![0.0; self.g],
+                gen_mask: vec![0.0; self.g],
+                prompt_row,
+            });
+        }
+        Ok(())
+    }
+
+    /// Retire finished slots into `outs`; returns how many were freed.
+    fn retire(&mut self) -> usize {
+        let mut freed = 0;
+        for s in 0..self.b {
+            let finished = self.slots[s].is_some()
+                && (self.done[s] != 0 || self.step[s] >= self.g as i32);
+            if finished {
+                let slot = self.slots[s].take().expect("checked");
+                let spec = self.rows[slot.row];
+                let gen_len = slot.gen_mask.iter().sum::<f32>() as i32;
+                let mut tokens = slot.prompt_row;
+                tokens.extend_from_slice(&slot.tokens);
+                self.outs[slot.row] = Some(RowOut {
+                    group_idx: spec.group_idx,
+                    rollout_idx: spec.rollout_idx,
+                    pad_len: self.pads[s],
+                    tokens,
+                    logprobs: slot.logprobs,
+                    gen_mask: slot.gen_mask,
+                    gen_len,
+                });
+                self.done[s] = 1;
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    fn run(&mut self, chunk: usize, refill: RefillMode, temperature: f32) -> Result<()> {
+        let all: Vec<usize> = (0..self.b).collect();
+        self.admit(&all)?;
+        while self.slots.iter().any(|s| s.is_some()) {
+            let st = self.state.take().expect("live slots imply a carried state");
+            let prev_step = self.step.clone();
+            let (st, out) = self.engine.decode_chunk(
+                chunk,
+                self.params,
+                self.lora,
+                st,
+                &self.seeds,
+                &self.step,
+                &self.done,
+                &self.pads,
+                temperature,
+            )?;
+            self.state = Some(st);
+            self.stats.chunk_calls += 1;
+            self.stats.gen_tokens_decoded += self.b * chunk;
+            self.step.copy_from_slice(&out.step);
+            self.done.copy_from_slice(&out.done);
+
+            // harvest the masked outputs into each live row's stream
+            for (s, slot) in self.slots.iter_mut().enumerate() {
+                let Some(slot) = slot.as_mut() else { continue };
+                for j in 0..chunk {
+                    let gi = prev_step[s] as usize + j;
+                    if gi >= self.g {
+                        break;
+                    }
+                    if out.mask[s * chunk + j] > 0.0 {
+                        slot.tokens[gi] = out.tokens[s * chunk + j];
+                        slot.logprobs[gi] = out.logprobs[s * chunk + j];
+                        slot.gen_mask[gi] = out.mask[s * chunk + j];
+                    }
+                }
+            }
+
+            let freed = self.retire();
+            // refill freed slots (continuous), or wait for a full drain
+            let drained = self.slots.iter().all(|s| s.is_none());
+            if freed > 0
+                && !self.queue.is_empty()
+                && (refill == RefillMode::Continuous || drained)
+            {
+                let free: Vec<usize> =
+                    (0..self.b).filter(|&s| self.slots[s].is_none()).collect();
+                self.admit(&free)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Decode every row of `rows` (prompts looked up in `problems` via
+/// `group_idx`) with `B_r`-slot continuous batching, `chunk` tokens per
+/// call. Returns the finished rows **in input order** plus call stats.
+pub fn decode_rows(
+    engine: &Engine,
+    params: &[f32],
+    lora: Option<&[f32]>,
+    temperature: f32,
+    chunk: usize,
+    refill: RefillMode,
+    rows: &[RowSpec],
+    problems: &[Problem],
+) -> Result<(Vec<RowOut>, DecodeStats)> {
+    let meta = &engine.meta;
+    if meta.decode_chunks.is_empty() {
+        bail!(
+            "profile {} has no decode_chunk programs — artifacts predate the \
+             chunked decode path; re-run `make artifacts`",
+            meta.profile
+        );
+    }
+    if !meta.decode_chunks.contains(&chunk) {
+        bail!(
+            "rollout.decode_chunk = {chunk} is not lowered for profile {} \
+             (available: {:?})",
+            meta.profile,
+            meta.decode_chunks
+        );
+    }
+    if rows.is_empty() {
+        return Ok((Vec::new(), DecodeStats::default()));
+    }
+    let b = meta.config.rollout_batch;
+    let mut driver = Driver {
+        engine,
+        params,
+        lora,
+        rows,
+        problems,
+        b,
+        p: meta.config.prompt_len,
+        g: meta.gen_len,
+        queue: (0..rows.len()).collect(),
+        slots: (0..b).map(|_| None).collect(),
+        seeds: vec![0; b],
+        step: vec![0; b],
+        done: vec![1; b], // empty slots stay done
+        pads: vec![meta.config.prompt_len as i32; b],
+        state: None,
+        outs: (0..rows.len()).map(|_| None).collect(),
+        stats: DecodeStats::default(),
+    };
+    driver.run(chunk, refill, temperature)?;
+    let mut finished = Vec::with_capacity(rows.len());
+    for (i, o) in driver.outs.into_iter().enumerate() {
+        finished.push(o.ok_or_else(|| anyhow!("row {i} never retired (driver bug)"))?);
+    }
+    Ok((finished, driver.stats))
+}

@@ -161,6 +161,9 @@ pub struct Meta {
     pub profile: String,
     pub config: ProfileConfig,
     pub gen_len: usize,
+    /// Chunk sizes the AOT pipeline lowered `decode_chunk<C>` programs for
+    /// (empty for artifacts predating the chunked decode path).
+    pub decode_chunks: Vec<usize>,
     pub param_count: usize,
     pub lora_count: usize,
     pub trainable_count: usize,
@@ -185,6 +188,10 @@ impl Meta {
             profile: j.get("profile")?.str()?.to_string(),
             config: ProfileConfig::from_json(j.get("config")?)?,
             gen_len: j.get("gen_len")?.usize()?,
+            decode_chunks: match j.opt("decode_chunks") {
+                Some(arr) => arr.arr()?.iter().map(|c| c.usize()).collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
             param_count: j.get("param_count")?.usize()?,
             lora_count: j.get("lora_count")?.usize()?,
             trainable_count: j.get("trainable_count")?.usize()?,
@@ -207,6 +214,16 @@ impl Meta {
     /// Whether this profile trains LoRA adapters over a frozen base.
     pub fn is_lora(&self) -> bool {
         self.config.lora_rank > 0
+    }
+
+    /// Preferred decode chunk when the caller has no run config (the eval
+    /// CLI): 16 when lowered, else the largest available size.
+    pub fn default_decode_chunk(&self) -> Option<usize> {
+        if self.decode_chunks.contains(&16) {
+            Some(16)
+        } else {
+            self.decode_chunks.iter().copied().max()
+        }
     }
 }
 

@@ -55,6 +55,37 @@ pub struct RolloutOut {
     pub gen_len: Vec<i32>,
 }
 
+/// Carried decode state between `decode_chunk` calls: the KV caches and
+/// next-token logits stay as XLA literals end to end — slot-admission
+/// merges run on device too ([`Engine::admit_merge`]), so the host never
+/// materializes a cache.
+pub struct DecodeState {
+    /// f32[L, B, H, T, dh]
+    pub cache_k: xla::Literal,
+    /// f32[L, B, H, T, dh]
+    pub cache_v: xla::Literal,
+    /// f32[B, V] — next-token logits for every slot.
+    pub logits: xla::Literal,
+}
+
+/// Host-side outputs of one `decode_chunk` call (the carried buffers stay
+/// in the returned [`DecodeState`]).
+#[derive(Debug, Clone)]
+pub struct ChunkOut {
+    /// i32[B, C] sampled tokens (PAD on done rows).
+    pub tokens: Vec<i32>,
+    /// f32[B, C] behaviour log-probs (0 on done rows).
+    pub logprobs: Vec<f32>,
+    /// f32[B, C] 1.0 through EOS, 0.0 after.
+    pub mask: Vec<f32>,
+    /// i32[B] decode steps executed per row — `>=` the row's generated
+    /// tokens (it keeps advancing past EOS within a chunk); monotone
+    /// across calls. Use the mask to count generated tokens.
+    pub step: Vec<i32>,
+    /// i32[B] per-row done flags.
+    pub done: Vec<i32>,
+}
+
 /// Outputs of the `grad` program (one policy-update micro-batch).
 #[derive(Debug, Clone)]
 pub struct GradOut {
@@ -198,18 +229,9 @@ impl Engine {
         Ok(loss)
     }
 
-    /// `rollout`: the inference phase. `base` is the full-parameter vector;
-    /// `lora` must be Some(trainable) in LoRA profiles and None otherwise.
-    /// `temperature <= 0` decodes greedily (the eval path reuses this).
-    pub fn rollout(
-        &self,
-        base: &[f32],
-        lora: Option<&[f32]>,
-        prompts: &TensorI,
-        pad_len: &[i32],
-        seed: u32,
-        temperature: f32,
-    ) -> Result<RolloutOut> {
+    /// Push the (base, [lora]) parameter literals shared by every
+    /// inference-phase program.
+    fn param_inputs(&self, base: &[f32], lora: Option<&[f32]>) -> Result<Vec<xla::Literal>> {
         let mut inputs = vec![lit_f32(base, &[base.len()])?];
         match (self.meta.is_lora(), lora) {
             (true, Some(l)) => inputs.push(lit_f32(l, &[l.len()])?),
@@ -217,9 +239,30 @@ impl Engine {
             (true, None) => return Err(anyhow!("LoRA profile requires a lora vector")),
             (false, Some(_)) => return Err(anyhow!("non-LoRA profile got a lora vector")),
         }
+        Ok(inputs)
+    }
+
+    /// `rollout`: the monolithic reference decode (prefill + one chunk of
+    /// G inside a single program). `base` is the full-parameter vector;
+    /// `lora` must be Some(trainable) in LoRA profiles and None otherwise.
+    /// `seeds` are per-row RNG seeds (counter-based streams — a row's
+    /// tokens depend only on its own seed). `temperature <= 0` decodes
+    /// greedily. The production path is [`Self::prefill`] +
+    /// [`Self::decode_chunk`]; this program remains the equivalence oracle
+    /// and the no-early-exit baseline.
+    pub fn rollout(
+        &self,
+        base: &[f32],
+        lora: Option<&[f32]>,
+        prompts: &TensorI,
+        pad_len: &[i32],
+        seeds: &[i32],
+        temperature: f32,
+    ) -> Result<RolloutOut> {
+        let mut inputs = self.param_inputs(base, lora)?;
         inputs.push(lit_i32(&prompts.data, &prompts.dims)?);
         inputs.push(lit_i32(pad_len, &[pad_len.len()])?);
-        inputs.push(lit_u32_scalar(seed)?);
+        inputs.push(lit_i32(seeds, &[seeds.len()])?);
         inputs.push(lit_f32_scalar(temperature));
         let outs = self.call("rollout", &inputs)?;
         let b = self.meta.config.rollout_batch;
@@ -231,6 +274,111 @@ impl Engine {
             gen_mask: TensorF::new(to_vec_f32(&outs[2])?, &[b, g])?,
             gen_len: to_vec_i32(&outs[3])?,
         })
+    }
+
+    /// `prefill`: run the prompt pass and return the carried decode state
+    /// (seeded KV caches + last prompt logits) for [`Self::decode_chunk`].
+    pub fn prefill(
+        &self,
+        base: &[f32],
+        lora: Option<&[f32]>,
+        prompts: &TensorI,
+        pad_len: &[i32],
+    ) -> Result<DecodeState> {
+        let mut inputs = self.param_inputs(base, lora)?;
+        inputs.push(lit_i32(&prompts.data, &prompts.dims)?);
+        inputs.push(lit_i32(pad_len, &[pad_len.len()])?);
+        let mut outs = self.call("prefill", &inputs)?;
+        if outs.len() != 3 {
+            return Err(anyhow!("prefill returned {} outputs, expected 3", outs.len()));
+        }
+        let logits = outs.pop().expect("len checked");
+        let cache_v = outs.pop().expect("len checked");
+        let cache_k = outs.pop().expect("len checked");
+        Ok(DecodeState { cache_k, cache_v, logits })
+    }
+
+    /// `admit_merge`: slot-admission merge on device — slots with
+    /// `admit[b] != 0` take `fresh`'s prefill state, the rest keep
+    /// `live`'s carried decode state. Consumes both states.
+    pub fn admit_merge(
+        &self,
+        live: DecodeState,
+        fresh: DecodeState,
+        admit: &[i32],
+    ) -> Result<DecodeState> {
+        let inputs = vec![
+            live.cache_k,
+            live.cache_v,
+            live.logits,
+            fresh.cache_k,
+            fresh.cache_v,
+            fresh.logits,
+            lit_i32(admit, &[admit.len()])?,
+        ];
+        let mut outs = self.call("admit_merge", &inputs)?;
+        if outs.len() != 3 {
+            return Err(anyhow!("admit_merge returned {} outputs, expected 3", outs.len()));
+        }
+        let logits = outs.pop().expect("len checked");
+        let cache_v = outs.pop().expect("len checked");
+        let cache_k = outs.pop().expect("len checked");
+        Ok(DecodeState { cache_k, cache_v, logits })
+    }
+
+    /// `decode_chunk<chunk>`: decode `chunk` tokens for every slot,
+    /// carrying the KV caches/logits across calls. Consumes `state` (the
+    /// literals move into the call) and returns the updated state plus the
+    /// host-side chunk outputs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_chunk(
+        &self,
+        chunk: usize,
+        base: &[f32],
+        lora: Option<&[f32]>,
+        state: DecodeState,
+        seeds: &[i32],
+        step: &[i32],
+        done: &[i32],
+        pad_len: &[i32],
+        temperature: f32,
+    ) -> Result<(DecodeState, ChunkOut)> {
+        let name = format!("decode_chunk{chunk}");
+        if !self.meta.programs.contains_key(&name) {
+            return Err(anyhow!(
+                "profile {} has no decode_chunk program for chunk size {chunk} \
+                 (available: {:?}; re-run `make artifacts` if the list is empty)",
+                self.meta.profile,
+                self.meta.decode_chunks
+            ));
+        }
+        let mut inputs = self.param_inputs(base, lora)?;
+        inputs.push(state.cache_k);
+        inputs.push(state.cache_v);
+        inputs.push(state.logits);
+        inputs.push(lit_i32(seeds, &[seeds.len()])?);
+        inputs.push(lit_i32(step, &[step.len()])?);
+        inputs.push(lit_i32(done, &[done.len()])?);
+        inputs.push(lit_i32(pad_len, &[pad_len.len()])?);
+        inputs.push(lit_f32_scalar(temperature));
+        let mut outs = self.call(&name, &inputs)?;
+        if outs.len() != 8 {
+            return Err(anyhow!("{name} returned {} outputs, expected 8", outs.len()));
+        }
+        // outputs: tokens, logprobs, mask, cache_k, cache_v, logits, step, done
+        let done_l = outs.pop().expect("len checked");
+        let step_l = outs.pop().expect("len checked");
+        let logits = outs.pop().expect("len checked");
+        let cache_v = outs.pop().expect("len checked");
+        let cache_k = outs.pop().expect("len checked");
+        let out = ChunkOut {
+            tokens: to_vec_i32(&outs[0])?,
+            logprobs: to_vec_f32(&outs[1])?,
+            mask: to_vec_f32(&outs[2])?,
+            step: to_vec_i32(&step_l)?,
+            done: to_vec_i32(&done_l)?,
+        };
+        Ok((DecodeState { cache_k, cache_v, logits }, out))
     }
 
     /// `grad`: one GRPO-PODS policy-update micro-batch.

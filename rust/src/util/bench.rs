@@ -141,6 +141,109 @@ impl BenchReport {
     }
 }
 
+/// Outcome of a bench-regression check: human-readable comparison lines
+/// plus the subset that regressed beyond the threshold.
+#[derive(Debug, Default)]
+pub struct RegressionReport {
+    pub lines: Vec<String>,
+    pub regressions: Vec<String>,
+}
+
+fn load_throughputs(path: &Path) -> anyhow::Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading bench report {}: {e}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing bench report {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for b in j.get("benches")?.arr()? {
+        let name = b.get("name")?.str()?.to_string();
+        if let Some(tp) = b.opt("rollouts_per_sec") {
+            out.push((name, tp.f64()?));
+        }
+    }
+    Ok(out)
+}
+
+/// Compare the rollout-throughput entries of a fresh `BENCH_e2e.json`
+/// against a committed baseline. A bench **regresses** when its fresh
+/// throughput drops more than `max_drop` (fraction, e.g. `0.15`) below
+/// the baseline. A missing baseline file is not an error — the check
+/// reports it and passes, so CI stays green until a baseline is recorded
+/// (`cargo bench --bench e2e_step && cp BENCH_e2e.json
+/// rust/benches/BENCH_baseline.json`).
+pub fn check_regression(
+    fresh: &Path,
+    baseline: &Path,
+    max_drop: f64,
+) -> anyhow::Result<RegressionReport> {
+    let mut report = RegressionReport::default();
+    if !baseline.exists() {
+        report.lines.push(format!(
+            "no baseline at {} — nothing to compare (record one with \
+             `cargo bench --bench e2e_step` and commit BENCH_e2e.json there)",
+            baseline.display()
+        ));
+        return Ok(report);
+    }
+    let fresh_tp = load_throughputs(fresh)?;
+    let base_tp = load_throughputs(baseline)?;
+    if base_tp.is_empty() {
+        report.lines.push(format!(
+            "baseline {} carries no throughput entries — nothing to compare",
+            baseline.display()
+        ));
+        return Ok(report);
+    }
+    for (name, base) in &base_tp {
+        match fresh_tp.iter().find(|(n, _)| n == name) {
+            None => report
+                .lines
+                .push(format!("warn: bench {name:?} absent from fresh run (renamed/removed?)")),
+            Some((_, tp)) => {
+                let delta = (tp - base) / base.max(1e-12);
+                let line = format!(
+                    "{name}: baseline {base:.2} -> fresh {tp:.2} rollouts/s ({:+.1}%)",
+                    delta * 100.0
+                );
+                if *tp < base * (1.0 - max_drop) {
+                    report.regressions.push(line.clone());
+                }
+                report.lines.push(line);
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Same-run early-exit speedup guard: compares the chunked arm's rollout
+/// throughput against the full-G (no early exit) arm **within one bench
+/// run**. Absolute rollouts/sec varies across hosts and CI tenancy; the
+/// ratio of two arms measured back-to-back on the same host does not, so
+/// this assertion is machine-independent. Returns `Ok(None)` (with no
+/// failure) when either arm is absent from the report, `Ok(Some(line))`
+/// on pass, `Err` when the ratio falls below `min_ratio`.
+pub fn check_speedup(
+    fresh: &Path,
+    fast: &str,
+    slow: &str,
+    min_ratio: f64,
+) -> anyhow::Result<Option<String>> {
+    let tps = load_throughputs(fresh)?;
+    let find = |name: &str| tps.iter().find(|(n, _)| n == name).map(|(_, t)| *t);
+    let (Some(f), Some(s)) = (find(fast), find(slow)) else {
+        return Ok(None);
+    };
+    let ratio = f / s.max(1e-12);
+    let line = format!(
+        "early-exit speedup: {fast:?} {f:.2} vs {slow:?} {s:.2} rollouts/s = {ratio:.2}x \
+         (floor {min_ratio:.2}x)"
+    );
+    if ratio < min_ratio {
+        anyhow::bail!("{line} — chunked early exit lost its edge");
+    }
+    Ok(Some(line))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,5 +282,64 @@ mod tests {
         assert!(benches[0].opt("rollouts_per_sec").is_none());
         assert_eq!(benches[1].get("rollouts_per_sec").unwrap().f64().unwrap(), 16.0);
         assert_eq!(benches[1].get("iters").unwrap().usize().unwrap(), 4);
+    }
+
+    fn write_report(path: &Path, entries: &[(&str, f64)]) {
+        let mut rep = BenchReport::new();
+        for (name, tp) in entries {
+            rep.push_with_throughput(
+                BenchResult {
+                    name: (*name).into(),
+                    iters: 1,
+                    mean_ns: 1e9,
+                    median_ns: 1e9,
+                    p95_ns: 1e9,
+                    min_ns: 1e9,
+                },
+                *tp,
+            );
+        }
+        rep.write_json(path).unwrap();
+    }
+
+    /// The CI guard: >15% throughput drop fails, anything above passes,
+    /// and a missing baseline is a no-op (record mode).
+    #[test]
+    fn regression_check_flags_only_real_drops() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let base = dir.path().join("base.json");
+        let fresh = dir.path().join("fresh.json");
+        write_report(&base, &[("e2e step a", 100.0), ("e2e step b", 50.0), ("gone", 10.0)]);
+        write_report(&fresh, &[("e2e step a", 86.0), ("e2e step b", 40.0)]);
+        let rep = check_regression(&fresh, &base, 0.15).unwrap();
+        // a: -14% passes; b: -20% regresses; "gone" warns but doesn't fail
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("e2e step b"));
+        assert!(rep.lines.iter().any(|l| l.contains("gone") && l.contains("warn")));
+
+        // improvements never regress
+        write_report(&fresh, &[("e2e step a", 200.0), ("e2e step b", 49.0)]);
+        let rep = check_regression(&fresh, &base, 0.15).unwrap();
+        assert!(rep.regressions.is_empty());
+
+        // missing baseline: pass with a note
+        let rep = check_regression(&fresh, &dir.path().join("absent.json"), 0.15).unwrap();
+        assert!(rep.regressions.is_empty());
+        assert!(rep.lines[0].contains("no baseline"));
+    }
+
+    /// The same-run speedup guard: ratio below the floor fails, above
+    /// passes, and missing arms skip (None) rather than fail.
+    #[test]
+    fn speedup_check_compares_arms_within_one_run() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let fresh = dir.path().join("fresh.json");
+        write_report(&fresh, &[("chunked", 30.0), ("full-G", 20.0)]);
+        let line = check_speedup(&fresh, "chunked", "full-G", 1.2).unwrap();
+        assert!(line.unwrap().contains("1.50x"));
+        assert!(check_speedup(&fresh, "chunked", "full-G", 1.6).is_err());
+        // either arm absent: skip, don't fail
+        assert!(check_speedup(&fresh, "chunked", "nope", 1.2).unwrap().is_none());
+        assert!(check_speedup(&fresh, "nope", "full-G", 1.2).unwrap().is_none());
     }
 }

@@ -16,7 +16,7 @@ use pods::coordinator::group::build_update_batch;
 use pods::coordinator::scheduler::Trainer;
 use pods::exp::CfgBuilder;
 use pods::reward::RewardWeights;
-use pods::rollout::{generate_group, GenRequest};
+use pods::rollout::{generate_group, GenRequest, RefillMode};
 use pods::runtime::ParamStore;
 use pods::tasks::{Split, TaskKind};
 use std::sync::Arc;
@@ -80,14 +80,20 @@ fn sync_executor_reproduces_sequential_reference() {
             run_seed: c.run.seed,
             iter: 0,
             weights: RewardWeights::default(),
+            decode_chunk: c.rollout.decode_chunk,
+            refill: c.rollout.refill,
         };
         let (group, stats) = generate_group(&tr.engine, &req, TaskKind::Arith, problem).unwrap();
         total_gen_tokens += stats.total_gen_tokens;
         groups.push(group);
     }
     let rollouts_generated: usize = groups.iter().map(|g| g.rollouts.len()).sum();
-    let avg_tokens = total_gen_tokens as f64 / rollouts_generated.max(1) as f64;
-    let want_sim_inference = c.hwsim.inference_time(rollouts_generated, avg_tokens);
+    let gen_lens: Vec<usize> = groups
+        .iter()
+        .flat_map(|g| g.rollouts.iter().map(|r| r.gen_len as usize))
+        .collect();
+    assert_eq!(total_gen_tokens, gen_lens.iter().sum::<usize>(), "stats vs records drifted");
+    let want_sim_inference = c.hwsim.chunked_inference_time(&gen_lens, c.rollout.decode_chunk);
     let (selected, _) = build_update_batch(
         &groups,
         &c.selector(),
@@ -148,12 +154,14 @@ fn pool_generation_is_deterministic_across_worker_counts() {
             ref_params: None,
             ref_lora: None,
             problems: Arc::clone(&problems),
-            n: 12, // not a multiple of B_r: exercises cross-group packing
+            n: 12, // not a multiple of B_r: slots refill across groups
             temperature: 1.0,
             run_seed: 11,
             iter: 2,
             task: TaskKind::Arith,
             weights: RewardWeights::default(),
+            decode_chunk: 16,
+            refill: RefillMode::Continuous,
         };
         pool.generate(&engine, batch).unwrap()
     };

@@ -6,7 +6,7 @@
 //! notice when artifacts are absent so `cargo test` stays green pre-build.
 
 use pods::reward::RewardWeights;
-use pods::rollout::{generate_group, prompt_batch, GenRequest};
+use pods::rollout::{generate_group, prompt_batch, GenRequest, RefillMode};
 use pods::runtime::{Engine, MicroBatch, ParamStore, TensorF, TensorI};
 use pods::tasks::tokenizer as tok;
 use pods::tasks::{Split, TaskKind};
@@ -53,8 +53,9 @@ fn rollout_contract() {
     // micro profile has prompt_len 8; clip the prompt to fit
     let short: Vec<i32> = problem.prompt.iter().copied().take(8).collect();
     let (prompts, pads) = prompt_batch(&e, &short).unwrap();
-    let out = e.rollout(&params, None, &prompts, &pads, 11, 1.0).unwrap();
     let b = e.meta.config.rollout_batch;
+    let seeds: Vec<i32> = (0..b as i32).map(|i| 11_000 + i).collect();
+    let out = e.rollout(&params, None, &prompts, &pads, &seeds, 1.0).unwrap();
     let t = e.meta.config.seq_len;
     let g = e.meta.gen_len;
     let p = e.meta.config.prompt_len;
@@ -67,9 +68,10 @@ fn rollout_contract() {
         }
     }
     // determinism + seed sensitivity
-    let out2 = e.rollout(&params, None, &prompts, &pads, 11, 1.0).unwrap();
+    let out2 = e.rollout(&params, None, &prompts, &pads, &seeds, 1.0).unwrap();
     assert_eq!(out.tokens.data, out2.tokens.data);
-    let out3 = e.rollout(&params, None, &prompts, &pads, 12, 1.0).unwrap();
+    let seeds3: Vec<i32> = (0..b as i32).map(|i| 12_000 + i).collect();
+    let out3 = e.rollout(&params, None, &prompts, &pads, &seeds3, 1.0).unwrap();
     assert_ne!(out.tokens.data, out3.tokens.data);
     // mask/EOS/PAD contract per row
     for row in 0..b {
@@ -86,8 +88,8 @@ fn rollout_contract() {
         }
     }
     // greedy decode is deterministic regardless of seed
-    let g1 = e.rollout(&params, None, &prompts, &pads, 1, 0.0).unwrap();
-    let g2 = e.rollout(&params, None, &prompts, &pads, 999, 0.0).unwrap();
+    let g1 = e.rollout(&params, None, &prompts, &pads, &seeds, 0.0).unwrap();
+    let g2 = e.rollout(&params, None, &prompts, &pads, &seeds3, 0.0).unwrap();
     assert_eq!(g1.tokens.data, g2.tokens.data);
 }
 
@@ -98,9 +100,10 @@ fn score_matches_rollout_behaviour_logprobs() {
     let problem = TaskKind::Mcq.generate(Split::Train, 1);
     let short: Vec<i32> = problem.prompt.iter().copied().take(8).collect();
     let (prompts, pads) = prompt_batch(&e, &short).unwrap();
-    let out = e.rollout(&params, None, &prompts, &pads, 3, 1.0).unwrap();
-    let scored = e.score(&params, None, &out.tokens, &pads).unwrap();
     let b = e.meta.config.rollout_batch;
+    let seeds: Vec<i32> = (0..b as i32).map(|i| 3_000 + i).collect();
+    let out = e.rollout(&params, None, &prompts, &pads, &seeds, 1.0).unwrap();
+    let scored = e.score(&params, None, &out.tokens, &pads).unwrap();
     let g = e.meta.gen_len;
     for row in 0..b {
         for j in 0..g {
@@ -123,7 +126,9 @@ fn grad_zero_at_zero_advantage_and_update_applies() {
     let problem = TaskKind::Arith.generate(Split::Train, 2);
     let short: Vec<i32> = problem.prompt.iter().copied().take(8).collect();
     let (prompts, pads) = prompt_batch(&e, &short).unwrap();
-    let out = e.rollout(&store.params, None, &prompts, &pads, 5, 1.0).unwrap();
+    let br = e.meta.config.rollout_batch;
+    let seeds: Vec<i32> = (0..br as i32).map(|i| 5_000 + i).collect();
+    let out = e.rollout(&store.params, None, &prompts, &pads, &seeds, 1.0).unwrap();
     let bu = e.meta.config.update_batch;
     let t = e.meta.config.seq_len;
     let g = e.meta.gen_len;
@@ -198,16 +203,24 @@ fn generate_group_end_to_end() {
         lora: None,
         ref_params: None,
         ref_lora: None,
-        n: 10, // forces 3 calls at B_r = 4
+        n: 10, // 10 rows through B_r = 4 slots with continuous refill
         temperature: 1.0,
         run_seed: 42,
         iter: 0,
         weights: RewardWeights::default(),
+        decode_chunk: 4,
+        refill: RefillMode::Continuous,
     };
     let (group, stats) = generate_group(&e, &req, TaskKind::Arith, &problem).unwrap();
     assert_eq!(group.rollouts.len(), 10);
-    assert_eq!(stats.calls, 3);
+    // at least the initial prefill and one decode chunk ran
+    assert!(stats.calls >= 2, "calls = {}", stats.calls);
     assert!(stats.total_gen_tokens > 0);
+    assert!(stats.gen_tokens_decoded >= stats.total_gen_tokens);
+    assert_eq!(
+        stats.gen_tokens_wasted,
+        stats.gen_tokens_decoded - stats.total_gen_tokens
+    );
     for r in &group.rollouts {
         assert_eq!(r.tokens.len(), e.meta.config.seq_len);
         assert_eq!(r.gen_mask.len(), e.meta.gen_len);
@@ -235,6 +248,8 @@ fn kl_reference_scoring_path() {
         run_seed: 1,
         iter: 0,
         weights: RewardWeights::default(),
+        decode_chunk: 4,
+        refill: RefillMode::Continuous,
     };
     let (group, _) = generate_group(&e, &req, TaskKind::Mcq, &problem).unwrap();
     // ref_lp must differ from old_lp (different parameters)
