@@ -1,9 +1,14 @@
 //! Bench: the policy-update phase — grad micro-batch, gradient
-//! accumulation, AdamW apply. These are the memory/serialization-bound
-//! costs the paper's Fig. 1 (top) decomposes; here measured for real on
-//! the base-profile artifacts (one CPU device).
+//! accumulation, AdamW apply, and the sharded update engine end to end
+//! (monolithic vs sharded topologies). These are the
+//! memory/serialization-bound costs the paper's Fig. 1 (top) decomposes;
+//! here measured for real on the base-profile artifacts (one CPU device).
 
 use pods::coordinator::accum::GradAccumulator;
+use pods::coordinator::exec::{ShardPlan, UpdateEngine};
+use pods::coordinator::group::{PromptGroup, RolloutRecord, SelectedRollout};
+use pods::exp::CfgBuilder;
+use pods::reward::RewardBreakdown;
 use pods::rollout::prompt_batch;
 use pods::runtime::{Engine, MicroBatch, ParamStore, TensorF, TensorI};
 use pods::tasks::{Split, TaskKind};
@@ -56,6 +61,57 @@ fn main() -> anyhow::Result<()> {
     bench("adamw update (fused kernel via PJRT)", Some(12), || {
         engine.update(&mut store, &grad_out.grads, 1e-4).unwrap();
     });
+
+    // ---- sharded vs monolithic: the full UpdateEngine path -----------
+    // one real prompt group built from the rollout above; train on every
+    // row so both topologies pack identical micro-batches
+    let br = engine.meta.config.rollout_batch;
+    let rollouts: Vec<RolloutRecord> = (0..br)
+        .map(|b| RolloutRecord {
+            tokens: out.tokens.data[b * t..(b + 1) * t].to_vec(),
+            pad_len: pads[b],
+            gen_mask: out.gen_mask.data[b * g..(b + 1) * g].to_vec(),
+            old_lp: out.logprobs.data[b * g..(b + 1) * g].to_vec(),
+            ref_lp: vec![0.0; g],
+            gen_len: out.gen_len[b],
+            reward: RewardBreakdown { accuracy: 0.0, format: 0.0, tag_count: 0.0 },
+            total_reward: 0.0,
+        })
+        .collect();
+    let groups = vec![PromptGroup { problem: problem.clone(), rollouts }];
+    let selected: Vec<SelectedRollout> = (0..br)
+        .map(|i| SelectedRollout { group_idx: 0, rollout_idx: i, advantage: 0.5 })
+        .collect();
+    for (label, shards, micro_batch) in [
+        ("update engine monolithic (S=1, full B_u)", 1usize, 0usize),
+        ("update engine sharded (S=4, micro_batch=B_u/2)", 4, bu / 2),
+    ] {
+        let cfg = CfgBuilder {
+            name: "bench_upd".into(),
+            iterations: 1,
+            kind: "pods".into(),
+            n: br,
+            m: Some(br),
+            upd_shards: shards,
+            upd_micro_batch: micro_batch,
+            ..Default::default()
+        }
+        .build()?;
+        let mut upd = UpdateEngine::new(store.len());
+        bench(label, Some(8), || {
+            let out = upd.run(&engine, &mut store, None, &groups, &selected, &cfg).unwrap();
+            black_box(out);
+        });
+    }
+    let plan = ShardPlan::new(br, 4, bu / 2);
+    println!(
+        "sharded plan: {} rollouts -> {} micro-batches over {} shards \
+         ({} steps on the busiest shard)",
+        br,
+        plan.slots.len(),
+        plan.shards,
+        plan.max_steps_per_shard()
+    );
 
     // the PODS trade at a glance: micro-steps for m=16 vs n=64 per prompt
     println!("\nupdate-phase calls per prompt: PODS m=16 -> {} grad calls; GA n=64 -> {} grad calls", 16usize.div_ceil(bu), 64usize.div_ceil(bu));

@@ -1,0 +1,325 @@
+//! Generated configuration reference (`pods config-docs`).
+//!
+//! [`render`] produces `docs/CONFIG.md` from the config structs: every
+//! `[section]` key with its type, default, validation rule and meaning.
+//! Defaults are read from the same `Default` impls / parse fallbacks the
+//! parser uses, so the document cannot drift from the code silently —
+//! and CI runs [`check`] (`pods config-docs --check`) to fail when the
+//! committed file is stale.
+
+use super::{RolloutSection, UpdateSection};
+use crate::hwsim::HwModel;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Documentation for one config key.
+#[derive(Debug, Clone)]
+pub struct KeyDoc {
+    /// TOML key name.
+    pub key: &'static str,
+    /// Value type as the parser accepts it.
+    pub typ: &'static str,
+    /// Default value (`required` / `—` for keys without one).
+    pub default: String,
+    /// Validation rule enforced at parse time.
+    pub validation: &'static str,
+    /// What the key means.
+    pub doc: &'static str,
+}
+
+impl KeyDoc {
+    fn new(
+        key: &'static str,
+        typ: &'static str,
+        default: impl Into<String>,
+        validation: &'static str,
+        doc: &'static str,
+    ) -> Self {
+        Self { key, typ, default: default.into(), validation, doc }
+    }
+}
+
+/// Documentation for one `[section]`.
+#[derive(Debug, Clone)]
+pub struct SectionDoc {
+    /// Section name as written in the TOML (`run`, `algo`, ...).
+    pub name: &'static str,
+    /// One-paragraph section summary.
+    pub intro: &'static str,
+    /// Every key the parser reads from this section.
+    pub keys: Vec<KeyDoc>,
+}
+
+/// The full config schema, in the order sections appear in shipped
+/// configs. Defaults are pulled from the live `Default` impls.
+pub fn sections() -> Vec<SectionDoc> {
+    let hw = HwModel::default();
+    let ro = RolloutSection::default();
+    let up = UpdateSection::default();
+    vec![
+        SectionDoc {
+            name: "run",
+            intro: "Run identity, scale and I/O locations.",
+            keys: vec![
+                KeyDoc::new("name", "string", "required", "non-empty", "Run name; prefixes the output CSV files."),
+                KeyDoc::new("profile", "string", "required", "must exist under `artifacts/`", "Artifact profile (micro \\| base \\| lora \\| big)."),
+                KeyDoc::new("task", "string", "required", "arith \\| poly \\| mcq", "Task family generating prompts and verifying answers."),
+                KeyDoc::new("seed", "int", "0", ">= 0", "Master RNG seed every per-row / per-group stream derives from."),
+                KeyDoc::new("iterations", "int", "required", ">= 0 (0 = SFT-only run)", "RL training iterations."),
+                KeyDoc::new("prompts_per_iter", "int", "2", ">= 1", "Prompts (groups) per training iteration."),
+                KeyDoc::new("eval_every", "int", "10", "—", "Evaluate every this many iterations."),
+                KeyDoc::new("eval_problems", "int", "64", "—", "Problems per evaluation snapshot."),
+                KeyDoc::new("out_dir", "string", "\"results\"", "—", "Where CSVs and checkpoints go."),
+                KeyDoc::new("base_checkpoint", "string", "—", "required for LoRA profiles", "Pre-trained base checkpoint to start from."),
+                KeyDoc::new("save_checkpoint", "string", "—", "—", "Save a checkpoint here at the end of the run."),
+            ],
+        },
+        SectionDoc {
+            name: "algo",
+            intro: "Training schedule, rollout/update sizes (n, m), the \
+                    rollout-selection pipeline and optimizer knobs.",
+            keys: vec![
+                KeyDoc::new("kind", "string", "required", "grpo \\| ga \\| pods", "Schedule: vanilla GRPO (m = n), GRPO-GA (train on all n via accumulation), GRPO-PODS (down-sample to m)."),
+                KeyDoc::new("n", "int", "required", ">= 1", "Rollouts generated per prompt per iteration."),
+                KeyDoc::new("m", "int", "required for pods", "1..=n", "Update size after down-sampling (ignored for grpo/ga)."),
+                KeyDoc::new("rule", "string", "\"max_variance\"", "must parse against the selector registry", "Selection pipeline spec, e.g. `\"drop_zero_variance \\| max_variance\"`."),
+                KeyDoc::new("adv_norm", "string", "\"after\"", "after \\| before", "Advantage normalization mode (paper §A.3)."),
+                KeyDoc::new("kl_coef", "float", "0", ">= 0 (0 disables the reference)", "KL-to-reference coefficient."),
+                KeyDoc::new("lr", "float", "required", "> 0", "AdamW learning rate for the policy update."),
+                KeyDoc::new("temperature", "float", "1", "—", "Sampling temperature for rollout generation."),
+            ],
+        },
+        SectionDoc {
+            name: "rollout",
+            intro: "The chunked early-exit decode driver (slot-based \
+                    continuous batching).",
+            keys: vec![
+                KeyDoc::new("decode_chunk", "int", ro.decode_chunk.to_string(), ">= 1; must match a lowered program ({1, 4, 16, G})", "Tokens decoded per `decode_chunk` call."),
+                KeyDoc::new("refill", "string", format!("\"{}\"", ro.refill.name()), "continuous \\| batch", "Slot-refill policy between chunks: admit queued rows into freed slots, or drain the whole batch first."),
+            ],
+        },
+        SectionDoc {
+            name: "update",
+            intro: "The sharded data-parallel update engine. Shards and \
+                    micro-batching move only simulated cost (compute, ring \
+                    all-reduce, peak memory) — trained parameters are \
+                    bit-identical for any shard count (docs/DETERMINISM.md).",
+            keys: vec![
+                KeyDoc::new("shards", "int", up.shards.to_string(), ">= 1", "Simulated data-parallel device shards the update batch is split over."),
+                KeyDoc::new("micro_batch", "int", up.micro_batch.to_string(), "0..=B_u (0 = the profile's full B_u)", "Rows per update micro-batch; the hwsim memory ceiling still caps the effective size."),
+            ],
+        },
+        SectionDoc {
+            name: "hwsim",
+            intro: "Calibrated accelerator cost model (defaults shaped to \
+                    the paper's Fig. 1: 8xA100, Qwen2.5-3B) and the \
+                    executor schedule.",
+            keys: vec![
+                KeyDoc::new("workers", "int", hw.workers.to_string(), ">= 1", "Simulated accelerators; also sizes the REAL rollout thread pool."),
+                KeyDoc::new("tok_time_b1", "float", hw.tok_time_b1.to_string(), ">= 0", "Per-token decode time at rollout batch 1 on one device."),
+                KeyDoc::new("tok_time_floor", "float", hw.tok_time_floor.to_string(), ">= 0", "Saturated per-token time (Fig. 1: ~21x below `tok_time_b1`)."),
+                KeyDoc::new("batch_half", "float", hw.batch_half.to_string(), "> 0", "Batch size at which amortization is halfway to the floor."),
+                KeyDoc::new("batch_saturation", "float", hw.batch_saturation.to_string(), ">= 1", "Rollout batch size beyond which throughput stops improving."),
+                KeyDoc::new("mem_capacity_rollouts", "int", hw.mem_capacity_rollouts.to_string(), ">= 1", "Per-device memory ceiling: max rollouts in one update micro-batch."),
+                KeyDoc::new("microbatch_fixed", "float", hw.microbatch_fixed.to_string(), ">= 0", "Fixed per-micro-step overhead (kernel launches, activation reload)."),
+                KeyDoc::new("microbatch_time", "float", hw.microbatch_time.to_string(), ">= 0", "fwd+bwd time for one full update micro-batch, scaled by fill."),
+                KeyDoc::new("comm_base", "float", hw.comm_base.to_string(), ">= 0", "Legacy per-micro-step collective cost (the workers-based `update_time` model)."),
+                KeyDoc::new("optimizer_time", "float", hw.optimizer_time.to_string(), ">= 0", "Optimizer apply (full-precision state streams) per update."),
+                KeyDoc::new("lora_update_scale", "float", hw.lora_update_scale.to_string(), ">= 0", "LoRA discount: optimizer/communication touch only adapter weights."),
+                KeyDoc::new("bytes_per_param", "float", hw.bytes_per_param.to_string(), ">= 0", "Bytes per gradient element on the wire (4 = f32, 2 = bf16)."),
+                KeyDoc::new("interconnect_gbps", "float", hw.interconnect_gbps.to_string(), "> 0", "Interconnect bandwidth between update shards, gigabits/s."),
+                KeyDoc::new("comm_latency", "float", hw.comm_latency.to_string(), ">= 0", "Per-hop ring all-reduce latency in seconds."),
+                KeyDoc::new("sim_model_params", "float", hw.sim_model_params.to_string(), ">= 0", "Parameter count of the simulated policy; sizes the all-reduce volume."),
+                KeyDoc::new("schedule", "string", format!("\"{}\"", hw.schedule.name()), "sync \\| pipelined", "Executor schedule: phases back-to-back, or generation of t+1 overlapping the update of t."),
+            ],
+        },
+        SectionDoc {
+            name: "sft",
+            intro: "Optional supervised warm-up before RL (the stand-in \
+                    for starting from an instruct model). The section is \
+                    skipped entirely when absent.",
+            keys: vec![
+                KeyDoc::new("steps", "int", "0", "full-parameter profiles only", "Teacher-forced SFT steps (0 = skip)."),
+                KeyDoc::new("lr", "float", "0.002", "—", "SFT learning rate."),
+                KeyDoc::new("log_every", "int", "50", "—", "Log the SFT loss every this many steps."),
+                KeyDoc::new("pool", "int", "512", "0 = unbounded fresh problems", "Size of the cycled problem pool."),
+            ],
+        },
+    ]
+}
+
+/// Render the full reference as markdown (the exact content of
+/// `docs/CONFIG.md`).
+pub fn render() -> String {
+    let mut out = String::new();
+    out.push_str(
+        "<!-- GENERATED FILE - do not edit by hand.\n     \
+         Regenerate with `pods config-docs`; CI fails when stale\n     \
+         (`pods config-docs --check`). -->\n\n",
+    );
+    out.push_str("# Run-configuration reference\n\n");
+    out.push_str(
+        "A `RunConfig` TOML fully determines one training run. Sections \
+         and keys below are everything the parser reads; unknown keys are \
+         ignored, absent keys take the listed default, and every \
+         validation rule fails with a descriptive error before any \
+         training work starts — at parse time, or at trainer construction \
+         for the rules that need the artifact profile (such as \
+         `update.micro_batch <= B_u`). Shipped examples live under \
+         `configs/`.\n",
+    );
+    for sec in sections() {
+        out.push_str(&format!("\n## `[{}]`\n\n{}\n\n", sec.name, sec.intro));
+        out.push_str("| key | type | default | validation | meaning |\n");
+        out.push_str("|-----|------|---------|------------|---------|\n");
+        for k in &sec.keys {
+            out.push_str(&format!(
+                "| `{}` | {} | `{}` | {} | {} |\n",
+                k.key, k.typ, k.default, k.validation, k.doc
+            ));
+        }
+    }
+    out
+}
+
+/// Fail when `path` does not hold exactly [`render`]'s output — the CI
+/// staleness gate for `docs/CONFIG.md`.
+pub fn check(path: &Path) -> Result<()> {
+    let want = render();
+    let got = std::fs::read_to_string(path).map_err(|e| {
+        anyhow!(
+            "cannot read {}: {e} — generate it with `pods config-docs`",
+            path.display()
+        )
+    })?;
+    if got == want {
+        return Ok(());
+    }
+    let diff_line = want
+        .lines()
+        .zip(got.lines())
+        .position(|(w, g)| w != g)
+        .map(|i| i + 1)
+        .unwrap_or_else(|| want.lines().count().min(got.lines().count()) + 1);
+    Err(anyhow!(
+        "{} is stale: first difference at line {diff_line} (committed file vs \
+         the schema in the config structs) — regenerate it with `pods config-docs` \
+         and commit the result",
+        path.display()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    const MINIMAL: &str = r#"
+        [run]
+        name = "t"
+        profile = "base"
+        task = "arith"
+        iterations = 1
+
+        [algo]
+        kind = "grpo"
+        n = 4
+        lr = 1e-4
+    "#;
+
+    fn key<'a>(secs: &'a [SectionDoc], sec: &str, key: &str) -> &'a KeyDoc {
+        secs.iter()
+            .find(|s| s.name == sec)
+            .unwrap_or_else(|| panic!("section {sec} undocumented"))
+            .keys
+            .iter()
+            .find(|k| k.key == key)
+            .unwrap_or_else(|| panic!("key [{sec}] {key} undocumented"))
+    }
+
+    /// Every defaulted key's documented default matches what the parser
+    /// actually produces for a config that omits it — the anti-drift core
+    /// of the generated reference.
+    #[test]
+    fn documented_defaults_match_parsed_defaults() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        let secs = sections();
+        // [update]
+        assert_eq!(key(&secs, "update", "shards").default, cfg.update.shards.to_string());
+        assert_eq!(key(&secs, "update", "micro_batch").default, cfg.update.micro_batch.to_string());
+        // [rollout]
+        assert_eq!(
+            key(&secs, "rollout", "decode_chunk").default,
+            cfg.rollout.decode_chunk.to_string()
+        );
+        assert_eq!(
+            key(&secs, "rollout", "refill").default,
+            format!("\"{}\"", cfg.rollout.refill.name())
+        );
+        // [hwsim] — every key present and matching the parsed default
+        let hw = &cfg.hwsim;
+        for (k, v) in [
+            ("workers", hw.workers.to_string()),
+            ("tok_time_b1", hw.tok_time_b1.to_string()),
+            ("tok_time_floor", hw.tok_time_floor.to_string()),
+            ("batch_half", hw.batch_half.to_string()),
+            ("batch_saturation", hw.batch_saturation.to_string()),
+            ("mem_capacity_rollouts", hw.mem_capacity_rollouts.to_string()),
+            ("microbatch_fixed", hw.microbatch_fixed.to_string()),
+            ("microbatch_time", hw.microbatch_time.to_string()),
+            ("comm_base", hw.comm_base.to_string()),
+            ("optimizer_time", hw.optimizer_time.to_string()),
+            ("lora_update_scale", hw.lora_update_scale.to_string()),
+            ("bytes_per_param", hw.bytes_per_param.to_string()),
+            ("interconnect_gbps", hw.interconnect_gbps.to_string()),
+            ("comm_latency", hw.comm_latency.to_string()),
+            ("sim_model_params", hw.sim_model_params.to_string()),
+            ("schedule", format!("\"{}\"", hw.schedule.name())),
+        ] {
+            assert_eq!(key(&secs, "hwsim", k).default, v, "hwsim.{k} default drifted");
+        }
+        // [run]/[algo] parse-fallback defaults
+        assert_eq!(key(&secs, "run", "seed").default, cfg.run.seed.to_string());
+        assert_eq!(
+            key(&secs, "run", "prompts_per_iter").default,
+            cfg.run.prompts_per_iter.to_string()
+        );
+        assert_eq!(key(&secs, "run", "eval_every").default, cfg.run.eval_every.to_string());
+        assert_eq!(key(&secs, "run", "eval_problems").default, cfg.run.eval_problems.to_string());
+        assert_eq!(key(&secs, "run", "out_dir").default, format!("\"{}\"", cfg.run.out_dir));
+        assert_eq!(key(&secs, "algo", "rule").default, format!("\"{}\"", cfg.algo.rule));
+        assert_eq!(key(&secs, "algo", "adv_norm").default, format!("\"{}\"", cfg.algo.adv_norm));
+        assert_eq!(key(&secs, "algo", "kl_coef").default, cfg.algo.kl_coef.to_string());
+        assert_eq!(key(&secs, "algo", "temperature").default, cfg.algo.temperature.to_string());
+        // [sft] parse-fallback defaults
+        let sft_cfg = format!("{MINIMAL}\n[sft]\n");
+        let sft = RunConfig::from_str_validated(&sft_cfg).unwrap().sft.unwrap();
+        assert_eq!(key(&secs, "sft", "steps").default, sft.steps.to_string());
+        assert_eq!(key(&secs, "sft", "lr").default, sft.lr.to_string());
+        assert_eq!(key(&secs, "sft", "log_every").default, sft.log_every.to_string());
+        assert_eq!(key(&secs, "sft", "pool").default, sft.pool.to_string());
+    }
+
+    /// The rendered document carries every section and a staleness
+    /// banner, and `check` accepts exactly the rendered bytes.
+    #[test]
+    fn render_and_check_roundtrip() {
+        let text = render();
+        for sec in ["[run]", "[algo]", "[rollout]", "[update]", "[hwsim]", "[sft]"] {
+            assert!(text.contains(sec), "missing section {sec}");
+        }
+        assert!(text.starts_with("<!-- GENERATED FILE"));
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("CONFIG.md");
+        // absent file: descriptive error
+        let err = check(&path).unwrap_err().to_string();
+        assert!(err.contains("config-docs"), "undescriptive: {err}");
+        // fresh file: passes
+        std::fs::write(&path, &text).unwrap();
+        check(&path).unwrap();
+        // stale file: fails pointing at the first differing line
+        std::fs::write(&path, text.replace("# Run-configuration", "# Stale")).unwrap();
+        let err = check(&path).unwrap_err().to_string();
+        assert!(err.contains("stale"), "undescriptive: {err}");
+    }
+}

@@ -11,6 +11,8 @@
 //! [`crate::coordinator::select::spec`]); the four legacy rule names are
 //! valid one-stage specs, so existing TOML files keep working unchanged.
 
+pub mod docs;
+
 use crate::coordinator::advantage::NormMode;
 use crate::coordinator::select::Pipeline;
 use crate::hwsim::HwModel;
@@ -20,17 +22,24 @@ use crate::util::toml::{parse as toml_parse, SectionView};
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 
+/// `[run]` — run identity, scale and I/O locations.
 #[derive(Debug, Clone)]
 pub struct RunSection {
+    /// Run name; prefixes the output CSV files.
     pub name: String,
     /// Artifact profile under `artifacts/` (micro | base | lora | big).
     pub profile: String,
     /// Task family: arith | poly | mcq.
     pub task: String,
+    /// Master RNG seed every per-row / per-group stream derives from.
     pub seed: u64,
+    /// RL training iterations (0 = SFT-only checkpoint-producing run).
     pub iterations: usize,
+    /// Prompts (groups) per training iteration.
     pub prompts_per_iter: usize,
+    /// Evaluate every this many iterations.
     pub eval_every: usize,
+    /// Problems per evaluation snapshot.
     pub eval_problems: usize,
     /// Where CSVs/checkpoints go (default `results/`).
     pub out_dir: String,
@@ -53,6 +62,7 @@ pub enum AlgoKind {
 }
 
 impl AlgoKind {
+    /// Parse a `[algo] kind` value (`grpo` | `ga` | `pods`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "grpo" => Ok(Self::Grpo),
@@ -62,6 +72,7 @@ impl AlgoKind {
         }
     }
 
+    /// Canonical name used in logs and CSVs.
     pub fn name(self) -> &'static str {
         match self {
             Self::Grpo => "grpo",
@@ -71,6 +82,7 @@ impl AlgoKind {
     }
 }
 
+/// `[algo]` — schedule kind, (n, m), selection spec and optimizer knobs.
 #[derive(Debug, Clone)]
 pub struct AlgoSection {
     /// grpo | ga | pods
@@ -82,9 +94,13 @@ pub struct AlgoSection {
     /// Selector pipeline spec, e.g. `"max_variance"` or
     /// `"drop_zero_variance | prune(max_tokens=4096) | percentile"`.
     pub rule: String,
+    /// Advantage normalization mode: `"after"` (§A.3) or `"before"`.
     pub adv_norm: String,
+    /// KL-to-reference coefficient (0 disables the reference policy).
     pub kl_coef: f64,
+    /// AdamW learning rate for the policy update.
     pub lr: f64,
+    /// Sampling temperature for rollout generation.
     pub temperature: f64,
 }
 
@@ -118,6 +134,7 @@ impl RolloutSection {
         Ok(r)
     }
 
+    /// Reject degenerate chunk sizes at parse time.
     pub fn validate(&self) -> Result<()> {
         if self.decode_chunk == 0 {
             return Err(anyhow!(
@@ -129,36 +146,120 @@ impl RolloutSection {
     }
 }
 
+/// `[update]` — the sharded data-parallel policy-update engine.
+///
+/// The update phase runs on a simulated data-parallel topology: the kept
+/// rollouts are packed into micro-batches of `micro_batch` rows (padded
+/// into the profile's fixed `B_u`-shaped `grad` program) and the
+/// micro-batch sequence is split into `shards` contiguous device shards.
+/// Gradients reduce in **canonical global micro-batch order** regardless
+/// of topology, so trained parameters are bit-identical for any shard
+/// count (see `docs/DETERMINISM.md`); shards and micro-batching feed the
+/// hwsim cost model (per-shard compute, ring all-reduce, peak memory).
+#[derive(Debug, Clone)]
+pub struct UpdateSection {
+    /// Simulated data-parallel device shards the update batch is split
+    /// over. Compute parallelizes across shards; each optimizer step pays
+    /// one ring all-reduce over the gradient bytes.
+    pub shards: usize,
+    /// Rows per update micro-batch (DeepSpeed-style micro-batch size).
+    /// `0` (default) uses the profile's full update batch `B_u`; values
+    /// above `B_u` are rejected when the engine runs (the AOT `grad`
+    /// program has a fixed shape). The hwsim memory ceiling
+    /// (`hwsim.mem_capacity_rollouts`) still caps the effective size.
+    pub micro_batch: usize,
+}
+
+impl Default for UpdateSection {
+    fn default() -> Self {
+        Self { shards: 1, micro_batch: 0 }
+    }
+}
+
+impl UpdateSection {
+    fn from_section(sec: &SectionView) -> Result<Self> {
+        let d = Self::default();
+        let u = Self {
+            shards: sec.usize_or("shards", d.shards)?,
+            micro_batch: sec.usize_or("micro_batch", d.micro_batch)?,
+        };
+        u.validate()?;
+        Ok(u)
+    }
+
+    /// Reject degenerate topologies at parse time.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            return Err(anyhow!(
+                "update.shards must be >= 1 (the number of simulated data-parallel \
+                 devices the update batch is split over; use shards = 1 for the \
+                 single-device settings)"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Effective rows per micro-batch for a profile whose AOT `grad`
+    /// program is shaped for `bu` rows: `micro_batch = 0` means "use the
+    /// full `B_u`", anything larger than `B_u` cannot be packed.
+    pub fn rows_per_call(&self, bu: usize) -> Result<usize> {
+        match self.micro_batch {
+            0 => Ok(bu),
+            mb if mb > bu => Err(anyhow!(
+                "update.micro_batch = {mb} exceeds the profile's update batch B_u = {bu} \
+                 (the AOT grad program has a fixed shape; choose micro_batch in 1..={bu} \
+                 or 0 for the full batch)"
+            )),
+            mb => Ok(mb),
+        }
+    }
+}
+
+/// `[sft]` — optional supervised warm-up before RL.
 #[derive(Debug, Clone, Default)]
 pub struct SftSection {
+    /// Teacher-forced SFT steps (0 = skip the warm-up).
     pub steps: usize,
+    /// SFT learning rate.
     pub lr: f64,
+    /// Log the SFT loss every this many steps.
     pub log_every: usize,
     /// Size of the cycled problem pool (0 = unbounded fresh problems).
     pub pool: usize,
 }
 
+/// One fully-validated run configuration (every `[section]` of the TOML).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// `[run]` — identity, scale, I/O.
     pub run: RunSection,
+    /// `[algo]` — schedule, (n, m), selection spec, optimizer knobs.
     pub algo: AlgoSection,
+    /// `[hwsim]` — accelerator cost model + executor schedule.
     pub hwsim: HwModel,
+    /// `[rollout]` — chunked early-exit decode driver.
     pub rollout: RolloutSection,
+    /// `[update]` — sharded data-parallel update engine.
+    pub update: UpdateSection,
+    /// `[sft]` — optional supervised warm-up.
     pub sft: Option<SftSection>,
 }
 
 impl RunConfig {
+    /// Read and validate a TOML run config from disk.
     pub fn from_path(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
         Self::from_str_validated(&text).with_context(|| format!("parsing {path:?}"))
     }
 
+    /// Parse and validate a TOML run config from a string.
     pub fn from_str_validated(text: &str) -> Result<Self> {
         let doc = toml_parse(text)?;
         let run = SectionView::new(&doc, "run");
         let algo = SectionView::new(&doc, "algo");
         let hw = SectionView::new(&doc, "hwsim");
         let rollout = SectionView::new(&doc, "rollout");
+        let update = SectionView::new(&doc, "update");
         let sft = SectionView::new(&doc, "sft");
 
         let cfg = RunConfig {
@@ -190,6 +291,7 @@ impl RunConfig {
             },
             hwsim: HwModel::from_section(&hw)?,
             rollout: RolloutSection::from_section(&rollout)?,
+            update: UpdateSection::from_section(&update)?,
             sft: if sft.sec.is_some() {
                 Some(SftSection {
                     steps: sft.usize_or("steps", 0)?,
@@ -205,6 +307,7 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// The parsed `[algo] kind` (infallible on a validated config).
     pub fn algo_kind(&self) -> AlgoKind {
         AlgoKind::parse(&self.algo.kind).expect("validated")
     }
@@ -215,10 +318,12 @@ impl RunConfig {
         Pipeline::parse_default(&self.algo.rule).expect("validated")
     }
 
+    /// The parsed `[algo] adv_norm` mode (infallible on a validated config).
     pub fn norm_mode(&self) -> NormMode {
         NormMode::parse(&self.algo.adv_norm).expect("validated")
     }
 
+    /// The parsed `[run] task` family (infallible on a validated config).
     pub fn task_kind(&self) -> TaskKind {
         TaskKind::parse(&self.run.task).expect("validated")
     }
@@ -231,6 +336,8 @@ impl RunConfig {
         }
     }
 
+    /// Full cross-section validation — also applied to programmatically
+    /// built configs that bypassed `from_str_validated`.
     pub fn validate(&self) -> Result<()> {
         let kind = AlgoKind::parse(&self.algo.kind)?;
         Pipeline::parse_default(&self.algo.rule)?;
@@ -258,11 +365,13 @@ impl RunConfig {
         if self.run.prompts_per_iter == 0 {
             return Err(anyhow!("run.prompts_per_iter must be positive"));
         }
-        // the full [hwsim]/[rollout] validation (workers >= 1, positive
-        // cost-model times, schedule, chunk size) — also applied to
-        // programmatically-built configs that bypass from_section
+        // the full [hwsim]/[rollout]/[update] validation (workers >= 1,
+        // positive cost-model times, schedule, chunk size, shards >= 1) —
+        // also applied to programmatically-built configs that bypass
+        // from_section
         self.hwsim.validate()?;
         self.rollout.validate()?;
+        self.update.validate()?;
         Ok(())
     }
 }
@@ -401,6 +510,36 @@ mod tests {
         let text = format!("{MINIMAL}\n[rollout]\nrefill = \"eager\"\n");
         let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
         assert!(err.contains("refill"), "undescriptive: {err}");
+    }
+
+    #[test]
+    fn update_section_defaults_and_overrides() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert_eq!(cfg.update.shards, 1);
+        assert_eq!(cfg.update.micro_batch, 0);
+        // micro_batch = 0 resolves to the profile's B_u
+        assert_eq!(cfg.update.rows_per_call(8).unwrap(), 8);
+
+        let text = format!("{MINIMAL}\n[update]\nshards = 4\nmicro_batch = 2\n");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert_eq!(cfg.update.shards, 4);
+        assert_eq!(cfg.update.micro_batch, 2);
+        assert_eq!(cfg.update.rows_per_call(8).unwrap(), 2);
+    }
+
+    #[test]
+    fn update_section_rejects_degenerate_values() {
+        let text = format!("{MINIMAL}\n[update]\nshards = 0\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("update.shards"), "undescriptive: {err}");
+        assert!(err.contains(">= 1"), "undescriptive: {err}");
+
+        // micro_batch above the profile's B_u fails where B_u is known
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        let upd = UpdateSection { micro_batch: 16, ..cfg.update };
+        let err = format!("{:#}", upd.rows_per_call(8).unwrap_err());
+        assert!(err.contains("micro_batch"), "undescriptive: {err}");
+        assert!(err.contains("B_u"), "undescriptive: {err}");
     }
 
     #[test]

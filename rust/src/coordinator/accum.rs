@@ -22,6 +22,7 @@ pub struct GradAccumulator {
 }
 
 impl GradAccumulator {
+    /// A zeroed accumulator for gradient vectors of width `n`.
     pub fn new(n: usize) -> Self {
         Self { sum: vec![0.0; n], weight: 0.0, micro_steps: 0 }
     }
@@ -50,6 +51,7 @@ impl GradAccumulator {
         self.micro_steps
     }
 
+    /// Sum of the weights accumulated so far (real + padded slots).
     pub fn total_weight(&self) -> f64 {
         self.weight
     }

@@ -16,6 +16,7 @@ pub enum NormMode {
 }
 
 impl NormMode {
+    /// Parse an `[algo] adv_norm` value (`after` | `before`).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "after" => Ok(Self::After),
@@ -24,6 +25,7 @@ impl NormMode {
         }
     }
 
+    /// Canonical name used in configs and logs.
     pub fn name(self) -> &'static str {
         match self {
             Self::After => "after",

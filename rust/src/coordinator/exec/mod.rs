@@ -9,8 +9,10 @@
 //!   by `hwsim.workers` (per-thread engine replicas), each worker running
 //!   the chunked early-exit continuous batcher over its shard of the
 //!   iteration's row queue ([`crate::rollout::plan_rows`]).
-//! * [`UpdateEngine`] — micro-batch packing + gradient accumulation +
-//!   the fused optimizer apply.
+//! * [`UpdateEngine`] — the sharded data-parallel update: micro-batch
+//!   packing over a [`ShardPlan`], gradient accumulation in canonical
+//!   global order, a simulated ring all-reduce, and the fused optimizer
+//!   apply.
 //! * [`TrainLoop`] — the driver composing them under the config-selected
 //!   [`Schedule`]:
 //!
@@ -40,7 +42,7 @@ pub mod update_engine;
 
 pub use crate::hwsim::Schedule;
 pub use rollout_engine::{GenBatch, PendingGen, RolloutEngine};
-pub use update_engine::{UpdateEngine, UpdateOut};
+pub use update_engine::{MicroSlot, ShardPlan, UpdateEngine, UpdateOut};
 
 use crate::config::{AlgoKind, RunConfig};
 use crate::coordinator::group::{build_update_batch, BatchSelectionStats};
@@ -56,33 +58,56 @@ use std::sync::Arc;
 /// Borrowed trainer state one step operates on (the [`TrainLoop`] owns no
 /// model state itself — only executor state).
 pub struct StepCtx<'a> {
+    /// The PJRT engine executing the AOT programs.
     pub engine: &'a Engine,
+    /// Live trainable parameters + optimizer state.
     pub store: &'a mut ParamStore,
     /// Frozen full-parameter base (LoRA profiles only).
     pub base: Option<&'a [f32]>,
     /// Reference-policy snapshot (Arc handles — cloning into a GenBatch
     /// shares the vector instead of re-copying it every iteration).
     pub ref_params: Option<Arc<Vec<f32>>>,
+    /// Reference-policy adapter snapshot (LoRA profiles with KL).
     pub ref_lora: Option<Arc<Vec<f32>>>,
+    /// The run's validated configuration.
     pub cfg: &'a RunConfig,
+    /// Rollout-selection pipeline built from `algo.rule`.
     pub pipeline: &'a Pipeline,
+    /// Task family generating prompts and verifying answers.
     pub task: TaskKind,
+    /// The run's simulated wall clock.
     pub clock: &'a mut SimClock,
+    /// Monotone cursor into the train split's prompt stream.
     pub prompt_cursor: &'a mut u64,
 }
 
 /// Everything one executed step reports back to the recorder.
 #[derive(Debug, Clone, Default)]
 pub struct StepReport {
+    /// Mean total reward over all generated rollouts.
     pub train_reward: f32,
+    /// Mean accuracy-component over all generated rollouts.
     pub train_acc: f32,
+    /// Mean generated length (tokens incl. EOS).
     pub completion_len: f32,
+    /// Mean update loss over trained rollouts.
     pub loss: f32,
+    /// Mean clipped-ratio fraction over trained rollouts.
     pub clip_frac: f32,
+    /// Mean KL-to-reference over trained rollouts.
     pub kl: f32,
+    /// Physical `grad` calls the update executed.
     pub micro_steps: usize,
+    /// Rollouts generated this iteration (`prompts × n`).
     pub rollouts_generated: usize,
+    /// Rollouts the update trained on (after selection).
     pub rollouts_trained: usize,
+    /// Simulated device shards the update was split over.
+    pub upd_shards: usize,
+    /// Ring all-reduce portion of `sim_update` (0 for one shard).
+    pub upd_comm_time: f64,
+    /// Peak rollouts resident per shard in one update micro-step.
+    pub upd_peak_mem: usize,
     /// Decode-step slots physically executed this iteration (chunked
     /// driver: `B_r × C` per chunk call, post-EOS + filler included).
     pub gen_tokens_decoded: usize,
@@ -98,14 +123,19 @@ pub struct StepReport {
     /// Portion of `sim_inference` hidden behind the previous update
     /// (zero under the sync schedule).
     pub sim_overlap_saved: f64,
+    /// Aggregated per-group selection telemetry.
     pub sel_stats: BatchSelectionStats,
+    /// Reward variance of the selected update batch.
     pub sel_variance: f64,
 }
 
 /// The schedule-aware driver for one training run.
 pub struct TrainLoop {
+    /// Inference-phase engine (thread pool of PJRT replicas).
     pub rollout: RolloutEngine,
+    /// Sharded policy-update engine.
     pub update: UpdateEngine,
+    /// Config-selected phase schedule (sync | pipelined).
     pub schedule: Schedule,
     /// Prefetched generation for a future iteration (pipelined only).
     pending: Option<(usize, PendingGen)>,
@@ -115,6 +145,9 @@ pub struct TrainLoop {
 }
 
 impl TrainLoop {
+    /// Build the executor for one run: a rollout pool of `workers`
+    /// threads over `profile`'s artifacts, an update engine sized for
+    /// `param_width` trainable parameters, and the given schedule.
     pub fn new(
         artifacts: PathBuf,
         profile: &str,
@@ -207,17 +240,8 @@ impl TrainLoop {
             self.pending = Some((iter + 1, pending));
         }
 
-        // ---- Phase 3: micro-batched update ----------------------------
-        let upd = self.update.run(
-            ctx.engine,
-            ctx.store,
-            ctx.base,
-            &groups,
-            &selected,
-            cfg.algo.kl_coef as f32,
-            cfg.algo.lr as f32,
-            &cfg.hwsim,
-        )?;
+        // ---- Phase 3: sharded micro-batched update --------------------
+        let upd = self.update.run(ctx.engine, ctx.store, ctx.base, &groups, &selected, cfg)?;
 
         // ---- Clock: overlap-aware charging ----------------------------
         // A prefetched inference phase ran concurrently with the previous
@@ -238,6 +262,9 @@ impl TrainLoop {
             micro_steps: upd.micro_steps,
             rollouts_generated,
             rollouts_trained: upd.rollouts_trained,
+            upd_shards: upd.shards,
+            upd_comm_time: upd.sim_comm,
+            upd_peak_mem: upd.peak_mem_rollouts,
             gen_tokens_decoded: gen_stats.gen_tokens_decoded,
             gen_tokens_wasted: gen_stats.gen_tokens_wasted,
             sim_inference,

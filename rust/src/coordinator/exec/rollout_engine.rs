@@ -48,15 +48,21 @@ pub struct GenBatch {
     pub lora: Option<Arc<Vec<f32>>>,
     /// Reference-policy parameters for the KL term (when kl_coef > 0).
     pub ref_params: Option<Arc<Vec<f32>>>,
+    /// Reference-policy adapter vector (LoRA profiles with KL).
     pub ref_lora: Option<Arc<Vec<f32>>>,
     /// The iteration's prompt batch, one group per problem.
     pub problems: Arc<Vec<Problem>>,
     /// Rollouts per prompt (the paper's `n`).
     pub n: usize,
+    /// Sampling temperature.
     pub temperature: f32,
+    /// Run seed — one axis of every row's private stream seed.
     pub run_seed: u64,
+    /// Training iteration this generation belongs to.
     pub iter: u64,
+    /// Task family verifying the generated answers.
     pub task: TaskKind,
+    /// Reward component weights.
     pub weights: RewardWeights,
     /// Tokens decoded per `decode_chunk` call (`[rollout] decode_chunk`).
     pub decode_chunk: usize,
@@ -99,6 +105,8 @@ pub struct PendingGen {
 pub struct RolloutEngine {
     artifacts: PathBuf,
     profile: String,
+    /// Configured pool size (`hwsim.workers`); the real thread count is
+    /// capped at host parallelism.
     pub workers: usize,
     pool: Option<Pool>,
     next_batch_id: u64,
@@ -129,6 +137,8 @@ fn shard_rows(rows: &[RowSpec], workers: usize, br: usize) -> Vec<Vec<RowSpec>> 
 }
 
 impl RolloutEngine {
+    /// An engine over `profile`'s artifacts with a pool of `workers`
+    /// threads (spawned lazily on first use).
     pub fn new(artifacts: PathBuf, profile: impl Into<String>, workers: usize) -> Self {
         Self {
             artifacts,

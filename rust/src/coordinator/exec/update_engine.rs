@@ -1,35 +1,135 @@
-//! The policy-update phase as a reusable engine: micro-batch packing,
-//! gradient accumulation, and the fused optimizer apply.
+//! The policy-update phase as a **sharded data-parallel engine**:
+//! micro-batch packing, per-shard scheduling, gradient accumulation, a
+//! simulated ring all-reduce, and the fused optimizer apply.
 //!
-//! Owns the [`GradAccumulator`] buffer across iterations (allocation-free
-//! after the first) and reproduces the seed trainer's update semantics
-//! exactly: selected rollouts are packed into fixed-size `B_u`
-//! micro-batches, each runs the `grad` artifact, gradients accumulate
-//! with padded-slot weighting, and one AdamW apply finishes the
-//! iteration. The hwsim charge (`update_time`) is computed here so every
-//! caller — sync or pipelined — prices the phase identically, and an
-//! iteration whose selection dropped every group performs (and is
+//! ## Topology
+//!
+//! The kept rollouts are packed into micro-batches of
+//! `update.micro_batch` rows (default: the profile's full `B_u`), each
+//! executed through the fixed-shape AOT `grad` program with unused slots
+//! padded (padded rows carry zero advantage and contribute exactly zero
+//! gradient). The micro-batch sequence is then split into `update.shards`
+//! contiguous device shards ([`ShardPlan`]): shards run their micro-steps
+//! in parallel in the cost model, gradients all-reduce once per optimizer
+//! step (DDP `no_sync` accumulation semantics), and one AdamW apply
+//! finishes the iteration.
+//!
+//! ## Determinism contract (docs/DETERMINISM.md)
+//!
+//! Physical execution happens on the host's single PJRT device whatever
+//! the simulated topology, and gradients accumulate in **canonical global
+//! micro-batch order** into one f32 buffer — the simulated collective is
+//! order-stable, unlike a real NCCL ring. Two consequences, both pinned
+//! by tests:
+//!
+//! * **Shard invariance** — trained parameters are bit-identical for any
+//!   `update.shards`; the topology only moves simulated cost
+//!   (`max(compute_shard) + allreduce + optimizer`, see
+//!   [`crate::hwsim::HwModel::update_cost`]).
+//! * **Default micro-batch replays the monolith** — with
+//!   `micro_batch = 0` the packing is exactly the legacy single-shot
+//!   engine's `chunks(B_u)`, so the update is bit-identical to the
+//!   pre-sharding trainer. A non-default micro-batch changes which rows
+//!   share a device reduction, so its parameters are reproducible but not
+//!   comparable across micro-batch sizes.
+//!
+//! An iteration whose selection dropped every group performs (and is
 //! charged) nothing.
 
+use crate::config::RunConfig;
 use crate::coordinator::accum::GradAccumulator;
 use crate::coordinator::group::{PromptGroup, SelectedRollout};
-use crate::hwsim::HwModel;
 use crate::runtime::{Engine, MicroBatch, ParamStore, TensorF, TensorI};
 use anyhow::Result;
+
+/// One planned `grad` call: the contiguous slice `start..end` of the
+/// selected-rollout list, assigned to simulated device `shard`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MicroSlot {
+    /// Simulated data-parallel device executing this micro-batch.
+    pub shard: usize,
+    /// First selected-rollout index (inclusive).
+    pub start: usize,
+    /// Last selected-rollout index (exclusive).
+    pub end: usize,
+}
+
+/// The update phase's schedule: how the kept rollouts are packed into
+/// micro-batches and how the micro-batch sequence is split over shards.
+///
+/// The packing (`start..end` ranges, global order) depends only on
+/// `(m, rows_per_call)` — never on the shard count — which is what makes
+/// trained parameters shard-invariant. Shard assignment is contiguous and
+/// balanced: micro-batch `k` of `K` runs on shard `k·S / K`.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Simulated device count actually used (capped at the micro-batch
+    /// count — an idle shard is not a shard).
+    pub shards: usize,
+    /// Rows packed per `grad` call.
+    pub rows_per_call: usize,
+    /// Planned calls in canonical global order.
+    pub slots: Vec<MicroSlot>,
+}
+
+impl ShardPlan {
+    /// Plan an update over `m` kept rollouts: micro-batches of
+    /// `rows_per_call` rows split over `shards` devices.
+    pub fn new(m: usize, shards: usize, rows_per_call: usize) -> Self {
+        let rows_per_call = rows_per_call.max(1);
+        let n_calls = m.div_ceil(rows_per_call);
+        let shards = shards.max(1).min(n_calls.max(1));
+        let slots = (0..n_calls)
+            .map(|k| MicroSlot {
+                shard: k * shards / n_calls.max(1),
+                start: k * rows_per_call,
+                end: ((k + 1) * rows_per_call).min(m),
+            })
+            .collect();
+        Self { shards, rows_per_call, slots }
+    }
+
+    /// Micro-steps the busiest shard runs (the sequential depth of the
+    /// update phase).
+    pub fn max_steps_per_shard(&self) -> usize {
+        let mut counts = vec![0usize; self.shards];
+        for s in &self.slots {
+            counts[s.shard] += 1;
+        }
+        counts.into_iter().max().unwrap_or(0)
+    }
+}
 
 /// Summary of one update phase.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct UpdateOut {
+    /// Mean micro-batch loss weighted by real rows.
     pub loss: f32,
+    /// Mean clipped-ratio fraction weighted by real rows.
     pub clip_frac: f32,
+    /// Mean KL-to-reference weighted by real rows.
     pub kl: f32,
+    /// Physical `grad` calls executed.
     pub micro_steps: usize,
+    /// Rollouts the optimizer step trained on.
     pub rollouts_trained: usize,
-    /// Simulated phase time (zero when nothing was selected).
+    /// Simulated device shards the phase ran on (`[update] shards`; all
+    /// of them join the collective even when selection kept fewer rows).
+    pub shards: usize,
+    /// Simulated phase time (zero when nothing was selected):
+    /// `max(compute_shard) + allreduce + optimizer`.
     pub sim_update: f64,
+    /// Ring all-reduce portion of `sim_update` (zero for one shard).
+    pub sim_comm: f64,
+    /// Peak rollouts resident per shard in one micro-step (the memory
+    /// axis the paper's Fig. 1 ceiling is denominated in).
+    pub peak_mem_rollouts: usize,
 }
 
-/// Micro-batch packer + gradient-accumulation engine.
+/// Micro-batch packer + sharded gradient-accumulation engine.
+///
+/// Owns the [`GradAccumulator`] buffer across iterations
+/// (allocation-free after the first).
 pub struct UpdateEngine {
     accum: GradAccumulator,
 }
@@ -41,7 +141,10 @@ impl UpdateEngine {
     }
 
     /// Run one full update phase over `selected` and apply the optimizer.
-    #[allow(clippy::too_many_arguments)]
+    /// `cfg` supplies the topology (`[update]`), the loss knobs
+    /// (`[algo] kl_coef`, `lr`) and the cost model (`[hwsim]`); the hwsim
+    /// charge is computed here so every caller — sync or pipelined —
+    /// prices the phase identically.
     pub fn run(
         &mut self,
         engine: &Engine,
@@ -49,18 +152,23 @@ impl UpdateEngine {
         base: Option<&[f32]>,
         groups: &[PromptGroup],
         selected: &[SelectedRollout],
-        kl_coef: f32,
-        lr: f32,
-        hw: &HwModel,
+        cfg: &RunConfig,
     ) -> Result<UpdateOut> {
         let bu = engine.meta.config.update_batch;
         let g = engine.meta.gen_len;
         let t = engine.meta.config.seq_len;
+        let kl_coef = cfg.algo.kl_coef as f32;
+        let rows_per_call = cfg.update.rows_per_call(bu)?;
+        let plan = ShardPlan::new(selected.len(), cfg.update.shards, rows_per_call);
         self.accum.reset();
         let mut loss_sum = 0f64;
         let mut clip_sum = 0f64;
         let mut kl_sum = 0f64;
-        for chunk in selected.chunks(bu) {
+        // Canonical global micro-batch order: the slot sequence is
+        // shard-agnostic, so the f32 accumulation below never depends on
+        // the simulated topology (the shard-invariance contract).
+        for slot in &plan.slots {
+            let chunk = &selected[slot.start..slot.end];
             let mut tokens = vec![crate::tasks::tokenizer::PAD; bu * t];
             let mut pads = vec![0i32; bu];
             let mut gen_mask = vec![0.0f32; bu * g];
@@ -94,14 +202,18 @@ impl UpdateEngine {
         let rollouts_trained = selected.len();
         // an iteration whose selection dropped every group (all groups
         // zero-signal) performs no update and must not be charged for one
-        let sim_update = if rollouts_trained > 0 {
-            hw.update_time(rollouts_trained, engine.meta.is_lora())
-        } else {
-            0.0
-        };
+        // micro_batch passes through as configured: 0 lets the cost model
+        // fall back to the simulated memory ceiling (the toy artifact's
+        // B_u is an AOT-shape limitation, not simulated hardware)
+        let cost = cfg.hwsim.update_cost(
+            rollouts_trained,
+            cfg.update.shards,
+            cfg.update.micro_batch,
+            engine.meta.is_lora(),
+        );
         if rollouts_trained > 0 {
             let grads = self.accum.mean(rollouts_trained);
-            engine.update(store, &grads, lr)?;
+            engine.update(store, &grads, cfg.algo.lr as f32)?;
         }
         Ok(UpdateOut {
             loss: (loss_sum / rollouts_trained.max(1) as f64) as f32,
@@ -109,7 +221,130 @@ impl UpdateEngine {
             kl: (kl_sum / rollouts_trained.max(1) as f64) as f32,
             micro_steps,
             rollouts_trained,
-            sim_update,
+            shards: cfg.update.shards,
+            sim_update: cost.total,
+            sim_comm: cost.comm,
+            peak_mem_rollouts: cost.peak_mem_rollouts,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_cases, vec_f32};
+
+    /// Simulated `grad` device: the fixed-shape program computes the mean
+    /// over its `bu` slots in f32 (padded slots are exact zeros), exactly
+    /// like the AOT artifact's batch-mean reduction shape.
+    fn device_grad(rows: &[&[f32]], width: usize, bu: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; width];
+        for r in rows {
+            for (o, v) in out.iter_mut().zip(*r) {
+                *o += v;
+            }
+        }
+        for o in out.iter_mut() {
+            *o /= bu as f32;
+        }
+        out
+    }
+
+    /// Drive a [`ShardPlan`] through the accumulator the way
+    /// [`UpdateEngine::run`] does, over synthetic per-row gradients.
+    fn run_plan(plan: &ShardPlan, rows: &[Vec<f32>], width: usize, bu: usize) -> Vec<f32> {
+        let mut acc = GradAccumulator::new(width);
+        for slot in &plan.slots {
+            let chunk: Vec<&[f32]> =
+                rows[slot.start..slot.end].iter().map(|r| r.as_slice()).collect();
+            let g = device_grad(&chunk, width, bu);
+            acc.add(&g, bu as f64);
+        }
+        acc.mean(rows.len())
+    }
+
+    /// The plan covers the selected list contiguously in order, shard ids
+    /// are non-decreasing, balanced, and never exceed the micro-batch
+    /// count.
+    #[test]
+    fn shard_plan_partitions_contiguously_and_balanced() {
+        for_cases(300, |rng| {
+            let m = rng.gen_range_inclusive(1, 97) as usize;
+            let shards = rng.gen_range_inclusive(1, 12) as usize;
+            let rpc = rng.gen_range_inclusive(1, 16) as usize;
+            let plan = ShardPlan::new(m, shards, rpc);
+            assert_eq!(plan.slots.len(), m.div_ceil(rpc));
+            assert!(plan.shards <= shards && plan.shards <= plan.slots.len());
+            let mut next = 0usize;
+            let mut last_shard = 0usize;
+            let mut counts = vec![0usize; plan.shards];
+            for s in &plan.slots {
+                assert_eq!(s.start, next, "gap in the packing");
+                assert!(s.end > s.start && s.end - s.start <= rpc);
+                assert!(s.shard >= last_shard, "shard ids must be non-decreasing");
+                assert!(s.shard < plan.shards);
+                counts[s.shard] += 1;
+                last_shard = s.shard;
+                next = s.end;
+            }
+            assert_eq!(next, m, "plan must cover every kept rollout");
+            let (lo, hi) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced shard loads {counts:?}");
+            assert_eq!(plan.max_steps_per_shard(), *hi);
+        });
+    }
+
+    /// Satellite proptest: across random (shards, micro_batch, m)
+    /// factorizations the sharded accumulation is **bit-identical** to the
+    /// monolithic (shards = 1) update — the shard topology never touches
+    /// the numeric path.
+    #[test]
+    fn sharded_accumulation_is_bit_identical_to_monolithic() {
+        for_cases(200, |rng| {
+            let width = 6;
+            let bu = 8usize;
+            let m = rng.gen_range_inclusive(1, 64) as usize;
+            let shards = rng.gen_range_inclusive(2, 10) as usize;
+            let micro_batch = rng.gen_range_inclusive(1, bu as i64) as usize;
+            let rows: Vec<Vec<f32>> = (0..m).map(|_| vec_f32(rng, width, -3.0, 3.0)).collect();
+            let mono = run_plan(&ShardPlan::new(m, 1, micro_batch), &rows, width, bu);
+            let shard = run_plan(&ShardPlan::new(m, shards, micro_batch), &rows, width, bu);
+            // bitwise, not approximate: the planned call ranges (and hence
+            // every f32 rounding step) must be independent of the shard
+            // count
+            assert_eq!(mono, shard, "m={m} shards={shards} micro_batch={micro_batch}");
+        });
+    }
+
+    /// With the default micro-batch (the full `B_u`) the plan replays the
+    /// legacy single-shot engine's `chunks(B_u)` packing bit-for-bit —
+    /// the golden bridge back to the pre-sharding trainer.
+    #[test]
+    fn default_micro_batch_replays_legacy_chunks_packing() {
+        for_cases(200, |rng| {
+            let width = 5;
+            let bu = 8usize;
+            let m = rng.gen_range_inclusive(1, 50) as usize;
+            let shards = rng.gen_range_inclusive(1, 6) as usize;
+            let rows: Vec<Vec<f32>> = (0..m).map(|_| vec_f32(rng, width, -2.0, 2.0)).collect();
+            // the legacy reference: selected.chunks(bu) + weighted accum
+            let mut acc = GradAccumulator::new(width);
+            for chunk in rows.chunks(bu) {
+                let refs: Vec<&[f32]> = chunk.iter().map(|r| r.as_slice()).collect();
+                acc.add(&device_grad(&refs, width, bu), bu as f64);
+            }
+            let legacy = acc.mean(m);
+            let plan = ShardPlan::new(m, shards, bu);
+            assert_eq!(run_plan(&plan, &rows, width, bu), legacy);
+            // and the plan's physical call count matches the legacy loop
+            assert_eq!(plan.slots.len(), m.div_ceil(bu));
+        });
+    }
+
+    #[test]
+    fn plan_for_empty_selection_is_empty() {
+        let plan = ShardPlan::new(0, 4, 8);
+        assert!(plan.slots.is_empty());
+        assert_eq!(plan.max_steps_per_shard(), 0);
     }
 }

@@ -21,6 +21,7 @@ use anyhow::Result;
 pub struct RolloutRecord {
     /// Full token row [T] (left-padded prompt + generation).
     pub tokens: Vec<i32>,
+    /// Left-padding length of the prompt region.
     pub pad_len: i32,
     /// [G] 1.0 through EOS.
     pub gen_mask: Vec<f32>,
@@ -28,15 +29,20 @@ pub struct RolloutRecord {
     pub old_lp: Vec<f32>,
     /// [G] reference-policy log-probs (zeros when KL is off).
     pub ref_lp: Vec<f32>,
+    /// Generated tokens incl. EOS.
     pub gen_len: i32,
+    /// Per-component reward breakdown.
     pub reward: RewardBreakdown,
+    /// Weighted total reward.
     pub total_reward: f32,
 }
 
 /// All rollouts generated for one prompt in one iteration.
 #[derive(Debug, Clone)]
 pub struct PromptGroup {
+    /// The prompt every rollout in the group answered.
     pub problem: Problem,
+    /// The group's `n` rollouts, in rollout-index order.
     pub rollouts: Vec<RolloutRecord>,
 }
 
@@ -63,10 +69,12 @@ impl PromptGroup {
         PromptGroup { problem, rollouts }
     }
 
+    /// Total rewards, one per rollout.
     pub fn rewards(&self) -> Vec<f32> {
         self.rollouts.iter().map(|r| r.total_reward).collect()
     }
 
+    /// Mean total reward (0 for an empty group).
     pub fn mean_reward(&self) -> f32 {
         if self.rollouts.is_empty() {
             return 0.0;
@@ -74,6 +82,7 @@ impl PromptGroup {
         self.rewards().iter().sum::<f32>() / self.rollouts.len() as f32
     }
 
+    /// Mean accuracy component (0 for an empty group).
     pub fn mean_accuracy(&self) -> f32 {
         if self.rollouts.is_empty() {
             return 0.0;
@@ -81,6 +90,7 @@ impl PromptGroup {
         self.rollouts.iter().map(|r| r.reward.accuracy).sum::<f32>() / self.rollouts.len() as f32
     }
 
+    /// Mean generated length (0 for an empty group).
     pub fn mean_gen_len(&self) -> f32 {
         if self.rollouts.is_empty() {
             return 0.0;
@@ -93,8 +103,11 @@ impl PromptGroup {
 /// micro-batcher packs into `grad` calls.
 #[derive(Debug, Clone)]
 pub struct SelectedRollout {
+    /// Index of the rollout's group in the iteration's batch.
     pub group_idx: usize,
+    /// Index of the rollout within its group.
     pub rollout_idx: usize,
+    /// Normalized advantage (see `coordinator::advantage`).
     pub advantage: f32,
 }
 

@@ -39,20 +39,37 @@ use std::time::Instant;
 /// Per-iteration summary returned by [`Trainer::train_iteration`].
 #[derive(Debug, Clone, Copy, Default)]
 pub struct IterStats {
+    /// Mean total reward over all generated rollouts.
     pub train_reward: f32,
+    /// Mean accuracy-component over all generated rollouts.
     pub train_acc: f32,
+    /// Mean generated length (tokens incl. EOS).
     pub completion_len: f32,
+    /// Mean update loss over trained rollouts.
     pub loss: f32,
+    /// Mean clipped-ratio fraction over trained rollouts.
     pub clip_frac: f32,
+    /// Mean KL-to-reference over trained rollouts.
     pub kl: f32,
+    /// Physical `grad` calls the update executed.
     pub micro_steps: usize,
+    /// Rollouts generated this iteration.
     pub rollouts_generated: usize,
+    /// Rollouts the update trained on (after selection).
     pub rollouts_trained: usize,
+    /// Simulated device shards the update was split over.
+    pub upd_shards: usize,
+    /// Ring all-reduce portion of `sim_update` (0 for one shard).
+    pub upd_comm_time: f64,
+    /// Peak rollouts resident per shard in one update micro-step.
+    pub upd_peak_mem: usize,
     /// Decode-step slots the chunked driver physically executed.
     pub gen_tokens_decoded: usize,
     /// Decoded slots that produced no trainable token.
     pub gen_tokens_wasted: usize,
+    /// Simulated cost of the inference phase.
     pub sim_inference: f64,
+    /// Simulated cost of the update phase (incl. communication).
     pub sim_update: f64,
     /// What the simulated clock actually advanced during this step (less
     /// than `sim_inference + sim_update` when phases overlapped).
@@ -64,7 +81,9 @@ pub struct IterStats {
 
 /// The leader: owns engine, parameters, clock, metrics and the RL loop.
 pub struct Trainer {
+    /// The PJRT engine for the run's artifact profile.
     pub engine: Engine,
+    /// The run's validated configuration.
     pub cfg: RunConfig,
     /// Optimized vector (full params, or LoRA adapters in LoRA profiles).
     pub store: ParamStore,
@@ -73,9 +92,13 @@ pub struct Trainer {
     /// Reference-policy snapshot for the KL term (when kl_coef > 0).
     /// Arc-shared: generation snapshots clone the handle, not the vector.
     pub ref_params: Option<std::sync::Arc<Vec<f32>>>,
+    /// Reference-policy adapter snapshot (LoRA profiles with KL).
     pub ref_lora: Option<std::sync::Arc<Vec<f32>>>,
+    /// The run's simulated wall clock.
     pub clock: SimClock,
+    /// Per-iteration and per-eval telemetry, flushed to CSVs at the end.
     pub recorder: Recorder,
+    /// Task family generating prompts and verifying answers.
     pub task: TaskKind,
     /// Additional evaluation tracks run at every eval point — (task, split,
     /// label). Used by the Fig. 7 generalization study (platinum /
@@ -98,6 +121,10 @@ impl Trainer {
     pub fn new(artifacts_dir: &std::path::Path, cfg: RunConfig) -> Result<Self> {
         let engine = Engine::load(artifacts_dir, &cfg.run.profile)?;
         crate::tasks::tokenizer::verify_against_meta(&engine.meta.vocab)?;
+        // config validation that needs the artifact profile: reject
+        // update.micro_batch > B_u here, before any SFT/rollout work runs,
+        // instead of erroring mid-iteration in the update phase
+        cfg.update.rows_per_call(engine.meta.config.update_batch)?;
         let task = cfg.task_kind();
 
         let (store, base) = if engine.meta.is_lora() {
@@ -273,6 +300,9 @@ impl Trainer {
             micro_steps: r.micro_steps,
             rollouts_generated: r.rollouts_generated,
             rollouts_trained: r.rollouts_trained,
+            upd_shards: r.upd_shards,
+            upd_comm_time: r.upd_comm_time,
+            upd_peak_mem: r.upd_peak_mem,
             gen_tokens_decoded: r.gen_tokens_decoded,
             gen_tokens_wasted: r.gen_tokens_wasted,
             sim_inference: r.sim_inference,
@@ -304,6 +334,9 @@ impl Trainer {
             schedule: self.cfg.hwsim.schedule.name().to_string(),
             gen_tokens_decoded: r.gen_tokens_decoded,
             gen_tokens_wasted: r.gen_tokens_wasted,
+            upd_shards: r.upd_shards,
+            upd_comm_time: r.upd_comm_time,
+            upd_peak_mem: r.upd_peak_mem,
         });
         Ok(stats)
     }

@@ -32,6 +32,8 @@ pub struct DropZeroVariance {
     pub eps: f64,
 }
 
+/// Default `eps` of [`DropZeroVariance`] (matches the advantage-kernel
+/// sigma floor).
 pub const DEFAULT_ZERO_VARIANCE_EPS: f64 = 1e-6;
 
 impl Selector for DropZeroVariance {
@@ -51,6 +53,7 @@ impl Selector for DropZeroVariance {
     }
 }
 
+/// Registry factory for `drop_zero_variance(eps=..)`.
 pub fn drop_zero_variance_factory(args: &SpecArgs) -> Result<Box<dyn Selector>> {
     args.expect_known(&["eps"])?;
     let eps = args.f64("eps")?.unwrap_or(DEFAULT_ZERO_VARIANCE_EPS);
@@ -78,11 +81,15 @@ pub fn drop_zero_variance_factory(args: &SpecArgs) -> Result<Box<dyn Selector>> 
 /// the update, not silently drop prompts.
 #[derive(Debug, Clone, Copy)]
 pub struct Prune {
+    /// Absolute generated-length cap.
     pub max_tokens: Option<usize>,
+    /// Nearest-rank length-quantile cap (`0 < Q <= 1`).
     pub quantile: Option<f64>,
+    /// Total generated-token budget, admitted shortest-first.
     pub budget: Option<usize>,
 }
 
+/// Default quantile when `prune` is given no arguments.
 pub const DEFAULT_PRUNE_QUANTILE: f64 = 0.75;
 
 impl Selector for Prune {
@@ -133,6 +140,7 @@ impl Selector for Prune {
     }
 }
 
+/// Registry factory for `prune(max_tokens=.., quantile=.., budget=..)`.
 pub fn prune_factory(args: &SpecArgs) -> Result<Box<dyn Selector>> {
     args.expect_known(&["max_tokens", "quantile", "budget"])?;
     let max_tokens = args.usize("max_tokens")?;

@@ -62,6 +62,7 @@ pub struct SelectionContext<'a> {
 }
 
 impl<'a> SelectionContext<'a> {
+    /// Context for the first stage of a pipeline over `group`.
     pub fn new(group: &'a PromptGroup, m: usize, run_seed: u64, iter: u64) -> Self {
         Self { group, m, run_seed, iter, stage: 0 }
     }
@@ -194,6 +195,7 @@ pub struct Selection {
     /// selector-defined (e.g. `max_variance` returns the low block then
     /// the high block); empty means the group is dropped from the update.
     pub kept: Vec<usize>,
+    /// Diagnostics of this selection.
     pub diag: SelectionDiag,
 }
 

@@ -37,6 +37,7 @@ pub struct SpecArgs {
 }
 
 impl SpecArgs {
+    /// Args for `stage` (factories receive these at pipeline parse).
     pub fn new(stage: impl Into<String>, args: Vec<(String, String)>) -> Self {
         Self { stage: stage.into(), args }
     }
@@ -46,10 +47,12 @@ impl SpecArgs {
         &self.stage
     }
 
+    /// Raw value of `key`, if provided.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.args.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
 
+    /// Typed accessor: `key` as f64 (None when absent, Err on non-number).
     pub fn f64(&self, key: &str) -> Result<Option<f64>> {
         match self.get(key) {
             None => Ok(None),
@@ -60,6 +63,7 @@ impl SpecArgs {
         }
     }
 
+    /// Typed accessor: `key` as usize (None when absent, Err otherwise).
     pub fn usize(&self, key: &str) -> Result<Option<usize>> {
         match self.get(key) {
             None => Ok(None),

@@ -19,10 +19,12 @@
 /// A leader's view of `w` logical workers.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerPool {
+    /// Logical worker count (>= 1).
     pub workers: usize,
 }
 
 impl WorkerPool {
+    /// A pool of `workers` logical workers. Panics on 0.
     pub fn new(workers: usize) -> Self {
         assert!(workers >= 1);
         Self { workers }

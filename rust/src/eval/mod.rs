@@ -19,10 +19,15 @@ use anyhow::Result;
 /// Aggregate evaluation result.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EvalStats {
+    /// Exact-answer accuracy over the evaluated problems.
     pub accuracy: f32,
+    /// Fraction of completions with well-formed answer tags.
     pub format_rate: f32,
+    /// Mean total reward.
     pub mean_reward: f32,
+    /// Mean generated length (tokens incl. EOS).
     pub mean_len: f32,
+    /// Number of problems evaluated.
     pub problems: usize,
     /// Decode-step slots physically executed (early exit makes this track
     /// actual generated tokens, not problems × G).

@@ -65,6 +65,8 @@ impl CsvRow for Fig1Probe {
     }
 }
 
+/// Run the Fig. 1 cost-model study; `probe` additionally times the real
+/// artifacts for calibration.
 pub fn run(artifacts: &Path, out_dir: &str, probe: bool) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let hw = HwModel::default();

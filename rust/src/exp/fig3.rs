@@ -22,18 +22,29 @@ use std::path::Path;
 
 /// (kind, n, m, task, profile, kl, lr, seed, workers)
 pub struct Setting {
+    /// Setting letter (a-f).
     pub id: &'static str,
+    /// Task family.
     pub task: &'static str,
+    /// LoRA profile (vs full-parameter base).
     pub lora: bool,
+    /// Rollouts generated per prompt.
     pub n: usize,
+    /// PODS update size.
     pub m: usize,
+    /// KL coefficient.
     pub kl: f64,
+    /// Learning rate.
     pub lr: f64,
+    /// Run seed.
     pub seed: u64,
+    /// Simulated accelerators.
     pub workers: usize,
+    /// Iterations at full scale.
     pub iters_full: usize,
 }
 
+/// The six reproduction-scale Table 1 settings.
 pub fn settings() -> Vec<Setting> {
     vec![
         Setting { id: "a", task: "arith", lora: true, n: 64, m: 16, kl: 0.0, lr: 3e-3, seed: 0, workers: 1, iters_full: 48 },
@@ -45,6 +56,7 @@ pub fn settings() -> Vec<Setting> {
     ]
 }
 
+/// SFT warm-up steps shared by every setting's base checkpoint.
 pub const SFT_STEPS: usize = 1200;
 
 fn builder_for(s: &Setting, scale: Scale, out_dir: &str, base_ckpt: &str) -> CfgBuilder {
@@ -125,6 +137,7 @@ pub fn run_setting(artifacts: &Path, id: &str, scale: Scale, out_dir: &str) -> R
     Ok(())
 }
 
+/// Run every setting (the full Fig. 3 grid).
 pub fn run_all(artifacts: &Path, scale: Scale, out_dir: &str) -> Result<()> {
     for s in settings() {
         run_setting(artifacts, s.id, scale, out_dir)?;

@@ -24,6 +24,7 @@ impl CsvRow for NormRow {
     }
 }
 
+/// Run the study end-to-end and write its CSV + ASCII preview.
 pub fn run(artifacts: &Path, scale: Scale, out_dir: &str) -> Result<()> {
     let base_ckpt =
         super::ensure_base_checkpoint(artifacts, "arith", super::fig3::SFT_STEPS, out_dir)?;

@@ -20,6 +20,7 @@ fn with_tracks(artifacts: &Path, cfg: crate::config::RunConfig) -> Result<Traine
     Ok(tr)
 }
 
+/// Run the study end-to-end and write its CSV + ASCII preview.
 pub fn run(artifacts: &Path, scale: Scale, out_dir: &str) -> Result<()> {
     let base_ckpt =
         super::ensure_base_checkpoint(artifacts, "arith", super::fig3::SFT_STEPS, out_dir)?;

@@ -12,9 +12,12 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod sched;
+pub mod shard;
 pub mod table3;
 
-use crate::config::{AlgoSection, RolloutSection, RunConfig, RunSection, SftSection};
+use crate::config::{
+    AlgoSection, RolloutSection, RunConfig, RunSection, SftSection, UpdateSection,
+};
 use crate::hwsim::HwModel;
 use anyhow::Result;
 use std::path::Path;
@@ -23,11 +26,14 @@ use std::path::Path;
 /// for smoke runs; `full` is the EXPERIMENTS.md configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {
+    /// Smoke-run scale (~8x fewer iterations).
     Quick,
+    /// The EXPERIMENTS.md configuration.
     Full,
 }
 
 impl Scale {
+    /// Scale an iteration count.
     pub fn iters(self, full: usize) -> usize {
         match self {
             Scale::Quick => (full / 8).max(3),
@@ -35,6 +41,7 @@ impl Scale {
         }
     }
 
+    /// Scale an eval problem count.
     pub fn eval_problems(self, full: usize) -> usize {
         match self {
             Scale::Quick => (full / 2).max(16),
@@ -44,27 +51,48 @@ impl Scale {
 }
 
 /// Programmatic [`RunConfig`] builder used by every experiment driver.
+/// Fields mirror the TOML keys of the same names (see `docs/CONFIG.md`).
 #[derive(Debug, Clone)]
 pub struct CfgBuilder {
+    /// `run.name`.
     pub name: String,
+    /// `run.profile`.
     pub profile: String,
+    /// `run.task`.
     pub task: String,
+    /// `run.seed`.
     pub seed: u64,
+    /// `run.iterations`.
     pub iterations: usize,
+    /// `run.prompts_per_iter`.
     pub prompts_per_iter: usize,
+    /// `run.eval_every`.
     pub eval_every: usize,
+    /// `run.eval_problems`.
     pub eval_problems: usize,
+    /// `run.out_dir`.
     pub out_dir: String,
+    /// `run.base_checkpoint`.
     pub base_checkpoint: Option<String>,
+    /// `run.save_checkpoint`.
     pub save_checkpoint: Option<String>,
+    /// `algo.kind`.
     pub kind: String,
+    /// `algo.n`.
     pub n: usize,
+    /// `algo.m`.
     pub m: Option<usize>,
+    /// `algo.rule` (selection pipeline spec).
     pub rule: String,
+    /// `algo.adv_norm`.
     pub adv_norm: String,
+    /// `algo.kl_coef`.
     pub kl_coef: f64,
+    /// `algo.lr`.
     pub lr: f64,
+    /// `algo.temperature`.
     pub temperature: f64,
+    /// `hwsim.workers`.
     pub workers: usize,
     /// Override the hwsim per-device memory ceiling (None = default 32).
     pub mem_capacity: Option<usize>,
@@ -74,8 +102,15 @@ pub struct CfgBuilder {
     pub decode_chunk: usize,
     /// Slot-refill policy: "continuous" | "batch" (rollout.refill).
     pub refill: String,
+    /// Simulated update shards (update.shards).
+    pub upd_shards: usize,
+    /// Rows per update micro-batch, 0 = profile B_u (update.micro_batch).
+    pub upd_micro_batch: usize,
+    /// `sft.steps` (0 = no SFT warm-up section).
     pub sft_steps: usize,
+    /// `sft.lr`.
     pub sft_lr: f64,
+    /// `sft.pool`.
     pub sft_pool: usize,
 }
 
@@ -106,6 +141,8 @@ impl Default for CfgBuilder {
             schedule: "sync".into(),
             decode_chunk: RolloutSection::default().decode_chunk,
             refill: "continuous".into(),
+            upd_shards: UpdateSection::default().shards,
+            upd_micro_batch: UpdateSection::default().micro_batch,
             sft_steps: 0,
             sft_lr: 2e-3,
             sft_pool: 512,
@@ -114,6 +151,7 @@ impl Default for CfgBuilder {
 }
 
 impl CfgBuilder {
+    /// Assemble and validate the [`RunConfig`].
     pub fn build(&self) -> Result<RunConfig> {
         let cfg = RunConfig {
             run: RunSection {
@@ -149,6 +187,7 @@ impl CfgBuilder {
                 decode_chunk: self.decode_chunk,
                 refill: crate::rollout::RefillMode::parse(&self.refill)?,
             },
+            update: UpdateSection { shards: self.upd_shards, micro_batch: self.upd_micro_batch },
             sft: if self.sft_steps > 0 {
                 Some(SftSection {
                     steps: self.sft_steps,

@@ -44,6 +44,7 @@ impl CsvRow for SchedRow {
     }
 }
 
+/// Run both schedule arms and write `sched.csv` + the ASCII preview.
 pub fn run(artifacts: &Path, scale: Scale, out_dir: &str) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
     let iters = scale.iters(24);

@@ -1,0 +1,183 @@
+//! Shard study — the compute/communication trade-off of the sharded
+//! update engine across `shards × m`.
+//!
+//! Not a paper figure: this driver maps the PODS n→m down-sampling claim
+//! onto the update-cost axis the `[update]` section exposes. For every
+//! (shards, m) cell it prices one update phase with
+//! [`HwModel::update_cost`] — sequential micro-steps on the busiest
+//! shard, one ring all-reduce over the simulated gradient bytes, one
+//! optimizer apply — entirely from the cost model, so it runs without
+//! artifacts.
+//!
+//! Two shapes must reproduce (asserted by this module's tests):
+//!
+//! * at fixed shards, simulated update time **strictly decreases** as
+//!   selection keeps fewer rollouts (the paper's reason to down-sample);
+//! * at fixed m, the communication term **strictly grows** with the
+//!   shard count (the reason sharding saturates: `2(S-1)/S` volume plus
+//!   per-hop latency).
+
+use crate::hwsim::HwModel;
+use crate::metrics::{ascii_plot, write_csv_rows, CsvRow};
+use anyhow::Result;
+use std::path::Path;
+
+/// Rollouts generated per prompt in the study (the paper's default n).
+const N_FULL: usize = 64;
+/// Update sizes swept, descending — n (GRPO-GA) down to aggressive PODS.
+const M_SWEEP: [usize; 5] = [64, 48, 32, 16, 8];
+/// Shard counts swept (1 = the monolithic single-device update).
+const SHARD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+/// Rows per update micro-batch used for every cell.
+const MICRO_BATCH: usize = 8;
+
+/// One (shards, m) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct ShardRow {
+    /// Simulated data-parallel shard count.
+    pub shards: usize,
+    /// Rollouts the update trains on.
+    pub m: usize,
+    /// Rows per micro-batch.
+    pub micro_batch: usize,
+    /// Micro-steps on the busiest shard.
+    pub steps: usize,
+    /// Sequential compute on the busiest shard (sim seconds).
+    pub upd_compute: f64,
+    /// Ring all-reduce time (sim seconds).
+    pub upd_comm: f64,
+    /// Total phase time incl. optimizer apply (sim seconds).
+    pub upd_total: f64,
+    /// Peak rollouts resident per shard in one micro-step.
+    pub upd_peak_mem: usize,
+}
+
+impl CsvRow for ShardRow {
+    fn csv_header() -> &'static str {
+        "shards,m,micro_batch,steps,upd_compute,upd_comm,upd_total,upd_peak_mem"
+    }
+
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{}",
+            self.shards,
+            self.m,
+            self.micro_batch,
+            self.steps,
+            self.upd_compute,
+            self.upd_comm,
+            self.upd_total,
+            self.upd_peak_mem
+        )
+    }
+}
+
+/// Build the sweep grid from a cost model (row-major: shards, then m
+/// descending).
+pub fn sweep(hw: &HwModel) -> Vec<ShardRow> {
+    let mut rows = Vec::with_capacity(SHARD_SWEEP.len() * M_SWEEP.len());
+    for &shards in &SHARD_SWEEP {
+        for &m in &M_SWEEP {
+            let c = hw.update_cost(m, shards, MICRO_BATCH, false);
+            rows.push(ShardRow {
+                shards,
+                m,
+                micro_batch: MICRO_BATCH,
+                steps: c.steps,
+                upd_compute: c.compute,
+                upd_comm: c.comm,
+                upd_total: c.total,
+                upd_peak_mem: c.peak_mem_rollouts,
+            });
+        }
+    }
+    rows
+}
+
+/// Run the study: write `<out_dir>/shard.csv` and print the trade-off
+/// curves (update time vs m, one curve per shard count).
+pub fn run(out_dir: &str) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let hw = HwModel::default();
+    let rows = sweep(&hw);
+    write_csv_rows(Path::new(&format!("{out_dir}/shard.csv")), &rows)?;
+
+    let curves: Vec<(String, Vec<(f64, f64)>)> = SHARD_SWEEP
+        .iter()
+        .map(|&s| {
+            let pts: Vec<(f64, f64)> = rows
+                .iter()
+                .filter(|r| r.shards == s)
+                .map(|r| (r.m as f64, r.upd_total))
+                .collect();
+            (format!("S={s}"), pts)
+        })
+        .collect();
+    let series: Vec<(&str, &[(f64, f64)])> =
+        curves.iter().map(|(n, p)| (n.as_str(), p.as_slice())).collect();
+    println!(
+        "Shard study: simulated update time vs kept rollouts m \
+         (n = {N_FULL}, micro_batch = {MICRO_BATCH})"
+    );
+    println!("{}", ascii_plot(&series, 64, 14));
+    for &s in &SHARD_SWEEP {
+        let at =
+            |m: usize| rows.iter().find(|r| r.shards == s && r.m == m).expect("swept").upd_total;
+        println!(
+            "  S={s}: GA m={N_FULL} {:>6.2}s | PODS m=16 {:>6.2}s ({:.2}x) | comm {:>6.3}s",
+            at(N_FULL),
+            at(16),
+            at(N_FULL) / at(16).max(1e-9),
+            rows.iter().find(|r| r.shards == s && r.m == 16).expect("swept").upd_comm,
+        );
+    }
+    println!(
+        "  (communication grows with shards while compute shrinks — the \
+         crossover is why data-parallel updates saturate)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Acceptance: simulated update time strictly decreases in m at fixed
+    /// shards, and communication time strictly grows with shards.
+    #[test]
+    fn sweep_shapes_match_the_papers_claims() {
+        let rows = sweep(&HwModel::default());
+        assert_eq!(rows.len(), SHARD_SWEEP.len() * M_SWEEP.len());
+        for &s in &SHARD_SWEEP {
+            let totals: Vec<f64> = rows.iter().filter(|r| r.shards == s).map(|r| r.upd_total).collect();
+            // M_SWEEP is descending, so totals must strictly descend too
+            for w in totals.windows(2) {
+                assert!(
+                    w[1] < w[0],
+                    "update time not strictly decreasing in m at shards={s}: {totals:?}"
+                );
+            }
+        }
+        for &m in &M_SWEEP {
+            let comms: Vec<f64> = rows.iter().filter(|r| r.m == m).map(|r| r.upd_comm).collect();
+            for w in comms.windows(2) {
+                assert!(w[1] > w[0], "comm not strictly growing with shards at m={m}: {comms:?}");
+            }
+        }
+        // the peak-memory column reports the micro-batch (capped by rows)
+        for r in &rows {
+            assert!(r.upd_peak_mem <= MICRO_BATCH);
+            assert!(r.upd_peak_mem >= 1);
+        }
+    }
+
+    /// The CSV schema round-trips with matching column counts.
+    #[test]
+    fn shard_row_csv_shape() {
+        let rows = sweep(&HwModel::default());
+        let header_cols = ShardRow::csv_header().split(',').count();
+        for r in &rows {
+            assert_eq!(r.csv_row().split(',').count(), header_cols);
+        }
+    }
+}

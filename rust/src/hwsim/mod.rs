@@ -42,6 +42,7 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// Parse a `[hwsim] schedule` value (`sync` | `pipelined`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "sync" => Ok(Self::Sync),
@@ -50,6 +51,7 @@ impl Schedule {
         }
     }
 
+    /// Canonical name used in configs, logs and the train CSV.
     pub fn name(self) -> &'static str {
         match self {
             Self::Sync => "sync",
@@ -87,6 +89,18 @@ pub struct HwModel {
     pub optimizer_time: f64,
     /// LoRA update discount: optimizer/comm touch only adapter weights.
     pub lora_update_scale: f64,
+    /// Bytes per gradient element on the wire (4 = f32 gradients; 2 would
+    /// model bf16 gradient compression).
+    pub bytes_per_param: f64,
+    /// Point-to-point interconnect bandwidth between update shards, in
+    /// gigabits per second (default shaped to NVLink-class links).
+    pub interconnect_gbps: f64,
+    /// Per-hop collective latency in seconds (ring step launch + sync).
+    pub comm_latency: f64,
+    /// Parameter count of the *simulated* policy (the cost model prices
+    /// Fig. 1's Qwen2.5-3B, not the toy artifact executed on CPU); sizes
+    /// the gradient all-reduce volume.
+    pub sim_model_params: f64,
     /// Executor schedule: `sync` (phases back-to-back) or `pipelined`
     /// (generation of t+1 overlaps the update of t).
     pub schedule: Schedule,
@@ -109,6 +123,10 @@ impl Default for HwModel {
             comm_base: 0.55,
             optimizer_time: 0.35,
             lora_update_scale: 0.25,
+            bytes_per_param: 4.0,
+            interconnect_gbps: 300.0,
+            comm_latency: 3e-5,
+            sim_model_params: 3e9,
             schedule: Schedule::Sync,
         }
     }
@@ -132,6 +150,10 @@ impl HwModel {
             comm_base: sec.f64_or("comm_base", d.comm_base)?,
             optimizer_time: sec.f64_or("optimizer_time", d.optimizer_time)?,
             lora_update_scale: sec.f64_or("lora_update_scale", d.lora_update_scale)?,
+            bytes_per_param: sec.f64_or("bytes_per_param", d.bytes_per_param)?,
+            interconnect_gbps: sec.f64_or("interconnect_gbps", d.interconnect_gbps)?,
+            comm_latency: sec.f64_or("comm_latency", d.comm_latency)?,
+            sim_model_params: sec.f64_or("sim_model_params", d.sim_model_params)?,
             schedule: Schedule::parse(&sec.str_or("schedule", d.schedule.name())?)?,
         };
         hw.validate()?;
@@ -170,10 +192,20 @@ impl HwModel {
             ("comm_base", self.comm_base),
             ("optimizer_time", self.optimizer_time),
             ("lora_update_scale", self.lora_update_scale),
+            ("bytes_per_param", self.bytes_per_param),
+            ("comm_latency", self.comm_latency),
+            ("sim_model_params", self.sim_model_params),
         ] {
             if v < 0.0 {
                 anyhow::bail!("hwsim.{name} must be non-negative (got {v})");
             }
+        }
+        if self.interconnect_gbps <= 0.0 {
+            anyhow::bail!(
+                "hwsim.interconnect_gbps must be positive (got {}): the ring \
+                 all-reduce divides by the interconnect bandwidth",
+                self.interconnect_gbps
+            );
         }
         Ok(())
     }
@@ -240,6 +272,91 @@ impl HwModel {
         steps as f64 * per_step + self.optimizer_time * state_scale
     }
 
+    /// Ring all-reduce time for `bytes` of gradient over `shards` devices:
+    /// `2(S-1)` ring steps, each paying the per-hop latency, each moving
+    /// `bytes / S` through the interconnect —
+    ///
+    /// ```text
+    ///   t = 2(S-1)·α + (2(S-1)/S) · bytes / BW
+    /// ```
+    ///
+    /// with `α = comm_latency` and `BW = interconnect_gbps / 8 · 1e9`
+    /// bytes/s. Zero for a single shard (nothing to reduce). Strictly
+    /// increasing in `shards`: both the latency term and the `2(S-1)/S`
+    /// volume factor grow with the ring size.
+    pub fn allreduce_time(&self, bytes: f64, shards: usize) -> f64 {
+        if shards <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let bw = self.interconnect_gbps * 1e9 / 8.0;
+        let hops = 2.0 * (shards as f64 - 1.0);
+        hops * self.comm_latency + (hops / shards as f64) * bytes / bw
+    }
+
+    /// Gradient bytes one update's all-reduce moves: the simulated model's
+    /// parameter count times the wire width, discounted to the adapter
+    /// fraction for LoRA runs (only adapter gradients travel).
+    pub fn grad_bytes(&self, lora: bool) -> f64 {
+        let scale = if lora { self.lora_update_scale } else { 1.0 };
+        self.sim_model_params * self.bytes_per_param * scale
+    }
+
+    /// Price one sharded update phase: `m` kept rollouts split over
+    /// `shards` data-parallel devices, each device running micro-batches
+    /// of `micro_batch` rows (0 = the memory ceiling, i.e. the largest
+    /// micro-batch that fits). The phase costs
+    ///
+    /// ```text
+    ///   total = max_shard(compute) + allreduce(grad_bytes, shards) + optimizer
+    /// ```
+    ///
+    /// — shards run their sequential micro-steps in parallel, gradients
+    /// all-reduce **once** per optimizer step (DDP `no_sync` accumulation
+    /// semantics), and the optimizer applies once. Compute per shard sums
+    /// per-micro-step costs (`microbatch_fixed` + fill-scaled
+    /// `microbatch_time`), so at fixed shards the busiest shard's cost is
+    /// strictly increasing in its row count.
+    pub fn update_cost(
+        &self,
+        m: usize,
+        shards: usize,
+        micro_batch: usize,
+        lora: bool,
+    ) -> UpdateCost {
+        if m == 0 {
+            return UpdateCost::default();
+        }
+        // every rank joins the collective even when m < shards leaves some
+        // ranks without rows (zero-gradient participants, as in real DDP)
+        let shards = shards.max(1);
+        // busiest shard: balanced contiguous split of the kept rollouts
+        let shard_rows = m.div_ceil(shards);
+        let cap = self.mem_capacity_rollouts.max(1);
+        let configured = if micro_batch == 0 { cap } else { micro_batch.min(cap) };
+        let rows_per_step = configured.min(shard_rows).max(1);
+        let steps = shard_rows.div_ceil(rows_per_step);
+        let full = shard_rows / rows_per_step;
+        let rem = shard_rows % rows_per_step;
+        let per_step = |rows: usize| {
+            self.microbatch_fixed + self.microbatch_time * (rows as f64 / cap as f64)
+        };
+        let mut compute = full as f64 * per_step(rows_per_step);
+        if rem > 0 {
+            compute += per_step(rem);
+        }
+        let comm = self.allreduce_time(self.grad_bytes(lora), shards);
+        let state_scale = if lora { self.lora_update_scale } else { 1.0 };
+        let optimizer = self.optimizer_time * state_scale;
+        UpdateCost {
+            compute,
+            comm,
+            optimizer,
+            total: compute + comm + optimizer,
+            steps,
+            peak_mem_rollouts: rows_per_step,
+        }
+    }
+
     /// Full-step time (the quantity Fig. 1 top panel plots).
     pub fn step_time(&self, n_rollouts: usize, avg_tokens: f64, m_update: usize, lora: bool) -> f64 {
         self.inference_time(n_rollouts, avg_tokens) + self.update_time(m_update, lora)
@@ -251,6 +368,28 @@ impl HwModel {
     pub fn overlapped_step_time(&self, inference: f64, update: f64) -> f64 {
         inference.max(update)
     }
+}
+
+/// Itemized cost of one sharded update phase (see
+/// [`HwModel::update_cost`]). All times in simulated seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct UpdateCost {
+    /// Sequential micro-step time on the busiest shard (shards run in
+    /// parallel; the slowest bounds the phase).
+    pub compute: f64,
+    /// Ring all-reduce over the gradient bytes, paid once per optimizer
+    /// step (`no_sync`-style accumulation between micro-steps).
+    pub comm: f64,
+    /// Optimizer apply (full-precision state streams).
+    pub optimizer: f64,
+    /// `compute + comm + optimizer`.
+    pub total: f64,
+    /// Micro-steps the busiest shard executes.
+    pub steps: usize,
+    /// Peak rollouts resident per shard in one micro-step — the unit the
+    /// paper's Fig. 1 memory ceiling (`mem_capacity_rollouts`) is
+    /// denominated in.
+    pub peak_mem_rollouts: usize,
 }
 
 /// Simulated wall clock with overlap accounting.
@@ -267,10 +406,12 @@ pub struct SimClock {
 }
 
 impl SimClock {
+    /// A clock at t = 0 with no overlap recorded.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Charge a phase that ran exclusively (no concurrent work).
     pub fn advance(&mut self, dt: f64) {
         debug_assert!(dt >= 0.0, "negative time step {dt}");
         self.now += dt;
@@ -288,6 +429,7 @@ impl SimClock {
         charged
     }
 
+    /// Current simulated time.
     pub fn now(&self) -> f64 {
         self.now
     }
@@ -407,6 +549,97 @@ mod tests {
         let pods = multi.update_time(128, false); // m=128 selected
         let ga = multi.update_time(512, false); // train on all 512
         assert!(ga > 2.0 * pods, "GA {ga:.2}s vs PODS {pods:.2}s");
+    }
+
+    /// Satellite: the ring all-reduce formula pinned against hand-computed
+    /// values — `2(S-1)·α + (2(S-1)/S)·bytes/BW` with BW in bytes/s.
+    #[test]
+    fn allreduce_time_matches_hand_computed_values() {
+        let hw = HwModel {
+            interconnect_gbps: 100.0, // -> 12.5e9 bytes/s
+            comm_latency: 1e-4,
+            ..Default::default()
+        };
+        let bytes = 1e9;
+        // S=1: nothing to reduce
+        assert_eq!(hw.allreduce_time(bytes, 1), 0.0);
+        // S=2: 2 hops -> 2e-4 latency; volume (2/2)·1e9/12.5e9 = 0.08
+        assert!((hw.allreduce_time(bytes, 2) - 0.0802).abs() < 1e-12);
+        // S=4: 6 hops -> 6e-4; volume (6/4)·0.08 = 0.12
+        assert!((hw.allreduce_time(bytes, 4) - 0.1206).abs() < 1e-12);
+        // S=8: 14 hops -> 1.4e-3; volume (14/8)·0.08 = 0.14
+        assert!((hw.allreduce_time(bytes, 8) - 0.1414).abs() < 1e-12);
+        // zero bytes costs nothing regardless of ring size
+        assert_eq!(hw.allreduce_time(0.0, 8), 0.0);
+        // strictly increasing in the ring size
+        for s in 2..16usize {
+            assert!(hw.allreduce_time(bytes, s + 1) > hw.allreduce_time(bytes, s));
+        }
+    }
+
+    #[test]
+    fn grad_bytes_scales_with_model_and_lora() {
+        let hw = HwModel::default();
+        assert_eq!(hw.grad_bytes(false), 3e9 * 4.0);
+        assert_eq!(hw.grad_bytes(true), 3e9 * 4.0 * 0.25);
+    }
+
+    /// The PODS update-cost axis: at fixed shards the phase is strictly
+    /// cheaper for smaller m, and the communication term strictly grows
+    /// with the shard count.
+    #[test]
+    fn update_cost_monotone_in_m_and_comm_grows_with_shards() {
+        let hw = HwModel::default();
+        for shards in [1usize, 2, 4, 8] {
+            let mut last = f64::INFINITY;
+            for m in [64usize, 48, 32, 16, 8] {
+                let c = hw.update_cost(m, shards, 8, false);
+                assert!(
+                    c.total < last,
+                    "update_cost not strictly decreasing: m={m} shards={shards} \
+                     total={} last={last}",
+                    c.total
+                );
+                assert!((c.total - (c.compute + c.comm + c.optimizer)).abs() < 1e-12);
+                last = c.total;
+            }
+        }
+        let mut last_comm = -1.0;
+        for shards in [1usize, 2, 4, 8] {
+            let c = hw.update_cost(64, shards, 8, false);
+            assert!(c.comm > last_comm, "comm must grow with shards");
+            last_comm = c.comm;
+        }
+    }
+
+    /// Hand-computed sharded update costs on the default model
+    /// (cap=32, fixed=0.8, time=1.2, optimizer=0.35).
+    #[test]
+    fn update_cost_hand_computed() {
+        let hw = HwModel::default();
+        // monolithic, auto micro-batch: 64 rows -> 2 full 32-row steps
+        let c = hw.update_cost(64, 1, 0, false);
+        assert_eq!(c.steps, 2);
+        assert_eq!(c.peak_mem_rollouts, 32);
+        assert!((c.compute - 4.0).abs() < 1e-12);
+        assert_eq!(c.comm, 0.0);
+        assert!((c.total - 4.35).abs() < 1e-12);
+        // two shards halve the sequential compute but pay the collective
+        let c2 = hw.update_cost(64, 2, 0, false);
+        assert_eq!(c2.steps, 1);
+        assert!((c2.compute - 2.0).abs() < 1e-12);
+        let want_comm = hw.allreduce_time(hw.grad_bytes(false), 2);
+        assert!((c2.comm - want_comm).abs() < 1e-12);
+        // explicit micro-batch smaller than the ceiling: more, cheaper steps
+        let c3 = hw.update_cost(64, 2, 8, false);
+        assert_eq!(c3.steps, 4);
+        assert_eq!(c3.peak_mem_rollouts, 8);
+        assert!((c3.compute - 4.0 * (0.8 + 1.2 * 8.0 / 32.0)).abs() < 1e-12);
+        // micro_batch above the memory ceiling is capped by it
+        let c4 = hw.update_cost(64, 1, 64, false);
+        assert_eq!(c4.peak_mem_rollouts, 32);
+        // m = 0: nothing runs, nothing is charged
+        assert_eq!(hw.update_cost(0, 4, 8, false), UpdateCost::default());
     }
 
     #[test]

@@ -1,99 +1,41 @@
 //! # PODS — Policy Optimization with Down-Sampling
 //!
-//! A full-stack reproduction of *"Not All Rollouts are Useful: Down-Sampling
-//! Rollouts in LLM Reinforcement Learning"* (Xu, Savani, Fang, Kolter, 2025).
+//! A full-stack reproduction of *"Not All Rollouts are Useful:
+//! Down-Sampling Rollouts in LLM Reinforcement Learning"* (Xu, Savani,
+//! Fang, Kolter, 2025): Pallas kernels (L1) and a JAX policy model (L2)
+//! are AOT-lowered to HLO artifacts at build time, and this crate (L3)
+//! owns the training loop, executing the artifacts through PJRT.
 //!
-//! ## Architecture (three layers, Python only at build time)
+//! The long-form architecture documentation lives under `docs/` in the
+//! repository root — start there:
 //!
-//! * **L1 — Pallas kernels** (`python/compile/kernels/`): fused attention,
-//!   token log-prob, GRPO surrogate and AdamW kernels.
-//! * **L2 — JAX model** (`python/compile/model.py`): the policy transformer,
-//!   rollout sampling with a KV cache, GRPO loss fwd/bwd — AOT-lowered to
-//!   HLO text artifacts by `python/compile/aot.py`.
-//! * **L3 — this crate**: the Rust coordinator owning the training loop and
-//!   executing the artifacts through PJRT ([`runtime`]).
+//! * `docs/ARCHITECTURE.md` — the module map and the dataflow of one
+//!   training iteration (rollout → select → update).
+//! * `docs/DETERMINISM.md` — the RNG stream contract: per-row decode
+//!   streams, per-group selection seeds, and the update engine's
+//!   shard-invariance guarantees.
+//! * `docs/CONFIG.md` — the generated run-configuration reference
+//!   (`pods config-docs`; CI fails when it is stale).
 //!
-//! ## The L3 training loop: a staged executor
+//! In one paragraph: a training iteration generates `n` rollouts per
+//! prompt on [`coordinator::exec::RolloutEngine`] (a real thread pool
+//! driving the chunked early-exit continuous batcher in
+//! [`rollout::chunked`]), selects `m` of them through the pluggable
+//! pipeline in [`coordinator::select`], and trains on the keepers with
+//! [`coordinator::exec::UpdateEngine`] — a sharded data-parallel update
+//! engine (micro-batch packing, canonical-order gradient accumulation, a
+//! simulated ring all-reduce, fused AdamW). The [`hwsim`] cost model
+//! prices both phases on a simulated accelerator fleet (the paper's
+//! 8×A100 Fig. 1 shape, including the communication model behind
+//! `[update] shards`), [`metrics`] records every iteration to CSV, and
+//! [`exp`] regenerates each paper figure plus the `sched` and `shard`
+//! studies from those CSVs.
 //!
-//! One iteration is driven by [`coordinator::exec::TrainLoop`], which
-//! composes two engines under a config-selected schedule
-//! (`[hwsim] schedule = "sync" | "pipelined"`):
-//!
-//! ```text
-//!            coordinator::exec::RolloutEngine      ◄── hwsim.workers
-//!    (REAL thread pool: one PJRT engine replica per worker;
-//!     rollout::plan_rows builds the iteration's refill queue)
-//!                         │
-//!  tasks ──► rollout::chunked (slot-based continuous batching:
-//!            prefill ──► decode_chunk × ceil(tokens/C) ──► early exit)
-//!                         │
-//!            reward ──► coordinator::group (PromptGroup)
-//!                                        │
-//!                       coordinator::select  ◄── config `algo.rule` spec
-//!                (Selector pipelines: registry-resolved,
-//!                 per-group deterministic RNG, diagnostics)
-//!                                        │
-//!       coordinator::advantage ──► coordinator::exec::UpdateEngine
-//!                 (micro-batch packing ──► accum ──► runtime)
-//!                                        │
-//!          hwsim clock (overlap-aware) ──► metrics CSVs ──► exp figures
-//! ```
-//!
-//! **Decode path.** Generation runs on two AOT programs instead of one
-//! monolithic `G`-step scan: `prefill` seeds the KV caches from the
-//! prompts, and `decode_chunk<C>` advances every slot `C` tokens with the
-//! caches carried across calls. The [`rollout::chunked`] driver retires
-//! rows at EOS between chunks, admits queued rows into the freed slots
-//! (`[rollout] refill = "continuous"`), and stops as soon as the queue
-//! drains — decode work tracks actual generated tokens (ceil-to-chunk),
-//! not `rows × G`. RNG is **per-row and counter-based**
-//! (`fold_in(key(row_seed), step)` with `row_seed` keyed by
-//! `(run_seed, iter, prompt, rollout_idx)`), so sampled streams are
-//! bit-invariant to chunk size, slot assignment, refill order and worker
-//! sharding — packing is purely a throughput decision. The hwsim clock
-//! charges the same shape ([`hwsim::HwModel::chunked_inference_time`]),
-//! and the train CSV reports `gen_tokens_decoded` / `gen_tokens_wasted`.
-//!
-//! **Schedules.** `sync` runs the phases back-to-back and replays the
-//! sequential reference exactly (golden-tested). `pipelined`
-//! prefetches generation of iteration *t+1* on the rollout pool — against
-//! the pre-update policy, one-step off-policy, sound because the GRPO
-//! loss ratios use stored behaviour log-probs — while the main thread
-//! updates; the simulated clock then charges `max(inference, update)`
-//! for the overlapped portion and records the hidden time per iteration
-//! (`sim_overlap_saved` in the train CSV).
-//!
-//! **Rollout selection** — the paper's contribution — is a first-class,
-//! extensible subsystem: [`coordinator::select`] defines a `Selector`
-//! trait over a `SelectionContext` (the full rollout group with rewards,
-//! generation lengths and log-probs, plus `n`, `m`, the iteration and a
-//! per-group deterministic RNG), a spec grammar
-//! (`"drop_zero_variance | max_variance"`,
-//! `"prune(max_tokens=4096) | percentile"`) and a registry that embedders
-//! extend without touching this crate. The numeric kernels — including
-//! Algorithm 2, max-variance down-sampling in `O(n log n)` — live in
-//! [`coordinator::downsample`].
-//!
-//! Key modules:
-//!
-//! * [`config`] — TOML run configs (Table 1/2 settings under `configs/`).
-//! * [`coordinator::exec`] — the staged executor: rollout thread pool,
-//!   update engine, schedule-aware driver.
-//! * [`coordinator::scheduler`] — the GRPO / GRPO-GA / GRPO-PODS trainer
-//!   façade ([`coordinator::scheduler::Trainer`]) over the executor.
-//! * [`coordinator::select`] — the pluggable selection subsystem.
-//! * [`hwsim`] — calibrated accelerator-cost model, the executor
-//!   [`hwsim::Schedule`], and the overlap-aware simulated clock all
-//!   figures plot against.
-//! * [`tasks`] / [`reward`] / [`eval`] — synthetic verifiable-reasoning
-//!   task families, rule-based rewards, evaluation tracks.
-//! * [`exp`] — one driver per paper figure/table (plus the sync-vs-
-//!   pipelined schedule study); [`metrics`] — the CSV schema they
-//!   consume.
-//!
-//! Start at [`coordinator::scheduler::Trainer`] for the training step,
-//! [`coordinator::exec`] for the executor, and [`coordinator::select`]
-//! for the selection API.
+//! Entry points: [`coordinator::scheduler::Trainer`] for the training
+//! loop, [`coordinator::exec`] for the executor, and
+//! [`coordinator::select`] for the selection API.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

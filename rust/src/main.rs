@@ -2,10 +2,11 @@
 //!
 //! ```text
 //! pods train --config configs/setting_a.toml [--iterations N]
-//! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test
-//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|table3|all [--setting a] [--quick] [--probe]
+//! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test --chunk 16
+//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|table3|all [--setting a] [--quick] [--probe]
 //! pods info  --profile base
 //! pods bench-check [--fresh BENCH_e2e.json] [--baseline rust/benches/BENCH_baseline.json]
+//! pods config-docs [--check] [--out docs/CONFIG.md]
 //! ```
 //!
 //! (CLI is hand-rolled over std::env::args — clap is unavailable in this
@@ -29,11 +30,14 @@ USAGE:
   pods train --config <path> [--iterations N] [--artifacts DIR]
   pods eval  --ckpt <path> [--task arith|poly|mcq] [--split train|test|platinum]
              [--profile NAME] [--problems N] [--chunk C]
-  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|table3|all>
+  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|table3|all>
              [--setting a-f] [--quick] [--out-dir DIR] [--probe]
   pods info  [--profile NAME]
   pods bench-check [--fresh PATH] [--baseline PATH] [--max-regression FRAC]
              [--min-speedup RATIO]
+  pods config-docs [--check] [--out PATH]
+             generate docs/CONFIG.md from the config structs;
+             --check fails when the committed file is stale (CI)
 ";
 
 /// Tiny flag parser: positionals + `--key value` + boolean `--key`.
@@ -42,7 +46,7 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["quick", "probe", "help"];
+const BOOL_FLAGS: &[&str] = &["quick", "probe", "help", "check"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
@@ -177,6 +181,7 @@ fn main() -> Result<()> {
                 "fig6" => exp::fig6::run(&artifacts, scale, &out_dir)?,
                 "fig7" => exp::fig7::run(&artifacts, scale, &out_dir)?,
                 "sched" => exp::sched::run(&artifacts, scale, &out_dir)?,
+                "shard" => exp::shard::run(&out_dir)?,
                 "table3" => exp::table3::run(&out_dir)?,
                 "all" => {
                     exp::fig1::run(&artifacts, &out_dir, probe)?;
@@ -186,6 +191,7 @@ fn main() -> Result<()> {
                     exp::fig6::run(&artifacts, scale, &out_dir)?;
                     exp::fig7::run(&artifacts, scale, &out_dir)?;
                     exp::sched::run(&artifacts, scale, &out_dir)?;
+                    exp::shard::run(&out_dir)?;
                     exp::table3::run(&out_dir)?;
                 }
                 other => bail!("unknown experiment {other:?}"),
@@ -259,6 +265,18 @@ fn main() -> Result<()> {
             )? {
                 Some(line) => println!("{line}"),
                 None => println!("speedup guard: comparison arms absent from {fresh} — skipped"),
+            }
+        }
+        "config-docs" => {
+            let out = args.get_or("out", "docs/CONFIG.md");
+            let path = std::path::Path::new(&out);
+            if args.has("check") {
+                pods::config::docs::check(path)?;
+                println!("{out} is up to date");
+            } else {
+                std::fs::write(path, pods::config::docs::render())
+                    .map_err(|e| anyhow!("writing {out}: {e}"))?;
+                println!("wrote {out}");
             }
         }
         other => {

@@ -11,19 +11,25 @@ use std::path::{Path, PathBuf};
 
 /// A struct that knows how to print itself as one CSV line.
 pub trait CsvRow {
+    /// The header line (column names, comma-separated; embedded
+    /// whitespace is stripped at write time).
     fn csv_header() -> &'static str;
+    /// This record as one comma-separated row matching the header.
     fn csv_row(&self) -> String;
 }
 
 /// One training-iteration record.
 #[derive(Debug, Clone, Default)]
 pub struct IterRow {
+    /// Training iteration index (0-based).
     pub iter: usize,
     /// Simulated wall-clock (hwsim) — the x-axis of the paper's figures.
     pub sim_time: f64,
     /// Real CPU wall-clock consumed by this process so far.
     pub real_time: f64,
+    /// Simulated cost of this iteration's inference phase.
     pub sim_inference_time: f64,
+    /// Simulated cost of this iteration's update phase (incl. comm).
     pub sim_update_time: f64,
     /// Mean total reward over all generated rollouts this iteration.
     pub train_reward: f32,
@@ -41,11 +47,17 @@ pub struct IterRow {
     /// Prompt groups whose selection came back empty (e.g. zero-signal
     /// groups removed by `drop_zero_variance`).
     pub sel_groups_dropped: usize,
+    /// Mean update loss over trained rollouts.
     pub loss: f32,
+    /// Mean clipped-ratio fraction over trained rollouts.
     pub clip_frac: f32,
+    /// Mean KL-to-reference over trained rollouts.
     pub kl: f32,
+    /// Physical `grad` calls the update executed.
     pub micro_steps: usize,
+    /// Rollouts generated this iteration.
     pub rollouts_generated: usize,
+    /// Rollouts the update trained on (after selection).
     pub rollouts_trained: usize,
     /// What the simulated clock actually advanced during this iteration —
     /// `sim_inference_time + sim_update_time` under the sync schedule,
@@ -64,6 +76,16 @@ pub struct IterRow {
     /// (`total_gen_tokens`) — decode spend that produced nothing
     /// trainable. The monolithic decoder wasted `rollouts × G - useful`.
     pub gen_tokens_wasted: usize,
+    /// Simulated data-parallel shards the update phase was split over
+    /// (`[update] shards`).
+    pub upd_shards: usize,
+    /// Simulated ring all-reduce time inside `sim_update_time` (zero for
+    /// a single shard) — the communication axis of the `exp shard` study.
+    pub upd_comm_time: f64,
+    /// Peak rollouts resident per shard in one update micro-step — the
+    /// unit the Fig. 1 memory ceiling (`hwsim.mem_capacity_rollouts`) is
+    /// denominated in.
+    pub upd_peak_mem: usize,
 }
 
 impl CsvRow for IterRow {
@@ -71,12 +93,13 @@ impl CsvRow for IterRow {
         "iter,sim_time,real_time,sim_inference_time,sim_update_time,train_reward,train_acc,\
          completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
          loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
-         sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted"
+         sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted,\
+         upd_shards,upd_comm_time,upd_peak_mem"
     }
 
     fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.iter,
             self.sim_time,
             self.real_time,
@@ -99,7 +122,10 @@ impl CsvRow for IterRow {
             self.sim_overlap_saved,
             self.schedule,
             self.gen_tokens_decoded,
-            self.gen_tokens_wasted
+            self.gen_tokens_wasted,
+            self.upd_shards,
+            self.upd_comm_time,
+            self.upd_peak_mem
         )
     }
 }
@@ -107,14 +133,23 @@ impl CsvRow for IterRow {
 /// One evaluation snapshot.
 #[derive(Debug, Clone)]
 pub struct EvalRow {
+    /// Training iteration the snapshot was taken after.
     pub iter: usize,
+    /// Simulated wall-clock at snapshot time.
     pub sim_time: f64,
+    /// Real wall-clock at snapshot time.
     pub real_time: f64,
+    /// Evaluation track label (`test`, `platinum`, cross-task labels).
     pub split: String,
+    /// Exact-answer accuracy over the evaluated problems.
     pub accuracy: f32,
+    /// Fraction of completions with well-formed answer tags.
     pub format_rate: f32,
+    /// Mean total reward over the evaluated problems.
     pub mean_reward: f32,
+    /// Mean generated length (tokens incl. EOS).
     pub mean_len: f32,
+    /// Number of problems evaluated.
     pub problems: usize,
 }
 
@@ -142,23 +177,29 @@ impl CsvRow for EvalRow {
 /// In-memory recorder; flushed to `<dir>/<run>_train.csv` and `_eval.csv`.
 #[derive(Debug, Default)]
 pub struct Recorder {
+    /// Per-training-iteration rows, in iteration order.
     pub iters: Vec<IterRow>,
+    /// Interleaved evaluation snapshots.
     pub evals: Vec<EvalRow>,
 }
 
 impl Recorder {
+    /// An empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one training-iteration row.
     pub fn push_iter(&mut self, row: IterRow) {
         self.iters.push(row);
     }
 
+    /// Append one evaluation snapshot.
     pub fn push_eval(&mut self, row: EvalRow) {
         self.evals.push(row);
     }
 
+    /// Most recent accuracy recorded for the given eval track.
     pub fn last_eval_accuracy(&self, split: &str) -> Option<f32> {
         self.evals.iter().rev().find(|e| e.split == split).map(|e| e.accuracy)
     }
@@ -280,20 +321,24 @@ mod tests {
             "iter,sim_time,real_time,sim_inference_time,sim_update_time,train_reward,train_acc,\
              completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
              loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
-             sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted"
+             sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted,\
+             upd_shards,upd_comm_time,upd_peak_mem"
                 .replace(char::is_whitespace, "")
         );
         // new columns append at the end, so CSVs from older runs stay
         // parseable by position-tolerant readers
         let cols: Vec<&str> = header.split(',').collect();
         assert_eq!(
-            cols[cols.len() - 5..].to_vec(),
+            cols[cols.len() - 8..].to_vec(),
             vec![
                 "sim_step_time",
                 "sim_overlap_saved",
                 "schedule",
                 "gen_tokens_decoded",
-                "gen_tokens_wasted"
+                "gen_tokens_wasted",
+                "upd_shards",
+                "upd_comm_time",
+                "upd_peak_mem"
             ]
         );
     }
@@ -326,6 +371,9 @@ mod tests {
             schedule: "pipelined".into(),
             gen_tokens_decoded: 1536,
             gen_tokens_wasted: 512,
+            upd_shards: 4,
+            upd_comm_time: 0.75,
+            upd_peak_mem: 8,
         };
         let header = IterRow::csv_header().replace(char::is_whitespace, "");
         let line = row.csv_row();
@@ -342,6 +390,9 @@ mod tests {
         assert_eq!(get("rollouts_trained"), "16");
         assert_eq!(get("gen_tokens_decoded"), "1536");
         assert_eq!(get("gen_tokens_wasted"), "512");
+        assert_eq!(get("upd_shards"), "4");
+        assert_eq!(get("upd_comm_time"), "0.75");
+        assert_eq!(get("upd_peak_mem"), "8");
         // the overlap identity the exec layer maintains:
         // step + saved == inference + update
         let step: f64 = get("sim_step_time").parse().unwrap();

@@ -19,12 +19,16 @@ use crate::tasks::{Problem, TaskKind};
 /// Per-component reward breakdown for one rollout.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RewardBreakdown {
+    /// 1.0 when the answer matches ground truth.
     pub accuracy: f32,
+    /// 1.0 when the response follows the exact XML pattern.
     pub format: f32,
+    /// 0..1 partial credit, 0.25 per correctly-placed tag.
     pub tag_count: f32,
 }
 
 impl RewardBreakdown {
+    /// Weighted sum of the components.
     pub fn total(&self, w: &RewardWeights) -> f32 {
         w.accuracy * self.accuracy + w.format * self.format + w.tags * self.tag_count
     }
@@ -33,8 +37,11 @@ impl RewardBreakdown {
 /// Component weights (all 1.0 in the paper; configurable for ablations).
 #[derive(Debug, Clone, Copy)]
 pub struct RewardWeights {
+    /// Weight of the accuracy component.
     pub accuracy: f32,
+    /// Weight of the format component.
     pub format: f32,
+    /// Weight of the tag-count component.
     pub tags: f32,
 }
 

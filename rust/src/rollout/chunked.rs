@@ -38,6 +38,7 @@ pub enum RefillMode {
 }
 
 impl RefillMode {
+    /// Parse a `[rollout] refill` value (`continuous` | `batch`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "continuous" => Ok(Self::Continuous),
@@ -46,6 +47,7 @@ impl RefillMode {
         }
     }
 
+    /// Canonical name used in configs and logs.
     pub fn name(self) -> &'static str {
         match self {
             Self::Continuous => "continuous",
@@ -58,16 +60,22 @@ impl RefillMode {
 /// within the group, and its private RNG seed.
 #[derive(Debug, Clone, Copy)]
 pub struct RowSpec {
+    /// Prompt group this row generates for.
     pub group_idx: usize,
+    /// Index of this rollout within its group.
     pub rollout_idx: usize,
+    /// Private RNG seed of the row's counter-based stream.
     pub seed: i32,
 }
 
 /// One finished row, in the same layout the monolithic program produced.
 #[derive(Debug, Clone)]
 pub struct RowOut {
+    /// Prompt group this row generated for.
     pub group_idx: usize,
+    /// Index of this rollout within its group.
     pub rollout_idx: usize,
+    /// Left-padding length of the prompt region.
     pub pad_len: i32,
     /// i32[T]: prompt + generation, PAD after EOS.
     pub tokens: Vec<i32>,
@@ -82,7 +90,9 @@ pub struct RowOut {
 /// Engine-call accounting for one driver run.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DecodeStats {
+    /// `prefill` program invocations.
     pub prefill_calls: usize,
+    /// `decode_chunk` program invocations.
     pub chunk_calls: usize,
     /// On-device slot-admission merges (one per refill event after the
     /// initial fill).

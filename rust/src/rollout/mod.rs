@@ -39,6 +39,7 @@ pub struct InferenceStats {
     pub calls: usize,
     /// Useful generated tokens (through EOS) across all rollouts.
     pub total_gen_tokens: usize,
+    /// Finished rollouts.
     pub rollouts: usize,
     /// Decode-step slots physically executed (`B_r × C` per chunk call) —
     /// post-EOS slots and batch filler included.
@@ -49,6 +50,7 @@ pub struct InferenceStats {
 }
 
 impl InferenceStats {
+    /// Merge another phase's stats into this one (field-wise sums).
     pub fn absorb(&mut self, other: &InferenceStats) {
         self.calls += other.calls;
         self.total_gen_tokens += other.total_gen_tokens;
@@ -120,7 +122,9 @@ pub fn plan_rows(problems: &[Problem], n: usize, run_seed: u64, iter: u64) -> Ve
 /// One rollout produced by [`execute_rows`], tagged with its group.
 #[derive(Debug, Clone)]
 pub struct CallRollout {
+    /// Prompt group the rollout belongs to.
     pub group_idx: usize,
+    /// The finished rollout, update-phase ready.
     pub record: RolloutRecord,
 }
 
@@ -210,19 +214,28 @@ pub fn execute_rows(
 
 /// Parameters of one group-generation request.
 pub struct GenRequest<'a> {
+    /// Full-parameter vector to decode with.
     pub params: &'a [f32],
+    /// Trainable adapter vector (LoRA profiles).
     pub lora: Option<&'a [f32]>,
     /// Score rollouts under these reference parameters for the KL term
     /// (full-parameter vector; lora taken from `ref_lora`).
     pub ref_params: Option<&'a [f32]>,
+    /// Reference-policy adapter (LoRA profiles with KL).
     pub ref_lora: Option<&'a [f32]>,
+    /// Rollouts to generate for the prompt.
     pub n: usize,
+    /// Sampling temperature.
     pub temperature: f32,
+    /// Run seed — one axis of every row's stream seed.
     pub run_seed: u64,
+    /// Training iteration the request belongs to.
     pub iter: u64,
+    /// Reward component weights.
     pub weights: RewardWeights,
     /// Tokens decoded per `decode_chunk` call.
     pub decode_chunk: usize,
+    /// Slot-refill policy between chunks.
     pub refill: RefillMode,
 }
 

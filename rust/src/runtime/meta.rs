@@ -16,19 +16,33 @@ use std::path::Path;
 /// (mirror of python `ModelConfig`).
 #[derive(Debug, Clone)]
 pub struct ProfileConfig {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual width.
     pub d_model: usize,
+    /// Transformer layers.
     pub layers: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// Feed-forward width.
     pub d_ff: usize,
+    /// Full sequence length `T` (prompt + generation).
     pub seq_len: usize,
+    /// Prompt region length `P`.
     pub prompt_len: usize,
+    /// Rows per rollout/decode call (`B_r`).
     pub rollout_batch: usize,
+    /// Rows per grad micro-batch (`B_u`).
     pub update_batch: usize,
+    /// LoRA rank (0 = full-parameter profile).
     pub lora_rank: usize,
+    /// LoRA scaling alpha.
     pub lora_alpha: f64,
+    /// PPO/GRPO ratio clipping epsilon.
     pub clip_eps: f64,
+    /// AdamW weight decay.
     pub weight_decay: f64,
+    /// Flat-parameter padding block multiple.
     pub pad_multiple: usize,
 }
 
@@ -56,16 +70,24 @@ impl ProfileConfig {
 /// One entry of the flat-parameter offset table.
 #[derive(Debug, Clone)]
 pub struct SpecEntry {
+    /// Parameter name (python-side identifier).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Offset into the flat vector.
     pub offset: usize,
+    /// Element count (`shape.product()`).
     pub size: usize,
 }
 
+/// Flat-parameter layout: where every tensor lives in the packed vector.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Per-tensor entries, offset order.
     pub entries: Vec<SpecEntry>,
+    /// Elements actually used by tensors.
     pub used: usize,
+    /// Total vector length incl. block padding.
     pub padded: usize,
 }
 
@@ -97,16 +119,27 @@ impl ParamSpec {
 /// against this at engine load).
 #[derive(Debug, Clone)]
 pub struct VocabMeta {
+    /// Display strings, indexed by token id.
     pub tokens: Vec<String>,
+    /// Number of tokens.
     pub vocab_size: usize,
+    /// `<pad>` id.
     pub pad: i32,
+    /// `<bos>` id.
     pub bos: i32,
+    /// `<eos>` id.
     pub eos: i32,
+    /// Newline id.
     pub nl: i32,
+    /// `<think>` id.
     pub think_open: i32,
+    /// `</think>` id.
     pub think_close: i32,
+    /// `<answer>` id.
     pub answer_open: i32,
+    /// `</answer>` id.
     pub answer_close: i32,
+    /// Id of digit `0` (digits are contiguous).
     pub digit0: i32,
 }
 
@@ -129,10 +162,14 @@ impl VocabMeta {
     }
 }
 
+/// Declared shape/dtype of one program input or output.
 #[derive(Debug, Clone)]
 pub struct TensorSig {
+    /// Tensor name in the program signature.
     pub name: String,
+    /// Element dtype (`f32` | `i32` | `u32`).
     pub dtype: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
 }
 
@@ -145,35 +182,51 @@ impl TensorSig {
         })
     }
 
+    /// Product of the shape dims.
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// Input/output signature of one AOT program.
 #[derive(Debug, Clone)]
 pub struct ProgramSig {
+    /// Positional inputs.
     pub inputs: Vec<TensorSig>,
+    /// Tuple outputs, in order.
     pub outputs: Vec<TensorSig>,
 }
 
+/// Everything `meta.json` records about one artifact profile.
 #[derive(Debug, Clone)]
 pub struct Meta {
+    /// Profile name (micro | base | lora | big).
     pub profile: String,
+    /// Model/program dimensions.
     pub config: ProfileConfig,
+    /// Generation budget `G` per rollout.
     pub gen_len: usize,
     /// Chunk sizes the AOT pipeline lowered `decode_chunk<C>` programs for
     /// (empty for artifacts predating the chunked decode path).
     pub decode_chunks: Vec<usize>,
+    /// Full-parameter vector length.
     pub param_count: usize,
+    /// LoRA adapter vector length (0 when full-parameter).
     pub lora_count: usize,
+    /// Length of the vector the optimizer updates.
     pub trainable_count: usize,
+    /// Layout of the full-parameter vector.
     pub param_spec: ParamSpec,
+    /// Layout of the adapter vector (LoRA profiles).
     pub lora_spec: Option<ParamSpec>,
+    /// The shared token vocabulary.
     pub vocab: VocabMeta,
+    /// Signature of every lowered program, by name.
     pub programs: HashMap<String, ProgramSig>,
 }
 
 impl Meta {
+    /// Parse a profile's `meta.json`.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -205,6 +258,7 @@ impl Meta {
         })
     }
 
+    /// Signature of program `name`, or a descriptive error.
     pub fn program(&self, name: &str) -> Result<&ProgramSig> {
         self.programs
             .get(name)

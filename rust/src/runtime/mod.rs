@@ -28,7 +28,9 @@ use tensor::{lit_f32, lit_f32_scalar, lit_i32, lit_i32_scalar, lit_u32_scalar, t
 /// Wall-clock telemetry for one program's executions.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CallStats {
+    /// Executions so far.
     pub calls: u64,
+    /// Total wall-clock spent executing.
     pub total_secs: f64,
 }
 
@@ -36,9 +38,11 @@ pub struct CallStats {
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// The profile's `meta.json` bindings.
     pub meta: Meta,
     exes: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
     stats: RefCell<HashMap<String, CallStats>>,
+    /// Suppress compile-time log lines (tests/benches).
     pub quiet: bool,
 }
 
@@ -89,20 +93,30 @@ pub struct ChunkOut {
 /// Outputs of the `grad` program (one policy-update micro-batch).
 #[derive(Debug, Clone)]
 pub struct GradOut {
+    /// Mean gradient over the micro-batch's `B_u` slots.
     pub grads: Vec<f32>,
+    /// Mean clipped-surrogate loss.
     pub loss: f32,
+    /// Fraction of clipped ratio terms.
     pub clip_frac: f32,
+    /// Mean KL-to-reference estimate.
     pub kl: f32,
 }
 
 /// Inputs to one `grad` micro-batch, shaped [B_u, ...].
 #[derive(Debug, Clone)]
 pub struct MicroBatch {
+    /// i32[B_u, T] full token rows.
     pub tokens: TensorI,
+    /// i32[B_u] left-padding lengths.
     pub pad_len: Vec<i32>,
+    /// f32[B_u, G] 1.0 through EOS.
     pub gen_mask: TensorF,
+    /// f32[B_u, G] behaviour log-probs.
     pub old_lp: TensorF,
+    /// f32[B_u] per-rollout advantages (0 on padded slots).
     pub adv: Vec<f32>,
+    /// f32[B_u, G] reference log-probs (zeros when KL is off).
     pub ref_lp: TensorF,
 }
 

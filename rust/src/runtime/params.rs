@@ -17,22 +17,29 @@ use std::path::Path;
 /// Trainable state: the vector the optimizer updates + Adam moments.
 #[derive(Debug, Clone)]
 pub struct ParamStore {
+    /// The optimized flat vector.
     pub params: Vec<f32>,
+    /// Adam first moments.
     pub m: Vec<f32>,
+    /// Adam second moments.
     pub v: Vec<f32>,
+    /// Optimizer step counter (bias correction).
     pub step: i32,
 }
 
 impl ParamStore {
+    /// Fresh store: zero moments, step 0.
     pub fn new(params: Vec<f32>) -> Self {
         let n = params.len();
         Self { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
     }
 
+    /// Trainable-vector length.
     pub fn len(&self) -> usize {
         self.params.len()
     }
 
+    /// Whether the store holds no parameters.
     pub fn is_empty(&self) -> bool {
         self.params.is_empty()
     }

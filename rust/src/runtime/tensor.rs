@@ -10,18 +10,23 @@ use anyhow::{anyhow, Result};
 /// Host tensor of f32 values.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorF {
+    /// Row-major elements.
     pub data: Vec<f32>,
+    /// Dimensions.
     pub dims: Vec<usize>,
 }
 
 /// Host tensor of i32 values.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorI {
+    /// Row-major elements.
     pub data: Vec<i32>,
+    /// Dimensions.
     pub dims: Vec<usize>,
 }
 
 impl TensorF {
+    /// Wrap `data` as shape `dims`; errors on element-count mismatch.
     pub fn new(data: Vec<f32>, dims: &[usize]) -> Result<Self> {
         let n: usize = dims.iter().product();
         if n != data.len() {
@@ -30,6 +35,7 @@ impl TensorF {
         Ok(Self { data, dims: dims.to_vec() })
     }
 
+    /// All-zero tensor of shape `dims`.
     pub fn zeros(dims: &[usize]) -> Self {
         let n = dims.iter().product();
         Self { data: vec![0.0; n], dims: dims.to_vec() }
@@ -43,6 +49,7 @@ impl TensorF {
 }
 
 impl TensorI {
+    /// Wrap `data` as shape `dims`; errors on element-count mismatch.
     pub fn new(data: Vec<i32>, dims: &[usize]) -> Result<Self> {
         let n: usize = dims.iter().product();
         if n != data.len() {
@@ -51,11 +58,13 @@ impl TensorI {
         Ok(Self { data, dims: dims.to_vec() })
     }
 
+    /// All-zero tensor of shape `dims`.
     pub fn zeros(dims: &[usize]) -> Self {
         let n = dims.iter().product();
         Self { data: vec![0; n], dims: dims.to_vec() }
     }
 
+    /// Row-major 2-D accessor (debug/test convenience).
     pub fn at2(&self, i: usize, j: usize) -> i32 {
         debug_assert_eq!(self.dims.len(), 2);
         self.data[i * self.dims[1] + j]
@@ -64,6 +73,7 @@ impl TensorI {
 
 // ---- literal construction -------------------------------------------------
 
+/// Build an f32 literal from host data (one memcpy).
 pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
@@ -74,6 +84,7 @@ pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     )?)
 }
 
+/// Build an i32 literal from host data (one memcpy).
 pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
@@ -84,14 +95,17 @@ pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     )?)
 }
 
+/// Scalar f32 literal.
 pub fn lit_f32_scalar(v: f32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
+/// Scalar i32 literal.
 pub fn lit_i32_scalar(v: i32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
+/// Scalar u32 literal (RNG seeds).
 pub fn lit_u32_scalar(v: u32) -> Result<xla::Literal> {
     Ok(xla::Literal::create_from_shape_and_untyped_data(
         xla::ElementType::U32,
@@ -102,14 +116,17 @@ pub fn lit_u32_scalar(v: u32) -> Result<xla::Literal> {
 
 // ---- literal extraction ---------------------------------------------------
 
+/// Copy an f32 literal back to host.
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 
+/// Copy an i32 literal back to host.
 pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
     Ok(lit.to_vec::<i32>()?)
 }
 
+/// Read a scalar f32 literal.
 pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
     Ok(lit.get_first_element::<f32>()?)
 }

@@ -20,7 +20,9 @@ use tokenizer as tok;
 /// Data split; disjoint by construction (index spaces are offset).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Split {
+    /// Training prompts.
     Train,
+    /// Held-out evaluation prompts.
     Test,
     /// Contamination-resistant re-generation with a distinct seed space —
     /// the stand-in for GSM8K-Platinum in the Fig. 7 generalization study.
@@ -46,18 +48,23 @@ pub struct Problem {
     pub answer: String,
     /// Gold response (think + answer, paper format) for SFT.
     pub ideal_response: Vec<i32>,
+    /// Deterministic problem id (the generation index).
     pub id: u64,
 }
 
 /// Task family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskKind {
+    /// Multi-step integer arithmetic (≈ GSM8K).
     Arith,
+    /// Modular polynomial evaluation (≈ MATH).
     Poly,
+    /// 4-choice A-D questions (≈ SciKnowEval-Chemistry).
     Mcq,
 }
 
 impl TaskKind {
+    /// Parse a `[run] task` value (`arith` | `poly` | `mcq`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "arith" => Ok(Self::Arith),
@@ -67,6 +74,7 @@ impl TaskKind {
         }
     }
 
+    /// Canonical name used in configs and logs.
     pub fn name(self) -> &'static str {
         match self {
             Self::Arith => "arith",

@@ -6,15 +6,25 @@
 
 use anyhow::{anyhow, Result};
 
+/// Padding token id.
 pub const PAD: i32 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS: i32 = 1;
+/// End-of-sequence token id.
 pub const EOS: i32 = 2;
+/// Newline token id.
 pub const NL: i32 = 3;
+/// `<think>` tag id.
 pub const THINK_OPEN: i32 = 4;
+/// `</think>` tag id.
 pub const THINK_CLOSE: i32 = 5;
+/// `<answer>` tag id.
 pub const ANSWER_OPEN: i32 = 6;
+/// `</answer>` tag id.
 pub const ANSWER_CLOSE: i32 = 7;
+/// Id of digit `0` (digits 0-9 are contiguous).
 pub const DIGIT0: i32 = 8;
+/// Total vocabulary size.
 pub const VOCAB_SIZE: usize = 48;
 
 /// Display strings, indexed by token id.

@@ -18,11 +18,17 @@ use std::time::Instant;
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name (stable across runs — the regression-guard key).
     pub name: String,
+    /// Timed iterations executed.
     pub iters: usize,
+    /// Mean wall time per iteration (nanoseconds).
     pub mean_ns: f64,
+    /// Median wall time per iteration (nanoseconds).
     pub median_ns: f64,
+    /// 95th-percentile wall time per iteration (nanoseconds).
     pub p95_ns: f64,
+    /// Fastest iteration (nanoseconds).
     pub min_ns: f64,
 }
 
@@ -94,6 +100,7 @@ pub struct BenchReport {
 }
 
 impl BenchReport {
+    /// An empty report.
     pub fn new() -> Self {
         Self::default()
     }
@@ -145,7 +152,9 @@ impl BenchReport {
 /// plus the subset that regressed beyond the threshold.
 #[derive(Debug, Default)]
 pub struct RegressionReport {
+    /// Human-readable per-bench comparison lines.
     pub lines: Vec<String>,
+    /// The subset of `lines` that regressed beyond the threshold.
     pub regressions: Vec<String>,
 }
 
@@ -171,6 +180,11 @@ fn load_throughputs(path: &Path) -> anyhow::Result<Vec<(String, f64)>> {
 /// reports it and passes, so CI stays green until a baseline is recorded
 /// (`cargo bench --bench e2e_step && cp BENCH_e2e.json
 /// rust/benches/BENCH_baseline.json`).
+///
+/// A baseline arm **absent from the fresh run is a hard error**: a
+/// renamed or deleted benchmark would otherwise drop out of the guard
+/// silently, and an arbitrarily large regression could hide behind the
+/// rename. Either restore the arm or re-record the baseline.
 pub fn check_regression(
     fresh: &Path,
     baseline: &Path,
@@ -194,11 +208,10 @@ pub fn check_regression(
         ));
         return Ok(report);
     }
+    let mut missing: Vec<&str> = Vec::new();
     for (name, base) in &base_tp {
         match fresh_tp.iter().find(|(n, _)| n == name) {
-            None => report
-                .lines
-                .push(format!("warn: bench {name:?} absent from fresh run (renamed/removed?)")),
+            None => missing.push(name),
             Some((_, tp)) => {
                 let delta = (tp - base) / base.max(1e-12);
                 let line = format!(
@@ -211,6 +224,16 @@ pub fn check_regression(
                 report.lines.push(line);
             }
         }
+    }
+    if !missing.is_empty() {
+        anyhow::bail!(
+            "baseline {} lists {} bench(es) absent from the fresh run {}: {missing:?} — \
+             a renamed/deleted arm would let regressions hide behind the rename; \
+             restore the arm or re-record the baseline",
+            baseline.display(),
+            missing.len(),
+            fresh.display()
+        );
     }
     Ok(report)
 }
@@ -309,13 +332,12 @@ mod tests {
         let dir = crate::util::TempDir::new().unwrap();
         let base = dir.path().join("base.json");
         let fresh = dir.path().join("fresh.json");
-        write_report(&base, &[("e2e step a", 100.0), ("e2e step b", 50.0), ("gone", 10.0)]);
+        write_report(&base, &[("e2e step a", 100.0), ("e2e step b", 50.0)]);
         write_report(&fresh, &[("e2e step a", 86.0), ("e2e step b", 40.0)]);
         let rep = check_regression(&fresh, &base, 0.15).unwrap();
-        // a: -14% passes; b: -20% regresses; "gone" warns but doesn't fail
+        // a: -14% passes; b: -20% regresses
         assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
         assert!(rep.regressions[0].contains("e2e step b"));
-        assert!(rep.lines.iter().any(|l| l.contains("gone") && l.contains("warn")));
 
         // improvements never regress
         write_report(&fresh, &[("e2e step a", 200.0), ("e2e step b", 49.0)]);
@@ -326,6 +348,24 @@ mod tests {
         let rep = check_regression(&fresh, &dir.path().join("absent.json"), 0.15).unwrap();
         assert!(rep.regressions.is_empty());
         assert!(rep.lines[0].contains("no baseline"));
+    }
+
+    /// Satellite bugfix: a baseline arm missing from the fresh run used to
+    /// emit a warning line and pass — a renamed benchmark silently escaped
+    /// the guard. It is now a hard, descriptive failure.
+    #[test]
+    fn missing_baseline_arm_is_a_hard_failure() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let base = dir.path().join("base.json");
+        let fresh = dir.path().join("fresh.json");
+        write_report(&base, &[("e2e step a", 100.0), ("gone", 10.0)]);
+        write_report(&fresh, &[("e2e step a", 100.0)]);
+        let err = check_regression(&fresh, &base, 0.15).unwrap_err().to_string();
+        assert!(err.contains("gone"), "error must name the missing arm: {err}");
+        assert!(err.contains("re-record"), "error must say how to fix it: {err}");
+        // both arms present again: passes
+        write_report(&fresh, &[("e2e step a", 100.0), ("gone", 10.0)]);
+        assert!(check_regression(&fresh, &base, 0.15).is_ok());
     }
 
     /// The same-run speedup guard: ratio below the floor fails, above

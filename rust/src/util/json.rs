@@ -9,17 +9,25 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// One parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (kept as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -33,6 +41,7 @@ impl Json {
 
     // ---- typed accessors ------------------------------------------------
 
+    /// Object field access; errors when absent or not an object.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
@@ -40,6 +49,7 @@ impl Json {
         }
     }
 
+    /// Optional object field (absent and `null` both yield None).
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key).filter(|v| !matches!(v, Json::Null)),
@@ -47,6 +57,7 @@ impl Json {
         }
     }
 
+    /// This value as a string.
     pub fn str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -54,6 +65,7 @@ impl Json {
         }
     }
 
+    /// This value as a number.
     pub fn f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -61,6 +73,7 @@ impl Json {
         }
     }
 
+    /// This value as a non-negative integer.
     pub fn usize(&self) -> Result<usize> {
         let n = self.f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -69,6 +82,7 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// This value as an integer.
     pub fn i64(&self) -> Result<i64> {
         let n = self.f64()?;
         if n.fract() != 0.0 {
@@ -77,6 +91,7 @@ impl Json {
         Ok(n as i64)
     }
 
+    /// This value as a bool.
     pub fn bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -84,6 +99,7 @@ impl Json {
         }
     }
 
+    /// This value as an array slice.
     pub fn arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -91,6 +107,7 @@ impl Json {
         }
     }
 
+    /// This value as an object map.
     pub fn obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -100,6 +117,7 @@ impl Json {
 
     // ---- writer ---------------------------------------------------------
 
+    /// Serialize to a compact JSON string.
     pub fn dump(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -144,6 +162,7 @@ impl Json {
     }
 }
 
+/// Convenience object builder from (key, value) pairs.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }

@@ -26,6 +26,7 @@ pub struct TempDir {
 }
 
 impl TempDir {
+    /// Create a fresh scratch directory.
     pub fn new() -> std::io::Result<Self> {
         let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir().join(format!(
@@ -40,6 +41,7 @@ impl TempDir {
         Ok(Self { path })
     }
 
+    /// The directory's path.
     pub fn path(&self) -> &std::path::Path {
         &self.path
     }

@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed via the splitmix64 expansion (reference seeding).
     pub fn seed_from_u64(seed: u64) -> Self {
         // splitmix64 expansion, per Blackman & Vigna's reference seeding
         let mut x = seed;
@@ -26,6 +27,7 @@ impl Rng {
         Self { s }
     }
 
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
             .wrapping_add(self.s[3])
@@ -41,6 +43,7 @@ impl Rng {
         result
     }
 
+    /// Next 32 random bits (high half of `next_u64`).
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }
@@ -69,6 +72,7 @@ impl Rng {
         self.gen_range_inclusive(0, n as i64 - 1) as usize
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn gen_bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }

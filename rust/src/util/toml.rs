@@ -8,15 +8,21 @@
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
+/// One parsed TOML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
 }
 
 impl TomlValue {
+    /// This value as a string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             TomlValue::Str(s) => Ok(s),
@@ -24,6 +30,7 @@ impl TomlValue {
         }
     }
 
+    /// This value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         match self {
             TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
@@ -31,6 +38,7 @@ impl TomlValue {
         }
     }
 
+    /// This value as a non-negative u64.
     pub fn as_u64(&self) -> Result<u64> {
         match self {
             TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
@@ -38,6 +46,7 @@ impl TomlValue {
         }
     }
 
+    /// This value as a number (ints coerce).
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             TomlValue::Float(f) => Ok(*f),
@@ -46,6 +55,7 @@ impl TomlValue {
         }
     }
 
+    /// This value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             TomlValue::Bool(b) => Ok(*b),
@@ -54,7 +64,9 @@ impl TomlValue {
     }
 }
 
+/// One `[section]`'s key -> value map.
 pub type Section = BTreeMap<String, TomlValue>;
+/// A parsed document: section -> keys.
 pub type TomlDoc = BTreeMap<String, Section>;
 
 /// Parse a TOML-subset document. Keys before the first section header go
@@ -147,25 +159,31 @@ fn parse_value(s: &str) -> Result<TomlValue> {
 
 /// Typed getters over one section with defaulting.
 pub struct SectionView<'a> {
+    /// Section name (for error messages).
     pub name: &'a str,
+    /// The section's map, if the document has it.
     pub sec: Option<&'a Section>,
 }
 
 impl<'a> SectionView<'a> {
+    /// View over `doc`'s section `name` (absent sections are fine).
     pub fn new(doc: &'a TomlDoc, name: &'a str) -> Self {
         Self { name, sec: doc.get(name) }
     }
 
+    /// `key`'s value, or a descriptive missing-key error.
     pub fn required(&self, key: &str) -> Result<&'a TomlValue> {
         self.sec
             .and_then(|s| s.get(key))
             .with_context(|| format!("config missing [{}] {key}", self.name))
     }
 
+    /// `key`'s value, if present.
     pub fn get(&self, key: &str) -> Option<&'a TomlValue> {
         self.sec.and_then(|s| s.get(key))
     }
 
+    /// `key` as string, defaulting when absent.
     pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
         match self.get(key) {
             Some(v) => Ok(v.as_str()?.to_string()),
@@ -173,6 +191,7 @@ impl<'a> SectionView<'a> {
         }
     }
 
+    /// `key` as usize, defaulting when absent.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             Some(v) => v.as_usize(),
@@ -180,6 +199,7 @@ impl<'a> SectionView<'a> {
         }
     }
 
+    /// `key` as u64, defaulting when absent.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             Some(v) => v.as_u64(),
@@ -187,6 +207,7 @@ impl<'a> SectionView<'a> {
         }
     }
 
+    /// `key` as f64, defaulting when absent.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             Some(v) => v.as_f64(),
@@ -194,6 +215,7 @@ impl<'a> SectionView<'a> {
         }
     }
 
+    /// `key` as optional string.
     pub fn opt_str(&self, key: &str) -> Result<Option<String>> {
         match self.get(key) {
             Some(v) => Ok(Some(v.as_str()?.to_string())),

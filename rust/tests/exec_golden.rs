@@ -105,18 +105,7 @@ fn sync_executor_reproduces_sequential_reference() {
     .unwrap();
     let mut ref_store = ParamStore::new(params0);
     let mut ref_update = UpdateEngine::new(ref_store.len());
-    let want = ref_update
-        .run(
-            &tr.engine,
-            &mut ref_store,
-            None,
-            &groups,
-            &selected,
-            c.algo.kl_coef as f32,
-            c.algo.lr as f32,
-            &c.hwsim,
-        )
-        .unwrap();
+    let want = ref_update.run(&tr.engine, &mut ref_store, None, &groups, &selected, &c).unwrap();
 
     // ---- the executor ------------------------------------------------
     let stats = tr.train_iteration(0).unwrap();
@@ -135,6 +124,79 @@ fn sync_executor_reproduces_sequential_reference() {
     assert_eq!(stats.sim_overlap_saved, 0.0);
     assert_eq!(tr.clock.overlap_saved(), 0.0);
     assert_eq!(tr.store.params, ref_store.params, "post-update parameters must be identical");
+}
+
+/// Tentpole golden: the sharded update engine is bit-identical to the
+/// monolithic one — same rollouts, same selection, same grad program —
+/// for any shard count, while the simulated phase cost moves with the
+/// topology (shards add communication, micro-batching adds steps).
+#[test]
+fn sharded_update_is_bit_identical_to_monolithic() {
+    let Some(dir) = artifacts() else { return };
+    let c = cfg("golden_shard", "sync", 1, 1);
+    let mut tr = Trainer::new(&dir, c.clone()).unwrap();
+    tr.engine.quiet = true;
+    let params0 = tr.store.params.clone();
+
+    // one iteration's worth of groups + selection, shared by every arm
+    let problems = TaskKind::Arith.batch(Split::Train, 0, c.run.prompts_per_iter);
+    let mut groups = Vec::new();
+    for problem in &problems {
+        let req = GenRequest {
+            params: &params0,
+            lora: None,
+            ref_params: None,
+            ref_lora: None,
+            n: c.algo.n,
+            temperature: c.algo.temperature as f32,
+            run_seed: c.run.seed,
+            iter: 0,
+            weights: RewardWeights::default(),
+            decode_chunk: c.rollout.decode_chunk,
+            refill: c.rollout.refill,
+        };
+        let (group, _) = generate_group(&tr.engine, &req, TaskKind::Arith, problem).unwrap();
+        groups.push(group);
+    }
+    let (selected, _) =
+        build_update_batch(&groups, &c.selector(), c.algo.m, c.norm_mode(), c.run.seed, 0).unwrap();
+    assert!(!selected.is_empty());
+
+    let run_with = |shards: usize| {
+        let mut cfg_s = c.clone();
+        cfg_s.update.shards = shards;
+        // micro-batches of 2 rows -> a multi-call plan (4 calls for the 8
+        // selected rollouts), so the shard arms genuinely partition the
+        // micro-batch sequence instead of collapsing to one call
+        cfg_s.update.micro_batch = 2;
+        let mut store = ParamStore::new(params0.clone());
+        let mut upd = UpdateEngine::new(store.len());
+        let out = upd.run(&tr.engine, &mut store, None, &groups, &selected, &cfg_s).unwrap();
+        (store, out)
+    };
+    let (mono_store, mono) = run_with(1);
+    assert!(
+        mono.micro_steps > 1,
+        "the golden needs a multi-micro-batch plan to exercise sharding \
+         (got {} call)",
+        mono.micro_steps
+    );
+    for shards in [2usize, 4, 8] {
+        let (store, out) = run_with(shards);
+        assert_eq!(
+            store.params, mono_store.params,
+            "shards={shards} changed trained parameters — the shard-invariance \
+             contract is broken"
+        );
+        assert_eq!(out.loss, mono.loss);
+        assert_eq!(out.micro_steps, mono.micro_steps, "packing must be shard-agnostic");
+        assert!(out.sim_comm > 0.0, "multi-shard update must pay communication");
+        assert!(
+            out.sim_comm > mono.sim_comm,
+            "communication must grow from the monolithic baseline"
+        );
+    }
+    assert_eq!(mono.sim_comm, 0.0, "single shard has nothing to all-reduce");
 }
 
 /// Pool generation is deterministic: 1 worker (inline) and 4 workers
