@@ -23,6 +23,8 @@ fn mk_trainer(
     schedule: &str,
     decode_chunk: usize,
     refill: &str,
+    rule: &str,
+    online_prune: bool,
 ) -> anyhow::Result<Trainer> {
     let cfg = CfgBuilder {
         name: format!("bench_{kind}_{n}_{workers}w_{schedule}"),
@@ -34,11 +36,13 @@ fn mk_trainer(
         kind: kind.into(),
         n,
         m,
+        rule: rule.into(),
         lr: 1e-4,
         workers,
         schedule: schedule.into(),
         decode_chunk,
         refill: refill.into(),
+        online_prune,
         out_dir: std::env::temp_dir().join("pods_bench").to_string_lossy().into_owned(),
         ..Default::default()
     }
@@ -54,12 +58,20 @@ fn main() -> anyhow::Result<()> {
         eprintln!("skipping: base artifacts missing (run `make artifacts`)");
         return Ok(());
     }
-    // (label, kind, n, m, workers, schedule, decode_chunk, refill)
+    // the online-prune arms cap rollouts at a quarter of the generation
+    // budget; read G from the profile so the cap tracks the artifacts
+    let g = pods::runtime::Engine::load(&dir, "base")?.meta.gen_len;
+    let prune_rule = format!("prune(max_tokens={}) | max_variance", (g / 4).max(1));
+    // (label, kind, n, m, workers, schedule, decode_chunk, refill) — the
+    // selection rule and online-prune flag are derived from the label
+    // below: arms whose label contains "prune" run the token-budget rule,
+    // and only "online-prune" turns mid-decode aborts on.
     // The "full-G batch" arm decodes every rollout to the budget with no
     // mid-batch refill — the closest stand-in for the old monolithic
     // decode path; the default arms use chunked early exit (C=16,
     // continuous refill). Their throughput ratio is the acceptance
-    // number.
+    // number, as is the online-prune arm's ratio over the identical
+    // token-budget pipeline with pruning off.
     let arms = [
         ("grpo (n=m=16)", "grpo", 16usize, None, 1usize, "sync", 16usize, "continuous"),
         ("pods (n=64 -> m=16)", "pods", 64, Some(16), 1, "sync", 16, "continuous"),
@@ -69,10 +81,16 @@ fn main() -> anyhow::Result<()> {
         ("pods pipelined (4w)", "pods", 64, Some(16), 4, "pipelined", 16, "continuous"),
         ("pods distributed (8w)", "pods", 64, Some(16), 8, "sync", 16, "continuous"),
         ("ga   distributed (8w)", "ga", 64, None, 8, "sync", 16, "continuous"),
+        ("pods prune-rule (online off)", "pods", 64, Some(16), 1, "sync", 16, "continuous"),
+        ("pods online-prune (same rule)", "pods", 64, Some(16), 1, "sync", 16, "continuous"),
     ];
     let mut report = BenchReport::new();
     for (label, kind, n, m, workers, schedule, chunk, refill) in arms {
-        let mut tr = mk_trainer(kind, n, m, workers, schedule, chunk, refill)?;
+        // the two prune arms share the token-budget rule; everything else
+        // runs the paper's max_variance selection
+        let rule = if label.contains("prune") { prune_rule.as_str() } else { "max_variance" };
+        let online = label.contains("online-prune");
+        let mut tr = mk_trainer(kind, n, m, workers, schedule, chunk, refill, rule, online)?;
         let pipelined = schedule == "pipelined";
         let mut it = 0usize;
         let res = bench(&format!("e2e step {label}"), Some(4), || {
@@ -84,7 +102,8 @@ fn main() -> anyhow::Result<()> {
         let last = tr.recorder.iters.last().unwrap();
         println!(
             "  real {:.2}s | sim {:.1}s charged (inf {:.1}s + upd {:.1}s, \
-             {:.1}s hidden, {} micro-steps) | decoded {} tok ({} wasted)",
+             {:.1}s hidden, {} micro-steps) | decoded {} tok ({} wasted, \
+             {} pruned over {} rows)",
             res.median_ns / 1e9,
             last.sim_step_time,
             last.sim_inference_time,
@@ -92,7 +111,9 @@ fn main() -> anyhow::Result<()> {
             last.sim_overlap_saved,
             last.micro_steps,
             last.gen_tokens_decoded,
-            last.gen_tokens_wasted
+            last.gen_tokens_wasted,
+            last.gen_tokens_pruned,
+            last.rows_pruned_online
         );
         let rollouts_per_sec = last.rollouts_generated as f64 / (res.median_ns / 1e9);
         report.push_with_throughput(res, rollouts_per_sec);

@@ -6,8 +6,10 @@
 //! ground truth behind the BENCH_e2e.json throughput acceptance.
 
 use pods::coordinator::exec::{GenBatch, RolloutEngine};
+use pods::coordinator::select::online::GroupVerdicts;
+use pods::coordinator::select::Pipeline;
 use pods::reward::{score_rollout, RewardWeights};
-use pods::rollout::{generate_group, prompt_batch, GenRequest, RefillMode};
+use pods::rollout::{execute_rows, generate_group, plan_rows, prompt_batch, GenRequest, RefillMode};
 use pods::runtime::Engine;
 use pods::tasks::{Split, TaskKind};
 use pods::util::bench::{bench, black_box};
@@ -90,6 +92,62 @@ fn main() -> anyhow::Result<()> {
         black_box(generate_group(&engine, &req, TaskKind::Arith, &problem).unwrap());
     });
 
+    // Online selection-aware pruning: the same 2-prompt x n=32 decode with
+    // a token-budget pipeline, with and without mid-decode aborts. The
+    // pruned arm stops paying for rollouts that provably cannot survive
+    // prune(max_tokens=G/4) | max_variance; streams of surviving rollouts
+    // are bit-identical between the arms (the doom-only contract).
+    let cap = (g / 4).max(1);
+    let prune_pipeline =
+        Pipeline::parse_default(&format!("prune(max_tokens={cap}) | max_variance"))?;
+    let prune_problems: Vec<_> =
+        (0..2u64).map(|i| TaskKind::Arith.generate(Split::Train, i)).collect();
+    for online in [false, true] {
+        let label = if online {
+            format!("rollout chunked pruned (cap={cap}, C=16)")
+        } else {
+            format!("rollout chunked unpruned (cap={cap}, C=16)")
+        };
+        let mut iter = 0u64;
+        let mut last_stats = pods::rollout::InferenceStats::default();
+        bench(&label, Some(10), || {
+            iter += 1;
+            let rows = plan_rows(&prune_problems, 32, 9, iter);
+            // fresh verdict state per iteration, exactly like the executor
+            let verdicts = online.then(|| {
+                GroupVerdicts::new(
+                    &prune_pipeline,
+                    prune_problems.len(),
+                    32,
+                    8,
+                    &RewardWeights::default(),
+                )
+            });
+            let (kept, stats) = execute_rows(
+                &engine,
+                &params,
+                None,
+                None,
+                None,
+                1.0,
+                16,
+                RefillMode::Continuous,
+                &rows,
+                &prune_problems,
+                TaskKind::Arith,
+                &RewardWeights::default(),
+                verdicts.as_ref(),
+            )
+            .unwrap();
+            last_stats = stats;
+            black_box(kept);
+        });
+        println!(
+            "  -> decoded {} tok, pruned budget {} over {} rows",
+            last_stats.gen_tokens_decoded, last_stats.gen_tokens_pruned, last_stats.rows_pruned
+        );
+    }
+
     // Real multi-threaded generation: the same 4-prompt iteration fanned
     // over 1/2/4 worker threads (each its own engine replica, each running
     // the chunked driver over its row shard). Results are bit-identical
@@ -117,6 +175,7 @@ fn main() -> anyhow::Result<()> {
                 weights: RewardWeights::default(),
                 decode_chunk: 16,
                 refill: RefillMode::Continuous,
+                online: None,
             };
             black_box(pool.generate(&engine, batch).unwrap());
         });

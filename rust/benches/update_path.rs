@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
     let br = engine.meta.config.rollout_batch;
     let rollouts: Vec<RolloutRecord> = (0..br)
         .map(|b| RolloutRecord {
+            pruned: false,
             tokens: out.tokens.data[b * t..(b + 1) * t].to_vec(),
             pad_len: pads[b],
             gen_mask: out.gen_mask.data[b * g..(b + 1) * g].to_vec(),

@@ -96,6 +96,7 @@ pub fn sections() -> Vec<SectionDoc> {
             keys: vec![
                 KeyDoc::new("decode_chunk", "int", ro.decode_chunk.to_string(), ">= 1; must match a lowered program ({1, 4, 16, G})", "Tokens decoded per `decode_chunk` call."),
                 KeyDoc::new("refill", "string", format!("\"{}\"", ro.refill.name()), "continuous \\| batch", "Slot-refill policy between chunks: admit queued rows into freed slots, or drain the whole batch first."),
+                KeyDoc::new("online_prune", "bool", ro.online_prune.to_string(), "requires `algo.adv_norm = \"after\"`", "Abort rollouts at chunk boundaries once they provably cannot survive the selection pipeline (doom-only verdicts; see docs/DETERMINISM.md)."),
             ],
         },
         SectionDoc {
@@ -255,6 +256,10 @@ mod tests {
         assert_eq!(
             key(&secs, "rollout", "refill").default,
             format!("\"{}\"", cfg.rollout.refill.name())
+        );
+        assert_eq!(
+            key(&secs, "rollout", "online_prune").default,
+            cfg.rollout.online_prune.to_string()
         );
         // [hwsim] — every key present and matching the parsed default
         let hw = &cfg.hwsim;

@@ -115,11 +115,18 @@ pub struct RolloutSection {
     /// queued rows into freed slots; `"batch"` drains the whole batch
     /// first (the legacy call-shaped schedule, kept as a comparison arm).
     pub refill: RefillMode,
+    /// Online selection-aware pruning: abort rollouts at chunk boundaries
+    /// once they provably cannot survive the selection pipeline (doom-only
+    /// verdicts — see `docs/DETERMINISM.md`). Only active for PODS runs
+    /// (`algo.m` set) with `adv_norm = "after"`; pipelines without a
+    /// bounded stage (e.g. no `prune(max_tokens=…)` / `max_variance`)
+    /// never abort anything.
+    pub online_prune: bool,
 }
 
 impl Default for RolloutSection {
     fn default() -> Self {
-        Self { decode_chunk: 16, refill: RefillMode::Continuous }
+        Self { decode_chunk: 16, refill: RefillMode::Continuous, online_prune: false }
     }
 }
 
@@ -129,6 +136,7 @@ impl RolloutSection {
         let r = Self {
             decode_chunk: sec.usize_or("decode_chunk", d.decode_chunk)?,
             refill: RefillMode::parse(&sec.str_or("refill", d.refill.name())?)?,
+            online_prune: sec.bool_or("online_prune", d.online_prune)?,
         };
         r.validate()?;
         Ok(r)
@@ -372,6 +380,18 @@ impl RunConfig {
         self.hwsim.validate()?;
         self.rollout.validate()?;
         self.update.validate()?;
+        // online pruning is only sound when advantages normalize on the
+        // selected subset: "before" reads every rollout's reward, which an
+        // aborted (truncated) stream would perturb
+        if self.rollout.online_prune && self.norm_mode() == NormMode::Before {
+            return Err(anyhow!(
+                "rollout.online_prune requires algo.adv_norm = \"after\": the \
+                 \"before\" mode normalizes advantages over every generated \
+                 rollout's reward, including the ones selection drops, so \
+                 aborting a doomed rollout mid-decode would change the \
+                 normalization statistics (see docs/DETERMINISM.md)"
+            ));
+        }
         Ok(())
     }
 }
@@ -499,6 +519,29 @@ mod tests {
         let cfg = RunConfig::from_str_validated(&text).unwrap();
         assert_eq!(cfg.rollout.decode_chunk, 4);
         assert_eq!(cfg.rollout.refill, crate::rollout::RefillMode::Batch);
+    }
+
+    #[test]
+    fn online_prune_parses_and_requires_after_normalization() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert!(!cfg.rollout.online_prune, "online pruning must be opt-in");
+
+        let text = format!("{MINIMAL}\n[rollout]\nonline_prune = true\n");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert!(cfg.rollout.online_prune);
+
+        // the unsound combination fails at parse with a descriptive error
+        let text = format!(
+            "{}\n[rollout]\nonline_prune = true\n",
+            MINIMAL.replace("lr = 1e-4", "lr = 1e-4\nadv_norm = \"before\"")
+        );
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("online_prune"), "undescriptive: {err}");
+        assert!(err.contains("adv_norm"), "undescriptive: {err}");
+
+        // non-bool values are rejected
+        let text = format!("{MINIMAL}\n[rollout]\nonline_prune = 1\n");
+        assert!(RunConfig::from_str_validated(&text).is_err());
     }
 
     #[test]

@@ -45,13 +45,15 @@ pub use rollout_engine::{GenBatch, PendingGen, RolloutEngine};
 pub use update_engine::{MicroSlot, ShardPlan, UpdateEngine, UpdateOut};
 
 use crate::config::{AlgoKind, RunConfig};
+use crate::coordinator::advantage::NormMode;
 use crate::coordinator::group::{build_update_batch, BatchSelectionStats};
+use crate::coordinator::select::online::GroupVerdicts;
 use crate::coordinator::select::Pipeline;
 use crate::hwsim::SimClock;
 use crate::reward::RewardWeights;
 use crate::runtime::{Engine, ParamStore};
 use crate::tasks::{Split, TaskKind};
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -113,6 +115,11 @@ pub struct StepReport {
     pub gen_tokens_decoded: usize,
     /// `gen_tokens_decoded` minus the useful generated tokens.
     pub gen_tokens_wasted: usize,
+    /// Decode budget released by online pruning this iteration (per
+    /// aborted row: `G` minus its decoded length at the abort boundary).
+    pub gen_tokens_pruned: usize,
+    /// Rollouts aborted mid-decode by online pruning this iteration.
+    pub rows_pruned_online: usize,
     /// Simulated cost of this iteration's inference phase (regardless of
     /// where on the timeline it was charged).
     pub sim_inference: f64,
@@ -204,13 +211,24 @@ impl TrainLoop {
         // chunk-granular charging: a chunk runs to completion even when a
         // row finishes mid-chunk, so each rollout's decode time rounds up
         // to the configured chunk size (per-rollout lengths are partition-
-        // invariant, unlike the physical call counts)
-        let gen_lens: Vec<usize> = groups
-            .iter()
-            .flat_map(|g| g.rollouts.iter().map(|r| r.gen_len as usize))
-            .collect();
-        let sim_inference =
-            cfg.hwsim.chunked_inference_time(&gen_lens, cfg.rollout.decode_chunk);
+        // invariant, unlike the physical call counts). Rollouts aborted by
+        // online pruning charge only their actually-decoded tokens.
+        let mut gen_lens: Vec<usize> = Vec::new();
+        let mut pruned_lens: Vec<usize> = Vec::new();
+        for g in &groups {
+            for r in &g.rollouts {
+                if r.pruned {
+                    pruned_lens.push(r.gen_len.max(0) as usize);
+                } else {
+                    gen_lens.push(r.gen_len.max(0) as usize);
+                }
+            }
+        }
+        let sim_inference = if pruned_lens.is_empty() {
+            cfg.hwsim.chunked_inference_time(&gen_lens, cfg.rollout.decode_chunk)
+        } else {
+            cfg.hwsim.pruned_inference_time(&gen_lens, &pruned_lens, cfg.rollout.decode_chunk)
+        };
 
         // ---- Phase 2: select + advantages -----------------------------
         let (selected, sel_stats) = build_update_batch(
@@ -221,6 +239,21 @@ impl TrainLoop {
             cfg.run.seed,
             iter as u64,
         )?;
+        // The online-pruning soundness invariant, enforced at runtime:
+        // a rollout aborted mid-decode must never survive selection. If it
+        // does, a stage bound lied — fail loudly rather than training on a
+        // truncated stream (see docs/DETERMINISM.md).
+        for s in &selected {
+            if groups[s.group_idx].rollouts[s.rollout_idx].pruned {
+                bail!(
+                    "online pruning soundness violation: selection kept rollout {} of \
+                     group {}, which was aborted mid-decode — a Selector::online_bound \
+                     implementation is unsound",
+                    s.rollout_idx,
+                    s.group_idx
+                );
+            }
+        }
         let sel_rewards: Vec<f32> = selected
             .iter()
             .map(|s| groups[s.group_idx].rollouts[s.rollout_idx].total_reward)
@@ -267,6 +300,8 @@ impl TrainLoop {
             upd_peak_mem: upd.peak_mem_rollouts,
             gen_tokens_decoded: gen_stats.gen_tokens_decoded,
             gen_tokens_wasted: gen_stats.gen_tokens_wasted,
+            gen_tokens_pruned: gen_stats.gen_tokens_pruned,
+            rows_pruned_online: gen_stats.rows_pruned,
             sim_inference,
             sim_update: upd.sim_update,
             sim_step: charged_inference + upd.sim_update,
@@ -284,6 +319,11 @@ impl TrainLoop {
 /// store. The inline sync path pays one extra params copy per iteration,
 /// which is noise next to the per-call literal upload the engine already
 /// does (`lit_f32` copies the full vector on every rollout call).
+///
+/// When `[rollout] online_prune` is on for a PODS run (a selection target
+/// `m` exists and advantages normalize on the selected subset), the
+/// snapshot also seeds one [`GroupVerdicts`] aggregator for the batch —
+/// fresh per iteration, shared by every worker shard.
 fn snapshot_batch(ctx: &StepCtx, iter: usize) -> GenBatch {
     let cfg = ctx.cfg;
     let full: &[f32] = match ctx.base {
@@ -293,6 +333,27 @@ fn snapshot_batch(ctx: &StepCtx, iter: usize) -> GenBatch {
     let lora: Option<&[f32]> =
         if ctx.engine.meta.is_lora() { Some(&ctx.store.params) } else { None };
     let problems = ctx.task.batch(Split::Train, *ctx.prompt_cursor, cfg.run.prompts_per_iter);
+    let weights = RewardWeights::default();
+    let m = match cfg.algo_kind() {
+        AlgoKind::GrpoPods => cfg.algo.m,
+        _ => None,
+    };
+    // `adv_norm = "before"` reads every rollout's reward (including
+    // dropped ones), which a truncated stream would perturb — config
+    // validation rejects the combination, and this gate backstops
+    // programmatically-built configs.
+    let online = match m {
+        Some(m) if cfg.rollout.online_prune && cfg.norm_mode() == NormMode::After => {
+            Some(Arc::new(GroupVerdicts::new(
+                ctx.pipeline,
+                problems.len(),
+                cfg.algo.n,
+                m,
+                &weights,
+            )))
+        }
+        _ => None,
+    };
     GenBatch {
         params: Arc::new(full.to_vec()),
         lora: lora.map(|l| Arc::new(l.to_vec())),
@@ -304,8 +365,9 @@ fn snapshot_batch(ctx: &StepCtx, iter: usize) -> GenBatch {
         run_seed: cfg.run.seed,
         iter: iter as u64,
         task: ctx.task,
-        weights: RewardWeights::default(),
+        weights,
         decode_chunk: cfg.rollout.decode_chunk,
         refill: cfg.rollout.refill,
+        online,
     }
 }

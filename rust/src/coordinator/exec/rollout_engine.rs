@@ -26,6 +26,7 @@
 //! (how the physical work was batched) varies with the partition.
 
 use crate::coordinator::group::PromptGroup;
+use crate::coordinator::select::online::GroupVerdicts;
 use crate::reward::RewardWeights;
 use crate::rollout::{execute_rows, plan_rows, CallRollout, InferenceStats, RefillMode, RowSpec};
 use crate::runtime::Engine;
@@ -68,6 +69,11 @@ pub struct GenBatch {
     pub decode_chunk: usize,
     /// Slot-refill policy (`[rollout] refill`).
     pub refill: RefillMode,
+    /// Shared per-group online-pruning verdict state for this batch
+    /// (`[rollout] online_prune`). One aggregator serves every worker
+    /// shard — a group's rows can span shards, and all of them observe
+    /// and poll the same state. `None` disables pruning.
+    pub online: Option<Arc<GroupVerdicts>>,
 }
 
 /// One queued shard of generation rows for a worker thread.
@@ -291,6 +297,7 @@ fn run_shard(engine: &Engine, batch: &GenBatch, rows: &[RowSpec]) -> Result<Shar
         &batch.problems,
         batch.task,
         &batch.weights,
+        batch.online.as_deref(),
     )
 }
 

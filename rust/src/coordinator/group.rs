@@ -35,6 +35,10 @@ pub struct RolloutRecord {
     pub reward: RewardBreakdown,
     /// Weighted total reward.
     pub total_reward: f32,
+    /// The rollout was aborted mid-decode by online pruning (`gen_len`,
+    /// tokens and reward reflect the truncated stream). The doom-only
+    /// contract guarantees selection never keeps a pruned rollout.
+    pub pruned: bool,
 }
 
 /// All rollouts generated for one prompt in one iteration.
@@ -64,6 +68,7 @@ impl PromptGroup {
                 gen_len: gen_lens.map_or(4, |l| l[i]),
                 reward: RewardBreakdown { accuracy: 0.0, format: 0.0, tag_count: 0.0 },
                 total_reward: r,
+                pruned: false,
             })
             .collect();
         PromptGroup { problem, rollouts }

@@ -67,6 +67,10 @@ pub struct IterStats {
     pub gen_tokens_decoded: usize,
     /// Decoded slots that produced no trainable token.
     pub gen_tokens_wasted: usize,
+    /// Decode budget released by online pruning (`[rollout] online_prune`).
+    pub gen_tokens_pruned: usize,
+    /// Rollouts aborted mid-decode by online pruning.
+    pub rows_pruned_online: usize,
     /// Simulated cost of the inference phase.
     pub sim_inference: f64,
     /// Simulated cost of the update phase (incl. communication).
@@ -305,6 +309,8 @@ impl Trainer {
             upd_peak_mem: r.upd_peak_mem,
             gen_tokens_decoded: r.gen_tokens_decoded,
             gen_tokens_wasted: r.gen_tokens_wasted,
+            gen_tokens_pruned: r.gen_tokens_pruned,
+            rows_pruned_online: r.rows_pruned_online,
             sim_inference: r.sim_inference,
             sim_update: r.sim_update,
             sim_step: r.sim_step,
@@ -337,6 +343,8 @@ impl Trainer {
             upd_shards: r.upd_shards,
             upd_comm_time: r.upd_comm_time,
             upd_peak_mem: r.upd_peak_mem,
+            gen_tokens_pruned: r.gen_tokens_pruned,
+            rows_pruned_online: r.rows_pruned_online,
         });
         Ok(stats)
     }

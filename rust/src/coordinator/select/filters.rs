@@ -99,6 +99,16 @@ impl Selector for Prune {
     fn kind(&self) -> StageKind {
         StageKind::Filter
     }
+    fn online_bound(&self) -> super::online::StageBound {
+        // Only the bare absolute cap is bracketable online: the quantile
+        // and budget criteria depend on the other candidates' (possibly
+        // pending) lengths, so any combination involving them is opaque.
+        match (self.max_tokens, self.quantile, self.budget) {
+            (Some(k), None, None) => super::online::StageBound::LengthCap { max_tokens: k },
+            _ => super::online::StageBound::Opaque,
+        }
+    }
+
     fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>> {
         let lens = ctx.gen_lens();
         // effective per-rollout cap: the tightest of the provided caps

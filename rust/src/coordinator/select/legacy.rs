@@ -51,6 +51,12 @@ impl Selector for MaxVariance {
     fn kind(&self) -> StageKind {
         StageKind::Exact
     }
+    fn online_bound(&self) -> super::online::StageBound {
+        // Lemma 3.1: the kept set is a prefix + suffix of the sorted
+        // order, which the online analysis can exclude rows from via
+        // reward brackets (see select::online).
+        super::online::StageBound::MaxVariance
+    }
     fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>> {
         let m = target(ctx, candidates);
         if m == 0 {

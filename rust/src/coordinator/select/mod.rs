@@ -33,8 +33,10 @@
 
 pub mod filters;
 pub mod legacy;
+pub mod online;
 pub mod spec;
 
+pub use online::{GroupVerdicts, OnlineSelector, StageBound, Verdict};
 pub use spec::{default_registry, Registry, SpecArgs};
 
 use crate::coordinator::downsample::subset_variance;
@@ -143,6 +145,15 @@ pub trait Selector: std::fmt::Debug + Send + Sync {
     /// distinct and in-range; the first stage of a pipeline receives
     /// `0..n`.
     fn select(&self, ctx: &SelectionContext, candidates: &[usize]) -> Result<Vec<usize>>;
+
+    /// What this stage can soundly guarantee about rows *mid-generation*
+    /// for online pruning (see [`online`]). The default — no bound — is
+    /// always sound: opaque stages never cause an abort. Implementations
+    /// must only return a stronger bound when the stage's drop decision is
+    /// provable from reward brackets and monotone lengths alone.
+    fn online_bound(&self) -> online::StageBound {
+        online::StageBound::Opaque
+    }
 }
 
 /// Per-group selection diagnostics, recorded every iteration.
@@ -239,6 +250,12 @@ impl Pipeline {
     /// Stage names, pipeline order.
     pub fn stage_names(&self) -> Vec<&str> {
         self.stages.iter().map(|s| s.name()).collect()
+    }
+
+    /// Per-stage online-pruning bounds, pipeline order (what the
+    /// [`online::OnlineSelector`] analysis walks).
+    pub fn stage_bounds(&self) -> Vec<online::StageBound> {
+        self.stages.iter().map(|s| s.online_bound()).collect()
     }
 
     /// Run the pipeline over the whole group.

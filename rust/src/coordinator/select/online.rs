@@ -1,0 +1,523 @@
+//! Online selection-aware rollout pruning — doom-only verdicts during
+//! generation.
+//!
+//! PODS as published pays for every rollout twice: all `n` rollouts are
+//! decoded to completion, and only then does the selection pipeline drop
+//! `n - m` of them. This module moves the selection decision *into* the
+//! decode loop: given the rewards of already-finished rows and
+//! conservative bounds on unfinished ones (a pending row's reward is
+//! bracketed by the reward model's attainable range; its generated length
+//! only grows), a row may be declared [`Verdict::Doomed`] the moment it
+//! **cannot appear in the selected subset under any completion of the
+//! group**. The chunked decode driver then aborts doomed rows at the next
+//! chunk boundary exactly like EOS retirement, freeing their slots for
+//! refill.
+//!
+//! The load-bearing invariant (pinned by `rust/tests/prune_golden.rs` and
+//! documented in `docs/DETERMINISM.md`): because only provably-doomed rows
+//! are ever cut, the final selection — kept indices, advantages, and hence
+//! the trained parameters — is **bit-identical** to post-hoc selection on
+//! fully-decoded rollouts. Stages without a sound bound report
+//! [`StageBound::Opaque`] and never cause an abort; a pipeline of only
+//! opaque stages prunes nothing.
+//!
+//! Two stage bounds ship today:
+//!
+//! * [`StageBound::LengthCap`] — `prune(max_tokens=K)` (and no other
+//!   criteria) drops exactly the rows whose generated length exceeds `K`,
+//!   so a row is doomed the moment its length crosses `K` — once a
+//!   certificate row (a guaranteed candidate finished within the cap)
+//!   rules out the stage's never-starve guard.
+//! * [`StageBound::MaxVariance`] — Algorithm 2's kept set is always a
+//!   prefix + suffix of the reward-sorted order, so a row with at least
+//!   `m` guaranteed candidates sorting strictly below it *and* at least
+//!   `m` sorting strictly above it under every completion can never be
+//!   kept, regardless of pending outcomes.
+
+use super::Pipeline;
+use crate::reward::RewardWeights;
+use std::sync::Mutex;
+
+/// Online verdict for one rollout row mid-generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// The row may still end up in the selected subset — keep decoding.
+    Unknown,
+    /// The row provably cannot survive selection under any completion of
+    /// its group — abort it at the next chunk boundary.
+    Doomed,
+}
+
+/// What one selection stage can soundly guarantee about rows
+/// mid-generation (declared via [`super::Selector::online_bound`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageBound {
+    /// No sound bound: the stage's output may depend on pending rewards or
+    /// lengths in ways the online analysis cannot bracket. Never dooms;
+    /// rows surviving an opaque stage are treated as unknowable candidates
+    /// for every later stage.
+    Opaque,
+    /// The stage drops exactly the candidates whose generated length
+    /// exceeds `max_tokens` (the `prune(max_tokens=K)` filter with no
+    /// quantile/budget criteria), modulo its never-starve guard.
+    LengthCap {
+        /// The stage's absolute generated-length cap.
+        max_tokens: usize,
+    },
+    /// The exact max-variance stage (Algorithm 2): its kept set is a
+    /// prefix + suffix of the reward-sorted candidate order, enabling the
+    /// `m`-below / `m`-above exclusion certificate.
+    MaxVariance,
+}
+
+/// Observation state of one rollout row during generation.
+#[derive(Debug, Clone, Copy)]
+enum RowObs {
+    /// Still decoding; `len` is the generated-token count so far
+    /// (monotone — only ever raised).
+    Pending { len: usize },
+    /// Finished (EOS or budget): final reward and generated length.
+    Finished { reward: f32, len: usize },
+    /// A doom verdict was issued; `len` freezes at the abort point.
+    Doomed { len: usize },
+}
+
+impl RowObs {
+    fn len(&self) -> usize {
+        match *self {
+            RowObs::Pending { len } | RowObs::Finished { len, .. } | RowObs::Doomed { len } => len,
+        }
+    }
+}
+
+/// Candidate state of a row while walking the pipeline's stage bounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Cand {
+    /// Guaranteed to be a candidate at this point under every completion.
+    In,
+    /// May or may not be a candidate — usable for nothing.
+    Maybe,
+    /// Guaranteed to have been dropped by some stage under every
+    /// completion — the row can never be selected.
+    Out,
+}
+
+/// Incremental online selector for **one prompt group**.
+///
+/// Feed it observations as rows finish ([`Self::observe_finished`]) and as
+/// pending rows grow ([`Self::observe_len`]); [`Self::poll`] re-runs the
+/// conservative pipeline analysis and returns newly-doomed rows. Verdicts
+/// are monotone: a doomed row stays doomed.
+#[derive(Debug)]
+pub struct OnlineSelector {
+    bounds: Vec<StageBound>,
+    m: usize,
+    rmin: f32,
+    rmax: f32,
+    rows: Vec<RowObs>,
+    /// Observations changed since the last [`Self::poll`] analysis. The
+    /// analysis is a pure function of the observations, so a clean state
+    /// cannot doom anything new — `poll` in the decode hot loop is O(1)
+    /// until something is actually observed.
+    dirty: bool,
+}
+
+impl OnlineSelector {
+    /// Selector for a group of `n` rollouts selected down to `m`, with
+    /// pending rewards bracketed in `[rmin, rmax]` and the given per-stage
+    /// bounds (pipeline order).
+    pub fn new(bounds: Vec<StageBound>, n: usize, m: usize, rmin: f32, rmax: f32) -> Self {
+        Self { bounds, m, rmin, rmax, rows: vec![RowObs::Pending { len: 0 }; n], dirty: true }
+    }
+
+    /// Number of rows in the group.
+    pub fn n(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Record that `row` finished with the given total reward and final
+    /// generated length. Ignored for rows already finished or doomed.
+    pub fn observe_finished(&mut self, row: usize, reward: f32, gen_len: usize) {
+        let Some(slot) = self.rows.get_mut(row) else { return };
+        if let RowObs::Pending { .. } = slot {
+            *slot = RowObs::Finished { reward, len: gen_len };
+            // the bracket is derived from the reward model's attainable
+            // range; widen defensively so certificates stay sound even if
+            // an observed reward escapes it
+            debug_assert!(
+                (self.rmin..=self.rmax).contains(&reward),
+                "observed reward {reward} outside bracket [{}, {}]",
+                self.rmin,
+                self.rmax
+            );
+            self.rmin = self.rmin.min(reward);
+            self.rmax = self.rmax.max(reward);
+            self.dirty = true;
+        }
+    }
+
+    /// Raise a pending row's generated-length watermark (lengths are
+    /// monotone; lower observations are ignored).
+    pub fn observe_len(&mut self, row: usize, gen_len: usize) {
+        let Some(slot) = self.rows.get_mut(row) else { return };
+        if let RowObs::Pending { len } = slot {
+            if gen_len > *len {
+                *len = gen_len;
+                self.dirty = true;
+            }
+        }
+    }
+
+    /// Current verdict for `row`.
+    pub fn verdict(&self, row: usize) -> Verdict {
+        match self.rows.get(row) {
+            Some(RowObs::Doomed { .. }) => Verdict::Doomed,
+            _ => Verdict::Unknown,
+        }
+    }
+
+    /// Rows doomed so far.
+    pub fn doomed_count(&self) -> usize {
+        self.rows.iter().filter(|r| matches!(r, RowObs::Doomed { .. })).count()
+    }
+
+    /// Re-run the conservative analysis and issue verdicts: every pending
+    /// row that is provably dropped by the pipeline under **every**
+    /// completion of the group becomes [`Verdict::Doomed`]. Returns the
+    /// newly-doomed row indices (ascending). No-op (and O(1)) when
+    /// nothing was observed since the last poll.
+    pub fn poll(&mut self) -> Vec<usize> {
+        if !self.dirty {
+            return Vec::new();
+        }
+        self.dirty = false;
+        let cand = self.analyze();
+        let mut newly = Vec::new();
+        for (i, c) in cand.iter().enumerate() {
+            if *c == Cand::Out {
+                if let RowObs::Pending { len } = self.rows[i] {
+                    self.rows[i] = RowObs::Doomed { len };
+                    newly.push(i);
+                }
+            }
+        }
+        newly
+    }
+
+    /// Reward bracket of one row: a point for finished rows, the model's
+    /// attainable range for pending (or already-doomed) rows.
+    fn bracket(&self, i: usize) -> (f32, f32) {
+        match self.rows[i] {
+            RowObs::Finished { reward, .. } => (reward, reward),
+            _ => (self.rmin, self.rmax),
+        }
+    }
+
+    /// Walk the stage bounds left to right, tracking for every row whether
+    /// it is a guaranteed candidate (`In`), guaranteed dropped (`Out`), or
+    /// unknowable (`Maybe`) at each point — under every completion of the
+    /// group. Rows ending `Out` can never be selected: stages only shrink
+    /// candidate sets, so a guaranteed drop anywhere is terminal.
+    fn analyze(&self) -> Vec<Cand> {
+        let n = self.rows.len();
+        let mut cand = vec![Cand::In; n];
+        for bound in &self.bounds {
+            match *bound {
+                StageBound::Opaque => {
+                    for c in cand.iter_mut() {
+                        if *c != Cand::Out {
+                            *c = Cand::Maybe;
+                        }
+                    }
+                }
+                StageBound::LengthCap { max_tokens } => {
+                    // Certificate against the stage's never-starve guard:
+                    // a guaranteed candidate that already finished within
+                    // the cap keeps the stage's output non-empty, so the
+                    // guard can never resurrect an over-cap row.
+                    let cert = cand.iter().zip(&self.rows).any(|(c, r)| {
+                        *c == Cand::In
+                            && matches!(r, RowObs::Finished { len, .. } if *len <= max_tokens)
+                    });
+                    for (c, r) in cand.iter_mut().zip(&self.rows) {
+                        if *c == Cand::Out {
+                            continue;
+                        }
+                        if r.len() > max_tokens {
+                            // over the cap already (lengths only grow):
+                            // dropped if it reaches this stage, already
+                            // dropped if it does not
+                            *c = if cert { Cand::Out } else { Cand::Maybe };
+                        } else if !(*c == Cand::In && matches!(r, RowObs::Finished { .. })) {
+                            // pending rows may still cross the cap; rows
+                            // that were only Maybe stay Maybe
+                            *c = Cand::Maybe;
+                        }
+                    }
+                }
+                StageBound::MaxVariance => {
+                    let next: Vec<Cand> = (0..n)
+                        .map(|i| {
+                            if cand[i] == Cand::Out {
+                                return Cand::Out;
+                            }
+                            let (lo_i, hi_i) = self.bracket(i);
+                            let mut below = 0usize;
+                            let mut above = 0usize;
+                            for j in 0..n {
+                                if j == i || cand[j] != Cand::In {
+                                    continue;
+                                }
+                                let (lo_j, hi_j) = self.bracket(j);
+                                // strict sorted-order relations under every
+                                // completion (argsort ties break by index)
+                                if hi_j < lo_i || (hi_j == lo_i && j < i) {
+                                    below += 1;
+                                }
+                                if lo_j > hi_i || (lo_j == hi_i && j > i) {
+                                    above += 1;
+                                }
+                            }
+                            // Lemma 3.1: the kept set is a prefix + suffix
+                            // of the sorted order with at most m on each
+                            // side — a row with >= m guaranteed candidates
+                            // strictly below AND strictly above it is in
+                            // neither block under any completion.
+                            if below >= self.m && above >= self.m {
+                                Cand::Out
+                            } else {
+                                Cand::Maybe
+                            }
+                        })
+                        .collect();
+                    cand = next;
+                }
+            }
+        }
+        cand
+    }
+}
+
+/// Shared per-group verdict state for one generation batch, aggregated
+/// across worker shards.
+///
+/// The rollout thread pool decodes contiguous row shards concurrently and
+/// a prompt group's rows can span shards, so the per-group
+/// [`OnlineSelector`]s live behind mutexes in one `Arc`-shared registry:
+/// every worker reports retirements and polls verdicts against the same
+/// state, whatever shard the row landed on. Lock poisoning (a sibling
+/// worker panicked) degrades to "never abort" — pruning is an
+/// optimization, not a correctness dependency.
+#[derive(Debug)]
+pub struct GroupVerdicts {
+    groups: Vec<Mutex<OnlineSelector>>,
+}
+
+impl GroupVerdicts {
+    /// Verdict state for `groups` prompt groups of `n` rollouts each,
+    /// selected down to `m` by `pipeline`. The pending-reward bracket is
+    /// the reward model's attainable range under `weights` (components
+    /// are each in `[0, 1]`).
+    pub fn new(
+        pipeline: &Pipeline,
+        groups: usize,
+        n: usize,
+        m: usize,
+        weights: &RewardWeights,
+    ) -> Self {
+        let bounds = pipeline.stage_bounds();
+        let rmin = 0.0f32;
+        let rmax = weights.accuracy.max(0.0) + weights.format.max(0.0) + weights.tags.max(0.0);
+        Self {
+            groups: (0..groups)
+                .map(|_| Mutex::new(OnlineSelector::new(bounds.clone(), n, m, rmin, rmax)))
+                .collect(),
+        }
+    }
+
+    /// Report a finished row's total reward and final generated length.
+    pub fn observe_finished(&self, group: usize, rollout: usize, reward: f32, gen_len: usize) {
+        let Some(slot) = self.groups.get(group) else { return };
+        let Ok(mut sel) = slot.lock() else { return };
+        sel.observe_finished(rollout, reward, gen_len);
+    }
+
+    /// Update a live row's generated length, re-run the analysis, and
+    /// report whether the row is doomed (the chunked driver aborts it at
+    /// this boundary when `true`).
+    pub fn poll_doomed(&self, group: usize, rollout: usize, gen_len: usize) -> bool {
+        let Some(slot) = self.groups.get(group) else { return false };
+        let Ok(mut sel) = slot.lock() else { return false };
+        sel.observe_len(rollout, gen_len);
+        sel.poll();
+        sel.verdict(rollout) == Verdict::Doomed
+    }
+
+    /// Total rows doomed so far across all groups.
+    pub fn doomed_count(&self) -> usize {
+        self.groups
+            .iter()
+            .map(|g| g.lock().map_or(0, |s| s.doomed_count()))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::select::Pipeline;
+
+    fn cap_mv(k: usize, m: usize, n: usize) -> OnlineSelector {
+        OnlineSelector::new(
+            vec![StageBound::LengthCap { max_tokens: k }, StageBound::MaxVariance],
+            n,
+            m,
+            0.0,
+            3.0,
+        )
+    }
+
+    #[test]
+    fn pipeline_reports_stage_bounds() {
+        let p = Pipeline::parse_default("prune(max_tokens=32) | max_variance").unwrap();
+        assert_eq!(
+            p.stage_bounds(),
+            vec![StageBound::LengthCap { max_tokens: 32 }, StageBound::MaxVariance]
+        );
+        // quantile/budget criteria make the cap data-dependent: opaque
+        let p = Pipeline::parse_default("prune(quantile=0.75) | percentile").unwrap();
+        assert_eq!(p.stage_bounds(), vec![StageBound::Opaque, StageBound::Opaque]);
+        let p = Pipeline::parse_default("prune(max_tokens=32, budget=99) | random").unwrap();
+        assert_eq!(p.stage_bounds(), vec![StageBound::Opaque, StageBound::Opaque]);
+        let p = Pipeline::parse_default("drop_zero_variance | max_reward").unwrap();
+        assert_eq!(p.stage_bounds(), vec![StageBound::Opaque, StageBound::Opaque]);
+    }
+
+    /// A row over the cap is doomed only once a finished row within the
+    /// cap certifies the never-starve guard cannot trigger.
+    #[test]
+    fn length_cap_requires_a_survivor_certificate() {
+        let mut sel = cap_mv(10, 2, 4);
+        sel.observe_len(0, 11);
+        assert!(sel.poll().is_empty(), "no finished-under-cap row: no doom");
+        assert_eq!(sel.verdict(0), Verdict::Unknown);
+        // a finished row within the cap flips the certificate
+        sel.observe_finished(1, 1.0, 8);
+        assert_eq!(sel.poll(), vec![0]);
+        assert_eq!(sel.verdict(0), Verdict::Doomed);
+        // verdicts are monotone and not re-issued
+        assert!(sel.poll().is_empty());
+        assert_eq!(sel.verdict(0), Verdict::Doomed);
+        // rows within the cap are never doomed by the cap
+        sel.observe_len(2, 10);
+        assert!(sel.poll().is_empty());
+        assert_eq!(sel.verdict(2), Verdict::Unknown);
+    }
+
+    /// A finished row over the cap does not certify (it is itself dropped,
+    /// so it cannot keep the stage's output non-empty).
+    #[test]
+    fn over_cap_finisher_is_no_certificate() {
+        let mut sel = cap_mv(10, 2, 3);
+        sel.observe_finished(0, 1.0, 20);
+        sel.observe_len(1, 15);
+        assert!(sel.poll().is_empty(), "only over-cap rows finished: guard may fire");
+    }
+
+    /// The max-variance certificate: a pending row with `m` guaranteed
+    /// candidates forced strictly below it and `m` forced strictly above
+    /// it (reward bracket + index tie-break) can never enter the
+    /// prefix+suffix kept set.
+    #[test]
+    fn max_variance_dooms_bracket_excluded_pending_rows() {
+        let mut sel =
+            OnlineSelector::new(vec![StageBound::MaxVariance], 3, 1, 0.0, 3.0);
+        // idx0 finished at the bracket floor below the pending row, idx2
+        // finished at the ceiling above it
+        sel.observe_finished(0, 0.0, 4);
+        sel.observe_finished(2, 3.0, 4);
+        assert_eq!(sel.poll(), vec![1]);
+        assert_eq!(sel.verdict(1), Verdict::Doomed);
+    }
+
+    #[test]
+    fn max_variance_needs_both_sides() {
+        let mut sel = OnlineSelector::new(vec![StageBound::MaxVariance], 3, 1, 0.0, 3.0);
+        sel.observe_finished(0, 0.0, 4);
+        // nothing forced above the pending row: it could be the maximum
+        assert!(sel.poll().is_empty());
+
+        // index tie-break matters: a ceiling finisher at a LOWER index than
+        // the pending row does not sort above it when the pending row also
+        // reaches the ceiling
+        let mut sel = OnlineSelector::new(vec![StageBound::MaxVariance], 3, 1, 0.0, 3.0);
+        sel.observe_finished(0, 3.0, 4); // ceiling, but idx 0 < 2
+        sel.observe_finished(1, 0.0, 4);
+        sel.observe_len(2, 1);
+        assert!(sel.poll().is_empty(), "idx2 at the ceiling would sort above idx0");
+    }
+
+    /// Opaque stages poison everything after them: no dooms from a
+    /// max-variance stage behind an opaque filter.
+    #[test]
+    fn opaque_prefix_disables_later_bounds() {
+        let mut sel = OnlineSelector::new(
+            vec![StageBound::Opaque, StageBound::MaxVariance],
+            3,
+            1,
+            0.0,
+            3.0,
+        );
+        sel.observe_finished(0, 0.0, 4);
+        sel.observe_finished(2, 3.0, 4);
+        assert!(sel.poll().is_empty(), "opaque stage makes candidacy unknowable");
+    }
+
+    /// An all-opaque pipeline never dooms anything, whatever it observes.
+    #[test]
+    fn opaque_only_pipelines_never_doom() {
+        for spec in ["percentile", "random", "drop_zero_variance | percentile", "first"] {
+            let p = Pipeline::parse_default(spec).unwrap();
+            let mut sel = OnlineSelector::new(p.stage_bounds(), 6, 2, 0.0, 3.0);
+            for i in 0..4 {
+                sel.observe_finished(i, (i as f32) * 0.75, 100 + i);
+            }
+            sel.observe_len(4, 10_000);
+            assert!(sel.poll().is_empty(), "{spec:?} doomed a row");
+            for i in 0..6 {
+                assert_eq!(sel.verdict(i), Verdict::Unknown, "{spec:?} row {i}");
+            }
+        }
+    }
+
+    /// GroupVerdicts shares state across observers and counts dooms.
+    #[test]
+    fn group_verdicts_aggregate_per_group() {
+        let p = Pipeline::parse_default("prune(max_tokens=8) | max_variance").unwrap();
+        let v = GroupVerdicts::new(&p, 2, 4, 2, &RewardWeights::default());
+        assert_eq!(v.doomed_count(), 0);
+        // group 0: certificate + an over-cap live row
+        v.observe_finished(0, 1, 2.0, 6);
+        assert!(!v.poll_doomed(0, 0, 8), "at the cap is within the cap");
+        assert!(v.poll_doomed(0, 0, 9));
+        assert_eq!(v.doomed_count(), 1);
+        // group 1 is independent state: same shape, no certificate yet
+        assert!(!v.poll_doomed(1, 0, 9));
+        // out-of-range queries are inert
+        assert!(!v.poll_doomed(7, 0, 9));
+        v.observe_finished(7, 0, 1.0, 1);
+    }
+
+    /// The bracket ceiling follows the reward weights.
+    #[test]
+    fn bracket_tracks_reward_weights() {
+        let p = Pipeline::parse_default("max_variance").unwrap();
+        let w = RewardWeights { accuracy: 1.0, format: 0.0, tags: 0.0 };
+        let v = GroupVerdicts::new(&p, 1, 3, 1, &w);
+        // with rmax = 1.0, a finisher at 1.0 above and 0.0 below dooms the
+        // middle pending row
+        v.observe_finished(0, 0, 0.0, 4);
+        v.observe_finished(0, 2, 1.0, 4);
+        assert!(v.poll_doomed(0, 1, 0));
+    }
+}

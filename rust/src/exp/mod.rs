@@ -11,6 +11,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod prune;
 pub mod sched;
 pub mod shard;
 pub mod table3;
@@ -102,6 +103,8 @@ pub struct CfgBuilder {
     pub decode_chunk: usize,
     /// Slot-refill policy: "continuous" | "batch" (rollout.refill).
     pub refill: String,
+    /// Online selection-aware pruning (rollout.online_prune).
+    pub online_prune: bool,
     /// Simulated update shards (update.shards).
     pub upd_shards: usize,
     /// Rows per update micro-batch, 0 = profile B_u (update.micro_batch).
@@ -141,6 +144,7 @@ impl Default for CfgBuilder {
             schedule: "sync".into(),
             decode_chunk: RolloutSection::default().decode_chunk,
             refill: "continuous".into(),
+            online_prune: RolloutSection::default().online_prune,
             upd_shards: UpdateSection::default().shards,
             upd_micro_batch: UpdateSection::default().micro_batch,
             sft_steps: 0,
@@ -186,6 +190,7 @@ impl CfgBuilder {
             rollout: RolloutSection {
                 decode_chunk: self.decode_chunk,
                 refill: crate::rollout::RefillMode::parse(&self.refill)?,
+                online_prune: self.online_prune,
             },
             update: UpdateSection { shards: self.upd_shards, micro_batch: self.upd_micro_batch },
             sft: if self.sft_steps > 0 {

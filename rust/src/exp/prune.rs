@@ -1,0 +1,405 @@
+//! Prune study — tokens saved and wall-clock recovered by online
+//! selection-aware rollout pruning, swept over `decode_chunk × pipeline`.
+//!
+//! Not a paper figure: this driver quantifies what `[rollout]
+//! online_prune` buys. It runs entirely on the cost model (no artifacts):
+//! synthetic prompt groups with deterministic reward/length distributions
+//! are decoded by a simulated chunk loop that consults the real
+//! [`OnlineSelector`] analysis at every boundary — rows it dooms abort
+//! with their decoded-so-far length, exactly like the chunked driver. For
+//! each cell the study reports the generated-token bill with and without
+//! pruning and prices both with [`HwModel::chunked_inference_time`] /
+//! [`HwModel::pruned_inference_time`].
+//!
+//! Two shapes must reproduce (asserted by this module's tests):
+//!
+//! * pipelines with a token-budget stage (`prune(max_tokens=K) | …`) save
+//!   tokens — the doom-only contract still recovers most of the decode
+//!   spend on over-long rollouts;
+//! * pipelines of only opaque stages save exactly nothing (never prune
+//!   speculatively), and the post-hoc selection over the pruned groups is
+//!   identical to selection over the fully-decoded ones.
+
+use crate::coordinator::select::online::OnlineSelector;
+use crate::coordinator::select::Pipeline;
+use crate::hwsim::HwModel;
+use crate::metrics::{ascii_plot, write_csv_rows, CsvRow};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Rollouts generated per prompt (the paper's default n).
+const N: usize = 64;
+/// Update size after down-sampling.
+const M: usize = 16;
+/// Prompt groups per simulated iteration.
+const GROUPS: usize = 4;
+/// Generation budget G of the simulated profile.
+const G: usize = 64;
+/// Decode chunk sizes swept (the artifact set's lowered programs).
+const CHUNK_SWEEP: [usize; 4] = [1, 4, 16, 64];
+/// Pipelines swept: token-budget stages at two caps, plus the bare
+/// exact stage and an opaque baseline that must never prune.
+const PIPELINES: [&str; 4] = [
+    "prune(max_tokens=16) | max_variance",
+    "prune(max_tokens=32) | max_variance",
+    "max_variance",
+    "percentile",
+];
+/// Reward bracket of the rule-based reward model under default weights.
+const RMAX: f32 = 3.0;
+/// Seed of the deterministic synthetic groups (per-group streams derive
+/// from it by XOR with the group index).
+const SIM_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// One synthetic rollout row: what a full decode would produce.
+#[derive(Debug, Clone, Copy)]
+pub struct SimRow {
+    /// Generated length of the fully-decoded rollout (tokens incl. EOS).
+    pub final_len: usize,
+    /// Total reward of the fully-decoded rollout (0.25-grid, `[0, 3]`).
+    pub final_reward: f32,
+}
+
+/// Outcome of simulating one group's generation under online pruning.
+#[derive(Debug, Clone)]
+pub struct SimGroupOut {
+    /// Per row: decoded length when the loop ended (final length for
+    /// finished rows, the abort boundary for pruned ones).
+    pub decoded_len: Vec<usize>,
+    /// Per row: was the row aborted by a doom verdict?
+    pub aborted: Vec<bool>,
+}
+
+/// Deterministic synthetic group: a mix of short confident finishers and
+/// long low-signal tails, rewards on the 0.25 grid with the usual
+/// bimodal (solved / unsolved) mass.
+pub fn sim_group(rng: &mut Rng, n: usize, budget: usize) -> Vec<SimRow> {
+    (0..n)
+        .map(|_| {
+            let long_tail = rng.gen_bool(0.4);
+            let final_len = if long_tail {
+                // tail rollouts ramble to (or near) the budget
+                (budget / 2 + rng.below(budget / 2 + 1)).min(budget)
+            } else {
+                1 + rng.below(budget / 4)
+            };
+            let final_reward = if long_tail {
+                // long rollouts rarely score: mostly 0, sometimes partial
+                if rng.gen_bool(0.8) { 0.0 } else { 0.25 * (1 + rng.below(4)) as f32 }
+            } else if rng.gen_bool(0.5) {
+                RMAX // clean solve: accuracy + format + tags
+            } else {
+                0.25 * rng.below(8) as f32
+            };
+            SimRow { final_len, final_reward }
+        })
+        .collect()
+}
+
+/// Simulate one group's chunked decode against the online analysis:
+/// every live row advances `chunk` tokens per boundary; rows reaching
+/// their final length retire (observing their true reward); every
+/// boundary the live rows are polled and doomed ones abort.
+pub fn simulate_group(rows: &[SimRow], pipeline: &Pipeline, m: usize, chunk: usize) -> SimGroupOut {
+    let n = rows.len();
+    let mut sel = OnlineSelector::new(pipeline.stage_bounds(), n, m, 0.0, RMAX);
+    let mut decoded = vec![0usize; n];
+    let mut live = vec![true; n];
+    let chunk = chunk.max(1);
+    let mut aborted = vec![false; n];
+    while live.iter().any(|&l| l) {
+        // advance one chunk, retiring rows that reach their final length
+        for i in 0..n {
+            if !live[i] {
+                continue;
+            }
+            decoded[i] = (decoded[i] + chunk).min(rows[i].final_len.max(1));
+            if decoded[i] >= rows[i].final_len.max(1) {
+                live[i] = false;
+                sel.observe_finished(i, rows[i].final_reward, rows[i].final_len);
+            }
+        }
+        // boundary: poll verdicts, abort doomed rows
+        for i in 0..n {
+            if !live[i] {
+                continue;
+            }
+            sel.observe_len(i, decoded[i]);
+            sel.poll();
+            if sel.verdict(i) == crate::coordinator::select::Verdict::Doomed {
+                live[i] = false;
+                aborted[i] = true;
+            }
+        }
+    }
+    SimGroupOut { decoded_len: decoded, aborted }
+}
+
+/// One (chunk, pipeline) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct PruneRow {
+    /// Decode chunk size of the cell.
+    pub chunk: usize,
+    /// Pipeline spec of the cell.
+    pub pipeline: String,
+    /// Rollouts simulated (groups × n).
+    pub rollouts: usize,
+    /// Rollouts aborted by doom verdicts.
+    pub rows_pruned: usize,
+    /// Generated-token bill without pruning (per-rollout ceil-to-chunk).
+    pub gen_tokens_full: usize,
+    /// Generated-token bill with pruning (aborted rows at their truncated
+    /// lengths).
+    pub gen_tokens_pruned_run: usize,
+    /// `gen_tokens_full - gen_tokens_pruned_run`.
+    pub tokens_saved: usize,
+    /// Simulated inference time without pruning.
+    pub sim_unpruned: f64,
+    /// Simulated inference time with pruning.
+    pub sim_pruned: f64,
+    /// `sim_unpruned / sim_pruned` (1.0 when nothing was pruned).
+    pub speedup: f64,
+}
+
+impl CsvRow for PruneRow {
+    fn csv_header() -> &'static str {
+        "chunk,pipeline,rollouts,rows_pruned,gen_tokens_full,gen_tokens_pruned_run,\
+         tokens_saved,sim_unpruned,sim_pruned,speedup"
+    }
+
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{}",
+            self.chunk,
+            self.pipeline.replace(' ', ""),
+            self.rollouts,
+            self.rows_pruned,
+            self.gen_tokens_full,
+            self.gen_tokens_pruned_run,
+            self.tokens_saved,
+            self.sim_unpruned,
+            self.sim_pruned,
+            self.speedup
+        )
+    }
+}
+
+/// Ceil-to-chunk token bill for a list of per-rollout lengths.
+fn chunked_tokens(lens: &[usize], chunk: usize) -> usize {
+    let c = chunk.max(1);
+    lens.iter().map(|&t| t.div_ceil(c) * c).sum()
+}
+
+/// Build the sweep grid from a cost model (row-major: pipeline, then
+/// chunk ascending). Deterministic: the synthetic groups are seeded per
+/// cell from the same stream.
+pub fn sweep(hw: &HwModel) -> Result<Vec<PruneRow>> {
+    let mut out = Vec::with_capacity(PIPELINES.len() * CHUNK_SWEEP.len());
+    for spec in PIPELINES {
+        let pipeline = Pipeline::parse_default(spec)?;
+        for &chunk in &CHUNK_SWEEP {
+            // identical groups for every cell: seed by group index only
+            let mut full_lens = Vec::new();
+            let mut kept_lens = Vec::new();
+            let mut pruned_lens = Vec::new();
+            let mut rows_pruned = 0usize;
+            for g in 0..GROUPS {
+                let mut rng = Rng::seed_from_u64(SIM_SEED ^ g as u64);
+                let rows = sim_group(&mut rng, N, G);
+                let sim = simulate_group(&rows, &pipeline, M, chunk);
+                for (i, r) in rows.iter().enumerate() {
+                    full_lens.push(r.final_len);
+                    if sim.aborted[i] {
+                        pruned_lens.push(sim.decoded_len[i]);
+                        rows_pruned += 1;
+                    } else {
+                        kept_lens.push(r.final_len);
+                    }
+                }
+            }
+            let gen_tokens_full = chunked_tokens(&full_lens, chunk);
+            let gen_tokens_pruned_run =
+                chunked_tokens(&kept_lens, chunk) + chunked_tokens(&pruned_lens, chunk);
+            let sim_unpruned = hw.chunked_inference_time(&full_lens, chunk);
+            let sim_pruned = hw.pruned_inference_time(&kept_lens, &pruned_lens, chunk);
+            out.push(PruneRow {
+                chunk,
+                pipeline: spec.to_string(),
+                rollouts: GROUPS * N,
+                rows_pruned,
+                gen_tokens_full,
+                gen_tokens_pruned_run,
+                tokens_saved: gen_tokens_full.saturating_sub(gen_tokens_pruned_run),
+                sim_unpruned,
+                sim_pruned,
+                speedup: sim_unpruned / sim_pruned.max(1e-12),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Run the study: write `<out_dir>/prune.csv` and print the tokens-saved
+/// curves (one per pipeline) plus the wall-clock recovery table.
+pub fn run(out_dir: &str) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let hw = HwModel::default();
+    let rows = sweep(&hw)?;
+    write_csv_rows(Path::new(&format!("{out_dir}/prune.csv")), &rows)?;
+
+    let curves: Vec<(String, Vec<(f64, f64)>)> = PIPELINES
+        .iter()
+        .map(|&spec| {
+            let pts: Vec<(f64, f64)> = rows
+                .iter()
+                .filter(|r| r.pipeline == spec)
+                .map(|r| (r.chunk as f64, r.tokens_saved as f64))
+                .collect();
+            (spec.to_string(), pts)
+        })
+        .collect();
+    let series: Vec<(&str, &[(f64, f64)])> =
+        curves.iter().map(|(n, p)| (n.as_str(), p.as_slice())).collect();
+    println!(
+        "Prune study: generated tokens saved vs decode chunk \
+         (n = {N} -> m = {M}, {GROUPS} groups, G = {G})"
+    );
+    println!("{}", ascii_plot(&series, 64, 14));
+    for r in &rows {
+        println!(
+            "  C={:<3} {:<36} pruned {:>3}/{:<3} rows | tokens {:>6} -> {:>6} \
+             (saved {:>5}) | sim {:>7.2}s -> {:>7.2}s ({:.2}x)",
+            r.chunk,
+            r.pipeline,
+            r.rows_pruned,
+            r.rollouts,
+            r.gen_tokens_full,
+            r.gen_tokens_pruned_run,
+            r.tokens_saved,
+            r.sim_unpruned,
+            r.sim_pruned,
+            r.speedup
+        );
+    }
+    println!(
+        "  (doom-only verdicts: opaque pipelines save exactly nothing; the \
+         selection over pruned groups is bit-identical to post-hoc — see \
+         docs/DETERMINISM.md)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::advantage::NormMode;
+    use crate::coordinator::group::{build_update_batch, PromptGroup};
+
+    /// Acceptance shapes: token-budget pipelines save tokens at every
+    /// chunk size; opaque pipelines save exactly nothing.
+    #[test]
+    fn sweep_shapes_match_the_doom_only_contract() {
+        let rows = sweep(&HwModel::default()).unwrap();
+        assert_eq!(rows.len(), PIPELINES.len() * CHUNK_SWEEP.len());
+        for r in &rows {
+            assert!(r.sim_pruned <= r.sim_unpruned + 1e-9, "pruning must never cost time");
+            assert!(r.gen_tokens_pruned_run <= r.gen_tokens_full);
+            if r.pipeline.contains("max_tokens") {
+                if r.chunk < G {
+                    // a chunk boundary exists before the budget: over-cap
+                    // tails must get caught and their decode spend saved
+                    assert!(
+                        r.rows_pruned > 0 && r.tokens_saved > 0,
+                        "token-budget pipeline saved nothing at C={}: {r:?}",
+                        r.chunk
+                    );
+                    assert!(r.speedup > 1.0, "C={} {:?}", r.chunk, r.pipeline);
+                } else {
+                    // C = G decodes everything in one chunk: no boundary,
+                    // nothing can abort — the study shows the trade-off
+                    assert_eq!(r.rows_pruned, 0, "no boundary, no pruning");
+                }
+            }
+            if r.pipeline == "percentile" {
+                assert_eq!(r.rows_pruned, 0, "opaque pipeline must never prune");
+                assert_eq!(r.tokens_saved, 0);
+            }
+        }
+        // a tighter cap saves at least as much as a looser one per chunk
+        for &c in &CHUNK_SWEEP {
+            let saved = |spec: &str| {
+                rows.iter().find(|r| r.chunk == c && r.pipeline == spec).unwrap().tokens_saved
+            };
+            assert!(
+                saved("prune(max_tokens=16) | max_variance")
+                    >= saved("prune(max_tokens=32) | max_variance"),
+                "cap monotonicity broken at C={c}"
+            );
+        }
+    }
+
+    /// The simulated online world selects identically to post-hoc
+    /// selection on the fully-decoded groups — the prune.csv numbers
+    /// measure a transformation that provably does not change training.
+    #[test]
+    fn simulated_selection_matches_post_hoc() {
+        let pipeline = Pipeline::parse_default("prune(max_tokens=16) | max_variance").unwrap();
+        for g in 0..GROUPS as u64 {
+            let mut rng = Rng::seed_from_u64(SIM_SEED ^ g);
+            let rows = sim_group(&mut rng, N, G);
+            let sim = simulate_group(&rows, &pipeline, M, 4);
+            let full_rewards: Vec<f32> = rows.iter().map(|r| r.final_reward).collect();
+            let full_lens: Vec<i32> = rows.iter().map(|r| r.final_len as i32).collect();
+            // online world: aborted rows carry truncated lengths and a
+            // reward the verifier computed on the truncated stream — any
+            // bracket value; 0.0 here (garbage scores nothing)
+            let online_rewards: Vec<f32> = full_rewards
+                .iter()
+                .zip(&sim.aborted)
+                .map(|(&r, &a)| if a { 0.0 } else { r })
+                .collect();
+            let online_lens: Vec<i32> = rows
+                .iter()
+                .zip(&sim.decoded_len)
+                .zip(&sim.aborted)
+                .map(|((r, &d), &a)| if a { d as i32 } else { r.final_len as i32 })
+                .collect();
+            let full_group = PromptGroup::synthetic(g, &full_rewards, Some(&full_lens));
+            let online_group = PromptGroup::synthetic(g, &online_rewards, Some(&online_lens));
+            let (want, _) = build_update_batch(
+                std::slice::from_ref(&full_group),
+                &pipeline,
+                Some(M),
+                NormMode::After,
+                7,
+                g,
+            )
+            .unwrap();
+            let (got, _) = build_update_batch(
+                std::slice::from_ref(&online_group),
+                &pipeline,
+                Some(M),
+                NormMode::After,
+                7,
+                g,
+            )
+            .unwrap();
+            assert_eq!(want.len(), got.len(), "group {g}");
+            for (w, o) in want.iter().zip(&got) {
+                assert_eq!(w.rollout_idx, o.rollout_idx, "group {g}");
+                assert_eq!(w.advantage, o.advantage, "group {g} advantage drifted");
+                assert!(!sim.aborted[o.rollout_idx], "group {g} kept an aborted row");
+            }
+        }
+    }
+
+    #[test]
+    fn prune_row_csv_shape() {
+        let rows = sweep(&HwModel::default()).unwrap();
+        let header_cols = PruneRow::csv_header().split(',').count();
+        for r in &rows {
+            assert_eq!(r.csv_row().split(',').count(), header_cols, "{r:?}");
+        }
+    }
+}

@@ -244,6 +244,35 @@ impl HwModel {
         shard as f64 * (total / n as f64) * self.per_token_time(shard)
     }
 
+    /// Chunk-granular inference time under **online pruning**: finished
+    /// rollouts (`gen_lens`) charge exactly like
+    /// [`Self::chunked_inference_time`], while rollouts aborted mid-decode
+    /// (`pruned_lens`, their decoded-so-far lengths) charge only the
+    /// tokens that were actually decoded before the abort — the whole
+    /// point of pruning is that the remaining budget is never paid.
+    /// Identical to `chunked_inference_time` over the concatenated length
+    /// list, and therefore equal to it when `pruned_lens` is empty; it
+    /// only ever undercuts charging the aborted rows at longer lengths.
+    pub fn pruned_inference_time(
+        &self,
+        gen_lens: &[usize],
+        pruned_lens: &[usize],
+        chunk: usize,
+    ) -> f64 {
+        let n = gen_lens.len() + pruned_lens.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let c = chunk.max(1) as f64;
+        let total: f64 = gen_lens
+            .iter()
+            .chain(pruned_lens.iter())
+            .map(|&t| (t as f64 / c).ceil() * c)
+            .sum();
+        let shard = n.div_ceil(self.workers.max(1));
+        shard as f64 * (total / n as f64) * self.per_token_time(shard)
+    }
+
     /// Number of gradient-accumulation micro-steps forced by the memory
     /// ceiling for an update on `m` rollouts sharded over workers.
     pub fn forced_micro_steps(&self, m: usize) -> usize {
@@ -511,6 +540,50 @@ mod tests {
             // rounding waste is bounded by one chunk per rollout
             let bound = hw.inference_time(n, avg + chunk as f64);
             assert!(chunked <= bound + 1e-9);
+        });
+    }
+
+    /// Online pruning charges only decoded tokens: no pruned rows ⇒
+    /// exactly the chunked charge; pruned rows charge their truncated
+    /// lengths, strictly below charging them at any longer length.
+    #[test]
+    fn pruned_inference_time_charges_only_decoded_tokens() {
+        let hw = HwModel::default();
+        // no pruned rows: bitwise-identical arithmetic to the chunked path
+        let lens = vec![7usize, 30, 2, 16];
+        assert_eq!(
+            hw.pruned_inference_time(&lens, &[], 16),
+            hw.chunked_inference_time(&lens, 16)
+        );
+        // pruned rows at their decoded lengths == one concatenated list
+        let full = vec![32usize, 8];
+        let pruned = vec![16usize, 4];
+        let concat = vec![32usize, 8, 16, 4];
+        assert_eq!(
+            hw.pruned_inference_time(&full, &pruned, 4),
+            hw.chunked_inference_time(&concat, 4)
+        );
+        // empty everything is free
+        assert_eq!(hw.pruned_inference_time(&[], &[], 16), 0.0);
+        // a never-admitted pruned row (0 decoded tokens) adds no token
+        // cost, and savings are monotone: aborting earlier never costs more
+        for_cases(200, |rng| {
+            let hw = HwModel::default();
+            let chunk = rng.gen_range_inclusive(1, 32) as usize;
+            let n_full = rng.gen_range_inclusive(1, 16) as usize;
+            let n_pruned = rng.gen_range_inclusive(1, 16) as usize;
+            let full: Vec<usize> =
+                (0..n_full).map(|_| rng.gen_range_inclusive(1, 64) as usize).collect();
+            let cut: Vec<usize> =
+                (0..n_pruned).map(|_| rng.gen_range_inclusive(0, 32) as usize).collect();
+            let later: Vec<usize> = cut.iter().map(|&t| t + chunk).collect();
+            let early = hw.pruned_inference_time(&full, &cut, chunk);
+            let late = hw.pruned_inference_time(&full, &later, chunk);
+            assert!(early <= late + 1e-12, "earlier aborts must never charge more");
+            // and pruning undercuts decoding those rows to the full budget
+            let mut all = full.clone();
+            all.extend(cut.iter().map(|&t| t.max(1) + 64));
+            assert!(early <= hw.chunked_inference_time(&all, chunk) + 1e-12);
         });
     }
 

@@ -20,7 +20,9 @@
 //! In one paragraph: a training iteration generates `n` rollouts per
 //! prompt on [`coordinator::exec::RolloutEngine`] (a real thread pool
 //! driving the chunked early-exit continuous batcher in
-//! [`rollout::chunked`]), selects `m` of them through the pluggable
+//! [`rollout::chunked`], optionally aborting rollouts mid-decode the
+//! moment [`coordinator::select::online`] proves they cannot survive
+//! selection), selects `m` of them through the pluggable
 //! pipeline in [`coordinator::select`], and trains on the keepers with
 //! [`coordinator::exec::UpdateEngine`] — a sharded data-parallel update
 //! engine (micro-batch packing, canonical-order gradient accumulation, a

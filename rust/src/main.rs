@@ -3,9 +3,9 @@
 //! ```text
 //! pods train --config configs/setting_a.toml [--iterations N]
 //! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test --chunk 16
-//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|table3|all [--setting a] [--quick] [--probe]
+//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|table3|all [--setting a] [--quick] [--probe]
 //! pods info  --profile base
-//! pods bench-check [--fresh BENCH_e2e.json] [--baseline rust/benches/BENCH_baseline.json]
+//! pods bench-check [--fresh BENCH_e2e.json] [--baseline rust/benches/BENCH_baseline.json] [--bless]
 //! pods config-docs [--check] [--out docs/CONFIG.md]
 //! ```
 //!
@@ -30,11 +30,13 @@ USAGE:
   pods train --config <path> [--iterations N] [--artifacts DIR]
   pods eval  --ckpt <path> [--task arith|poly|mcq] [--split train|test|platinum]
              [--profile NAME] [--problems N] [--chunk C]
-  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|table3|all>
+  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|table3|all>
              [--setting a-f] [--quick] [--out-dir DIR] [--probe]
   pods info  [--profile NAME]
   pods bench-check [--fresh PATH] [--baseline PATH] [--max-regression FRAC]
-             [--min-speedup RATIO]
+             [--min-speedup RATIO] [--min-prune-speedup RATIO] [--bless]
+             --bless regenerates the committed baseline from the fresh
+             report instead of checking against it
   pods config-docs [--check] [--out PATH]
              generate docs/CONFIG.md from the config structs;
              --check fails when the committed file is stale (CI)
@@ -46,7 +48,7 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["quick", "probe", "help", "check"];
+const BOOL_FLAGS: &[&str] = &["quick", "probe", "help", "check", "bless"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
@@ -182,6 +184,7 @@ fn main() -> Result<()> {
                 "fig7" => exp::fig7::run(&artifacts, scale, &out_dir)?,
                 "sched" => exp::sched::run(&artifacts, scale, &out_dir)?,
                 "shard" => exp::shard::run(&out_dir)?,
+                "prune" => exp::prune::run(&out_dir)?,
                 "table3" => exp::table3::run(&out_dir)?,
                 "all" => {
                     exp::fig1::run(&artifacts, &out_dir, probe)?;
@@ -192,6 +195,7 @@ fn main() -> Result<()> {
                     exp::fig7::run(&artifacts, scale, &out_dir)?;
                     exp::sched::run(&artifacts, scale, &out_dir)?;
                     exp::shard::run(&out_dir)?;
+                    exp::prune::run(&out_dir)?;
                     exp::table3::run(&out_dir)?;
                 }
                 other => bail!("unknown experiment {other:?}"),
@@ -235,6 +239,16 @@ fn main() -> Result<()> {
         "bench-check" => {
             let fresh = args.get_or("fresh", "BENCH_e2e.json");
             let baseline = args.get_or("baseline", "rust/benches/BENCH_baseline.json");
+            if args.has("bless") {
+                // legitimate baseline refresh: regenerate the committed
+                // JSON from the fresh run instead of hand-editing it
+                let line = pods::util::bench::bless_baseline(
+                    std::path::Path::new(&fresh),
+                    std::path::Path::new(&baseline),
+                )?;
+                println!("{line}");
+                return Ok(());
+            }
             let max_reg: f64 = args.get_or("max-regression", "0.15").parse()?;
             let report = pods::util::bench::check_regression(
                 std::path::Path::new(&fresh),
@@ -265,6 +279,21 @@ fn main() -> Result<()> {
             )? {
                 Some(line) => println!("{line}"),
                 None => println!("speedup guard: comparison arms absent from {fresh} — skipped"),
+            }
+            // same-run floor of online pruning over the identical pipeline
+            // without it (only meaningful when the rule carries a
+            // token-budget stage, which the bench arm does)
+            let min_prune: f64 = args.get_or("min-prune-speedup", "1.0").parse()?;
+            match pods::util::bench::check_speedup(
+                std::path::Path::new(&fresh),
+                "e2e step pods online-prune (same rule)",
+                "e2e step pods prune-rule (online off)",
+                min_prune,
+            )? {
+                Some(line) => println!("{line}"),
+                None => {
+                    println!("prune speedup guard: comparison arms absent from {fresh} — skipped")
+                }
             }
         }
         "config-docs" => {

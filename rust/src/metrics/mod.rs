@@ -86,6 +86,13 @@ pub struct IterRow {
     /// unit the Fig. 1 memory ceiling (`hwsim.mem_capacity_rollouts`) is
     /// denominated in.
     pub upd_peak_mem: usize,
+    /// Decode budget released by online pruning this iteration
+    /// (`[rollout] online_prune`): per aborted rollout, the generation
+    /// budget `G` minus what it had decoded at the abort boundary. Zero
+    /// when pruning is off or nothing was provably doomed.
+    pub gen_tokens_pruned: usize,
+    /// Rollouts aborted mid-decode by online pruning this iteration.
+    pub rows_pruned_online: usize,
 }
 
 impl CsvRow for IterRow {
@@ -94,12 +101,12 @@ impl CsvRow for IterRow {
          completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
          loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
          sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted,\
-         upd_shards,upd_comm_time,upd_peak_mem"
+         upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online"
     }
 
     fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.iter,
             self.sim_time,
             self.real_time,
@@ -125,7 +132,9 @@ impl CsvRow for IterRow {
             self.gen_tokens_wasted,
             self.upd_shards,
             self.upd_comm_time,
-            self.upd_peak_mem
+            self.upd_peak_mem,
+            self.gen_tokens_pruned,
+            self.rows_pruned_online
         )
     }
 }
@@ -322,14 +331,14 @@ mod tests {
              completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
              loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
              sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted,\
-             upd_shards,upd_comm_time,upd_peak_mem"
+             upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online"
                 .replace(char::is_whitespace, "")
         );
         // new columns append at the end, so CSVs from older runs stay
         // parseable by position-tolerant readers
         let cols: Vec<&str> = header.split(',').collect();
         assert_eq!(
-            cols[cols.len() - 8..].to_vec(),
+            cols[cols.len() - 10..].to_vec(),
             vec![
                 "sim_step_time",
                 "sim_overlap_saved",
@@ -338,7 +347,9 @@ mod tests {
                 "gen_tokens_wasted",
                 "upd_shards",
                 "upd_comm_time",
-                "upd_peak_mem"
+                "upd_peak_mem",
+                "gen_tokens_pruned",
+                "rows_pruned_online"
             ]
         );
     }
@@ -374,6 +385,8 @@ mod tests {
             upd_shards: 4,
             upd_comm_time: 0.75,
             upd_peak_mem: 8,
+            gen_tokens_pruned: 640,
+            rows_pruned_online: 12,
         };
         let header = IterRow::csv_header().replace(char::is_whitespace, "");
         let line = row.csv_row();
@@ -393,6 +406,8 @@ mod tests {
         assert_eq!(get("upd_shards"), "4");
         assert_eq!(get("upd_comm_time"), "0.75");
         assert_eq!(get("upd_peak_mem"), "8");
+        assert_eq!(get("gen_tokens_pruned"), "640");
+        assert_eq!(get("rows_pruned_online"), "12");
         // the overlap identity the exec layer maintains:
         // step + saved == inference + update
         let step: f64 = get("sim_step_time").parse().unwrap();

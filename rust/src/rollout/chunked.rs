@@ -11,6 +11,11 @@
 //! * between chunks, rows that emitted EOS (or hit the budget `G`)
 //!   **retire** and queued rows are **admitted** into the freed slots
 //!   (prefill on admission, caches merged on device by `admit_merge`);
+//! * an optional [`PruneHook`] (online selection-aware pruning, see
+//!   [`crate::coordinator::select::online`]) is consulted at the same
+//!   boundary: rows it declares doomed are **aborted** exactly like EOS
+//!   retirement — slot freed for refill, the released decode budget
+//!   counted as `gen_tokens_pruned`;
 //! * the loop **exits early** the moment every slot is drained — decode
 //!   work is proportional to actual generated tokens rounded up to the
 //!   chunk size, not `rows × G`.
@@ -85,6 +90,27 @@ pub struct RowOut {
     pub gen_mask: Vec<f32>,
     /// Generated tokens incl. EOS.
     pub gen_len: i32,
+    /// The row was aborted mid-decode by the prune hook (no EOS;
+    /// `gen_len` is the truncated decoded length). Sound by the doom-only
+    /// contract: an aborted row can never survive post-hoc selection.
+    pub aborted: bool,
+}
+
+/// Between-chunk online-pruning hook for the decode driver.
+///
+/// The driver consults it at every chunk boundary: retirements are
+/// reported through [`Self::on_retired`] and every live (or about to be
+/// admitted) row is polled through [`Self::should_abort`] — a `true`
+/// answer aborts the row at this boundary, freeing its slot. The hook
+/// must be **doom-only sound**: it may only abort rows that can never
+/// appear in the selected subset (see `docs/DETERMINISM.md`).
+pub trait PruneHook {
+    /// A row retired normally (EOS or budget); observe its final state.
+    fn on_retired(&self, row: &RowOut);
+
+    /// Poll one row: `gen_len` is its generated-token count so far (0 for
+    /// a row still queued). Return `true` to abort it at this boundary.
+    fn should_abort(&self, group_idx: usize, rollout_idx: usize, gen_len: usize) -> bool;
 }
 
 /// Engine-call accounting for one driver run.
@@ -100,6 +126,13 @@ pub struct DecodeStats {
     /// Decode-step slots actually executed: `B_r × C` per chunk call —
     /// the physical work, including post-EOS and filler slots.
     pub gen_tokens_decoded: usize,
+    /// Decode budget released by online pruning: for every aborted row,
+    /// the generation budget `G` minus what it had decoded at the abort
+    /// boundary (an upper bound on the work saved — the row might have
+    /// emitted EOS before `G` on its own).
+    pub gen_tokens_pruned: usize,
+    /// Rows aborted mid-decode (or pruned before admission) by the hook.
+    pub rows_pruned: usize,
 }
 
 /// Per-slot bookkeeping for a row mid-decode.
@@ -128,6 +161,7 @@ struct Driver<'a> {
     lora: Option<&'a [f32]>,
     rows: &'a [RowSpec],
     problems: &'a [Problem],
+    hook: Option<&'a dyn PruneHook>,
     b: usize,
     p: usize,
     g: usize,
@@ -151,9 +185,21 @@ impl<'a> Driver<'a> {
     fn admit(&mut self, free: &[usize]) -> Result<()> {
         let mut admitted: Vec<(usize, usize)> = Vec::new(); // (slot, row)
         for &s in free {
-            match self.queue.pop_front() {
-                Some(r) => admitted.push((s, r)),
-                None => break,
+            // rows doomed while still queued are pruned without ever
+            // being admitted: no prefill, no decode — the whole budget
+            // counts as released
+            loop {
+                let Some(r) = self.queue.pop_front() else { break };
+                let spec = self.rows[r];
+                if self
+                    .hook
+                    .is_some_and(|h| h.should_abort(spec.group_idx, spec.rollout_idx, 0))
+                {
+                    self.emit_pruned_unadmitted(r)?;
+                    continue;
+                }
+                admitted.push((s, r));
+                break;
             }
         }
         if admitted.is_empty() {
@@ -207,6 +253,27 @@ impl<'a> Driver<'a> {
         Ok(())
     }
 
+    /// A row pruned while still queued: emit an empty aborted record (the
+    /// prompt region padded, nothing generated) without prefill or decode.
+    fn emit_pruned_unadmitted(&mut self, r: usize) -> Result<()> {
+        let spec = self.rows[r];
+        let (mut tokens, pad) = pad_prompt(&self.problems[spec.group_idx].prompt, self.p)?;
+        tokens.resize(self.p + self.g, tok::PAD);
+        self.outs[r] = Some(RowOut {
+            group_idx: spec.group_idx,
+            rollout_idx: spec.rollout_idx,
+            pad_len: pad,
+            tokens,
+            logprobs: vec![0.0; self.g],
+            gen_mask: vec![0.0; self.g],
+            gen_len: 0,
+            aborted: true,
+        });
+        self.stats.rows_pruned += 1;
+        self.stats.gen_tokens_pruned += self.g;
+        Ok(())
+    }
+
     /// Retire finished slots into `outs`; returns how many were freed.
     fn retire(&mut self) -> usize {
         let mut freed = 0;
@@ -219,7 +286,7 @@ impl<'a> Driver<'a> {
                 let gen_len = slot.gen_mask.iter().sum::<f32>() as i32;
                 let mut tokens = slot.prompt_row;
                 tokens.extend_from_slice(&slot.tokens);
-                self.outs[slot.row] = Some(RowOut {
+                let out = RowOut {
                     group_idx: spec.group_idx,
                     rollout_idx: spec.rollout_idx,
                     pad_len: self.pads[s],
@@ -227,10 +294,53 @@ impl<'a> Driver<'a> {
                     logprobs: slot.logprobs,
                     gen_mask: slot.gen_mask,
                     gen_len,
-                });
+                    aborted: false,
+                };
+                if let Some(hook) = self.hook {
+                    hook.on_retired(&out);
+                }
+                self.outs[slot.row] = Some(out);
                 self.done[s] = 1;
                 freed += 1;
             }
+        }
+        freed
+    }
+
+    /// Abort live rows the hook has declared doomed — exactly like EOS
+    /// retirement (the slot frees for refill), but the row is marked
+    /// aborted and its remaining decode budget counts as pruned. Returns
+    /// how many slots were freed.
+    fn abort_doomed(&mut self) -> usize {
+        let Some(hook) = self.hook else { return 0 };
+        let mut freed = 0;
+        for s in 0..self.b {
+            let Some(slot_ref) = &self.slots[s] else { continue };
+            let spec = self.rows[slot_ref.row];
+            // live rows have not passed EOS, so `step` is their generated
+            // count so far (monotone across chunks)
+            let len = self.step[s].max(0) as usize;
+            if !hook.should_abort(spec.group_idx, spec.rollout_idx, len) {
+                continue;
+            }
+            let slot = self.slots[s].take().expect("checked");
+            let gen_len = slot.gen_mask.iter().sum::<f32>() as i32;
+            let mut tokens = slot.prompt_row;
+            tokens.extend_from_slice(&slot.tokens);
+            self.outs[slot.row] = Some(RowOut {
+                group_idx: spec.group_idx,
+                rollout_idx: spec.rollout_idx,
+                pad_len: self.pads[s],
+                tokens,
+                logprobs: slot.logprobs,
+                gen_mask: slot.gen_mask,
+                gen_len,
+                aborted: true,
+            });
+            self.done[s] = 1;
+            self.stats.rows_pruned += 1;
+            self.stats.gen_tokens_pruned += self.g.saturating_sub(gen_len.max(0) as usize);
+            freed += 1;
         }
         freed
     }
@@ -274,7 +384,7 @@ impl<'a> Driver<'a> {
                 }
             }
 
-            let freed = self.retire();
+            let freed = self.retire() + self.abort_doomed();
             // refill freed slots (continuous), or wait for a full drain
             let drained = self.slots.iter().all(|s| s.is_none());
             if freed > 0
@@ -303,6 +413,24 @@ pub fn decode_rows(
     rows: &[RowSpec],
     problems: &[Problem],
 ) -> Result<(Vec<RowOut>, DecodeStats)> {
+    decode_rows_hooked(engine, params, lora, temperature, chunk, refill, rows, problems, None)
+}
+
+/// [`decode_rows`] with an online-pruning hook: the driver polls it at
+/// every chunk boundary and aborts rows it declares doomed (see
+/// [`PruneHook`]). `hook = None` is exactly [`decode_rows`].
+#[allow(clippy::too_many_arguments)]
+pub fn decode_rows_hooked(
+    engine: &Engine,
+    params: &[f32],
+    lora: Option<&[f32]>,
+    temperature: f32,
+    chunk: usize,
+    refill: RefillMode,
+    rows: &[RowSpec],
+    problems: &[Problem],
+    hook: Option<&dyn PruneHook>,
+) -> Result<(Vec<RowOut>, DecodeStats)> {
     let meta = &engine.meta;
     if meta.decode_chunks.is_empty() {
         bail!(
@@ -329,6 +457,7 @@ pub fn decode_rows(
         lora,
         rows,
         problems,
+        hook,
         b,
         p: meta.config.prompt_len,
         g: meta.gen_len,

@@ -23,9 +23,12 @@
 
 pub mod chunked;
 
-pub use chunked::{decode_rows, DecodeStats, RefillMode, RowOut, RowSpec};
+pub use chunked::{
+    decode_rows, decode_rows_hooked, DecodeStats, PruneHook, RefillMode, RowOut, RowSpec,
+};
 
 use crate::coordinator::group::{PromptGroup, RolloutRecord};
+use crate::coordinator::select::online::GroupVerdicts;
 use crate::reward::{score_rollout, RewardWeights};
 use crate::runtime::{Engine, TensorI};
 use crate::tasks::{tokenizer as tok, Problem, TaskKind};
@@ -47,6 +50,11 @@ pub struct InferenceStats {
     /// `gen_tokens_decoded - total_gen_tokens`: decode work that produced
     /// no trainable token.
     pub gen_tokens_wasted: usize,
+    /// Decode budget released by online pruning (per aborted row: the
+    /// generation budget `G` minus its decoded length at the abort).
+    pub gen_tokens_pruned: usize,
+    /// Rollouts aborted mid-decode by the online pruning verdicts.
+    pub rows_pruned: usize,
 }
 
 impl InferenceStats {
@@ -57,6 +65,8 @@ impl InferenceStats {
         self.rollouts += other.rollouts;
         self.gen_tokens_decoded += other.gen_tokens_decoded;
         self.gen_tokens_wasted += other.gen_tokens_wasted;
+        self.gen_tokens_pruned += other.gen_tokens_pruned;
+        self.rows_pruned += other.rows_pruned;
     }
 }
 
@@ -128,9 +138,46 @@ pub struct CallRollout {
     pub record: RolloutRecord,
 }
 
+/// [`PruneHook`] gluing the decode driver to the shared per-group verdict
+/// state: retired rows are scored with the run's reward model and fed to
+/// the [`GroupVerdicts`] aggregator; live rows are polled against it.
+struct VerdictHook<'a> {
+    verdicts: &'a GroupVerdicts,
+    problems: &'a [Problem],
+    task: TaskKind,
+    weights: &'a RewardWeights,
+    prompt_len: usize,
+}
+
+impl PruneHook for VerdictHook<'_> {
+    fn on_retired(&self, row: &RowOut) {
+        let reward = score_rollout(
+            &row.tokens,
+            self.prompt_len,
+            self.task,
+            &self.problems[row.group_idx],
+        )
+        .total(self.weights);
+        self.verdicts.observe_finished(
+            row.group_idx,
+            row.rollout_idx,
+            reward,
+            row.gen_len.max(0) as usize,
+        );
+    }
+
+    fn should_abort(&self, group_idx: usize, rollout_idx: usize, gen_len: usize) -> bool {
+        self.verdicts.poll_doomed(group_idx, rollout_idx, gen_len)
+    }
+}
+
 /// Run `rows` through the continuous-batching driver, then verify rewards
 /// and (optionally) score the generations under the reference policy for
 /// the KL term. Returns the finished rollouts in row order plus stats.
+///
+/// With `online = Some(v)`, the driver additionally reports retirements to
+/// the shared verdict state and aborts rows it declares doomed — the
+/// online selection-aware pruning path (`[rollout] online_prune`).
 #[allow(clippy::too_many_arguments)]
 pub fn execute_rows(
     engine: &Engine,
@@ -145,9 +192,27 @@ pub fn execute_rows(
     problems: &[Problem],
     task: TaskKind,
     weights: &RewardWeights,
+    online: Option<&GroupVerdicts>,
 ) -> Result<(Vec<CallRollout>, InferenceStats)> {
-    let (row_outs, dstats) =
-        decode_rows(engine, params, lora, temperature, decode_chunk, refill, rows, problems)?;
+    let hook_state = online.map(|verdicts| VerdictHook {
+        verdicts,
+        problems,
+        task,
+        weights,
+        prompt_len: engine.meta.config.prompt_len,
+    });
+    let hook = hook_state.as_ref().map(|h| h as &dyn PruneHook);
+    let (row_outs, dstats) = decode_rows_hooked(
+        engine,
+        params,
+        lora,
+        temperature,
+        decode_chunk,
+        refill,
+        rows,
+        problems,
+        hook,
+    )?;
     let t = engine.meta.config.seq_len;
     let g = engine.meta.gen_len;
     let p = engine.meta.config.prompt_len;
@@ -184,6 +249,8 @@ pub fn execute_rows(
     let mut stats = InferenceStats {
         calls: dstats.prefill_calls + dstats.chunk_calls + dstats.merge_calls + score_calls,
         gen_tokens_decoded: dstats.gen_tokens_decoded,
+        gen_tokens_pruned: dstats.gen_tokens_pruned,
+        rows_pruned: dstats.rows_pruned,
         ..Default::default()
     };
     for (i, r) in row_outs.into_iter().enumerate() {
@@ -204,6 +271,7 @@ pub fn execute_rows(
                 tokens: r.tokens,
                 reward,
                 total_reward,
+                pruned: r.aborted,
             },
         });
     }
@@ -264,6 +332,7 @@ pub fn generate_group(
         problems,
         task,
         &req.weights,
+        None,
     )?;
     let rollouts = kept.into_iter().map(|c| c.record).collect();
     Ok((PromptGroup { problem: problem.clone(), rollouts }, stats))
@@ -349,6 +418,8 @@ mod tests {
             rollouts: 4,
             gen_tokens_decoded: 32,
             gen_tokens_wasted: 22,
+            gen_tokens_pruned: 7,
+            rows_pruned: 1,
         };
         let b = InferenceStats {
             calls: 1,
@@ -356,6 +427,8 @@ mod tests {
             rollouts: 2,
             gen_tokens_decoded: 16,
             gen_tokens_wasted: 11,
+            gen_tokens_pruned: 3,
+            rows_pruned: 2,
         };
         a.absorb(&b);
         assert_eq!(a.calls, 3);
@@ -363,6 +436,8 @@ mod tests {
         assert_eq!(a.rollouts, 6);
         assert_eq!(a.gen_tokens_decoded, 48);
         assert_eq!(a.gen_tokens_wasted, 33);
+        assert_eq!(a.gen_tokens_pruned, 10);
+        assert_eq!(a.rows_pruned, 3);
     }
 
     /// Property: the queue always delivers exactly n rows per group in

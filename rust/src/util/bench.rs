@@ -238,6 +238,34 @@ pub fn check_regression(
     Ok(report)
 }
 
+/// Regenerate the committed bench baseline in place (`pods bench-check
+/// --bless`): validates that the fresh report parses and carries
+/// rollout-throughput entries, then copies it to the baseline path
+/// byte-for-byte. Refuses empty reports — blessing a run that produced no
+/// throughput arms (e.g. benches self-skipped without artifacts) would
+/// silently disable the regression guard. The normal check path (and its
+/// missing-arm hard failure) is untouched.
+pub fn bless_baseline(fresh: &Path, baseline: &Path) -> anyhow::Result<String> {
+    let tps = load_throughputs(fresh)?;
+    if tps.is_empty() {
+        anyhow::bail!(
+            "refusing to bless {}: it carries no rollout-throughput entries (did the \
+             bench run without artifacts?) — blessing it would disable the guard",
+            fresh.display()
+        );
+    }
+    let text = std::fs::read_to_string(fresh)
+        .map_err(|e| anyhow::anyhow!("reading bench report {}: {e}", fresh.display()))?;
+    std::fs::write(baseline, &text)
+        .map_err(|e| anyhow::anyhow!("writing baseline {}: {e}", baseline.display()))?;
+    Ok(format!(
+        "blessed {} -> {} ({} throughput arm(s))",
+        fresh.display(),
+        baseline.display(),
+        tps.len()
+    ))
+}
+
 /// Same-run early-exit speedup guard: compares the chunked arm's rollout
 /// throughput against the full-G (no early exit) arm **within one bench
 /// run**. Absolute rollouts/sec varies across hosts and CI tenancy; the
@@ -366,6 +394,42 @@ mod tests {
         // both arms present again: passes
         write_report(&fresh, &[("e2e step a", 100.0), ("gone", 10.0)]);
         assert!(check_regression(&fresh, &base, 0.15).is_ok());
+    }
+
+    /// Satellite: `--bless` regenerates the committed baseline from a
+    /// fresh report, byte-for-byte, and refuses throughput-less reports.
+    #[test]
+    fn bless_baseline_copies_fresh_reports_and_rejects_empty_ones() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let fresh = dir.path().join("fresh.json");
+        let base = dir.path().join("base.json");
+        write_report(&fresh, &[("e2e step a", 100.0)]);
+        let line = bless_baseline(&fresh, &base).unwrap();
+        assert!(line.contains("1 throughput arm"), "{line}");
+        assert_eq!(
+            std::fs::read_to_string(&fresh).unwrap(),
+            std::fs::read_to_string(&base).unwrap(),
+            "bless must copy byte-for-byte"
+        );
+        // the blessed baseline immediately passes the regression check
+        assert!(check_regression(&fresh, &base, 0.15).unwrap().regressions.is_empty());
+
+        // a throughput-less report (benches self-skipped) is refused
+        let empty = dir.path().join("empty.json");
+        let mut rep = BenchReport::new();
+        rep.push(BenchResult {
+            name: "no-throughput".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            p95_ns: 1e9,
+            min_ns: 1e9,
+        });
+        rep.write_json(&empty).unwrap();
+        let err = bless_baseline(&empty, &base).unwrap_err().to_string();
+        assert!(err.contains("refusing to bless"), "{err}");
+        // a missing fresh report is a descriptive error, not a panic
+        assert!(bless_baseline(&dir.path().join("absent.json"), &base).is_err());
     }
 
     /// The same-run speedup guard: ratio below the floor fails, above

@@ -215,6 +215,14 @@ impl<'a> SectionView<'a> {
         }
     }
 
+    /// `key` as bool, defaulting when absent.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some(v) => v.as_bool(),
+            None => Ok(default),
+        }
+    }
+
     /// `key` as optional string.
     pub fn opt_str(&self, key: &str) -> Result<Option<String>> {
         match self.get(key) {

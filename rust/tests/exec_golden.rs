@@ -224,6 +224,7 @@ fn pool_generation_is_deterministic_across_worker_counts() {
             weights: RewardWeights::default(),
             decode_chunk: 16,
             refill: RefillMode::Continuous,
+            online: None,
         };
         pool.generate(&engine, batch).unwrap()
     };

@@ -1,0 +1,350 @@
+//! Goldens for online selection-aware rollout pruning.
+//!
+//! The load-bearing invariant (docs/DETERMINISM.md): because verdicts are
+//! doom-only — a row is aborted only when it provably cannot survive the
+//! selection pipeline under *any* completion of its group — the final
+//! selection over the pruned groups (kept indices, advantages, and hence
+//! the trained parameters) is **bit-identical** to post-hoc selection on
+//! fully-decoded rollouts.
+//!
+//! The property suite drives the real [`OnlineSelector`] analysis through
+//! randomized decode schedules (chunk sizes, staggered admissions, poll
+//! orders) over random groups and pipelines, gives aborted rows
+//! *adversarial* truncated rewards, and checks the two worlds select
+//! identically. The trainer-level golden (artifact-gated, skipped without
+//! `make artifacts`) runs the full stack twice — `online_prune` on and
+//! off — and compares post-training parameters bitwise.
+
+use pods::coordinator::advantage::NormMode;
+use pods::coordinator::group::{build_update_batch, PromptGroup};
+use pods::coordinator::select::{OnlineSelector, Pipeline, Verdict};
+use pods::exp::CfgBuilder;
+use pods::util::prop::for_cases;
+use pods::util::rng::Rng;
+
+/// Generation budget of the simulated profile.
+const G: usize = 64;
+
+/// One synthetic rollout: the fully-decoded outcome plus an adversarial
+/// reward the verifier would compute on a truncated stream.
+#[derive(Debug, Clone, Copy)]
+struct SimRow {
+    final_len: usize,
+    final_reward: f32,
+    trunc_reward: f32,
+}
+
+/// Rewards on the rule-based model's 0.25 grid in [0, 3].
+fn grid_reward(rng: &mut Rng) -> f32 {
+    0.25 * rng.below(13) as f32
+}
+
+fn sim_rows(rng: &mut Rng, n: usize) -> Vec<SimRow> {
+    (0..n)
+        .map(|_| SimRow {
+            final_len: 1 + rng.below(G),
+            final_reward: grid_reward(rng),
+            trunc_reward: grid_reward(rng),
+        })
+        .collect()
+}
+
+/// Simulate one group's chunked decode under a *randomized* schedule:
+/// each boundary advances a random subset of live rows by `chunk` (rows
+/// waiting in the refill queue advance nothing), retires rows reaching
+/// their final length (observing their true reward), then polls the live
+/// rows in random order and aborts doomed ones — exactly the driver's
+/// retire-then-abort boundary order. Returns per-row (decoded length,
+/// aborted flag).
+fn simulate(
+    rows: &[SimRow],
+    pipeline: &Pipeline,
+    m: usize,
+    chunk: usize,
+    rng: &mut Rng,
+) -> (Vec<usize>, Vec<bool>) {
+    let n = rows.len();
+    let mut sel = OnlineSelector::new(pipeline.stage_bounds(), n, m, 0.0, 3.0);
+    let mut decoded = vec![0usize; n];
+    let mut live = vec![true; n];
+    let mut aborted = vec![false; n];
+    let chunk = chunk.max(1);
+    while live.iter().any(|&l| l) {
+        // advance a random subset; force progress when the draw stalls
+        let mut advanced = false;
+        for i in 0..n {
+            if live[i] && rng.gen_bool(0.7) {
+                decoded[i] = (decoded[i] + chunk).min(rows[i].final_len);
+                advanced = true;
+            }
+        }
+        if !advanced {
+            for i in 0..n {
+                if live[i] {
+                    decoded[i] = (decoded[i] + chunk).min(rows[i].final_len);
+                }
+            }
+        }
+        // retire finished rows first, as the driver does
+        for i in 0..n {
+            if live[i] && decoded[i] >= rows[i].final_len {
+                live[i] = false;
+                sel.observe_finished(i, rows[i].final_reward, rows[i].final_len);
+            }
+        }
+        // poll the live rows in a random order
+        let mut order: Vec<usize> = (0..n).filter(|&i| live[i]).collect();
+        rng.shuffle(&mut order);
+        for i in order {
+            sel.observe_len(i, decoded[i]);
+            sel.poll();
+            if sel.verdict(i) == Verdict::Doomed {
+                live[i] = false;
+                aborted[i] = true;
+            }
+        }
+    }
+    (decoded, aborted)
+}
+
+/// Both worlds' groups: the post-hoc world decodes everything to
+/// completion; the online world records truncated lengths and adversarial
+/// rewards for aborted rows.
+fn two_worlds(
+    rows: &[SimRow],
+    decoded: &[usize],
+    aborted: &[bool],
+    problem_idx: u64,
+) -> (PromptGroup, PromptGroup) {
+    let full_rewards: Vec<f32> = rows.iter().map(|r| r.final_reward).collect();
+    let full_lens: Vec<i32> = rows.iter().map(|r| r.final_len as i32).collect();
+    let online_rewards: Vec<f32> = rows
+        .iter()
+        .zip(aborted)
+        .map(|(r, &a)| if a { r.trunc_reward } else { r.final_reward })
+        .collect();
+    let online_lens: Vec<i32> = rows
+        .iter()
+        .zip(decoded)
+        .zip(aborted)
+        .map(|((r, &d), &a)| if a { d as i32 } else { r.final_len as i32 })
+        .collect();
+    (
+        PromptGroup::synthetic(problem_idx, &full_rewards, Some(&full_lens)),
+        PromptGroup::synthetic(problem_idx, &online_rewards, Some(&online_lens)),
+    )
+}
+
+/// Tentpole proptest: for random groups, pipelines, chunk sizes and decode
+/// schedules, online pruning yields a bit-identical selection (kept rows
+/// and advantages) to post-hoc selection on the fully-decoded group — and
+/// never keeps an aborted row.
+#[test]
+fn online_pruning_selection_is_bit_identical_to_post_hoc() {
+    let pool = [
+        "prune(max_tokens=8) | max_variance",
+        "prune(max_tokens=16) | max_variance",
+        "prune(max_tokens=16) | percentile",
+        "prune(max_tokens=16)",
+        "prune(max_tokens=32) | max_reward",
+        "max_variance",
+        "drop_zero_variance | max_variance",
+        "prune(quantile=0.75) | max_variance",
+        "random",
+    ];
+    let total_aborts = std::cell::Cell::new(0usize);
+    let cases_with_aborts = std::cell::Cell::new(0usize);
+    for_cases(400, |rng| {
+        let n = 2 + rng.below(15);
+        let m = 1 + rng.below(n);
+        let chunk = [1usize, 2, 4, 8, 16][rng.below(5)];
+        let spec = pool[rng.below(pool.len())];
+        let pipeline = Pipeline::parse_default(spec).unwrap();
+        let rows = sim_rows(rng, n);
+        let (decoded, aborted) = simulate(&rows, &pipeline, m, chunk, rng);
+        let problem_idx = rng.below(1000) as u64;
+        let (full, online) = two_worlds(&rows, &decoded, &aborted, problem_idx);
+        let run_seed = rng.next_u64();
+        let iter = rng.below(100) as u64;
+        let (want, want_stats) = build_update_batch(
+            std::slice::from_ref(&full),
+            &pipeline,
+            Some(m),
+            NormMode::After,
+            run_seed,
+            iter,
+        )
+        .unwrap();
+        let (got, got_stats) = build_update_batch(
+            std::slice::from_ref(&online),
+            &pipeline,
+            Some(m),
+            NormMode::After,
+            run_seed,
+            iter,
+        )
+        .unwrap();
+        assert_eq!(
+            want.len(),
+            got.len(),
+            "{spec:?} n={n} m={m} C={chunk}: kept-set size drifted (aborted: {aborted:?})"
+        );
+        for (w, o) in want.iter().zip(&got) {
+            assert_eq!(
+                (w.group_idx, w.rollout_idx),
+                (o.group_idx, o.rollout_idx),
+                "{spec:?} n={n} m={m} C={chunk}: kept indices drifted"
+            );
+            assert_eq!(
+                w.advantage.to_bits(),
+                o.advantage.to_bits(),
+                "{spec:?} n={n} m={m} C={chunk}: advantage of row {} drifted",
+                w.rollout_idx
+            );
+            assert!(
+                !aborted[o.rollout_idx],
+                "{spec:?} n={n} m={m} C={chunk}: kept an aborted row"
+            );
+        }
+        assert_eq!(want_stats.groups_dropped, got_stats.groups_dropped, "{spec:?}");
+        let aborts = aborted.iter().filter(|&&a| a).count();
+        total_aborts.set(total_aborts.get() + aborts);
+        if aborts > 0 {
+            cases_with_aborts.set(cases_with_aborts.get() + 1);
+        }
+    });
+    // the suite must actually exercise pruning, not vacuously pass
+    assert!(
+        cases_with_aborts.get() > 20,
+        "only {} of 400 cases aborted anything ({} rows) — the generator no longer \
+         exercises the doom paths",
+        cases_with_aborts.get(),
+        total_aborts.get()
+    );
+}
+
+/// Pipelines made only of stages without a sound bound must never abort a
+/// row, whatever the schedule observes — never prune speculatively.
+#[test]
+fn unknown_only_pipelines_never_abort() {
+    let opaque = [
+        "percentile",
+        "random",
+        "first",
+        "max_reward",
+        "drop_zero_variance | percentile",
+        "prune(quantile=0.5)",
+        "prune(budget=64)",
+        "prune(max_tokens=8, quantile=0.5) | max_reward",
+    ];
+    for_cases(120, |rng| {
+        let n = 2 + rng.below(15);
+        let m = 1 + rng.below(n);
+        let spec = opaque[rng.below(opaque.len())];
+        let pipeline = Pipeline::parse_default(spec).unwrap();
+        let rows = sim_rows(rng, n);
+        let (_, aborted) = simulate(&rows, &pipeline, m, 4, rng);
+        assert!(
+            aborted.iter().all(|&a| !a),
+            "{spec:?} aborted a row despite having no sound bound"
+        );
+    });
+}
+
+/// The length-cap bound fires where it should: on a deterministic
+/// lockstep schedule (the `exp prune` simulator), a token-budget pipeline
+/// over a tail-heavy group prunes exactly the over-cap rows, each shortly
+/// after it provably crossed the cap.
+#[test]
+fn token_budget_pipelines_prune_the_over_cap_tail() {
+    use pods::exp::prune::{simulate_group, SimRow as ExpRow};
+    let pipeline = Pipeline::parse_default("prune(max_tokens=16) | max_variance").unwrap();
+    let rows: Vec<ExpRow> = (0..8)
+        .map(|i| ExpRow {
+            // half the group finishes inside the cap, half rambles to G
+            final_len: if i % 2 == 0 { 4 + i } else { G },
+            final_reward: if i % 2 == 0 { 3.0 } else { 0.0 },
+        })
+        .collect();
+    let sim = simulate_group(&rows, &pipeline, 2, 4);
+    for (i, r) in rows.iter().enumerate() {
+        if r.final_len > 16 {
+            assert!(sim.aborted[i], "over-cap row {i} must be pruned");
+            assert!(sim.decoded_len[i] < r.final_len, "abort must save decode work");
+            assert!(sim.decoded_len[i] > 16, "doomed only after provably crossing the cap");
+        } else {
+            assert!(!sim.aborted[i], "in-cap row {i} must never be pruned");
+            assert_eq!(sim.decoded_len[i], r.final_len);
+        }
+    }
+}
+
+/// Trainer-level golden (artifact-gated): `online_prune = true` trains
+/// bit-identical parameters to the post-hoc path on the same seed and
+/// token-budget pipeline, while recording the pruning telemetry.
+#[test]
+fn online_prune_trains_bit_identical_params() {
+    let dir = pods::default_artifacts_dir();
+    if !dir.join("base/meta.json").exists() {
+        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let g = pods::runtime::Engine::load(&dir, "base").unwrap().meta.gen_len;
+    let rule = format!("prune(max_tokens={}) | max_variance", (g / 4).max(1));
+    let run = |online_prune: bool| {
+        let cfg = CfgBuilder {
+            name: format!("prune_golden_{online_prune}"),
+            profile: "base".into(),
+            task: "arith".into(),
+            iterations: 2,
+            prompts_per_iter: 2,
+            eval_every: 10,
+            eval_problems: 8,
+            kind: "pods".into(),
+            n: 16,
+            m: Some(4),
+            rule: rule.clone(),
+            lr: 1e-4,
+            decode_chunk: 4,
+            online_prune,
+            out_dir: std::env::temp_dir().join("pods_prune_golden").to_string_lossy().into_owned(),
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        let mut tr =
+            pods::coordinator::scheduler::Trainer::new(&dir, cfg).unwrap();
+        tr.engine.quiet = true;
+        for it in 0..2 {
+            tr.train_iteration(it).unwrap();
+        }
+        tr
+    };
+    let posthoc = run(false);
+    let online = run(true);
+    assert_eq!(
+        posthoc.store.params, online.store.params,
+        "online pruning changed trained parameters — the doom-only contract is broken"
+    );
+    for (a, b) in posthoc.recorder.iters.iter().zip(&online.recorder.iters) {
+        // identical selections and updates; only decode/dropped-row
+        // telemetry may move (kept rows are never aborted, so the kept
+        // token budget is pinned too)
+        assert_eq!(a.rollouts_trained, b.rollouts_trained);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.sel_variance, b.sel_variance);
+        assert_eq!(a.sel_tokens_kept, b.sel_tokens_kept);
+        assert_eq!(a.gen_tokens_pruned, 0, "pruning off must record zero");
+        assert!(
+            b.sim_inference_time <= a.sim_inference_time + 1e-9,
+            "pruned inference charge must never exceed the unpruned one"
+        );
+        if b.rows_pruned_online > 0 {
+            assert!(b.gen_tokens_pruned > 0);
+            assert!(
+                b.sim_inference_time < a.sim_inference_time,
+                "pruned rows must cheapen the simulated inference phase"
+            );
+        }
+    }
+}
