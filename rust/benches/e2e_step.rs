@@ -25,6 +25,7 @@ fn mk_trainer(
     refill: &str,
     rule: &str,
     online_prune: bool,
+    replay: bool,
 ) -> anyhow::Result<Trainer> {
     let cfg = CfgBuilder {
         name: format!("bench_{kind}_{n}_{workers}w_{schedule}"),
@@ -43,6 +44,7 @@ fn mk_trainer(
         decode_chunk,
         refill: refill.into(),
         online_prune,
+        replay_enabled: replay,
         out_dir: std::env::temp_dir().join("pods_bench").to_string_lossy().into_owned(),
         ..Default::default()
     }
@@ -83,6 +85,10 @@ fn main() -> anyhow::Result<()> {
         ("ga   distributed (8w)", "ga", 64, None, 8, "sync", 16, "continuous"),
         ("pods prune-rule (online off)", "pods", 64, Some(16), 1, "sync", 16, "continuous"),
         ("pods online-prune (same rule)", "pods", 64, Some(16), 1, "sync", 16, "continuous"),
+        // replay mixing at the default quota: stored rows skip inference,
+        // so this arm's throughput must stay within tolerance of the plain
+        // PODS arm (`pods bench-check --min-replay-speedup`)
+        ("pods + replay (mix=0.25)", "pods", 64, Some(16), 1, "sync", 16, "continuous"),
     ];
     let mut report = BenchReport::new();
     for (label, kind, n, m, workers, schedule, chunk, refill) in arms {
@@ -90,7 +96,9 @@ fn main() -> anyhow::Result<()> {
         // runs the paper's max_variance selection
         let rule = if label.contains("prune") { prune_rule.as_str() } else { "max_variance" };
         let online = label.contains("online-prune");
-        let mut tr = mk_trainer(kind, n, m, workers, schedule, chunk, refill, rule, online)?;
+        let replay = label.contains("replay");
+        let mut tr =
+            mk_trainer(kind, n, m, workers, schedule, chunk, refill, rule, online, replay)?;
         let pipelined = schedule == "pipelined";
         let mut it = 0usize;
         let res = bench(&format!("e2e step {label}"), Some(4), || {

@@ -100,7 +100,7 @@ fn main() -> anyhow::Result<()> {
         .build()?;
         let mut upd = UpdateEngine::new(store.len());
         bench(label, Some(8), || {
-            let out = upd.run(&engine, &mut store, None, &groups, &selected, &cfg).unwrap();
+            let out = upd.run(&engine, &mut store, None, &groups, &selected, &[], &cfg).unwrap();
             black_box(out);
         });
     }

@@ -7,7 +7,7 @@
 //! and CI runs [`check`] (`pods config-docs --check`) to fail when the
 //! committed file is stale.
 
-use super::{RolloutSection, UpdateSection};
+use super::{ReplaySection, RolloutSection, UpdateSection};
 use crate::hwsim::HwModel;
 use anyhow::{anyhow, Result};
 use std::path::Path;
@@ -56,6 +56,7 @@ pub fn sections() -> Vec<SectionDoc> {
     let hw = HwModel::default();
     let ro = RolloutSection::default();
     let up = UpdateSection::default();
+    let rp = ReplaySection::default();
     vec![
         SectionDoc {
             name: "run",
@@ -108,6 +109,22 @@ pub fn sections() -> Vec<SectionDoc> {
             keys: vec![
                 KeyDoc::new("shards", "int", up.shards.to_string(), ">= 1", "Simulated data-parallel device shards the update batch is split over."),
                 KeyDoc::new("micro_batch", "int", up.micro_batch.to_string(), "0..=B_u (0 = the profile's full B_u)", "Rows per update micro-batch; the hwsim memory ceiling still caps the effective size."),
+            ],
+        },
+        SectionDoc {
+            name: "replay",
+            intro: "Cross-iteration rollout replay: dropped-but-eligible \
+                    rollouts enter a staleness-bounded store and are mixed \
+                    back into later updates with truncated \
+                    importance-weight correction. Off by default; disabled \
+                    runs are bit-identical to a build without the section \
+                    (docs/DETERMINISM.md).",
+            keys: vec![
+                KeyDoc::new("enabled", "bool", rp.enabled.to_string(), "requires `algo.adv_norm = \"after\"`", "Turn replay on."),
+                KeyDoc::new("mix_fraction", "float", rp.mix_fraction.to_string(), "0.0..=1.0", "Replay quota per update as a fraction of the fresh selected rows (`floor(mix_fraction * m)`)."),
+                KeyDoc::new("staleness", "int", rp.staleness.to_string(), ">= 1", "Iterations a stored row stays eligible; older rows evict deterministically."),
+                KeyDoc::new("capacity_per_prompt", "int", rp.capacity_per_prompt.to_string(), ">= 1", "Stored rows kept per prompt (eviction: staleness, then admission score, ties by row id)."),
+                KeyDoc::new("rho_max", "float", rp.rho_max.to_string(), ">= 1", "Per-token importance-ratio ceiling for replayed rows (stored `old_lp` floors at `-ln(rho_max)`)."),
             ],
         },
         SectionDoc {
@@ -283,6 +300,16 @@ mod tests {
         ] {
             assert_eq!(key(&secs, "hwsim", k).default, v, "hwsim.{k} default drifted");
         }
+        // [replay] — defaults of the off-by-default section
+        let rp = &cfg.replay;
+        assert_eq!(key(&secs, "replay", "enabled").default, rp.enabled.to_string());
+        assert_eq!(key(&secs, "replay", "mix_fraction").default, rp.mix_fraction.to_string());
+        assert_eq!(key(&secs, "replay", "staleness").default, rp.staleness.to_string());
+        assert_eq!(
+            key(&secs, "replay", "capacity_per_prompt").default,
+            rp.capacity_per_prompt.to_string()
+        );
+        assert_eq!(key(&secs, "replay", "rho_max").default, rp.rho_max.to_string());
         // [run]/[algo] parse-fallback defaults
         assert_eq!(key(&secs, "run", "seed").default, cfg.run.seed.to_string());
         assert_eq!(
@@ -310,7 +337,7 @@ mod tests {
     #[test]
     fn render_and_check_roundtrip() {
         let text = render();
-        for sec in ["[run]", "[algo]", "[rollout]", "[update]", "[hwsim]", "[sft]"] {
+        for sec in ["[run]", "[algo]", "[rollout]", "[update]", "[replay]", "[hwsim]", "[sft]"] {
             assert!(text.contains(sec), "missing section {sec}");
         }
         assert!(text.starts_with("<!-- GENERATED FILE"));

@@ -223,6 +223,93 @@ impl UpdateSection {
     }
 }
 
+/// `[replay]` — cross-iteration rollout replay (the `coordinator::replay`
+/// subsystem).
+///
+/// When enabled, rollouts the selection pipeline drops are admitted into a
+/// [`crate::coordinator::replay::ReplayStore`] and mixed back into later
+/// update batches with their stored behaviour log-probs, so the GRPO ratio
+/// term applies the importance-sampling correction. Replayed rows charge
+/// zero inference time (they were decoded in their admission iteration)
+/// but full update cost. Off by default; with the store empty or the
+/// section disabled the training path is bit-identical to no-replay runs.
+#[derive(Debug, Clone)]
+pub struct ReplaySection {
+    /// Master switch. `false` (default) keeps the training path
+    /// bit-identical to a build without the replay subsystem.
+    pub enabled: bool,
+    /// Replay quota per update as a fraction of the fresh update size:
+    /// up to `floor(mix_fraction * fresh_rows)` stored rows are appended
+    /// to each update batch.
+    pub mix_fraction: f64,
+    /// Staleness bound in iterations: a row admitted at iteration `s` is
+    /// eligible at iterations `s+1 ..= s+staleness` and evicted after.
+    pub staleness: usize,
+    /// Stored rows kept per prompt; excess admissions evict
+    /// deterministically (staleness-then-score, ties by stable row id).
+    pub capacity_per_prompt: usize,
+    /// Truncated importance-sampling clip: stored per-token behaviour
+    /// log-probs are floored at `-ln(rho_max)`, bounding every replayed
+    /// token's ratio `exp(lp - old_lp)` by `rho_max` (log-probs are <= 0).
+    pub rho_max: f64,
+}
+
+impl Default for ReplaySection {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            mix_fraction: 0.25,
+            staleness: 2,
+            capacity_per_prompt: 4,
+            rho_max: 2.0,
+        }
+    }
+}
+
+impl ReplaySection {
+    fn from_section(sec: &SectionView) -> Result<Self> {
+        let d = Self::default();
+        let r = Self {
+            enabled: sec.bool_or("enabled", d.enabled)?,
+            mix_fraction: sec.f64_or("mix_fraction", d.mix_fraction)?,
+            staleness: sec.usize_or("staleness", d.staleness)?,
+            capacity_per_prompt: sec.usize_or("capacity_per_prompt", d.capacity_per_prompt)?,
+            rho_max: sec.f64_or("rho_max", d.rho_max)?,
+        };
+        r.validate()?;
+        Ok(r)
+    }
+
+    /// Reject degenerate replay policies at parse time.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.mix_fraction) {
+            return Err(anyhow!(
+                "replay.mix_fraction must be in 0.0..=1.0 (replayed rows per update \
+                 as a fraction of the fresh update size; got {})",
+                self.mix_fraction
+            ));
+        }
+        if self.staleness == 0 {
+            return Err(anyhow!(
+                "replay.staleness must be >= 1 (iterations a stored row stays \
+                 eligible; replay is cross-iteration, so 0 would admit nothing)"
+            ));
+        }
+        if self.capacity_per_prompt == 0 {
+            return Err(anyhow!(
+                "replay.capacity_per_prompt must be >= 1 (stored rows kept per prompt)"
+            ));
+        }
+        if self.rho_max < 1.0 {
+            return Err(anyhow!(
+                "replay.rho_max must be >= 1.0 (truncated importance-sampling clip; \
+                 values below 1 would truncate on-policy rows with ratio exactly 1)"
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// `[sft]` — optional supervised warm-up before RL.
 #[derive(Debug, Clone, Default)]
 pub struct SftSection {
@@ -249,6 +336,8 @@ pub struct RunConfig {
     pub rollout: RolloutSection,
     /// `[update]` — sharded data-parallel update engine.
     pub update: UpdateSection,
+    /// `[replay]` — cross-iteration rollout replay (off by default).
+    pub replay: ReplaySection,
     /// `[sft]` — optional supervised warm-up.
     pub sft: Option<SftSection>,
 }
@@ -268,6 +357,7 @@ impl RunConfig {
         let hw = SectionView::new(&doc, "hwsim");
         let rollout = SectionView::new(&doc, "rollout");
         let update = SectionView::new(&doc, "update");
+        let replay = SectionView::new(&doc, "replay");
         let sft = SectionView::new(&doc, "sft");
 
         let cfg = RunConfig {
@@ -300,6 +390,7 @@ impl RunConfig {
             hwsim: HwModel::from_section(&hw)?,
             rollout: RolloutSection::from_section(&rollout)?,
             update: UpdateSection::from_section(&update)?,
+            replay: ReplaySection::from_section(&replay)?,
             sft: if sft.sec.is_some() {
                 Some(SftSection {
                     steps: sft.usize_or("steps", 0)?,
@@ -380,6 +471,18 @@ impl RunConfig {
         self.hwsim.validate()?;
         self.rollout.validate()?;
         self.update.validate()?;
+        self.replay.validate()?;
+        // replayed rows reuse the advantage convention of the selected
+        // subset ("after" statistics); "before" normalizes over the full
+        // generation group, which no longer exists at replay time
+        if self.replay.enabled && self.norm_mode() == NormMode::Before {
+            return Err(anyhow!(
+                "replay.enabled requires algo.adv_norm = \"after\": replayed rows \
+                 are normalized against their admission iteration's kept-subset \
+                 statistics, which only matches the \"after\" convention (see \
+                 docs/DETERMINISM.md)"
+            ));
+        }
         // online pruning is only sound when advantages normalize on the
         // selected subset: "before" reads every rollout's reward, which an
         // aborted (truncated) stream would perturb
@@ -583,6 +686,61 @@ mod tests {
         let err = format!("{:#}", upd.rows_per_call(8).unwrap_err());
         assert!(err.contains("micro_batch"), "undescriptive: {err}");
         assert!(err.contains("B_u"), "undescriptive: {err}");
+    }
+
+    #[test]
+    fn replay_section_defaults_and_overrides() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert!(!cfg.replay.enabled, "replay must be opt-in");
+        assert!((cfg.replay.mix_fraction - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.replay.staleness, 2);
+        assert_eq!(cfg.replay.capacity_per_prompt, 4);
+        assert!((cfg.replay.rho_max - 2.0).abs() < 1e-12);
+
+        let text = format!(
+            "{MINIMAL}\n[replay]\nenabled = true\nmix_fraction = 0.5\n\
+             staleness = 3\ncapacity_per_prompt = 8\nrho_max = 4.0\n"
+        );
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert!(cfg.replay.enabled);
+        assert!((cfg.replay.mix_fraction - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.replay.staleness, 3);
+        assert_eq!(cfg.replay.capacity_per_prompt, 8);
+        assert!((cfg.replay.rho_max - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replay_section_rejects_degenerate_values() {
+        let text = format!("{MINIMAL}\n[replay]\nmix_fraction = 1.5\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("replay.mix_fraction"), "undescriptive: {err}");
+
+        let text = format!("{MINIMAL}\n[replay]\nstaleness = 0\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("replay.staleness"), "undescriptive: {err}");
+
+        let text = format!("{MINIMAL}\n[replay]\ncapacity_per_prompt = 0\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("replay.capacity_per_prompt"), "undescriptive: {err}");
+
+        let text = format!("{MINIMAL}\n[replay]\nrho_max = 0.5\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("replay.rho_max"), "undescriptive: {err}");
+    }
+
+    #[test]
+    fn replay_requires_after_normalization() {
+        let text = format!(
+            "{}\n[replay]\nenabled = true\n",
+            MINIMAL.replace("lr = 1e-4", "lr = 1e-4\nadv_norm = \"before\"")
+        );
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("replay.enabled"), "undescriptive: {err}");
+        assert!(err.contains("adv_norm"), "undescriptive: {err}");
+
+        // disabled replay with "before" normalization stays legal
+        let text = MINIMAL.replace("lr = 1e-4", "lr = 1e-4\nadv_norm = \"before\"");
+        assert!(RunConfig::from_str_validated(&text).is_ok());
     }
 
     #[test]

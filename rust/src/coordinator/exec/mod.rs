@@ -42,11 +42,12 @@ pub mod update_engine;
 
 pub use crate::hwsim::Schedule;
 pub use rollout_engine::{GenBatch, PendingGen, RolloutEngine};
-pub use update_engine::{MicroSlot, ShardPlan, UpdateEngine, UpdateOut};
+pub use update_engine::{pack_micro_batch, MicroSlot, PackedRow, ShardPlan, UpdateEngine, UpdateOut};
 
 use crate::config::{AlgoKind, RunConfig};
 use crate::coordinator::advantage::NormMode;
 use crate::coordinator::group::{build_update_batch, BatchSelectionStats};
+use crate::coordinator::replay::{ReplayStore, StoredRow};
 use crate::coordinator::select::online::GroupVerdicts;
 use crate::coordinator::select::Pipeline;
 use crate::hwsim::SimClock;
@@ -134,6 +135,15 @@ pub struct StepReport {
     pub sel_stats: BatchSelectionStats,
     /// Reward variance of the selected update batch.
     pub sel_variance: f64,
+    /// Stored rows the replay store mixed into this update (0 with
+    /// `[replay]` disabled or the store empty).
+    pub replay_rows_used: usize,
+    /// Rows resident in the replay store after this iteration's
+    /// admissions and evictions.
+    pub replay_store_size: usize,
+    /// Mean staleness in iterations of the rows replayed this update
+    /// (0 when none were).
+    pub replay_mean_staleness: f64,
 }
 
 /// The schedule-aware driver for one training run.
@@ -149,6 +159,9 @@ pub struct TrainLoop {
     /// Previous iteration's simulated update time — what a prefetched
     /// inference phase overlapped with.
     last_update_time: f64,
+    /// Cross-iteration replay store (`[replay]`; stays empty — and costs
+    /// nothing — when the section is disabled).
+    replay: ReplayStore,
 }
 
 impl TrainLoop {
@@ -168,7 +181,14 @@ impl TrainLoop {
             schedule,
             pending: None,
             last_update_time: 0.0,
+            replay: ReplayStore::new(),
         }
+    }
+
+    /// Read access to the cross-iteration replay store (telemetry and the
+    /// determinism goldens in `rust/tests/replay_golden.rs`).
+    pub fn replay_store(&self) -> &ReplayStore {
+        &self.replay
     }
 
     /// One full Algorithm-1 step for `iter`. `prefetch_next` permits the
@@ -273,8 +293,35 @@ impl TrainLoop {
             self.pending = Some((iter + 1, pending));
         }
 
+        // ---- Phase 2.75: cross-iteration replay -----------------------
+        // Draw BEFORE offering this iteration's drops, so every replayed
+        // row has staleness >= 1 (replay is cross-iteration by
+        // construction). All inputs here — groups, selected, iter — are
+        // partition-invariant, so the store's evolution is a pure function
+        // of (run_seed, rollout history) whatever the worker count or
+        // chunk size (docs/DETERMINISM.md; pinned by replay_golden.rs).
+        let mut replayed: Vec<StoredRow> = Vec::new();
+        let mut replay_mean_staleness = 0.0f64;
+        if cfg.replay.enabled {
+            self.replay.evict_stale(iter as u64, cfg.replay.staleness);
+            let quota = ReplayStore::quota(selected.len(), cfg.replay.mix_fraction);
+            replayed = self.replay.draw(quota);
+            if !replayed.is_empty() {
+                replay_mean_staleness = replayed
+                    .iter()
+                    .map(|r| (iter as u64).saturating_sub(r.id.iter) as f64)
+                    .sum::<f64>()
+                    / replayed.len() as f64;
+            }
+            self.replay.offer(iter as u64, &groups, &selected, &cfg.replay);
+        }
+
         // ---- Phase 3: sharded micro-batched update --------------------
-        let upd = self.update.run(ctx.engine, ctx.store, ctx.base, &groups, &selected, cfg)?;
+        // Replayed rows pack after the fresh rows: they charge full update
+        // cost (inside upd.rollouts_trained) but zero inference time —
+        // gen_lens above only ever sees freshly decoded rollouts.
+        let upd =
+            self.update.run(ctx.engine, ctx.store, ctx.base, &groups, &selected, &replayed, cfg)?;
 
         // ---- Clock: overlap-aware charging ----------------------------
         // A prefetched inference phase ran concurrently with the previous
@@ -308,9 +355,11 @@ impl TrainLoop {
             sim_overlap_saved: sim_inference - charged_inference,
             sel_stats,
             sel_variance,
+            replay_rows_used: replayed.len(),
+            replay_store_size: self.replay.len(),
+            replay_mean_staleness,
         })
     }
-
 }
 
 /// Snapshot everything generation for `iter` needs from the live trainer

@@ -35,12 +35,78 @@
 //!
 //! An iteration whose selection dropped every group performs (and is
 //! charged) nothing.
+//!
+//! ## Replay mixing (`[replay]`)
+//!
+//! When the cross-iteration replay store drew rows for this update, they
+//! are appended **after** the fresh selected rows in the canonical
+//! packing order, carrying their stored behaviour log-probs (floored at
+//! `-ln(rho_max)`, see [`crate::coordinator::replay::truncate_old_lp`])
+//! and their admission-time advantages. The plan spans
+//! `selected + replayed` rows, so replayed rows are charged full update
+//! cost; with replay disabled or the store empty the packing — and every
+//! f32 rounding step after it — is bit-identical to a build without the
+//! replay subsystem.
 
 use crate::config::RunConfig;
 use crate::coordinator::accum::GradAccumulator;
 use crate::coordinator::group::{PromptGroup, SelectedRollout};
+use crate::coordinator::replay::{truncate_old_lp, StoredRow};
 use crate::runtime::{Engine, MicroBatch, ParamStore, TensorF, TensorI};
 use anyhow::Result;
+
+/// One update-ready row, as the shared micro-batch packer consumes it:
+/// borrowed slices into wherever the row lives (a fresh
+/// [`crate::coordinator::group::RolloutRecord`], a replayed
+/// [`StoredRow`], or a rollout-program output buffer).
+#[derive(Debug, Clone, Copy)]
+pub struct PackedRow<'a> {
+    /// Full token row `[T]` (left-padded prompt + generation).
+    pub tokens: &'a [i32],
+    /// Left-padding length of the prompt region.
+    pub pad_len: i32,
+    /// `[G]` generation mask, 1.0 through EOS.
+    pub gen_mask: &'a [f32],
+    /// `[G]` behaviour log-probs the ratio term divides by.
+    pub old_lp: &'a [f32],
+    /// `[G]` reference-policy log-probs (zeros when KL is off).
+    pub ref_lp: &'a [f32],
+    /// Normalized advantage.
+    pub advantage: f32,
+}
+
+/// Pack up to `bu` rows into one fixed-shape `[B_u]` micro-batch for the
+/// AOT `grad` program. Unused slots stay padded (PAD tokens, zero masks,
+/// zero advantage) and contribute exactly zero gradient.
+///
+/// This is the **single** packing path: the training update, the replay
+/// mix and `exp fig1`'s probe all build their micro-batches here, so the
+/// buffer layout can never diverge between the trainer and the
+/// experiment drivers.
+pub fn pack_micro_batch(rows: &[PackedRow], bu: usize, g: usize, t: usize) -> Result<MicroBatch> {
+    let mut tokens = vec![crate::tasks::tokenizer::PAD; bu * t];
+    let mut pads = vec![0i32; bu];
+    let mut gen_mask = vec![0.0f32; bu * g];
+    let mut old_lp = vec![0.0f32; bu * g];
+    let mut ref_lp = vec![0.0f32; bu * g];
+    let mut adv = vec![0.0f32; bu];
+    for (b, row) in rows.iter().enumerate().take(bu) {
+        tokens[b * t..(b + 1) * t].copy_from_slice(row.tokens);
+        pads[b] = row.pad_len;
+        gen_mask[b * g..(b + 1) * g].copy_from_slice(row.gen_mask);
+        old_lp[b * g..(b + 1) * g].copy_from_slice(row.old_lp);
+        ref_lp[b * g..(b + 1) * g].copy_from_slice(row.ref_lp);
+        adv[b] = row.advantage;
+    }
+    Ok(MicroBatch {
+        tokens: TensorI::new(tokens, &[bu, t])?,
+        pad_len: pads,
+        gen_mask: TensorF::new(gen_mask, &[bu, g])?,
+        old_lp: TensorF::new(old_lp, &[bu, g])?,
+        adv,
+        ref_lp: TensorF::new(ref_lp, &[bu, g])?,
+    })
+}
 
 /// One planned `grad` call: the contiguous slice `start..end` of the
 /// selected-rollout list, assigned to simulated device `shard`.
@@ -140,11 +206,16 @@ impl UpdateEngine {
         Self { accum: GradAccumulator::new(param_width) }
     }
 
-    /// Run one full update phase over `selected` and apply the optimizer.
+    /// Run one full update phase over `selected` (plus any `replay` rows
+    /// drawn from the cross-iteration store) and apply the optimizer.
     /// `cfg` supplies the topology (`[update]`), the loss knobs
-    /// (`[algo] kl_coef`, `lr`) and the cost model (`[hwsim]`); the hwsim
-    /// charge is computed here so every caller — sync or pipelined —
-    /// prices the phase identically.
+    /// (`[algo] kl_coef`, `lr`), the replay clip (`[replay] rho_max`) and
+    /// the cost model (`[hwsim]`); the hwsim charge is computed here so
+    /// every caller — sync or pipelined — prices the phase identically.
+    ///
+    /// Replayed rows pack after the fresh rows in canonical order; pass
+    /// `&[]` for the no-replay path, which is bit-identical to the
+    /// pre-replay engine.
     pub fn run(
         &mut self,
         engine: &Engine,
@@ -152,6 +223,7 @@ impl UpdateEngine {
         base: Option<&[f32]>,
         groups: &[PromptGroup],
         selected: &[SelectedRollout],
+        replay: &[StoredRow],
         cfg: &RunConfig,
     ) -> Result<UpdateOut> {
         let bu = engine.meta.config.update_batch;
@@ -159,7 +231,17 @@ impl UpdateEngine {
         let t = engine.meta.config.seq_len;
         let kl_coef = cfg.algo.kl_coef as f32;
         let rows_per_call = cfg.update.rows_per_call(bu)?;
-        let plan = ShardPlan::new(selected.len(), cfg.update.shards, rows_per_call);
+        let total = selected.len() + replay.len();
+        let plan = ShardPlan::new(total, cfg.update.shards, rows_per_call);
+        // Truncated importance sampling: floor each replayed token's
+        // stored behaviour log-prob at -ln(rho_max), bounding its ratio
+        // term by rho_max. Fresh rows are never touched.
+        let replay_lp: Vec<Vec<f32>> = replay
+            .iter()
+            .map(|r| {
+                r.record.old_lp.iter().map(|&l| truncate_old_lp(l, cfg.replay.rho_max)).collect()
+            })
+            .collect();
         self.accum.reset();
         let mut loss_sum = 0f64;
         let mut clip_sum = 0f64;
@@ -168,43 +250,50 @@ impl UpdateEngine {
         // shard-agnostic, so the f32 accumulation below never depends on
         // the simulated topology (the shard-invariance contract).
         for slot in &plan.slots {
-            let chunk = &selected[slot.start..slot.end];
-            let mut tokens = vec![crate::tasks::tokenizer::PAD; bu * t];
-            let mut pads = vec![0i32; bu];
-            let mut gen_mask = vec![0.0f32; bu * g];
-            let mut old_lp = vec![0.0f32; bu * g];
-            let mut ref_lp = vec![0.0f32; bu * g];
-            let mut adv = vec![0.0f32; bu];
-            for (b, sel) in chunk.iter().enumerate() {
-                let r = &groups[sel.group_idx].rollouts[sel.rollout_idx];
-                tokens[b * t..(b + 1) * t].copy_from_slice(&r.tokens);
-                pads[b] = r.pad_len;
-                gen_mask[b * g..(b + 1) * g].copy_from_slice(&r.gen_mask);
-                old_lp[b * g..(b + 1) * g].copy_from_slice(&r.old_lp);
-                ref_lp[b * g..(b + 1) * g].copy_from_slice(&r.ref_lp);
-                adv[b] = sel.advantage;
-            }
-            let mb = MicroBatch {
-                tokens: TensorI::new(tokens, &[bu, t])?,
-                pad_len: pads,
-                gen_mask: TensorF::new(gen_mask, &[bu, g])?,
-                old_lp: TensorF::new(old_lp, &[bu, g])?,
-                adv,
-                ref_lp: TensorF::new(ref_lp, &[bu, g])?,
-            };
+            let rows: Vec<PackedRow> = (slot.start..slot.end)
+                .map(|i| {
+                    if i < selected.len() {
+                        let sel = &selected[i];
+                        let r = &groups[sel.group_idx].rollouts[sel.rollout_idx];
+                        PackedRow {
+                            tokens: &r.tokens,
+                            pad_len: r.pad_len,
+                            gen_mask: &r.gen_mask,
+                            old_lp: &r.old_lp,
+                            ref_lp: &r.ref_lp,
+                            advantage: sel.advantage,
+                        }
+                    } else {
+                        let j = i - selected.len();
+                        let r = &replay[j].record;
+                        PackedRow {
+                            tokens: &r.tokens,
+                            pad_len: r.pad_len,
+                            gen_mask: &r.gen_mask,
+                            old_lp: &replay_lp[j],
+                            ref_lp: &r.ref_lp,
+                            advantage: replay[j].advantage,
+                        }
+                    }
+                })
+                .collect();
+            let mb = pack_micro_batch(&rows, bu, g, t)?;
             let out = engine.grad(&store.params, base, &mb, kl_coef)?;
             self.accum.add(&out.grads, bu as f64);
-            loss_sum += out.loss as f64 * chunk.len() as f64;
-            clip_sum += out.clip_frac as f64 * chunk.len() as f64;
-            kl_sum += out.kl as f64 * chunk.len() as f64;
+            loss_sum += out.loss as f64 * rows.len() as f64;
+            clip_sum += out.clip_frac as f64 * rows.len() as f64;
+            kl_sum += out.kl as f64 * rows.len() as f64;
         }
         let micro_steps = self.accum.micro_steps();
-        let rollouts_trained = selected.len();
+        let rollouts_trained = total;
         // an iteration whose selection dropped every group (all groups
         // zero-signal) performs no update and must not be charged for one
         // micro_batch passes through as configured: 0 lets the cost model
         // fall back to the simulated memory ceiling (the toy artifact's
         // B_u is an AOT-shape limitation, not simulated hardware)
+        // replayed rows are inside rollouts_trained: they charge full
+        // update cost here, and zero inference cost anywhere (their decode
+        // was charged in their admission iteration)
         let cost = cfg.hwsim.update_cost(
             rollouts_trained,
             cfg.update.shards,
@@ -346,5 +435,78 @@ mod tests {
         let plan = ShardPlan::new(0, 4, 8);
         assert!(plan.slots.is_empty());
         assert_eq!(plan.max_steps_per_shard(), 0);
+    }
+
+    /// The shared packer fills row slots in order and leaves unused slots
+    /// exactly at the padded-zero state the grad program treats as inert.
+    #[test]
+    fn pack_micro_batch_pads_unused_slots_exactly() {
+        let (bu, g, t) = (4usize, 3usize, 5usize);
+        let tokens = vec![7i32; t];
+        let gen_mask = vec![1.0f32; g];
+        let old_lp = vec![-0.5f32; g];
+        let ref_lp = vec![-0.25f32; g];
+        let row = PackedRow {
+            tokens: &tokens,
+            pad_len: 2,
+            gen_mask: &gen_mask,
+            old_lp: &old_lp,
+            ref_lp: &ref_lp,
+            advantage: 1.5,
+        };
+        let mb = pack_micro_batch(&[row], bu, g, t).unwrap();
+        assert_eq!(&mb.tokens.data[..t], &tokens[..]);
+        assert!(mb.tokens.data[t..].iter().all(|&x| x == crate::tasks::tokenizer::PAD));
+        assert_eq!(mb.pad_len, vec![2, 0, 0, 0]);
+        assert_eq!(&mb.old_lp.data[..g], &old_lp[..]);
+        assert!(mb.old_lp.data[g..].iter().all(|&x| x == 0.0));
+        assert!(mb.gen_mask.data[g..].iter().all(|&x| x == 0.0));
+        assert_eq!(mb.adv, vec![1.5, 0.0, 0.0, 0.0]);
+    }
+
+    /// Satellite property: a replayed row whose stored behaviour log-probs
+    /// equal the current policy's (ratio exactly 1 — zero staleness) packs
+    /// into a **bit-identical** micro-batch slot as the same row packed
+    /// fresh, so its gradient contribution through the fixed grad program
+    /// is identical too. The rho_max floor must stay inactive on log-probs
+    /// within the clip bound.
+    #[test]
+    fn zero_staleness_replay_row_packs_identically_to_fresh() {
+        use crate::coordinator::replay::truncate_old_lp;
+        for_cases(100, |rng| {
+            let (bu, g, t) = (4usize, 6usize, 10usize);
+            let rho_max = 1.5 + rng.f64() * 3.0;
+            // log-probs within the clip bound: the floor may not touch them
+            let bound = -(rho_max as f32).ln();
+            let old_lp: Vec<f32> =
+                vec_f32(rng, g, bound, 0.0).iter().map(|&v| v.max(bound)).collect();
+            let tokens: Vec<i32> = (0..t).map(|i| i as i32).collect();
+            let gen_mask = vec![1.0f32; g];
+            let ref_lp = vec_f32(rng, g, -2.0, 0.0);
+            let adv = rng.f64() as f32 * 2.0 - 1.0;
+            let fresh = PackedRow {
+                tokens: &tokens,
+                pad_len: 1,
+                gen_mask: &gen_mask,
+                old_lp: &old_lp,
+                ref_lp: &ref_lp,
+                advantage: adv,
+            };
+            // the replay path re-derives old_lp through the truncation
+            let replay_lp: Vec<f32> =
+                old_lp.iter().map(|&l| truncate_old_lp(l, rho_max)).collect();
+            let replayed = PackedRow { old_lp: &replay_lp, ..fresh };
+            let a = pack_micro_batch(&[fresh], bu, g, t).unwrap();
+            let b = pack_micro_batch(&[replayed], bu, g, t).unwrap();
+            assert_eq!(a.tokens.data, b.tokens.data);
+            assert_eq!(a.pad_len, b.pad_len);
+            assert_eq!(a.gen_mask.data, b.gen_mask.data);
+            assert_eq!(
+                a.old_lp.data, b.old_lp.data,
+                "within-bound log-probs must pass through the replay path bitwise"
+            );
+            assert_eq!(a.ref_lp.data, b.ref_lp.data);
+            assert_eq!(a.adv, b.adv);
+        });
     }
 }

@@ -11,6 +11,10 @@
 //!   generation ([`exec::RolloutEngine`]), the update phase
 //!   ([`exec::UpdateEngine`]), and the schedule-aware driver
 //!   ([`exec::TrainLoop`], `sync` | `pipelined`).
+//! * [`replay`] — cross-iteration rollout replay: the staleness-bounded
+//!   [`replay::ReplayStore`] that retains dropped-but-informative
+//!   rollouts and mixes them back into later updates with
+//!   importance-weight correction.
 //! * [`worker`] — simulated multi-accelerator topology (shard math the
 //!   hwsim charges with; `exec` provides the real threads).
 //! * [`scheduler`] — the GRPO / GRPO-GA / GRPO-PODS trainer façade over
@@ -21,6 +25,7 @@ pub mod advantage;
 pub mod downsample;
 pub mod exec;
 pub mod group;
+pub mod replay;
 pub mod scheduler;
 pub mod select;
 pub mod worker;

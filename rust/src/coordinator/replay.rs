@@ -1,0 +1,430 @@
+//! Cross-iteration rollout replay: staleness-bounded reuse of dropped
+//! rollouts (`[replay]`).
+//!
+//! PODS discards `n - m` rollouts per prompt per iteration after paying
+//! their full decode cost. The [`ReplayStore`] sits **behind** the
+//! selection pipeline: rollouts the pipeline drops are offered to the
+//! store, scored by how much reward signal the kept subset lost
+//! ([`bracket_distance`] to the kept rewards — the same bracket math the
+//! online pruner reasons with), and retained under a per-prompt capacity
+//! and a staleness bound in iterations. Later updates draw stored rows
+//! back into the update batch (`[replay] mix_fraction` of the fresh
+//! update size); replayed rows carry their stored behaviour log-probs, so
+//! the GRPO ratio term `exp(lp - old_lp)` applies the importance-sampling
+//! correction, truncated by flooring the stored log-probs at
+//! `-ln(rho_max)` ([`truncate_old_lp`]).
+//!
+//! **Determinism contract** (pinned by `rust/tests/replay_golden.rs` and
+//! documented in `docs/DETERMINISM.md`): the store's contents — and hence
+//! the rows eligible at iteration `t` — are a pure function of
+//! `(run_seed, history)`. Every admission input (group rewards, selection
+//! output, prompt ids, iteration number) is itself invariant to worker
+//! count, chunk size and schedule, offers are canonicalized by sorting on
+//! the stable [`RowId`], and eviction/draw orders are total orders with
+//! `RowId` tie-breaks. Replayed rows charge **zero inference time** (they
+//! were decoded in their admission iteration) but **full update cost**.
+
+use crate::config::ReplaySection;
+use crate::coordinator::advantage::SIGMA_EPS;
+use crate::coordinator::group::{PromptGroup, RolloutRecord, SelectedRollout};
+use crate::coordinator::select::online::bracket_distance;
+use crate::rollout::replay_handoff_eligible;
+
+/// Stable identity of a stored row: the coordinates that name a rollout
+/// independently of worker-pool partitioning, chunk size and schedule.
+/// The derived lexicographic order (`iter`, then `prompt_id`, then
+/// `rollout_idx`) is the tie-break of every deterministic ordering in
+/// this module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RowId {
+    /// Iteration the rollout was generated (and admitted) in.
+    pub iter: u64,
+    /// `Problem::id` of the rollout's prompt.
+    pub prompt_id: u64,
+    /// Rollout index within its prompt group.
+    pub rollout_idx: u32,
+}
+
+/// One admitted rollout with everything a later update needs.
+#[derive(Debug, Clone)]
+pub struct StoredRow {
+    /// Stable identity (also the eviction/draw tie-break).
+    pub id: RowId,
+    /// Admission score: [`bracket_distance`] from the row's reward to the
+    /// kept subset's rewards at admission time. Higher = the selection
+    /// dropped more signal by excluding this row.
+    pub score: f32,
+    /// Advantage normalized against the admission iteration's kept-subset
+    /// statistics (the `adv_norm = "after"` convention).
+    pub advantage: f32,
+    /// The full update-ready rollout payload (tokens, `old_lp`, masks).
+    pub record: RolloutRecord,
+}
+
+/// Staleness-bounded store of dropped rollouts, keyed by prompt.
+///
+/// All mutating operations keep `rows` sorted by [`RowId`], so the store's
+/// state admits a canonical representation whatever order history was
+/// replayed in.
+#[derive(Debug, Default)]
+pub struct ReplayStore {
+    rows: Vec<StoredRow>,
+}
+
+impl ReplayStore {
+    /// An empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stored rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when nothing is stored.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Current contents in canonical (`RowId`-ascending) order.
+    pub fn contents(&self) -> &[StoredRow] {
+        &self.rows
+    }
+
+    /// Evict every row outside the staleness window at iteration `iter`:
+    /// a row admitted at `s` is eligible while `iter - s <= staleness`.
+    pub fn evict_stale(&mut self, iter: u64, staleness: usize) {
+        self.rows.retain(|r| iter.saturating_sub(r.id.iter) <= staleness as u64);
+    }
+
+    /// Offer one iteration's dropped rollouts.
+    ///
+    /// For each group with a non-empty kept subset, every dropped,
+    /// handoff-eligible rollout (see
+    /// [`crate::rollout::replay_handoff_eligible`]) is admitted with its
+    /// bracket-distance score and kept-subset-normalized advantage; then
+    /// each prompt is trimmed back to `cfg.capacity_per_prompt` rows by
+    /// the deterministic eviction order **staleness-then-score** (stalest
+    /// evicted first, then lowest score; on full ties the smaller
+    /// [`RowId`] is preferred and survives).
+    ///
+    /// Groups whose selection came back empty are skipped: there is no
+    /// kept subset to score or normalize against.
+    pub fn offer(
+        &mut self,
+        iter: u64,
+        groups: &[PromptGroup],
+        selected: &[SelectedRollout],
+        cfg: &ReplaySection,
+    ) {
+        for (gi, group) in groups.iter().enumerate() {
+            let kept: Vec<usize> = selected
+                .iter()
+                .filter(|s| s.group_idx == gi)
+                .map(|s| s.rollout_idx)
+                .collect();
+            if kept.is_empty() {
+                continue;
+            }
+            let kept_rewards: Vec<f32> =
+                kept.iter().map(|&ri| group.rollouts[ri].total_reward).collect();
+            // kept-subset statistics, same convention as subset_advantages
+            // (population std in f64, SIGMA_EPS floor)
+            let kn = kept_rewards.len() as f64;
+            let mean = kept_rewards.iter().map(|&r| r as f64).sum::<f64>() / kn;
+            let var = kept_rewards.iter().map(|&r| (r as f64 - mean).powi(2)).sum::<f64>() / kn;
+            let std = var.sqrt();
+            for (ri, record) in group.rollouts.iter().enumerate() {
+                if kept.contains(&ri) || !replay_handoff_eligible(record) {
+                    continue;
+                }
+                self.rows.push(StoredRow {
+                    id: RowId {
+                        iter,
+                        prompt_id: group.problem.id,
+                        rollout_idx: ri as u32,
+                    },
+                    score: bracket_distance(record.total_reward, &kept_rewards),
+                    advantage: ((record.total_reward as f64 - mean) / (std + SIGMA_EPS)) as f32,
+                    record: record.clone(),
+                });
+            }
+        }
+        self.enforce_capacity(cfg.capacity_per_prompt);
+        self.rows.sort_by_key(|r| r.id);
+    }
+
+    /// Trim every prompt back to `capacity` rows, evicting in the order
+    /// staleness-then-score with `RowId` ties: keep-priority sorts fresher
+    /// first, then higher score, then smaller id.
+    fn enforce_capacity(&mut self, capacity: usize) {
+        let mut by_prompt: std::collections::BTreeMap<u64, Vec<StoredRow>> = Default::default();
+        for row in self.rows.drain(..) {
+            by_prompt.entry(row.id.prompt_id).or_default().push(row);
+        }
+        for rows in by_prompt.values_mut() {
+            rows.sort_by(|a, b| {
+                b.id.iter
+                    .cmp(&a.id.iter)
+                    .then(b.score.total_cmp(&a.score))
+                    .then(a.id.cmp(&b.id))
+            });
+            rows.truncate(capacity);
+            self.rows.append(rows);
+        }
+    }
+
+    /// Draw up to `quota` rows for one update, consuming them: highest
+    /// score first, ties by [`RowId`]. The returned order is the order the
+    /// rows are packed in, so it is part of the determinism contract.
+    pub fn draw(&mut self, quota: usize) -> Vec<StoredRow> {
+        if quota == 0 || self.rows.is_empty() {
+            return Vec::new();
+        }
+        let mut order: Vec<usize> = (0..self.rows.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.rows[b]
+                .score
+                .total_cmp(&self.rows[a].score)
+                .then(self.rows[a].id.cmp(&self.rows[b].id))
+        });
+        order.truncate(quota);
+        let mut take: Vec<bool> = vec![false; self.rows.len()];
+        for &i in &order {
+            take[i] = true;
+        }
+        let mut drawn: Vec<Option<StoredRow>> = Vec::with_capacity(order.len());
+        let mut kept = Vec::with_capacity(self.rows.len() - order.len());
+        let mut slots: std::collections::BTreeMap<usize, usize> = Default::default();
+        for (pos, &i) in order.iter().enumerate() {
+            slots.insert(i, pos);
+            drawn.push(None);
+        }
+        for (i, row) in self.rows.drain(..).enumerate() {
+            if take[i] {
+                drawn[slots[&i]] = Some(row);
+            } else {
+                kept.push(row);
+            }
+        }
+        self.rows = kept;
+        drawn.into_iter().flatten().collect()
+    }
+
+    /// Replay quota per update: `floor(mix_fraction * fresh_rows)`.
+    pub fn quota(fresh_rows: usize, mix_fraction: f64) -> usize {
+        (mix_fraction.max(0.0) * fresh_rows as f64).floor() as usize
+    }
+}
+
+/// Truncated importance-sampling floor on a stored per-token behaviour
+/// log-prob: `max(old_lp, -ln(rho_max))`.
+///
+/// Current-policy log-probs are `<= 0`, so after flooring, every replayed
+/// token's ratio `exp(lp - old_lp)` is bounded by
+/// `exp(0 + ln(rho_max)) = rho_max`. The floor is inactive
+/// (`old_lp` unchanged, ratio term untouched) whenever
+/// `old_lp >= -ln(rho_max)` — in particular a zero-staleness row with
+/// ratio exactly 1 contributes exactly like a fresh row.
+pub fn truncate_old_lp(old_lp: f32, rho_max: f64) -> f32 {
+    old_lp.max(-(rho_max.max(1.0) as f32).ln())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::advantage::NormMode;
+    use crate::coordinator::group::build_update_batch;
+    use crate::coordinator::select::Pipeline;
+    use crate::util::prop::{for_cases, vec_f32};
+
+    fn cfg(capacity: usize, staleness: usize) -> ReplaySection {
+        ReplaySection {
+            enabled: true,
+            mix_fraction: 0.25,
+            staleness,
+            capacity_per_prompt: capacity,
+            rho_max: 2.0,
+        }
+    }
+
+    fn select(groups: &[PromptGroup], m: usize) -> Vec<SelectedRollout> {
+        let p = Pipeline::parse_default("max_variance").unwrap();
+        build_update_batch(groups, &p, Some(m), NormMode::After, 0, 0).unwrap().0
+    }
+
+    #[test]
+    fn admits_dropped_rows_with_bracket_scores() {
+        let groups = vec![PromptGroup::synthetic(0, &[0.0, 1.0, 2.0, 3.0], None)];
+        let selected = select(&groups, 2); // max_variance keeps {0, 3}
+        let mut store = ReplayStore::new();
+        store.offer(1, &groups, &selected, &cfg(8, 2));
+        assert_eq!(store.len(), 2);
+        let ids: Vec<u32> = store.contents().iter().map(|r| r.id.rollout_idx).collect();
+        assert_eq!(ids, vec![1, 2]);
+        // rewards 1 and 2 are each 1.0 from the nearest kept reward (0 / 3)
+        for row in store.contents() {
+            assert!((row.score - 1.0).abs() < 1e-6, "score {}", row.score);
+            assert_eq!(row.id.iter, 1);
+            assert_eq!(row.id.prompt_id, groups[0].problem.id);
+        }
+        // kept subset {0, 3}: mean 1.5, std 1.5 -> advantages of 1, 2 are
+        // -1/3 and +1/3
+        assert!((store.contents()[0].advantage + 1.0 / 3.0).abs() < 1e-4);
+        assert!((store.contents()[1].advantage - 1.0 / 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn skips_pruned_rows_and_empty_kept_groups() {
+        let mut groups = vec![
+            PromptGroup::synthetic(0, &[0.0, 1.0, 2.0, 3.0], None),
+            PromptGroup::synthetic(1, &[1.0, 1.5, 2.5, 4.0], None),
+        ];
+        groups[0].rollouts[1].pruned = true;
+        // group 1 contributes nothing to `selected` (simulates a dropped
+        // group): none of its rows may be admitted
+        let selected: Vec<SelectedRollout> = select(&groups, 2)
+            .into_iter()
+            .filter(|s| s.group_idx == 0)
+            .collect();
+        let mut store = ReplayStore::new();
+        store.offer(0, &groups, &selected, &cfg(8, 2));
+        let ids: Vec<(u64, u32)> =
+            store.contents().iter().map(|r| (r.id.prompt_id, r.id.rollout_idx)).collect();
+        assert_eq!(ids, vec![(groups[0].problem.id, 2)], "only group 0's unpruned drop");
+    }
+
+    #[test]
+    fn staleness_eviction_is_a_sliding_window() {
+        let groups = vec![PromptGroup::synthetic(0, &[0.0, 1.0, 2.0, 3.0], None)];
+        let mut store = ReplayStore::new();
+        for it in 0..4u64 {
+            store.offer(it, &groups, &select(&groups, 2), &cfg(64, 2));
+        }
+        assert_eq!(store.len(), 8);
+        store.evict_stale(4, 2);
+        let iters: Vec<u64> = store.contents().iter().map(|r| r.id.iter).collect();
+        assert_eq!(iters, vec![2, 2, 3, 3], "window [iter-2, iter] kept");
+        store.evict_stale(10, 2);
+        assert!(store.is_empty());
+    }
+
+    /// Capacity eviction order is the golden contract: stalest evicted
+    /// first, then lowest score, ties by RowId.
+    #[test]
+    fn capacity_eviction_is_staleness_then_score_with_id_ties() {
+        // one prompt; two iterations of offers with distinct score spreads
+        let g_wide = vec![PromptGroup::synthetic(7, &[0.0, 0.5, 2.5, 3.0], None)];
+        let g_tight = vec![PromptGroup::synthetic(7, &[0.0, 1.4, 1.6, 3.0], None)];
+        let mut store = ReplayStore::new();
+        // iter 0 drops rewards {0.5, 2.5}: scores 0.5 each
+        store.offer(0, &g_wide, &select(&g_wide, 2), &cfg(64, 8));
+        // iter 1 drops rewards {1.4, 1.6}: scores 1.4 each
+        store.offer(1, &g_tight, &select(&g_tight, 2), &cfg(64, 8));
+        assert_eq!(store.len(), 4);
+        // capacity 3: the stalest admissions (iter 0) are evicted first,
+        // lowest score first; on a full tie the smaller RowId is preferred
+        // (kept), so row (iter 0, idx 2) goes
+        let mut tight = store;
+        tight.enforce_capacity(3);
+        tight.rows.sort_by_key(|r| r.id);
+        let kept: Vec<(u64, u32)> =
+            tight.contents().iter().map(|r| (r.id.iter, r.id.rollout_idx)).collect();
+        assert_eq!(kept, vec![(0, 1), (1, 1), (1, 2)]);
+        // capacity 1: only the freshest-iteration, highest-score,
+        // smallest-id row survives
+        tight.enforce_capacity(1);
+        let kept: Vec<(u64, u32)> =
+            tight.contents().iter().map(|r| (r.id.iter, r.id.rollout_idx)).collect();
+        assert_eq!(kept, vec![(1, 1)]);
+    }
+
+    /// Draw consumes highest-score-first with RowId ties, and the store
+    /// keeps the rest.
+    #[test]
+    fn draw_order_is_score_then_id_and_consumes() {
+        let g_wide = vec![PromptGroup::synthetic(3, &[0.0, 0.5, 2.5, 3.0], None)];
+        let g_tight = vec![PromptGroup::synthetic(3, &[0.0, 1.4, 1.6, 3.0], None)];
+        let mut store = ReplayStore::new();
+        store.offer(0, &g_wide, &select(&g_wide, 2), &cfg(64, 8));
+        store.offer(1, &g_tight, &select(&g_tight, 2), &cfg(64, 8));
+        let drawn = store.draw(3);
+        let got: Vec<(u64, u32)> = drawn.iter().map(|r| (r.id.iter, r.id.rollout_idx)).collect();
+        // scores: iter-1 rows 1.4 each, iter-0 rows 0.5 each; RowId breaks
+        // both ties ascending
+        assert_eq!(got, vec![(1, 1), (1, 2), (0, 1)]);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.contents()[0].id, RowId { iter: 0, prompt_id: 3, rollout_idx: 2 });
+        // drawing more than remains drains without panicking
+        assert_eq!(store.draw(10).len(), 1);
+        assert!(store.is_empty());
+        assert!(store.draw(4).is_empty());
+    }
+
+    /// Store contents are invariant to the order groups are offered in —
+    /// the group-order axis of the (run_seed, history) purity contract.
+    #[test]
+    fn store_contents_invariant_to_group_order() {
+        for_cases(60, |rng| {
+            let r0 = vec_f32(rng, 8, 0.0, 3.0);
+            let r1 = vec_f32(rng, 8, 0.0, 3.0);
+            let a = PromptGroup::synthetic(21, &r0, None);
+            let b = PromptGroup::synthetic(22, &r1, None);
+            let run = |groups: Vec<PromptGroup>| {
+                let selected = select(&groups, 3);
+                let mut store = ReplayStore::new();
+                store.offer(5, &groups, &selected, &cfg(4, 2));
+                let sig: Vec<(u64, u32, u32, u32)> = store
+                    .contents()
+                    .iter()
+                    .map(|r| {
+                        (r.id.prompt_id, r.id.rollout_idx, r.score.to_bits(), r.advantage.to_bits())
+                    })
+                    .collect();
+                let drawn: Vec<(u64, u32)> =
+                    store.draw(3).iter().map(|r| (r.id.prompt_id, r.id.rollout_idx)).collect();
+                (sig, drawn)
+            };
+            let ab = run(vec![a.clone(), b.clone()]);
+            let ba = run(vec![b, a]);
+            assert_eq!(ab, ba, "store state must not depend on group order");
+        });
+    }
+
+    #[test]
+    fn quota_is_floor_of_mix_fraction() {
+        assert_eq!(ReplayStore::quota(16, 0.25), 4);
+        assert_eq!(ReplayStore::quota(15, 0.25), 3);
+        assert_eq!(ReplayStore::quota(16, 0.0), 0);
+        assert_eq!(ReplayStore::quota(0, 0.5), 0);
+        assert_eq!(ReplayStore::quota(3, 1.0), 3);
+    }
+
+    /// Satellite: `rho_max` truncation is monotone in the clip bound —
+    /// a looser bound never truncates more — and inactive on log-probs
+    /// already within the bound (a ratio-1 row is untouched).
+    #[test]
+    fn rho_truncation_monotone_in_clip_bound() {
+        for_cases(300, |rng| {
+            let lp = -(rng.f64() * 8.0) as f32; // log-probs are <= 0
+            let a = 1.0 + rng.f64() * 4.0;
+            let b = a + rng.f64() * 4.0; // b >= a >= 1
+            let ta = truncate_old_lp(lp, a);
+            let tb = truncate_old_lp(lp, b);
+            // looser clip -> lower (or equal) floor -> old_lp closer to the
+            // stored value; the implied per-token ratio cap exp(-t) grows
+            assert!(tb <= ta, "truncation must be monotone: {tb} > {ta}");
+            assert!(ta >= lp && tb >= lp, "flooring never lowers old_lp");
+            // the bound actually binds: ratio exp(lp_new - t) <= rho_max
+            // for any current-policy lp_new <= 0
+            assert!((-ta).exp() <= a as f32 * (1.0 + 1e-5));
+            // inactive inside the bound
+            if lp >= -(a as f32).ln() {
+                assert_eq!(ta, lp, "within-bound log-probs must pass through");
+            }
+        });
+        // rho_max < 1 clamps to 1 (never truncates a ratio-1 row to below 1)
+        assert_eq!(truncate_old_lp(-0.0, 0.5), 0.0);
+    }
+}

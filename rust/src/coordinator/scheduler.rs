@@ -71,6 +71,12 @@ pub struct IterStats {
     pub gen_tokens_pruned: usize,
     /// Rollouts aborted mid-decode by online pruning.
     pub rows_pruned_online: usize,
+    /// Stored rows replayed into this update (`[replay]`).
+    pub replay_rows_used: usize,
+    /// Rows resident in the replay store after this iteration.
+    pub replay_store_size: usize,
+    /// Mean staleness (iterations) of the rows replayed this update.
+    pub replay_mean_staleness: f64,
     /// Simulated cost of the inference phase.
     pub sim_inference: f64,
     /// Simulated cost of the update phase (incl. communication).
@@ -311,6 +317,9 @@ impl Trainer {
             gen_tokens_wasted: r.gen_tokens_wasted,
             gen_tokens_pruned: r.gen_tokens_pruned,
             rows_pruned_online: r.rows_pruned_online,
+            replay_rows_used: r.replay_rows_used,
+            replay_store_size: r.replay_store_size,
+            replay_mean_staleness: r.replay_mean_staleness,
             sim_inference: r.sim_inference,
             sim_update: r.sim_update,
             sim_step: r.sim_step,
@@ -345,6 +354,9 @@ impl Trainer {
             upd_peak_mem: r.upd_peak_mem,
             gen_tokens_pruned: r.gen_tokens_pruned,
             rows_pruned_online: r.rows_pruned_online,
+            replay_rows_used: r.replay_rows_used,
+            replay_store_size: r.replay_store_size,
+            replay_mean_staleness: r.replay_mean_staleness,
         });
         Ok(stats)
     }

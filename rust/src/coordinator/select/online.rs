@@ -362,6 +362,21 @@ impl GroupVerdicts {
     }
 }
 
+/// Distance from a finished row's reward bracket (the point `(r, r)` —
+/// see [`OnlineSelector`]'s bracket analysis) to a set of kept rewards:
+/// `min_k |r - k|`, or `0.0` when `kept` is empty.
+///
+/// The cross-iteration replay store scores dropped rollouts with this:
+/// a dropped row whose reward coincides with a kept row's is redundant
+/// (score 0); one far from every kept reward carries signal the selected
+/// subset lost.
+pub fn bracket_distance(reward: f32, kept: &[f32]) -> f32 {
+    if kept.is_empty() {
+        return 0.0;
+    }
+    kept.iter().map(|k| (reward - k).abs()).fold(f32::INFINITY, f32::min)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -519,5 +534,17 @@ mod tests {
         v.observe_finished(0, 0, 0.0, 4);
         v.observe_finished(0, 2, 1.0, 4);
         assert!(v.poll_doomed(0, 1, 0));
+    }
+
+    /// `bracket_distance` is the replay store's admission score: zero on
+    /// or inside the kept set's reward points, the gap to the nearest
+    /// kept reward otherwise, and zero against an empty kept set.
+    #[test]
+    fn bracket_distance_measures_gap_to_nearest_kept_reward() {
+        assert_eq!(bracket_distance(1.0, &[]), 0.0);
+        assert_eq!(bracket_distance(1.0, &[1.0, 3.0]), 0.0);
+        assert!((bracket_distance(2.0, &[1.0, 3.0]) - 1.0).abs() < 1e-6);
+        assert!((bracket_distance(-1.0, &[1.0, 3.0]) - 2.0).abs() < 1e-6);
+        assert!((bracket_distance(3.5, &[1.0, 3.0]) - 0.5).abs() < 1e-6);
     }
 }

@@ -12,10 +12,11 @@
 //! the profile's batch sizes so the asymmetry is also demonstrated on real
 //! hardware (one CPU device).
 
+use crate::coordinator::exec::{pack_micro_batch, PackedRow};
 use crate::hwsim::HwModel;
 use crate::metrics::{ascii_plot, write_csv_rows};
 use crate::rollout::prompt_batch;
-use crate::runtime::{Engine, MicroBatch, ParamStore, TensorF, TensorI};
+use crate::runtime::{Engine, ParamStore};
 use crate::tasks::{Split, TaskKind};
 use crate::metrics::CsvRow;
 use anyhow::Result;
@@ -139,14 +140,20 @@ fn probe_real(artifacts: &Path, out_dir: &str) -> Result<()> {
     let roll_s = t0.elapsed().as_secs_f64() / reps as f64;
     let out = out.unwrap();
 
-    let mb = MicroBatch {
-        tokens: TensorI::new(out.tokens.data[..bu * t].to_vec(), &[bu, t])?,
-        pad_len: pads[..bu].to_vec(),
-        gen_mask: TensorF::new(out.gen_mask.data[..bu * g].to_vec(), &[bu, g])?,
-        old_lp: TensorF::new(out.logprobs.data[..bu * g].to_vec(), &[bu, g])?,
-        adv: vec![0.5; bu],
-        ref_lp: TensorF::new(vec![0.0; bu * g], &[bu, g])?,
-    };
+    // the shared UpdateEngine micro-batch builder, fed straight from the
+    // rollout output — identical padding/layout to the training path
+    let zero_ref = vec![0.0f32; g];
+    let packed: Vec<PackedRow> = (0..bu)
+        .map(|b| PackedRow {
+            tokens: &out.tokens.data[b * t..(b + 1) * t],
+            pad_len: pads[b],
+            gen_mask: &out.gen_mask.data[b * g..(b + 1) * g],
+            old_lp: &out.logprobs.data[b * g..(b + 1) * g],
+            ref_lp: &zero_ref,
+            advantage: 0.5,
+        })
+        .collect();
+    let mb = pack_micro_batch(&packed, bu, g, t)?;
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
         engine.grad(&params.params, None, &mb, 0.0)?;

@@ -12,12 +12,13 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod prune;
+pub mod reuse;
 pub mod sched;
 pub mod shard;
 pub mod table3;
 
 use crate::config::{
-    AlgoSection, RolloutSection, RunConfig, RunSection, SftSection, UpdateSection,
+    AlgoSection, ReplaySection, RolloutSection, RunConfig, RunSection, SftSection, UpdateSection,
 };
 use crate::hwsim::HwModel;
 use anyhow::Result;
@@ -109,6 +110,16 @@ pub struct CfgBuilder {
     pub upd_shards: usize,
     /// Rows per update micro-batch, 0 = profile B_u (update.micro_batch).
     pub upd_micro_batch: usize,
+    /// Cross-iteration replay (replay.enabled).
+    pub replay_enabled: bool,
+    /// Replay quota as a fraction of fresh rows (replay.mix_fraction).
+    pub replay_mix_fraction: f64,
+    /// Replay staleness bound in iterations (replay.staleness).
+    pub replay_staleness: usize,
+    /// Replay store capacity per prompt (replay.capacity_per_prompt).
+    pub replay_capacity: usize,
+    /// Replay importance-ratio clip (replay.rho_max).
+    pub replay_rho_max: f64,
     /// `sft.steps` (0 = no SFT warm-up section).
     pub sft_steps: usize,
     /// `sft.lr`.
@@ -147,6 +158,11 @@ impl Default for CfgBuilder {
             online_prune: RolloutSection::default().online_prune,
             upd_shards: UpdateSection::default().shards,
             upd_micro_batch: UpdateSection::default().micro_batch,
+            replay_enabled: ReplaySection::default().enabled,
+            replay_mix_fraction: ReplaySection::default().mix_fraction,
+            replay_staleness: ReplaySection::default().staleness,
+            replay_capacity: ReplaySection::default().capacity_per_prompt,
+            replay_rho_max: ReplaySection::default().rho_max,
             sft_steps: 0,
             sft_lr: 2e-3,
             sft_pool: 512,
@@ -193,6 +209,13 @@ impl CfgBuilder {
                 online_prune: self.online_prune,
             },
             update: UpdateSection { shards: self.upd_shards, micro_batch: self.upd_micro_batch },
+            replay: ReplaySection {
+                enabled: self.replay_enabled,
+                mix_fraction: self.replay_mix_fraction,
+                staleness: self.replay_staleness,
+                capacity_per_prompt: self.replay_capacity,
+                rho_max: self.replay_rho_max,
+            },
             sft: if self.sft_steps > 0 {
                 Some(SftSection {
                     steps: self.sft_steps,

@@ -3,7 +3,7 @@
 //! ```text
 //! pods train --config configs/setting_a.toml [--iterations N]
 //! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test --chunk 16
-//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|table3|all [--setting a] [--quick] [--probe]
+//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|table3|all [--setting a] [--quick] [--probe]
 //! pods info  --profile base
 //! pods bench-check [--fresh BENCH_e2e.json] [--baseline rust/benches/BENCH_baseline.json] [--bless]
 //! pods config-docs [--check] [--out docs/CONFIG.md]
@@ -30,11 +30,12 @@ USAGE:
   pods train --config <path> [--iterations N] [--artifacts DIR]
   pods eval  --ckpt <path> [--task arith|poly|mcq] [--split train|test|platinum]
              [--profile NAME] [--problems N] [--chunk C]
-  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|table3|all>
+  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|table3|all>
              [--setting a-f] [--quick] [--out-dir DIR] [--probe]
   pods info  [--profile NAME]
   pods bench-check [--fresh PATH] [--baseline PATH] [--max-regression FRAC]
-             [--min-speedup RATIO] [--min-prune-speedup RATIO] [--bless]
+             [--min-speedup RATIO] [--min-prune-speedup RATIO]
+             [--min-replay-speedup RATIO] [--bless]
              --bless regenerates the committed baseline from the fresh
              report instead of checking against it
   pods config-docs [--check] [--out PATH]
@@ -185,6 +186,7 @@ fn main() -> Result<()> {
                 "sched" => exp::sched::run(&artifacts, scale, &out_dir)?,
                 "shard" => exp::shard::run(&out_dir)?,
                 "prune" => exp::prune::run(&out_dir)?,
+                "reuse" => exp::reuse::run(&out_dir)?,
                 "table3" => exp::table3::run(&out_dir)?,
                 "all" => {
                     exp::fig1::run(&artifacts, &out_dir, probe)?;
@@ -196,6 +198,7 @@ fn main() -> Result<()> {
                     exp::sched::run(&artifacts, scale, &out_dir)?;
                     exp::shard::run(&out_dir)?;
                     exp::prune::run(&out_dir)?;
+                    exp::reuse::run(&out_dir)?;
                     exp::table3::run(&out_dir)?;
                 }
                 other => bail!("unknown experiment {other:?}"),
@@ -258,6 +261,12 @@ fn main() -> Result<()> {
             for line in &report.lines {
                 println!("{line}");
             }
+            for w in &report.warnings {
+                eprintln!("WARNING: {w}");
+                // GitHub Actions annotation — visible on the workflow
+                // summary instead of buried in the job log
+                println!("::warning::{w}");
+            }
             if !report.regressions.is_empty() {
                 for r in &report.regressions {
                     eprintln!("REGRESSION: {r}");
@@ -293,6 +302,21 @@ fn main() -> Result<()> {
                 Some(line) => println!("{line}"),
                 None => {
                     println!("prune speedup guard: comparison arms absent from {fresh} — skipped")
+                }
+            }
+            // same-run floor for replay mixing: stored rows skip inference
+            // entirely, so the replay arm must not cost step wall-clock
+            // (small tolerance for the extra update rows it trains)
+            let min_replay: f64 = args.get_or("min-replay-speedup", "0.9").parse()?;
+            match pods::util::bench::check_speedup(
+                std::path::Path::new(&fresh),
+                "e2e step pods + replay (mix=0.25)",
+                "e2e step pods (n=64 -> m=16)",
+                min_replay,
+            )? {
+                Some(line) => println!("{line}"),
+                None => {
+                    println!("replay speedup guard: comparison arms absent from {fresh} — skipped")
                 }
             }
         }

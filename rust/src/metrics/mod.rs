@@ -93,6 +93,15 @@ pub struct IterRow {
     pub gen_tokens_pruned: usize,
     /// Rollouts aborted mid-decode by online pruning this iteration.
     pub rows_pruned_online: usize,
+    /// Stored rows the replay store mixed into this update (`[replay]`;
+    /// zero when disabled or the store was empty).
+    pub replay_rows_used: usize,
+    /// Rows resident in the replay store after this iteration's
+    /// admissions and evictions.
+    pub replay_store_size: usize,
+    /// Mean staleness in iterations of the rows replayed this update
+    /// (zero when none were).
+    pub replay_mean_staleness: f64,
 }
 
 impl CsvRow for IterRow {
@@ -101,12 +110,14 @@ impl CsvRow for IterRow {
          completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
          loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
          sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted,\
-         upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online"
+         upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online,\
+         replay_rows_used,replay_store_size,replay_mean_staleness"
     }
 
     fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},\
+             {},{},{}",
             self.iter,
             self.sim_time,
             self.real_time,
@@ -134,7 +145,10 @@ impl CsvRow for IterRow {
             self.upd_comm_time,
             self.upd_peak_mem,
             self.gen_tokens_pruned,
-            self.rows_pruned_online
+            self.rows_pruned_online,
+            self.replay_rows_used,
+            self.replay_store_size,
+            self.replay_mean_staleness
         )
     }
 }
@@ -331,7 +345,8 @@ mod tests {
              completion_len,sel_variance,sel_tokens_kept,sel_tokens_dropped,sel_groups_dropped,\
              loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
              sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted,\
-             upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online"
+             upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online,\
+             replay_rows_used,replay_store_size,replay_mean_staleness"
                 .replace(char::is_whitespace, "")
         );
         // new columns append at the end, so CSVs from older runs stay
@@ -340,16 +355,16 @@ mod tests {
         assert_eq!(
             cols[cols.len() - 10..].to_vec(),
             vec![
-                "sim_step_time",
-                "sim_overlap_saved",
-                "schedule",
                 "gen_tokens_decoded",
                 "gen_tokens_wasted",
                 "upd_shards",
                 "upd_comm_time",
                 "upd_peak_mem",
                 "gen_tokens_pruned",
-                "rows_pruned_online"
+                "rows_pruned_online",
+                "replay_rows_used",
+                "replay_store_size",
+                "replay_mean_staleness"
             ]
         );
     }
@@ -387,6 +402,9 @@ mod tests {
             upd_peak_mem: 8,
             gen_tokens_pruned: 640,
             rows_pruned_online: 12,
+            replay_rows_used: 4,
+            replay_store_size: 20,
+            replay_mean_staleness: 1.5,
         };
         let header = IterRow::csv_header().replace(char::is_whitespace, "");
         let line = row.csv_row();
@@ -408,6 +426,9 @@ mod tests {
         assert_eq!(get("upd_peak_mem"), "8");
         assert_eq!(get("gen_tokens_pruned"), "640");
         assert_eq!(get("rows_pruned_online"), "12");
+        assert_eq!(get("replay_rows_used"), "4");
+        assert_eq!(get("replay_store_size"), "20");
+        assert_eq!(get("replay_mean_staleness"), "1.5");
         // the overlap identity the exec layer maintains:
         // step + saved == inference + update
         let step: f64 = get("sim_step_time").parse().unwrap();

@@ -70,6 +70,16 @@ impl InferenceStats {
     }
 }
 
+/// Retired-row handoff gate for the cross-iteration replay store: a
+/// finished rollout may be admitted only if its behaviour log-prob stream
+/// covers the full generation. Rows aborted mid-decode by online pruning
+/// carry truncated `old_lp`/`gen_mask` streams, so replaying them would
+/// feed the GRPO ratio term garbage; empty generations carry no trainable
+/// tokens at all.
+pub fn replay_handoff_eligible(record: &RolloutRecord) -> bool {
+    !record.pruned && record.gen_len > 0
+}
+
 /// Deterministic seed mixer (splitmix64 finalizer).
 pub fn mix_seed(run_seed: u64, iter: u64, prompt: u64, call: u64) -> u32 {
     let mut z = run_seed
@@ -357,6 +367,20 @@ mod tests {
     #[test]
     fn seed_mixer_deterministic() {
         assert_eq!(mix_seed(7, 3, 9, 2), mix_seed(7, 3, 9, 2));
+    }
+
+    /// Pruned (aborted) rows and empty generations never reach the replay
+    /// store — their stored log-prob streams are not update-ready.
+    #[test]
+    fn replay_handoff_rejects_pruned_and_empty_rows() {
+        let g = crate::coordinator::group::PromptGroup::synthetic(0, &[1.0, 2.0], None);
+        let mut r = g.rollouts[0].clone();
+        assert!(replay_handoff_eligible(&r));
+        r.pruned = true;
+        assert!(!replay_handoff_eligible(&r));
+        r.pruned = false;
+        r.gen_len = 0;
+        assert!(!replay_handoff_eligible(&r));
     }
 
     fn problems(k: usize) -> Vec<Problem> {

@@ -156,6 +156,11 @@ pub struct RegressionReport {
     pub lines: Vec<String>,
     /// The subset of `lines` that regressed beyond the threshold.
     pub regressions: Vec<String>,
+    /// Non-fatal conditions the caller should surface loudly (the CLI
+    /// prints these as `::warning::` annotations in CI): e.g. a baseline
+    /// whose `benches` list is empty, which would otherwise let every
+    /// regression pass silently.
+    pub warnings: Vec<String>,
 }
 
 fn load_throughputs(path: &Path) -> anyhow::Result<Vec<(String, f64)>> {
@@ -202,10 +207,14 @@ pub fn check_regression(
     let fresh_tp = load_throughputs(fresh)?;
     let base_tp = load_throughputs(baseline)?;
     if base_tp.is_empty() {
-        report.lines.push(format!(
-            "baseline {} carries no throughput entries — nothing to compare",
+        let msg = format!(
+            "baseline {} carries no throughput entries — the regression guard is \
+             checking nothing; re-record it with `cargo bench --bench e2e_step && \
+             pods bench-check --bless`",
             baseline.display()
-        ));
+        );
+        report.lines.push(msg.clone());
+        report.warnings.push(msg);
         return Ok(report);
     }
     let mut missing: Vec<&str> = Vec::new();
@@ -376,6 +385,28 @@ mod tests {
         let rep = check_regression(&fresh, &dir.path().join("absent.json"), 0.15).unwrap();
         assert!(rep.regressions.is_empty());
         assert!(rep.lines[0].contains("no baseline"));
+    }
+
+    /// Satellite bugfix: a baseline whose `benches` list is empty used to
+    /// pass with one quiet line — the guard was checking nothing and
+    /// nobody could tell. It still passes (no false CI failures) but now
+    /// carries an explicit warning the CLI surfaces as `::warning::`.
+    #[test]
+    fn empty_baseline_passes_but_warns_loudly() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let base = dir.path().join("base.json");
+        let fresh = dir.path().join("fresh.json");
+        write_report(&base, &[]);
+        write_report(&fresh, &[("e2e step a", 100.0)]);
+        let rep = check_regression(&fresh, &base, 0.15).unwrap();
+        assert!(rep.regressions.is_empty(), "empty baseline must not fail the check");
+        assert_eq!(rep.warnings.len(), 1, "{:?}", rep.warnings);
+        assert!(rep.warnings[0].contains("no throughput entries"), "{:?}", rep.warnings);
+        assert!(rep.warnings[0].contains("--bless"), "warning must say how to fix it");
+        // a populated baseline warns about nothing
+        write_report(&base, &[("e2e step a", 100.0)]);
+        let rep = check_regression(&fresh, &base, 0.15).unwrap();
+        assert!(rep.warnings.is_empty());
     }
 
     /// Satellite bugfix: a baseline arm missing from the fresh run used to

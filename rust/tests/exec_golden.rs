@@ -105,7 +105,8 @@ fn sync_executor_reproduces_sequential_reference() {
     .unwrap();
     let mut ref_store = ParamStore::new(params0);
     let mut ref_update = UpdateEngine::new(ref_store.len());
-    let want = ref_update.run(&tr.engine, &mut ref_store, None, &groups, &selected, &c).unwrap();
+    let want =
+        ref_update.run(&tr.engine, &mut ref_store, None, &groups, &selected, &[], &c).unwrap();
 
     // ---- the executor ------------------------------------------------
     let stats = tr.train_iteration(0).unwrap();
@@ -171,7 +172,7 @@ fn sharded_update_is_bit_identical_to_monolithic() {
         cfg_s.update.micro_batch = 2;
         let mut store = ParamStore::new(params0.clone());
         let mut upd = UpdateEngine::new(store.len());
-        let out = upd.run(&tr.engine, &mut store, None, &groups, &selected, &cfg_s).unwrap();
+        let out = upd.run(&tr.engine, &mut store, None, &groups, &selected, &[], &cfg_s).unwrap();
         (store, out)
     };
     let (mono_store, mono) = run_with(1);

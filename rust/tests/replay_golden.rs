@@ -1,0 +1,255 @@
+//! Golden tests for cross-iteration rollout replay (coordinator::replay).
+//!
+//! The `[replay]` determinism contract (docs/DETERMINISM.md):
+//!
+//! * **Disabled replay is the baseline.** With `replay.enabled = false`
+//!   the trained parameters and every training-CSV column are bit-
+//!   identical whatever the other replay knobs say, the store stays
+//!   empty, and the replay telemetry columns are all zero. (The sync
+//!   executor itself — replay disabled — is pinned against the
+//!   sequential reference by `exec_golden.rs`.)
+//! * **Store evolution is partition-invariant.** With replay enabled,
+//!   the store's contents, the drawn rows and the trained parameters are
+//!   a pure function of `(run_seed, rollout history)`: 1 worker and a
+//!   4-worker pool land on bit-identical state. (The pipelined schedule
+//!   legitimately changes the rollout history itself — generation of
+//!   `t+1` runs under the pre-update policy — so schedule equality is
+//!   *not* part of the contract.)
+//! * **Eviction and draw orders are golden.** Staleness-then-score with
+//!   `RowId` tie-breaks, replayed through the executor's exact phase
+//!   order (evict, draw, offer).
+//!
+//! The store-only goldens run everywhere; the trainer goldens are
+//! skipped when artifacts are absent (CI without `make artifacts`).
+
+use pods::config::{ReplaySection, RunConfig};
+use pods::coordinator::advantage::NormMode;
+use pods::coordinator::group::{build_update_batch, PromptGroup, SelectedRollout};
+use pods::coordinator::replay::ReplayStore;
+use pods::coordinator::scheduler::Trainer;
+use pods::coordinator::select::Pipeline;
+use pods::exp::CfgBuilder;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pods::default_artifacts_dir();
+    if dir.join("base/meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn cfg(
+    name: &str,
+    workers: usize,
+    iterations: usize,
+    replay: Option<(f64, usize, usize)>,
+) -> RunConfig {
+    let mut b = CfgBuilder {
+        name: name.into(),
+        profile: "base".into(),
+        task: "arith".into(),
+        iterations,
+        prompts_per_iter: 2,
+        eval_every: iterations.max(1),
+        eval_problems: 16,
+        kind: "pods".into(),
+        n: 16,
+        m: Some(4),
+        lr: 1e-4,
+        workers,
+        schedule: "sync".into(),
+        out_dir: std::env::temp_dir().join("pods_replay_golden").to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    if let Some((mix, staleness, capacity)) = replay {
+        b.replay_enabled = true;
+        b.replay_mix_fraction = mix;
+        b.replay_staleness = staleness;
+        b.replay_capacity = capacity;
+    }
+    b.build().unwrap()
+}
+
+/// One synthetic single-prompt group; `max_variance` with m = 2 keeps the
+/// reward extremes, so indices 1 and 2 are the dropped (offered) rows.
+fn synth(rewards: &[f32]) -> Vec<PromptGroup> {
+    vec![PromptGroup::synthetic(5, rewards, None)]
+}
+
+fn select2(groups: &[PromptGroup]) -> Vec<SelectedRollout> {
+    let p = Pipeline::parse_default("max_variance").unwrap();
+    build_update_batch(groups, &p, Some(2), NormMode::After, 0, 0).unwrap().0
+}
+
+/// Eviction-order golden: the store replayed through the executor's exact
+/// phase order (evict stale, draw, offer) over four iterations. Draws
+/// consume highest-score-first with `RowId` ascending ties; per-prompt
+/// capacity evicts stalest-first, then lowest score — a fresher low-score
+/// row outlives a staler high-score one.
+#[test]
+fn executor_order_store_evolution_is_golden() {
+    // dropped rows (indices 1, 2) per iteration and their bracket scores:
+    // iter 0 -> {1.0, 2.0} scores {1.0, 1.0};  iter 1 -> {0.5, 2.5} scores
+    // {0.5, 0.5};  iter 2 -> {1.4, 1.6} scores {1.4, 1.4};  iter 3 ->
+    // {0.2, 2.9} scores {0.2, 0.1}
+    let rewards: [&[f32]; 4] = [
+        &[0.0, 1.0, 2.0, 3.0],
+        &[0.0, 0.5, 2.5, 3.0],
+        &[0.0, 1.4, 1.6, 3.0],
+        &[0.0, 0.2, 2.9, 3.0],
+    ];
+    let rp = ReplaySection {
+        enabled: true,
+        mix_fraction: 0.25,
+        staleness: 2,
+        capacity_per_prompt: 2,
+        rho_max: 2.0,
+    };
+    let mut store = ReplayStore::new();
+    let mut drawn_log: Vec<Vec<(u64, u32)>> = Vec::new();
+    for (it, r) in rewards.iter().enumerate() {
+        let groups = synth(r);
+        let selected = select2(&groups);
+        store.evict_stale(it as u64, rp.staleness);
+        let drawn = store.draw(1);
+        drawn_log.push(drawn.iter().map(|d| (d.id.iter, d.id.rollout_idx)).collect());
+        store.offer(it as u64, &groups, &selected, &rp);
+    }
+    // iter 0 draws from an empty store; each later draw takes the
+    // smaller-RowId member of that iteration's score tie
+    assert_eq!(drawn_log, vec![vec![], vec![(0, 1)], vec![(1, 1)], vec![(2, 1)]]);
+    // final capacity squeeze: iter-3 rows (scores 0.2 / 0.1) both survive,
+    // the staler iter-2 row (score 1.4) is evicted — staleness beats score
+    let end: Vec<(u64, u32)> =
+        store.contents().iter().map(|r| (r.id.iter, r.id.rollout_idx)).collect();
+    assert_eq!(end, vec![(3, 1), (3, 2)], "capacity eviction must prefer fresher rows");
+}
+
+/// The staleness window slides with the iteration counter, and replaying
+/// the same history lands on a bit-identical store (scores and advantages
+/// compared by bit pattern).
+#[test]
+fn staleness_window_slides_and_history_replays_bit_identical() {
+    let rp = ReplaySection {
+        enabled: true,
+        mix_fraction: 0.25,
+        staleness: 1,
+        capacity_per_prompt: 64,
+        rho_max: 2.0,
+    };
+    let run_trace = || {
+        let mut store = ReplayStore::new();
+        for it in 0..5u64 {
+            let groups = synth(&[0.0, 1.0, 2.0, 3.0]);
+            let selected = select2(&groups);
+            store.evict_stale(it, rp.staleness);
+            store.offer(it, &groups, &selected, &rp);
+        }
+        store
+    };
+    let store = run_trace();
+    let iters: Vec<u64> = store.contents().iter().map(|r| r.id.iter).collect();
+    assert_eq!(iters, vec![3, 3, 4, 4], "staleness 1 keeps the last two iterations");
+    let sig = |s: &ReplayStore| {
+        s.contents()
+            .iter()
+            .map(|r| (r.id, r.score.to_bits(), r.advantage.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(sig(&store), sig(&run_trace()), "same history must rebuild the same store");
+}
+
+/// Disabled replay is the baseline: moving every other `[replay]` knob
+/// changes nothing — parameters bitwise, per-iteration losses bitwise,
+/// replay telemetry columns pinned at zero, store untouched.
+#[test]
+fn disabled_replay_is_bitwise_identical() {
+    let Some(dir) = artifacts() else { return };
+    let iters = 2;
+    let run = |c: RunConfig| {
+        let mut tr = Trainer::new(&dir, c).unwrap();
+        tr.engine.quiet = true;
+        for it in 0..iters {
+            tr.train_iteration(it).unwrap();
+        }
+        tr
+    };
+    let base = run(cfg("golden_replay_off_a", 1, iters, None));
+    let mut moved_cfg = cfg("golden_replay_off_b", 1, iters, None);
+    moved_cfg.replay.mix_fraction = 1.0;
+    moved_cfg.replay.staleness = 7;
+    moved_cfg.replay.capacity_per_prompt = 64;
+    moved_cfg.replay.rho_max = 13.0;
+    let moved = run(moved_cfg);
+    assert_eq!(
+        base.store.params, moved.store.params,
+        "disabled replay must be bit-identical whatever the other replay knobs say"
+    );
+    assert_eq!(base.recorder.iters.len(), moved.recorder.iters.len());
+    for (a, b) in base.recorder.iters.iter().zip(&moved.recorder.iters) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.clip_frac.to_bits(), b.clip_frac.to_bits());
+        assert_eq!(a.rollouts_trained, b.rollouts_trained);
+        assert_eq!(a.replay_rows_used, 0, "disabled replay must never mix rows in");
+        assert_eq!(a.replay_store_size, 0, "disabled replay must never admit rows");
+        assert_eq!(a.replay_mean_staleness, 0.0);
+    }
+    assert!(base.exec.replay_store().is_empty());
+    assert!(moved.exec.replay_store().is_empty());
+}
+
+/// With replay enabled, the store contents, the replay telemetry and the
+/// trained parameters are invariant to the worker-pool size — the
+/// partition-invariance axis of the (run_seed, history) purity contract.
+#[test]
+fn replay_store_and_params_invariant_across_worker_pool_sizes() {
+    let Some(dir) = artifacts() else { return };
+    let iters = 3;
+    let run = |name: &str, workers: usize| {
+        let mut tr = Trainer::new(&dir, cfg(name, workers, iters, Some((0.5, 2, 4)))).unwrap();
+        tr.engine.quiet = true;
+        for it in 0..iters {
+            tr.train_iteration(it).unwrap();
+        }
+        tr
+    };
+    let w1 = run("golden_replay_w1", 1);
+    let w4 = run("golden_replay_w4", 4);
+    assert_eq!(
+        w1.store.params, w4.store.params,
+        "worker count changed trained parameters under replay"
+    );
+    let sig = |tr: &Trainer| {
+        tr.exec
+            .replay_store()
+            .contents()
+            .iter()
+            .map(|r| (r.id, r.score.to_bits(), r.advantage.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(sig(&w1), sig(&w4), "replay store contents must be partition-invariant");
+    let cols = |tr: &Trainer| {
+        tr.recorder
+            .iters
+            .iter()
+            .map(|r| (r.replay_rows_used, r.replay_store_size, r.replay_mean_staleness))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(cols(&w1), cols(&w4), "replay telemetry columns must be partition-invariant");
+    // non-vacuity: the store filled at iteration 0 and was drawn from later
+    assert!(
+        w1.recorder.iters.iter().any(|r| r.replay_rows_used > 0),
+        "replay never fired — the invariance golden is vacuous"
+    );
+    for r in &w1.recorder.iters {
+        if r.replay_rows_used > 0 {
+            assert!(
+                r.replay_mean_staleness >= 1.0,
+                "a replayed row is at least one iteration old (got {})",
+                r.replay_mean_staleness
+            );
+        }
+    }
+}
