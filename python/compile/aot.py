@@ -16,6 +16,9 @@ directory::
       sft.hlo.txt       (params,m,v,step,tokens,pad,mask,lr)      -> (params,m,v,loss)
       rollout.hlo.txt   (params,[lora],prompts,pad,seeds,temp)    -> (tokens,logprobs,gen_mask,gen_len)
       prefill.hlo.txt   (params,[lora],prompts,pad)               -> (cache_k,cache_v,logits)
+      prefill_shared.hlo.txt
+                        (params,[lora],prompts,pad)               -> (cache_k,cache_v,logits,
+                                                                      snap_k,snap_v,snap_logits)
       decode_chunk<C>.hlo.txt
                         (params,[lora],cache_k,cache_v,logits,seeds,step,done,pad,temp)
                                                                   -> (tokens,logprobs,mask,cache_k,cache_v,logits,step,done)
@@ -30,6 +33,12 @@ engine drives ``prefill`` + ``decode_chunk<C>`` as a slot-based continuous
 batcher with early exit. RNG is per-row (``seeds`` i32[B], counter-based
 streams), so both paths sample bit-identical tokens. The greedy eval path
 reuses the chunked programs with temperature <= 0.
+
+``prefill_shared`` / ``admit_share`` are the group-shared prompt-KV path:
+one prompt pass per group returns its state twice (working + snapshot) and
+sibling rows are admitted by replicating the on-device snapshot instead of
+re-running prefill — streams stay bit-identical because prefill is per-row
+independent and the prompt region of the cache is immutable during decode.
 """
 
 import argparse
@@ -153,6 +162,14 @@ def build_programs(cfg: M.ModelConfig):
             ],
             ["cache_k", "cache_v", "logits"],
         )
+        progs["prefill_shared"] = (
+            lambda p, lo, pr, pad: M.prefill_shared(cfg, p, pr, pad, lora_flat=lo),
+            [
+                ("params", s((Np,), f32)), ("lora", s((Nl,), f32)),
+                ("prompts", s((Br, P), i32)), ("pad_len", s((Br,), i32)),
+            ],
+            ["cache_k", "cache_v", "logits", "snap_k", "snap_v", "snap_logits"],
+        )
         for c in decode_chunk_sizes(cfg):
             progs[f"decode_chunk{c}"] = (
                 (lambda c: lambda p, lo, ck, cv, lg, sd, st, dn, pad, temp: M.decode_chunk(
@@ -204,6 +221,14 @@ def build_programs(cfg: M.ModelConfig):
             ],
             ["cache_k", "cache_v", "logits"],
         )
+        progs["prefill_shared"] = (
+            lambda p, pr, pad: M.prefill_shared(cfg, p, pr, pad),
+            [
+                ("params", s((Np,), f32)),
+                ("prompts", s((Br, P), i32)), ("pad_len", s((Br,), i32)),
+            ],
+            ["cache_k", "cache_v", "logits", "snap_k", "snap_v", "snap_logits"],
+        )
         for c in decode_chunk_sizes(cfg):
             progs[f"decode_chunk{c}"] = (
                 (lambda c: lambda p, ck, cv, lg, sd, st, dn, pad, temp: M.decode_chunk(
@@ -247,6 +272,18 @@ def build_programs(cfg: M.ModelConfig):
             ("admit", s((Br,), i32)),
         ],
         ["cache_k", "cache_v", "logits"],
+    )
+
+    # sibling admission from a group's shared prompt snapshot (no params):
+    # like admit_merge, but the source state passes through for reuse
+    progs["admit_share"] = (
+        M.share_slots,
+        [
+            ("cache_k_live", cache), ("cache_v_live", cache), ("logits_live", s((Br, Vv), f32)),
+            ("cache_k_snap", cache), ("cache_v_snap", cache), ("logits_snap", s((Br, Vv), f32)),
+            ("admit", s((Br,), i32)),
+        ],
+        ["cache_k", "cache_v", "logits", "snap_k", "snap_v", "snap_logits"],
     )
 
     progs["update"] = (

@@ -360,6 +360,39 @@ def merge_slots(cache_k_live, cache_v_live, logits_live, cache_k_new, cache_v_ne
     return ck, cv, lg
 
 
+def prefill_shared(cfg: ModelConfig, flat, prompts, pad_len, lora_flat=None, use_pallas=True):
+    """``prefill`` that returns its prompt state twice: a working copy for
+    decode plus an immutable snapshot for later sibling admissions.
+
+    Group-shared prompt KV runs the prompt pass **once** per group: the
+    driver fills every slot of the prefill batch with the group's (single)
+    prompt, keeps the snapshot triple on device, and admits sibling rows by
+    replicating it (``share_slots``) instead of re-running prefill. The
+    duplication exists because the caller consumes the working state into
+    ``decode_chunk`` calls while the snapshot must survive them.
+
+    Returns (cache_k, cache_v, logits, snap_k, snap_v, snap_logits).
+    """
+    cache_k, cache_v, logits = prefill(cfg, flat, prompts, pad_len, lora_flat, use_pallas)
+    return cache_k, cache_v, logits, cache_k, cache_v, logits
+
+
+def share_slots(cache_k_live, cache_v_live, logits_live, cache_k_snap, cache_v_snap, logits_snap, admit):
+    """Sibling admission from a shared prompt snapshot, on device: slots
+    with ``admit != 0`` take the snapshot's prompt state (every snapshot
+    slot holds the same group prompt), and the snapshot passes through
+    unchanged so the next sibling can reuse it — ``merge_slots``
+    generalized to a source that must outlive the merge.
+
+    cache_*: f32[L, B, H, T, dh]; logits_*: f32[B, V]; admit: i32[B].
+    Returns (cache_k, cache_v, logits, snap_k, snap_v, snap_logits).
+    """
+    ck, cv, lg = merge_slots(
+        cache_k_live, cache_v_live, logits_live, cache_k_snap, cache_v_snap, logits_snap, admit
+    )
+    return ck, cv, lg, cache_k_snap, cache_v_snap, logits_snap
+
+
 def _sample_rows(seeds_u32, step, logits, temperature):
     """Per-row counter-based sampling: fold_in(key(seed_b), step_b).
 

@@ -22,7 +22,9 @@ from compile.model import (
     init_params,
     merge_slots,
     prefill,
+    prefill_shared,
     rollout,
+    share_slots,
 )
 
 TINY = ModelConfig(
@@ -214,6 +216,114 @@ def test_slot_refill_any_order_reproduces_streams(params, chunk, perm_seed):
     order = list(rng.permutation(R))
     got_t, got_l, got_m = _drive_slots(
         params, prompts, pad, seeds, order, slots, chunk, 1.2
+    )
+    P = TINY.prompt_len
+    np.testing.assert_array_equal(ref_t[:, P:], got_t)
+    np.testing.assert_array_equal(ref_l, got_l)
+    np.testing.assert_array_equal(ref_m, got_m)
+
+
+def _drive_slots_shared(params, prompt_row, pad_scalar, seeds, order, slots, chunk, temperature):
+    """The group-shared prompt-KV driver: ONE ``prefill_shared`` call for
+    the whole group (every slot carries the group prompt), every later
+    admission replicating the snapshot via ``share_slots`` — no further
+    prompt passes. Mirrors the Rust driver's share_prompt_kv path."""
+    R = len(order)
+    G = TINY.gen_len
+    out_t = np.full((R, G), V.PAD, np.int32)
+    out_l = np.zeros((R, G), np.float32)
+    out_m = np.zeros((R, G), np.float32)
+
+    queue = list(order)
+    batch_p = np.tile(np.asarray(prompt_row)[None, :], (slots, 1)).astype(np.int32)
+    batch_pad = np.full((slots,), int(pad_scalar), np.int32)
+    ck, cv, lg, sk, sv, sl = prefill_shared(
+        TINY, params, jnp.asarray(batch_p), jnp.asarray(batch_pad)
+    )
+    ck, cv, lg = np.array(ck), np.array(cv), np.array(lg)
+
+    slot_row = [None] * slots
+    step = np.zeros((slots,), np.int32)
+    done = np.ones((slots,), np.int32)  # unfilled slots stay done
+    slot_seed = np.zeros((slots,), np.int32)
+    for s in range(slots):
+        if queue:
+            r = queue.pop(0)
+            slot_row[s] = r
+            done[s] = 0
+            slot_seed[s] = int(np.asarray(seeds)[r])
+
+    while True:
+        tk, lp, mk, ck2, cv2, lg2, step2, done2 = decode_chunk(
+            TINY, chunk, params,
+            jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(lg),
+            jnp.asarray(slot_seed), jnp.asarray(step), jnp.asarray(done),
+            jnp.asarray(batch_pad), jnp.float32(temperature),
+        )
+        tk, lp, mk = np.asarray(tk), np.asarray(lp), np.asarray(mk)
+        ck, cv, lg = np.array(ck2), np.array(cv2), np.array(lg2)
+        prev_step = step.copy()
+        step, done = np.array(step2), np.array(done2)
+        for s in range(slots):
+            r = slot_row[s]
+            if r is None:
+                continue
+            for j in range(chunk):
+                g = prev_step[s] + j
+                if g < TINY.gen_len and mk[s, j] > 0:
+                    out_t[r, g] = tk[s, j]
+                    out_l[r, g] = lp[s, j]
+                    out_m[r, g] = mk[s, j]
+        free = []
+        for s in range(slots):
+            if slot_row[s] is not None and (done[s] != 0 or step[s] >= TINY.gen_len):
+                slot_row[s] = None
+                free.append(s)
+        if free and queue:
+            mask = np.zeros((slots,), np.int32)
+            admitted = []
+            for s in free:
+                if queue:
+                    admitted.append((s, queue.pop(0)))
+                    mask[s] = 1
+            # sibling admission: the snapshot replicates on device and
+            # passes through unchanged for the next refill
+            ck, cv, lg, sk, sv, sl = (
+                np.array(x)
+                for x in share_slots(
+                    jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(lg),
+                    jnp.asarray(sk), jnp.asarray(sv), jnp.asarray(sl),
+                    jnp.asarray(mask),
+                )
+            )
+            for s, r in admitted:
+                step[s] = 0
+                done[s] = 0
+                slot_seed[s] = int(np.asarray(seeds)[r])
+                slot_row[s] = r
+        if all(r is None for r in slot_row):
+            break
+    return out_t, out_l, out_m
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 16])
+def test_shared_prefill_reproduces_streams(params, chunk):
+    """Group-shared prompt KV is bit-identical to per-row prefill: one
+    prompt pass + snapshot replication reproduces every sibling's
+    monolithic stream exactly, in any admission order — the property the
+    Rust driver's share_prompt_kv path rests on."""
+    R, slots = 7, 3
+    rng = np.random.default_rng(60)
+    prompts, pad = _prompts(TINY, 1, rng)
+    group_p = np.tile(np.asarray(prompts), (R, 1))
+    group_pad = np.full((R,), int(np.asarray(pad)[0]), np.int32)
+    seeds = _seeds(R, 200)
+    ref_t, ref_l, ref_m, _ = _reference_rows(
+        params, jnp.asarray(group_p), jnp.asarray(group_pad), seeds, jnp.float32(1.2)
+    )
+    order = list(rng.permutation(R))
+    got_t, got_l, got_m = _drive_slots_shared(
+        params, np.asarray(prompts)[0], np.asarray(pad)[0], seeds, order, slots, chunk, 1.2
     )
     P = TINY.prompt_len
     np.testing.assert_array_equal(ref_t[:, P:], got_t)

@@ -45,7 +45,10 @@ def _run(progs, name):
 @pytest.mark.parametrize("cfg", [TINY, TINY_LORA], ids=["full", "lora"])
 def test_program_outputs_match_declared_shapes(cfg):
     progs = build_programs(cfg)
-    expected = {"init", "rollout", "prefill", "admit_merge", "grad", "update", "score"}
+    expected = {
+        "init", "rollout", "prefill", "prefill_shared", "admit_merge",
+        "admit_share", "grad", "update", "score",
+    }
     expected |= {f"decode_chunk{c}" for c in decode_chunk_sizes(cfg)}
     if cfg.lora_rank == 0:
         expected.add("sft")
@@ -96,6 +99,17 @@ def test_decode_path_programs_execute(capsys):
     mk, mv, ml = _run(progs, "admit_merge")
     assert mk.shape == (L, B, H, T, dh) and mv.shape == mk.shape
     assert ml.shape == (B, TINY.vocab)
+    # the shared-prefill path duplicates the prompt state into a snapshot
+    sck, scv, slg, snk, snv, snl = _run(progs, "prefill_shared")
+    assert sck.shape == (L, B, H, T, dh) and snk.shape == sck.shape
+    assert slg.shape == (B, TINY.vocab) and snl.shape == slg.shape
+    np.testing.assert_array_equal(np.asarray(sck), np.asarray(snk))
+    np.testing.assert_array_equal(np.asarray(scv), np.asarray(snv))
+    np.testing.assert_array_equal(np.asarray(slg), np.asarray(snl))
+    # admit_share merges like admit_merge and passes the snapshot through
+    ak, av, al, rk, rv, rl = _run(progs, "admit_share")
+    assert ak.shape == (L, B, H, T, dh) and rk.shape == ak.shape
+    assert al.shape == (B, TINY.vocab) and rl.shape == al.shape
 
 
 def test_lowering_produces_hlo_text():

@@ -26,13 +26,15 @@ fn mk_trainer(
     rule: &str,
     online_prune: bool,
     replay: bool,
+    share_kv: bool,
+    prompts: usize,
 ) -> anyhow::Result<Trainer> {
     let cfg = CfgBuilder {
         name: format!("bench_{kind}_{n}_{workers}w_{schedule}"),
         profile: "base".into(),
         task: "arith".into(),
         iterations: 1,
-        prompts_per_iter: 1,
+        prompts_per_iter: prompts,
         eval_problems: 16,
         kind: kind.into(),
         n,
@@ -44,6 +46,7 @@ fn mk_trainer(
         decode_chunk,
         refill: refill.into(),
         online_prune,
+        share_prompt_kv: share_kv,
         replay_enabled: replay,
         out_dir: std::env::temp_dir().join("pods_bench").to_string_lossy().into_owned(),
         ..Default::default()
@@ -89,6 +92,12 @@ fn main() -> anyhow::Result<()> {
         // so this arm's throughput must stay within tolerance of the plain
         // PODS arm (`pods bench-check --min-replay-speedup`)
         ("pods + replay (mix=0.25)", "pods", 64, Some(16), 1, "sync", 16, "continuous"),
+        // group-shared prompt KV vs per-row prefill over the identical
+        // 4-group workload: streams are bit-identical (kv_golden.rs); the
+        // shared arm re-runs prefill once per group instead of once per
+        // refill event (`pods bench-check --min-kv-speedup`)
+        ("pods per-row-prefill (n=64, m=8)", "pods", 64, Some(8), 1, "sync", 16, "continuous"),
+        ("pods shared-kv (n=64, m=8)", "pods", 64, Some(8), 1, "sync", 16, "continuous"),
     ];
     let mut report = BenchReport::new();
     for (label, kind, n, m, workers, schedule, chunk, refill) in arms {
@@ -97,8 +106,13 @@ fn main() -> anyhow::Result<()> {
         let rule = if label.contains("prune") { prune_rule.as_str() } else { "max_variance" };
         let online = label.contains("online-prune");
         let replay = label.contains("replay");
-        let mut tr =
-            mk_trainer(kind, n, m, workers, schedule, chunk, refill, rule, online, replay)?;
+        let share_kv = label.contains("shared-kv");
+        // the KV comparison arms run 4 prompt groups so prefill sharing
+        // has sibling groups to straddle; everything else keeps 1
+        let prompts = if label.contains("(n=64, m=8)") { 4 } else { 1 };
+        let mut tr = mk_trainer(
+            kind, n, m, workers, schedule, chunk, refill, rule, online, replay, share_kv, prompts,
+        )?;
         let pipelined = schedule == "pipelined";
         let mut it = 0usize;
         let res = bench(&format!("e2e step {label}"), Some(4), || {
@@ -111,7 +125,7 @@ fn main() -> anyhow::Result<()> {
         println!(
             "  real {:.2}s | sim {:.1}s charged (inf {:.1}s + upd {:.1}s, \
              {:.1}s hidden, {} micro-steps) | decoded {} tok ({} wasted, \
-             {} pruned over {} rows)",
+             {} pruned over {} rows) | prefill {} (saved {})",
             res.median_ns / 1e9,
             last.sim_step_time,
             last.sim_inference_time,
@@ -121,7 +135,9 @@ fn main() -> anyhow::Result<()> {
             last.gen_tokens_decoded,
             last.gen_tokens_wasted,
             last.gen_tokens_pruned,
-            last.rows_pruned_online
+            last.rows_pruned_online,
+            last.prefill_calls,
+            last.prefill_calls_saved
         );
         let rollouts_per_sec = last.rollouts_generated as f64 / (res.median_ns / 1e9);
         report.push_with_throughput(res, rollouts_per_sec);

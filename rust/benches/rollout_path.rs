@@ -9,7 +9,9 @@ use pods::coordinator::exec::{GenBatch, RolloutEngine};
 use pods::coordinator::select::online::GroupVerdicts;
 use pods::coordinator::select::Pipeline;
 use pods::reward::{score_rollout, RewardWeights};
-use pods::rollout::{execute_rows, generate_group, plan_rows, prompt_batch, GenRequest, RefillMode};
+use pods::rollout::{
+    execute_rows, generate_group, plan_rows, prompt_batch, GenRequest, KvPolicy, RefillMode,
+};
 use pods::runtime::Engine;
 use pods::tasks::{Split, TaskKind};
 use pods::util::bench::{bench, black_box};
@@ -60,6 +62,7 @@ fn main() -> anyhow::Result<()> {
                 weights: RewardWeights::default(),
                 decode_chunk: chunk,
                 refill: RefillMode::Continuous,
+                kv: KvPolicy::default(),
             };
             black_box(generate_group(&engine, &req, TaskKind::Arith, &problem).unwrap());
         });
@@ -87,6 +90,7 @@ fn main() -> anyhow::Result<()> {
         weights: RewardWeights::default(),
         decode_chunk: 16,
         refill: RefillMode::Continuous,
+        kv: KvPolicy::default(),
     };
     bench("generate_group n=64 (chunked refill + verify)", Some(5), || {
         black_box(generate_group(&engine, &req, TaskKind::Arith, &problem).unwrap());
@@ -137,6 +141,7 @@ fn main() -> anyhow::Result<()> {
                 TaskKind::Arith,
                 &RewardWeights::default(),
                 verdicts.as_ref(),
+                KvPolicy::default(),
             )
             .unwrap();
             last_stats = stats;
@@ -176,9 +181,56 @@ fn main() -> anyhow::Result<()> {
                 decode_chunk: 16,
                 refill: RefillMode::Continuous,
                 online: None,
+                kv: KvPolicy::default(),
             };
             black_box(pool.generate(&engine, batch).unwrap());
         });
+    }
+
+    // Group-shared prompt prefill under a constrained paged KV pool: the
+    // same 2-prompt x n=32 decode, with the pool sized to hold only half
+    // the slots' reservations — admission queues at the pool gate
+    // (vLLM-style) and sibling rows admit from the group's prompt
+    // snapshot. Streams stay bit-identical to the unshared arms above.
+    let hw = pods::hwsim::HwModel::default();
+    let kv_problems: Vec<_> =
+        (0..2u64).map(|i| TaskKind::Arith.generate(Split::Train, i)).collect();
+    let full_slot = hw.kv_bytes(p, g);
+    for (label, pool_bytes) in [
+        ("rollout shared-kv unbounded (n=32, C=16)", 0u64),
+        ("rollout shared-kv constrained (n=32, C=16)", full_slot * (br as u64 / 2).max(1)),
+    ] {
+        let mut iter = 0u64;
+        let mut last_stats = pods::rollout::InferenceStats::default();
+        bench(label, Some(10), || {
+            iter += 1;
+            let rows = plan_rows(&kv_problems, 32, 9, iter);
+            let mut kv = KvPolicy::from_model(&hw, true, p, g);
+            kv.pool_bytes = pool_bytes;
+            let (kept, stats) = execute_rows(
+                &engine,
+                &params,
+                None,
+                None,
+                None,
+                1.0,
+                16,
+                RefillMode::Continuous,
+                &rows,
+                &kv_problems,
+                TaskKind::Arith,
+                &RewardWeights::default(),
+                None,
+                kv,
+            )
+            .unwrap();
+            last_stats = stats;
+            black_box(kept);
+        });
+        println!(
+            "  -> prefill calls {} (saved {}), kv peak {} B",
+            last_stats.prefill_calls, last_stats.prefill_calls_saved, last_stats.kv_peak_bytes
+        );
     }
     Ok(())
 }

@@ -98,6 +98,7 @@ pub fn sections() -> Vec<SectionDoc> {
                 KeyDoc::new("decode_chunk", "int", ro.decode_chunk.to_string(), ">= 1; must match a lowered program ({1, 4, 16, G})", "Tokens decoded per `decode_chunk` call."),
                 KeyDoc::new("refill", "string", format!("\"{}\"", ro.refill.name()), "continuous \\| batch", "Slot-refill policy between chunks: admit queued rows into freed slots, or drain the whole batch first."),
                 KeyDoc::new("online_prune", "bool", ro.online_prune.to_string(), "requires `algo.adv_norm = \"after\"`", "Abort rollouts at chunk boundaries once they provably cannot survive the selection pipeline (doom-only verdicts; see docs/DETERMINISM.md)."),
+                KeyDoc::new("share_prompt_kv", "bool", ro.share_prompt_kv.to_string(), "—", "Prefill each prompt group once and admit sibling rows from the group's on-device snapshot; token streams are bit-identical either way (docs/DETERMINISM.md)."),
             ],
         },
         SectionDoc {
@@ -138,7 +139,10 @@ pub fn sections() -> Vec<SectionDoc> {
                 KeyDoc::new("tok_time_floor", "float", hw.tok_time_floor.to_string(), ">= 0", "Saturated per-token time (Fig. 1: ~21x below `tok_time_b1`)."),
                 KeyDoc::new("batch_half", "float", hw.batch_half.to_string(), "> 0", "Batch size at which amortization is halfway to the floor."),
                 KeyDoc::new("batch_saturation", "float", hw.batch_saturation.to_string(), ">= 1", "Rollout batch size beyond which throughput stops improving."),
-                KeyDoc::new("mem_capacity_rollouts", "int", hw.mem_capacity_rollouts.to_string(), ">= 1", "Per-device memory ceiling: max rollouts in one update micro-batch."),
+                KeyDoc::new("mem_capacity_rollouts", "int", hw.mem_capacity_rollouts.to_string(), ">= 1", "Update-phase memory ceiling: max rollouts in one update micro-batch. Caps only the update; the rollout-side ceiling is `kv_pool_bytes`."),
+                KeyDoc::new("kv_bytes_per_token", "int", hw.kv_bytes_per_token.to_string(), ">= 1", "Modeled KV-cache bytes per resident token (sizes the paged pool)."),
+                KeyDoc::new("kv_page_tokens", "int", hw.kv_page_tokens.to_string(), ">= 1", "Tokens per KV page; slot allocations round up to whole pages."),
+                KeyDoc::new("kv_pool_bytes", "int", hw.kv_pool_bytes.to_string(), "0 = unbounded", "Rollout-side memory ceiling: KV-pool capacity gating decode-slot admission (vLLM-style queuing when full)."),
                 KeyDoc::new("microbatch_fixed", "float", hw.microbatch_fixed.to_string(), ">= 0", "Fixed per-micro-step overhead (kernel launches, activation reload)."),
                 KeyDoc::new("microbatch_time", "float", hw.microbatch_time.to_string(), ">= 0", "fwd+bwd time for one full update micro-batch, scaled by fill."),
                 KeyDoc::new("comm_base", "float", hw.comm_base.to_string(), ">= 0", "Legacy per-micro-step collective cost (the workers-based `update_time` model)."),
@@ -278,6 +282,10 @@ mod tests {
             key(&secs, "rollout", "online_prune").default,
             cfg.rollout.online_prune.to_string()
         );
+        assert_eq!(
+            key(&secs, "rollout", "share_prompt_kv").default,
+            cfg.rollout.share_prompt_kv.to_string()
+        );
         // [hwsim] — every key present and matching the parsed default
         let hw = &cfg.hwsim;
         for (k, v) in [
@@ -287,6 +295,9 @@ mod tests {
             ("batch_half", hw.batch_half.to_string()),
             ("batch_saturation", hw.batch_saturation.to_string()),
             ("mem_capacity_rollouts", hw.mem_capacity_rollouts.to_string()),
+            ("kv_bytes_per_token", hw.kv_bytes_per_token.to_string()),
+            ("kv_page_tokens", hw.kv_page_tokens.to_string()),
+            ("kv_pool_bytes", hw.kv_pool_bytes.to_string()),
             ("microbatch_fixed", hw.microbatch_fixed.to_string()),
             ("microbatch_time", hw.microbatch_time.to_string()),
             ("comm_base", hw.comm_base.to_string()),

@@ -122,11 +122,22 @@ pub struct RolloutSection {
     /// bounded stage (e.g. no `prune(max_tokens=…)` / `max_variance`)
     /// never abort anything.
     pub online_prune: bool,
+    /// Group-shared prompt KV: prefill each prompt group **once** and
+    /// admit sibling rows by replicating the group's cached prompt state
+    /// on device (`prefill_shared`/`admit_share`). Token streams are
+    /// bit-identical either way (pinned by the `kv_golden` suite); only
+    /// the engine-call mix and the wall-clock change. Opt-in.
+    pub share_prompt_kv: bool,
 }
 
 impl Default for RolloutSection {
     fn default() -> Self {
-        Self { decode_chunk: 16, refill: RefillMode::Continuous, online_prune: false }
+        Self {
+            decode_chunk: 16,
+            refill: RefillMode::Continuous,
+            online_prune: false,
+            share_prompt_kv: false,
+        }
     }
 }
 
@@ -137,6 +148,7 @@ impl RolloutSection {
             decode_chunk: sec.usize_or("decode_chunk", d.decode_chunk)?,
             refill: RefillMode::parse(&sec.str_or("refill", d.refill.name())?)?,
             online_prune: sec.bool_or("online_prune", d.online_prune)?,
+            share_prompt_kv: sec.bool_or("share_prompt_kv", d.share_prompt_kv)?,
         };
         r.validate()?;
         Ok(r)
@@ -622,6 +634,41 @@ mod tests {
         let cfg = RunConfig::from_str_validated(&text).unwrap();
         assert_eq!(cfg.rollout.decode_chunk, 4);
         assert_eq!(cfg.rollout.refill, crate::rollout::RefillMode::Batch);
+    }
+
+    #[test]
+    fn share_prompt_kv_parses_and_is_opt_in() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert!(!cfg.rollout.share_prompt_kv, "prompt-KV sharing must be opt-in");
+
+        let text = format!("{MINIMAL}\n[rollout]\nshare_prompt_kv = true\n");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert!(cfg.rollout.share_prompt_kv);
+
+        // non-bool values are rejected
+        let text = format!("{MINIMAL}\n[rollout]\nshare_prompt_kv = 1\n");
+        assert!(RunConfig::from_str_validated(&text).is_err());
+    }
+
+    #[test]
+    fn kv_pool_keys_parse_and_validate() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert_eq!(cfg.hwsim.kv_bytes_per_token, 65_536);
+        assert_eq!(cfg.hwsim.kv_page_tokens, 16);
+        assert_eq!(cfg.hwsim.kv_pool_bytes, 0, "pool must default to unbounded");
+
+        let text = format!(
+            "{MINIMAL}\n[hwsim]\nkv_bytes_per_token = 1024\nkv_page_tokens = 8\n\
+             kv_pool_bytes = 1048576\n"
+        );
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert_eq!(cfg.hwsim.kv_bytes_per_token, 1024);
+        assert_eq!(cfg.hwsim.kv_page_tokens, 8);
+        assert_eq!(cfg.hwsim.kv_pool_bytes, 1_048_576);
+
+        let text = format!("{MINIMAL}\n[hwsim]\nkv_page_tokens = 0\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("kv_page_tokens"), "undescriptive: {err}");
     }
 
     #[test]

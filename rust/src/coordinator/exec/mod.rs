@@ -52,6 +52,7 @@ use crate::coordinator::select::online::GroupVerdicts;
 use crate::coordinator::select::Pipeline;
 use crate::hwsim::SimClock;
 use crate::reward::RewardWeights;
+use crate::rollout::KvPolicy;
 use crate::runtime::{Engine, ParamStore};
 use crate::tasks::{Split, TaskKind};
 use anyhow::{bail, Result};
@@ -144,6 +145,16 @@ pub struct StepReport {
     /// Mean staleness in iterations of the rows replayed this update
     /// (0 when none were).
     pub replay_mean_staleness: f64,
+    /// Physical prompt-prefill calls the decode drivers executed this
+    /// iteration (with `share_prompt_kv`: at most one per admitted group
+    /// per shard; without: one per admission event).
+    pub prefill_calls: usize,
+    /// Refill admissions served from a resident group snapshot instead of
+    /// a fresh prefill (0 with `share_prompt_kv` off).
+    pub prefill_calls_saved: usize,
+    /// Peak bytes resident in the modeled paged KV pool (max over worker
+    /// shards — pools are per device).
+    pub kv_peak_bytes: u64,
 }
 
 /// The schedule-aware driver for one training run.
@@ -244,7 +255,19 @@ impl TrainLoop {
                 }
             }
         }
-        let sim_inference = if pruned_lens.is_empty() {
+        // With prompt-KV sharing on, the charge prices prefill explicitly
+        // (one shared prefill per admitted group instead of one per
+        // admission event); otherwise the legacy decode-only models apply,
+        // keeping existing cost goldens byte-stable.
+        let sim_inference = if cfg.rollout.share_prompt_kv {
+            cfg.hwsim.shared_prefill_inference_time(
+                &gen_lens,
+                &pruned_lens,
+                cfg.rollout.decode_chunk,
+                gen_stats.prefill_calls,
+                ctx.engine.meta.config.prompt_len,
+            )
+        } else if pruned_lens.is_empty() {
             cfg.hwsim.chunked_inference_time(&gen_lens, cfg.rollout.decode_chunk)
         } else {
             cfg.hwsim.pruned_inference_time(&gen_lens, &pruned_lens, cfg.rollout.decode_chunk)
@@ -358,6 +381,9 @@ impl TrainLoop {
             replay_rows_used: replayed.len(),
             replay_store_size: self.replay.len(),
             replay_mean_staleness,
+            prefill_calls: gen_stats.prefill_calls,
+            prefill_calls_saved: gen_stats.prefill_calls_saved,
+            kv_peak_bytes: gen_stats.kv_peak_bytes,
         })
     }
 }
@@ -418,5 +444,11 @@ fn snapshot_batch(ctx: &StepCtx, iter: usize) -> GenBatch {
         decode_chunk: cfg.rollout.decode_chunk,
         refill: cfg.rollout.refill,
         online,
+        kv: KvPolicy::from_model(
+            &cfg.hwsim,
+            cfg.rollout.share_prompt_kv,
+            ctx.engine.meta.config.prompt_len,
+            ctx.engine.meta.config.seq_len - ctx.engine.meta.config.prompt_len,
+        ),
     }
 }

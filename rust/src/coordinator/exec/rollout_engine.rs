@@ -28,7 +28,9 @@
 use crate::coordinator::group::PromptGroup;
 use crate::coordinator::select::online::GroupVerdicts;
 use crate::reward::RewardWeights;
-use crate::rollout::{execute_rows, plan_rows, CallRollout, InferenceStats, RefillMode, RowSpec};
+use crate::rollout::{
+    execute_rows, plan_rows, CallRollout, InferenceStats, KvPolicy, RefillMode, RowSpec,
+};
 use crate::runtime::Engine;
 use crate::tasks::{Problem, TaskKind};
 use anyhow::{anyhow, bail, Context, Result};
@@ -74,6 +76,10 @@ pub struct GenBatch {
     /// shard — a group's rows can span shards, and all of them observe
     /// and poll the same state. `None` disables pruning.
     pub online: Option<Arc<GroupVerdicts>>,
+    /// KV accounting policy (`[rollout] share_prompt_kv` plus the hwsim
+    /// paged-pool model). Each worker shard runs its own pool ledger;
+    /// `KvPolicy::default()` is the legacy per-row-prefill path.
+    pub kv: KvPolicy,
 }
 
 /// One queued shard of generation rows for a worker thread.
@@ -298,6 +304,7 @@ fn run_shard(engine: &Engine, batch: &GenBatch, rows: &[RowSpec]) -> Result<Shar
         batch.task,
         &batch.weights,
         batch.online.as_deref(),
+        batch.kv,
     )
 }
 

@@ -77,6 +77,13 @@ pub struct IterStats {
     pub replay_store_size: usize,
     /// Mean staleness (iterations) of the rows replayed this update.
     pub replay_mean_staleness: f64,
+    /// Physical prompt-prefill calls the decode drivers executed.
+    pub prefill_calls: usize,
+    /// Refill admissions served from a group snapshot instead of a fresh
+    /// prefill (`[rollout] share_prompt_kv`).
+    pub prefill_calls_saved: usize,
+    /// Peak bytes resident in the modeled paged KV pool (max over shards).
+    pub kv_peak_bytes: u64,
     /// Simulated cost of the inference phase.
     pub sim_inference: f64,
     /// Simulated cost of the update phase (incl. communication).
@@ -320,6 +327,9 @@ impl Trainer {
             replay_rows_used: r.replay_rows_used,
             replay_store_size: r.replay_store_size,
             replay_mean_staleness: r.replay_mean_staleness,
+            prefill_calls: r.prefill_calls,
+            prefill_calls_saved: r.prefill_calls_saved,
+            kv_peak_bytes: r.kv_peak_bytes,
             sim_inference: r.sim_inference,
             sim_update: r.sim_update,
             sim_step: r.sim_step,
@@ -357,6 +367,9 @@ impl Trainer {
             replay_rows_used: r.replay_rows_used,
             replay_store_size: r.replay_store_size,
             replay_mean_staleness: r.replay_mean_staleness,
+            prefill_calls: r.prefill_calls,
+            prefill_calls_saved: r.prefill_calls_saved,
+            kv_peak_bytes: r.kv_peak_bytes,
         });
         Ok(stats)
     }

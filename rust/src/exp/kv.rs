@@ -1,0 +1,473 @@
+//! KV study — prefill calls saved and wall-clock recovered by
+//! group-shared prompt KV, swept over `share_prompt_kv × kv_pool_bytes ×
+//! decode_chunk`.
+//!
+//! Not a paper figure: this driver quantifies what `[rollout]
+//! share_prompt_kv` buys under the paged KV-memory model. It runs
+//! entirely on the cost model (no artifacts): the same deterministic
+//! synthetic groups as the prune study ([`crate::exp::prune::sim_group`])
+//! are pushed through a simulated slot-based admission loop that mirrors
+//! the chunked driver's pool gate — rows admit from the group-major FIFO
+//! only when the modeled pool has room, prompt pages are counted once per
+//! resident group when sharing, and a refill run of a snapshot-resident
+//! group admits without a prefill. Each cell prices its decode with
+//! [`HwModel::shared_prefill_inference_time`] at its own prefill-call
+//! count, so the shared/unshared arms are an apples-to-apples comparison.
+//!
+//! Shapes that must reproduce (asserted by this module's tests):
+//!
+//! * with sharing on and an unbounded pool, prefill calls collapse to
+//!   exactly one per group (the tentpole invariant), so
+//!   `prefill_calls_saved > 0` and the priced time never exceeds the
+//!   unshared arm;
+//! * the modeled pool peak never exceeds a bounded `kv_pool_bytes`, and
+//!   constraining the pool queues admissions without changing any row's
+//!   decoded length (admission schedule is history, not partition —
+//!   docs/DETERMINISM.md).
+
+use crate::exp::prune::sim_group;
+use crate::hwsim::{HwModel, KvPool};
+use crate::metrics::{ascii_plot, write_csv_rows, CsvRow};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::path::Path;
+
+/// Rollouts generated per prompt (the paper's default n).
+const N: usize = 64;
+/// Prompt groups per simulated iteration.
+const GROUPS: usize = 4;
+/// Generation budget G of the simulated profile.
+const G: usize = 64;
+/// Prompt region length P of the simulated profile.
+const PROMPT: usize = 32;
+/// Decode slots of the simulated device (the profile's B_r).
+const SLOTS: usize = 16;
+/// Decode chunk sizes swept (the artifact set's lowered programs).
+const CHUNK_SWEEP: [usize; 4] = [1, 4, 16, 64];
+/// Seed of the deterministic synthetic groups (same stream as the prune
+/// study: per-group streams derive by XOR with the group index).
+const SIM_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Outcome of simulating one iteration's admission under the paged pool.
+#[derive(Debug, Clone)]
+pub struct KvSimOut {
+    /// Physical prompt-prefill calls (unshared: one per admission event;
+    /// shared: one per group run not served by the snapshot).
+    pub prefill_calls: usize,
+    /// Refill runs served from the resident group snapshot (shared only).
+    pub prefill_calls_saved: usize,
+    /// Peak bytes resident in the modeled pool.
+    pub kv_peak_bytes: u64,
+    /// Refill events where the pool gate left the queue head waiting.
+    pub admit_stalls: usize,
+    /// Per-row decoded lengths, queue order (must be arm-invariant).
+    pub decoded_lens: Vec<usize>,
+}
+
+/// Simulate one iteration's slot loop against the paged-pool admission
+/// gate. `lens` is the group-major row queue as `(group_idx, final_len)`.
+/// Mirrors `rollout::chunked`: head-of-line FIFO admission, gen pages
+/// reserved at the full budget, prompt pages refcounted per group when
+/// sharing (rows + one snapshot hold), everything freed on retire.
+pub fn simulate_admission(
+    lens: &[(usize, usize)],
+    share: bool,
+    hw: &HwModel,
+    pool_bytes: u64,
+    chunk: usize,
+) -> Result<KvSimOut> {
+    let prompt_need = hw.kv_seg_bytes(PROMPT);
+    let gen_need = hw.kv_seg_bytes(G);
+    let n_groups = lens.iter().map(|&(g, _)| g + 1).max().unwrap_or(0);
+    let mut queue: VecDeque<(usize, usize, usize)> =
+        lens.iter().enumerate().map(|(i, &(g, l))| (i, g, l)).collect();
+    // slot: (row_idx, group, final_len, decoded, slot_bytes)
+    let mut slot: Vec<Option<(usize, usize, usize, usize, u64)>> = vec![None; SLOTS];
+    let mut refs = vec![0usize; n_groups];
+    let mut pool = KvPool::new(pool_bytes);
+    let mut snapshot: Option<usize> = None;
+    let mut out = KvSimOut {
+        prefill_calls: 0,
+        prefill_calls_saved: 0,
+        kv_peak_bytes: 0,
+        admit_stalls: 0,
+        decoded_lens: vec![0; lens.len()],
+    };
+    let chunk = chunk.max(1);
+    let unref = |g: usize, refs: &mut [usize], pool: &mut KvPool| {
+        refs[g] -= 1;
+        if refs[g] == 0 {
+            pool.free(prompt_need);
+        }
+    };
+    loop {
+        // ---- refill: admit the queue head while a slot and pages fit ---
+        let mut admitted: Vec<usize> = Vec::new();
+        for entry in slot.iter_mut() {
+            if entry.is_some() {
+                continue;
+            }
+            let Some(&(row, g, fl)) = queue.front() else { break };
+            let row_need = |refs: &[usize]| {
+                gen_need + if share && refs[g] > 0 { 0 } else { prompt_need }
+            };
+            let mut need = row_need(&refs);
+            if !pool.can_admit(need) {
+                // a stale snapshot of another group can never serve this
+                // group-major queue again — drop its hold and retry
+                if let Some(sg) = snapshot {
+                    if share && sg != g {
+                        snapshot = None;
+                        unref(sg, &mut refs, &mut pool);
+                        need = row_need(&refs);
+                    }
+                }
+                if !pool.can_admit(need) {
+                    out.admit_stalls += 1;
+                    break;
+                }
+            }
+            queue.pop_front();
+            pool.alloc(need);
+            if share {
+                refs[g] += 1;
+                *entry = Some((row, g, fl, 0, gen_need));
+            } else {
+                *entry = Some((row, g, fl, 0, need));
+            }
+            admitted.push(g);
+        }
+        if !admitted.is_empty() {
+            if share {
+                // one prefill per contiguous group run; a run of the
+                // snapshot-resident group admits via broadcast instead
+                let mut i = 0;
+                while i < admitted.len() {
+                    let g = admitted[i];
+                    while i < admitted.len() && admitted[i] == g {
+                        i += 1;
+                    }
+                    if snapshot == Some(g) {
+                        out.prefill_calls_saved += 1;
+                    } else {
+                        out.prefill_calls += 1;
+                        if let Some(sg) = snapshot.take() {
+                            unref(sg, &mut refs, &mut pool);
+                        }
+                        refs[g] += 1; // the new snapshot's hold
+                        snapshot = Some(g);
+                    }
+                }
+            } else {
+                out.prefill_calls += 1; // one batched prefill per event
+            }
+        }
+        if slot.iter().all(|s| s.is_none()) {
+            if queue.is_empty() {
+                break;
+            }
+            bail!(
+                "kv_pool_bytes = {pool_bytes} cannot hold a single decode row: \
+                 the queue head needs {} bytes",
+                gen_need + prompt_need
+            );
+        }
+        // ---- decode one chunk; retire rows reaching their length -------
+        for entry in slot.iter_mut() {
+            let Some((row, g, fl, mut d, bytes)) = *entry else { continue };
+            d = (d + chunk).min(fl.max(1));
+            if d >= fl.max(1) {
+                out.decoded_lens[row] = fl.max(1);
+                pool.free(bytes);
+                if share {
+                    unref(g, &mut refs, &mut pool);
+                }
+                *entry = None;
+            } else {
+                *entry = Some((row, g, fl, d, bytes));
+            }
+        }
+    }
+    if let Some(sg) = snapshot.take() {
+        unref(sg, &mut refs, &mut pool);
+    }
+    debug_assert_eq!(pool.allocated(), 0, "pool ledger must drain");
+    out.kv_peak_bytes = pool.peak();
+    Ok(out)
+}
+
+/// One (share, pool, chunk) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct KvRow {
+    /// Was prompt-KV sharing on for the cell?
+    pub share: bool,
+    /// Pool capacity of the cell (0 = unbounded).
+    pub pool_bytes: u64,
+    /// Decode chunk size of the cell.
+    pub chunk: usize,
+    /// Rollouts simulated (groups × n).
+    pub rollouts: usize,
+    /// Physical prompt-prefill calls.
+    pub prefill_calls: usize,
+    /// Refill runs served from the group snapshot.
+    pub prefill_calls_saved: usize,
+    /// Peak bytes resident in the modeled pool.
+    pub kv_peak_bytes: u64,
+    /// Refill events the pool gate stalled.
+    pub admit_stalls: usize,
+    /// Priced inference time (decode + explicit prefill charge).
+    pub sim_inference: f64,
+    /// Unshared-arm time over this cell's time (1.0 for unshared cells).
+    pub speedup: f64,
+}
+
+impl CsvRow for KvRow {
+    fn csv_header() -> &'static str {
+        "share,pool_bytes,chunk,rollouts,prefill_calls,prefill_calls_saved,\
+         kv_peak_bytes,admit_stalls,sim_inference,speedup"
+    }
+
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{}",
+            self.share,
+            self.pool_bytes,
+            self.chunk,
+            self.rollouts,
+            self.prefill_calls,
+            self.prefill_calls_saved,
+            self.kv_peak_bytes,
+            self.admit_stalls,
+            self.sim_inference,
+            self.speedup
+        )
+    }
+}
+
+/// The group-major row queue shared by every cell (same synthetic groups
+/// as the prune study).
+fn sim_queue() -> Vec<(usize, usize)> {
+    let mut rows = Vec::with_capacity(GROUPS * N);
+    for g in 0..GROUPS {
+        let mut rng = Rng::seed_from_u64(SIM_SEED ^ g as u64);
+        for r in sim_group(&mut rng, N, G) {
+            rows.push((g, r.final_len));
+        }
+    }
+    rows
+}
+
+/// Pool capacities swept: unbounded, then half and a quarter of the full
+/// unshared slot demand (`SLOTS × kv_bytes(P, G)`) — enough to force
+/// queuing without starving the head row.
+fn pool_sweep(hw: &HwModel) -> [u64; 3] {
+    let full = hw.kv_bytes(PROMPT, G) * SLOTS as u64;
+    [0, full / 2, full / 4]
+}
+
+/// Build the sweep grid (row-major: share, then pool, then chunk
+/// ascending). Deterministic: same queue, same pool ledger every run.
+pub fn sweep(hw: &HwModel) -> Result<Vec<KvRow>> {
+    let queue = sim_queue();
+    let mut out = Vec::with_capacity(2 * pool_sweep(hw).len() * CHUNK_SWEEP.len());
+    for share in [false, true] {
+        for pool_bytes in pool_sweep(hw) {
+            for &chunk in &CHUNK_SWEEP {
+                let sim = simulate_admission(&queue, share, hw, pool_bytes, chunk)?;
+                let sim_inference = hw.shared_prefill_inference_time(
+                    &sim.decoded_lens,
+                    &[],
+                    chunk,
+                    sim.prefill_calls,
+                    PROMPT,
+                );
+                out.push(KvRow {
+                    share,
+                    pool_bytes,
+                    chunk,
+                    rollouts: queue.len(),
+                    prefill_calls: sim.prefill_calls,
+                    prefill_calls_saved: sim.prefill_calls_saved,
+                    kv_peak_bytes: sim.kv_peak_bytes,
+                    admit_stalls: sim.admit_stalls,
+                    sim_inference,
+                    speedup: 1.0,
+                });
+            }
+        }
+    }
+    // speedup: the unshared cell with the same (pool, chunk) over this one
+    let baseline: Vec<(u64, usize, f64)> = out
+        .iter()
+        .filter(|r| !r.share)
+        .map(|r| (r.pool_bytes, r.chunk, r.sim_inference))
+        .collect();
+    for r in out.iter_mut().filter(|r| r.share) {
+        let base = baseline
+            .iter()
+            .find(|&&(p, c, _)| p == r.pool_bytes && c == r.chunk)
+            .map(|&(_, _, t)| t)
+            .unwrap_or(r.sim_inference);
+        r.speedup = base / r.sim_inference.max(1e-12);
+    }
+    Ok(out)
+}
+
+/// Run the study: write `<out_dir>/kv.csv` and print the
+/// prefill-calls-saved curves (one per pool capacity) plus the cell table.
+pub fn run(out_dir: &str) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let hw = HwModel::default();
+    let rows = sweep(&hw)?;
+    write_csv_rows(Path::new(&format!("{out_dir}/kv.csv")), &rows)?;
+
+    let curves: Vec<(String, Vec<(f64, f64)>)> = pool_sweep(&hw)
+        .iter()
+        .map(|&pool| {
+            let pts: Vec<(f64, f64)> = rows
+                .iter()
+                .filter(|r| r.share && r.pool_bytes == pool)
+                .map(|r| (r.chunk as f64, r.prefill_calls_saved as f64))
+                .collect();
+            let label = if pool == 0 {
+                "pool=unbounded".to_string()
+            } else {
+                format!("pool={}KiB", pool / 1024)
+            };
+            (label, pts)
+        })
+        .collect();
+    let series: Vec<(&str, &[(f64, f64)])> =
+        curves.iter().map(|(n, p)| (n.as_str(), p.as_slice())).collect();
+    println!(
+        "KV study: prefill calls saved vs decode chunk \
+         (n = {N}, {GROUPS} groups, P = {PROMPT}, G = {G}, B_r = {SLOTS})"
+    );
+    println!("{}", ascii_plot(&series, 64, 14));
+    for r in &rows {
+        println!(
+            "  share={:<5} pool={:>9}B C={:<3} | prefill {:>3} (saved {:>3}) \
+             stalls {:>4} | kv peak {:>9}B | sim {:>8.2}s ({:.2}x)",
+            r.share,
+            r.pool_bytes,
+            r.chunk,
+            r.prefill_calls,
+            r.prefill_calls_saved,
+            r.admit_stalls,
+            r.kv_peak_bytes,
+            r.sim_inference,
+            r.speedup
+        );
+    }
+    println!(
+        "  (token streams are bit-identical across every cell; only the \
+         admission schedule and the prefill bill move — see \
+         docs/DETERMINISM.md)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Acceptance shapes: sharing collapses prefill calls to one per
+    /// group under an unbounded pool, saves refill prefills at every
+    /// chunk that forces refill, and never loses time to the unshared
+    /// arm priced by the same formula.
+    #[test]
+    fn sweep_shapes_match_the_sharing_contract() {
+        let hw = HwModel::default();
+        let rows = sweep(&hw).unwrap();
+        assert_eq!(rows.len(), 2 * pool_sweep(&hw).len() * CHUNK_SWEEP.len());
+        for r in &rows {
+            if r.pool_bytes > 0 {
+                assert!(
+                    r.kv_peak_bytes <= r.pool_bytes,
+                    "pool overflow: {r:?}"
+                );
+                assert!(r.admit_stalls > 0, "a bounded pool must queue: {r:?}");
+            }
+            if r.share {
+                assert!(r.speedup >= 1.0 - 1e-9, "sharing lost time: {r:?}");
+                if r.pool_bytes == 0 {
+                    assert_eq!(
+                        r.prefill_calls, GROUPS,
+                        "unbounded shared arm must prefill once per group: {r:?}"
+                    );
+                    assert!(r.prefill_calls_saved > 0, "{r:?}");
+                }
+            } else {
+                assert_eq!(r.prefill_calls_saved, 0, "{r:?}");
+                assert_eq!(r.speedup, 1.0);
+                assert!(
+                    r.prefill_calls >= GROUPS,
+                    "unshared arm refills per event: {r:?}"
+                );
+            }
+        }
+        // the shared arm never prefills more than the unshared one in the
+        // same (pool, chunk) cell
+        for shared in rows.iter().filter(|r| r.share) {
+            let unshared = rows
+                .iter()
+                .find(|r| !r.share && r.pool_bytes == shared.pool_bytes && r.chunk == shared.chunk)
+                .unwrap();
+            assert!(shared.prefill_calls <= unshared.prefill_calls);
+            assert!(shared.kv_peak_bytes <= unshared.kv_peak_bytes);
+        }
+    }
+
+    /// Decoded lengths are the same in every cell: the pool gate and the
+    /// snapshot path move the admission schedule, never the streams.
+    #[test]
+    fn decoded_lengths_are_arm_invariant() {
+        let hw = HwModel::default();
+        let queue = sim_queue();
+        let reference =
+            simulate_admission(&queue, false, &hw, 0, 16).unwrap().decoded_lens;
+        for share in [false, true] {
+            for pool_bytes in pool_sweep(&hw) {
+                for &chunk in &CHUNK_SWEEP {
+                    let got = simulate_admission(&queue, share, &hw, pool_bytes, chunk)
+                        .unwrap()
+                        .decoded_lens;
+                    assert_eq!(
+                        got, reference,
+                        "share={share} pool={pool_bytes} C={chunk} moved a stream"
+                    );
+                }
+            }
+        }
+    }
+
+    /// A pool too small for one row fails loudly instead of spinning.
+    #[test]
+    fn starved_pool_bails_with_a_descriptive_error() {
+        let hw = HwModel::default();
+        let err = simulate_admission(&sim_queue(), true, &hw, 1, 16).unwrap_err();
+        assert!(err.to_string().contains("kv_pool_bytes"), "{err}");
+    }
+
+    /// The sweep is deterministic call-to-call (same queue, same ledger).
+    #[test]
+    fn sweep_is_deterministic() {
+        let hw = HwModel::default();
+        let a = sweep(&hw).unwrap();
+        let b = sweep(&hw).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.csv_row(), y.csv_row());
+        }
+    }
+
+    #[test]
+    fn kv_row_csv_shape() {
+        let rows = sweep(&HwModel::default()).unwrap();
+        let header_cols = KvRow::csv_header().split(',').count();
+        for r in &rows {
+            assert_eq!(r.csv_row().split(',').count(), header_cols, "{r:?}");
+        }
+    }
+}

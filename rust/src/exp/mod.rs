@@ -11,6 +11,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod kv;
 pub mod prune;
 pub mod reuse;
 pub mod sched;
@@ -106,6 +107,11 @@ pub struct CfgBuilder {
     pub refill: String,
     /// Online selection-aware pruning (rollout.online_prune).
     pub online_prune: bool,
+    /// Group-shared prompt prefill (rollout.share_prompt_kv).
+    pub share_prompt_kv: bool,
+    /// Override the paged KV-pool capacity (hwsim.kv_pool_bytes);
+    /// None = default (0 = unbounded).
+    pub kv_pool_bytes: Option<u64>,
     /// Simulated update shards (update.shards).
     pub upd_shards: usize,
     /// Rows per update micro-batch, 0 = profile B_u (update.micro_batch).
@@ -156,6 +162,8 @@ impl Default for CfgBuilder {
             decode_chunk: RolloutSection::default().decode_chunk,
             refill: "continuous".into(),
             online_prune: RolloutSection::default().online_prune,
+            share_prompt_kv: RolloutSection::default().share_prompt_kv,
+            kv_pool_bytes: None,
             upd_shards: UpdateSection::default().shards,
             upd_micro_batch: UpdateSection::default().micro_batch,
             replay_enabled: ReplaySection::default().enabled,
@@ -201,12 +209,14 @@ impl CfgBuilder {
                 workers: self.workers,
                 mem_capacity_rollouts: self.mem_capacity.unwrap_or(HwModel::default().mem_capacity_rollouts),
                 schedule: crate::hwsim::Schedule::parse(&self.schedule)?,
+                kv_pool_bytes: self.kv_pool_bytes.unwrap_or(HwModel::default().kv_pool_bytes),
                 ..Default::default()
             },
             rollout: RolloutSection {
                 decode_chunk: self.decode_chunk,
                 refill: crate::rollout::RefillMode::parse(&self.refill)?,
                 online_prune: self.online_prune,
+                share_prompt_kv: self.share_prompt_kv,
             },
             update: UpdateSection { shards: self.upd_shards, micro_batch: self.upd_micro_batch },
             replay: ReplaySection {

@@ -73,9 +73,21 @@ pub struct HwModel {
     pub batch_half: f64,
     /// Rollout batch size beyond which throughput stops improving.
     pub batch_saturation: f64,
-    /// Per-device memory ceiling: max rollouts in one update micro-batch
-    /// without gradient accumulation (Fig. 1: 32).
+    /// **Update-phase** memory ceiling: max rollouts in one update
+    /// micro-batch without gradient accumulation (Fig. 1: 32). This caps
+    /// only the policy-update micro-batch; the rollout-side memory ceiling
+    /// is the paged KV pool (`kv_pool_bytes`).
     pub mem_capacity_rollouts: usize,
+    /// Modeled KV-cache bytes per token per resident row (all layers; a
+    /// 3B-class model in bf16 carries ~64 KiB of K+V per token).
+    pub kv_bytes_per_token: u64,
+    /// Tokens per KV page: slot allocations round up to whole pages
+    /// (vLLM-style paging), so short prompts still pin a full page.
+    pub kv_page_tokens: usize,
+    /// Rollout-side memory ceiling: capacity of the modeled KV pool in
+    /// bytes. A queued row is admitted into a decode slot only when its
+    /// pages fit; `0` = unbounded (admission never blocks on memory).
+    pub kv_pool_bytes: u64,
     /// Fixed per-micro-step overhead (kernel launches, activation reload,
     /// ZeRO state gather) — what makes the GA cliff a cliff.
     pub microbatch_fixed: f64,
@@ -118,6 +130,9 @@ impl Default for HwModel {
             batch_half: 10.0,
             batch_saturation: 512.0,
             mem_capacity_rollouts: 32,
+            kv_bytes_per_token: 65_536,
+            kv_page_tokens: 16,
+            kv_pool_bytes: 0,
             microbatch_fixed: 0.8,
             microbatch_time: 1.2,
             comm_base: 0.55,
@@ -145,6 +160,9 @@ impl HwModel {
             batch_half: sec.f64_or("batch_half", d.batch_half)?,
             batch_saturation: sec.f64_or("batch_saturation", d.batch_saturation)?,
             mem_capacity_rollouts: sec.usize_or("mem_capacity_rollouts", d.mem_capacity_rollouts)?,
+            kv_bytes_per_token: sec.u64_or("kv_bytes_per_token", d.kv_bytes_per_token)?,
+            kv_page_tokens: sec.usize_or("kv_page_tokens", d.kv_page_tokens)?,
+            kv_pool_bytes: sec.u64_or("kv_pool_bytes", d.kv_pool_bytes)?,
             microbatch_fixed: sec.f64_or("microbatch_fixed", d.microbatch_fixed)?,
             microbatch_time: sec.f64_or("microbatch_time", d.microbatch_time)?,
             comm_base: sec.f64_or("comm_base", d.comm_base)?,
@@ -172,8 +190,21 @@ impl HwModel {
         }
         if self.mem_capacity_rollouts == 0 {
             anyhow::bail!(
-                "hwsim.mem_capacity_rollouts must be >= 1 (the per-device memory \
-                 ceiling bounds one update micro-batch)"
+                "hwsim.mem_capacity_rollouts must be >= 1 (it caps only the \
+                 update micro-batch; the rollout-side memory ceiling is \
+                 hwsim.kv_pool_bytes)"
+            );
+        }
+        if self.kv_bytes_per_token == 0 {
+            anyhow::bail!(
+                "hwsim.kv_bytes_per_token must be >= 1 (every resident token \
+                 occupies KV-cache memory; it sizes kv_pool_bytes admission)"
+            );
+        }
+        if self.kv_page_tokens == 0 {
+            anyhow::bail!(
+                "hwsim.kv_page_tokens must be >= 1 (KV allocations round up to \
+                 whole pages; use 1 for token-granular accounting)"
             );
         }
         if self.batch_saturation < 1.0 || self.batch_half <= 0.0 {
@@ -271,6 +302,55 @@ impl HwModel {
             .sum();
         let shard = n.div_ceil(self.workers.max(1));
         shard as f64 * (total / n as f64) * self.per_token_time(shard)
+    }
+
+    /// Bytes of one KV page (`kv_page_tokens × kv_bytes_per_token`).
+    pub fn kv_page_bytes(&self) -> u64 {
+        self.kv_page_tokens as u64 * self.kv_bytes_per_token
+    }
+
+    /// Page-rounded KV bytes of one cache segment holding `tokens` tokens
+    /// (prompt region or generation budget): `ceil(tokens / page) × page`
+    /// in bytes. Zero tokens pin zero pages.
+    pub fn kv_seg_bytes(&self, tokens: usize) -> u64 {
+        (tokens as u64).div_ceil(self.kv_page_tokens.max(1) as u64) * self.kv_page_bytes()
+    }
+
+    /// Modeled KV footprint of one decode slot: the prompt segment plus
+    /// the generation budget, each rounded to whole pages. When prompt KV
+    /// is group-shared the prompt segment is counted **once per resident
+    /// group**, not per row — the slot batcher does that split itself via
+    /// [`Self::kv_seg_bytes`]; this is the private-prompt (unshared) cost.
+    pub fn kv_bytes(&self, prompt_len: usize, gen_len: usize) -> u64 {
+        self.kv_seg_bytes(prompt_len) + self.kv_seg_bytes(gen_len)
+    }
+
+    /// A fresh admission ledger over this model's `kv_pool_bytes`.
+    pub fn kv_pool(&self) -> KvPool {
+        KvPool::new(self.kv_pool_bytes)
+    }
+
+    /// Inference time under **group-shared prompt prefill**: the decode
+    /// charge of [`Self::pruned_inference_time`] plus an explicit prefill
+    /// charge — each of the driver's `prefill_calls` prices one batched
+    /// prompt pass of `prompt_len` positions at the saturated per-token
+    /// floor (a prompt pass is one parallel forward, fully amortized),
+    /// with calls spread across the workers. The legacy charges fold
+    /// prefill into the per-token amortization; pricing calls explicitly
+    /// is what makes the sharing saving visible to the cost model —
+    /// sharing collapses `prefill_calls` from one per refill event to one
+    /// per admitted group.
+    pub fn shared_prefill_inference_time(
+        &self,
+        gen_lens: &[usize],
+        pruned_lens: &[usize],
+        chunk: usize,
+        prefill_calls: usize,
+        prompt_len: usize,
+    ) -> f64 {
+        let calls_per_worker = prefill_calls.div_ceil(self.workers.max(1));
+        self.pruned_inference_time(gen_lens, pruned_lens, chunk)
+            + calls_per_worker as f64 * prompt_len as f64 * self.tok_time_floor
     }
 
     /// Number of gradient-accumulation micro-steps forced by the memory
@@ -419,6 +499,62 @@ pub struct UpdateCost {
     /// paper's Fig. 1 memory ceiling (`mem_capacity_rollouts`) is
     /// denominated in.
     pub peak_mem_rollouts: usize,
+}
+
+/// Deterministic paged KV-memory ledger — the modeled resource that gates
+/// decode-slot admission (vLLM-style): the slot batcher allocates a row's
+/// pages before admitting it, blocks the queue head when they don't fit,
+/// and frees them on retire/abort. Prompt pages are allocated once per
+/// resident group when prompt KV is shared, once per row otherwise.
+///
+/// The ledger is bytes-in/bytes-out bookkeeping, not an allocator: `peak`
+/// is the high-water mark the train CSV reports as `kv_peak_bytes`, and
+/// `capacity = 0` means unbounded (admission never blocks).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvPool {
+    capacity: u64,
+    allocated: u64,
+    peak: u64,
+}
+
+impl KvPool {
+    /// An empty pool of `capacity` bytes (`0` = unbounded).
+    pub fn new(capacity: u64) -> Self {
+        Self { capacity, allocated: 0, peak: 0 }
+    }
+
+    /// Pool capacity in bytes (`0` = unbounded).
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Would an allocation of `bytes` fit right now?
+    pub fn can_admit(&self, bytes: u64) -> bool {
+        self.capacity == 0 || self.allocated + bytes <= self.capacity
+    }
+
+    /// Allocate `bytes` unconditionally (callers gate on
+    /// [`Self::can_admit`]); advances the high-water mark.
+    pub fn alloc(&mut self, bytes: u64) {
+        self.allocated += bytes;
+        self.peak = self.peak.max(self.allocated);
+    }
+
+    /// Return `bytes` to the pool (retire/abort). Saturates at zero so a
+    /// double-free is an accounting error, not a panic.
+    pub fn free(&mut self, bytes: u64) {
+        self.allocated = self.allocated.saturating_sub(bytes);
+    }
+
+    /// Bytes currently allocated.
+    pub fn allocated(&self) -> u64 {
+        self.allocated
+    }
+
+    /// High-water mark of [`Self::allocated`] over the pool's lifetime.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
 }
 
 /// Simulated wall clock with overlap accounting.
@@ -770,6 +906,115 @@ mod tests {
         assert_eq!(Schedule::Pipelined.name(), "pipelined");
     }
 
+    /// Page math: segments round up to whole pages, zero tokens pin zero
+    /// pages, and the per-slot footprint is the sum of its two segments.
+    #[test]
+    fn kv_bytes_rounds_to_pages() {
+        let hw = HwModel { kv_bytes_per_token: 1024, kv_page_tokens: 16, ..Default::default() };
+        assert_eq!(hw.kv_page_bytes(), 16 * 1024);
+        assert_eq!(hw.kv_seg_bytes(0), 0);
+        assert_eq!(hw.kv_seg_bytes(1), 16 * 1024);
+        assert_eq!(hw.kv_seg_bytes(16), 16 * 1024);
+        assert_eq!(hw.kv_seg_bytes(17), 32 * 1024);
+        assert_eq!(hw.kv_bytes(32, 40), hw.kv_seg_bytes(32) + hw.kv_seg_bytes(40));
+        for_cases(200, |rng| {
+            let hw = HwModel {
+                kv_bytes_per_token: rng.gen_range_inclusive(1, 1 << 20),
+                kv_page_tokens: rng.gen_range_inclusive(1, 64) as usize,
+                ..Default::default()
+            };
+            let t = rng.gen_range_inclusive(0, 512) as usize;
+            let b = hw.kv_seg_bytes(t);
+            assert_eq!(b % hw.kv_page_bytes(), 0, "not page-aligned");
+            assert!(b >= t as u64 * hw.kv_bytes_per_token, "rounded below the raw bytes");
+            assert!(b < (t as u64 + hw.kv_page_tokens as u64) * hw.kv_bytes_per_token);
+        });
+    }
+
+    /// Pool accounting: admission blocks when full, retire/abort frees the
+    /// pages, capacity 0 never blocks.
+    #[test]
+    fn kv_pool_blocks_when_full_and_frees_on_retire() {
+        let mut pool = KvPool::new(100);
+        assert!(pool.can_admit(60));
+        pool.alloc(60);
+        assert!(pool.can_admit(40));
+        assert!(!pool.can_admit(41), "over-capacity admission must block");
+        pool.alloc(40);
+        assert_eq!(pool.allocated(), 100);
+        assert!(!pool.can_admit(1));
+        pool.free(60); // retire/abort returns the row's pages
+        assert!(pool.can_admit(60));
+        assert_eq!(pool.allocated(), 40);
+        assert_eq!(pool.peak(), 100);
+        // unbounded pool never blocks
+        let unbounded = KvPool::new(0);
+        assert!(unbounded.can_admit(u64::MAX / 2));
+    }
+
+    /// The high-water mark is order-invariant: allocating one batch of
+    /// rows in any permutation (frees only afterwards) peaks at the sum.
+    #[test]
+    fn kv_pool_peak_order_invariant() {
+        for_cases(200, |rng| {
+            let n = rng.gen_range_inclusive(1, 12) as usize;
+            let sizes: Vec<u64> = (0..n).map(|_| rng.gen_range_inclusive(1, 1000)).collect();
+            // two random admission orders of the same row set
+            let mut a = sizes.clone();
+            let mut b = sizes.clone();
+            for i in (1..n).rev() {
+                a.swap(i, rng.gen_range_inclusive(0, i as u64) as usize);
+                b.swap(i, rng.gen_range_inclusive(0, i as u64) as usize);
+            }
+            let run = |order: &[u64]| {
+                let mut pool = KvPool::new(0);
+                for &s in order {
+                    pool.alloc(s);
+                }
+                for &s in order {
+                    pool.free(s);
+                }
+                assert_eq!(pool.allocated(), 0);
+                pool.peak()
+            };
+            assert_eq!(run(&a), run(&b), "peak depends on admission order");
+            assert_eq!(run(&a), sizes.iter().sum::<u64>());
+        });
+    }
+
+    /// The shared-prefill charge is the pruned/chunked decode charge plus
+    /// an explicit per-call prompt-pass term: zero calls collapse to the
+    /// decode charge, and fewer prefill calls never cost more — the axis
+    /// the sharing saving moves along.
+    #[test]
+    fn shared_prefill_charge_prices_prefill_calls() {
+        let hw = HwModel::default();
+        let lens = vec![7usize, 30, 2, 16];
+        assert_eq!(
+            hw.shared_prefill_inference_time(&lens, &[], 16, 0, 32),
+            hw.pruned_inference_time(&lens, &[], 16)
+        );
+        // one call charges exactly one prompt pass at the floor
+        let one = hw.shared_prefill_inference_time(&lens, &[], 16, 1, 32);
+        assert!((one - hw.pruned_inference_time(&lens, &[], 16) - 32.0 * hw.tok_time_floor).abs() < 1e-12);
+        for_cases(200, |rng| {
+            let hw = HwModel {
+                workers: rng.gen_range_inclusive(1, 8) as usize,
+                ..Default::default()
+            };
+            let p = rng.gen_range_inclusive(1, 64) as usize;
+            let chunk = rng.gen_range_inclusive(1, 32) as usize;
+            let lens: Vec<usize> =
+                (0..rng.gen_range_inclusive(1, 16)).map(|_| rng.gen_range_inclusive(1, 64) as usize).collect();
+            let c1 = rng.gen_range_inclusive(0, 64) as usize;
+            let c2 = rng.gen_range_inclusive(0, 64) as usize;
+            let (lo, hi) = (c1.min(c2), c1.max(c2));
+            let t_lo = hw.shared_prefill_inference_time(&lens, &[], chunk, lo, p);
+            let t_hi = hw.shared_prefill_inference_time(&lens, &[], chunk, hi, p);
+            assert!(t_lo <= t_hi + 1e-12, "saved prefill calls must never cost more");
+        });
+    }
+
     #[test]
     fn hwmodel_validation_rejects_degenerate_sections() {
         let mut hw = HwModel::default();
@@ -779,8 +1024,16 @@ mod tests {
         assert!(err.contains("hwsim.workers"), "undescriptive error: {err}");
         hw.workers = 1;
         hw.mem_capacity_rollouts = 0;
-        assert!(hw.validate().is_err());
+        let err = hw.validate().unwrap_err().to_string();
+        assert!(err.contains("update micro-batch"), "message must scope the ceiling: {err}");
+        assert!(err.contains("kv_pool_bytes"), "message must name the rollout-side limit: {err}");
         hw.mem_capacity_rollouts = 32;
+        hw.kv_bytes_per_token = 0;
+        assert!(hw.validate().unwrap_err().to_string().contains("kv_bytes_per_token"));
+        hw.kv_bytes_per_token = 65_536;
+        hw.kv_page_tokens = 0;
+        assert!(hw.validate().unwrap_err().to_string().contains("kv_page_tokens"));
+        hw.kv_page_tokens = 16;
         hw.tok_time_b1 = -1.0;
         assert!(hw.validate().unwrap_err().to_string().contains("tok_time_b1"));
     }

@@ -3,7 +3,7 @@
 //! ```text
 //! pods train --config configs/setting_a.toml [--iterations N]
 //! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test --chunk 16
-//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|table3|all [--setting a] [--quick] [--probe]
+//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|kv|table3|all [--setting a] [--quick] [--probe]
 //! pods info  --profile base
 //! pods bench-check [--fresh BENCH_e2e.json] [--baseline rust/benches/BENCH_baseline.json] [--bless]
 //! pods config-docs [--check] [--out docs/CONFIG.md]
@@ -30,12 +30,12 @@ USAGE:
   pods train --config <path> [--iterations N] [--artifacts DIR]
   pods eval  --ckpt <path> [--task arith|poly|mcq] [--split train|test|platinum]
              [--profile NAME] [--problems N] [--chunk C]
-  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|table3|all>
+  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|kv|table3|all>
              [--setting a-f] [--quick] [--out-dir DIR] [--probe]
   pods info  [--profile NAME]
   pods bench-check [--fresh PATH] [--baseline PATH] [--max-regression FRAC]
              [--min-speedup RATIO] [--min-prune-speedup RATIO]
-             [--min-replay-speedup RATIO] [--bless]
+             [--min-replay-speedup RATIO] [--min-kv-speedup RATIO] [--bless]
              --bless regenerates the committed baseline from the fresh
              report instead of checking against it
   pods config-docs [--check] [--out PATH]
@@ -187,6 +187,7 @@ fn main() -> Result<()> {
                 "shard" => exp::shard::run(&out_dir)?,
                 "prune" => exp::prune::run(&out_dir)?,
                 "reuse" => exp::reuse::run(&out_dir)?,
+                "kv" => exp::kv::run(&out_dir)?,
                 "table3" => exp::table3::run(&out_dir)?,
                 "all" => {
                     exp::fig1::run(&artifacts, &out_dir, probe)?;
@@ -199,6 +200,7 @@ fn main() -> Result<()> {
                     exp::shard::run(&out_dir)?;
                     exp::prune::run(&out_dir)?;
                     exp::reuse::run(&out_dir)?;
+                    exp::kv::run(&out_dir)?;
                     exp::table3::run(&out_dir)?;
                 }
                 other => bail!("unknown experiment {other:?}"),
@@ -317,6 +319,22 @@ fn main() -> Result<()> {
                 Some(line) => println!("{line}"),
                 None => {
                     println!("replay speedup guard: comparison arms absent from {fresh} — skipped")
+                }
+            }
+            // same-run floor for group-shared prompt KV: sibling rows admit
+            // from the group snapshot instead of re-running prefill, so the
+            // shared arm must not cost step wall-clock against the per-row
+            // arm of the identical workload
+            let min_kv: f64 = args.get_or("min-kv-speedup", "1.0").parse()?;
+            match pods::util::bench::check_speedup(
+                std::path::Path::new(&fresh),
+                "e2e step pods shared-kv (n=64, m=8)",
+                "e2e step pods per-row-prefill (n=64, m=8)",
+                min_kv,
+            )? {
+                Some(line) => println!("{line}"),
+                None => {
+                    println!("kv speedup guard: comparison arms absent from {fresh} — skipped")
                 }
             }
         }

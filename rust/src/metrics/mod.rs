@@ -102,6 +102,16 @@ pub struct IterRow {
     /// Mean staleness in iterations of the rows replayed this update
     /// (zero when none were).
     pub replay_mean_staleness: f64,
+    /// Physical prompt-prefill calls the decode drivers executed this
+    /// iteration (`[rollout] share_prompt_kv`: at most one per admitted
+    /// group per worker shard; off: one per admission event).
+    pub prefill_calls: usize,
+    /// Refill admissions served from a resident group-prompt snapshot
+    /// instead of a fresh prefill (zero with sharing off).
+    pub prefill_calls_saved: usize,
+    /// Peak bytes resident in the modeled paged KV pool (max over worker
+    /// shards — pools are per simulated device).
+    pub kv_peak_bytes: u64,
 }
 
 impl CsvRow for IterRow {
@@ -111,13 +121,14 @@ impl CsvRow for IterRow {
          loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
          sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted,\
          upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online,\
-         replay_rows_used,replay_store_size,replay_mean_staleness"
+         replay_rows_used,replay_store_size,replay_mean_staleness,\
+         prefill_calls,prefill_calls_saved,kv_peak_bytes"
     }
 
     fn csv_row(&self) -> String {
         format!(
             "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},\
-             {},{},{}",
+             {},{},{},{},{},{}",
             self.iter,
             self.sim_time,
             self.real_time,
@@ -148,7 +159,10 @@ impl CsvRow for IterRow {
             self.rows_pruned_online,
             self.replay_rows_used,
             self.replay_store_size,
-            self.replay_mean_staleness
+            self.replay_mean_staleness,
+            self.prefill_calls,
+            self.prefill_calls_saved,
+            self.kv_peak_bytes
         )
     }
 }
@@ -346,14 +360,15 @@ mod tests {
              loss,clip_frac,kl,micro_steps,rollouts_generated,rollouts_trained,\
              sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted,\
              upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online,\
-             replay_rows_used,replay_store_size,replay_mean_staleness"
+             replay_rows_used,replay_store_size,replay_mean_staleness,\
+             prefill_calls,prefill_calls_saved,kv_peak_bytes"
                 .replace(char::is_whitespace, "")
         );
         // new columns append at the end, so CSVs from older runs stay
         // parseable by position-tolerant readers
         let cols: Vec<&str> = header.split(',').collect();
         assert_eq!(
-            cols[cols.len() - 10..].to_vec(),
+            cols[cols.len() - 13..].to_vec(),
             vec![
                 "gen_tokens_decoded",
                 "gen_tokens_wasted",
@@ -364,7 +379,10 @@ mod tests {
                 "rows_pruned_online",
                 "replay_rows_used",
                 "replay_store_size",
-                "replay_mean_staleness"
+                "replay_mean_staleness",
+                "prefill_calls",
+                "prefill_calls_saved",
+                "kv_peak_bytes"
             ]
         );
     }
@@ -405,6 +423,9 @@ mod tests {
             replay_rows_used: 4,
             replay_store_size: 20,
             replay_mean_staleness: 1.5,
+            prefill_calls: 6,
+            prefill_calls_saved: 10,
+            kv_peak_bytes: 262144,
         };
         let header = IterRow::csv_header().replace(char::is_whitespace, "");
         let line = row.csv_row();
@@ -429,6 +450,9 @@ mod tests {
         assert_eq!(get("replay_rows_used"), "4");
         assert_eq!(get("replay_store_size"), "20");
         assert_eq!(get("replay_mean_staleness"), "1.5");
+        assert_eq!(get("prefill_calls"), "6");
+        assert_eq!(get("prefill_calls_saved"), "10");
+        assert_eq!(get("kv_peak_bytes"), "262144");
         // the overlap identity the exec layer maintains:
         // step + saved == inference + update
         let step: f64 = get("sim_step_time").parse().unwrap();

@@ -24,7 +24,20 @@
 //! counter-based function of its own seed, so chunk size, slot
 //! assignment and refill order cannot change what any row samples
 //! (pinned by `python/tests/test_chunked.py` and the Rust goldens).
+//!
+//! With a [`KvPolicy`] the driver additionally models KV memory as a
+//! first-class resource: a group's prompt prefill runs **once**
+//! (`prefill_shared`) and sibling rows are admitted by replicating the
+//! group's cached prompt state on device (`admit_share` — no prompt pass,
+//! no host round-trip), while a paged [`KvPool`] gates admission
+//! vLLM-style — a queued row is admitted only when its modeled pages fit,
+//! prompt pages are counted once per resident group, and pages free on
+//! retire/abort. Sharing cannot change any stream: prefill is per-row
+//! independent, the prompt region of the cache is immutable during
+//! decode, and sampling folds `(row_seed, step)` only (pinned by the
+//! `kv_golden` suite).
 
+use crate::hwsim::{HwModel, KvPool};
 use crate::runtime::{DecodeState, Engine, TensorI};
 use crate::tasks::{tokenizer as tok, Problem};
 use anyhow::{anyhow, bail, Result};
@@ -113,6 +126,40 @@ pub trait PruneHook {
     fn should_abort(&self, group_idx: usize, rollout_idx: usize, gen_len: usize) -> bool;
 }
 
+/// Group-shared prompt-KV and paged-pool admission policy for the decode
+/// driver. [`Default`] is the legacy behaviour: per-row prompt prefill,
+/// zero modeled page sizes, and an unbounded pool (admission never
+/// blocks on memory).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvPolicy {
+    /// Prefill each group's prompt once and admit sibling rows by
+    /// replicating the on-device snapshot (`[rollout] share_prompt_kv`).
+    pub share_prompt_kv: bool,
+    /// Page-rounded KV bytes of one prompt segment (`P` tokens).
+    pub prompt_bytes: u64,
+    /// Page-rounded KV bytes of one generation-budget reservation: the
+    /// driver reserves the full budget `G` at admission (a row may retire
+    /// early, but the reservation keeps admission deterministic).
+    pub gen_bytes: u64,
+    /// Modeled pool capacity in bytes (`hwsim.kv_pool_bytes`;
+    /// 0 = unbounded).
+    pub pool_bytes: u64,
+}
+
+impl KvPolicy {
+    /// Build the policy from the hardware model's paged-KV parameters:
+    /// page-rounded prompt/generation segments ([`HwModel::kv_seg_bytes`])
+    /// and the configured pool capacity.
+    pub fn from_model(hw: &HwModel, share_prompt_kv: bool, prompt_len: usize, gen_len: usize) -> Self {
+        Self {
+            share_prompt_kv,
+            prompt_bytes: hw.kv_seg_bytes(prompt_len),
+            gen_bytes: hw.kv_seg_bytes(gen_len),
+            pool_bytes: hw.kv_pool_bytes,
+        }
+    }
+}
+
 /// Engine-call accounting for one driver run.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DecodeStats {
@@ -133,6 +180,13 @@ pub struct DecodeStats {
     pub gen_tokens_pruned: usize,
     /// Rows aborted mid-decode (or pruned before admission) by the hook.
     pub rows_pruned: usize,
+    /// Prefill calls avoided by group-shared prompt KV: refill events
+    /// served by replicating the group's snapshot (`admit_share`) instead
+    /// of running a prompt pass.
+    pub prefill_calls_saved: usize,
+    /// High-water mark of the modeled KV pool over the run, in bytes
+    /// (0 when the policy models no page sizes).
+    pub kv_peak_bytes: u64,
 }
 
 /// Per-slot bookkeeping for a row mid-decode.
@@ -175,29 +229,115 @@ struct Driver<'a> {
     state: Option<DecodeState>,
     outs: Vec<Option<RowOut>>,
     stats: DecodeStats,
+    // group-shared prompt KV + paged admission (KvPolicy::default() = off)
+    kv: KvPolicy,
+    pool: KvPool,
+    /// The last prefilled group's on-device prompt snapshot; siblings
+    /// admit from it via `admit_share`. The group-major queue guarantees
+    /// at most one group ever straddles refill events, so one slot of
+    /// history is enough.
+    snapshot: Option<(usize, DecodeState)>,
+    /// Per-group: are the group's shared prompt pages resident in the pool?
+    prompt_resident: Vec<bool>,
+    /// Per-group references to the shared prompt pages: resident rows plus
+    /// the snapshot hold; pages free when the count drops to zero.
+    prompt_refs: Vec<usize>,
+    /// Pool bytes owned by each slot's row (freed on retire/abort).
+    slot_bytes: Vec<u64>,
 }
 
 impl<'a> Driver<'a> {
-    /// Admit queued rows into `free` slots: one prefill call carrying the
-    /// new prompts in their target slots (other slots repeat the first new
-    /// prompt — filler that stays masked done), then merge the admitted
-    /// slots' cache blocks and logits rows into the carried state.
+    /// Pool bytes the queue-head row of group `g` must allocate to admit:
+    /// its generation-budget reservation plus — unless the group's shared
+    /// prompt pages are already resident — the prompt segment.
+    fn admit_need(&self, g: usize) -> u64 {
+        if self.kv.share_prompt_kv && self.prompt_resident[g] {
+            self.kv.gen_bytes
+        } else {
+            self.kv.prompt_bytes + self.kv.gen_bytes
+        }
+    }
+
+    /// Record an admitted row's allocation: the generation reservation is
+    /// owned by the slot (freed on retire/abort); under sharing the prompt
+    /// segment is owned by the group and freed with its last reference.
+    fn alloc_row(&mut self, s: usize, g: usize, need: u64) {
+        self.pool.alloc(need);
+        if self.kv.share_prompt_kv {
+            self.prompt_resident[g] = true;
+            self.prompt_refs[g] += 1;
+            self.slot_bytes[s] = self.kv.gen_bytes;
+        } else {
+            self.slot_bytes[s] = need;
+        }
+    }
+
+    /// Drop one reference to group `g`'s shared prompt pages (a resident
+    /// row retired/aborted, or the snapshot hold moved on); the pages
+    /// return to the pool when the last reference is gone.
+    fn unref_prompt(&mut self, g: usize) {
+        if !self.kv.share_prompt_kv {
+            return;
+        }
+        self.prompt_refs[g] -= 1;
+        if self.prompt_refs[g] == 0 && self.prompt_resident[g] {
+            self.pool.free(self.kv.prompt_bytes);
+            self.prompt_resident[g] = false;
+        }
+    }
+
+    /// Return a retiring/aborting slot's KV pages to the pool.
+    fn free_slot(&mut self, s: usize, g: usize) {
+        self.pool.free(self.slot_bytes[s]);
+        self.slot_bytes[s] = 0;
+        if self.kv.share_prompt_kv {
+            self.unref_prompt(g);
+        }
+    }
+
+    /// Admit queued rows into `free` slots. Without prompt sharing: one
+    /// prefill call carrying the new prompts in their target slots (other
+    /// slots repeat the first new prompt — filler that stays masked done),
+    /// then an on-device merge of the admitted slots into the carried
+    /// state. With sharing: per-group admission — the group's first
+    /// admission runs one `prefill_shared` (every batch slot carries the
+    /// group prompt, so every snapshot slot holds the same state) and
+    /// later refills replicate the snapshot via `admit_share`. Admission
+    /// is gated by the modeled KV pool: the queue head blocks when its
+    /// pages don't fit (head-of-line, so the schedule stays deterministic).
     fn admit(&mut self, free: &[usize]) -> Result<()> {
         let mut admitted: Vec<(usize, usize)> = Vec::new(); // (slot, row)
-        for &s in free {
+        'slots: for &s in free {
             // rows doomed while still queued are pruned without ever
             // being admitted: no prefill, no decode — the whole budget
             // counts as released
             loop {
-                let Some(r) = self.queue.pop_front() else { break };
+                let Some(&r) = self.queue.front() else { break 'slots };
                 let spec = self.rows[r];
                 if self
                     .hook
                     .is_some_and(|h| h.should_abort(spec.group_idx, spec.rollout_idx, 0))
                 {
+                    self.queue.pop_front();
                     self.emit_pruned_unadmitted(r)?;
                     continue;
                 }
+                if !self.pool.can_admit(self.admit_need(spec.group_idx)) {
+                    // a snapshot of a *different* group can never serve a
+                    // future admission (the group-major queue has moved
+                    // past it) — drop its hold before giving up
+                    if let Some((sg, _)) = &self.snapshot {
+                        if *sg != spec.group_idx {
+                            let (sg, _) = self.snapshot.take().expect("checked");
+                            self.unref_prompt(sg);
+                        }
+                    }
+                    if !self.pool.can_admit(self.admit_need(spec.group_idx)) {
+                        break 'slots;
+                    }
+                }
+                self.queue.pop_front();
+                self.alloc_row(s, spec.group_idx, self.admit_need(spec.group_idx));
                 admitted.push((s, r));
                 break;
             }
@@ -206,38 +346,100 @@ impl<'a> Driver<'a> {
             return Ok(());
         }
         let (b, p) = (self.b, self.p);
-        let (filler, filler_pad) =
-            pad_prompt(&self.problems[self.rows[admitted[0].1].group_idx].prompt, p)?;
-        let mut batch = vec![tok::PAD; b * p];
-        let mut batch_pads = vec![filler_pad; b];
-        for s in 0..b {
-            batch[s * p..(s + 1) * p].copy_from_slice(&filler);
-        }
-        let mut slot_rows: Vec<(Vec<i32>, i32)> = Vec::with_capacity(admitted.len());
-        for &(s, r) in &admitted {
-            let (row, pad) = pad_prompt(&self.problems[self.rows[r].group_idx].prompt, p)?;
-            batch[s * p..(s + 1) * p].copy_from_slice(&row);
-            batch_pads[s] = pad;
-            slot_rows.push((row, pad));
-        }
-        let prompts = TensorI::new(batch, &[b, p])?;
-        let fresh = self.engine.prefill(self.params, self.lora, &prompts, &batch_pads)?;
-        self.stats.prefill_calls += 1;
-        match self.state.take() {
-            None => self.state = Some(fresh),
-            Some(live) => {
-                // on-device merge: admitted slots take the fresh prefill
-                // state, the rest keep their carried caches — no host
-                // cache round-trip
+        if self.kv.share_prompt_kv {
+            // per-group runs in admission order (contiguous for a
+            // group-major queue, but correct for any order)
+            let mut runs: Vec<(usize, Vec<usize>)> = Vec::new(); // (group, slots)
+            for &(s, r) in &admitted {
+                let g = self.rows[r].group_idx;
+                match runs.last_mut() {
+                    Some((rg, slots)) if *rg == g => slots.push(s),
+                    _ => runs.push((g, vec![s])),
+                }
+            }
+            for (g, run_slots) in runs {
                 let mut mask = vec![0i32; b];
-                for &(s, _) in &admitted {
+                for &s in &run_slots {
                     mask[s] = 1;
                 }
-                self.state = Some(self.engine.admit_merge(live, fresh, &mask)?);
-                self.stats.merge_calls += 1;
+                if self.snapshot.as_ref().is_some_and(|(sg, _)| *sg == g) {
+                    // sibling admission: replicate the group's cached
+                    // prompt state on device — no prompt pass runs
+                    let (sg, snap) = self.snapshot.take().expect("checked");
+                    let live =
+                        self.state.take().expect("a held snapshot implies a carried state");
+                    let (merged, snap) = self.engine.admit_share(live, snap, &mask)?;
+                    self.state = Some(merged);
+                    self.snapshot = Some((sg, snap));
+                    self.stats.merge_calls += 1;
+                    self.stats.prefill_calls_saved += 1;
+                } else {
+                    // first admission of this group: one shared prompt
+                    // pass returning the state twice (working + snapshot);
+                    // every slot carries the group prompt so every
+                    // snapshot slot holds the same prompt state
+                    let (prompt_row, pad) = pad_prompt(&self.problems[g].prompt, p)?;
+                    let mut batch = vec![tok::PAD; b * p];
+                    for s in 0..b {
+                        batch[s * p..(s + 1) * p].copy_from_slice(&prompt_row);
+                    }
+                    let prompts = TensorI::new(batch, &[b, p])?;
+                    let (fresh, snap) = self.engine.prefill_shared(
+                        self.params,
+                        self.lora,
+                        &prompts,
+                        &vec![pad; b],
+                    )?;
+                    self.stats.prefill_calls += 1;
+                    match self.state.take() {
+                        None => self.state = Some(fresh),
+                        Some(live) => {
+                            self.state = Some(self.engine.admit_merge(live, fresh, &mask)?);
+                            self.stats.merge_calls += 1;
+                        }
+                    }
+                    // the snapshot hold moves to this group; the old
+                    // group's pages free once its last resident row does
+                    if let Some((old, _)) = self.snapshot.take() {
+                        self.unref_prompt(old);
+                    }
+                    self.prompt_refs[g] += 1;
+                    self.snapshot = Some((g, snap));
+                }
+            }
+        } else {
+            let (filler, filler_pad) =
+                pad_prompt(&self.problems[self.rows[admitted[0].1].group_idx].prompt, p)?;
+            let mut batch = vec![tok::PAD; b * p];
+            let mut batch_pads = vec![filler_pad; b];
+            for s in 0..b {
+                batch[s * p..(s + 1) * p].copy_from_slice(&filler);
+            }
+            for &(s, r) in &admitted {
+                let (row, pad) = pad_prompt(&self.problems[self.rows[r].group_idx].prompt, p)?;
+                batch[s * p..(s + 1) * p].copy_from_slice(&row);
+                batch_pads[s] = pad;
+            }
+            let prompts = TensorI::new(batch, &[b, p])?;
+            let fresh = self.engine.prefill(self.params, self.lora, &prompts, &batch_pads)?;
+            self.stats.prefill_calls += 1;
+            match self.state.take() {
+                None => self.state = Some(fresh),
+                Some(live) => {
+                    // on-device merge: admitted slots take the fresh prefill
+                    // state, the rest keep their carried caches — no host
+                    // cache round-trip
+                    let mut mask = vec![0i32; b];
+                    for &(s, _) in &admitted {
+                        mask[s] = 1;
+                    }
+                    self.state = Some(self.engine.admit_merge(live, fresh, &mask)?);
+                    self.stats.merge_calls += 1;
+                }
             }
         }
-        for ((s, r), (prompt_row, pad)) in admitted.into_iter().zip(slot_rows) {
+        for (s, r) in admitted {
+            let (prompt_row, pad) = pad_prompt(&self.problems[self.rows[r].group_idx].prompt, p)?;
             self.seeds[s] = self.rows[r].seed;
             self.step[s] = 0;
             self.done[s] = 0;
@@ -301,6 +503,7 @@ impl<'a> Driver<'a> {
                 }
                 self.outs[slot.row] = Some(out);
                 self.done[s] = 1;
+                self.free_slot(s, spec.group_idx);
                 freed += 1;
             }
         }
@@ -338,6 +541,7 @@ impl<'a> Driver<'a> {
                 aborted: true,
             });
             self.done[s] = 1;
+            self.free_slot(s, spec.group_idx);
             self.stats.rows_pruned += 1;
             self.stats.gen_tokens_pruned += self.g.saturating_sub(gen_len.max(0) as usize);
             freed += 1;
@@ -345,9 +549,31 @@ impl<'a> Driver<'a> {
         freed
     }
 
+    /// Admission made no progress while rows remain queued: with every
+    /// slot drained and its pages freed, the queue head can never fit —
+    /// fail loudly instead of silently under-delivering rows.
+    fn check_admission_progress(&self) -> Result<()> {
+        if self.slots.iter().all(|s| s.is_none()) {
+            if let Some(&r) = self.queue.front() {
+                let g = self.rows[r].group_idx;
+                bail!(
+                    "hwsim.kv_pool_bytes = {} cannot hold a single decode row: the \
+                     queue head (group {g}) needs {} bytes (prompt pages {} + \
+                     generation reservation {}); raise kv_pool_bytes (0 = unbounded)",
+                    self.pool.capacity(),
+                    self.admit_need(g),
+                    self.kv.prompt_bytes,
+                    self.kv.gen_bytes
+                );
+            }
+        }
+        Ok(())
+    }
+
     fn run(&mut self, chunk: usize, refill: RefillMode, temperature: f32) -> Result<()> {
         let all: Vec<usize> = (0..self.b).collect();
         self.admit(&all)?;
+        self.check_admission_progress()?;
         while self.slots.iter().any(|s| s.is_some()) {
             let st = self.state.take().expect("live slots imply a carried state");
             let prev_step = self.step.clone();
@@ -394,8 +620,14 @@ impl<'a> Driver<'a> {
                 let free: Vec<usize> =
                     (0..self.b).filter(|&s| self.slots[s].is_none()).collect();
                 self.admit(&free)?;
+                self.check_admission_progress()?;
             }
         }
+        // release the final snapshot hold so the ledger drains to zero
+        if let Some((g, _)) = self.snapshot.take() {
+            self.unref_prompt(g);
+        }
+        self.stats.kv_peak_bytes = self.pool.peak();
         Ok(())
     }
 }
@@ -430,6 +662,39 @@ pub fn decode_rows_hooked(
     rows: &[RowSpec],
     problems: &[Problem],
     hook: Option<&dyn PruneHook>,
+) -> Result<(Vec<RowOut>, DecodeStats)> {
+    decode_rows_kv(
+        engine,
+        params,
+        lora,
+        temperature,
+        chunk,
+        refill,
+        rows,
+        problems,
+        hook,
+        KvPolicy::default(),
+    )
+}
+
+/// [`decode_rows_hooked`] with an explicit [`KvPolicy`]: group-shared
+/// prompt prefill and paged-pool admission gating.
+/// `KvPolicy::default()` reproduces [`decode_rows_hooked`] exactly; with
+/// `share_prompt_kv` the emitted rows are bit-identical either way (the
+/// `kv_golden` suite pins this) — only the engine-call mix, the pool
+/// telemetry, and the wall-clock change.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_rows_kv(
+    engine: &Engine,
+    params: &[f32],
+    lora: Option<&[f32]>,
+    temperature: f32,
+    chunk: usize,
+    refill: RefillMode,
+    rows: &[RowSpec],
+    problems: &[Problem],
+    hook: Option<&dyn PruneHook>,
+    kv: KvPolicy,
 ) -> Result<(Vec<RowOut>, DecodeStats)> {
     let meta = &engine.meta;
     if meta.decode_chunks.is_empty() {
@@ -470,6 +735,12 @@ pub fn decode_rows_hooked(
         state: None,
         outs: (0..rows.len()).map(|_| None).collect(),
         stats: DecodeStats::default(),
+        kv,
+        pool: KvPool::new(kv.pool_bytes),
+        snapshot: None,
+        prompt_resident: vec![false; problems.len()],
+        prompt_refs: vec![0; problems.len()],
+        slot_bytes: vec![0; b],
     };
     driver.run(chunk, refill, temperature)?;
     let mut finished = Vec::with_capacity(rows.len());

@@ -24,7 +24,8 @@
 pub mod chunked;
 
 pub use chunked::{
-    decode_rows, decode_rows_hooked, DecodeStats, PruneHook, RefillMode, RowOut, RowSpec,
+    decode_rows, decode_rows_hooked, decode_rows_kv, DecodeStats, KvPolicy, PruneHook,
+    RefillMode, RowOut, RowSpec,
 };
 
 use crate::coordinator::group::{PromptGroup, RolloutRecord};
@@ -55,10 +56,20 @@ pub struct InferenceStats {
     pub gen_tokens_pruned: usize,
     /// Rollouts aborted mid-decode by the online pruning verdicts.
     pub rows_pruned: usize,
+    /// Prompt prefill calls the decode driver executed.
+    pub prefill_calls: usize,
+    /// Prefill calls avoided by group-shared prompt KV (refill events
+    /// served from the group's on-device snapshot).
+    pub prefill_calls_saved: usize,
+    /// High-water mark of the modeled KV pool, in bytes. Per-device:
+    /// worker shards hold independent pools, so merging takes the max.
+    pub kv_peak_bytes: u64,
 }
 
 impl InferenceStats {
-    /// Merge another phase's stats into this one (field-wise sums).
+    /// Merge another phase's stats into this one: field-wise sums, except
+    /// `kv_peak_bytes` — each worker's pool is a separate device memory,
+    /// so the merged peak is the busiest device's, not the fleet total.
     pub fn absorb(&mut self, other: &InferenceStats) {
         self.calls += other.calls;
         self.total_gen_tokens += other.total_gen_tokens;
@@ -67,6 +78,9 @@ impl InferenceStats {
         self.gen_tokens_wasted += other.gen_tokens_wasted;
         self.gen_tokens_pruned += other.gen_tokens_pruned;
         self.rows_pruned += other.rows_pruned;
+        self.prefill_calls += other.prefill_calls;
+        self.prefill_calls_saved += other.prefill_calls_saved;
+        self.kv_peak_bytes = self.kv_peak_bytes.max(other.kv_peak_bytes);
     }
 }
 
@@ -125,6 +139,13 @@ pub fn prompt_batch(engine: &Engine, prompt: &[i32]) -> Result<(TensorI, Vec<i32
 /// group-major row order, one private seed per row. Any contiguous
 /// partition of this queue (worker shards) or slot/refill schedule
 /// produces identical per-row streams.
+///
+/// Group-major order is also what makes prompt-KV sharing pay off: all
+/// `n` siblings of a group sit adjacent in the queue, so at most one
+/// group ever straddles a refill event and the driver's single prompt
+/// snapshot serves every sibling admission (`share_prompt_kv` — sharing
+/// stays *correct* under any order, but adjacency is what lets
+/// `prefill_calls` collapse to one per group).
 pub fn plan_rows(problems: &[Problem], n: usize, run_seed: u64, iter: u64) -> Vec<RowSpec> {
     let mut rows = Vec::with_capacity(problems.len() * n);
     for (g, problem) in problems.iter().enumerate() {
@@ -188,6 +209,9 @@ impl PruneHook for VerdictHook<'_> {
 /// With `online = Some(v)`, the driver additionally reports retirements to
 /// the shared verdict state and aborts rows it declares doomed — the
 /// online selection-aware pruning path (`[rollout] online_prune`).
+///
+/// `kv` selects group-shared prompt prefill and paged-pool admission;
+/// [`KvPolicy::default()`] is the legacy per-row-prefill behaviour.
 #[allow(clippy::too_many_arguments)]
 pub fn execute_rows(
     engine: &Engine,
@@ -203,6 +227,7 @@ pub fn execute_rows(
     task: TaskKind,
     weights: &RewardWeights,
     online: Option<&GroupVerdicts>,
+    kv: KvPolicy,
 ) -> Result<(Vec<CallRollout>, InferenceStats)> {
     let hook_state = online.map(|verdicts| VerdictHook {
         verdicts,
@@ -212,7 +237,7 @@ pub fn execute_rows(
         prompt_len: engine.meta.config.prompt_len,
     });
     let hook = hook_state.as_ref().map(|h| h as &dyn PruneHook);
-    let (row_outs, dstats) = decode_rows_hooked(
+    let (row_outs, dstats) = decode_rows_kv(
         engine,
         params,
         lora,
@@ -222,6 +247,7 @@ pub fn execute_rows(
         rows,
         problems,
         hook,
+        kv,
     )?;
     let t = engine.meta.config.seq_len;
     let g = engine.meta.gen_len;
@@ -261,6 +287,9 @@ pub fn execute_rows(
         gen_tokens_decoded: dstats.gen_tokens_decoded,
         gen_tokens_pruned: dstats.gen_tokens_pruned,
         rows_pruned: dstats.rows_pruned,
+        prefill_calls: dstats.prefill_calls,
+        prefill_calls_saved: dstats.prefill_calls_saved,
+        kv_peak_bytes: dstats.kv_peak_bytes,
         ..Default::default()
     };
     for (i, r) in row_outs.into_iter().enumerate() {
@@ -315,6 +344,9 @@ pub struct GenRequest<'a> {
     pub decode_chunk: usize,
     /// Slot-refill policy between chunks.
     pub refill: RefillMode,
+    /// Group-shared prompt KV and paged-pool admission policy
+    /// ([`KvPolicy::default()`] = legacy per-row prefill).
+    pub kv: KvPolicy,
 }
 
 /// Generate `n` rollouts for `problem`, score them, and assemble the
@@ -343,6 +375,7 @@ pub fn generate_group(
         task,
         &req.weights,
         None,
+        req.kv,
     )?;
     let rollouts = kept.into_iter().map(|c| c.record).collect();
     Ok((PromptGroup { problem: problem.clone(), rollouts }, stats))
@@ -444,6 +477,9 @@ mod tests {
             gen_tokens_wasted: 22,
             gen_tokens_pruned: 7,
             rows_pruned: 1,
+            prefill_calls: 3,
+            prefill_calls_saved: 2,
+            kv_peak_bytes: 4096,
         };
         let b = InferenceStats {
             calls: 1,
@@ -453,6 +489,9 @@ mod tests {
             gen_tokens_wasted: 11,
             gen_tokens_pruned: 3,
             rows_pruned: 2,
+            prefill_calls: 1,
+            prefill_calls_saved: 4,
+            kv_peak_bytes: 1024,
         };
         a.absorb(&b);
         assert_eq!(a.calls, 3);
@@ -462,6 +501,39 @@ mod tests {
         assert_eq!(a.gen_tokens_wasted, 33);
         assert_eq!(a.gen_tokens_pruned, 10);
         assert_eq!(a.rows_pruned, 3);
+        assert_eq!(a.prefill_calls, 4);
+        assert_eq!(a.prefill_calls_saved, 6);
+        // per-device pools: the merged peak is the busiest device's
+        assert_eq!(a.kv_peak_bytes, 4096);
+    }
+
+    /// Prompt-KV sharing relies on group siblings being adjacent in the
+    /// refill queue: each group's rows must form exactly one contiguous
+    /// block (so at most one group straddles any refill event).
+    #[test]
+    fn plan_rows_keeps_group_siblings_adjacent() {
+        use crate::util::prop::for_cases;
+        for_cases(200, |rng| {
+            let k = rng.gen_range_inclusive(1, 8) as usize;
+            let n = rng.gen_range_inclusive(1, 24) as usize;
+            let ps = problems(k);
+            let rows = plan_rows(&ps, n, rng.next_u64(), rng.next_u64());
+            let mut seen: Vec<usize> = Vec::new();
+            for r in &rows {
+                match seen.last() {
+                    Some(&g) if g == r.group_idx => {}
+                    _ => {
+                        assert!(
+                            !seen.contains(&r.group_idx),
+                            "group {} split into non-adjacent blocks",
+                            r.group_idx
+                        );
+                        seen.push(r.group_idx);
+                    }
+                }
+            }
+            assert_eq!(seen.len(), k, "every group must appear exactly once");
+        });
     }
 
     /// Property: the queue always delivers exactly n rows per group in

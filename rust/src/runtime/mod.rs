@@ -312,6 +312,76 @@ impl Engine {
         Ok(DecodeState { cache_k, cache_v, logits })
     }
 
+    /// `prefill_shared`: [`Self::prefill`] that returns the prompt state
+    /// twice — a working copy to decode with plus an immutable snapshot
+    /// for later sibling admissions ([`Self::admit_share`]). The group's
+    /// prompt pass runs **once**; every sibling row admitted afterwards
+    /// replicates the snapshot on device instead of re-running prefill.
+    pub fn prefill_shared(
+        &self,
+        base: &[f32],
+        lora: Option<&[f32]>,
+        prompts: &TensorI,
+        pad_len: &[i32],
+    ) -> Result<(DecodeState, DecodeState)> {
+        let mut inputs = self.param_inputs(base, lora)?;
+        inputs.push(lit_i32(&prompts.data, &prompts.dims)?);
+        inputs.push(lit_i32(pad_len, &[pad_len.len()])?);
+        let mut outs = self.call("prefill_shared", &inputs)?;
+        if outs.len() != 6 {
+            return Err(anyhow!("prefill_shared returned {} outputs, expected 6", outs.len()));
+        }
+        let snap_logits = outs.pop().expect("len checked");
+        let snap_v = outs.pop().expect("len checked");
+        let snap_k = outs.pop().expect("len checked");
+        let logits = outs.pop().expect("len checked");
+        let cache_v = outs.pop().expect("len checked");
+        let cache_k = outs.pop().expect("len checked");
+        Ok((
+            DecodeState { cache_k, cache_v, logits },
+            DecodeState { cache_k: snap_k, cache_v: snap_v, logits: snap_logits },
+        ))
+    }
+
+    /// `admit_share`: sibling admission from a group's shared prompt
+    /// snapshot — slots with `admit[b] != 0` take `snap`'s prompt state
+    /// (every snapshot slot holds the same group prompt), the rest keep
+    /// `live`'s carried decode state, and the snapshot passes through the
+    /// call for reuse by the group's next admission. [`Self::admit_merge`]
+    /// generalized to a source state that must outlive the merge; no
+    /// transformer forward runs. Consumes both states, returns
+    /// `(merged, snapshot)`.
+    pub fn admit_share(
+        &self,
+        live: DecodeState,
+        snap: DecodeState,
+        admit: &[i32],
+    ) -> Result<(DecodeState, DecodeState)> {
+        let inputs = vec![
+            live.cache_k,
+            live.cache_v,
+            live.logits,
+            snap.cache_k,
+            snap.cache_v,
+            snap.logits,
+            lit_i32(admit, &[admit.len()])?,
+        ];
+        let mut outs = self.call("admit_share", &inputs)?;
+        if outs.len() != 6 {
+            return Err(anyhow!("admit_share returned {} outputs, expected 6", outs.len()));
+        }
+        let snap_logits = outs.pop().expect("len checked");
+        let snap_v = outs.pop().expect("len checked");
+        let snap_k = outs.pop().expect("len checked");
+        let logits = outs.pop().expect("len checked");
+        let cache_v = outs.pop().expect("len checked");
+        let cache_k = outs.pop().expect("len checked");
+        Ok((
+            DecodeState { cache_k, cache_v, logits },
+            DecodeState { cache_k: snap_k, cache_v: snap_v, logits: snap_logits },
+        ))
+    }
+
     /// `admit_merge`: slot-admission merge on device — slots with
     /// `admit[b] != 0` take `fresh`'s prefill state, the rest keep
     /// `live`'s carried decode state. Consumes both states.

@@ -16,7 +16,7 @@ use pods::coordinator::group::build_update_batch;
 use pods::coordinator::scheduler::Trainer;
 use pods::exp::CfgBuilder;
 use pods::reward::RewardWeights;
-use pods::rollout::{generate_group, GenRequest, RefillMode};
+use pods::rollout::{generate_group, GenRequest, KvPolicy, RefillMode};
 use pods::runtime::ParamStore;
 use pods::tasks::{Split, TaskKind};
 use std::sync::Arc;
@@ -82,6 +82,7 @@ fn sync_executor_reproduces_sequential_reference() {
             weights: RewardWeights::default(),
             decode_chunk: c.rollout.decode_chunk,
             refill: c.rollout.refill,
+            kv: KvPolicy::default(),
         };
         let (group, stats) = generate_group(&tr.engine, &req, TaskKind::Arith, problem).unwrap();
         total_gen_tokens += stats.total_gen_tokens;
@@ -155,6 +156,7 @@ fn sharded_update_is_bit_identical_to_monolithic() {
             weights: RewardWeights::default(),
             decode_chunk: c.rollout.decode_chunk,
             refill: c.rollout.refill,
+            kv: KvPolicy::default(),
         };
         let (group, _) = generate_group(&tr.engine, &req, TaskKind::Arith, problem).unwrap();
         groups.push(group);
@@ -226,6 +228,7 @@ fn pool_generation_is_deterministic_across_worker_counts() {
             decode_chunk: 16,
             refill: RefillMode::Continuous,
             online: None,
+            kv: KvPolicy::default(),
         };
         pool.generate(&engine, batch).unwrap()
     };

@@ -1,0 +1,369 @@
+//! Goldens for group-shared prompt KV and the paged-pool admission model.
+//!
+//! The load-bearing invariant (docs/DETERMINISM.md): because per-row RNG
+//! is counter-based and attention is row-local, **prefilling a group's
+//! prompt once and admitting sibling rows from the on-device snapshot is
+//! bit-identical to per-row prefill** — same tokens, logprobs, gen_mask,
+//! lengths — whatever the chunk size, refill mode, queue order, pool
+//! capacity, or worker count. Sharing and admission gating may only move
+//! *cost telemetry* (prefill_calls, kv_peak_bytes), never a stream.
+//!
+//! Runs on the `micro` artifacts (the trainer golden on `base`); skipped
+//! when absent.
+
+use pods::hwsim::HwModel;
+use pods::rollout::{decode_rows_kv, plan_rows, KvPolicy, RefillMode, RowOut, RowSpec};
+use pods::runtime::Engine;
+use pods::tasks::{Split, TaskKind};
+use pods::util::prop::for_cases;
+
+fn engine() -> Option<Engine> {
+    let dir = pods::default_artifacts_dir();
+    if !dir.join("micro/meta.json").exists() {
+        eprintln!("skipping: micro artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let mut e = Engine::load(&dir, "micro").expect("engine load");
+    e.quiet = true;
+    Some(e)
+}
+
+/// Micro-profile problems with prompts clipped to prompt_len.
+fn problems(e: &Engine, k: usize) -> Vec<pods::tasks::Problem> {
+    let p = e.meta.config.prompt_len;
+    (0..k as u64)
+        .map(|i| {
+            let mut pr = TaskKind::Arith.generate(Split::Train, i);
+            pr.prompt.truncate(p);
+            pr
+        })
+        .collect()
+}
+
+/// The sharing policy the executor builds for this engine's profile
+/// (unbounded pool unless the test overrides it).
+fn shared_policy(e: &Engine) -> KvPolicy {
+    let hw = HwModel::default();
+    KvPolicy::from_model(&hw, true, e.meta.config.prompt_len, e.meta.gen_len)
+}
+
+/// Key rows by (group, rollout) for order-independent comparison.
+fn by_identity(outs: &[RowOut]) -> Vec<(usize, usize, &RowOut)> {
+    let mut v: Vec<_> = outs.iter().map(|r| (r.group_idx, r.rollout_idx, r)).collect();
+    v.sort_by_key(|(g, j, _)| (*g, *j));
+    v
+}
+
+fn assert_streams_equal(a: &[RowOut], b: &[RowOut], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: row count");
+    for ((ga, ja, ra), (gb, jb, rb)) in by_identity(a).into_iter().zip(by_identity(b)) {
+        assert_eq!((ga, ja), (gb, jb), "{what}: row identity");
+        assert_eq!(ra.tokens, rb.tokens, "{what}: tokens of ({ga},{ja})");
+        assert_eq!(ra.logprobs, rb.logprobs, "{what}: logprobs of ({ga},{ja})");
+        assert_eq!(ra.gen_mask, rb.gen_mask, "{what}: gen_mask of ({ga},{ja})");
+        assert_eq!(ra.gen_len, rb.gen_len, "{what}: gen_len of ({ga},{ja})");
+        assert_eq!(ra.pad_len, rb.pad_len, "{what}: pad_len of ({ga},{ja})");
+    }
+}
+
+/// Tentpole golden: shared prefill reproduces the per-row-prefill streams
+/// bit for bit on a multi-group queue, for every chunk size and refill
+/// mode — while paying at most one prefill per group (the queue is
+/// group-major) and serving at least one refill event from the snapshot.
+#[test]
+fn shared_prefill_streams_bit_identical_across_chunks_and_refill() {
+    let Some(e) = engine() else { return };
+    let params = e.init(2).unwrap();
+    let ps = problems(&e, 3);
+    let rows = plan_rows(&ps, 6, 11, 3); // 18 rows through 4 slots
+    let chunks = e.meta.decode_chunks.clone();
+    let (reference, ref_stats) = decode_rows_kv(
+        &e, &params, None, 1.0, chunks[0], RefillMode::Continuous, &rows, &ps, None,
+        KvPolicy::default(),
+    )
+    .unwrap();
+    assert_eq!(ref_stats.prefill_calls_saved, 0, "legacy policy must never share");
+    assert_eq!(ref_stats.kv_peak_bytes, 0, "legacy policy models no pages");
+    for &chunk in &chunks {
+        for refill in [RefillMode::Continuous, RefillMode::Batch] {
+            let (outs, stats) = decode_rows_kv(
+                &e, &params, None, 1.0, chunk, refill, &rows, &ps, None, shared_policy(&e),
+            )
+            .unwrap();
+            let what = format!("C={chunk} refill={}", refill.name());
+            assert_streams_equal(&reference, &outs, &what);
+            assert!(
+                stats.prefill_calls <= ps.len(),
+                "{what}: {} prefills for {} groups — sharing must pay at most one \
+                 prompt pass per group on a group-major queue",
+                stats.prefill_calls,
+                ps.len()
+            );
+            // every group (6 rows) outlives the 4 slots, so refill events
+            // within a group exist and must ride the snapshot
+            assert!(stats.prefill_calls_saved > 0, "{what}: no refill used the snapshot");
+            assert!(stats.kv_peak_bytes > 0, "{what}: pool accounting never ran");
+        }
+    }
+}
+
+/// Queue (admission) order cannot change any row's stream under sharing:
+/// shuffled queues break group adjacency — costing extra prefills — but
+/// the per-rollout outputs stay identical to the legacy path.
+#[test]
+fn shared_streams_invariant_to_refill_order() {
+    let Some(e) = engine() else { return };
+    let params = e.init(3).unwrap();
+    let ps = problems(&e, 2);
+    let rows = plan_rows(&ps, 5, 5, 1); // 10 rows, 4 slots
+    let (reference, _) = decode_rows_kv(
+        &e, &params, None, 1.2, 4, RefillMode::Continuous, &rows, &ps, None, KvPolicy::default(),
+    )
+    .unwrap();
+    let mut rng = pods::util::rng::Rng::seed_from_u64(99);
+    for case in 0..4 {
+        let mut shuffled: Vec<RowSpec> = rows.clone();
+        for i in (1..shuffled.len()).rev() {
+            let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+            shuffled.swap(i, j);
+        }
+        let (outs, _) = decode_rows_kv(
+            &e, &params, None, 1.2, 4, RefillMode::Continuous, &shuffled, &ps, None,
+            shared_policy(&e),
+        )
+        .unwrap();
+        assert_streams_equal(&reference, &outs, &format!("shuffle case {case}"));
+    }
+}
+
+/// A bounded pool queues admissions (vLLM-style) without changing any
+/// stream, and its high-water mark respects the configured capacity —
+/// with sharing on (prompt pages counted once per resident group) and
+/// off (prompt pages counted per row).
+#[test]
+fn bounded_pool_queues_admissions_without_changing_streams() {
+    let Some(e) = engine() else { return };
+    let params = e.init(4).unwrap();
+    let ps = problems(&e, 3);
+    let rows = plan_rows(&ps, 6, 7, 2);
+    let (reference, _) = decode_rows_kv(
+        &e, &params, None, 1.0, 4, RefillMode::Continuous, &rows, &ps, None, KvPolicy::default(),
+    )
+    .unwrap();
+    let base = shared_policy(&e);
+    // shared: one group prompt resident + two generation reservations;
+    // unshared: two full rows. Both force admission stalls (4 slots).
+    let arms = [
+        (true, base.prompt_bytes + 2 * base.gen_bytes),
+        (false, 2 * (base.prompt_bytes + base.gen_bytes)),
+    ];
+    for (share, pool_bytes) in arms {
+        let kv = KvPolicy { share_prompt_kv: share, pool_bytes, ..base };
+        let (outs, stats) = decode_rows_kv(
+            &e, &params, None, 1.0, 4, RefillMode::Continuous, &rows, &ps, None, kv,
+        )
+        .unwrap();
+        let what = format!("share={share} pool={pool_bytes}");
+        assert_streams_equal(&reference, &outs, &what);
+        assert!(stats.kv_peak_bytes > 0, "{what}: pool accounting never ran");
+        assert!(
+            stats.kv_peak_bytes <= pool_bytes,
+            "{what}: peak {} exceeded the modeled capacity",
+            stats.kv_peak_bytes
+        );
+    }
+}
+
+/// A pool too small for even one decode row must fail loudly, naming the
+/// knob to raise — never deadlock or silently drop rows.
+#[test]
+fn starved_pool_fails_with_a_descriptive_error() {
+    let Some(e) = engine() else { return };
+    let params = e.init(5).unwrap();
+    let ps = problems(&e, 1);
+    let rows = plan_rows(&ps, 4, 1, 0);
+    let kv = KvPolicy { pool_bytes: 1, ..shared_policy(&e) };
+    let err = decode_rows_kv(
+        &e, &params, None, 1.0, 4, RefillMode::Continuous, &rows, &ps, None, kv,
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("kv_pool_bytes"), "unhelpful starvation error: {msg}");
+}
+
+/// Property suite: for random group counts, group sizes, chunk sizes,
+/// refill modes, queue orders and pool capacities, the shared-prefill
+/// driver's streams are bit-identical to the legacy per-row-prefill
+/// reference on the same planned rows.
+#[test]
+fn shared_prefill_is_bit_identical_under_random_schedules() {
+    let Some(e) = engine() else { return };
+    let params = e.init(6).unwrap();
+    let chunks = e.meta.decode_chunks.clone();
+    let base = shared_policy(&e);
+    let shared_events = std::cell::Cell::new(0usize);
+    for_cases(16, |rng| {
+        let groups = 1 + rng.below(3);
+        let n = 1 + rng.below(8);
+        let ps = problems(&e, groups);
+        let rows = plan_rows(&ps, n, rng.next_u64(), rng.below(10) as u64);
+        let (reference, _) = decode_rows_kv(
+            &e, &params, None, 1.0, chunks[0], RefillMode::Continuous, &rows, &ps, None,
+            KvPolicy::default(),
+        )
+        .unwrap();
+        let chunk = chunks[rng.below(chunks.len())];
+        let refill = if rng.gen_bool(0.5) { RefillMode::Continuous } else { RefillMode::Batch };
+        let mut queue = rows.clone();
+        if rng.gen_bool(0.5) {
+            rng.shuffle(&mut queue);
+        }
+        // unbounded, or bounded but able to hold at least one row in
+        // either accounting mode (prompt pages + generation reservation)
+        let min_pool = base.prompt_bytes + base.gen_bytes;
+        let pool_bytes =
+            if rng.gen_bool(0.5) { 0 } else { min_pool + rng.below(4) as u64 * base.gen_bytes };
+        let kv = KvPolicy { share_prompt_kv: true, pool_bytes, ..base };
+        let (outs, stats) = decode_rows_kv(
+            &e, &params, None, 1.0, chunk, refill, &queue, &ps, None, kv,
+        )
+        .unwrap();
+        let what = format!("groups={groups} n={n} C={chunk} pool={pool_bytes}");
+        assert_streams_equal(&reference, &outs, &what);
+        if pool_bytes > 0 {
+            assert!(stats.kv_peak_bytes <= pool_bytes, "{what}: pool overflowed");
+        }
+        shared_events.set(shared_events.get() + stats.prefill_calls_saved);
+    });
+    // the generator must actually exercise snapshot admissions, not
+    // vacuously pass on single-admission queues
+    assert!(
+        shared_events.get() > 0,
+        "no case admitted a row from the shared snapshot — the generator no \
+         longer exercises prefill sharing"
+    );
+}
+
+/// Worker-pool determinism: shared-KV generation through the rollout
+/// thread pool is bit-identical across worker counts, and identical to
+/// the per-row-prefill pool (each worker shard holds its own pool and
+/// snapshot; sharding never changes a stream).
+#[test]
+fn pool_generation_with_shared_kv_is_invariant_across_worker_counts() {
+    use pods::coordinator::exec::{GenBatch, RolloutEngine};
+    use pods::reward::RewardWeights;
+    use std::sync::Arc;
+    let Some(e) = engine() else { return };
+    let dir = pods::default_artifacts_dir();
+    let params = Arc::new(e.init(7).unwrap());
+    let ps = Arc::new(problems(&e, 3));
+    let gen_with = |workers: usize, kv: KvPolicy| {
+        let mut pool = RolloutEngine::new(dir.clone(), "micro", workers);
+        let batch = GenBatch {
+            params: Arc::clone(&params),
+            lora: None,
+            ref_params: None,
+            ref_lora: None,
+            problems: Arc::clone(&ps),
+            n: 10, // not a multiple of B_r: slots refill across groups
+            temperature: 1.0,
+            run_seed: 13,
+            iter: 2,
+            task: TaskKind::Arith,
+            weights: RewardWeights::default(),
+            decode_chunk: 4,
+            refill: RefillMode::Continuous,
+            online: None,
+            kv,
+        };
+        pool.generate(&e, batch).unwrap()
+    };
+    let (legacy, _) = gen_with(1, KvPolicy::default());
+    for workers in [1usize, 3] {
+        let (shared, stats) = gen_with(workers, shared_policy(&e));
+        assert_eq!(legacy.len(), shared.len());
+        for (a, b) in legacy.iter().zip(&shared) {
+            assert_eq!(a.problem.id, b.problem.id);
+            assert_eq!(a.rollouts.len(), b.rollouts.len());
+            for (ra, rb) in a.rollouts.iter().zip(&b.rollouts) {
+                assert_eq!(ra.tokens, rb.tokens, "{workers}w sharing changed sampled tokens");
+                assert_eq!(ra.old_lp, rb.old_lp);
+                assert_eq!(ra.total_reward, rb.total_reward);
+                assert_eq!(ra.gen_len, rb.gen_len);
+            }
+        }
+        assert!(stats.prefill_calls > 0);
+        assert!(stats.kv_peak_bytes > 0, "{workers}w: pool accounting never ran");
+    }
+}
+
+/// Trainer-level golden (artifact-gated): `share_prompt_kv = true` trains
+/// bit-identical parameters to the per-row-prefill path on the same seed,
+/// while paying at most one prefill per prompt group and recording the
+/// sharing telemetry in the iteration rows.
+#[test]
+fn shared_prefill_trains_bit_identical_params() {
+    use pods::exp::CfgBuilder;
+    let dir = pods::default_artifacts_dir();
+    if !dir.join("base/meta.json").exists() {
+        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let run = |share_prompt_kv: bool| {
+        let cfg = CfgBuilder {
+            name: format!("kv_golden_{share_prompt_kv}"),
+            profile: "base".into(),
+            task: "arith".into(),
+            iterations: 2,
+            prompts_per_iter: 2,
+            eval_every: 10,
+            eval_problems: 8,
+            kind: "pods".into(),
+            n: 32, // 2 groups of 32 through B_r = 16 slots: real refill traffic
+            m: Some(4),
+            lr: 1e-4,
+            decode_chunk: 4,
+            share_prompt_kv,
+            out_dir: std::env::temp_dir().join("pods_kv_golden").to_string_lossy().into_owned(),
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        let mut tr = pods::coordinator::scheduler::Trainer::new(&dir, cfg).unwrap();
+        tr.engine.quiet = true;
+        for it in 0..2 {
+            tr.train_iteration(it).unwrap();
+        }
+        tr
+    };
+    let perrow = run(false);
+    let shared = run(true);
+    assert_eq!(
+        perrow.store.params, shared.store.params,
+        "prompt-KV sharing changed trained parameters — the bit-identity \
+         contract is broken"
+    );
+    for (a, b) in perrow.recorder.iters.iter().zip(&shared.recorder.iters) {
+        // identical rollouts, selections and updates; only prefill/pool
+        // telemetry and the inference-time charge may move
+        assert_eq!(a.rollouts_trained, b.rollouts_trained);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.sel_variance, b.sel_variance);
+        assert_eq!(a.gen_tokens_decoded, b.gen_tokens_decoded);
+        assert_eq!(a.prefill_calls_saved, 0, "sharing off must record zero");
+        assert!(
+            b.prefill_calls <= 2,
+            "shared arm ran {} prefills for 2 prompt groups — must be at most \
+             one per admitted group",
+            b.prefill_calls
+        );
+        assert!(
+            b.prefill_calls < a.prefill_calls,
+            "sharing must eliminate refill-event prefills ({} vs {})",
+            b.prefill_calls,
+            a.prefill_calls
+        );
+        assert!(b.prefill_calls_saved > 0, "refill events must ride the snapshot");
+        assert!(b.kv_peak_bytes > 0, "shared arm must account pool pages");
+    }
+}

@@ -6,7 +6,7 @@
 //! notice when artifacts are absent so `cargo test` stays green pre-build.
 
 use pods::reward::RewardWeights;
-use pods::rollout::{generate_group, prompt_batch, GenRequest, RefillMode};
+use pods::rollout::{generate_group, prompt_batch, GenRequest, KvPolicy, RefillMode};
 use pods::runtime::{Engine, MicroBatch, ParamStore, TensorF, TensorI};
 use pods::tasks::tokenizer as tok;
 use pods::tasks::{Split, TaskKind};
@@ -210,6 +210,7 @@ fn generate_group_end_to_end() {
         weights: RewardWeights::default(),
         decode_chunk: 4,
         refill: RefillMode::Continuous,
+        kv: KvPolicy::default(),
     };
     let (group, stats) = generate_group(&e, &req, TaskKind::Arith, &problem).unwrap();
     assert_eq!(group.rollouts.len(), 10);
@@ -250,6 +251,7 @@ fn kl_reference_scoring_path() {
         weights: RewardWeights::default(),
         decode_chunk: 4,
         refill: RefillMode::Continuous,
+        kv: KvPolicy::default(),
     };
     let (group, _) = generate_group(&e, &req, TaskKind::Mcq, &problem).unwrap();
     // ref_lp must differ from old_lp (different parameters)
