@@ -7,8 +7,8 @@
 //! and CI runs [`check`] (`pods config-docs --check`) to fail when the
 //! committed file is stale.
 
-use super::{ReplaySection, RolloutSection, UpdateSection};
-use crate::hwsim::HwModel;
+use super::{CkptSection, ReplaySection, RolloutSection, UpdateSection};
+use crate::hwsim::{FaultSection, HwModel};
 use anyhow::{anyhow, Result};
 use std::path::Path;
 
@@ -57,6 +57,8 @@ pub fn sections() -> Vec<SectionDoc> {
     let ro = RolloutSection::default();
     let up = UpdateSection::default();
     let rp = ReplaySection::default();
+    let fa = FaultSection::default();
+    let ck = CkptSection::default();
     vec![
         SectionDoc {
             name: "run",
@@ -153,6 +155,44 @@ pub fn sections() -> Vec<SectionDoc> {
                 KeyDoc::new("comm_latency", "float", hw.comm_latency.to_string(), ">= 0", "Per-hop ring all-reduce latency in seconds."),
                 KeyDoc::new("sim_model_params", "float", hw.sim_model_params.to_string(), ">= 0", "Parameter count of the simulated policy; sizes the all-reduce volume."),
                 KeyDoc::new("schedule", "string", format!("\"{}\"", hw.schedule.name()), "sync \\| pipelined", "Executor schedule: phases back-to-back, or generation of t+1 overlapping the update of t."),
+            ],
+        },
+        SectionDoc {
+            name: "faults",
+            intro: "Deterministic fault injection and the shard retry \
+                    policy (off by default). The schedule is a pure \
+                    function of `(run.seed, iter, prompt_id, rollout_idx, \
+                    attempt)` — faults are history, not partition, so the \
+                    set of rows lost after retries is bit-identical across \
+                    worker-pool sizes and shard layouts, and `enabled = \
+                    false` (or all-zero rates) is bit-identical to a build \
+                    without the section (docs/DETERMINISM.md).",
+            keys: vec![
+                KeyDoc::new("enabled", "bool", fa.enabled.to_string(), "—", "Master switch; `false` injects nothing and builds no fault plan."),
+                KeyDoc::new("crash_rate", "float", fa.crash_rate.to_string(), "0.0..=1.0; the three fault rates sum to <= 1.0", "Worker-crash probability per row-attempt (the attempt's generation budget is charged as wasted work)."),
+                KeyDoc::new("transient_rate", "float", fa.transient_rate.to_string(), "0.0..=1.0; the three fault rates sum to <= 1.0", "Transient call-failure probability per row-attempt (fails fast; charges only the retry backoff)."),
+                KeyDoc::new("oom_rate", "float", fa.oom_rate.to_string(), "0.0..=1.0; the three fault rates sum to <= 1.0", "KV-admission OOM probability per row-attempt."),
+                KeyDoc::new("straggler_rate", "float", fa.straggler_rate.to_string(), "0.0..=1.0", "Straggler probability per successful row (slow, not failed)."),
+                KeyDoc::new("straggler_factor", "float", fa.straggler_factor.to_string(), ">= 1", "Slowdown multiplier charged to a straggler row's solo decode time."),
+                KeyDoc::new("max_retries", "int", fa.max_retries.to_string(), "—", "Retry attempts per failed row before it is declared lost; each retry re-draws from the attempt-indexed stream."),
+                KeyDoc::new("backoff_base", "float", fa.backoff_base.to_string(), ">= 0", "Simulated backoff charged before the first retry, in seconds."),
+                KeyDoc::new("backoff_factor", "float", fa.backoff_factor.to_string(), ">= 1", "Exponential backoff growth per subsequent retry (`base * factor^attempt`)."),
+                KeyDoc::new("min_group_survivors", "int", fa.min_group_survivors.to_string(), ">= 1", "Hard degradation floor: the iteration fails loudly when any prompt group retains fewer rollouts after losses."),
+            ],
+        },
+        SectionDoc {
+            name: "ckpt",
+            intro: "Crash-consistent resume snapshots (off by default). \
+                    Snapshots capture everything the next iteration reads \
+                    (params, optimizer state, sim clock, replay store, CSV \
+                    rows, in-flight pipelined prefetch) and are written \
+                    atomically — temp file, FNV-1a checksum, rename — so a \
+                    kill mid-write never corrupts the previous snapshot. \
+                    `pods train --resume` continues bit-identically to the \
+                    uninterrupted run (docs/DETERMINISM.md).",
+            keys: vec![
+                KeyDoc::new("every", "int", ck.every.to_string(), "0 = no snapshots", "Write a resume snapshot every this many completed iterations."),
+                KeyDoc::new("path", "string", "—", "—", "Snapshot location; defaults to `<run.out_dir>/<run.name>.resume`."),
             ],
         },
         SectionDoc {
@@ -321,6 +361,35 @@ mod tests {
             rp.capacity_per_prompt.to_string()
         );
         assert_eq!(key(&secs, "replay", "rho_max").default, rp.rho_max.to_string());
+        // [faults] — defaults of the off-by-default section
+        let fa = &cfg.faults;
+        assert_eq!(key(&secs, "faults", "enabled").default, fa.enabled.to_string());
+        assert_eq!(key(&secs, "faults", "crash_rate").default, fa.crash_rate.to_string());
+        assert_eq!(
+            key(&secs, "faults", "transient_rate").default,
+            fa.transient_rate.to_string()
+        );
+        assert_eq!(key(&secs, "faults", "oom_rate").default, fa.oom_rate.to_string());
+        assert_eq!(
+            key(&secs, "faults", "straggler_rate").default,
+            fa.straggler_rate.to_string()
+        );
+        assert_eq!(
+            key(&secs, "faults", "straggler_factor").default,
+            fa.straggler_factor.to_string()
+        );
+        assert_eq!(key(&secs, "faults", "max_retries").default, fa.max_retries.to_string());
+        assert_eq!(key(&secs, "faults", "backoff_base").default, fa.backoff_base.to_string());
+        assert_eq!(
+            key(&secs, "faults", "backoff_factor").default,
+            fa.backoff_factor.to_string()
+        );
+        assert_eq!(
+            key(&secs, "faults", "min_group_survivors").default,
+            fa.min_group_survivors.to_string()
+        );
+        // [ckpt]
+        assert_eq!(key(&secs, "ckpt", "every").default, cfg.ckpt.every.to_string());
         // [run]/[algo] parse-fallback defaults
         assert_eq!(key(&secs, "run", "seed").default, cfg.run.seed.to_string());
         assert_eq!(
@@ -348,7 +417,10 @@ mod tests {
     #[test]
     fn render_and_check_roundtrip() {
         let text = render();
-        for sec in ["[run]", "[algo]", "[rollout]", "[update]", "[replay]", "[hwsim]", "[sft]"] {
+        for sec in [
+            "[run]", "[algo]", "[rollout]", "[update]", "[replay]", "[hwsim]", "[faults]",
+            "[ckpt]", "[sft]",
+        ] {
             assert!(text.contains(sec), "missing section {sec}");
         }
         assert!(text.starts_with("<!-- GENERATED FILE"));

@@ -322,6 +322,44 @@ impl ReplaySection {
     }
 }
 
+/// `[ckpt]` — crash-consistent checkpoint/resume (the `coordinator::ckpt`
+/// subsystem).
+///
+/// When `every > 0` the trainer snapshots its full mutable state (params,
+/// optimizer moments, RNG cursors, replay store, metrics rows, sim clock)
+/// every `every` iterations via atomic write-temp-then-rename with a
+/// checksum, and `pods train --resume` continues bit-identically to an
+/// uninterrupted run (see docs/DETERMINISM.md). Off by default.
+#[derive(Debug, Clone)]
+pub struct CkptSection {
+    /// Snapshot the resume state every this many iterations (0 = never).
+    pub every: usize,
+    /// Resume-state file path; default `<out_dir>/<run.name>.resume`.
+    pub path: Option<String>,
+}
+
+impl Default for CkptSection {
+    fn default() -> Self {
+        Self { every: 0, path: None }
+    }
+}
+
+impl CkptSection {
+    fn from_section(sec: &SectionView) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            every: sec.usize_or("every", d.every)?,
+            path: sec.opt_str("path")?,
+        })
+    }
+
+    /// The resume-state path for a run (explicit `ckpt.path` or the
+    /// default `<out_dir>/<name>.resume`).
+    pub fn resume_path(&self, out_dir: &str, name: &str) -> String {
+        self.path.clone().unwrap_or_else(|| format!("{out_dir}/{name}.resume"))
+    }
+}
+
 /// `[sft]` — optional supervised warm-up before RL.
 #[derive(Debug, Clone, Default)]
 pub struct SftSection {
@@ -350,6 +388,10 @@ pub struct RunConfig {
     pub update: UpdateSection,
     /// `[replay]` — cross-iteration rollout replay (off by default).
     pub replay: ReplaySection,
+    /// `[faults]` — deterministic fault injection (off by default).
+    pub faults: crate::hwsim::FaultSection,
+    /// `[ckpt]` — crash-consistent checkpoint/resume (off by default).
+    pub ckpt: CkptSection,
     /// `[sft]` — optional supervised warm-up.
     pub sft: Option<SftSection>,
 }
@@ -370,6 +412,8 @@ impl RunConfig {
         let rollout = SectionView::new(&doc, "rollout");
         let update = SectionView::new(&doc, "update");
         let replay = SectionView::new(&doc, "replay");
+        let faults = SectionView::new(&doc, "faults");
+        let ckpt = SectionView::new(&doc, "ckpt");
         let sft = SectionView::new(&doc, "sft");
 
         let cfg = RunConfig {
@@ -403,6 +447,8 @@ impl RunConfig {
             rollout: RolloutSection::from_section(&rollout)?,
             update: UpdateSection::from_section(&update)?,
             replay: ReplaySection::from_section(&replay)?,
+            faults: crate::hwsim::FaultSection::from_section(&faults)?,
+            ckpt: CkptSection::from_section(&ckpt)?,
             sft: if sft.sec.is_some() {
                 Some(SftSection {
                     steps: sft.usize_or("steps", 0)?,
@@ -484,6 +530,7 @@ impl RunConfig {
         self.rollout.validate()?;
         self.update.validate()?;
         self.replay.validate()?;
+        self.faults.validate()?;
         // replayed rows reuse the advantage convention of the selected
         // subset ("after" statistics); "before" normalizes over the full
         // generation group, which no longer exists at replay time
@@ -788,6 +835,61 @@ mod tests {
         // disabled replay with "before" normalization stays legal
         let text = MINIMAL.replace("lr = 1e-4", "lr = 1e-4\nadv_norm = \"before\"");
         assert!(RunConfig::from_str_validated(&text).is_ok());
+    }
+
+    #[test]
+    fn faults_section_defaults_and_overrides() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert!(!cfg.faults.enabled, "fault injection must be opt-in");
+        assert_eq!(cfg.faults.crash_rate, 0.0);
+        assert_eq!(cfg.faults.max_retries, 2);
+        assert_eq!(cfg.faults.min_group_survivors, 1);
+
+        let text = format!(
+            "{MINIMAL}\n[faults]\nenabled = true\ncrash_rate = 0.05\n\
+             transient_rate = 0.1\noom_rate = 0.02\nstraggler_rate = 0.1\n\
+             straggler_factor = 3.0\nmax_retries = 3\nbackoff_base = 0.25\n\
+             backoff_factor = 1.5\nmin_group_survivors = 4\n"
+        );
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert!(cfg.faults.enabled);
+        assert!((cfg.faults.crash_rate - 0.05).abs() < 1e-12);
+        assert!((cfg.faults.transient_rate - 0.1).abs() < 1e-12);
+        assert!((cfg.faults.oom_rate - 0.02).abs() < 1e-12);
+        assert!((cfg.faults.straggler_factor - 3.0).abs() < 1e-12);
+        assert_eq!(cfg.faults.max_retries, 3);
+        assert_eq!(cfg.faults.min_group_survivors, 4);
+    }
+
+    #[test]
+    fn faults_section_rejects_degenerate_values() {
+        let text = format!("{MINIMAL}\n[faults]\ncrash_rate = 1.5\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("faults.crash_rate"), "undescriptive: {err}");
+
+        let text = format!("{MINIMAL}\n[faults]\ncrash_rate = 0.6\ntransient_rate = 0.6\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("exceed 1.0"), "undescriptive: {err}");
+
+        let text = format!("{MINIMAL}\n[faults]\nmin_group_survivors = 0\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("faults.min_group_survivors"), "undescriptive: {err}");
+
+        let text = format!("{MINIMAL}\n[faults]\nbackoff_factor = 0.5\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("faults.backoff_factor"), "undescriptive: {err}");
+    }
+
+    #[test]
+    fn ckpt_section_defaults_and_path_resolution() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert_eq!(cfg.ckpt.every, 0, "checkpointing must be opt-in");
+        assert_eq!(cfg.ckpt.resume_path("results", "t"), "results/t.resume");
+
+        let text = format!("{MINIMAL}\n[ckpt]\nevery = 5\npath = \"results/custom.resume\"\n");
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert_eq!(cfg.ckpt.every, 5);
+        assert_eq!(cfg.ckpt.resume_path("results", "t"), "results/custom.resume");
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Crash-consistent training checkpoint/resume (`[ckpt]`).
+//!
+//! [`save`] snapshots everything a [`crate::coordinator::scheduler::Trainer`]
+//! needs to continue a killed run **bit-identically** (pinned by
+//! `rust/tests/fault_golden.rs`): parameters + optimizer moments, the
+//! frozen base and KL-reference vectors, the simulated clock, the
+//! pipelined executor's overlap state, the replay store, both recorder
+//! CSVs, and — when a pipelined prefetch was in flight at the snapshot —
+//! the behaviour parameters it was decoding with, so resume can
+//! regenerate the exact same one-step-off-policy rollouts (per-row
+//! counter RNG makes regeneration bit-exact).
+//!
+//! Crash consistency: the state serializes to a temp file that is
+//! atomically renamed over the target, and the payload carries an
+//! FNV-1a-64 checksum trailer — a torn or corrupted file fails [`load`]
+//! loudly instead of resuming from garbage. Recorder rows serialize as
+//! their CSV text: Rust's shortest-roundtrip float formatting makes
+//! `parse ∘ format` the identity, so the resumed run's CSVs are
+//! byte-identical to the uninterrupted run's.
+
+use crate::coordinator::replay::{RowId, StoredRow};
+use crate::coordinator::group::RolloutRecord;
+use crate::metrics::{CsvRow, EvalRow, IterRow};
+use crate::reward::RewardBreakdown;
+use crate::runtime::ParamStore;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PODSRSM1";
+const VERSION: u32 = 1;
+
+/// An in-flight pipelined prefetch at snapshot time: the iteration it
+/// generates and the behaviour snapshot (pre-update policy) it decodes
+/// with.
+#[derive(Debug, Clone)]
+pub struct InflightGen {
+    /// Iteration the prefetch generates rollouts for.
+    pub iter: usize,
+    /// Full-parameter behaviour vector (the frozen base in LoRA mode).
+    pub params: Vec<f32>,
+    /// Behaviour adapter vector (LoRA profiles only).
+    pub lora: Option<Vec<f32>>,
+}
+
+/// The complete resumable state of a training run at an iteration
+/// boundary ("iterations `0..next_iter` are done, evals included").
+#[derive(Debug, Clone)]
+pub struct ResumeState {
+    /// Artifact profile the run trains (resume sanity check).
+    pub profile: String,
+    /// Run name (resume sanity check).
+    pub run_name: String,
+    /// Master seed (resume sanity check — a different seed would silently
+    /// splice two unrelated histories).
+    pub run_seed: u64,
+    /// First iteration the resumed run executes.
+    pub next_iter: usize,
+    /// Logical prompt cursor at the boundary — `next_iter ×
+    /// prompts_per_iter`, **before** any prefetch advance (restore
+    /// re-applies it when rebuilding the in-flight batch).
+    pub prompt_cursor: u64,
+    /// Simulated clock position.
+    pub clock_now: f64,
+    /// Accumulated overlap savings of the simulated clock.
+    pub clock_overlap_saved: f64,
+    /// Previous iteration's simulated update time (what a restored
+    /// prefetch overlaps with).
+    pub last_update_time: f64,
+    /// Trainable parameters + Adam moments + step counter.
+    pub store: ParamStore,
+    /// Frozen full-parameter base (LoRA profiles only).
+    pub base: Option<Vec<f32>>,
+    /// KL-reference parameters (when `algo.kl_coef > 0`).
+    pub ref_params: Option<Vec<f32>>,
+    /// KL-reference adapter vector.
+    pub ref_lora: Option<Vec<f32>>,
+    /// In-flight pipelined prefetch, if one existed at snapshot time.
+    pub inflight: Option<InflightGen>,
+    /// Replay-store contents in canonical `RowId` order.
+    pub replay_rows: Vec<StoredRow>,
+    /// Recorder training rows (serialized as CSV text).
+    pub iter_rows: Vec<IterRow>,
+    /// Recorder eval rows (serialized as CSV text).
+    pub eval_rows: Vec<EvalRow>,
+}
+
+// ---- byte-stream primitives -------------------------------------------
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn vec_f32(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+    fn vec_i32(&mut self, v: &[i32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.i32(x);
+        }
+    }
+    fn opt_vec_f32(&mut self, v: Option<&[f32]>) {
+        match v {
+            Some(v) => {
+                self.u8(1);
+                self.vec_f32(v);
+            }
+            None => self.u8(0),
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("resume file truncated at byte {} (wanted {n} more)", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        // a length can never exceed what's left in the file — rejects
+        // corrupt lengths before they turn into giant allocations
+        if n > (self.buf.len() - self.pos) as u64 {
+            bail!("resume file corrupt: length {n} exceeds remaining payload");
+        }
+        Ok(n as usize)
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.len()?;
+        Ok(std::str::from_utf8(self.take(n)?).context("resume string not UTF-8")?.to_string())
+    }
+    fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.len()?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+    fn vec_i32(&mut self) -> Result<Vec<i32>> {
+        let n = self.len()?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.i32()?);
+        }
+        Ok(v)
+    }
+    fn opt_vec_f32(&mut self) -> Result<Option<Vec<f32>>> {
+        Ok(match self.u8()? {
+            0 => None,
+            _ => Some(self.vec_f32()?),
+        })
+    }
+}
+
+fn put_stored_row(e: &mut Enc, r: &StoredRow) {
+    e.u64(r.id.iter);
+    e.u64(r.id.prompt_id);
+    e.u32(r.id.rollout_idx);
+    e.f32(r.score);
+    e.f32(r.advantage);
+    put_record(e, &r.record);
+}
+
+fn put_record(e: &mut Enc, r: &RolloutRecord) {
+    e.vec_i32(&r.tokens);
+    e.i32(r.pad_len);
+    e.vec_f32(&r.gen_mask);
+    e.vec_f32(&r.old_lp);
+    e.vec_f32(&r.ref_lp);
+    e.i32(r.gen_len);
+    e.f32(r.reward.accuracy);
+    e.f32(r.reward.format);
+    e.f32(r.reward.tag_count);
+    e.f32(r.total_reward);
+    e.u8(u8::from(r.pruned));
+}
+
+fn get_stored_row(d: &mut Dec) -> Result<StoredRow> {
+    Ok(StoredRow {
+        id: RowId { iter: d.u64()?, prompt_id: d.u64()?, rollout_idx: d.u32()? },
+        score: d.f32()?,
+        advantage: d.f32()?,
+        record: get_record(d)?,
+    })
+}
+
+fn get_record(d: &mut Dec) -> Result<RolloutRecord> {
+    Ok(RolloutRecord {
+        tokens: d.vec_i32()?,
+        pad_len: d.i32()?,
+        gen_mask: d.vec_f32()?,
+        old_lp: d.vec_f32()?,
+        ref_lp: d.vec_f32()?,
+        gen_len: d.i32()?,
+        reward: RewardBreakdown {
+            accuracy: d.f32()?,
+            format: d.f32()?,
+            tag_count: d.f32()?,
+        },
+        total_reward: d.f32()?,
+        pruned: d.u8()? != 0,
+    })
+}
+
+// ---- save / load -------------------------------------------------------
+
+/// Serialize `st` to `path` crash-consistently: write-temp, fsync via the
+/// file close, then atomic rename. The payload ends with an FNV-1a-64
+/// checksum so partial or bit-rotted files are rejected on load.
+pub fn save(path: &Path, st: &ResumeState) -> Result<()> {
+    let mut e = Enc::default();
+    e.u32(VERSION);
+    e.str(&st.profile);
+    e.str(&st.run_name);
+    e.u64(st.run_seed);
+    e.u64(st.next_iter as u64);
+    e.u64(st.prompt_cursor);
+    e.f64(st.clock_now);
+    e.f64(st.clock_overlap_saved);
+    e.f64(st.last_update_time);
+    e.i32(st.store.step);
+    e.vec_f32(&st.store.params);
+    e.vec_f32(&st.store.m);
+    e.vec_f32(&st.store.v);
+    e.opt_vec_f32(st.base.as_deref());
+    e.opt_vec_f32(st.ref_params.as_deref());
+    e.opt_vec_f32(st.ref_lora.as_deref());
+    match &st.inflight {
+        Some(inf) => {
+            e.u8(1);
+            e.u64(inf.iter as u64);
+            e.vec_f32(&inf.params);
+            e.opt_vec_f32(inf.lora.as_deref());
+        }
+        None => e.u8(0),
+    }
+    e.u64(st.replay_rows.len() as u64);
+    for r in &st.replay_rows {
+        put_stored_row(&mut e, r);
+    }
+    e.u64(st.iter_rows.len() as u64);
+    for r in &st.iter_rows {
+        e.str(&r.csv_row());
+    }
+    e.u64(st.eval_rows.len() as u64);
+    for r in &st.eval_rows {
+        e.str(&r.csv_row());
+    }
+    let checksum = fnv1a(&e.buf);
+    let mut out = Vec::with_capacity(MAGIC.len() + e.buf.len() + 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&e.buf);
+    out.extend_from_slice(&checksum.to_le_bytes());
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &out).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+/// Load and verify a resume file written by [`save`].
+pub fn load(path: &Path) -> Result<ResumeState> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading resume file {path:?}"))?;
+    if bytes.len() < MAGIC.len() + 8 || &bytes[..MAGIC.len()] != MAGIC {
+        bail!("{path:?} is not a pods resume file");
+    }
+    let payload = &bytes[MAGIC.len()..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let computed = fnv1a(payload);
+    if stored != computed {
+        bail!(
+            "resume file {path:?} failed its checksum \
+             (stored {stored:#018x}, computed {computed:#018x}) — torn write or corruption"
+        );
+    }
+    let mut d = Dec { buf: payload, pos: 0 };
+    let version = d.u32()?;
+    if version != VERSION {
+        bail!("resume file version {version} unsupported (expected {VERSION})");
+    }
+    let profile = d.str()?;
+    let run_name = d.str()?;
+    let run_seed = d.u64()?;
+    let next_iter = d.u64()? as usize;
+    let prompt_cursor = d.u64()?;
+    let clock_now = d.f64()?;
+    let clock_overlap_saved = d.f64()?;
+    let last_update_time = d.f64()?;
+    let step = d.i32()?;
+    let params = d.vec_f32()?;
+    let m = d.vec_f32()?;
+    let v = d.vec_f32()?;
+    let store = ParamStore { params, m, v, step };
+    let base = d.opt_vec_f32()?;
+    let ref_params = d.opt_vec_f32()?;
+    let ref_lora = d.opt_vec_f32()?;
+    let inflight = match d.u8()? {
+        0 => None,
+        _ => Some(InflightGen {
+            iter: d.u64()? as usize,
+            params: d.vec_f32()?,
+            lora: d.opt_vec_f32()?,
+        }),
+    };
+    let n_replay = d.len()?;
+    let mut replay_rows = Vec::with_capacity(n_replay);
+    for _ in 0..n_replay {
+        replay_rows.push(get_stored_row(&mut d)?);
+    }
+    let n_iter = d.len()?;
+    let mut iter_rows = Vec::with_capacity(n_iter);
+    for _ in 0..n_iter {
+        iter_rows.push(IterRow::from_csv_row(&d.str()?)?);
+    }
+    let n_eval = d.len()?;
+    let mut eval_rows = Vec::with_capacity(n_eval);
+    for _ in 0..n_eval {
+        eval_rows.push(EvalRow::from_csv_row(&d.str()?)?);
+    }
+    if d.pos != d.buf.len() {
+        bail!("resume file has {} trailing bytes after the payload", d.buf.len() - d.pos);
+    }
+    Ok(ResumeState {
+        profile,
+        run_name,
+        run_seed,
+        next_iter,
+        prompt_cursor,
+        clock_now,
+        clock_overlap_saved,
+        last_update_time,
+        store,
+        base,
+        ref_params,
+        ref_lora,
+        inflight,
+        replay_rows,
+        iter_rows,
+        eval_rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> ResumeState {
+        let rec = RolloutRecord {
+            tokens: vec![1, 2, 3, 4],
+            pad_len: 1,
+            gen_mask: vec![1.0, 1.0, 0.0],
+            old_lp: vec![-0.5, -0.25, 0.0],
+            ref_lp: vec![0.0; 3],
+            gen_len: 2,
+            reward: RewardBreakdown { accuracy: 1.0, format: 0.5, tag_count: 0.25 },
+            total_reward: 1.75,
+            pruned: false,
+        };
+        ResumeState {
+            profile: "micro".into(),
+            run_name: "t".into(),
+            run_seed: 42,
+            next_iter: 5,
+            prompt_cursor: 40,
+            clock_now: 123.456,
+            clock_overlap_saved: 7.5,
+            last_update_time: 2.25,
+            store: ParamStore {
+                params: vec![1.0, -2.5, 0.125],
+                m: vec![0.5; 3],
+                v: vec![0.25; 3],
+                step: 5,
+            },
+            base: Some(vec![9.0, 8.0]),
+            ref_params: Some(vec![1.5; 3]),
+            ref_lora: None,
+            inflight: Some(InflightGen { iter: 5, params: vec![0.5, 0.75], lora: None }),
+            replay_rows: vec![StoredRow {
+                id: RowId { iter: 3, prompt_id: 17, rollout_idx: 2 },
+                score: 0.5,
+                advantage: -1.25,
+                record: rec,
+            }],
+            iter_rows: vec![IterRow {
+                iter: 4,
+                sim_time: 100.0 / 3.0,
+                schedule: "pipelined".into(),
+                ..Default::default()
+            }],
+            eval_rows: vec![EvalRow {
+                iter: 4,
+                sim_time: 100.0 / 3.0,
+                real_time: 0.25,
+                split: "test".into(),
+                accuracy: 0.625,
+                format_rate: 1.0,
+                mean_reward: 2.0,
+                mean_len: 30.0,
+                problems: 64,
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrips_bitwise() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("t.resume");
+        let st = sample_state();
+        save(&path, &st).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.profile, st.profile);
+        assert_eq!(back.run_seed, st.run_seed);
+        assert_eq!(back.next_iter, st.next_iter);
+        assert_eq!(back.prompt_cursor, st.prompt_cursor);
+        assert_eq!(back.clock_now.to_bits(), st.clock_now.to_bits());
+        assert_eq!(back.clock_overlap_saved.to_bits(), st.clock_overlap_saved.to_bits());
+        assert_eq!(back.last_update_time.to_bits(), st.last_update_time.to_bits());
+        assert_eq!(back.store.params, st.store.params);
+        assert_eq!(back.store.m, st.store.m);
+        assert_eq!(back.store.v, st.store.v);
+        assert_eq!(back.store.step, st.store.step);
+        assert_eq!(back.base, st.base);
+        assert_eq!(back.ref_params, st.ref_params);
+        assert_eq!(back.ref_lora, st.ref_lora);
+        let inf = back.inflight.unwrap();
+        assert_eq!(inf.iter, 5);
+        assert_eq!(inf.params, vec![0.5, 0.75]);
+        assert_eq!(back.replay_rows.len(), 1);
+        assert_eq!(back.replay_rows[0].id, st.replay_rows[0].id);
+        assert_eq!(back.replay_rows[0].record.tokens, st.replay_rows[0].record.tokens);
+        assert_eq!(back.replay_rows[0].record.old_lp, st.replay_rows[0].record.old_lp);
+        // CSV rows re-emit the exact lines the killed run would have
+        assert_eq!(back.iter_rows[0].csv_row(), st.iter_rows[0].csv_row());
+        assert_eq!(back.eval_rows[0].csv_row(), st.eval_rows[0].csv_row());
+    }
+
+    #[test]
+    fn rejects_corruption_and_truncation() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("t.resume");
+        save(&path, &sample_state()).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // flip one payload bit -> checksum failure
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+
+        // torn write (file cut short) -> rejected, never a partial resume
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+
+        // wrong magic
+        std::fs::write(&path, b"not a resume file at all............").unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a pods resume file"), "unexpected error: {err}");
+    }
+}

@@ -155,6 +155,18 @@ pub struct StepReport {
     /// Peak bytes resident in the modeled paged KV pool (max over worker
     /// shards — pools are per device).
     pub kv_peak_bytes: u64,
+    /// Row-attempt faults the `[faults]` schedule injected this iteration
+    /// (0 with the section disabled).
+    pub faults_injected: usize,
+    /// Physical shard retries submitted this iteration (a partition
+    /// detail, like call counts — may vary with the worker count).
+    pub shard_retries: usize,
+    /// Rollout rows lost after exhausting `faults.max_retries`.
+    pub rows_lost: usize,
+    /// Simulated time this iteration spent on fault handling: retry
+    /// backoff + work wasted by crashed attempts + straggler slowdown.
+    /// Included in `sim_inference`.
+    pub retry_time: f64,
 }
 
 /// The schedule-aware driver for one training run.
@@ -202,6 +214,47 @@ impl TrainLoop {
         &self.replay
     }
 
+    // ---- Resume hooks (`coordinator::ckpt`) ---------------------------
+    // A crash-consistent resume must reconstruct the three pieces of
+    // executor state a fresh TrainLoop lacks: the replay store, the
+    // previous update time (what a prefetched inference overlaps with),
+    // and — under the pipelined schedule — the in-flight prefetch itself.
+
+    /// Replace the replay store wholesale (checkpoint restore).
+    pub fn set_replay(&mut self, store: ReplayStore) {
+        self.replay = store;
+    }
+
+    /// Previous iteration's simulated update time (checkpoint save).
+    pub fn last_update_time(&self) -> f64 {
+        self.last_update_time
+    }
+
+    /// Restore the previous update time (checkpoint restore) so the first
+    /// resumed iteration charges the same overlap as the uninterrupted
+    /// run would have.
+    pub fn set_last_update_time(&mut self, t: f64) {
+        self.last_update_time = t;
+    }
+
+    /// The in-flight pipelined prefetch, if any: which iteration it is
+    /// for and the behaviour snapshot it decodes with (checkpoint save
+    /// stores the snapshot's params so resume can regenerate the exact
+    /// same one-step-off-policy rollouts).
+    pub fn pending_info(&self) -> Option<(usize, &GenBatch)> {
+        self.pending.as_ref().map(|(i, p)| (*i, p.batch()))
+    }
+
+    /// Resubmit a prefetch for `iter` from a reconstructed behaviour
+    /// snapshot (checkpoint restore). The rollout pool regenerates the
+    /// batch from scratch — per-row counter RNG makes the streams
+    /// bit-identical to the ones the killed run had in flight.
+    pub fn restore_pending(&mut self, iter: usize, br: usize, batch: GenBatch) -> Result<()> {
+        let pending = self.rollout.submit(br, batch)?;
+        self.pending = Some((iter, pending));
+        Ok(())
+    }
+
     /// One full Algorithm-1 step for `iter`. `prefetch_next` permits the
     /// pipelined schedule to start generating `iter + 1` while this
     /// step's update runs (the driver passes `false` on the final
@@ -239,6 +292,29 @@ impl TrainLoop {
             }
         };
         let rollouts_generated = gen_stats.rollouts;
+
+        // ---- Graceful-degradation floor -------------------------------
+        // Rows lost to exhausted retries leave gaps in their groups; the
+        // selector clamps `m` to what survived. Below the configured
+        // survivor floor a group's advantage estimate is too degenerate to
+        // train on — fail the iteration loudly instead of degrading
+        // silently.
+        if cfg.faults.enabled {
+            let floor = cfg.faults.min_group_survivors;
+            for g in &groups {
+                if g.rollouts.len() < floor {
+                    bail!(
+                        "fault degradation floor violated: group (problem {}) kept only {} \
+                         of {} rollouts after retries, below faults.min_group_survivors = {} \
+                         — raise faults.max_retries or lower the fault rates",
+                        g.problem.id,
+                        g.rollouts.len(),
+                        cfg.algo.n,
+                        floor
+                    );
+                }
+            }
+        }
         // chunk-granular charging: a chunk runs to completion even when a
         // row finishes mid-chunk, so each rollout's decode time rounds up
         // to the configured chunk size (per-rollout lengths are partition-
@@ -272,6 +348,19 @@ impl TrainLoop {
         } else {
             cfg.hwsim.pruned_inference_time(&gen_lens, &pruned_lens, cfg.rollout.decode_chunk)
         };
+        // Fault-handling charge, accounted per ROW (backoff per faulted
+        // row-attempt, one generation budget of wasted decode per crashed
+        // attempt at the solo per-token rate, straggler slowdown as the
+        // extra (factor - 1)x time over the afflicted rows' chunk-rounded
+        // tokens at the floor rate) — never per physical shard, so it is
+        // partition-invariant like the rest of the clock, and exactly
+        // zero with `[faults]` disabled.
+        let retry_time = gen_stats.fault_backoff_time
+            + gen_stats.fault_wasted_tokens as f64 * cfg.hwsim.per_token_time(1)
+            + (cfg.faults.straggler_factor - 1.0).max(0.0)
+                * gen_stats.straggler_tokens as f64
+                * cfg.hwsim.tok_time_floor;
+        let sim_inference = sim_inference + retry_time;
 
         // ---- Phase 2: select + advantages -----------------------------
         let (selected, sel_stats) = build_update_batch(
@@ -384,6 +473,10 @@ impl TrainLoop {
             prefill_calls: gen_stats.prefill_calls,
             prefill_calls_saved: gen_stats.prefill_calls_saved,
             kv_peak_bytes: gen_stats.kv_peak_bytes,
+            faults_injected: gen_stats.faults_injected,
+            shard_retries: gen_stats.shard_retries,
+            rows_lost: gen_stats.rows_lost,
+            retry_time,
         })
     }
 }
@@ -400,14 +493,45 @@ impl TrainLoop {
 /// snapshot also seeds one [`GroupVerdicts`] aggregator for the batch —
 /// fresh per iteration, shared by every worker shard.
 fn snapshot_batch(ctx: &StepCtx, iter: usize) -> GenBatch {
-    let cfg = ctx.cfg;
     let full: &[f32] = match ctx.base {
         Some(b) => b,
         None => &ctx.store.params,
     };
     let lora: Option<&[f32]> =
         if ctx.engine.meta.is_lora() { Some(&ctx.store.params) } else { None };
-    let problems = ctx.task.batch(Split::Train, *ctx.prompt_cursor, cfg.run.prompts_per_iter);
+    build_gen_batch(
+        ctx.cfg,
+        ctx.engine,
+        ctx.pipeline,
+        ctx.task,
+        ctx.ref_params.clone(),
+        ctx.ref_lora.clone(),
+        Arc::new(full.to_vec()),
+        lora.map(|l| Arc::new(l.to_vec())),
+        *ctx.prompt_cursor,
+        iter,
+    )
+}
+
+/// The shared core of [`snapshot_batch`] and checkpoint restore
+/// (`coordinator::ckpt` rebuilds an in-flight prefetch from saved
+/// behaviour parameters): one construction site for the online-verdict
+/// gate, the KV policy and the fault plan guarantees both paths produce
+/// identical batches for identical inputs.
+#[allow(clippy::too_many_arguments)]
+pub fn build_gen_batch(
+    cfg: &RunConfig,
+    engine: &Engine,
+    pipeline: &Pipeline,
+    task: TaskKind,
+    ref_params: Option<Arc<Vec<f32>>>,
+    ref_lora: Option<Arc<Vec<f32>>>,
+    params: Arc<Vec<f32>>,
+    lora: Option<Arc<Vec<f32>>>,
+    cursor: u64,
+    iter: usize,
+) -> GenBatch {
+    let problems = task.batch(Split::Train, cursor, cfg.run.prompts_per_iter);
     let weights = RewardWeights::default();
     let m = match cfg.algo_kind() {
         AlgoKind::GrpoPods => cfg.algo.m,
@@ -419,27 +543,21 @@ fn snapshot_batch(ctx: &StepCtx, iter: usize) -> GenBatch {
     // programmatically-built configs.
     let online = match m {
         Some(m) if cfg.rollout.online_prune && cfg.norm_mode() == NormMode::After => {
-            Some(Arc::new(GroupVerdicts::new(
-                ctx.pipeline,
-                problems.len(),
-                cfg.algo.n,
-                m,
-                &weights,
-            )))
+            Some(Arc::new(GroupVerdicts::new(pipeline, problems.len(), cfg.algo.n, m, &weights)))
         }
         _ => None,
     };
     GenBatch {
-        params: Arc::new(full.to_vec()),
-        lora: lora.map(|l| Arc::new(l.to_vec())),
-        ref_params: ctx.ref_params.clone(),
-        ref_lora: ctx.ref_lora.clone(),
+        params,
+        lora,
+        ref_params,
+        ref_lora,
         problems: Arc::new(problems),
         n: cfg.algo.n,
         temperature: cfg.algo.temperature as f32,
         run_seed: cfg.run.seed,
         iter: iter as u64,
-        task: ctx.task,
+        task,
         weights,
         decode_chunk: cfg.rollout.decode_chunk,
         refill: cfg.rollout.refill,
@@ -447,8 +565,9 @@ fn snapshot_batch(ctx: &StepCtx, iter: usize) -> GenBatch {
         kv: KvPolicy::from_model(
             &cfg.hwsim,
             cfg.rollout.share_prompt_kv,
-            ctx.engine.meta.config.prompt_len,
-            ctx.engine.meta.config.seq_len - ctx.engine.meta.config.prompt_len,
+            engine.meta.config.prompt_len,
+            engine.meta.config.seq_len - engine.meta.config.prompt_len,
         ),
+        faults: cfg.faults.plan(cfg.run.seed),
     }
 }

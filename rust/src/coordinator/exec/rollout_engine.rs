@@ -24,12 +24,28 @@
 //! change what any rollout samples. `workers = 16` produces bit-identical
 //! rollouts to `workers = 1`; only the call-count/decoded-token telemetry
 //! (how the physical work was batched) varies with the partition.
+//!
+//! **Fault tolerance** (`[faults]`): when a [`FaultPlan`] rides in the
+//! batch, each row-attempt consults the seeded fault schedule *before*
+//! decoding — faulted rows are withheld from the attempt and resubmitted
+//! as retry jobs (fresh shard indices, `attempt + 1`) up to
+//! `faults.max_retries`, after which they count as lost. Because the
+//! schedule keys on row identity — never on the physical shard — and
+//! retried rows replay their private counter-based streams bit-exactly,
+//! the surviving rollouts are identical across worker-pool sizes. Real
+//! shard errors (panics, engine failures) reuse the same retry path;
+//! a [`KvAdmissionError`] is a deterministic pathology that retrying
+//! cannot fix, so its rows are lost immediately (accounted as admission
+//! faults). With `[faults]` disabled every error stays loud, exactly as
+//! before.
 
 use crate::coordinator::group::PromptGroup;
 use crate::coordinator::select::online::GroupVerdicts;
+use crate::hwsim::{FaultKind, FaultPlan};
 use crate::reward::RewardWeights;
 use crate::rollout::{
-    execute_rows, plan_rows, CallRollout, InferenceStats, KvPolicy, RefillMode, RowSpec,
+    execute_rows, plan_rows, CallRollout, InferenceStats, KvAdmissionError, KvPolicy, RefillMode,
+    RowSpec,
 };
 use crate::runtime::Engine;
 use crate::tasks::{Problem, TaskKind};
@@ -80,22 +96,46 @@ pub struct GenBatch {
     /// paged-pool model). Each worker shard runs its own pool ledger;
     /// `KvPolicy::default()` is the legacy per-row-prefill path.
     pub kv: KvPolicy,
+    /// Seeded fault schedule (`[faults]`); `None` disables injection and
+    /// keeps every executor error loud.
+    pub faults: Option<FaultPlan>,
 }
 
 /// One queued shard of generation rows for a worker thread.
 struct Job {
     batch_id: u64,
     shard_idx: usize,
+    /// Which execution attempt this job is (0 = first, 1.. = retries).
+    attempt: usize,
     rows: Vec<RowSpec>,
     batch: Arc<GenBatch>,
 }
 
-type ShardOut = (Vec<CallRollout>, InferenceStats);
-type ShardResult = (u64, usize, Result<ShardOut>);
+/// One shard attempt's outcome: finished rollouts, its stats, and the
+/// rows the fault schedule withheld from this attempt (to be retried or
+/// declared lost by the caller).
+type ShardOut = (Vec<CallRollout>, InferenceStats, Vec<RowSpec>);
+
+/// What a worker thread reports back.
+enum WorkerMsg {
+    /// A shard attempt completed (successfully or not). `rows` echoes the
+    /// job's row set so the caller can retry a failed attempt.
+    Shard {
+        batch_id: u64,
+        attempt: usize,
+        rows: Vec<RowSpec>,
+        result: Result<ShardOut>,
+    },
+    /// The worker thread itself is gone (e.g. it observed a poisoned
+    /// work-queue lock). Previously this was a silent `return` that could
+    /// leave `collect()` waiting forever; now lost capacity is always
+    /// visible.
+    WorkerLost { reason: String },
+}
 
 struct Pool {
     job_tx: mpsc::Sender<Job>,
-    result_rx: mpsc::Receiver<ShardResult>,
+    result_rx: mpsc::Receiver<WorkerMsg>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -105,6 +145,15 @@ pub struct PendingGen {
     batch_id: u64,
     shards: usize,
     batch: Arc<GenBatch>,
+}
+
+impl PendingGen {
+    /// The snapshot the in-flight generation decodes with (checkpointing
+    /// reads the behaviour params out of it to make pipelined resume
+    /// bit-exact).
+    pub fn batch(&self) -> &GenBatch {
+        &self.batch
+    }
 }
 
 /// A pool of rollout worker threads, each owning an engine replica.
@@ -173,7 +222,7 @@ impl RolloutEngine {
             let threads = self.workers.clamp(1, cores.max(1));
             let (job_tx, job_rx) = mpsc::channel::<Job>();
             let job_rx = Arc::new(Mutex::new(job_rx));
-            let (res_tx, result_rx) = mpsc::channel::<ShardResult>();
+            let (res_tx, result_rx) = mpsc::channel::<WorkerMsg>();
             let mut handles = Vec::with_capacity(threads);
             for w in 0..threads {
                 let rx = Arc::clone(&job_rx);
@@ -201,9 +250,9 @@ impl RolloutEngine {
         let rows = plan_rows(&batch.problems, batch.n, batch.run_seed, batch.iter);
         if self.workers <= 1 {
             // inline: one continuous queue over all rows — no replica, no
-            // thread hop, maximal refill packing
-            let out = run_shard(engine, &batch, &rows)?;
-            return Ok(assemble(&batch, vec![out]));
+            // thread hop, maximal refill packing. Retries loop locally
+            // with the same semantics as the pool path.
+            return generate_inline(engine, &batch, rows);
         }
         let br = engine.meta.config.rollout_batch;
         let pending = self.submit_rows(rows, Arc::new(batch), br)?;
@@ -235,15 +284,18 @@ impl RolloutEngine {
         let pool = self.ensure_pool()?;
         for (shard_idx, rows) in shards.into_iter().enumerate() {
             pool.job_tx
-                .send(Job { batch_id, shard_idx, rows, batch: Arc::clone(&batch) })
+                .send(Job { batch_id, shard_idx, attempt: 0, rows, batch: Arc::clone(&batch) })
                 .map_err(|_| anyhow!("rollout worker threads exited; pool is gone"))?;
         }
         self.in_flight = true;
         Ok(PendingGen { batch_id, shards: n_shards, batch })
     }
 
-    /// Block until every shard of `pending` finished and assemble the
-    /// groups in plan order (independent of worker completion order).
+    /// Block until every shard of `pending` finished (retrying failed
+    /// shards up to `faults.max_retries` when fault injection is on) and
+    /// assemble the groups in canonical plan order — rollouts sort by
+    /// their in-group index, so worker completion order and retry timing
+    /// cannot reorder anything.
     pub fn collect(&mut self, pending: PendingGen) -> Result<(Vec<PromptGroup>, InferenceStats)> {
         // collect() consumes the in-flight batch whatever happens next —
         // a broken pool must surface its own error on later submits, not
@@ -253,25 +305,105 @@ impl RolloutEngine {
             .pool
             .as_ref()
             .ok_or_else(|| anyhow!("collect without a running pool"))?;
-        let mut slots: Vec<Option<Result<ShardOut>>> =
-            (0..pending.shards).map(|_| None).collect();
-        let mut got = 0;
-        while got < pending.shards {
-            let (bid, idx, res) = pool
-                .result_rx
-                .recv()
-                .map_err(|_| anyhow!("rollout workers hung up mid-batch"))?;
-            if bid != pending.batch_id {
-                continue; // stragglers of a discarded batch
+        let plan = pending.batch.faults.clone();
+        let mut alive = pool.handles.len();
+        let mut outstanding = pending.shards;
+        let mut next_shard_idx = pending.shards; // fresh indices for retry jobs
+        let mut kept: Vec<CallRollout> = Vec::new();
+        let mut stats = InferenceStats::default();
+        let mut last_lost_reason = String::new();
+        while outstanding > 0 {
+            let msg = if alive > 0 {
+                pool.result_rx
+                    .recv()
+                    .map_err(|_| anyhow!("rollout workers hung up mid-batch"))?
+            } else {
+                // no worker remains to produce results: drain what is
+                // already buffered, then fail loudly on the missing shards
+                match pool.result_rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => bail!(
+                        "all rollout workers lost ({last_lost_reason}); \
+                         {outstanding} shard(s) never completed"
+                    ),
+                }
+            };
+            let (attempt, rows, result) = match msg {
+                WorkerMsg::WorkerLost { reason } => {
+                    alive = alive.saturating_sub(1);
+                    last_lost_reason = reason;
+                    continue;
+                }
+                WorkerMsg::Shard { batch_id, attempt, rows, result } => {
+                    if batch_id != pending.batch_id {
+                        continue; // stragglers of a discarded batch
+                    }
+                    (attempt, rows, result)
+                }
+            };
+            outstanding -= 1;
+            match result {
+                Ok((shard_kept, shard_stats, failed)) => {
+                    stats.absorb(&shard_stats);
+                    kept.extend(shard_kept);
+                    if failed.is_empty() {
+                        continue;
+                    }
+                    match &plan {
+                        Some(p) if attempt < p.cfg.max_retries => {
+                            stats.shard_retries += 1;
+                            pool.job_tx
+                                .send(Job {
+                                    batch_id: pending.batch_id,
+                                    shard_idx: next_shard_idx,
+                                    attempt: attempt + 1,
+                                    rows: failed,
+                                    batch: Arc::clone(&pending.batch),
+                                })
+                                .map_err(|_| {
+                                    anyhow!("rollout worker threads exited mid-retry")
+                                })?;
+                            next_shard_idx += 1;
+                            outstanding += 1;
+                        }
+                        _ => stats.rows_lost += failed.len(),
+                    }
+                }
+                Err(e) => match &plan {
+                    // no fault layer: every shard error stays loud
+                    None => return Err(e.context("rollout shard failed")),
+                    Some(p) => {
+                        if e.downcast_ref::<KvAdmissionError>().is_some() {
+                            // deterministic pathology — the pool can never
+                            // hold the row, so retrying cannot help; the
+                            // rows are lost as admission faults and the
+                            // min_group_survivors floor decides loudness
+                            stats.faults_injected += rows.len();
+                            stats.rows_lost += rows.len();
+                        } else if attempt < p.cfg.max_retries {
+                            stats.shard_retries += 1;
+                            stats.fault_backoff_time += p.backoff(attempt);
+                            pool.job_tx
+                                .send(Job {
+                                    batch_id: pending.batch_id,
+                                    shard_idx: next_shard_idx,
+                                    attempt: attempt + 1,
+                                    rows,
+                                    batch: Arc::clone(&pending.batch),
+                                })
+                                .map_err(|_| {
+                                    anyhow!("rollout worker threads exited mid-retry")
+                                })?;
+                            next_shard_idx += 1;
+                            outstanding += 1;
+                        } else {
+                            stats.rows_lost += rows.len();
+                        }
+                    }
+                },
             }
-            slots[idx] = Some(res);
-            got += 1;
         }
-        let mut outs = Vec::with_capacity(slots.len());
-        for s in slots {
-            outs.push(s.expect("all slots filled")?);
-        }
-        Ok(assemble(&pending.batch, outs))
+        Ok(assemble(&pending.batch, kept, stats))
     }
 }
 
@@ -287,10 +419,98 @@ impl Drop for RolloutEngine {
     }
 }
 
+/// The inline (workers <= 1) generation path with the same
+/// retry/degradation semantics as the pool path.
+fn generate_inline(
+    engine: &Engine,
+    batch: &GenBatch,
+    rows: Vec<RowSpec>,
+) -> Result<(Vec<PromptGroup>, InferenceStats)> {
+    let mut stats = InferenceStats::default();
+    let mut kept: Vec<CallRollout> = Vec::new();
+    let mut pending_rows = rows;
+    let mut attempt = 0usize;
+    loop {
+        match run_shard(engine, batch, &pending_rows, attempt) {
+            Ok((k, s, failed)) => {
+                stats.absorb(&s);
+                kept.extend(k);
+                if failed.is_empty() {
+                    break;
+                }
+                match &batch.faults {
+                    Some(p) if attempt < p.cfg.max_retries => {
+                        stats.shard_retries += 1;
+                        pending_rows = failed;
+                        attempt += 1;
+                    }
+                    _ => {
+                        stats.rows_lost += failed.len();
+                        break;
+                    }
+                }
+            }
+            Err(e) => match &batch.faults {
+                None => return Err(e),
+                Some(p) => {
+                    if e.downcast_ref::<KvAdmissionError>().is_some() {
+                        stats.faults_injected += pending_rows.len();
+                        stats.rows_lost += pending_rows.len();
+                        break;
+                    } else if attempt < p.cfg.max_retries {
+                        stats.shard_retries += 1;
+                        stats.fault_backoff_time += p.backoff(attempt);
+                        attempt += 1;
+                    } else {
+                        stats.rows_lost += pending_rows.len();
+                        break;
+                    }
+                }
+            },
+        }
+    }
+    Ok(assemble(batch, kept, stats))
+}
+
 /// Execute one row shard against an engine (worker replica or the
-/// trainer's own engine on the inline path).
-fn run_shard(engine: &Engine, batch: &GenBatch, rows: &[RowSpec]) -> Result<ShardOut> {
-    execute_rows(
+/// trainer's own engine on the inline path). With a fault plan in the
+/// batch, each row's fate at `attempt` is drawn **before** decoding:
+/// faulted rows are withheld (returned for retry) so a row is only ever
+/// observed by the online-pruning verdicts on the attempt that actually
+/// decodes it, and straggler rows accumulate their slowdown charge.
+fn run_shard(
+    engine: &Engine,
+    batch: &GenBatch,
+    rows: &[RowSpec],
+    attempt: usize,
+) -> Result<ShardOut> {
+    let mut fault_stats = InferenceStats::default();
+    let mut healthy: Vec<RowSpec> = Vec::with_capacity(rows.len());
+    let mut failed: Vec<RowSpec> = Vec::new();
+    if let Some(plan) = &batch.faults {
+        let g = engine.meta.gen_len;
+        for &r in rows {
+            let pid = batch.problems[r.group_idx].id;
+            match plan.row_fault(batch.iter, pid, r.rollout_idx as u64, attempt) {
+                None => healthy.push(r),
+                Some(kind) => {
+                    fault_stats.faults_injected += 1;
+                    if kind == FaultKind::Crash {
+                        // the crashed attempt decoded, then lost, its
+                        // generation budget — charged as wasted work
+                        fault_stats.fault_wasted_tokens += g;
+                    }
+                    if attempt < plan.cfg.max_retries {
+                        fault_stats.fault_backoff_time += plan.backoff(attempt);
+                    }
+                    failed.push(r);
+                }
+            }
+        }
+    } else {
+        healthy.extend_from_slice(rows);
+    }
+    let (kept, mut stats) = execute_rows(
         engine,
         &batch.params,
         batch.lora.as_deref().map(|v| v.as_slice()),
@@ -299,30 +519,54 @@ fn run_shard(engine: &Engine, batch: &GenBatch, rows: &[RowSpec]) -> Result<Shar
         batch.temperature,
         batch.decode_chunk,
         batch.refill,
-        rows,
+        &healthy,
         &batch.problems,
         batch.task,
         &batch.weights,
         batch.online.as_deref(),
         batch.kv,
-    )
+    )?;
+    if let Some(plan) = &batch.faults {
+        let chunk = batch.decode_chunk.max(1);
+        for cr in &kept {
+            // pruned rows' decoded lengths depend on abort timing (a
+            // partition effect), so only finished rows draw stragglers —
+            // their lengths are stream-determined and partition-invariant
+            if cr.record.pruned {
+                continue;
+            }
+            let pid = batch.problems[cr.group_idx].id;
+            if plan.row_straggler(batch.iter, pid, cr.rollout_idx as u64) {
+                let len = cr.record.gen_len.max(0) as usize;
+                stats.straggler_tokens += len.div_ceil(chunk) * chunk;
+            }
+        }
+    }
+    stats.absorb(&fault_stats);
+    Ok((kept, stats, failed))
 }
 
-/// Reassemble per-shard outputs (shard order) into per-prompt groups.
-/// Shards are contiguous cuts of the group-major row queue, so appending
-/// in shard order preserves each group's rollout order.
-fn assemble(batch: &GenBatch, outs: Vec<ShardOut>) -> (Vec<PromptGroup>, InferenceStats) {
-    let mut groups: Vec<PromptGroup> = batch
-        .problems
-        .iter()
-        .map(|p| PromptGroup { problem: p.clone(), rollouts: Vec::with_capacity(batch.n) })
-        .collect();
-    let mut stats = InferenceStats::default();
-    for (kept, shard_stats) in outs {
-        stats.absorb(&shard_stats);
-        for cr in kept {
-            groups[cr.group_idx].rollouts.push(cr.record);
-        }
+/// Reassemble finished rollouts into per-prompt groups in canonical
+/// order: rollouts sort by their in-group index, so shard layout, worker
+/// completion order and retry timing cannot reorder a group. Lost rows
+/// simply leave gaps — the selector clamps `m` to what survived.
+fn assemble(
+    batch: &GenBatch,
+    kept: Vec<CallRollout>,
+    mut stats: InferenceStats,
+) -> (Vec<PromptGroup>, InferenceStats) {
+    let mut per_group: Vec<Vec<CallRollout>> =
+        batch.problems.iter().map(|_| Vec::with_capacity(batch.n)).collect();
+    for cr in kept {
+        per_group[cr.group_idx].push(cr);
+    }
+    let mut groups: Vec<PromptGroup> = Vec::with_capacity(batch.problems.len());
+    for (p, mut rollouts) in batch.problems.iter().zip(per_group) {
+        rollouts.sort_by_key(|c| c.rollout_idx);
+        groups.push(PromptGroup {
+            problem: p.clone(),
+            rollouts: rollouts.into_iter().map(|c| c.record).collect(),
+        });
     }
     stats.rollouts = groups.iter().map(|g| g.rollouts.len()).sum();
     (groups, stats)
@@ -335,7 +579,7 @@ fn worker_main(
     artifacts: PathBuf,
     profile: String,
     jobs: Arc<Mutex<mpsc::Receiver<Job>>>,
-    results: mpsc::Sender<ShardResult>,
+    results: mpsc::Sender<WorkerMsg>,
 ) {
     let mut engine: Option<Engine> = None;
     loop {
@@ -344,7 +588,16 @@ fn worker_main(
         // mutex and all of them *process* jobs concurrently.
         let job = match jobs.lock() {
             Ok(rx) => rx.recv(),
-            Err(_) => return, // poisoned: a sibling panicked
+            Err(_) => {
+                // poisoned: a sibling panicked while holding the lock.
+                // Report the lost worker instead of silently returning —
+                // otherwise collect() can wait forever on shards nobody
+                // will ever run.
+                let _ = results.send(WorkerMsg::WorkerLost {
+                    reason: "work-queue lock poisoned by a sibling panic".to_string(),
+                });
+                return;
+            }
         };
         let Ok(job) = job else { return }; // channel closed: shutdown
         if engine.is_none() {
@@ -355,7 +608,12 @@ fn worker_main(
                 }
                 Err(e) => {
                     let msg = anyhow!("rollout worker failed to load engine replica: {e}");
-                    let _ = results.send((job.batch_id, job.shard_idx, Err(msg)));
+                    let _ = results.send(WorkerMsg::Shard {
+                        batch_id: job.batch_id,
+                        attempt: job.attempt,
+                        rows: job.rows,
+                        result: Err(msg),
+                    });
                     continue;
                 }
             }
@@ -364,7 +622,7 @@ fn worker_main(
         // collect() would wait forever for the missing slot. The replica
         // is discarded after a panic (its internal state is suspect).
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_shard(engine.as_ref().expect("loaded above"), &job.batch, &job.rows)
+            run_shard(engine.as_ref().expect("loaded above"), &job.batch, &job.rows, job.attempt)
         }));
         let res = match caught {
             Ok(r) => r,
@@ -378,7 +636,13 @@ fn worker_main(
                 Err(anyhow!("rollout worker panicked executing shard: {what}"))
             }
         };
-        if results.send((job.batch_id, job.shard_idx, res)).is_err() {
+        let msg = WorkerMsg::Shard {
+            batch_id: job.batch_id,
+            attempt: job.attempt,
+            rows: job.rows,
+            result: res,
+        };
+        if results.send(msg).is_err() {
             return; // receiver gone: engine shut down
         }
     }
@@ -421,5 +685,61 @@ mod tests {
         assert_eq!(shard_rows(&rows(64), 8, 16).len(), 4);
         // 3 rows on 8 workers collapse to one shard
         assert_eq!(shard_rows(&rows(3), 8, 4).len(), 1);
+    }
+
+    /// Out-of-order arrival (retries completing late) cannot perturb group
+    /// assembly: rollouts sort back into canonical in-group order.
+    #[test]
+    fn assemble_restores_canonical_order() {
+        use crate::coordinator::group::PromptGroup as PG;
+        let problems: Vec<Problem> =
+            (0..2u64).map(|i| TaskKind::Arith.generate(crate::tasks::Split::Train, i)).collect();
+        let batch = GenBatch {
+            params: Arc::new(vec![]),
+            lora: None,
+            ref_params: None,
+            ref_lora: None,
+            problems: Arc::new(problems),
+            n: 3,
+            temperature: 1.0,
+            run_seed: 0,
+            iter: 0,
+            task: TaskKind::Arith,
+            weights: RewardWeights::default(),
+            decode_chunk: 16,
+            refill: RefillMode::Continuous,
+            online: None,
+            kv: KvPolicy::default(),
+            faults: None,
+        };
+        let synth = PG::synthetic(0, &[1.0, 2.0, 3.0], None);
+        // rollouts arrive scrambled across groups and indices
+        let kept: Vec<CallRollout> = vec![
+            (1, 2),
+            (0, 1),
+            (1, 0),
+            (0, 0),
+            (0, 2),
+        ]
+        .into_iter()
+        .map(|(g, j)| CallRollout {
+            group_idx: g,
+            rollout_idx: j,
+            record: {
+                let mut r = synth.rollouts[j].clone();
+                r.total_reward = (g * 10 + j) as f32;
+                r
+            },
+        })
+        .collect();
+        let (groups, stats) = assemble(&batch, kept, InferenceStats::default());
+        assert_eq!(groups[0].rollouts.len(), 3);
+        // group 1 lost rollout_idx 1 — a gap, not a reorder
+        assert_eq!(groups[1].rollouts.len(), 2);
+        let rewards0: Vec<f32> = groups[0].rollouts.iter().map(|r| r.total_reward).collect();
+        assert_eq!(rewards0, vec![0.0, 1.0, 2.0]);
+        let rewards1: Vec<f32> = groups[1].rollouts.iter().map(|r| r.total_reward).collect();
+        assert_eq!(rewards1, vec![10.0, 12.0]);
+        assert_eq!(stats.rollouts, 5);
     }
 }

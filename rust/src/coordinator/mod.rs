@@ -22,6 +22,7 @@
 
 pub mod accum;
 pub mod advantage;
+pub mod ckpt;
 pub mod downsample;
 pub mod exec;
 pub mod group;

@@ -77,6 +77,15 @@ impl ReplayStore {
         Self::default()
     }
 
+    /// Rebuild a store from serialized rows (checkpoint/resume). Rows are
+    /// re-sorted into the canonical `RowId` order, so the restored store
+    /// is state-identical to the one that was saved whatever order the
+    /// checkpoint happened to serialize.
+    pub fn from_rows(mut rows: Vec<StoredRow>) -> Self {
+        rows.sort_by_key(|r| r.id);
+        Self { rows }
+    }
+
     /// Stored rows.
     pub fn len(&self) -> usize {
         self.rows.len()

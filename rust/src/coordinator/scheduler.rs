@@ -25,7 +25,9 @@
 //! the CSVs.
 
 use crate::config::RunConfig;
-use crate::coordinator::exec::{StepCtx, TrainLoop};
+use crate::coordinator::ckpt as resume;
+use crate::coordinator::exec::{build_gen_batch, StepCtx, TrainLoop};
+use crate::coordinator::replay::ReplayStore;
 use crate::coordinator::select::Pipeline;
 use crate::eval;
 use crate::hwsim::SimClock;
@@ -84,6 +86,15 @@ pub struct IterStats {
     pub prefill_calls_saved: usize,
     /// Peak bytes resident in the modeled paged KV pool (max over shards).
     pub kv_peak_bytes: u64,
+    /// Faults the schedule injected across this iteration's row-attempts.
+    pub faults_injected: usize,
+    /// Physical shard retries the rollout pool executed.
+    pub shard_retries: usize,
+    /// Rows lost after exhausting the retry budget (graceful degradation).
+    pub rows_lost: usize,
+    /// Simulated retry bill (backoff + wasted/straggler work), included in
+    /// `sim_inference`.
+    pub retry_time: f64,
     /// Simulated cost of the inference phase.
     pub sim_inference: f64,
     /// Simulated cost of the update phase (incl. communication).
@@ -130,6 +141,9 @@ pub struct Trainer {
     pub exec: TrainLoop,
     prompt_cursor: u64,
     started: Instant,
+    /// First iteration [`Self::run`] executes — 0 for a fresh run, the
+    /// checkpoint's `next_iter` after [`Self::resume_from`].
+    start_iter: usize,
 }
 
 impl Trainer {
@@ -201,6 +215,7 @@ impl Trainer {
             exec,
             prompt_cursor: 0,
             started: Instant::now(),
+            start_iter: 0,
         })
     }
 
@@ -330,6 +345,10 @@ impl Trainer {
             prefill_calls: r.prefill_calls,
             prefill_calls_saved: r.prefill_calls_saved,
             kv_peak_bytes: r.kv_peak_bytes,
+            faults_injected: r.faults_injected,
+            shard_retries: r.shard_retries,
+            rows_lost: r.rows_lost,
+            retry_time: r.retry_time,
             sim_inference: r.sim_inference,
             sim_update: r.sim_update,
             sim_step: r.sim_step,
@@ -370,6 +389,10 @@ impl Trainer {
             prefill_calls: r.prefill_calls,
             prefill_calls_saved: r.prefill_calls_saved,
             kv_peak_bytes: r.kv_peak_bytes,
+            faults_injected: r.faults_injected,
+            shard_retries: r.shard_retries,
+            rows_lost: r.rows_lost,
+            retry_time: r.retry_time,
         });
         Ok(stats)
     }
@@ -412,37 +435,15 @@ impl Trainer {
     }
 
     /// Full run: SFT warm-up (if configured), KL snapshot, RL iterations
-    /// with periodic eval, CSV dump, optional checkpoint.
+    /// with periodic eval (and, with `[ckpt] every > 0`, periodic
+    /// crash-consistent resume snapshots), CSV dump, optional checkpoint.
+    ///
+    /// After [`Self::resume_from`] the warm-up, reference snapshot and
+    /// initial eval are skipped — they are part of the restored state —
+    /// and iterations continue from the checkpoint bit-identically to the
+    /// uninterrupted run (`rust/tests/fault_golden.rs`).
     pub fn run(&mut self) -> Result<()> {
-        self.sft_warmup()?;
-        self.snapshot_reference();
-        let iters = self.cfg.run.iterations;
-        let eval_every = self.cfg.run.eval_every.max(1);
-        let acc0 = self.evaluate(0, Split::Test, "test")?;
-        eprintln!(
-            "[train {}] start: test acc {acc0:.3}",
-            self.cfg.run.name
-        );
-        for it in 0..iters {
-            let stats = self.train_iteration(it)?;
-            if (it + 1) % eval_every == 0 || it + 1 == iters {
-                let acc = self.evaluate(it + 1, Split::Test, "test")?;
-                let extra = self.extra_evals.clone();
-                for (task, split, label) in extra {
-                    self.evaluate_task(it + 1, task, split, &label)?;
-                }
-                eprintln!(
-                    "[train {}] iter {:>4} sim {:>8.1}s acc {:.3} trainR {:.2} len {:.1} clip {:.3}",
-                    self.cfg.run.name,
-                    it + 1,
-                    self.clock.now(),
-                    acc,
-                    stats.train_reward,
-                    stats.completion_len,
-                    stats.clip_frac,
-                );
-            }
-        }
+        self.run_span(self.cfg.run.iterations)?;
         if self.clock.overlap_saved() > 0.0 {
             eprintln!(
                 "[train {}] schedule {}: sim {:.1}s total, {:.1}s hidden by overlap",
@@ -463,6 +464,147 @@ impl Trainer {
             )?;
             eprintln!("[train {}] checkpoint -> {path}", self.cfg.run.name);
         }
+        Ok(())
+    }
+
+    /// Run iterations `start_iter..upto` with periodic eval and resume
+    /// snapshots. `upto < run.iterations` is the kill-at-k harness the
+    /// resume goldens use: prefetch decisions still use the configured
+    /// horizon, so stopping early leaves the same state a crash at that
+    /// boundary would (an in-flight prefetch is simply dropped, exactly
+    /// like a killed process's).
+    pub fn run_span(&mut self, upto: usize) -> Result<()> {
+        let iters = self.cfg.run.iterations;
+        let eval_every = self.cfg.run.eval_every.max(1);
+        if self.start_iter == 0 {
+            self.sft_warmup()?;
+            self.snapshot_reference();
+            let acc0 = self.evaluate(0, Split::Test, "test")?;
+            eprintln!("[train {}] start: test acc {acc0:.3}", self.cfg.run.name);
+        }
+        let resume_every = self.cfg.ckpt.every;
+        for it in self.start_iter..upto {
+            let stats = self.train_iteration(it)?;
+            if (it + 1) % eval_every == 0 || it + 1 == iters {
+                let acc = self.evaluate(it + 1, Split::Test, "test")?;
+                let extra = self.extra_evals.clone();
+                for (task, split, label) in extra {
+                    self.evaluate_task(it + 1, task, split, &label)?;
+                }
+                eprintln!(
+                    "[train {}] iter {:>4} sim {:>8.1}s acc {:.3} trainR {:.2} len {:.1} clip {:.3}",
+                    self.cfg.run.name,
+                    it + 1,
+                    self.clock.now(),
+                    acc,
+                    stats.train_reward,
+                    stats.completion_len,
+                    stats.clip_frac,
+                );
+            }
+            // snapshot AFTER the evals: the saved boundary means
+            // "iterations 0..=it done, including their eval rows"
+            if resume_every > 0 && (it + 1) % resume_every == 0 {
+                let path = self.cfg.ckpt.resume_path(&self.cfg.run.out_dir, &self.cfg.run.name);
+                resume::save(std::path::Path::new(&path), &self.resume_state(it + 1))?;
+                eprintln!("[train {}] resume state -> {path}", self.cfg.run.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Capture the complete resumable state at the iteration boundary
+    /// "iterations `0..next_iter` complete (evals included)".
+    pub fn resume_state(&self, next_iter: usize) -> resume::ResumeState {
+        let ppi = self.cfg.run.prompts_per_iter as u64;
+        resume::ResumeState {
+            profile: self.cfg.run.profile.clone(),
+            run_name: self.cfg.run.name.clone(),
+            run_seed: self.cfg.run.seed,
+            next_iter,
+            // logical (pre-prefetch) cursor: restore re-applies the
+            // prefetch advance when it rebuilds the in-flight batch
+            prompt_cursor: next_iter as u64 * ppi,
+            clock_now: self.clock.now(),
+            clock_overlap_saved: self.clock.overlap_saved(),
+            last_update_time: self.exec.last_update_time(),
+            store: self.store.clone(),
+            base: self.base.clone(),
+            ref_params: self.ref_params.as_deref().cloned(),
+            ref_lora: self.ref_lora.as_deref().cloned(),
+            inflight: self.exec.pending_info().map(|(i, b)| resume::InflightGen {
+                iter: i,
+                params: (*b.params).clone(),
+                lora: b.lora.as_deref().cloned(),
+            }),
+            replay_rows: self.exec.replay_store().contents().to_vec(),
+            iter_rows: self.recorder.iters.clone(),
+            eval_rows: self.recorder.evals.clone(),
+        }
+    }
+
+    /// Restore a run from a resume file written by a previous (possibly
+    /// killed) process. The trainer must have been built from the same
+    /// config; continuing via [`Self::run`] is then bit-identical to the
+    /// run that was never interrupted.
+    pub fn resume_from(&mut self, path: &std::path::Path) -> Result<()> {
+        let st = resume::load(path)?;
+        if st.profile != self.cfg.run.profile
+            || st.run_name != self.cfg.run.name
+            || st.run_seed != self.cfg.run.seed
+        {
+            return Err(anyhow!(
+                "resume file {path:?} is for run {:?} (profile {:?}, seed {}), \
+                 config says {:?} (profile {:?}, seed {})",
+                st.run_name,
+                st.profile,
+                st.run_seed,
+                self.cfg.run.name,
+                self.cfg.run.profile,
+                self.cfg.run.seed
+            ));
+        }
+        if st.store.params.len() != self.store.params.len() {
+            return Err(anyhow!(
+                "resume file has {} trainable params, profile expects {}",
+                st.store.params.len(),
+                self.store.params.len()
+            ));
+        }
+        self.store = st.store;
+        self.base = st.base;
+        self.ref_params = st.ref_params.map(std::sync::Arc::new);
+        self.ref_lora = st.ref_lora.map(std::sync::Arc::new);
+        self.clock = SimClock::restore(st.clock_now, st.clock_overlap_saved);
+        self.exec.set_last_update_time(st.last_update_time);
+        self.exec.set_replay(ReplayStore::from_rows(st.replay_rows));
+        self.recorder = Recorder { iters: st.iter_rows, evals: st.eval_rows };
+        self.prompt_cursor = st.prompt_cursor;
+        self.start_iter = st.next_iter;
+        if let Some(inf) = st.inflight {
+            // rebuild the killed run's in-flight prefetch from its saved
+            // behaviour snapshot — regeneration replays the identical
+            // one-step-off-policy rollouts (per-row counter RNG)
+            let batch = build_gen_batch(
+                &self.cfg,
+                &self.engine,
+                &self.pipeline,
+                self.task,
+                self.ref_params.clone(),
+                self.ref_lora.clone(),
+                std::sync::Arc::new(inf.params),
+                inf.lora.map(std::sync::Arc::new),
+                self.prompt_cursor,
+                inf.iter,
+            );
+            self.prompt_cursor += self.cfg.run.prompts_per_iter as u64;
+            let br = self.engine.meta.config.rollout_batch;
+            self.exec.restore_pending(inf.iter, br, batch)?;
+        }
+        eprintln!(
+            "[train {}] resumed from {path:?} at iteration {}",
+            self.cfg.run.name, self.start_iter
+        );
         Ok(())
     }
 }

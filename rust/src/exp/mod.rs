@@ -11,6 +11,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod faults;
 pub mod kv;
 pub mod prune;
 pub mod reuse;
@@ -19,9 +20,10 @@ pub mod shard;
 pub mod table3;
 
 use crate::config::{
-    AlgoSection, ReplaySection, RolloutSection, RunConfig, RunSection, SftSection, UpdateSection,
+    AlgoSection, CkptSection, ReplaySection, RolloutSection, RunConfig, RunSection, SftSection,
+    UpdateSection,
 };
-use crate::hwsim::HwModel;
+use crate::hwsim::{FaultSection, HwModel};
 use anyhow::Result;
 use std::path::Path;
 
@@ -126,6 +128,10 @@ pub struct CfgBuilder {
     pub replay_capacity: usize,
     /// Replay importance-ratio clip (replay.rho_max).
     pub replay_rho_max: f64,
+    /// The whole `[faults]` section (fault injection is off by default).
+    pub faults: FaultSection,
+    /// The whole `[ckpt]` section (resume snapshots are off by default).
+    pub ckpt: CkptSection,
     /// `sft.steps` (0 = no SFT warm-up section).
     pub sft_steps: usize,
     /// `sft.lr`.
@@ -171,6 +177,8 @@ impl Default for CfgBuilder {
             replay_staleness: ReplaySection::default().staleness,
             replay_capacity: ReplaySection::default().capacity_per_prompt,
             replay_rho_max: ReplaySection::default().rho_max,
+            faults: FaultSection::default(),
+            ckpt: CkptSection::default(),
             sft_steps: 0,
             sft_lr: 2e-3,
             sft_pool: 512,
@@ -226,6 +234,8 @@ impl CfgBuilder {
                 capacity_per_prompt: self.replay_capacity,
                 rho_max: self.replay_rho_max,
             },
+            faults: self.faults.clone(),
+            ckpt: self.ckpt.clone(),
             sft: if self.sft_steps > 0 {
                 Some(SftSection {
                     steps: self.sft_steps,

@@ -1,0 +1,400 @@
+//! Deterministic fault injection — the seeded fault schedule for the
+//! fault-tolerance layer (`[faults]` config section).
+//!
+//! A [`FaultPlan`] is a pure function of `(run_seed, iter, prompt_id,
+//! rollout_idx, attempt)`: every row-attempt's fate (healthy, worker
+//! crash, transient call failure, KV-admission OOM) and every row's
+//! straggler status are drawn from private counter-based streams, exactly
+//! like the sampling RNG in `rollout::mix_seed`. Two consequences:
+//!
+//! * **The fault schedule is history, not partition.** Faults key on row
+//!   identity, never on which physical shard or worker executed the row,
+//!   so the set of injected faults — and therefore the set of rows lost
+//!   after retries — is bit-identical across worker-pool sizes, shard
+//!   layouts and refill orders (pinned by `fault_golden`).
+//! * **Replays are free.** A given `(seed, rates)` pair replays the same
+//!   schedule forever; rate `0.0` draws nothing and the training path is
+//!   bit-identical to a build without the fault layer.
+//!
+//! A row is **lost** only when it faults at attempt `0` *and* every one of
+//! its `max_retries` retry attempts — each attempt re-draws from the
+//! attempt-indexed stream, so retries genuinely re-roll the dice.
+
+use anyhow::{bail, Result};
+
+/// What the fault schedule injected for one row-attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Simulated worker crash mid-decode: the attempt's generation budget
+    /// is charged as wasted work (the tokens decoded before the crash are
+    /// unrecoverable) and the row is retried.
+    Crash,
+    /// Transient engine-call failure (PJRT launch error, network blip):
+    /// fails fast, charges only the retry backoff.
+    Transient,
+    /// KV-pool admission rejection: the row could not be admitted into a
+    /// decode slot this attempt. Retried — pool pressure is transient.
+    AdmissionOom,
+}
+
+impl FaultKind {
+    /// Canonical name used in logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Crash => "crash",
+            Self::Transient => "transient",
+            Self::AdmissionOom => "admission-oom",
+        }
+    }
+}
+
+/// `[faults]` — deterministic fault injection (off by default).
+///
+/// All rates are per **row-attempt** probabilities in `0.0..=1.0`; the
+/// three fault rates are mutually exclusive outcomes of one draw, so their
+/// sum must not exceed `1.0`. With `enabled = false` (default) no plan is
+/// built and the executor path is bit-identical to a faultless build.
+#[derive(Debug, Clone)]
+pub struct FaultSection {
+    /// Master switch. `false` (default) injects nothing.
+    pub enabled: bool,
+    /// Worker-crash probability per row-attempt (wasted-work charge).
+    pub crash_rate: f64,
+    /// Transient call-failure probability per row-attempt (fails fast).
+    pub transient_rate: f64,
+    /// KV-admission OOM probability per row-attempt.
+    pub oom_rate: f64,
+    /// Straggler probability per row (successful rows only): the row's
+    /// decode is charged `straggler_factor ×` its solo decode time.
+    pub straggler_rate: f64,
+    /// Slowdown multiplier for straggler rows (`>= 1`).
+    pub straggler_factor: f64,
+    /// Retry attempts per failed row before it is declared lost.
+    pub max_retries: usize,
+    /// Simulated backoff before the first retry, in seconds.
+    pub backoff_base: f64,
+    /// Exponential backoff growth per subsequent retry (`>= 1`).
+    pub backoff_factor: f64,
+    /// Hard degradation floor: the iteration fails loudly when any prompt
+    /// group retains fewer than this many rollouts after losses.
+    pub min_group_survivors: usize,
+}
+
+impl Default for FaultSection {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            crash_rate: 0.0,
+            transient_rate: 0.0,
+            oom_rate: 0.0,
+            straggler_rate: 0.0,
+            straggler_factor: 4.0,
+            max_retries: 2,
+            backoff_base: 0.5,
+            backoff_factor: 2.0,
+            min_group_survivors: 1,
+        }
+    }
+}
+
+impl FaultSection {
+    /// Parse from a `[faults]` config section; absent keys keep defaults.
+    pub fn from_section(sec: &crate::util::toml::SectionView) -> Result<Self> {
+        let d = Self::default();
+        let f = Self {
+            enabled: sec.bool_or("enabled", d.enabled)?,
+            crash_rate: sec.f64_or("crash_rate", d.crash_rate)?,
+            transient_rate: sec.f64_or("transient_rate", d.transient_rate)?,
+            oom_rate: sec.f64_or("oom_rate", d.oom_rate)?,
+            straggler_rate: sec.f64_or("straggler_rate", d.straggler_rate)?,
+            straggler_factor: sec.f64_or("straggler_factor", d.straggler_factor)?,
+            max_retries: sec.usize_or("max_retries", d.max_retries)?,
+            backoff_base: sec.f64_or("backoff_base", d.backoff_base)?,
+            backoff_factor: sec.f64_or("backoff_factor", d.backoff_factor)?,
+            min_group_survivors: sec.usize_or("min_group_survivors", d.min_group_survivors)?,
+        };
+        f.validate()?;
+        Ok(f)
+    }
+
+    /// Reject degenerate fault policies at parse time.
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("crash_rate", self.crash_rate),
+            ("transient_rate", self.transient_rate),
+            ("oom_rate", self.oom_rate),
+            ("straggler_rate", self.straggler_rate),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                bail!("faults.{name} must be in 0.0..=1.0 (a per-row-attempt probability; got {v})");
+            }
+        }
+        let sum = self.crash_rate + self.transient_rate + self.oom_rate;
+        if sum > 1.0 {
+            bail!(
+                "faults.crash_rate + faults.transient_rate + faults.oom_rate must not \
+                 exceed 1.0 (they are mutually exclusive outcomes of one draw; got {sum})"
+            );
+        }
+        if self.straggler_factor < 1.0 {
+            bail!(
+                "faults.straggler_factor must be >= 1.0 (a slowdown multiplier; got {})",
+                self.straggler_factor
+            );
+        }
+        if self.backoff_base < 0.0 {
+            bail!("faults.backoff_base must be non-negative (got {})", self.backoff_base);
+        }
+        if self.backoff_factor < 1.0 {
+            bail!(
+                "faults.backoff_factor must be >= 1.0 (exponential backoff growth; got {})",
+                self.backoff_factor
+            );
+        }
+        if self.min_group_survivors == 0 {
+            bail!(
+                "faults.min_group_survivors must be >= 1 (a group with zero surviving \
+                 rollouts contributes nothing to the update; the degenerate-m clamp \
+                 needs at least one row)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Build the seeded fault schedule, or `None` when injection is off.
+    pub fn plan(&self, run_seed: u64) -> Option<FaultPlan> {
+        self.enabled.then(|| FaultPlan::new(run_seed, self.clone()))
+    }
+}
+
+/// Stream tags keeping the fault draw and the straggler draw statistically
+/// independent of each other and of the sampling RNG.
+const STREAM_FAULT: u64 = 0xFA01;
+const STREAM_STRAGGLER: u64 = 0xFA02;
+
+/// The seeded fault schedule: pure counter-based draws, no mutable state.
+/// Cheap to clone and safe to share across worker threads.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    /// The rates and retry policy the plan draws against.
+    pub cfg: FaultSection,
+}
+
+impl FaultPlan {
+    /// A plan over `cfg`'s rates, keyed by the run seed.
+    pub fn new(run_seed: u64, cfg: FaultSection) -> Self {
+        Self { seed: run_seed, cfg }
+    }
+
+    /// splitmix64-style finalizer over the row-attempt coordinates. The
+    /// multipliers differ from `rollout::mix_seed`'s field order, and the
+    /// stream tag separates fault draws from straggler draws, so the fault
+    /// schedule never correlates with the token-sampling streams.
+    fn mix(&self, tag: u64, iter: u64, prompt: u64, idx: u64, attempt: u64) -> u64 {
+        let mut z = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(tag.wrapping_mul(0xD6E8_FEB8_6659_FD93))
+            .wrapping_add(iter.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add(prompt.wrapping_mul(0x94D0_49BB_1331_11EB))
+            .wrapping_add(idx.wrapping_mul(0x2545_F491_4F6C_DD1D))
+            .wrapping_add(attempt.wrapping_add(1));
+        z ^= z >> 30;
+        z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z ^= z >> 27;
+        z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        z
+    }
+
+    /// Uniform draw in `[0, 1)` from the tagged stream (53-bit mantissa).
+    fn uniform(&self, tag: u64, iter: u64, prompt: u64, idx: u64, attempt: u64) -> f64 {
+        (self.mix(tag, iter, prompt, idx, attempt) >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// The fate of row `(iter, prompt_id, rollout_idx)` at `attempt`
+    /// (attempt 0 = first execution, 1.. = retries). One draw decides
+    /// between the three fault kinds by cumulative rate thresholds.
+    pub fn row_fault(
+        &self,
+        iter: u64,
+        prompt_id: u64,
+        rollout_idx: u64,
+        attempt: usize,
+    ) -> Option<FaultKind> {
+        let u = self.uniform(STREAM_FAULT, iter, prompt_id, rollout_idx, attempt as u64);
+        if u < self.cfg.crash_rate {
+            Some(FaultKind::Crash)
+        } else if u < self.cfg.crash_rate + self.cfg.transient_rate {
+            Some(FaultKind::Transient)
+        } else if u < self.cfg.crash_rate + self.cfg.transient_rate + self.cfg.oom_rate {
+            Some(FaultKind::AdmissionOom)
+        } else {
+            None
+        }
+    }
+
+    /// Is this row a straggler (charged `straggler_factor ×` its solo
+    /// decode time)? Drawn once per row — stragglers are slow, not failed,
+    /// so the attempt axis does not apply.
+    pub fn row_straggler(&self, iter: u64, prompt_id: u64, rollout_idx: u64) -> bool {
+        self.cfg.straggler_rate > 0.0
+            && self.uniform(STREAM_STRAGGLER, iter, prompt_id, rollout_idx, 0)
+                < self.cfg.straggler_rate
+    }
+
+    /// Simulated backoff charged before retry `attempt + 1` of a row that
+    /// failed at `attempt`: `base × factor^attempt` seconds.
+    pub fn backoff(&self, attempt: usize) -> f64 {
+        self.cfg.backoff_base * self.cfg.backoff_factor.powi(attempt as i32)
+    }
+
+    /// Is the row lost — i.e. does it fault at attempt 0 *and* every one
+    /// of its `max_retries` retries? Pure schedule arithmetic; the
+    /// executor reaches the same verdict by physically retrying.
+    pub fn row_lost(&self, iter: u64, prompt_id: u64, rollout_idx: u64) -> bool {
+        (0..=self.cfg.max_retries)
+            .all(|a| self.row_fault(iter, prompt_id, rollout_idx, a).is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(rates: (f64, f64, f64), retries: usize) -> FaultPlan {
+        FaultPlan::new(
+            7,
+            FaultSection {
+                enabled: true,
+                crash_rate: rates.0,
+                transient_rate: rates.1,
+                oom_rate: rates.2,
+                max_retries: retries,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// The schedule is a pure function: same coordinates, same verdicts.
+    #[test]
+    fn plan_is_deterministic() {
+        let p = plan((0.1, 0.1, 0.1), 2);
+        for it in 0..4u64 {
+            for pid in 0..8u64 {
+                for idx in 0..8u64 {
+                    for a in 0..3usize {
+                        assert_eq!(
+                            p.row_fault(it, pid, idx, a),
+                            p.row_fault(it, pid, idx, a)
+                        );
+                    }
+                    assert_eq!(
+                        p.row_straggler(it, pid, idx),
+                        p.row_straggler(it, pid, idx)
+                    );
+                }
+            }
+        }
+    }
+
+    /// Rate 0.0 injects nothing, ever — the bit-identity-to-main contract.
+    #[test]
+    fn zero_rates_inject_nothing() {
+        let p = plan((0.0, 0.0, 0.0), 2);
+        for it in 0..8u64 {
+            for pid in 0..32u64 {
+                for idx in 0..16u64 {
+                    assert_eq!(p.row_fault(it, pid, idx, 0), None);
+                    assert!(!p.row_straggler(it, pid, idx));
+                    assert!(!p.row_lost(it, pid, idx));
+                }
+            }
+        }
+    }
+
+    /// Empirical rates track the configured rates, and the three fault
+    /// kinds partition the draw by cumulative thresholds.
+    #[test]
+    fn empirical_rates_track_configured_rates() {
+        let p = plan((0.1, 0.15, 0.05), 2);
+        let mut counts = [0usize; 4]; // none, crash, transient, oom
+        let total = 20_000u64;
+        for i in 0..total {
+            match p.row_fault(0, i, 0, 0) {
+                None => counts[0] += 1,
+                Some(FaultKind::Crash) => counts[1] += 1,
+                Some(FaultKind::Transient) => counts[2] += 1,
+                Some(FaultKind::AdmissionOom) => counts[3] += 1,
+            }
+        }
+        let frac = |c: usize| c as f64 / total as f64;
+        assert!((frac(counts[1]) - 0.10).abs() < 0.02, "crash {}", frac(counts[1]));
+        assert!((frac(counts[2]) - 0.15).abs() < 0.02, "transient {}", frac(counts[2]));
+        assert!((frac(counts[3]) - 0.05).abs() < 0.02, "oom {}", frac(counts[3]));
+    }
+
+    /// Retries re-roll: with rate p and r retries, loss ≈ p^(r+1).
+    #[test]
+    fn retries_rescue_rows() {
+        let p0 = plan((0.2, 0.0, 0.0), 0);
+        let p2 = plan((0.2, 0.0, 0.0), 2);
+        let total = 20_000u64;
+        let lost = |p: &FaultPlan| (0..total).filter(|&i| p.row_lost(0, i, 0)).count();
+        let l0 = lost(&p0) as f64 / total as f64;
+        let l2 = lost(&p2) as f64 / total as f64;
+        assert!((l0 - 0.2).abs() < 0.02, "no-retry loss {l0}");
+        assert!(l2 < 0.03, "2-retry loss {l2} should be ~0.2^3");
+    }
+
+    /// Fault and straggler streams are independent of the sampling RNG and
+    /// of each other (no coordinate aliasing across tags).
+    #[test]
+    fn streams_decorrelate() {
+        let p = plan((0.5, 0.0, 0.0), 2);
+        let a: Vec<bool> = (0..64).map(|i| p.row_fault(0, i, 0, 0).is_some()).collect();
+        let b: Vec<bool> = (0..64).map(|i| p.row_straggler(0, i, 0)).collect();
+        assert_ne!(a, b, "fault and straggler draws must not alias");
+        // attempt axis decorrelates too
+        let a1: Vec<bool> = (0..64).map(|i| p.row_fault(0, i, 0, 1).is_some()).collect();
+        assert_ne!(a, a1, "retry draws must re-roll");
+    }
+
+    #[test]
+    fn backoff_grows_exponentially() {
+        let p = plan((0.1, 0.0, 0.0), 3);
+        assert_eq!(p.backoff(0), 0.5);
+        assert_eq!(p.backoff(1), 1.0);
+        assert_eq!(p.backoff(2), 2.0);
+    }
+
+    #[test]
+    fn section_validation_rejects_degenerate_values() {
+        let mut f = FaultSection::default();
+        f.validate().unwrap();
+        f.crash_rate = 1.5;
+        assert!(f.validate().unwrap_err().to_string().contains("faults.crash_rate"));
+        f.crash_rate = 0.6;
+        f.transient_rate = 0.6;
+        assert!(f.validate().unwrap_err().to_string().contains("exceed 1.0"));
+        f.transient_rate = 0.0;
+        f.straggler_factor = 0.5;
+        assert!(f.validate().unwrap_err().to_string().contains("straggler_factor"));
+        f.straggler_factor = 4.0;
+        f.backoff_factor = 0.9;
+        assert!(f.validate().unwrap_err().to_string().contains("backoff_factor"));
+        f.backoff_factor = 2.0;
+        f.min_group_survivors = 0;
+        assert!(f.validate().unwrap_err().to_string().contains("min_group_survivors"));
+    }
+
+    /// `plan()` is gated on the master switch.
+    #[test]
+    fn plan_requires_enabled() {
+        let mut f = FaultSection::default();
+        assert!(f.plan(0).is_none());
+        f.enabled = true;
+        assert!(f.plan(0).is_some());
+    }
+}

@@ -25,6 +25,10 @@
 //! `max(inference, update)` instead of the sum — [`SimClock`] tracks the
 //! hidden time as `overlap_saved`.
 
+pub mod faults;
+
+pub use faults::{FaultKind, FaultPlan, FaultSection};
+
 use anyhow::{anyhow, Result};
 
 /// Executor schedule: how the inference and update phases interleave
@@ -603,6 +607,13 @@ impl SimClock {
     /// purely sequential run).
     pub fn overlap_saved(&self) -> f64 {
         self.overlap_saved
+    }
+
+    /// Rebuild a clock at a saved position (checkpoint restore — the
+    /// resumed run's timeline continues exactly where the killed run's
+    /// stopped).
+    pub fn restore(now: f64, overlap_saved: f64) -> Self {
+        Self { now, overlap_saved }
     }
 }
 

@@ -3,7 +3,7 @@
 //! ```text
 //! pods train --config configs/setting_a.toml [--iterations N]
 //! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test --chunk 16
-//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|kv|table3|all [--setting a] [--quick] [--probe]
+//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|kv|faults|table3|all [--setting a] [--quick] [--probe]
 //! pods info  --profile base
 //! pods bench-check [--fresh BENCH_e2e.json] [--baseline rust/benches/BENCH_baseline.json] [--bless]
 //! pods config-docs [--check] [--out docs/CONFIG.md]
@@ -27,10 +27,12 @@ const USAGE: &str = "\
 pods — Policy Optimization with Down-Sampling (paper reproduction)
 
 USAGE:
-  pods train --config <path> [--iterations N] [--artifacts DIR]
+  pods train --config <path> [--iterations N] [--artifacts DIR] [--resume]
+             --resume continues from the [ckpt] resume file when present
+             (crash recovery; bit-identical to the uninterrupted run)
   pods eval  --ckpt <path> [--task arith|poly|mcq] [--split train|test|platinum]
              [--profile NAME] [--problems N] [--chunk C]
-  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|kv|table3|all>
+  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|kv|faults|table3|all>
              [--setting a-f] [--quick] [--out-dir DIR] [--probe]
   pods info  [--profile NAME]
   pods bench-check [--fresh PATH] [--baseline PATH] [--max-regression FRAC]
@@ -49,7 +51,7 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["quick", "probe", "help", "check", "bless"];
+const BOOL_FLAGS: &[&str] = &["quick", "probe", "help", "check", "bless", "resume"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
@@ -119,7 +121,19 @@ fn main() -> Result<()> {
             if let Some(it) = args.get("iterations") {
                 cfg.run.iterations = it.parse()?;
             }
+            let resume = args.has("resume");
+            let resume_path = cfg.ckpt.resume_path(&cfg.run.out_dir, &cfg.run.name);
             let mut tr = Trainer::new(&artifacts, cfg)?;
+            if resume {
+                let path = std::path::Path::new(&resume_path);
+                if path.exists() {
+                    tr.resume_from(path)?;
+                } else {
+                    eprintln!(
+                        "[train] --resume: no resume state at {resume_path}; starting fresh"
+                    );
+                }
+            }
             tr.run()?;
         }
         "eval" => {
@@ -188,6 +202,7 @@ fn main() -> Result<()> {
                 "prune" => exp::prune::run(&out_dir)?,
                 "reuse" => exp::reuse::run(&out_dir)?,
                 "kv" => exp::kv::run(&out_dir)?,
+                "faults" => exp::faults::run(&out_dir)?,
                 "table3" => exp::table3::run(&out_dir)?,
                 "all" => {
                     exp::fig1::run(&artifacts, &out_dir, probe)?;
@@ -201,6 +216,7 @@ fn main() -> Result<()> {
                     exp::prune::run(&out_dir)?;
                     exp::reuse::run(&out_dir)?;
                     exp::kv::run(&out_dir)?;
+                    exp::faults::run(&out_dir)?;
                     exp::table3::run(&out_dir)?;
                 }
                 other => bail!("unknown experiment {other:?}"),

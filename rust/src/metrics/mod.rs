@@ -112,6 +112,18 @@ pub struct IterRow {
     /// Peak bytes resident in the modeled paged KV pool (max over worker
     /// shards — pools are per simulated device).
     pub kv_peak_bytes: u64,
+    /// Row-attempt faults injected by the `[faults]` schedule this
+    /// iteration (zero with the section disabled).
+    pub faults_injected: usize,
+    /// Physical shard retry jobs submitted this iteration (a partition
+    /// detail like call counts — may vary with worker count).
+    pub shard_retries: usize,
+    /// Rollout rows lost after exhausting `faults.max_retries`.
+    pub rows_lost: usize,
+    /// Simulated time spent on fault handling (retry backoff + crashed
+    /// attempts' wasted decode + straggler slowdown); included in
+    /// `sim_inference_time`.
+    pub retry_time: f64,
 }
 
 impl CsvRow for IterRow {
@@ -122,13 +134,14 @@ impl CsvRow for IterRow {
          sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted,\
          upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online,\
          replay_rows_used,replay_store_size,replay_mean_staleness,\
-         prefill_calls,prefill_calls_saved,kv_peak_bytes"
+         prefill_calls,prefill_calls_saved,kv_peak_bytes,\
+         faults_injected,shard_retries,rows_lost,retry_time"
     }
 
     fn csv_row(&self) -> String {
         format!(
             "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},\
-             {},{},{},{},{},{}",
+             {},{},{},{},{},{},{},{},{},{}",
             self.iter,
             self.sim_time,
             self.real_time,
@@ -162,8 +175,69 @@ impl CsvRow for IterRow {
             self.replay_mean_staleness,
             self.prefill_calls,
             self.prefill_calls_saved,
-            self.kv_peak_bytes
+            self.kv_peak_bytes,
+            self.faults_injected,
+            self.shard_retries,
+            self.rows_lost,
+            self.retry_time
         )
+    }
+}
+
+impl IterRow {
+    /// Parse one `csv_row()` line back into a row (checkpoint/resume
+    /// restores the recorder from serialized lines). Rust's shortest-
+    /// roundtrip float formatting makes `parse ∘ format` the identity, so
+    /// a resumed run's CSV is byte-identical to the uninterrupted one.
+    pub fn from_csv_row(line: &str) -> Result<Self> {
+        let f = line.split(',').collect::<Vec<_>>();
+        let n = Self::csv_header().replace(char::is_whitespace, "").split(',').count();
+        anyhow::ensure!(f.len() == n, "iter row has {} fields, expected {n}: {line:?}", f.len());
+        macro_rules! p {
+            ($i:expr) => {
+                f[$i].parse().with_context(|| format!("iter row field {}: {:?}", $i, f[$i]))?
+            };
+        }
+        Ok(Self {
+            iter: p!(0),
+            sim_time: p!(1),
+            real_time: p!(2),
+            sim_inference_time: p!(3),
+            sim_update_time: p!(4),
+            train_reward: p!(5),
+            train_acc: p!(6),
+            completion_len: p!(7),
+            sel_variance: p!(8),
+            sel_tokens_kept: p!(9),
+            sel_tokens_dropped: p!(10),
+            sel_groups_dropped: p!(11),
+            loss: p!(12),
+            clip_frac: p!(13),
+            kl: p!(14),
+            micro_steps: p!(15),
+            rollouts_generated: p!(16),
+            rollouts_trained: p!(17),
+            sim_step_time: p!(18),
+            sim_overlap_saved: p!(19),
+            schedule: f[20].to_string(),
+            gen_tokens_decoded: p!(21),
+            gen_tokens_wasted: p!(22),
+            upd_shards: p!(23),
+            upd_comm_time: p!(24),
+            upd_peak_mem: p!(25),
+            gen_tokens_pruned: p!(26),
+            rows_pruned_online: p!(27),
+            replay_rows_used: p!(28),
+            replay_store_size: p!(29),
+            replay_mean_staleness: p!(30),
+            prefill_calls: p!(31),
+            prefill_calls_saved: p!(32),
+            kv_peak_bytes: p!(33),
+            faults_injected: p!(34),
+            shard_retries: p!(35),
+            rows_lost: p!(36),
+            retry_time: p!(37),
+        })
     }
 }
 
@@ -208,6 +282,31 @@ impl CsvRow for EvalRow {
             self.mean_len,
             self.problems
         )
+    }
+}
+
+impl EvalRow {
+    /// Parse one `csv_row()` line back (checkpoint/resume counterpart of
+    /// [`IterRow::from_csv_row`]).
+    pub fn from_csv_row(line: &str) -> Result<Self> {
+        let f = line.split(',').collect::<Vec<_>>();
+        anyhow::ensure!(f.len() == 9, "eval row has {} fields, expected 9: {line:?}", f.len());
+        macro_rules! p {
+            ($i:expr) => {
+                f[$i].parse().with_context(|| format!("eval row field {}: {:?}", $i, f[$i]))?
+            };
+        }
+        Ok(Self {
+            iter: p!(0),
+            sim_time: p!(1),
+            real_time: p!(2),
+            split: f[3].to_string(),
+            accuracy: p!(4),
+            format_rate: p!(5),
+            mean_reward: p!(6),
+            mean_len: p!(7),
+            problems: p!(8),
+        })
     }
 }
 
@@ -361,14 +460,15 @@ mod tests {
              sim_step_time,sim_overlap_saved,schedule,gen_tokens_decoded,gen_tokens_wasted,\
              upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online,\
              replay_rows_used,replay_store_size,replay_mean_staleness,\
-             prefill_calls,prefill_calls_saved,kv_peak_bytes"
+             prefill_calls,prefill_calls_saved,kv_peak_bytes,\
+             faults_injected,shard_retries,rows_lost,retry_time"
                 .replace(char::is_whitespace, "")
         );
         // new columns append at the end, so CSVs from older runs stay
         // parseable by position-tolerant readers
         let cols: Vec<&str> = header.split(',').collect();
         assert_eq!(
-            cols[cols.len() - 13..].to_vec(),
+            cols[cols.len() - 17..].to_vec(),
             vec![
                 "gen_tokens_decoded",
                 "gen_tokens_wasted",
@@ -382,7 +482,11 @@ mod tests {
                 "replay_mean_staleness",
                 "prefill_calls",
                 "prefill_calls_saved",
-                "kv_peak_bytes"
+                "kv_peak_bytes",
+                "faults_injected",
+                "shard_retries",
+                "rows_lost",
+                "retry_time"
             ]
         );
     }
@@ -426,6 +530,10 @@ mod tests {
             prefill_calls: 6,
             prefill_calls_saved: 10,
             kv_peak_bytes: 262144,
+            faults_injected: 5,
+            shard_retries: 2,
+            rows_lost: 1,
+            retry_time: 1.25,
         };
         let header = IterRow::csv_header().replace(char::is_whitespace, "");
         let line = row.csv_row();
@@ -453,6 +561,10 @@ mod tests {
         assert_eq!(get("prefill_calls"), "6");
         assert_eq!(get("prefill_calls_saved"), "10");
         assert_eq!(get("kv_peak_bytes"), "262144");
+        assert_eq!(get("faults_injected"), "5");
+        assert_eq!(get("shard_retries"), "2");
+        assert_eq!(get("rows_lost"), "1");
+        assert_eq!(get("retry_time"), "1.25");
         // the overlap identity the exec layer maintains:
         // step + saved == inference + update
         let step: f64 = get("sim_step_time").parse().unwrap();
@@ -467,6 +579,44 @@ mod tests {
         let mut lines = text.lines();
         assert_eq!(lines.next().unwrap(), header);
         assert_eq!(lines.next().unwrap(), line);
+    }
+
+    /// Resume contract: `from_csv_row ∘ csv_row` is the identity at the
+    /// text level — a recorder restored from serialized lines re-emits the
+    /// exact bytes the killed run would have written.
+    #[test]
+    fn csv_rows_parse_back_bitwise() {
+        let row = IterRow {
+            iter: 7,
+            sim_time: 123.456789012345,
+            real_time: 0.1,
+            sim_inference_time: 1.0 / 3.0,
+            train_reward: 1.5,
+            sel_variance: 2.0_f64 / 7.0,
+            schedule: "pipelined".into(),
+            retry_time: 0.7,
+            kv_peak_bytes: 1 << 40,
+            ..Default::default()
+        };
+        let line = row.csv_row();
+        let parsed = IterRow::from_csv_row(&line).unwrap();
+        assert_eq!(parsed.csv_row(), line);
+        let ev = EvalRow {
+            iter: 3,
+            sim_time: 9.25,
+            real_time: 0.5,
+            split: "platinum".into(),
+            accuracy: 0.625,
+            format_rate: 1.0 / 3.0,
+            mean_reward: 2.5,
+            mean_len: 30.0,
+            problems: 64,
+        };
+        let eline = ev.csv_row();
+        assert_eq!(EvalRow::from_csv_row(&eline).unwrap().csv_row(), eline);
+        // malformed lines fail loudly, not silently
+        assert!(IterRow::from_csv_row("1,2,3").is_err());
+        assert!(EvalRow::from_csv_row("").is_err());
     }
 
     #[test]

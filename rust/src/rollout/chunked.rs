@@ -160,6 +160,40 @@ impl KvPolicy {
     }
 }
 
+/// Typed admission dead-end: the modeled KV pool cannot hold even a
+/// single decode row, so the driver can never make progress. Raised as a
+/// hard error (the loud legacy behaviour); the fault-tolerance layer
+/// downcasts it ([`anyhow::Error::downcast_ref`]) and accounts the
+/// affected rows as admission faults instead of aborting the run when
+/// `[faults]` is enabled.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvAdmissionError {
+    /// Configured pool capacity (`hwsim.kv_pool_bytes`).
+    pub capacity: u64,
+    /// Prompt group of the queue head that could not be admitted.
+    pub group_idx: usize,
+    /// Bytes the queue head needed to admit.
+    pub needed: u64,
+    /// Page-rounded prompt-segment bytes of the request.
+    pub prompt_bytes: u64,
+    /// Page-rounded generation-reservation bytes of the request.
+    pub gen_bytes: u64,
+}
+
+impl std::fmt::Display for KvAdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hwsim.kv_pool_bytes = {} cannot hold a single decode row: the \
+             queue head (group {}) needs {} bytes (prompt pages {} + \
+             generation reservation {}); raise kv_pool_bytes (0 = unbounded)",
+            self.capacity, self.group_idx, self.needed, self.prompt_bytes, self.gen_bytes
+        )
+    }
+}
+
+impl std::error::Error for KvAdmissionError {}
+
 /// Engine-call accounting for one driver run.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DecodeStats {
@@ -556,15 +590,13 @@ impl<'a> Driver<'a> {
         if self.slots.iter().all(|s| s.is_none()) {
             if let Some(&r) = self.queue.front() {
                 let g = self.rows[r].group_idx;
-                bail!(
-                    "hwsim.kv_pool_bytes = {} cannot hold a single decode row: the \
-                     queue head (group {g}) needs {} bytes (prompt pages {} + \
-                     generation reservation {}); raise kv_pool_bytes (0 = unbounded)",
-                    self.pool.capacity(),
-                    self.admit_need(g),
-                    self.kv.prompt_bytes,
-                    self.kv.gen_bytes
-                );
+                return Err(anyhow::Error::new(KvAdmissionError {
+                    capacity: self.pool.capacity(),
+                    group_idx: g,
+                    needed: self.admit_need(g),
+                    prompt_bytes: self.kv.prompt_bytes,
+                    gen_bytes: self.kv.gen_bytes,
+                }));
             }
         }
         Ok(())

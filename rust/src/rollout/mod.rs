@@ -24,8 +24,8 @@
 pub mod chunked;
 
 pub use chunked::{
-    decode_rows, decode_rows_hooked, decode_rows_kv, DecodeStats, KvPolicy, PruneHook,
-    RefillMode, RowOut, RowSpec,
+    decode_rows, decode_rows_hooked, decode_rows_kv, DecodeStats, KvAdmissionError, KvPolicy,
+    PruneHook, RefillMode, RowOut, RowSpec,
 };
 
 use crate::coordinator::group::{PromptGroup, RolloutRecord};
@@ -64,6 +64,22 @@ pub struct InferenceStats {
     /// High-water mark of the modeled KV pool, in bytes. Per-device:
     /// worker shards hold independent pools, so merging takes the max.
     pub kv_peak_bytes: u64,
+    /// Injected fault events (crash / transient / admission-OOM draws that
+    /// fired, one per faulted row-attempt).
+    pub faults_injected: usize,
+    /// Physical retry jobs submitted for failed rows.
+    pub shard_retries: usize,
+    /// Rows lost permanently after exhausting `faults.max_retries`.
+    pub rows_lost: usize,
+    /// Simulated retry-backoff seconds accumulated by failed row-attempts
+    /// that were retried.
+    pub fault_backoff_time: f64,
+    /// Decode tokens wasted by crashed attempts (the generation budget of
+    /// each crashed row-attempt — work done, then lost).
+    pub fault_wasted_tokens: usize,
+    /// Chunk-rounded generated tokens of straggler rows; the clock charges
+    /// them an extra `(straggler_factor - 1) ×` slowdown.
+    pub straggler_tokens: usize,
 }
 
 impl InferenceStats {
@@ -81,6 +97,12 @@ impl InferenceStats {
         self.prefill_calls += other.prefill_calls;
         self.prefill_calls_saved += other.prefill_calls_saved;
         self.kv_peak_bytes = self.kv_peak_bytes.max(other.kv_peak_bytes);
+        self.faults_injected += other.faults_injected;
+        self.shard_retries += other.shard_retries;
+        self.rows_lost += other.rows_lost;
+        self.fault_backoff_time += other.fault_backoff_time;
+        self.fault_wasted_tokens += other.fault_wasted_tokens;
+        self.straggler_tokens += other.straggler_tokens;
     }
 }
 
@@ -165,6 +187,10 @@ pub fn plan_rows(problems: &[Problem], n: usize, run_seed: u64, iter: u64) -> Ve
 pub struct CallRollout {
     /// Prompt group the rollout belongs to.
     pub group_idx: usize,
+    /// Index of the rollout within its group (its `RowSpec.rollout_idx`).
+    /// Lets the assembler restore canonical group order when rollouts
+    /// arrive out of order (retried shards complete whenever they do).
+    pub rollout_idx: usize,
     /// The finished rollout, update-phase ready.
     pub record: RolloutRecord,
 }
@@ -298,6 +324,7 @@ pub fn execute_rows(
         let total_reward = reward.total(weights);
         kept.push(CallRollout {
             group_idx: r.group_idx,
+            rollout_idx: r.rollout_idx,
             record: RolloutRecord {
                 pad_len: r.pad_len,
                 gen_mask: r.gen_mask,
@@ -480,6 +507,12 @@ mod tests {
             prefill_calls: 3,
             prefill_calls_saved: 2,
             kv_peak_bytes: 4096,
+            faults_injected: 2,
+            shard_retries: 1,
+            rows_lost: 1,
+            fault_backoff_time: 0.5,
+            fault_wasted_tokens: 64,
+            straggler_tokens: 32,
         };
         let b = InferenceStats {
             calls: 1,
@@ -492,6 +525,12 @@ mod tests {
             prefill_calls: 1,
             prefill_calls_saved: 4,
             kv_peak_bytes: 1024,
+            faults_injected: 3,
+            shard_retries: 2,
+            rows_lost: 0,
+            fault_backoff_time: 1.5,
+            fault_wasted_tokens: 16,
+            straggler_tokens: 8,
         };
         a.absorb(&b);
         assert_eq!(a.calls, 3);
@@ -505,6 +544,13 @@ mod tests {
         assert_eq!(a.prefill_calls_saved, 6);
         // per-device pools: the merged peak is the busiest device's
         assert_eq!(a.kv_peak_bytes, 4096);
+        // fault accounting sums across shards
+        assert_eq!(a.faults_injected, 5);
+        assert_eq!(a.shard_retries, 3);
+        assert_eq!(a.rows_lost, 1);
+        assert!((a.fault_backoff_time - 2.0).abs() < 1e-12);
+        assert_eq!(a.fault_wasted_tokens, 80);
+        assert_eq!(a.straggler_tokens, 40);
     }
 
     /// Prompt-KV sharing relies on group siblings being adjacent in the

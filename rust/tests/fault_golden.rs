@@ -1,0 +1,343 @@
+//! Golden tests for the fault-tolerance layer (ISSUE #8).
+//!
+//! * The fault schedule is history, not partition: the same seed loses the
+//!   same rows and injects the same faults for any worker-pool size.
+//! * Transient faults with enough retry budget reproduce the fault-free
+//!   trained parameters bitwise — retried rows replay identical tokens.
+//! * `enabled = true` with all-zero rates is bit-identical to a disabled
+//!   section, clock included.
+//! * A run killed at a snapshot boundary and resumed with `--resume`
+//!   lands on the uninterrupted run's parameters, clock and CSVs — for
+//!   both executor schedules.
+//!
+//! Trainer-level tests are skipped when artifacts are absent (CI without
+//! `make artifacts`); the plan-level property test always runs.
+
+use pods::config::{CkptSection, RunConfig};
+use pods::coordinator::scheduler::Trainer;
+use pods::exp::CfgBuilder;
+use pods::hwsim::FaultSection;
+use pods::metrics::CsvRow;
+use pods::util::prop;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = pods::default_artifacts_dir();
+    if dir.join("base/meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// A small-but-real run config: 2 prompts x n=16 rollouts per iteration.
+/// `out_sub` isolates each arm's CSVs and resume snapshot; the directory
+/// is wiped so stale state from an earlier test run cannot leak in.
+fn cfg(
+    name: &str,
+    schedule: &str,
+    workers: usize,
+    iterations: usize,
+    faults: FaultSection,
+    ckpt_every: usize,
+    out_sub: &str,
+) -> RunConfig {
+    let out = std::env::temp_dir().join("pods_fault_golden").join(out_sub);
+    std::fs::remove_dir_all(&out).ok();
+    CfgBuilder {
+        name: name.into(),
+        profile: "base".into(),
+        task: "arith".into(),
+        iterations,
+        prompts_per_iter: 2,
+        eval_every: 2,
+        eval_problems: 16,
+        kind: "pods".into(),
+        n: 16,
+        m: Some(4),
+        lr: 1e-4,
+        workers,
+        schedule: schedule.into(),
+        faults,
+        ckpt: CkptSection { every: ckpt_every, path: None },
+        out_dir: out.to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+    .build()
+    .unwrap()
+}
+
+/// One CSV row with the wall-clock column blanked — `real_time` (index 2
+/// in both schemas) measures this process, not the simulated run, so it
+/// is the one column resume cannot and need not reproduce.
+fn strip_realtime(row: &str) -> String {
+    row.split(',')
+        .enumerate()
+        .map(|(i, f)| if i == 2 { "_" } else { f })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Tentpole golden (a): the set of injected faults, the rows lost after
+/// retries, and the trained parameters are bit-identical across
+/// worker-pool sizes. Only physical shard-retry counts may move with the
+/// partition.
+#[test]
+fn fault_schedule_is_pool_size_invariant() {
+    let Some(dir) = artifacts() else { return };
+    let faults = FaultSection {
+        enabled: true,
+        crash_rate: 0.08,
+        transient_rate: 0.08,
+        oom_rate: 0.04,
+        straggler_rate: 0.1,
+        max_retries: 2,
+        ..FaultSection::default()
+    };
+    let iters = 2;
+    let run = |workers: usize| {
+        let c = cfg("golden_pool_faults", "sync", workers, iters, faults.clone(), 0, "pool");
+        let mut tr = Trainer::new(&dir, c).unwrap();
+        tr.engine.quiet = true;
+        let stats: Vec<_> = (0..iters).map(|it| tr.train_iteration(it).unwrap()).collect();
+        (tr, stats)
+    };
+    let (tr1, s1) = run(1);
+    let (tr4, s4) = run(4);
+    assert_eq!(
+        tr1.store.params, tr4.store.params,
+        "worker-pool size changed trained parameters under fault injection"
+    );
+    let mut injected = 0usize;
+    for (a, b) in s1.iter().zip(&s4) {
+        assert_eq!(a.faults_injected, b.faults_injected, "fault schedule moved with the pool");
+        assert_eq!(a.rows_lost, b.rows_lost, "row losses moved with the pool");
+        assert_eq!(
+            a.retry_time.to_bits(),
+            b.retry_time.to_bits(),
+            "retry bill must be partition-invariant"
+        );
+        assert_eq!(a.rollouts_generated, b.rollouts_generated);
+        assert_eq!(a.loss, b.loss);
+        injected += a.faults_injected;
+    }
+    assert!(injected > 0, "the golden needs a non-trivial fault schedule to pin anything");
+}
+
+/// Golden (b): transient faults that all succeed on retry are invisible
+/// to training — parameters match the fault-free run bitwise; only the
+/// simulated clock pays (backoff).
+#[test]
+fn transient_retries_reproduce_fault_free_params() {
+    let Some(dir) = artifacts() else { return };
+    let iters = 2;
+    let faulty = FaultSection {
+        enabled: true,
+        transient_rate: 0.25,
+        max_retries: 10, // per-row loss odds 0.25^11: retries always win
+        ..FaultSection::default()
+    };
+    let run = |faults: FaultSection, sub: &str| {
+        let c = cfg("golden_transient", "sync", 2, iters, faults, 0, sub);
+        let mut tr = Trainer::new(&dir, c).unwrap();
+        tr.engine.quiet = true;
+        let stats: Vec<_> = (0..iters).map(|it| tr.train_iteration(it).unwrap()).collect();
+        (tr, stats)
+    };
+    let (clean, _) = run(FaultSection::default(), "transient_clean");
+    let (fault, stats) = run(faulty, "transient_fault");
+    let injected: usize = stats.iter().map(|s| s.faults_injected).sum();
+    let lost: usize = stats.iter().map(|s| s.rows_lost).sum();
+    assert!(injected > 0, "transient rate 0.25 over 64 row-slots must inject");
+    assert_eq!(lost, 0, "a 10-retry budget must recover every transient fault");
+    assert_eq!(
+        clean.store.params, fault.store.params,
+        "recovered transient faults leaked into training"
+    );
+    assert!(
+        fault.clock.now() > clean.clock.now(),
+        "retries must bill simulated backoff time ({} vs {})",
+        fault.clock.now(),
+        clean.clock.now()
+    );
+    assert!(stats.iter().any(|s| s.retry_time > 0.0));
+}
+
+/// Golden (c): `[faults] enabled = true` with every rate at zero is
+/// bit-identical to the disabled default — parameters, simulated clock
+/// and both CSVs (modulo the process-wall-clock column).
+#[test]
+fn zero_rate_faults_are_bit_identical_to_disabled() {
+    let Some(dir) = artifacts() else { return };
+    let run = |faults: FaultSection, sub: &str| {
+        let c = cfg("golden_zero_rate", "sync", 1, 2, faults, 0, sub);
+        let mut tr = Trainer::new(&dir, c).unwrap();
+        tr.engine.quiet = true;
+        tr.run().unwrap();
+        tr
+    };
+    let off = run(FaultSection::default(), "zero_off");
+    let on = run(FaultSection { enabled: true, ..FaultSection::default() }, "zero_on");
+    assert_eq!(off.store.params, on.store.params);
+    assert_eq!(off.clock.now().to_bits(), on.clock.now().to_bits());
+    assert_eq!(off.clock.overlap_saved().to_bits(), on.clock.overlap_saved().to_bits());
+    assert_eq!(off.recorder.iters.len(), on.recorder.iters.len());
+    for (a, b) in off.recorder.iters.iter().zip(&on.recorder.iters) {
+        assert_eq!(strip_realtime(&a.csv_row()), strip_realtime(&b.csv_row()));
+    }
+    assert_eq!(off.recorder.evals.len(), on.recorder.evals.len());
+    for (a, b) in off.recorder.evals.iter().zip(&on.recorder.evals) {
+        assert_eq!(strip_realtime(&a.csv_row()), strip_realtime(&b.csv_row()));
+    }
+}
+
+/// Golden (d): kill at a snapshot boundary, resume, and land bitwise on
+/// the uninterrupted run — parameters, clock, overlap accounting and both
+/// recorder CSVs (modulo `real_time`). Fault injection stays on so the
+/// snapshot also has to reproduce the retry bill.
+fn resume_roundtrip(schedule: &str) {
+    let Some(dir) = artifacts() else { return };
+    let iters = 4;
+    let kill_at = 2;
+    let faults = FaultSection {
+        enabled: true,
+        crash_rate: 0.05,
+        transient_rate: 0.05,
+        max_retries: 2,
+        ..FaultSection::default()
+    };
+    // arm A: uninterrupted
+    let ca = cfg(
+        "golden_resume",
+        schedule,
+        1,
+        iters,
+        faults.clone(),
+        kill_at,
+        &format!("resume_full_{schedule}"),
+    );
+    let mut a = Trainer::new(&dir, ca).unwrap();
+    a.engine.quiet = true;
+    a.run().unwrap();
+
+    // arm B: run to the boundary, "crash" (drop the trainer), resume
+    let cb = cfg(
+        "golden_resume",
+        schedule,
+        1,
+        iters,
+        faults,
+        kill_at,
+        &format!("resume_kill_{schedule}"),
+    );
+    let mut b = Trainer::new(&dir, cb.clone()).unwrap();
+    b.engine.quiet = true;
+    b.run_span(kill_at).unwrap();
+    drop(b);
+
+    let resume = cb.ckpt.resume_path(&cb.run.out_dir, &cb.run.name);
+    assert!(
+        std::path::Path::new(&resume).exists(),
+        "run_span({kill_at}) must leave a snapshot at {resume}"
+    );
+    let mut b2 = Trainer::new(&dir, cb).unwrap();
+    b2.engine.quiet = true;
+    b2.resume_from(std::path::Path::new(&resume)).unwrap();
+    b2.run().unwrap();
+
+    assert_eq!(
+        a.store.params, b2.store.params,
+        "{schedule}: resumed parameters diverged from the uninterrupted run"
+    );
+    assert_eq!(
+        a.clock.now().to_bits(),
+        b2.clock.now().to_bits(),
+        "{schedule}: resumed clock diverged ({} vs {})",
+        a.clock.now(),
+        b2.clock.now()
+    );
+    assert_eq!(a.clock.overlap_saved().to_bits(), b2.clock.overlap_saved().to_bits());
+    assert_eq!(a.recorder.iters.len(), b2.recorder.iters.len(), "{schedule}: iter rows");
+    for (ra, rb) in a.recorder.iters.iter().zip(&b2.recorder.iters) {
+        assert_eq!(
+            strip_realtime(&ra.csv_row()),
+            strip_realtime(&rb.csv_row()),
+            "{schedule}: iter CSV rows diverged after resume"
+        );
+    }
+    assert_eq!(a.recorder.evals.len(), b2.recorder.evals.len(), "{schedule}: eval rows");
+    for (ra, rb) in a.recorder.evals.iter().zip(&b2.recorder.evals) {
+        assert_eq!(
+            strip_realtime(&ra.csv_row()),
+            strip_realtime(&rb.csv_row()),
+            "{schedule}: eval CSV rows diverged after resume"
+        );
+    }
+}
+
+#[test]
+fn resume_after_kill_is_bit_identical_sync() {
+    resume_roundtrip("sync");
+}
+
+/// The pipelined arm additionally round-trips the in-flight prefetch: at
+/// the kill boundary a generation for iteration `kill_at` is already
+/// pending, so the snapshot must capture and the resume must rebuild it.
+#[test]
+fn resume_after_kill_is_bit_identical_pipelined() {
+    resume_roundtrip("pipelined");
+}
+
+/// Property (always runs, no artifacts): the fault plan is a pure
+/// function of its coordinates — two independently built plans agree draw
+/// for draw — and the executor's physical retry loop reaches exactly the
+/// verdict `row_lost` computes from schedule arithmetic.
+#[test]
+fn fault_plan_matches_physical_retry_verdicts() {
+    prop::for_cases(64, |rng| {
+        let sec = FaultSection {
+            enabled: true,
+            crash_rate: rng.f64() * 0.3,
+            transient_rate: rng.f64() * 0.3,
+            oom_rate: rng.f64() * 0.2,
+            straggler_rate: rng.f64() * 0.5,
+            max_retries: rng.below(4),
+            ..FaultSection::default()
+        };
+        sec.validate().unwrap();
+        let seed = rng.next_u64();
+        let a = sec.plan(seed).unwrap();
+        let b = sec.plan(seed).unwrap();
+        for iter in 0..3u64 {
+            for prompt in 0..3u64 {
+                for idx in 0..4u64 {
+                    for attempt in 0..=sec.max_retries {
+                        assert_eq!(
+                            a.row_fault(iter, prompt, idx, attempt),
+                            b.row_fault(iter, prompt, idx, attempt),
+                            "plan draws must be deterministic"
+                        );
+                    }
+                    assert_eq!(
+                        a.row_straggler(iter, prompt, idx),
+                        b.row_straggler(iter, prompt, idx)
+                    );
+                    // physically retry until success or budget exhaustion
+                    let mut attempt = 0usize;
+                    let lost = loop {
+                        match a.row_fault(iter, prompt, idx, attempt) {
+                            None => break false,
+                            Some(_) if attempt < sec.max_retries => attempt += 1,
+                            Some(_) => break true,
+                        }
+                    };
+                    assert_eq!(
+                        lost,
+                        a.row_lost(iter, prompt, idx),
+                        "retry loop and schedule arithmetic disagree"
+                    );
+                }
+            }
+        }
+    });
+}
