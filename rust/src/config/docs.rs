@@ -7,7 +7,7 @@
 //! and CI runs [`check`] (`pods config-docs --check`) to fail when the
 //! committed file is stale.
 
-use super::{CkptSection, ReplaySection, RolloutSection, UpdateSection};
+use super::{BudgetSection, CkptSection, ReplaySection, RolloutSection, UpdateSection};
 use crate::hwsim::{FaultSection, HwModel};
 use anyhow::{anyhow, Result};
 use std::path::Path;
@@ -57,6 +57,7 @@ pub fn sections() -> Vec<SectionDoc> {
     let ro = RolloutSection::default();
     let up = UpdateSection::default();
     let rp = ReplaySection::default();
+    let bu = BudgetSection::default();
     let fa = FaultSection::default();
     let ck = CkptSection::default();
     vec![
@@ -128,6 +129,24 @@ pub fn sections() -> Vec<SectionDoc> {
                 KeyDoc::new("staleness", "int", rp.staleness.to_string(), ">= 1", "Iterations a stored row stays eligible; older rows evict deterministically."),
                 KeyDoc::new("capacity_per_prompt", "int", rp.capacity_per_prompt.to_string(), ">= 1", "Stored rows kept per prompt (eviction: staleness, then admission score, ties by row id)."),
                 KeyDoc::new("rho_max", "float", rp.rho_max.to_string(), ">= 1", "Per-token importance-ratio ceiling for replayed rows (stored `old_lp` floors at `-ln(rho_max)`)."),
+            ],
+        },
+        SectionDoc {
+            name: "budget",
+            intro: "Adaptive per-prompt rollout budgets: decode `n_probe` \
+                    rollouts per prompt, then stream the released \
+                    `(n - n_probe) x |groups|` slots to the groups whose \
+                    observed reward bracket is still wide. The allocation \
+                    is a pure function of observed probe history — never \
+                    of worker-pool partition or refill order — so trained \
+                    parameters are bit-invariant to pool and chunk sizes, \
+                    and disabled budgeting is bit-identical to the \
+                    fixed-n path (docs/DETERMINISM.md).",
+            keys: vec![
+                KeyDoc::new("enabled", "bool", bu.enabled.to_string(), "requires `algo.kind = \"pods\"` and `algo.adv_norm = \"after\"`", "Turn adaptive budgets on."),
+                KeyDoc::new("n_probe", "int", bu.n_probe.to_string(), ">= 1; <= algo.n", "Probe quota: rollouts decoded per prompt before any reallocation."),
+                KeyDoc::new("max_per_prompt", "int", bu.max_per_prompt.to_string(), ">= n_probe", "Hard per-prompt cap on total rollouts (probe + extras); may exceed `algo.n`."),
+                KeyDoc::new("width_threshold", "float", bu.width_threshold.to_string(), "finite, >= 0", "Observed reward-bracket width (max - min over finished, unpruned probe rollouts) below which a group is saturated and receives no extras."),
             ],
         },
         SectionDoc {
@@ -361,6 +380,18 @@ mod tests {
             rp.capacity_per_prompt.to_string()
         );
         assert_eq!(key(&secs, "replay", "rho_max").default, rp.rho_max.to_string());
+        // [budget] — defaults of the off-by-default section
+        let bu = &cfg.budget;
+        assert_eq!(key(&secs, "budget", "enabled").default, bu.enabled.to_string());
+        assert_eq!(key(&secs, "budget", "n_probe").default, bu.n_probe.to_string());
+        assert_eq!(
+            key(&secs, "budget", "max_per_prompt").default,
+            bu.max_per_prompt.to_string()
+        );
+        assert_eq!(
+            key(&secs, "budget", "width_threshold").default,
+            bu.width_threshold.to_string()
+        );
         // [faults] — defaults of the off-by-default section
         let fa = &cfg.faults;
         assert_eq!(key(&secs, "faults", "enabled").default, fa.enabled.to_string());
@@ -418,8 +449,8 @@ mod tests {
     fn render_and_check_roundtrip() {
         let text = render();
         for sec in [
-            "[run]", "[algo]", "[rollout]", "[update]", "[replay]", "[hwsim]", "[faults]",
-            "[ckpt]", "[sft]",
+            "[run]", "[algo]", "[rollout]", "[update]", "[replay]", "[budget]", "[hwsim]",
+            "[faults]", "[ckpt]", "[sft]",
         ] {
             assert!(text.contains(sec), "missing section {sec}");
         }

@@ -322,6 +322,82 @@ impl ReplaySection {
     }
 }
 
+/// `[budget]` — adaptive per-prompt rollout budgets (the
+/// `coordinator::scheduler::BudgetAllocator`).
+///
+/// When enabled, each iteration decodes only a probe quota of `n_probe`
+/// rollouts per prompt first, then redistributes the remaining
+/// `(n − n_probe) × |groups|` slots to the groups whose observed reward
+/// bracket is still wider than `width_threshold` — saturated groups
+/// release their budget to high-variance ones. The allocation sequence is
+/// a pure function of observed probe history (never of worker-pool
+/// partition or refill order — see docs/DETERMINISM.md), so trained
+/// parameters stay bit-invariant to pool and chunk sizes. Off by default;
+/// disabled budget is bit-identical to the fixed-`n` path.
+#[derive(Debug, Clone)]
+pub struct BudgetSection {
+    /// Master switch. `false` (default) keeps the fixed-`n` decode
+    /// schedule bit-identical to a build without the allocator.
+    pub enabled: bool,
+    /// Probe quota: rollouts decoded per prompt before any reallocation.
+    pub n_probe: usize,
+    /// Hard per-prompt cap on total rollouts (probe + extras). May exceed
+    /// `algo.n`: a high-variance group can absorb budget that saturated
+    /// groups released.
+    pub max_per_prompt: usize,
+    /// A group whose observed reward bracket (max − min over finished,
+    /// unpruned probe rollouts) is below this width is **saturated** and
+    /// receives no extra rollouts.
+    pub width_threshold: f64,
+}
+
+impl Default for BudgetSection {
+    fn default() -> Self {
+        Self { enabled: false, n_probe: 8, max_per_prompt: 128, width_threshold: 0.25 }
+    }
+}
+
+impl BudgetSection {
+    fn from_section(sec: &SectionView) -> Result<Self> {
+        let d = Self::default();
+        let b = Self {
+            enabled: sec.bool_or("enabled", d.enabled)?,
+            n_probe: sec.usize_or("n_probe", d.n_probe)?,
+            max_per_prompt: sec.usize_or("max_per_prompt", d.max_per_prompt)?,
+            width_threshold: sec.f64_or("width_threshold", d.width_threshold)?,
+        };
+        b.validate()?;
+        Ok(b)
+    }
+
+    /// Reject degenerate budget policies at parse time.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_probe == 0 {
+            return Err(anyhow!(
+                "budget.n_probe must be >= 1 (rollouts decoded per prompt before \
+                 the allocator redistributes anything; the bracket of a group \
+                 with zero observations is unknowable)"
+            ));
+        }
+        if self.max_per_prompt < self.n_probe {
+            return Err(anyhow!(
+                "budget.max_per_prompt must be >= budget.n_probe (got max_per_prompt={}, \
+                 n_probe={}): the probe quota itself would already violate the cap",
+                self.max_per_prompt,
+                self.n_probe
+            ));
+        }
+        if !self.width_threshold.is_finite() || self.width_threshold < 0.0 {
+            return Err(anyhow!(
+                "budget.width_threshold must be a finite value >= 0.0 (observed \
+                 reward-bracket width below which a group is saturated; got {})",
+                self.width_threshold
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// `[ckpt]` — crash-consistent checkpoint/resume (the `coordinator::ckpt`
 /// subsystem).
 ///
@@ -388,6 +464,8 @@ pub struct RunConfig {
     pub update: UpdateSection,
     /// `[replay]` — cross-iteration rollout replay (off by default).
     pub replay: ReplaySection,
+    /// `[budget]` — adaptive per-prompt rollout budgets (off by default).
+    pub budget: BudgetSection,
     /// `[faults]` — deterministic fault injection (off by default).
     pub faults: crate::hwsim::FaultSection,
     /// `[ckpt]` — crash-consistent checkpoint/resume (off by default).
@@ -412,6 +490,7 @@ impl RunConfig {
         let rollout = SectionView::new(&doc, "rollout");
         let update = SectionView::new(&doc, "update");
         let replay = SectionView::new(&doc, "replay");
+        let budget = SectionView::new(&doc, "budget");
         let faults = SectionView::new(&doc, "faults");
         let ckpt = SectionView::new(&doc, "ckpt");
         let sft = SectionView::new(&doc, "sft");
@@ -447,6 +526,7 @@ impl RunConfig {
             rollout: RolloutSection::from_section(&rollout)?,
             update: UpdateSection::from_section(&update)?,
             replay: ReplaySection::from_section(&replay)?,
+            budget: BudgetSection::from_section(&budget)?,
             faults: crate::hwsim::FaultSection::from_section(&faults)?,
             ckpt: CkptSection::from_section(&ckpt)?,
             sft: if sft.sec.is_some() {
@@ -530,6 +610,7 @@ impl RunConfig {
         self.rollout.validate()?;
         self.update.validate()?;
         self.replay.validate()?;
+        self.budget.validate()?;
         self.faults.validate()?;
         // replayed rows reuse the advantage convention of the selected
         // subset ("after" statistics); "before" normalizes over the full
@@ -541,6 +622,38 @@ impl RunConfig {
                  statistics, which only matches the \"after\" convention (see \
                  docs/DETERMINISM.md)"
             ));
+        }
+        // the allocator only pays off when a selection pipeline discards
+        // rows (PODS), and variable per-group n only composes with the
+        // "after" normalization convention: "before" normalizes over the
+        // whole generated group, so group size itself becomes a training
+        // signal and the disabled-equals-fixed-n contract would not hold
+        if self.budget.enabled {
+            if kind != AlgoKind::GrpoPods {
+                return Err(anyhow!(
+                    "budget.enabled requires algo.kind = \"pods\": adaptive rollout \
+                     budgets reinvest decode spend that down-sampling discards; \
+                     grpo/ga train on every generated rollout, so there is no \
+                     budget to reallocate"
+                ));
+            }
+            if self.norm_mode() == NormMode::Before {
+                return Err(anyhow!(
+                    "budget.enabled requires algo.adv_norm = \"after\": the \
+                     \"before\" mode normalizes advantages over the whole \
+                     generated group, so a variable per-group rollout count \
+                     would itself perturb the statistics (see docs/DETERMINISM.md)"
+                ));
+            }
+            if self.budget.n_probe > self.algo.n {
+                return Err(anyhow!(
+                    "budget.n_probe must be <= algo.n (got n_probe={}, n={}): the \
+                     probe quota alone would exceed the per-iteration decode \
+                     budget of n rollouts per prompt",
+                    self.budget.n_probe,
+                    self.algo.n
+                ));
+            }
         }
         // online pruning is only sound when advantages normalize on the
         // selected subset: "before" reads every rollout's reward, which an
@@ -878,6 +991,74 @@ mod tests {
         let text = format!("{MINIMAL}\n[faults]\nbackoff_factor = 0.5\n");
         let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
         assert!(err.contains("faults.backoff_factor"), "undescriptive: {err}");
+    }
+
+    #[test]
+    fn budget_section_defaults_and_overrides() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert!(!cfg.budget.enabled, "adaptive budgets must be opt-in");
+        assert_eq!(cfg.budget.n_probe, 8);
+        assert_eq!(cfg.budget.max_per_prompt, 128);
+        assert!((cfg.budget.width_threshold - 0.25).abs() < 1e-12);
+
+        let text = format!(
+            "{MINIMAL}\n[budget]\nenabled = true\nn_probe = 4\n\
+             max_per_prompt = 32\nwidth_threshold = 0.5\n"
+        );
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert!(cfg.budget.enabled);
+        assert_eq!(cfg.budget.n_probe, 4);
+        assert_eq!(cfg.budget.max_per_prompt, 32);
+        assert!((cfg.budget.width_threshold - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_section_rejects_degenerate_values() {
+        let text = format!("{MINIMAL}\n[budget]\nn_probe = 0\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("budget.n_probe"), "undescriptive: {err}");
+
+        let text = format!("{MINIMAL}\n[budget]\nn_probe = 8\nmax_per_prompt = 4\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("budget.max_per_prompt"), "undescriptive: {err}");
+
+        let text = format!("{MINIMAL}\n[budget]\nwidth_threshold = -0.5\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("budget.width_threshold"), "undescriptive: {err}");
+
+        // probe quota above n is a cross-section failure (enabled only)
+        let text = format!("{MINIMAL}\n[budget]\nenabled = true\nn_probe = 128\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("n_probe"), "undescriptive: {err}");
+        assert!(err.contains("algo.n"), "undescriptive: {err}");
+        let text = format!("{MINIMAL}\n[budget]\nn_probe = 128\nmax_per_prompt = 256\n");
+        assert!(
+            RunConfig::from_str_validated(&text).is_ok(),
+            "disabled budget must not gate on algo.n"
+        );
+    }
+
+    #[test]
+    fn budget_requires_pods_and_after_normalization() {
+        let text = format!(
+            "{}\n[budget]\nenabled = true\n",
+            MINIMAL.replace("kind = \"pods\"", "kind = \"grpo\"").replace("m = 16\n", "")
+        );
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("budget.enabled"), "undescriptive: {err}");
+        assert!(err.contains("pods"), "undescriptive: {err}");
+
+        let text = format!(
+            "{}\n[budget]\nenabled = true\n",
+            MINIMAL.replace("lr = 1e-4", "lr = 1e-4\nadv_norm = \"before\"")
+        );
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("budget.enabled"), "undescriptive: {err}");
+        assert!(err.contains("adv_norm"), "undescriptive: {err}");
+
+        // disabled budget composes with either, like the other gated sections
+        let text = MINIMAL.replace("lr = 1e-4", "lr = 1e-4\nadv_norm = \"before\"");
+        assert!(RunConfig::from_str_validated(&text).is_ok());
     }
 
     #[test]

@@ -48,6 +48,7 @@ use crate::config::{AlgoKind, RunConfig};
 use crate::coordinator::advantage::NormMode;
 use crate::coordinator::group::{build_update_batch, BatchSelectionStats};
 use crate::coordinator::replay::{ReplayStore, StoredRow};
+use crate::coordinator::scheduler::BudgetSpec;
 use crate::coordinator::select::online::GroupVerdicts;
 use crate::coordinator::select::Pipeline;
 use crate::hwsim::SimClock;
@@ -167,6 +168,12 @@ pub struct StepReport {
     /// backoff + work wasted by crashed attempts + straggler slowdown.
     /// Included in `sim_inference`.
     pub retry_time: f64,
+    /// Extra rollout rows the budget allocator streamed to wide-bracket
+    /// groups past the probe quota (0 with `[budget]` disabled).
+    pub budget_extra_rows: usize,
+    /// Groups whose probe reward bracket was already narrower than
+    /// `budget.width_threshold` (0 with `[budget]` disabled).
+    pub budget_saturated_groups: usize,
 }
 
 /// The schedule-aware driver for one training run.
@@ -477,6 +484,8 @@ impl TrainLoop {
             shard_retries: gen_stats.shard_retries,
             rows_lost: gen_stats.rows_lost,
             retry_time,
+            budget_extra_rows: gen_stats.budget_extra_rows,
+            budget_saturated_groups: gen_stats.budget_saturated_groups,
         })
     }
 }
@@ -541,9 +550,14 @@ pub fn build_gen_batch(
     // dropped ones), which a truncated stream would perturb — config
     // validation rejects the combination, and this gate backstops
     // programmatically-built configs.
+    let budget = BudgetSpec::from_config(cfg);
+    // Under a budget the verdict groups start at the probe quota; the
+    // rollout engine grows them (`GroupVerdicts::grow_group`) when the
+    // allocator streams extra rows after the probe wave.
+    let n0 = budget.map(|b| b.n_probe).unwrap_or(cfg.algo.n);
     let online = match m {
         Some(m) if cfg.rollout.online_prune && cfg.norm_mode() == NormMode::After => {
-            Some(Arc::new(GroupVerdicts::new(pipeline, problems.len(), cfg.algo.n, m, &weights)))
+            Some(Arc::new(GroupVerdicts::new(pipeline, problems.len(), n0, m, &weights)))
         }
         _ => None,
     };
@@ -569,5 +583,6 @@ pub fn build_gen_batch(
             engine.meta.config.seq_len - engine.meta.config.prompt_len,
         ),
         faults: cfg.faults.plan(cfg.run.seed),
+        budget,
     }
 }

@@ -40,12 +40,13 @@
 //! before.
 
 use crate::coordinator::group::PromptGroup;
+use crate::coordinator::scheduler::{BudgetAllocator, BudgetSpec};
 use crate::coordinator::select::online::GroupVerdicts;
 use crate::hwsim::{FaultKind, FaultPlan};
 use crate::reward::RewardWeights;
 use crate::rollout::{
-    execute_rows, plan_rows, CallRollout, InferenceStats, KvAdmissionError, KvPolicy, RefillMode,
-    RowSpec,
+    execute_rows, plan_rows, row_seed, CallRollout, InferenceStats, KvAdmissionError, KvPolicy,
+    RefillMode, RowSpec,
 };
 use crate::runtime::Engine;
 use crate::tasks::{Problem, TaskKind};
@@ -99,6 +100,17 @@ pub struct GenBatch {
     /// Seeded fault schedule (`[faults]`); `None` disables injection and
     /// keeps every executor error loud.
     pub faults: Option<FaultPlan>,
+    /// Adaptive per-prompt rollout budget (`[budget]`). When set,
+    /// generation runs in two waves: a probe wave of `n_probe` rows per
+    /// group, then — at the probe barrier — a
+    /// [`BudgetAllocator`] streams the remaining `(n − n_probe) × groups`
+    /// slots to groups whose observed reward bracket is still wide. The
+    /// allocation is a pure function of the assembled probe outcomes
+    /// (never of shard layout or completion order), and extra rows draw
+    /// their seeds from the same `row_seed` axis, so budgeted runs stay
+    /// bit-invariant to worker count and chunk size. `None` keeps the
+    /// fixed-`n` plan.
+    pub budget: Option<BudgetSpec>,
 }
 
 /// One queued shard of generation rows for a worker thread.
@@ -144,6 +156,9 @@ struct Pool {
 pub struct PendingGen {
     batch_id: u64,
     shards: usize,
+    /// The profile's rollout batch size — kept so the budget extra wave
+    /// shards with the same granularity rule as the probe wave.
+    br: usize,
     batch: Arc<GenBatch>,
 }
 
@@ -247,7 +262,7 @@ impl RolloutEngine {
         engine: &Engine,
         batch: GenBatch,
     ) -> Result<(Vec<PromptGroup>, InferenceStats)> {
-        let rows = plan_rows(&batch.problems, batch.n, batch.run_seed, batch.iter);
+        let rows = plan_rows(&batch.problems, probe_n(&batch), batch.run_seed, batch.iter);
         if self.workers <= 1 {
             // inline: one continuous queue over all rows — no replica, no
             // thread hop, maximal refill packing. Retries loop locally
@@ -262,9 +277,12 @@ impl RolloutEngine {
     /// Start generating `batch` on the pool and return immediately — the
     /// pipelined schedule's prefetch. `br` is the profile's rollout batch
     /// size (`engine.meta.config.rollout_batch`), which bounds how finely
-    /// the rows are sharded. At most one batch may be in flight.
+    /// the rows are sharded. At most one batch may be in flight. Under a
+    /// `[budget]` the submitted wave covers only the probe quota; the
+    /// budget extra wave runs inside [`Self::collect`], after the probe
+    /// outcomes are assembled.
     pub fn submit(&mut self, br: usize, batch: GenBatch) -> Result<PendingGen> {
-        let rows = plan_rows(&batch.problems, batch.n, batch.run_seed, batch.iter);
+        let rows = plan_rows(&batch.problems, probe_n(&batch), batch.run_seed, batch.iter);
         self.submit_rows(rows, Arc::new(batch), br)
     }
 
@@ -288,7 +306,7 @@ impl RolloutEngine {
                 .map_err(|_| anyhow!("rollout worker threads exited; pool is gone"))?;
         }
         self.in_flight = true;
-        Ok(PendingGen { batch_id, shards: n_shards, batch })
+        Ok(PendingGen { batch_id, shards: n_shards, br, batch })
     }
 
     /// Block until every shard of `pending` finished (retrying failed
@@ -296,115 +314,228 @@ impl RolloutEngine {
     /// assemble the groups in canonical plan order — rollouts sort by
     /// their in-group index, so worker completion order and retry timing
     /// cannot reorder anything.
+    ///
+    /// Under a `[budget]`, the submitted shards are the **probe wave**;
+    /// once it drains, the allocator converts the assembled probe
+    /// outcomes into extra rows and a second wave runs through the same
+    /// shard/retry machinery. The probe barrier is what makes the
+    /// allocation partition-pure: every worker layout observes the exact
+    /// same probe history before any extra slot is granted.
     pub fn collect(&mut self, pending: PendingGen) -> Result<(Vec<PromptGroup>, InferenceStats)> {
         // collect() consumes the in-flight batch whatever happens next —
         // a broken pool must surface its own error on later submits, not
         // a misleading "already in flight".
         self.in_flight = false;
+        let workers = self.workers.max(1);
         let pool = self
             .pool
             .as_ref()
             .ok_or_else(|| anyhow!("collect without a running pool"))?;
-        let plan = pending.batch.faults.clone();
-        let mut alive = pool.handles.len();
-        let mut outstanding = pending.shards;
-        let mut next_shard_idx = pending.shards; // fresh indices for retry jobs
-        let mut kept: Vec<CallRollout> = Vec::new();
-        let mut stats = InferenceStats::default();
-        let mut last_lost_reason = String::new();
-        while outstanding > 0 {
-            let msg = if alive > 0 {
-                pool.result_rx
-                    .recv()
-                    .map_err(|_| anyhow!("rollout workers hung up mid-batch"))?
-            } else {
-                // no worker remains to produce results: drain what is
-                // already buffered, then fail loudly on the missing shards
-                match pool.result_rx.try_recv() {
-                    Ok(m) => m,
-                    Err(_) => bail!(
-                        "all rollout workers lost ({last_lost_reason}); \
-                         {outstanding} shard(s) never completed"
-                    ),
+        let mut wave = WaveState {
+            alive: pool.handles.len(),
+            next_shard_idx: pending.shards,
+            kept: Vec::new(),
+            stats: InferenceStats::default(),
+        };
+        collect_wave(pool, &pending, pending.shards, &mut wave)?;
+        if let Some(spec) = pending.batch.budget {
+            let extras = plan_extra_rows(&pending.batch, spec, &wave.kept, &mut wave.stats);
+            if !extras.is_empty() {
+                let shards = shard_rows(&extras, workers, pending.br);
+                let n_shards = shards.len();
+                for rows in shards {
+                    pool.job_tx
+                        .send(Job {
+                            batch_id: pending.batch_id,
+                            shard_idx: wave.next_shard_idx,
+                            attempt: 0,
+                            rows,
+                            batch: Arc::clone(&pending.batch),
+                        })
+                        .map_err(|_| {
+                            anyhow!("rollout worker threads exited before the budget wave")
+                        })?;
+                    wave.next_shard_idx += 1;
                 }
-            };
-            let (attempt, rows, result) = match msg {
-                WorkerMsg::WorkerLost { reason } => {
-                    alive = alive.saturating_sub(1);
-                    last_lost_reason = reason;
-                    continue;
-                }
-                WorkerMsg::Shard { batch_id, attempt, rows, result } => {
-                    if batch_id != pending.batch_id {
-                        continue; // stragglers of a discarded batch
-                    }
-                    (attempt, rows, result)
-                }
-            };
-            outstanding -= 1;
-            match result {
-                Ok((shard_kept, shard_stats, failed)) => {
-                    stats.absorb(&shard_stats);
-                    kept.extend(shard_kept);
-                    if failed.is_empty() {
-                        continue;
-                    }
-                    match &plan {
-                        Some(p) if attempt < p.cfg.max_retries => {
-                            stats.shard_retries += 1;
-                            pool.job_tx
-                                .send(Job {
-                                    batch_id: pending.batch_id,
-                                    shard_idx: next_shard_idx,
-                                    attempt: attempt + 1,
-                                    rows: failed,
-                                    batch: Arc::clone(&pending.batch),
-                                })
-                                .map_err(|_| {
-                                    anyhow!("rollout worker threads exited mid-retry")
-                                })?;
-                            next_shard_idx += 1;
-                            outstanding += 1;
-                        }
-                        _ => stats.rows_lost += failed.len(),
-                    }
-                }
-                Err(e) => match &plan {
-                    // no fault layer: every shard error stays loud
-                    None => return Err(e.context("rollout shard failed")),
-                    Some(p) => {
-                        if e.downcast_ref::<KvAdmissionError>().is_some() {
-                            // deterministic pathology — the pool can never
-                            // hold the row, so retrying cannot help; the
-                            // rows are lost as admission faults and the
-                            // min_group_survivors floor decides loudness
-                            stats.faults_injected += rows.len();
-                            stats.rows_lost += rows.len();
-                        } else if attempt < p.cfg.max_retries {
-                            stats.shard_retries += 1;
-                            stats.fault_backoff_time += p.backoff(attempt);
-                            pool.job_tx
-                                .send(Job {
-                                    batch_id: pending.batch_id,
-                                    shard_idx: next_shard_idx,
-                                    attempt: attempt + 1,
-                                    rows,
-                                    batch: Arc::clone(&pending.batch),
-                                })
-                                .map_err(|_| {
-                                    anyhow!("rollout worker threads exited mid-retry")
-                                })?;
-                            next_shard_idx += 1;
-                            outstanding += 1;
-                        } else {
-                            stats.rows_lost += rows.len();
-                        }
-                    }
-                },
+                collect_wave(pool, &pending, n_shards, &mut wave)?;
             }
         }
-        Ok(assemble(&pending.batch, kept, stats))
+        Ok(assemble(&pending.batch, wave.kept, wave.stats))
     }
+}
+
+/// Mutable receive-loop state threaded through the waves of one
+/// [`RolloutEngine::collect`] call (the budget extra wave continues where
+/// the probe wave left off: same kept set, same stats, fresh shard
+/// indices, and worker losses carry over).
+struct WaveState {
+    alive: usize,
+    next_shard_idx: usize,
+    kept: Vec<CallRollout>,
+    stats: InferenceStats,
+}
+
+/// Drain `outstanding` shards of `pending` from the pool, retrying failed
+/// attempts per the batch's fault plan. One wave of the collect loop.
+fn collect_wave(
+    pool: &Pool,
+    pending: &PendingGen,
+    outstanding: usize,
+    wave: &mut WaveState,
+) -> Result<()> {
+    let plan = pending.batch.faults.clone();
+    let mut alive = wave.alive;
+    let mut next_shard_idx = wave.next_shard_idx;
+    let kept = &mut wave.kept;
+    let stats = &mut wave.stats;
+    let mut outstanding = outstanding;
+    let mut last_lost_reason = String::new();
+    while outstanding > 0 {
+        let msg = if alive > 0 {
+            pool.result_rx
+                .recv()
+                .map_err(|_| anyhow!("rollout workers hung up mid-batch"))?
+        } else {
+            // no worker remains to produce results: drain what is
+            // already buffered, then fail loudly on the missing shards
+            match pool.result_rx.try_recv() {
+                Ok(m) => m,
+                Err(_) => bail!(
+                    "all rollout workers lost ({last_lost_reason}); \
+                     {outstanding} shard(s) never completed"
+                ),
+            }
+        };
+        let (attempt, rows, result) = match msg {
+            WorkerMsg::WorkerLost { reason } => {
+                alive = alive.saturating_sub(1);
+                last_lost_reason = reason;
+                continue;
+            }
+            WorkerMsg::Shard { batch_id, attempt, rows, result } => {
+                if batch_id != pending.batch_id {
+                    continue; // stragglers of a discarded batch
+                }
+                (attempt, rows, result)
+            }
+        };
+        outstanding -= 1;
+        match result {
+            Ok((shard_kept, shard_stats, failed)) => {
+                stats.absorb(&shard_stats);
+                kept.extend(shard_kept);
+                if failed.is_empty() {
+                    continue;
+                }
+                match &plan {
+                    Some(p) if attempt < p.cfg.max_retries => {
+                        stats.shard_retries += 1;
+                        pool.job_tx
+                            .send(Job {
+                                batch_id: pending.batch_id,
+                                shard_idx: next_shard_idx,
+                                attempt: attempt + 1,
+                                rows: failed,
+                                batch: Arc::clone(&pending.batch),
+                            })
+                            .map_err(|_| anyhow!("rollout worker threads exited mid-retry"))?;
+                        next_shard_idx += 1;
+                        outstanding += 1;
+                    }
+                    _ => stats.rows_lost += failed.len(),
+                }
+            }
+            Err(e) => match &plan {
+                // no fault layer: every shard error stays loud
+                None => return Err(e.context("rollout shard failed")),
+                Some(p) => {
+                    if e.downcast_ref::<KvAdmissionError>().is_some() {
+                        // deterministic pathology — the pool can never
+                        // hold the row, so retrying cannot help; the
+                        // rows are lost as admission faults and the
+                        // min_group_survivors floor decides loudness
+                        stats.faults_injected += rows.len();
+                        stats.rows_lost += rows.len();
+                    } else if attempt < p.cfg.max_retries {
+                        stats.shard_retries += 1;
+                        stats.fault_backoff_time += p.backoff(attempt);
+                        pool.job_tx
+                            .send(Job {
+                                batch_id: pending.batch_id,
+                                shard_idx: next_shard_idx,
+                                attempt: attempt + 1,
+                                rows,
+                                batch: Arc::clone(&pending.batch),
+                            })
+                            .map_err(|_| anyhow!("rollout worker threads exited mid-retry"))?;
+                        next_shard_idx += 1;
+                        outstanding += 1;
+                    } else {
+                        stats.rows_lost += rows.len();
+                    }
+                }
+            },
+        }
+    }
+    wave.alive = alive;
+    wave.next_shard_idx = next_shard_idx;
+    Ok(())
+}
+
+/// How many rows per group the first decode wave plans: the probe quota
+/// under a `[budget]`, the full `n` otherwise.
+fn probe_n(batch: &GenBatch) -> usize {
+    batch.budget.map(|b| b.n_probe.min(batch.n)).unwrap_or(batch.n)
+}
+
+/// The probe barrier: fold the assembled probe outcomes into a
+/// [`BudgetAllocator`] and plan the extra-wave rows it grants.
+///
+/// Only unpruned rows observe — exactly the rewards the online verdict
+/// state ([`GroupVerdicts`]) saw retire, since aborted rows never reach
+/// `on_retired`. The observation fold is commutative (min/max), so the
+/// allocation is independent of the order probe rows completed in; rows
+/// lost to faults shrink the observation set identically across
+/// partitions because the fault plan keys on row identity. Extra rows
+/// take rollout indices `n_probe..` and draw seeds from the same
+/// `row_seed` axis as planned rows — their token streams need no new
+/// determinism machinery. When the batch carries online-pruning verdict
+/// state, each granted group is grown to its new size so the extra rows
+/// are observable and doomable like any probe row.
+fn plan_extra_rows(
+    batch: &GenBatch,
+    spec: BudgetSpec,
+    kept: &[CallRollout],
+    stats: &mut InferenceStats,
+) -> Vec<RowSpec> {
+    let mut alloc = BudgetAllocator::new(spec, batch.problems.len());
+    for cr in kept {
+        if !cr.record.pruned {
+            alloc.observe(cr.group_idx, cr.record.total_reward);
+        }
+    }
+    let grants = alloc.allocate();
+    stats.budget_extra_rows = grants.len();
+    stats.budget_saturated_groups = alloc.saturated_groups();
+    if let Some(verdicts) = &batch.online {
+        let mut add = vec![0usize; batch.problems.len()];
+        for &(g, _) in &grants {
+            add[g] += 1;
+        }
+        for (g, a) in add.into_iter().enumerate() {
+            if a > 0 {
+                verdicts.grow_group(g, a);
+            }
+        }
+    }
+    grants
+        .into_iter()
+        .map(|(g, r)| RowSpec {
+            group_idx: g,
+            rollout_idx: r as usize,
+            seed: row_seed(batch.run_seed, batch.iter, batch.problems[g].id, r as u64),
+        })
+        .collect()
 }
 
 impl Drop for RolloutEngine {
@@ -420,7 +551,8 @@ impl Drop for RolloutEngine {
 }
 
 /// The inline (workers <= 1) generation path with the same
-/// retry/degradation semantics as the pool path.
+/// retry/degradation semantics as the pool path, including the budget
+/// probe barrier: probe wave, allocator, extra wave, one assembly.
 fn generate_inline(
     engine: &Engine,
     batch: &GenBatch,
@@ -428,6 +560,25 @@ fn generate_inline(
 ) -> Result<(Vec<PromptGroup>, InferenceStats)> {
     let mut stats = InferenceStats::default();
     let mut kept: Vec<CallRollout> = Vec::new();
+    run_rows_inline(engine, batch, rows, &mut kept, &mut stats)?;
+    if let Some(spec) = batch.budget {
+        let extras = plan_extra_rows(batch, spec, &kept, &mut stats);
+        if !extras.is_empty() {
+            run_rows_inline(engine, batch, extras, &mut kept, &mut stats)?;
+        }
+    }
+    Ok(assemble(batch, kept, stats))
+}
+
+/// Run one wave of rows on the trainer's own engine, looping local
+/// retries with the pool path's fault semantics.
+fn run_rows_inline(
+    engine: &Engine,
+    batch: &GenBatch,
+    rows: Vec<RowSpec>,
+    kept: &mut Vec<CallRollout>,
+    stats: &mut InferenceStats,
+) -> Result<()> {
     let mut pending_rows = rows;
     let mut attempt = 0usize;
     loop {
@@ -469,7 +620,7 @@ fn generate_inline(
             },
         }
     }
-    Ok(assemble(batch, kept, stats))
+    Ok(())
 }
 
 /// Execute one row shard against an engine (worker replica or the
@@ -711,6 +862,7 @@ mod tests {
             online: None,
             kv: KvPolicy::default(),
             faults: None,
+            budget: None,
         };
         let synth = PG::synthetic(0, &[1.0, 2.0, 3.0], None);
         // rollouts arrive scrambled across groups and indices

@@ -36,7 +36,152 @@ use crate::reward::RewardWeights;
 use crate::runtime::{params as ckpt, Engine, ParamStore, TensorF, TensorI};
 use crate::tasks::{Split, TaskKind};
 use anyhow::{anyhow, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::time::Instant;
+
+/// The `[budget]` knobs one iteration's allocator runs under, resolved
+/// against `algo.n`. Carried by the generation batch so the rollout
+/// engine can split decoding into the probe wave and the reallocated
+/// extra wave (see [`BudgetAllocator`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BudgetSpec {
+    /// Per-prompt decode budget of the fixed-`n` baseline (`algo.n`); the
+    /// allocator redistributes `(n − n_probe) × |groups|` slots in total.
+    pub n: usize,
+    /// Rollouts decoded per prompt before any reallocation.
+    pub n_probe: usize,
+    /// Hard per-prompt cap on total rollouts (probe + extras).
+    pub max_per_prompt: usize,
+    /// Observed reward-bracket width below which a group is saturated.
+    pub width_threshold: f64,
+}
+
+impl BudgetSpec {
+    /// The spec for a validated config — `None` when `[budget]` is
+    /// disabled, so the rollout engine takes the fixed-`n` path untouched.
+    pub fn from_config(cfg: &RunConfig) -> Option<Self> {
+        if !cfg.budget.enabled {
+            return None;
+        }
+        Some(Self {
+            n: cfg.algo.n,
+            n_probe: cfg.budget.n_probe,
+            max_per_prompt: cfg.budget.max_per_prompt,
+            width_threshold: cfg.budget.width_threshold,
+        })
+    }
+}
+
+/// Adaptive per-prompt rollout-budget allocator.
+///
+/// Each iteration decodes a probe quota of `n_probe` rollouts per prompt
+/// first; the allocator then streams the remaining `(n − n_probe) ×
+/// |groups|` slots to the groups whose **observed reward bracket** — the
+/// min/max over finished, unpruned probe rewards, the same per-group
+/// state the online [`crate::coordinator::select::online::GroupVerdicts`]
+/// analysis tracks — is still at least `width_threshold` wide. Groups
+/// below the threshold are *saturated* (selection would discard their
+/// near-identical rollouts anyway) and release their budget.
+///
+/// **Allocation is history, not partition** (docs/DETERMINISM.md): the
+/// inputs are the canonically-assembled probe outcomes, never the worker
+/// shard layout, slot order or chunk interleaving that produced them, and
+/// the priority rule below is a pure function of those observations. The
+/// allocation sequence — and therefore every extra row's
+/// [`crate::rollout::row_seed`]-derived token stream — is bit-invariant
+/// to worker-pool size and decode-chunk size.
+///
+/// The group-major row queue becomes a dynamic priority queue here: slots
+/// are assigned one at a time to the eligible group with the fewest
+/// rollouts so far (ties: wider bracket first, then lower group index),
+/// so still-wide groups share the released budget evenly instead of the
+/// widest group monopolizing it.
+#[derive(Debug, Clone)]
+pub struct BudgetAllocator {
+    spec: BudgetSpec,
+    /// Per-group (min, max) over observed finished probe rewards.
+    obs: Vec<Option<(f32, f32)>>,
+}
+
+impl BudgetAllocator {
+    /// An allocator for one iteration over `n_groups` prompt groups, with
+    /// no observations yet.
+    pub fn new(spec: BudgetSpec, n_groups: usize) -> Self {
+        Self { spec, obs: vec![None; n_groups] }
+    }
+
+    /// The spec this allocator runs under.
+    pub fn spec(&self) -> &BudgetSpec {
+        &self.spec
+    }
+
+    /// Fold one finished (unpruned) probe rollout's reward into the
+    /// group's observed bracket. Call in canonical (group, rollout_idx)
+    /// order — though min/max folding makes the result order-invariant.
+    pub fn observe(&mut self, group: usize, reward: f32) {
+        let e = &mut self.obs[group];
+        *e = Some(match *e {
+            None => (reward, reward),
+            Some((lo, hi)) => (lo.min(reward), hi.max(reward)),
+        });
+    }
+
+    /// Observed reward-bracket width of a group: `max − min` over its
+    /// finished probe rewards, `0.0` with fewer than two observations (an
+    /// unobservable group cannot justify extra decode spend).
+    pub fn width(&self, group: usize) -> f64 {
+        match self.obs[group] {
+            Some((lo, hi)) => (hi - lo) as f64,
+            None => 0.0,
+        }
+    }
+
+    /// Is the group saturated? True when the observed bracket is narrower
+    /// than the threshold, and always for a group with no observations at
+    /// all (every probe row lost or pruned) — even at `width_threshold =
+    /// 0`, an unobservable group cannot justify extra decode spend.
+    pub fn is_saturated(&self, group: usize) -> bool {
+        self.obs[group].is_none() || self.width(group) < self.spec.width_threshold
+    }
+
+    /// Number of saturated groups under the current observations — the
+    /// `budget_saturated_groups` train-CSV column.
+    pub fn saturated_groups(&self) -> usize {
+        (0..self.obs.len()).filter(|&g| self.is_saturated(g)).count()
+    }
+
+    /// Stream the extra slots: returns the allocation sequence as
+    /// `(group_idx, rollout_idx)` pairs with `rollout_idx >= n_probe`, at
+    /// most `(n − n_probe) × |groups|` total and at most `max_per_prompt −
+    /// n_probe` per group. Deterministic: a [`BinaryHeap`] keyed on
+    /// (rollouts-so-far asc, bracket width desc, group index asc) pops the
+    /// same sequence for the same observations, whatever schedule produced
+    /// them.
+    pub fn allocate(&self) -> Vec<(usize, u32)> {
+        let groups = self.obs.len();
+        let slots = (self.spec.n - self.spec.n_probe.min(self.spec.n)) * groups;
+        let mut out = Vec::with_capacity(slots);
+        // max-heap of Reverse(key): pop order = fewest-rollouts-first,
+        // ties by widest bracket (f64 >= 0, so the bit pattern orders
+        // monotonically), then lowest group index
+        let mut heap: BinaryHeap<Reverse<(usize, Reverse<u64>, usize)>> = (0..groups)
+            .filter(|&g| !self.is_saturated(g))
+            .map(|g| Reverse((self.spec.n_probe, Reverse(self.width(g).to_bits()), g)))
+            .collect();
+        while out.len() < slots {
+            let Some(Reverse((count, w, g))) = heap.pop() else {
+                break; // every still-wide group hit max_per_prompt
+            };
+            if count >= self.spec.max_per_prompt {
+                continue;
+            }
+            out.push((g, count as u32));
+            heap.push(Reverse((count + 1, w, g)));
+        }
+        out
+    }
+}
 
 /// Per-iteration summary returned by [`Trainer::train_iteration`].
 #[derive(Debug, Clone, Copy, Default)]
@@ -95,6 +240,11 @@ pub struct IterStats {
     /// Simulated retry bill (backoff + wasted/straggler work), included in
     /// `sim_inference`.
     pub retry_time: f64,
+    /// Extra rollouts the budget allocator streamed to still-wide groups
+    /// (`[budget]`; 0 when disabled).
+    pub budget_extra_rows: usize,
+    /// Groups the allocator classified saturated after the probe wave.
+    pub budget_saturated_groups: usize,
     /// Simulated cost of the inference phase.
     pub sim_inference: f64,
     /// Simulated cost of the update phase (incl. communication).
@@ -349,6 +499,8 @@ impl Trainer {
             shard_retries: r.shard_retries,
             rows_lost: r.rows_lost,
             retry_time: r.retry_time,
+            budget_extra_rows: r.budget_extra_rows,
+            budget_saturated_groups: r.budget_saturated_groups,
             sim_inference: r.sim_inference,
             sim_update: r.sim_update,
             sim_step: r.sim_step,
@@ -393,6 +545,8 @@ impl Trainer {
             shard_retries: r.shard_retries,
             rows_lost: r.rows_lost,
             retry_time: r.retry_time,
+            budget_extra_rows: r.budget_extra_rows,
+            budget_saturated_groups: r.budget_saturated_groups,
         });
         Ok(stats)
     }
@@ -606,5 +760,121 @@ impl Trainer {
             self.cfg.run.name, self.start_iter
         );
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+
+    fn spec(n: usize, n_probe: usize, max_per_prompt: usize, width_threshold: f64) -> BudgetSpec {
+        BudgetSpec { n, n_probe, max_per_prompt, width_threshold }
+    }
+
+    /// Saturated groups release their budget: a group whose probe rewards
+    /// collapse to a point gets zero extras, and the released slots flow
+    /// to the still-wide groups.
+    #[test]
+    fn saturated_groups_release_budget_to_wide_ones() {
+        let mut a = BudgetAllocator::new(spec(8, 2, 64, 0.25), 3);
+        // group 0: saturated (all probes identical); 1 and 2: wide
+        for _ in 0..2 {
+            a.observe(0, 1.0);
+        }
+        a.observe(1, 0.0);
+        a.observe(1, 3.0);
+        a.observe(2, 0.5);
+        a.observe(2, 2.5);
+        assert!(a.is_saturated(0));
+        assert_eq!(a.saturated_groups(), 1);
+        let seq = a.allocate();
+        // all (8 - 2) * 3 = 18 slots go somewhere: nothing is wasted while
+        // eligible groups have headroom
+        assert_eq!(seq.len(), 18);
+        assert!(seq.iter().all(|&(g, _)| g != 0), "saturated group received extras: {seq:?}");
+        let count = |g: usize| seq.iter().filter(|&&(gg, _)| gg == g).count();
+        // fewest-rollouts-first streaming shares the budget evenly
+        assert_eq!(count(1), 9);
+        assert_eq!(count(2), 9);
+        // rollout indices continue the probe numbering per group
+        assert_eq!(seq.iter().filter(|&&(g, _)| g == 1).map(|&(_, r)| r).min(), Some(2));
+        assert_eq!(seq.iter().filter(|&&(g, _)| g == 1).map(|&(_, r)| r).max(), Some(10));
+    }
+
+    /// Disabled-equals-fixed-n at the allocator level: with `n_probe = n`
+    /// there are zero slots to stream, whatever the observations say.
+    #[test]
+    fn probe_equal_to_n_allocates_nothing() {
+        let mut a = BudgetAllocator::new(spec(8, 8, 64, 0.0), 4);
+        for g in 0..4 {
+            a.observe(g, 0.0);
+            a.observe(g, 3.0);
+        }
+        assert!(a.allocate().is_empty());
+    }
+
+    /// An unobserved group (every probe row lost or pruned) has width 0:
+    /// it can never justify extra decode spend.
+    #[test]
+    fn unobserved_groups_are_saturated() {
+        let a = BudgetAllocator::new(spec(4, 2, 8, 0.0), 2);
+        assert!(a.is_saturated(0), "width_threshold = 0 still saturates unobserved groups");
+        assert_eq!(a.width(0), 0.0);
+        assert!(a.allocate().is_empty());
+    }
+
+    /// Budget-conservation property over random draws: the allocation
+    /// never exceeds `(n − n_probe) × |groups|` slots in total nor
+    /// `max_per_prompt` rollouts per prompt, rollout indices are dense per
+    /// group starting at `n_probe`, and the sequence is a pure function of
+    /// the observations (replaying them — in any order — reproduces it).
+    #[test]
+    fn allocation_conserves_budget_and_is_history_pure() {
+        for_cases(200, |rng| {
+            let groups = 1 + rng.below(6);
+            let n = 2 + rng.below(16);
+            let n_probe = 1 + rng.below(n);
+            let max_per_prompt = n_probe + rng.below(2 * n);
+            let width_threshold = 0.25 * rng.below(8) as f64;
+            let s = spec(n, n_probe, max_per_prompt, width_threshold);
+            let mut a = BudgetAllocator::new(s, groups);
+            let mut observations: Vec<(usize, f32)> = Vec::new();
+            for g in 0..groups {
+                for _ in 0..rng.below(n_probe + 1) {
+                    let reward = 0.25 * rng.below(13) as f32;
+                    observations.push((g, reward));
+                }
+            }
+            for &(g, r) in &observations {
+                a.observe(g, r);
+            }
+            let seq = a.allocate();
+            assert!(seq.len() <= (n - n_probe) * groups, "total budget exceeded");
+            for g in 0..groups {
+                let mut rows: Vec<u32> =
+                    seq.iter().filter(|&&(gg, _)| gg == g).map(|&(_, r)| r).collect();
+                assert!(
+                    n_probe + rows.len() <= max_per_prompt,
+                    "per-prompt cap exceeded: group {g} got {} extras (n_probe {n_probe}, \
+                     cap {max_per_prompt})",
+                    rows.len()
+                );
+                if a.is_saturated(g) {
+                    assert!(rows.is_empty(), "saturated group {g} received extras");
+                }
+                rows.sort_unstable();
+                for (i, &r) in rows.iter().enumerate() {
+                    assert_eq!(r as usize, n_probe + i, "group {g} rollout indices not dense");
+                }
+            }
+            // history purity: replaying the observations in reverse order
+            // lands on the identical allocation sequence
+            let mut b = BudgetAllocator::new(s, groups);
+            for &(g, r) in observations.iter().rev() {
+                b.observe(g, r);
+            }
+            assert_eq!(seq, b.allocate(), "allocation depends on observation order");
+        });
     }
 }

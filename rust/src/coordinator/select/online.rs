@@ -135,6 +135,29 @@ impl OnlineSelector {
         self.rows.len()
     }
 
+    /// Append `additional` fresh [`RowObs::Pending`] rows to the group
+    /// (the budget allocator grew the group past its probe quota).
+    ///
+    /// Soundness: every verdict this selector issues is a *doom-only*
+    /// certificate — "row `i` is dropped under every completion of the
+    /// group". Both shipping certificates stay valid when candidates are
+    /// added: a `LengthCap` doom depends only on the doomed row's own
+    /// length plus the existence of one finished-under-cap candidate
+    /// (adding rows cannot remove that certificate row), and a
+    /// `MaxVariance` doom counts guaranteed candidates forced strictly
+    /// below/above the doomed row (new pending rows only ever *add*
+    /// candidates, and the `>= m` thresholds are monotone in candidate
+    /// count). Growing a group therefore never invalidates an
+    /// already-issued doom.
+    pub fn grow(&mut self, additional: usize) {
+        if additional == 0 {
+            return;
+        }
+        let target = self.rows.len() + additional;
+        self.rows.resize(target, RowObs::Pending { len: 0 });
+        self.dirty = true;
+    }
+
     /// Record that `row` finished with the given total reward and final
     /// generated length. Ignored for rows already finished or doomed.
     pub fn observe_finished(&mut self, row: usize, reward: f32, gen_len: usize) {
@@ -353,6 +376,15 @@ impl GroupVerdicts {
         sel.verdict(rollout) == Verdict::Doomed
     }
 
+    /// Grow `group` by `additional` pending rows (budget allocator issued
+    /// extra rollouts past the probe quota). Doom-only verdicts already
+    /// issued stay sound — see [`OnlineSelector::grow`].
+    pub fn grow_group(&self, group: usize, additional: usize) {
+        let Some(slot) = self.groups.get(group) else { return };
+        let Ok(mut sel) = slot.lock() else { return };
+        sel.grow(additional);
+    }
+
     /// Total rows doomed so far across all groups.
     pub fn doomed_count(&self) -> usize {
         self.groups
@@ -521,6 +553,30 @@ mod tests {
         // out-of-range queries are inert
         assert!(!v.poll_doomed(7, 0, 9));
         v.observe_finished(7, 0, 1.0, 1);
+    }
+
+    /// Growing a group adds live pending rows without disturbing verdicts
+    /// already issued (dooms are monotone under candidate addition).
+    #[test]
+    fn grow_adds_pending_rows_and_preserves_dooms() {
+        let mut sel = cap_mv(10, 2, 3);
+        sel.observe_finished(0, 1.0, 8);
+        sel.observe_len(1, 11);
+        assert_eq!(sel.poll(), vec![1]);
+        sel.grow(2);
+        assert_eq!(sel.n(), 5);
+        assert_eq!(sel.verdict(1), Verdict::Doomed, "doom survives growth");
+        assert_eq!(sel.verdict(3), Verdict::Unknown);
+        // the grown rows are live: one can be doomed by the same cap
+        sel.observe_len(4, 11);
+        assert_eq!(sel.poll(), vec![4]);
+        // GroupVerdicts wrapper routes growth to the right group
+        let p = Pipeline::parse_default("prune(max_tokens=8) | max_variance").unwrap();
+        let v = GroupVerdicts::new(&p, 2, 2, 1, &RewardWeights::default());
+        v.grow_group(1, 3);
+        v.observe_finished(1, 0, 1.0, 4);
+        assert!(v.poll_doomed(1, 4, 9), "grown row index is addressable");
+        v.grow_group(9, 1); // out-of-range growth is inert
     }
 
     /// The bracket ceiling follows the reward weights.

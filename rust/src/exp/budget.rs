@@ -1,0 +1,323 @@
+//! Budget study — where adaptive per-prompt rollout budgets spend the
+//! decode bill, swept over `n_probe × width_threshold`.
+//!
+//! Not a paper figure: this driver quantifies what the `[budget]`
+//! allocator buys. It runs entirely on the cost model (no artifacts):
+//! synthetic prompt groups — half *saturated* (constant reward, zero
+//! advantage signal) and half *wide* (bimodal solved/unsolved rewards) —
+//! probe `n_probe` rollouts each, feed the observed brackets into the
+//! real [`BudgetAllocator`], and decode exactly the rows it grants. Every
+//! cell spends the same total slot budget as the fixed-`n` baseline
+//! (`n × |groups|`), so the comparison isolates *where* the slots went,
+//! not how many there were.
+//!
+//! The shape that must reproduce (asserted by this module's tests):
+//! under any positive threshold, saturated groups receive **zero** extra
+//! rows — they stop at the probe quota while wide groups absorb the
+//! released slots — so the tokens-per-signal-row price (the study's
+//! proxy for tokens per accuracy point: only rows in groups with reward
+//! variance carry a GRPO gradient) drops below the fixed-`n` baseline.
+
+use crate::coordinator::scheduler::{BudgetAllocator, BudgetSpec};
+use crate::hwsim::HwModel;
+use crate::metrics::{ascii_plot, write_csv_rows, CsvRow};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Per-prompt decode budget of the fixed-`n` baseline (the paper's n).
+const N: usize = 64;
+/// Prompt groups per simulated iteration (half saturated, half wide).
+const GROUPS: usize = 8;
+/// Generation budget G of the simulated profile (max rollout length).
+const G: usize = 64;
+/// Decode chunk used to price the bill on the cost model.
+const CHUNK: usize = 4;
+/// Hard per-prompt cap (probe + extras) of every swept spec.
+const MAX_PER_PROMPT: usize = 128;
+/// Probe quotas swept (`n_probe = N` is the degenerate fixed-`n` cell).
+const PROBE_SWEEP: [usize; 5] = [4, 8, 16, 32, 64];
+/// Bracket-width thresholds swept; `0.0` keeps even constant-reward
+/// groups in the heap (nothing is ever saturated), isolating the knob.
+const THRESH_SWEEP: [f64; 3] = [0.0, 0.25, 1.0];
+/// Reward bracket of the rule-based reward model under default weights.
+const RMAX: f32 = 3.0;
+/// Seed of the deterministic synthetic groups (per-group streams derive
+/// from it by XOR with the group index).
+const SIM_SEED: u64 = 0xA076_1D64_78BD_642F;
+
+/// One synthetic group: `MAX_PER_PROMPT` candidate rollouts (the probe
+/// rows are the prefix; extras continue at `rollout_idx = n_probe..`).
+struct SimGroup {
+    /// Generated length per candidate rollout (tokens incl. EOS).
+    lens: Vec<usize>,
+    /// Total reward per candidate rollout.
+    rewards: Vec<f32>,
+    /// Does the group carry advantage signal (non-constant rewards)?
+    wide: bool,
+}
+
+/// Deterministic synthetic world: even-indexed groups are saturated
+/// (every rollout scores the same — zero bracket, zero advantage), odd
+/// ones are wide (alternating solved/unsolved, bracket `RMAX`). Lengths
+/// are uniform in `1..=G` either way, so the token price of a slot does
+/// not depend on where the allocator sends it.
+fn sim_world() -> Vec<SimGroup> {
+    (0..GROUPS)
+        .map(|g| {
+            let mut rng = Rng::seed_from_u64(SIM_SEED ^ g as u64);
+            let wide = g % 2 == 1;
+            let lens: Vec<usize> = (0..MAX_PER_PROMPT).map(|_| 1 + rng.below(G)).collect();
+            let rewards: Vec<f32> = (0..MAX_PER_PROMPT)
+                .map(|i| if wide && i % 2 == 1 { RMAX } else { 0.0 })
+                .collect();
+            SimGroup { lens, rewards, wide }
+        })
+        .collect()
+}
+
+/// One `(n_probe, width_threshold)` cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct BudgetRow {
+    /// Probe quota of the cell.
+    pub n_probe: usize,
+    /// Saturation threshold of the cell.
+    pub width_threshold: f64,
+    /// Groups the allocator reported saturated after the probe wave.
+    pub saturated_groups: usize,
+    /// Extra rows granted past the probe wave (total).
+    pub rows_extra: usize,
+    /// Extra rows that landed in saturated (constant-reward) groups.
+    pub extra_to_saturated: usize,
+    /// Rows decoded in saturated groups (probe + extras).
+    pub rows_saturated: usize,
+    /// Rows decoded in wide groups (probe + extras).
+    pub rows_wide: usize,
+    /// Total rows decoded — always `N × GROUPS` (budget conservation).
+    pub rows_total: usize,
+    /// Generated-token bill of the adaptive run.
+    pub tokens_total: usize,
+    /// Rows carrying advantage signal (decoded rows in wide groups).
+    pub signal_rows: usize,
+    /// `tokens_total / signal_rows` — the study's cost metric.
+    pub tokens_per_signal_row: f64,
+    /// Generated-token bill of the fixed-`n` baseline (same slot count).
+    pub fixed_tokens: usize,
+    /// `fixed_tokens / fixed_signal_rows` for the same world.
+    pub fixed_tokens_per_signal_row: f64,
+    /// Simulated inference time of the adaptive run (cost model).
+    pub sim_time: f64,
+    /// Simulated inference time of the fixed-`n` baseline.
+    pub fixed_sim_time: f64,
+}
+
+impl CsvRow for BudgetRow {
+    fn csv_header() -> &'static str {
+        "n_probe,width_threshold,saturated_groups,rows_extra,extra_to_saturated,\
+         rows_saturated,rows_wide,rows_total,tokens_total,signal_rows,\
+         tokens_per_signal_row,fixed_tokens,fixed_tokens_per_signal_row,\
+         sim_time,fixed_sim_time"
+    }
+
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.n_probe,
+            self.width_threshold,
+            self.saturated_groups,
+            self.rows_extra,
+            self.extra_to_saturated,
+            self.rows_saturated,
+            self.rows_wide,
+            self.rows_total,
+            self.tokens_total,
+            self.signal_rows,
+            self.tokens_per_signal_row,
+            self.fixed_tokens,
+            self.fixed_tokens_per_signal_row,
+            self.sim_time,
+            self.fixed_sim_time
+        )
+    }
+}
+
+/// Run one cell: probe, allocate through the real [`BudgetAllocator`],
+/// decode the granted rows, and price both the adaptive and the
+/// fixed-`n` bill on the cost model.
+fn run_cell(world: &[SimGroup], hw: &HwModel, n_probe: usize, width_threshold: f64) -> BudgetRow {
+    let spec = BudgetSpec { n: N, n_probe, max_per_prompt: MAX_PER_PROMPT, width_threshold };
+    let mut alloc = BudgetAllocator::new(spec, world.len());
+    for (g, grp) in world.iter().enumerate() {
+        for &r in &grp.rewards[..n_probe] {
+            alloc.observe(g, r);
+        }
+    }
+    let grants = alloc.allocate();
+    let saturated_groups = alloc.saturated_groups();
+
+    let mut rows_per_group = vec![n_probe; world.len()];
+    let mut extra_to_saturated = 0usize;
+    for &(g, _) in &grants {
+        rows_per_group[g] += 1;
+        if alloc.is_saturated(g) {
+            extra_to_saturated += 1;
+        }
+    }
+
+    let mut lens: Vec<usize> = Vec::new();
+    let mut fixed_lens: Vec<usize> = Vec::new();
+    let (mut rows_saturated, mut rows_wide, mut signal_rows) = (0usize, 0usize, 0usize);
+    for (grp, &rows) in world.iter().zip(&rows_per_group) {
+        lens.extend_from_slice(&grp.lens[..rows]);
+        fixed_lens.extend_from_slice(&grp.lens[..N]);
+        if grp.wide {
+            rows_wide += rows;
+            signal_rows += rows;
+        } else {
+            rows_saturated += rows;
+        }
+    }
+    let fixed_signal_rows: usize = world.iter().filter(|g| g.wide).count() * N;
+    let tokens_total: usize = lens.iter().sum();
+    let fixed_tokens: usize = fixed_lens.iter().sum();
+    BudgetRow {
+        n_probe,
+        width_threshold,
+        saturated_groups,
+        rows_extra: grants.len(),
+        extra_to_saturated,
+        rows_saturated,
+        rows_wide,
+        rows_total: rows_per_group.iter().sum(),
+        tokens_total,
+        signal_rows,
+        tokens_per_signal_row: tokens_total as f64 / signal_rows.max(1) as f64,
+        fixed_tokens,
+        fixed_tokens_per_signal_row: fixed_tokens as f64 / fixed_signal_rows.max(1) as f64,
+        sim_time: hw.chunked_inference_time(&lens, CHUNK),
+        fixed_sim_time: hw.chunked_inference_time(&fixed_lens, CHUNK),
+    }
+}
+
+/// Build the sweep grid from a cost model (row-major: threshold, then
+/// `n_probe` ascending). Deterministic: the synthetic world is the same
+/// for every cell.
+pub fn sweep(hw: &HwModel) -> Vec<BudgetRow> {
+    let world = sim_world();
+    let mut out = Vec::with_capacity(THRESH_SWEEP.len() * PROBE_SWEEP.len());
+    for &t in &THRESH_SWEEP {
+        for &p in &PROBE_SWEEP {
+            out.push(run_cell(&world, hw, p, t));
+        }
+    }
+    out
+}
+
+/// Run the study: write `<out_dir>/budget.csv` and print the
+/// tokens-per-signal-row curves (one per threshold, plus the fixed-`n`
+/// baseline) over the probe quota.
+pub fn run(out_dir: &str) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let hw = HwModel::default();
+    let rows = sweep(&hw);
+    write_csv_rows(Path::new(&format!("{out_dir}/budget.csv")), &rows)?;
+
+    let mut curves: Vec<(String, Vec<(f64, f64)>)> = THRESH_SWEEP
+        .iter()
+        .map(|&t| {
+            let pts: Vec<(f64, f64)> = rows
+                .iter()
+                .filter(|r| r.width_threshold == t)
+                .map(|r| (r.n_probe as f64, r.tokens_per_signal_row))
+                .collect();
+            (format!("threshold={t}"), pts)
+        })
+        .collect();
+    let baseline: Vec<(f64, f64)> = rows
+        .iter()
+        .filter(|r| r.width_threshold == THRESH_SWEEP[0])
+        .map(|r| (r.n_probe as f64, r.fixed_tokens_per_signal_row))
+        .collect();
+    curves.push(("fixed-n".to_string(), baseline));
+    let series: Vec<(&str, &[(f64, f64)])> =
+        curves.iter().map(|(n, p)| (n.as_str(), p.as_slice())).collect();
+    println!(
+        "Budget study: generated tokens per signal row vs probe quota \
+         (n = {N}, {GROUPS} groups — half saturated, cap {MAX_PER_PROMPT})"
+    );
+    println!("{}", ascii_plot(&series, 64, 14));
+    for r in &rows {
+        println!(
+            "  probe={:<3} thr={:<5} saturated {}/{} groups | rows sat {:>4} wide {:>4} \
+             (extras {:>4}, {} to saturated) | tok/signal {:>7.2} vs fixed {:>7.2}",
+            r.n_probe,
+            r.width_threshold,
+            r.saturated_groups,
+            GROUPS,
+            r.rows_saturated,
+            r.rows_wide,
+            r.rows_extra,
+            r.extra_to_saturated,
+            r.tokens_per_signal_row,
+            r.fixed_tokens_per_signal_row
+        );
+    }
+    println!(
+        "  (equal total slot budget in every cell: saturated groups stop at the \
+         probe quota and wide groups absorb the released slots — see \
+         docs/DETERMINISM.md for the allocation-is-history contract)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance shape: at equal total budget, saturated groups
+    /// receive fewer rows than the fixed-`n` baseline (and zero extras),
+    /// while wide groups absorb the released slots and the per-signal
+    /// token price drops.
+    #[test]
+    fn saturated_groups_release_budget() {
+        let rows = sweep(&HwModel::default());
+        assert_eq!(rows.len(), THRESH_SWEEP.len() * PROBE_SWEEP.len());
+        for r in &rows {
+            // budget conservation: every cell spends the fixed-n slot count
+            assert_eq!(r.rows_total, N * GROUPS, "{r:?}");
+            if r.width_threshold > 0.0 && r.n_probe < N {
+                assert_eq!(r.extra_to_saturated, 0, "{r:?}");
+                assert_eq!(r.saturated_groups, GROUPS / 2, "{r:?}");
+                // saturated groups stop at the probe quota...
+                assert_eq!(r.rows_saturated, r.n_probe * (GROUPS / 2), "{r:?}");
+                assert!(r.rows_saturated < N * (GROUPS / 2), "{r:?}");
+                // ...wide groups absorb the released slots...
+                assert!(r.rows_wide > N * (GROUPS / 2), "{r:?}");
+                // ...and the signal price beats the fixed-n baseline
+                assert!(r.tokens_per_signal_row < r.fixed_tokens_per_signal_row, "{r:?}");
+            }
+        }
+    }
+
+    /// `n_probe = n` is the degenerate cell: the allocator grants
+    /// nothing and the bill is bitwise the fixed-`n` baseline's —
+    /// the cost-model mirror of the disabled-equals-fixed-`n` golden.
+    #[test]
+    fn probe_equal_to_n_matches_fixed_baseline() {
+        let rows = sweep(&HwModel::default());
+        for r in rows.iter().filter(|r| r.n_probe == N) {
+            assert_eq!(r.rows_extra, 0, "{r:?}");
+            assert_eq!(r.tokens_total, r.fixed_tokens, "{r:?}");
+            assert_eq!(r.sim_time, r.fixed_sim_time, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn budget_row_csv_shape() {
+        let rows = sweep(&HwModel::default());
+        let header_cols = BudgetRow::csv_header().split(',').count();
+        for r in &rows {
+            assert_eq!(r.csv_row().split(',').count(), header_cols, "{r:?}");
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //! numbers live on the hwsim clock; what must reproduce is the *shape*
 //! (who wins, by what factor, where crossovers fall).
 
+pub mod budget;
 pub mod fig1;
 pub mod fig3;
 pub mod fig4;
@@ -20,8 +21,8 @@ pub mod shard;
 pub mod table3;
 
 use crate::config::{
-    AlgoSection, CkptSection, ReplaySection, RolloutSection, RunConfig, RunSection, SftSection,
-    UpdateSection,
+    AlgoSection, BudgetSection, CkptSection, ReplaySection, RolloutSection, RunConfig, RunSection,
+    SftSection, UpdateSection,
 };
 use crate::hwsim::{FaultSection, HwModel};
 use anyhow::Result;
@@ -128,6 +129,15 @@ pub struct CfgBuilder {
     pub replay_capacity: usize,
     /// Replay importance-ratio clip (replay.rho_max).
     pub replay_rho_max: f64,
+    /// Adaptive per-prompt rollout budget (budget.enabled).
+    pub budget_enabled: bool,
+    /// Probe rollouts per prompt before reallocation (budget.n_probe).
+    pub budget_n_probe: usize,
+    /// Hard per-prompt rollout ceiling (budget.max_per_prompt).
+    pub budget_max_per_prompt: usize,
+    /// Reward-bracket width below which a group is saturated
+    /// (budget.width_threshold).
+    pub budget_width_threshold: f64,
     /// The whole `[faults]` section (fault injection is off by default).
     pub faults: FaultSection,
     /// The whole `[ckpt]` section (resume snapshots are off by default).
@@ -177,6 +187,10 @@ impl Default for CfgBuilder {
             replay_staleness: ReplaySection::default().staleness,
             replay_capacity: ReplaySection::default().capacity_per_prompt,
             replay_rho_max: ReplaySection::default().rho_max,
+            budget_enabled: BudgetSection::default().enabled,
+            budget_n_probe: BudgetSection::default().n_probe,
+            budget_max_per_prompt: BudgetSection::default().max_per_prompt,
+            budget_width_threshold: BudgetSection::default().width_threshold,
             faults: FaultSection::default(),
             ckpt: CkptSection::default(),
             sft_steps: 0,
@@ -233,6 +247,12 @@ impl CfgBuilder {
                 staleness: self.replay_staleness,
                 capacity_per_prompt: self.replay_capacity,
                 rho_max: self.replay_rho_max,
+            },
+            budget: BudgetSection {
+                enabled: self.budget_enabled,
+                n_probe: self.budget_n_probe,
+                max_per_prompt: self.budget_max_per_prompt,
+                width_threshold: self.budget_width_threshold,
             },
             faults: self.faults.clone(),
             ckpt: self.ckpt.clone(),

@@ -3,9 +3,9 @@
 //! ```text
 //! pods train --config configs/setting_a.toml [--iterations N]
 //! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test --chunk 16
-//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|kv|faults|table3|all [--setting a] [--quick] [--probe]
+//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|budget|reuse|kv|faults|table3|all [--setting a] [--quick] [--probe]
 //! pods info  --profile base
-//! pods bench-check [--fresh BENCH_e2e.json] [--baseline rust/benches/BENCH_baseline.json] [--bless]
+//! pods bench-check [--fresh BENCH_e2e.json] [--baseline rust/benches/BENCH_baseline.json] [--bless] [--require-baseline]
 //! pods config-docs [--check] [--out docs/CONFIG.md]
 //! ```
 //!
@@ -32,14 +32,17 @@ USAGE:
              (crash recovery; bit-identical to the uninterrupted run)
   pods eval  --ckpt <path> [--task arith|poly|mcq] [--split train|test|platinum]
              [--profile NAME] [--problems N] [--chunk C]
-  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|reuse|kv|faults|table3|all>
+  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|budget|reuse|kv|faults|table3|all>
              [--setting a-f] [--quick] [--out-dir DIR] [--probe]
   pods info  [--profile NAME]
   pods bench-check [--fresh PATH] [--baseline PATH] [--max-regression FRAC]
              [--min-speedup RATIO] [--min-prune-speedup RATIO]
              [--min-replay-speedup RATIO] [--min-kv-speedup RATIO] [--bless]
+             [--require-baseline]
              --bless regenerates the committed baseline from the fresh
              report instead of checking against it
+             --require-baseline makes a missing or entry-less baseline a
+             hard failure instead of a passing warning
   pods config-docs [--check] [--out PATH]
              generate docs/CONFIG.md from the config structs;
              --check fails when the committed file is stale (CI)
@@ -51,7 +54,8 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["quick", "probe", "help", "check", "bless", "resume"];
+const BOOL_FLAGS: &[&str] =
+    &["quick", "probe", "help", "check", "bless", "resume", "require-baseline"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
@@ -200,6 +204,7 @@ fn main() -> Result<()> {
                 "sched" => exp::sched::run(&artifacts, scale, &out_dir)?,
                 "shard" => exp::shard::run(&out_dir)?,
                 "prune" => exp::prune::run(&out_dir)?,
+                "budget" => exp::budget::run(&out_dir)?,
                 "reuse" => exp::reuse::run(&out_dir)?,
                 "kv" => exp::kv::run(&out_dir)?,
                 "faults" => exp::faults::run(&out_dir)?,
@@ -214,6 +219,7 @@ fn main() -> Result<()> {
                     exp::sched::run(&artifacts, scale, &out_dir)?;
                     exp::shard::run(&out_dir)?;
                     exp::prune::run(&out_dir)?;
+                    exp::budget::run(&out_dir)?;
                     exp::reuse::run(&out_dir)?;
                     exp::kv::run(&out_dir)?;
                     exp::faults::run(&out_dir)?;
@@ -271,6 +277,10 @@ fn main() -> Result<()> {
                 return Ok(());
             }
             let max_reg: f64 = args.get_or("max-regression", "0.15").parse()?;
+            let require_baseline = args.has("require-baseline");
+            if require_baseline && !std::path::Path::new(&baseline).exists() {
+                bail!("--require-baseline: no baseline at {baseline} (record one with --bless)");
+            }
             let report = pods::util::bench::check_regression(
                 std::path::Path::new(&fresh),
                 std::path::Path::new(&baseline),
@@ -284,6 +294,16 @@ fn main() -> Result<()> {
                 // GitHub Actions annotation — visible on the workflow
                 // summary instead of buried in the job log
                 println!("::warning::{w}");
+            }
+            if require_baseline && !report.warnings.is_empty() {
+                // the empty-baseline state is a documented no-op by
+                // default; this flag is the opt-in that refuses to call
+                // a guard that guards nothing "passing"
+                bail!(
+                    "--require-baseline: {} warning(s) degrade the regression guard \
+                     to a no-op (bless a real baseline to clear them)",
+                    report.warnings.len()
+                );
             }
             if !report.regressions.is_empty() {
                 for r in &report.regressions {

@@ -124,6 +124,12 @@ pub struct IterRow {
     /// attempts' wasted decode + straggler slowdown); included in
     /// `sim_inference_time`.
     pub retry_time: f64,
+    /// Extra rollout rows the `[budget]` allocator streamed to
+    /// wide-bracket groups past the probe quota (zero when disabled).
+    pub budget_extra_rows: usize,
+    /// Groups whose probe reward bracket was already narrower than
+    /// `budget.width_threshold` (zero when disabled).
+    pub budget_saturated_groups: usize,
 }
 
 impl CsvRow for IterRow {
@@ -135,13 +141,14 @@ impl CsvRow for IterRow {
          upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online,\
          replay_rows_used,replay_store_size,replay_mean_staleness,\
          prefill_calls,prefill_calls_saved,kv_peak_bytes,\
-         faults_injected,shard_retries,rows_lost,retry_time"
+         faults_injected,shard_retries,rows_lost,retry_time,\
+         budget_extra_rows,budget_saturated_groups"
     }
 
     fn csv_row(&self) -> String {
         format!(
             "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},\
-             {},{},{},{},{},{},{},{},{},{}",
+             {},{},{},{},{},{},{},{},{},{},{},{}",
             self.iter,
             self.sim_time,
             self.real_time,
@@ -179,7 +186,9 @@ impl CsvRow for IterRow {
             self.faults_injected,
             self.shard_retries,
             self.rows_lost,
-            self.retry_time
+            self.retry_time,
+            self.budget_extra_rows,
+            self.budget_saturated_groups
         )
     }
 }
@@ -237,6 +246,8 @@ impl IterRow {
             shard_retries: p!(35),
             rows_lost: p!(36),
             retry_time: p!(37),
+            budget_extra_rows: p!(38),
+            budget_saturated_groups: p!(39),
         })
     }
 }
@@ -461,14 +472,15 @@ mod tests {
              upd_shards,upd_comm_time,upd_peak_mem,gen_tokens_pruned,rows_pruned_online,\
              replay_rows_used,replay_store_size,replay_mean_staleness,\
              prefill_calls,prefill_calls_saved,kv_peak_bytes,\
-             faults_injected,shard_retries,rows_lost,retry_time"
+             faults_injected,shard_retries,rows_lost,retry_time,\
+             budget_extra_rows,budget_saturated_groups"
                 .replace(char::is_whitespace, "")
         );
         // new columns append at the end, so CSVs from older runs stay
         // parseable by position-tolerant readers
         let cols: Vec<&str> = header.split(',').collect();
         assert_eq!(
-            cols[cols.len() - 17..].to_vec(),
+            cols[cols.len() - 19..].to_vec(),
             vec![
                 "gen_tokens_decoded",
                 "gen_tokens_wasted",
@@ -486,7 +498,9 @@ mod tests {
                 "faults_injected",
                 "shard_retries",
                 "rows_lost",
-                "retry_time"
+                "retry_time",
+                "budget_extra_rows",
+                "budget_saturated_groups"
             ]
         );
     }
@@ -534,6 +548,8 @@ mod tests {
             shard_retries: 2,
             rows_lost: 1,
             retry_time: 1.25,
+            budget_extra_rows: 24,
+            budget_saturated_groups: 3,
         };
         let header = IterRow::csv_header().replace(char::is_whitespace, "");
         let line = row.csv_row();
@@ -565,6 +581,8 @@ mod tests {
         assert_eq!(get("shard_retries"), "2");
         assert_eq!(get("rows_lost"), "1");
         assert_eq!(get("retry_time"), "1.25");
+        assert_eq!(get("budget_extra_rows"), "24");
+        assert_eq!(get("budget_saturated_groups"), "3");
         // the overlap identity the exec layer maintains:
         // step + saved == inference + update
         let step: f64 = get("sim_step_time").parse().unwrap();

@@ -36,6 +36,15 @@
 //! independent, the prompt region of the cache is immutable during
 //! decode, and sampling folds `(row_seed, step)` only (pinned by the
 //! `kv_golden` suite).
+//!
+//! Adaptive `[budget]` rollouts compose with all of the above without
+//! touching this driver: the rollout engine runs it once for the probe
+//! wave, consults the [`crate::coordinator::scheduler::BudgetAllocator`]
+//! at the collection barrier, and runs it again for the granted extra
+//! rows — each wave is an ordinary row queue here, so pruning, KV
+//! admission and refill order apply to extra rows exactly as to probe
+//! rows, and per-row RNG keeps every stream independent of which wave
+//! decoded it (pinned by the `budget_golden` suite).
 
 use crate::hwsim::{HwModel, KvPool};
 use crate::runtime::{DecodeState, Engine, TensorI};

@@ -80,6 +80,12 @@ pub struct InferenceStats {
     /// Chunk-rounded generated tokens of straggler rows; the clock charges
     /// them an extra `(straggler_factor - 1) ×` slowdown.
     pub straggler_tokens: usize,
+    /// Extra rollout rows the budget allocator streamed to wide-bracket
+    /// groups past the probe quota (0 with `[budget]` disabled).
+    pub budget_extra_rows: usize,
+    /// Groups whose probe bracket was already narrower than
+    /// `budget.width_threshold` — they received no extra rows.
+    pub budget_saturated_groups: usize,
 }
 
 impl InferenceStats {
@@ -103,6 +109,8 @@ impl InferenceStats {
         self.fault_backoff_time += other.fault_backoff_time;
         self.fault_wasted_tokens += other.fault_wasted_tokens;
         self.straggler_tokens += other.straggler_tokens;
+        self.budget_extra_rows += other.budget_extra_rows;
+        self.budget_saturated_groups += other.budget_saturated_groups;
     }
 }
 
@@ -513,6 +521,8 @@ mod tests {
             fault_backoff_time: 0.5,
             fault_wasted_tokens: 64,
             straggler_tokens: 32,
+            budget_extra_rows: 5,
+            budget_saturated_groups: 2,
         };
         let b = InferenceStats {
             calls: 1,
@@ -531,6 +541,8 @@ mod tests {
             fault_backoff_time: 1.5,
             fault_wasted_tokens: 16,
             straggler_tokens: 8,
+            budget_extra_rows: 3,
+            budget_saturated_groups: 1,
         };
         a.absorb(&b);
         assert_eq!(a.calls, 3);
@@ -551,6 +563,8 @@ mod tests {
         assert!((a.fault_backoff_time - 2.0).abs() < 1e-12);
         assert_eq!(a.fault_wasted_tokens, 80);
         assert_eq!(a.straggler_tokens, 40);
+        assert_eq!(a.budget_extra_rows, 8);
+        assert_eq!(a.budget_saturated_groups, 3);
     }
 
     /// Prompt-KV sharing relies on group siblings being adjacent in the

@@ -1,0 +1,203 @@
+//! Goldens for adaptive per-prompt rollout budgets (`[budget]`).
+//!
+//! The allocator's determinism contract (docs/DETERMINISM.md):
+//!
+//! * **Disabled budgeting is the baseline.** With `budget.enabled =
+//!   false` the trained parameters and every training-CSV column (modulo
+//!   the real wall-clock column) are bit-identical whatever the other
+//!   budget knobs say, and the budget telemetry columns are pinned at
+//!   zero.
+//! * **Allocation is history, not partition.** With budgeting enabled,
+//!   the probe barrier makes the allocation sequence — and hence the
+//!   extra rows, the assembled groups, and the trained parameters — a
+//!   pure function of `(run_seed, probe outcomes)`: 1 worker and a
+//!   4-worker pool, and different decode-chunk sizes, land on bit-
+//!   identical state.
+//! * **Budget is conserved.** Over random specs, observation histories
+//!   and observation orders, the allocator never grants more than
+//!   `(n − n_probe) × |groups|` extra slots, never takes a prompt past
+//!   `max_per_prompt`, assigns contiguous rollout indices from
+//!   `n_probe`, and returns the identical sequence for any reordering
+//!   of the same history.
+//!
+//! The allocator-level property suite runs everywhere; the trainer
+//! goldens are skipped when artifacts are absent (CI without
+//! `make artifacts`).
+
+mod common;
+
+use pods::coordinator::scheduler::{BudgetAllocator, BudgetSpec, Trainer};
+use pods::metrics::CsvRow;
+use pods::util::prop::for_cases;
+
+/// Rewards on the rule-based model's 0.25 grid in [0, 3].
+fn grid_reward(rng: &mut pods::util::rng::Rng) -> f32 {
+    0.25 * rng.below(13) as f32
+}
+
+/// Budget conservation and history purity over random `(groups, spec,
+/// history, schedule)` draws: the grant sequence respects both caps,
+/// assigns contiguous per-group rollout indices starting at `n_probe`,
+/// and is bit-identical under any reordering of the same observations —
+/// the property behind worker-partition and refill-order invariance.
+#[test]
+fn allocation_conserves_budget_and_ignores_observation_order() {
+    for_cases(300, |rng| {
+        let groups = 1 + rng.below(12);
+        let n = 1 + rng.below(64);
+        let n_probe = 1 + rng.below(n);
+        let max_per_prompt = n_probe + rng.below(2 * n + 1);
+        let width_threshold = 0.25 * rng.below(8) as f64;
+        let spec = BudgetSpec { n, n_probe, max_per_prompt, width_threshold };
+        // a random probe history: some groups rich, some thin, some empty
+        let mut history: Vec<(usize, f32)> = Vec::new();
+        for g in 0..groups {
+            for _ in 0..rng.below(n_probe + 1) {
+                history.push((g, grid_reward(rng)));
+            }
+        }
+        let mut alloc = BudgetAllocator::new(spec, groups);
+        for &(g, r) in &history {
+            alloc.observe(g, r);
+        }
+        let grants = alloc.allocate();
+
+        // conservation: never more than the released slots in total
+        assert!(
+            grants.len() <= (n - n_probe) * groups,
+            "granted {} of at most {} slots ({spec:?})",
+            grants.len(),
+            (n - n_probe) * groups
+        );
+        // per-prompt cap, and contiguous indices from n_probe per group
+        let mut per = vec![n_probe; groups];
+        for &(g, r) in &grants {
+            assert_eq!(r as usize, per[g], "rollout indices must be contiguous from n_probe");
+            per[g] += 1;
+            assert!(per[g] <= max_per_prompt, "group {g} exceeded max_per_prompt ({spec:?})");
+        }
+        // saturated groups (incl. never-observed ones) get nothing extra
+        for g in 0..groups {
+            if alloc.is_saturated(g) {
+                assert_eq!(per[g], n_probe, "saturated group {g} was granted extras ({spec:?})");
+            }
+        }
+        // history purity: any observation order yields the same sequence
+        // (this is what a different worker partition or refill order is)
+        let mut shuffled = history.clone();
+        rng.shuffle(&mut shuffled);
+        let mut alloc2 = BudgetAllocator::new(spec, groups);
+        for &(g, r) in &shuffled {
+            alloc2.observe(g, r);
+        }
+        assert_eq!(grants, alloc2.allocate(), "allocation depended on observation order");
+    });
+}
+
+/// Disabled budgeting is the baseline: moving every other `[budget]`
+/// knob changes nothing — parameters bitwise, every training-CSV row
+/// bitwise (modulo the real wall-clock column), budget telemetry pinned
+/// at zero.
+#[test]
+fn disabled_budget_is_bitwise_identical_to_fixed_n() {
+    let Some(dir) = common::artifacts() else { return };
+    let run = |name: &str, n_probe: usize, width_threshold: f64| {
+        let mut b = common::tiny_builder(name, "pods_budget_golden");
+        b.budget_n_probe = n_probe;
+        b.budget_width_threshold = width_threshold;
+        common::train(&dir, b.build().unwrap(), 2)
+    };
+    let base = run("budget_off_a", 8, 0.25);
+    let moved = run("budget_off_b", 2, 9.0);
+    assert_eq!(
+        base.store.params, moved.store.params,
+        "disabled budget must be bit-identical whatever the other budget knobs say"
+    );
+    let csv = |tr: &Trainer| {
+        tr.recorder
+            .iters
+            .iter()
+            .map(|r| {
+                let mut r = r.clone();
+                r.real_time = 0.0; // the only column allowed to move
+                r.csv_row()
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(csv(&base), csv(&moved), "disabled budget must leave the training CSV bitwise");
+    for r in &base.recorder.iters {
+        assert_eq!(r.budget_extra_rows, 0, "disabled budget must grant nothing");
+        assert_eq!(r.budget_saturated_groups, 0, "disabled budget must observe nothing");
+    }
+}
+
+/// Allocation is history, not partition: with budgeting enabled, the
+/// worker-pool size and the decode-chunk size change neither the
+/// allocation sequence (telemetry columns) nor the trained parameters.
+/// At `width_threshold = 0` every observed group stays in the heap, so
+/// the full released budget is always granted (non-vacuity) and the
+/// decoded row set equals the fixed-`n` run's — which pins the adaptive
+/// path's parameters against the baseline too.
+#[test]
+fn enabled_allocation_is_invariant_to_workers_and_chunk() {
+    let Some(dir) = common::artifacts() else { return };
+    let iters = 2;
+    let run = |name: &str, enabled: bool, workers: usize, chunk: usize| {
+        let mut b = common::tiny_builder(name, "pods_budget_golden");
+        b.workers = workers;
+        b.decode_chunk = chunk;
+        b.schedule = "sync".into();
+        b.budget_enabled = enabled;
+        b.budget_n_probe = 4;
+        b.budget_width_threshold = 0.0;
+        common::train(&dir, b.build().unwrap(), iters)
+    };
+    let w1 = run("budget_w1_c4", true, 1, 4);
+    let w4 = run("budget_w4_c4", true, 4, 4);
+    let c8 = run("budget_w1_c8", true, 1, 8);
+    assert_eq!(
+        w1.store.params, w4.store.params,
+        "worker count changed trained parameters under budgeting"
+    );
+    assert_eq!(
+        w1.store.params, c8.store.params,
+        "decode-chunk size changed trained parameters under budgeting"
+    );
+    let alloc_trace = |tr: &Trainer| {
+        tr.recorder
+            .iters
+            .iter()
+            .map(|r| (r.rollouts_generated, r.budget_extra_rows, r.budget_saturated_groups))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(alloc_trace(&w1), alloc_trace(&w4), "allocation must be partition-invariant");
+    assert_eq!(alloc_trace(&w1), alloc_trace(&c8), "allocation must be chunk-invariant");
+    // non-vacuity: at threshold 0 the probe wave observes every group,
+    // so the full released budget is granted every iteration
+    for r in &w1.recorder.iters {
+        // the fixture runs 2 groups at n = 16 with n_probe = 4: the
+        // allocator must release and grant exactly (16 − 4) × 2 slots
+        assert_eq!(r.budget_extra_rows, 24, "the full released budget must be granted");
+        assert_eq!(r.rollouts_generated, 32, "probe + extras must equal n × |groups|");
+        assert_eq!(r.budget_saturated_groups, 0, "threshold 0 saturates nothing observed");
+    }
+    // threshold 0 grants every group back to exactly n rollouts: the
+    // decoded row set (and its per-row seeds) equals the fixed-n run's,
+    // so the adaptive path must train the baseline's exact parameters
+    let fixed = run("budget_fixed_n", false, 1, 4);
+    assert_eq!(
+        w1.store.params, fixed.store.params,
+        "threshold-0 budgeting must reproduce the fixed-n parameters bitwise"
+    );
+    assert_eq!(
+        alloc_trace(&w1)
+            .iter()
+            .map(|&(gen, _, _)| gen)
+            .collect::<Vec<_>>(),
+        alloc_trace(&fixed)
+            .iter()
+            .map(|&(gen, _, _)| gen)
+            .collect::<Vec<_>>(),
+        "threshold-0 budgeting must decode the fixed-n rollout count"
+    );
+}

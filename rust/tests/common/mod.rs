@@ -1,0 +1,66 @@
+//! Shared fixtures for the trainer-level golden tests.
+//!
+//! Every `*_golden.rs` suite that drives the real [`Trainer`] needs the
+//! same three pieces: the artifact gate (skip cleanly when `make
+//! artifacts` has not run), the standard tiny config (2-prompt
+//! iterations of the `pods` kind on the `base` profile, `n = 16 → m =
+//! 4`), and the quiet train-N-iterations runner. They used to be
+//! copy-pasted per file; this module is the single source so a fixture
+//! change (a new required config knob, a different artifact layout)
+//! lands in one place.
+//!
+//! Each test binary compiles its own copy of this module and rarely uses
+//! every helper, hence the file-level `dead_code` allow.
+
+#![allow(dead_code)]
+
+use pods::config::RunConfig;
+use pods::coordinator::scheduler::Trainer;
+use pods::exp::CfgBuilder;
+use std::path::{Path, PathBuf};
+
+/// Artifact gate for trainer-level goldens: `Some(dir)` when the `base`
+/// profile's artifacts exist, `None` (after printing the standard skip
+/// line) otherwise. Callers `let Some(dir) = artifacts() else { return }`.
+pub fn artifacts() -> Option<PathBuf> {
+    let dir = pods::default_artifacts_dir();
+    if dir.join("base/meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// The standard tiny trainer fixture: 2 iterations × 2 prompts of the
+/// `pods` kind on the `base` arith profile, `n = 16 → m = 4`, eval out
+/// of the way. Returns the builder so each suite can move the knobs it
+/// is actually testing before `.build()`.
+pub fn tiny_builder(name: &str, out_subdir: &str) -> CfgBuilder {
+    CfgBuilder {
+        name: name.into(),
+        profile: "base".into(),
+        task: "arith".into(),
+        iterations: 2,
+        prompts_per_iter: 2,
+        eval_every: 10,
+        eval_problems: 8,
+        kind: "pods".into(),
+        n: 16,
+        m: Some(4),
+        lr: 1e-4,
+        out_dir: std::env::temp_dir().join(out_subdir).to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+}
+
+/// Build a trainer on `cfg`, silence the engine, and run `iters`
+/// training iterations — the body every trainer golden repeats.
+pub fn train(dir: &Path, cfg: RunConfig, iters: usize) -> Trainer {
+    let mut tr = Trainer::new(dir, cfg).unwrap();
+    tr.engine.quiet = true;
+    for it in 0..iters {
+        tr.train_iteration(it).unwrap();
+    }
+    tr
+}

@@ -15,10 +15,11 @@
 //! `make artifacts`) runs the full stack twice — `online_prune` on and
 //! off — and compares post-training parameters bitwise.
 
+mod common;
+
 use pods::coordinator::advantage::NormMode;
 use pods::coordinator::group::{build_update_batch, PromptGroup};
 use pods::coordinator::select::{OnlineSelector, Pipeline, Verdict};
-use pods::exp::CfgBuilder;
 use pods::util::prop::for_cases;
 use pods::util::rng::Rng;
 
@@ -284,41 +285,16 @@ fn token_budget_pipelines_prune_the_over_cap_tail() {
 /// token-budget pipeline, while recording the pruning telemetry.
 #[test]
 fn online_prune_trains_bit_identical_params() {
-    let dir = pods::default_artifacts_dir();
-    if !dir.join("base/meta.json").exists() {
-        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
-        return;
-    }
+    let Some(dir) = common::artifacts() else { return };
     let g = pods::runtime::Engine::load(&dir, "base").unwrap().meta.gen_len;
     let rule = format!("prune(max_tokens={}) | max_variance", (g / 4).max(1));
     let run = |online_prune: bool| {
-        let cfg = CfgBuilder {
-            name: format!("prune_golden_{online_prune}"),
-            profile: "base".into(),
-            task: "arith".into(),
-            iterations: 2,
-            prompts_per_iter: 2,
-            eval_every: 10,
-            eval_problems: 8,
-            kind: "pods".into(),
-            n: 16,
-            m: Some(4),
-            rule: rule.clone(),
-            lr: 1e-4,
-            decode_chunk: 4,
-            online_prune,
-            out_dir: std::env::temp_dir().join("pods_prune_golden").to_string_lossy().into_owned(),
-            ..Default::default()
-        }
-        .build()
-        .unwrap();
-        let mut tr =
-            pods::coordinator::scheduler::Trainer::new(&dir, cfg).unwrap();
-        tr.engine.quiet = true;
-        for it in 0..2 {
-            tr.train_iteration(it).unwrap();
-        }
-        tr
+        let mut b =
+            common::tiny_builder(&format!("prune_golden_{online_prune}"), "pods_prune_golden");
+        b.rule = rule.clone();
+        b.decode_chunk = 4;
+        b.online_prune = online_prune;
+        common::train(&dir, b.build().unwrap(), 2)
     };
     let posthoc = run(false);
     let online = run(true);

@@ -22,23 +22,14 @@
 //! The store-only goldens run everywhere; the trainer goldens are
 //! skipped when artifacts are absent (CI without `make artifacts`).
 
+mod common;
+
 use pods::config::{ReplaySection, RunConfig};
 use pods::coordinator::advantage::NormMode;
 use pods::coordinator::group::{build_update_batch, PromptGroup, SelectedRollout};
 use pods::coordinator::replay::ReplayStore;
 use pods::coordinator::scheduler::Trainer;
 use pods::coordinator::select::Pipeline;
-use pods::exp::CfgBuilder;
-
-fn artifacts() -> Option<std::path::PathBuf> {
-    let dir = pods::default_artifacts_dir();
-    if dir.join("base/meta.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: base artifacts missing (run `make artifacts`)");
-        None
-    }
-}
 
 fn cfg(
     name: &str,
@@ -46,23 +37,12 @@ fn cfg(
     iterations: usize,
     replay: Option<(f64, usize, usize)>,
 ) -> RunConfig {
-    let mut b = CfgBuilder {
-        name: name.into(),
-        profile: "base".into(),
-        task: "arith".into(),
-        iterations,
-        prompts_per_iter: 2,
-        eval_every: iterations.max(1),
-        eval_problems: 16,
-        kind: "pods".into(),
-        n: 16,
-        m: Some(4),
-        lr: 1e-4,
-        workers,
-        schedule: "sync".into(),
-        out_dir: std::env::temp_dir().join("pods_replay_golden").to_string_lossy().into_owned(),
-        ..Default::default()
-    };
+    let mut b = common::tiny_builder(name, "pods_replay_golden");
+    b.iterations = iterations;
+    b.eval_every = iterations.max(1);
+    b.eval_problems = 16;
+    b.workers = workers;
+    b.schedule = "sync".into();
     if let Some((mix, staleness, capacity)) = replay {
         b.replay_enabled = true;
         b.replay_mix_fraction = mix;
@@ -166,16 +146,9 @@ fn staleness_window_slides_and_history_replays_bit_identical() {
 /// replay telemetry columns pinned at zero, store untouched.
 #[test]
 fn disabled_replay_is_bitwise_identical() {
-    let Some(dir) = artifacts() else { return };
+    let Some(dir) = common::artifacts() else { return };
     let iters = 2;
-    let run = |c: RunConfig| {
-        let mut tr = Trainer::new(&dir, c).unwrap();
-        tr.engine.quiet = true;
-        for it in 0..iters {
-            tr.train_iteration(it).unwrap();
-        }
-        tr
-    };
+    let run = |c: RunConfig| common::train(&dir, c, iters);
     let base = run(cfg("golden_replay_off_a", 1, iters, None));
     let mut moved_cfg = cfg("golden_replay_off_b", 1, iters, None);
     moved_cfg.replay.mix_fraction = 1.0;
@@ -205,15 +178,10 @@ fn disabled_replay_is_bitwise_identical() {
 /// partition-invariance axis of the (run_seed, history) purity contract.
 #[test]
 fn replay_store_and_params_invariant_across_worker_pool_sizes() {
-    let Some(dir) = artifacts() else { return };
+    let Some(dir) = common::artifacts() else { return };
     let iters = 3;
     let run = |name: &str, workers: usize| {
-        let mut tr = Trainer::new(&dir, cfg(name, workers, iters, Some((0.5, 2, 4)))).unwrap();
-        tr.engine.quiet = true;
-        for it in 0..iters {
-            tr.train_iteration(it).unwrap();
-        }
-        tr
+        common::train(&dir, cfg(name, workers, iters, Some((0.5, 2, 4))), iters)
     };
     let w1 = run("golden_replay_w1", 1);
     let w4 = run("golden_replay_w4", 4);
