@@ -8,10 +8,13 @@
 //! The `workers > 1` arms exercise the real rollout thread pool (one
 //! engine replica per worker thread); the `pipelined` arm additionally
 //! overlaps generation of the next iteration with the current update on
-//! this host's cores.
+//! this host's cores, and the `fleet` arm deepens that overlap to the
+//! staleness-K ready-batch queue (R=2 replicas, K=2) so the pool rides
+//! through each batch's straggler tail.
 
 use pods::coordinator::scheduler::Trainer;
 use pods::exp::CfgBuilder;
+use pods::hwsim::FleetSection;
 use pods::util::bench::{bench, BenchReport};
 
 #[allow(clippy::too_many_arguments)]
@@ -28,7 +31,13 @@ fn mk_trainer(
     replay: bool,
     share_kv: bool,
     prompts: usize,
+    fleet_rk: Option<(usize, usize)>,
 ) -> anyhow::Result<Trainer> {
+    let mut fleet = FleetSection::default();
+    if let Some((r, k)) = fleet_rk {
+        fleet.inference_replicas = r;
+        fleet.max_staleness = Some(k);
+    }
     let cfg = CfgBuilder {
         name: format!("bench_{kind}_{n}_{workers}w_{schedule}"),
         profile: "base".into(),
@@ -48,6 +57,7 @@ fn mk_trainer(
         online_prune,
         share_prompt_kv: share_kv,
         replay_enabled: replay,
+        fleet,
         out_dir: std::env::temp_dir().join("pods_bench").to_string_lossy().into_owned(),
         ..Default::default()
     }
@@ -84,6 +94,10 @@ fn main() -> anyhow::Result<()> {
         ("ga   (n=64, train all)", "ga", 64, None, 1, "sync", 16, "continuous"),
         ("pods real-threads (4w)", "pods", 64, Some(16), 4, "sync", 16, "continuous"),
         ("pods pipelined (4w)", "pods", 64, Some(16), 4, "pipelined", 16, "continuous"),
+        // staleness-K fleet schedule: two generation batches in flight
+        // (R=2, K=2) over the same 4-worker pool; compared against the
+        // depth-1 pipelined arm by `pods bench-check --min-fleet-speedup`
+        ("pods fleet (r=2, k=2, 4w)", "pods", 64, Some(16), 4, "pipelined", 16, "continuous"),
         ("pods distributed (8w)", "pods", 64, Some(16), 8, "sync", 16, "continuous"),
         ("ga   distributed (8w)", "ga", 64, None, 8, "sync", 16, "continuous"),
         ("pods prune-rule (online off)", "pods", 64, Some(16), 1, "sync", 16, "continuous"),
@@ -110,8 +124,21 @@ fn main() -> anyhow::Result<()> {
         // the KV comparison arms run 4 prompt groups so prefill sharing
         // has sibling groups to straddle; everything else keeps 1
         let prompts = if label.contains("(n=64, m=8)") { 4 } else { 1 };
+        let fleet_rk = if label.contains("fleet") { Some((2usize, 2usize)) } else { None };
         let mut tr = mk_trainer(
-            kind, n, m, workers, schedule, chunk, refill, rule, online, replay, share_kv, prompts,
+            kind,
+            n,
+            m,
+            workers,
+            schedule,
+            chunk,
+            refill,
+            rule,
+            online,
+            replay,
+            share_kv,
+            prompts,
+            fleet_rk,
         )?;
         let pipelined = schedule == "pipelined";
         let mut it = 0usize;

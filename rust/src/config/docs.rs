@@ -8,7 +8,7 @@
 //! committed file is stale.
 
 use super::{BudgetSection, CkptSection, ReplaySection, RolloutSection, UpdateSection};
-use crate::hwsim::{FaultSection, HwModel};
+use crate::hwsim::{FaultSection, FleetSection, HwModel};
 use anyhow::{anyhow, Result};
 use std::path::Path;
 
@@ -59,6 +59,7 @@ pub fn sections() -> Vec<SectionDoc> {
     let rp = ReplaySection::default();
     let bu = BudgetSection::default();
     let fa = FaultSection::default();
+    let fl = FleetSection::default();
     let ck = CkptSection::default();
     vec![
         SectionDoc {
@@ -197,6 +198,30 @@ pub fn sections() -> Vec<SectionDoc> {
                 KeyDoc::new("backoff_base", "float", fa.backoff_base.to_string(), ">= 0", "Simulated backoff charged before the first retry, in seconds."),
                 KeyDoc::new("backoff_factor", "float", fa.backoff_factor.to_string(), ">= 1", "Exponential backoff growth per subsequent retry (`base * factor^attempt`)."),
                 KeyDoc::new("min_group_survivors", "int", fa.min_group_survivors.to_string(), ">= 1", "Hard degradation floor: the iteration fails loudly when any prompt group retains fewer rollouts after losses."),
+            ],
+        },
+        SectionDoc {
+            name: "fleet",
+            intro: "Disaggregated two-fleet execution: `R` elastic \
+                    inference replicas feed the sharded update fleet \
+                    through a staleness-K bounded ready-batch queue. The \
+                    defaults reproduce the legacy single-box schedules \
+                    bit-for-bit (`sync` is the K = 0 special case, \
+                    `pipelined` is K = 1 with R = 1 — see \
+                    docs/DETERMINISM.md); the `traffic_*` keys shape only \
+                    the synthetic traffic the cost-model-only fleet \
+                    simulator is driven with (`pods exp fleet`).",
+            keys: vec![
+                KeyDoc::new("inference_replicas", "int", fl.inference_replicas.to_string(), ">= 1", "Inference replicas `R` feeding the update fleet; generation batch `t` runs on replica `t mod R`."),
+                KeyDoc::new("max_staleness", "int", "—", "sync: 0; pipelined: >= 1 (absent: derived from the schedule)", "Staleness bound `K`: a batch generated under `params(t)` may be consumed by `update(t')` only while `t' − t <= K`."),
+                KeyDoc::new("queue_capacity", "int", fl.queue_capacity.to_string(), "0 = derived from the staleness bound", "Ready-batch queue capacity; admission blocks the producing replica while this many batches wait unconsumed."),
+                KeyDoc::new("traffic_prompts", "int", fl.traffic_prompts.to_string(), ">= 1", "Backlog size of the synthetic traffic model (batch-granular simulation keeps millions of queued prompts cheap)."),
+                KeyDoc::new("traffic_burst", "int", fl.traffic_burst.to_string(), ">= 1", "Prompts arriving per burst (arrivals are bursty, not smooth)."),
+                KeyDoc::new("traffic_gap", "float", fl.traffic_gap.to_string(), "finite, >= 0", "Simulated seconds between bursts."),
+                KeyDoc::new("traffic_prompt_len_min", "int", fl.traffic_prompt_len_min.to_string(), ">= 1; <= traffic_prompt_len_max", "Minimum sampled prompt length (tokens)."),
+                KeyDoc::new("traffic_prompt_len_max", "int", fl.traffic_prompt_len_max.to_string(), "—", "Maximum sampled prompt length (tokens)."),
+                KeyDoc::new("traffic_gen_len_min", "int", fl.traffic_gen_len_min.to_string(), ">= 1; <= traffic_gen_len_max", "Minimum sampled generated length (tokens)."),
+                KeyDoc::new("traffic_gen_len_max", "int", fl.traffic_gen_len_max.to_string(), "—", "Maximum sampled generated length (tokens)."),
             ],
         },
         SectionDoc {
@@ -419,6 +444,36 @@ mod tests {
             key(&secs, "faults", "min_group_survivors").default,
             fa.min_group_survivors.to_string()
         );
+        // [fleet] — defaults reproduce the legacy single-box schedules
+        let fl = &cfg.fleet;
+        assert_eq!(
+            key(&secs, "fleet", "inference_replicas").default,
+            fl.inference_replicas.to_string()
+        );
+        assert_eq!(key(&secs, "fleet", "max_staleness").default, "—");
+        assert_eq!(key(&secs, "fleet", "queue_capacity").default, fl.queue_capacity.to_string());
+        assert_eq!(
+            key(&secs, "fleet", "traffic_prompts").default,
+            fl.traffic_prompts.to_string()
+        );
+        assert_eq!(key(&secs, "fleet", "traffic_burst").default, fl.traffic_burst.to_string());
+        assert_eq!(key(&secs, "fleet", "traffic_gap").default, fl.traffic_gap.to_string());
+        assert_eq!(
+            key(&secs, "fleet", "traffic_prompt_len_min").default,
+            fl.traffic_prompt_len_min.to_string()
+        );
+        assert_eq!(
+            key(&secs, "fleet", "traffic_prompt_len_max").default,
+            fl.traffic_prompt_len_max.to_string()
+        );
+        assert_eq!(
+            key(&secs, "fleet", "traffic_gen_len_min").default,
+            fl.traffic_gen_len_min.to_string()
+        );
+        assert_eq!(
+            key(&secs, "fleet", "traffic_gen_len_max").default,
+            fl.traffic_gen_len_max.to_string()
+        );
         // [ckpt]
         assert_eq!(key(&secs, "ckpt", "every").default, cfg.ckpt.every.to_string());
         // [run]/[algo] parse-fallback defaults
@@ -450,7 +505,7 @@ mod tests {
         let text = render();
         for sec in [
             "[run]", "[algo]", "[rollout]", "[update]", "[replay]", "[budget]", "[hwsim]",
-            "[faults]", "[ckpt]", "[sft]",
+            "[faults]", "[fleet]", "[ckpt]", "[sft]",
         ] {
             assert!(text.contains(sec), "missing section {sec}");
         }

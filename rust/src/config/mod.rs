@@ -468,6 +468,9 @@ pub struct RunConfig {
     pub budget: BudgetSection,
     /// `[faults]` — deterministic fault injection (off by default).
     pub faults: crate::hwsim::FaultSection,
+    /// `[fleet]` — disaggregated two-fleet execution + traffic model
+    /// (defaults reproduce the legacy single-box schedules).
+    pub fleet: crate::hwsim::FleetSection,
     /// `[ckpt]` — crash-consistent checkpoint/resume (off by default).
     pub ckpt: CkptSection,
     /// `[sft]` — optional supervised warm-up.
@@ -492,6 +495,7 @@ impl RunConfig {
         let replay = SectionView::new(&doc, "replay");
         let budget = SectionView::new(&doc, "budget");
         let faults = SectionView::new(&doc, "faults");
+        let fleet = SectionView::new(&doc, "fleet");
         let ckpt = SectionView::new(&doc, "ckpt");
         let sft = SectionView::new(&doc, "sft");
 
@@ -528,6 +532,7 @@ impl RunConfig {
             replay: ReplaySection::from_section(&replay)?,
             budget: BudgetSection::from_section(&budget)?,
             faults: crate::hwsim::FaultSection::from_section(&faults)?,
+            fleet: crate::hwsim::FleetSection::from_section(&fleet)?,
             ckpt: CkptSection::from_section(&ckpt)?,
             sft: if sft.sec.is_some() {
                 Some(SftSection {
@@ -612,6 +617,32 @@ impl RunConfig {
         self.replay.validate()?;
         self.budget.validate()?;
         self.faults.validate()?;
+        self.fleet.validate()?;
+        // an explicit staleness bound must agree with the executor
+        // schedule — the legacy schedules are its K=0 / K>=1 special
+        // cases, and a contradictory pair would silently change which
+        // schedule the goldens pinned
+        if let Some(k) = self.fleet.max_staleness {
+            match self.hwsim.schedule {
+                crate::hwsim::Schedule::Sync if k != 0 => {
+                    return Err(anyhow!(
+                        "fleet.max_staleness = {k} contradicts hwsim.schedule = \"sync\": \
+                         the sync schedule is the K = 0 special case (every batch is \
+                         consumed under the params it was generated with); use \
+                         schedule = \"pipelined\" for K >= 1"
+                    ));
+                }
+                crate::hwsim::Schedule::Pipelined if k == 0 => {
+                    return Err(anyhow!(
+                        "fleet.max_staleness = 0 contradicts hwsim.schedule = \
+                         \"pipelined\": the pipelined schedule overlaps generation \
+                         with the previous update, which requires K >= 1; use \
+                         schedule = \"sync\" for K = 0"
+                    ));
+                }
+                _ => {}
+            }
+        }
         // replayed rows reuse the advantage convention of the selected
         // subset ("after" statistics); "before" normalizes over the full
         // generation group, which no longer exists at replay time
@@ -991,6 +1022,56 @@ mod tests {
         let text = format!("{MINIMAL}\n[faults]\nbackoff_factor = 0.5\n");
         let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
         assert!(err.contains("faults.backoff_factor"), "undescriptive: {err}");
+    }
+
+    #[test]
+    fn fleet_section_defaults_and_overrides() {
+        let cfg = RunConfig::from_str_validated(MINIMAL).unwrap();
+        assert_eq!(cfg.fleet.inference_replicas, 1);
+        assert_eq!(cfg.fleet.max_staleness, None, "staleness must default to the schedule");
+        assert_eq!(cfg.fleet.queue_capacity, 0);
+        assert_eq!(cfg.fleet.traffic_burst, 256);
+
+        let text = format!(
+            "{MINIMAL}\n[hwsim]\nschedule = \"pipelined\"\n\n[fleet]\n\
+             inference_replicas = 4\nmax_staleness = 3\nqueue_capacity = 2\n\
+             traffic_burst = 64\ntraffic_gap = 1.5\n"
+        );
+        let cfg = RunConfig::from_str_validated(&text).unwrap();
+        assert_eq!(cfg.fleet.inference_replicas, 4);
+        assert_eq!(cfg.fleet.max_staleness, Some(3));
+        assert_eq!(cfg.fleet.queue_capacity, 2);
+        assert_eq!(cfg.fleet.traffic_burst, 64);
+        assert!((cfg.fleet.traffic_gap - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.fleet.effective_staleness(cfg.hwsim.schedule), 3);
+        assert_eq!(cfg.fleet.effective_queue_capacity(cfg.hwsim.schedule), 2);
+    }
+
+    #[test]
+    fn fleet_section_rejects_degenerate_and_contradictory_values() {
+        let text = format!("{MINIMAL}\n[fleet]\ninference_replicas = 0\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("fleet.inference_replicas"), "undescriptive: {err}");
+
+        // sync is the K = 0 special case; an explicit K >= 1 contradicts it
+        let text = format!("{MINIMAL}\n[fleet]\nmax_staleness = 2\n");
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("fleet.max_staleness"), "undescriptive: {err}");
+        assert!(err.contains("sync"), "undescriptive: {err}");
+
+        // pipelined overlaps generation with the previous update: K >= 1
+        let text = format!(
+            "{MINIMAL}\n[hwsim]\nschedule = \"pipelined\"\n\n[fleet]\nmax_staleness = 0\n"
+        );
+        let err = format!("{:#}", RunConfig::from_str_validated(&text).unwrap_err());
+        assert!(err.contains("pipelined"), "undescriptive: {err}");
+
+        // explicit K = 0 agrees with sync; absent K composes with both
+        // schedules, and extra replicas are legal under either
+        let text = format!("{MINIMAL}\n[fleet]\nmax_staleness = 0\n");
+        assert!(RunConfig::from_str_validated(&text).is_ok());
+        let text = format!("{MINIMAL}\n[fleet]\ninference_replicas = 4\n");
+        assert!(RunConfig::from_str_validated(&text).is_ok());
     }
 
     #[test]

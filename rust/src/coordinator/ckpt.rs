@@ -4,11 +4,13 @@
 //! needs to continue a killed run **bit-identically** (pinned by
 //! `rust/tests/fault_golden.rs`): parameters + optimizer moments, the
 //! frozen base and KL-reference vectors, the simulated clock, the
-//! pipelined executor's overlap state, the replay store, both recorder
-//! CSVs, and — when a pipelined prefetch was in flight at the snapshot —
-//! the behaviour parameters it was decoding with, so resume can
-//! regenerate the exact same one-step-off-policy rollouts (per-row
-//! counter RNG makes regeneration bit-exact).
+//! replay store, both recorder CSVs, and the executor's **ready-batch
+//! queue** — for every prefetched generation in flight at the snapshot,
+//! its target iteration, origin policy version, accrued overlap credit
+//! and the behaviour parameters it was decoding with, in queue order, so
+//! resume can regenerate the exact same off-policy rollouts (per-row
+//! counter RNG makes regeneration bit-exact) and charge the exact same
+//! hidden time. The legacy pipelined prefetch is the one-entry case.
 //!
 //! Crash consistency: the state serializes to a temp file that is
 //! atomically renamed over the target, and the payload carries an
@@ -27,15 +29,21 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"PODSRSM1";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// An in-flight pipelined prefetch at snapshot time: the iteration it
-/// generates and the behaviour snapshot (pre-update policy) it decodes
-/// with.
+/// One in-flight prefetched generation at snapshot time: the iteration
+/// it generates, the policy version and behaviour snapshot (pre-update
+/// policy) it decodes under, and the overlap credit it has accrued.
 #[derive(Debug, Clone)]
 pub struct InflightGen {
     /// Iteration the prefetch generates rollouts for.
     pub iter: usize,
+    /// Policy version (origin iteration) the behaviour snapshot belongs
+    /// to — realized staleness at consumption is `iter − born`.
+    pub born: usize,
+    /// Simulated update time that elapsed while a replica decoded this
+    /// batch (the clock's concurrency credit at consumption).
+    pub overlap: f64,
     /// Full-parameter behaviour vector (the frozen base in LoRA mode).
     pub params: Vec<f32>,
     /// Behaviour adapter vector (LoRA profiles only).
@@ -63,9 +71,6 @@ pub struct ResumeState {
     pub clock_now: f64,
     /// Accumulated overlap savings of the simulated clock.
     pub clock_overlap_saved: f64,
-    /// Previous iteration's simulated update time (what a restored
-    /// prefetch overlaps with).
-    pub last_update_time: f64,
     /// Trainable parameters + Adam moments + step counter.
     pub store: ParamStore,
     /// Frozen full-parameter base (LoRA profiles only).
@@ -74,8 +79,12 @@ pub struct ResumeState {
     pub ref_params: Option<Vec<f32>>,
     /// KL-reference adapter vector.
     pub ref_lora: Option<Vec<f32>>,
-    /// In-flight pipelined prefetch, if one existed at snapshot time.
-    pub inflight: Option<InflightGen>,
+    /// The executor's ready-batch queue at snapshot time, oldest first
+    /// (empty under the sync schedule; one entry under the legacy
+    /// pipelined prefetch; up to the fleet depth otherwise). Restore
+    /// resubmits the entries in this order — queue order is part of the
+    /// determinism contract.
+    pub queued: Vec<InflightGen>,
     /// Replay-store contents in canonical `RowId` order.
     pub replay_rows: Vec<StoredRow>,
     /// Recorder training rows (serialized as CSV text).
@@ -280,7 +289,6 @@ pub fn save(path: &Path, st: &ResumeState) -> Result<()> {
     e.u64(st.prompt_cursor);
     e.f64(st.clock_now);
     e.f64(st.clock_overlap_saved);
-    e.f64(st.last_update_time);
     e.i32(st.store.step);
     e.vec_f32(&st.store.params);
     e.vec_f32(&st.store.m);
@@ -288,14 +296,13 @@ pub fn save(path: &Path, st: &ResumeState) -> Result<()> {
     e.opt_vec_f32(st.base.as_deref());
     e.opt_vec_f32(st.ref_params.as_deref());
     e.opt_vec_f32(st.ref_lora.as_deref());
-    match &st.inflight {
-        Some(inf) => {
-            e.u8(1);
-            e.u64(inf.iter as u64);
-            e.vec_f32(&inf.params);
-            e.opt_vec_f32(inf.lora.as_deref());
-        }
-        None => e.u8(0),
+    e.u64(st.queued.len() as u64);
+    for q in &st.queued {
+        e.u64(q.iter as u64);
+        e.u64(q.born as u64);
+        e.f64(q.overlap);
+        e.vec_f32(&q.params);
+        e.opt_vec_f32(q.lora.as_deref());
     }
     e.u64(st.replay_rows.len() as u64);
     for r in &st.replay_rows {
@@ -352,7 +359,6 @@ pub fn load(path: &Path) -> Result<ResumeState> {
     let prompt_cursor = d.u64()?;
     let clock_now = d.f64()?;
     let clock_overlap_saved = d.f64()?;
-    let last_update_time = d.f64()?;
     let step = d.i32()?;
     let params = d.vec_f32()?;
     let m = d.vec_f32()?;
@@ -361,14 +367,17 @@ pub fn load(path: &Path) -> Result<ResumeState> {
     let base = d.opt_vec_f32()?;
     let ref_params = d.opt_vec_f32()?;
     let ref_lora = d.opt_vec_f32()?;
-    let inflight = match d.u8()? {
-        0 => None,
-        _ => Some(InflightGen {
+    let n_queued = d.len()?;
+    let mut queued = Vec::with_capacity(n_queued);
+    for _ in 0..n_queued {
+        queued.push(InflightGen {
             iter: d.u64()? as usize,
+            born: d.u64()? as usize,
+            overlap: d.f64()?,
             params: d.vec_f32()?,
             lora: d.opt_vec_f32()?,
-        }),
-    };
+        });
+    }
     let n_replay = d.len()?;
     let mut replay_rows = Vec::with_capacity(n_replay);
     for _ in 0..n_replay {
@@ -395,12 +404,11 @@ pub fn load(path: &Path) -> Result<ResumeState> {
         prompt_cursor,
         clock_now,
         clock_overlap_saved,
-        last_update_time,
         store,
         base,
         ref_params,
         ref_lora,
-        inflight,
+        queued,
         replay_rows,
         iter_rows,
         eval_rows,
@@ -431,7 +439,6 @@ mod tests {
             prompt_cursor: 40,
             clock_now: 123.456,
             clock_overlap_saved: 7.5,
-            last_update_time: 2.25,
             store: ParamStore {
                 params: vec![1.0, -2.5, 0.125],
                 m: vec![0.5; 3],
@@ -441,7 +448,13 @@ mod tests {
             base: Some(vec![9.0, 8.0]),
             ref_params: Some(vec![1.5; 3]),
             ref_lora: None,
-            inflight: Some(InflightGen { iter: 5, params: vec![0.5, 0.75], lora: None }),
+            queued: vec![InflightGen {
+                iter: 5,
+                born: 4,
+                overlap: 2.25,
+                params: vec![0.5, 0.75],
+                lora: None,
+            }],
             replay_rows: vec![StoredRow {
                 id: RowId { iter: 3, prompt_id: 17, rollout_idx: 2 },
                 score: 0.5,
@@ -481,7 +494,6 @@ mod tests {
         assert_eq!(back.prompt_cursor, st.prompt_cursor);
         assert_eq!(back.clock_now.to_bits(), st.clock_now.to_bits());
         assert_eq!(back.clock_overlap_saved.to_bits(), st.clock_overlap_saved.to_bits());
-        assert_eq!(back.last_update_time.to_bits(), st.last_update_time.to_bits());
         assert_eq!(back.store.params, st.store.params);
         assert_eq!(back.store.m, st.store.m);
         assert_eq!(back.store.v, st.store.v);
@@ -489,9 +501,11 @@ mod tests {
         assert_eq!(back.base, st.base);
         assert_eq!(back.ref_params, st.ref_params);
         assert_eq!(back.ref_lora, st.ref_lora);
-        let inf = back.inflight.unwrap();
-        assert_eq!(inf.iter, 5);
-        assert_eq!(inf.params, vec![0.5, 0.75]);
+        assert_eq!(back.queued.len(), 1);
+        assert_eq!(back.queued[0].iter, 5);
+        assert_eq!(back.queued[0].born, 4);
+        assert_eq!(back.queued[0].overlap.to_bits(), 2.25f64.to_bits());
+        assert_eq!(back.queued[0].params, vec![0.5, 0.75]);
         assert_eq!(back.replay_rows.len(), 1);
         assert_eq!(back.replay_rows[0].id, st.replay_rows[0].id);
         assert_eq!(back.replay_rows[0].record.tokens, st.replay_rows[0].record.tokens);

@@ -31,6 +31,20 @@
 //! ([`crate::hwsim::SimClock::advance_hidden`]) and the hidden time is
 //! reported per iteration as `sim_overlap_saved`.
 //!
+//! Both schedules are special cases of the **staleness-K two-fleet
+//! model** (`[fleet]`, [`crate::hwsim::FleetSection`]): prefetched
+//! generations park in a bounded ready-batch queue and a batch generated
+//! under `params(t)` may be consumed by `update(t')` only while
+//! `t' − t <= K`. The prefetch depth is
+//! `min(K, fleet.queue_capacity)`, the clock's overlap credit accrues
+//! per queued batch while one of the `fleet.inference_replicas` decodes
+//! it, and a batch consumed at staleness >= 2 has its fresh rows'
+//! behaviour log-probs floored at `-ln(replay.rho_max)` (the same
+//! truncated-importance-sampling bound the replay path uses). `sync` is
+//! exactly K = 0 (empty queue) and `pipelined` is exactly K = 1 with one
+//! replica — both reproduce the legacy single-box schedules bit-for-bit
+//! (pinned by `rust/tests/fleet_golden.rs`).
+//!
 //! With `schedule = "sync"` the executor reproduces the sequential
 //! reference (`generate_group` prompt-by-prompt) exactly — per-row RNG
 //! seeds make rollout streams independent of packing, sharding, chunking
@@ -57,6 +71,7 @@ use crate::rollout::KvPolicy;
 use crate::runtime::{Engine, ParamStore};
 use crate::tasks::{Split, TaskKind};
 use anyhow::{bail, Result};
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -174,6 +189,29 @@ pub struct StepReport {
     /// Groups whose probe reward bracket was already narrower than
     /// `budget.width_threshold` (0 with `[budget]` disabled).
     pub budget_saturated_groups: usize,
+    /// Realized staleness of this iteration's consumed generation batch:
+    /// the update version minus the policy version it decoded under
+    /// (0 for a fresh inline generation, 1 for the classic pipelined
+    /// prefetch, up to `fleet.max_staleness` for deeper queues).
+    pub fleet_staleness: usize,
+    /// Ready-batch queue depth after this step's prefetch refill.
+    pub fleet_queue_depth: usize,
+}
+
+/// One prefetched generation parked in the executor's ready-batch queue.
+struct QueuedGen {
+    /// Iteration this batch generates rollouts for (its consume version).
+    iter: usize,
+    /// Iteration whose pre-update policy snapshot it decodes under (its
+    /// origin version) — realized staleness at consumption is
+    /// `iter − born`.
+    born: usize,
+    /// Simulated update time that elapsed while an inference replica was
+    /// decoding this batch — the concurrency credit
+    /// [`SimClock::advance_hidden`] hides the inference cost behind.
+    overlap: f64,
+    /// The in-flight generation handle on the rollout pool.
+    pending: PendingGen,
 }
 
 /// The schedule-aware driver for one training run.
@@ -184,11 +222,10 @@ pub struct TrainLoop {
     pub update: UpdateEngine,
     /// Config-selected phase schedule (sync | pipelined).
     pub schedule: Schedule,
-    /// Prefetched generation for a future iteration (pipelined only).
-    pending: Option<(usize, PendingGen)>,
-    /// Previous iteration's simulated update time — what a prefetched
-    /// inference phase overlapped with.
-    last_update_time: f64,
+    /// The ready-batch queue: prefetched generations for future
+    /// iterations, oldest first. Consumption order is generation history
+    /// — never a function of worker partition (docs/DETERMINISM.md).
+    queue: VecDeque<QueuedGen>,
     /// Cross-iteration replay store (`[replay]`; stays empty — and costs
     /// nothing — when the section is disabled).
     replay: ReplayStore,
@@ -209,8 +246,7 @@ impl TrainLoop {
             rollout: RolloutEngine::new(artifacts, profile, workers),
             update: UpdateEngine::new(param_width),
             schedule,
-            pending: None,
-            last_update_time: 0.0,
+            queue: VecDeque::new(),
             replay: ReplayStore::new(),
         }
     }
@@ -222,50 +258,51 @@ impl TrainLoop {
     }
 
     // ---- Resume hooks (`coordinator::ckpt`) ---------------------------
-    // A crash-consistent resume must reconstruct the three pieces of
-    // executor state a fresh TrainLoop lacks: the replay store, the
-    // previous update time (what a prefetched inference overlaps with),
-    // and — under the pipelined schedule — the in-flight prefetch itself.
+    // A crash-consistent resume must reconstruct the two pieces of
+    // executor state a fresh TrainLoop lacks: the replay store and the
+    // ready-batch queue of in-flight prefetches (each with its origin
+    // version and accrued overlap credit).
 
     /// Replace the replay store wholesale (checkpoint restore).
     pub fn set_replay(&mut self, store: ReplayStore) {
         self.replay = store;
     }
 
-    /// Previous iteration's simulated update time (checkpoint save).
-    pub fn last_update_time(&self) -> f64 {
-        self.last_update_time
+    /// The ready-batch queue at snapshot time, oldest first: for each
+    /// queued generation, the iteration it is for, the origin iteration
+    /// whose policy it decodes under, the overlap credit it has accrued,
+    /// and the behaviour snapshot itself (checkpoint save stores the
+    /// snapshot's params so resume can regenerate the exact same
+    /// off-policy rollouts).
+    pub fn queued_info(&self) -> Vec<(usize, usize, f64, &GenBatch)> {
+        self.queue.iter().map(|q| (q.iter, q.born, q.overlap, q.pending.batch())).collect()
     }
 
-    /// Restore the previous update time (checkpoint restore) so the first
-    /// resumed iteration charges the same overlap as the uninterrupted
-    /// run would have.
-    pub fn set_last_update_time(&mut self, t: f64) {
-        self.last_update_time = t;
-    }
-
-    /// The in-flight pipelined prefetch, if any: which iteration it is
-    /// for and the behaviour snapshot it decodes with (checkpoint save
-    /// stores the snapshot's params so resume can regenerate the exact
-    /// same one-step-off-policy rollouts).
-    pub fn pending_info(&self) -> Option<(usize, &GenBatch)> {
-        self.pending.as_ref().map(|(i, p)| (*i, p.batch()))
-    }
-
-    /// Resubmit a prefetch for `iter` from a reconstructed behaviour
-    /// snapshot (checkpoint restore). The rollout pool regenerates the
-    /// batch from scratch — per-row counter RNG makes the streams
-    /// bit-identical to the ones the killed run had in flight.
-    pub fn restore_pending(&mut self, iter: usize, br: usize, batch: GenBatch) -> Result<()> {
+    /// Resubmit one queued prefetch from a reconstructed behaviour
+    /// snapshot (checkpoint restore; call once per saved entry, in saved
+    /// order). The rollout pool regenerates the batch from scratch —
+    /// per-row counter RNG makes the streams bit-identical to the ones
+    /// the killed run had in flight — and the restored overlap credit
+    /// makes the first resumed consumption charge the same hidden time
+    /// the uninterrupted run would have.
+    pub fn restore_queued(
+        &mut self,
+        iter: usize,
+        born: usize,
+        overlap: f64,
+        br: usize,
+        batch: GenBatch,
+    ) -> Result<()> {
         let pending = self.rollout.submit(br, batch)?;
-        self.pending = Some((iter, pending));
+        self.queue.push_back(QueuedGen { iter, born, overlap, pending });
         Ok(())
     }
 
     /// One full Algorithm-1 step for `iter`. `prefetch_next` permits the
-    /// pipelined schedule to start generating `iter + 1` while this
-    /// step's update runs (the driver passes `false` on the final
-    /// iteration so the run doesn't pay for an overhanging generation).
+    /// async schedules to keep generating ahead (up to the fleet depth)
+    /// while this step's update runs (the driver passes `false` on the
+    /// final iteration so the run doesn't pay for an overhanging
+    /// generation).
     pub fn step(&mut self, ctx: StepCtx, iter: usize, prefetch_next: bool) -> Result<StepReport> {
         let cfg = ctx.cfg;
         let m = match cfg.algo_kind() {
@@ -274,28 +311,38 @@ impl TrainLoop {
         };
 
         // ---- Phase 1: rollouts for this iteration ---------------------
-        // Redeem the prefetched batch if it matches `iter`. A stale batch
-        // (the caller stepped out of order, or retried after an error) is
-        // drained and discarded — and the prompt window its prefetch
-        // consumed is handed back to the cursor, so no prompts are
-        // silently skipped.
-        let ready = match self.pending.take() {
-            Some((i, p)) if i == iter => Some(self.rollout.collect(p)?),
-            Some((_, p)) => {
-                let _ = self.rollout.collect(p);
-                *ctx.prompt_cursor =
-                    ctx.prompt_cursor.saturating_sub(cfg.run.prompts_per_iter as u64);
-                None
+        // Redeem the oldest eligible ready batch if it matches `iter` —
+        // queue consumption order is generation history, never a choice.
+        // A mismatched head (the caller stepped out of order, or retried
+        // after an error) invalidates the whole queue: every queued batch
+        // is drained and discarded, and the prompt windows their
+        // prefetches consumed are handed back to the cursor, so no
+        // prompts are silently skipped.
+        let mut fleet_staleness = 0usize;
+        let mut concurrent = 0.0f64;
+        let ready = if self.queue.front().map(|q| q.iter == iter).unwrap_or(false) {
+            let q = self.queue.pop_front().expect("head matched above");
+            fleet_staleness = iter - q.born;
+            concurrent = q.overlap;
+            Some(self.rollout.collect(q.pending)?)
+        } else {
+            if !self.queue.is_empty() {
+                let stale = self.queue.len() as u64;
+                for q in self.queue.drain(..) {
+                    let _ = self.rollout.collect(q.pending);
+                }
+                *ctx.prompt_cursor = ctx
+                    .prompt_cursor
+                    .saturating_sub(stale * cfg.run.prompts_per_iter as u64);
             }
-            None => None,
+            None
         };
-        let (groups, gen_stats, prefetched) = match ready {
-            Some((g, s)) => (g, s, true),
+        let (groups, gen_stats) = match ready {
+            Some((g, s)) => (g, s),
             None => {
                 let batch = snapshot_batch(&ctx, iter);
                 *ctx.prompt_cursor += cfg.run.prompts_per_iter as u64;
-                let (g, s) = self.rollout.generate(ctx.engine, batch)?;
-                (g, s, false)
+                self.rollout.generate(ctx.engine, batch)?
             }
         };
         let rollouts_generated = gen_stats.rollouts;
@@ -401,15 +448,37 @@ impl TrainLoop {
         let sel_variance =
             crate::coordinator::downsample::subset_variance(&sel_rewards, &sel_idx);
 
-        // ---- Phase 2.5: pipelined prefetch of iteration t+1 -----------
-        // Snapshot the *pre-update* policy θ_t: the rollout pool decodes
-        // iteration t+1 with it while the main thread updates to θ_{t+1}.
-        if self.schedule == Schedule::Pipelined && prefetch_next {
-            let batch = snapshot_batch(&ctx, iter + 1);
-            *ctx.prompt_cursor += cfg.run.prompts_per_iter as u64;
-            let br = ctx.engine.meta.config.rollout_batch;
-            let pending = self.rollout.submit(br, batch)?;
-            self.pending = Some((iter + 1, pending));
+        // ---- Phase 2.5: staleness-K prefetch refill -------------------
+        // Snapshot the *pre-update* policy θ_t and top the ready-batch
+        // queue up to the fleet depth: the rollout pool decodes future
+        // iterations with it while the main thread updates to θ_{t+1}.
+        // Depth `min(K, queue_capacity)` bounds realized staleness by
+        // construction — a batch submitted here is consumed at most
+        // `depth` updates after its origin. The first-ahead batch is
+        // gated by `prefetch_next` alone (the legacy pipelined contract:
+        // the driver passes `false` on the final iteration); deeper
+        // slots additionally stop at the run horizon.
+        let depth = cfg
+            .fleet
+            .effective_staleness(self.schedule)
+            .min(cfg.fleet.effective_queue_capacity(self.schedule));
+        if prefetch_next {
+            while self.queue.len() < depth {
+                let next_iter = iter + 1 + self.queue.len();
+                if !self.queue.is_empty() && next_iter >= cfg.run.iterations {
+                    break;
+                }
+                let batch = snapshot_batch(&ctx, next_iter);
+                *ctx.prompt_cursor += cfg.run.prompts_per_iter as u64;
+                let br = ctx.engine.meta.config.rollout_batch;
+                let pending = self.rollout.submit(br, batch)?;
+                self.queue.push_back(QueuedGen {
+                    iter: next_iter,
+                    born: iter,
+                    overlap: 0.0,
+                    pending,
+                });
+            }
         }
 
         // ---- Phase 2.75: cross-iteration replay -----------------------
@@ -439,16 +508,36 @@ impl TrainLoop {
         // Replayed rows pack after the fresh rows: they charge full update
         // cost (inside upd.rollouts_trained) but zero inference time —
         // gen_lens above only ever sees freshly decoded rollouts.
-        let upd =
-            self.update.run(ctx.engine, ctx.store, ctx.base, &groups, &selected, &replayed, cfg)?;
+        // Staleness-K off-policy soundness: a batch consumed >= 2 policy
+        // versions after its origin gets the truncated-importance-
+        // sampling floor on its fresh rows too — the same `rho_max` bound
+        // that makes replayed rows sound. Staleness 0 and 1 pass `None`,
+        // keeping the legacy schedules' numerics bit-identical.
+        let stale_floor = if fleet_staleness >= 2 { Some(cfg.replay.rho_max) } else { None };
+        let upd = self.update.run(
+            ctx.engine,
+            ctx.store,
+            ctx.base,
+            &groups,
+            &selected,
+            &replayed,
+            stale_floor,
+            cfg,
+        )?;
 
         // ---- Clock: overlap-aware charging ----------------------------
-        // A prefetched inference phase ran concurrently with the previous
-        // update; only its overhang advances the clock.
-        let concurrent = if prefetched { self.last_update_time } else { 0.0 };
+        // A redeemed ready batch's inference ran concurrently with the
+        // updates that elapsed while a replica decoded it; only its
+        // overhang advances the clock. Then the overlap credit accrues to
+        // the queued batches currently held by one of the
+        // `fleet.inference_replicas` (the front of the queue) — deeper
+        // entries wait for a free replica and accrue nothing yet.
         let charged_inference = ctx.clock.advance_hidden(sim_inference, concurrent);
         ctx.clock.advance(upd.sim_update);
-        self.last_update_time = upd.sim_update;
+        let replicas = cfg.fleet.inference_replicas.max(1);
+        for q in self.queue.iter_mut().take(replicas) {
+            q.overlap += upd.sim_update;
+        }
 
         let n_groups = groups.len().max(1) as f32;
         Ok(StepReport {
@@ -486,6 +575,8 @@ impl TrainLoop {
             retry_time,
             budget_extra_rows: gen_stats.budget_extra_rows,
             budget_saturated_groups: gen_stats.budget_saturated_groups,
+            fleet_staleness,
+            fleet_queue_depth: self.queue.len(),
         })
     }
 }

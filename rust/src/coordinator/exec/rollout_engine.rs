@@ -51,6 +51,7 @@ use crate::rollout::{
 use crate::runtime::Engine;
 use crate::tasks::{Problem, TaskKind};
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeSet, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -186,7 +187,17 @@ pub struct RolloutEngine {
     pub workers: usize,
     pool: Option<Pool>,
     next_batch_id: u64,
-    in_flight: bool,
+    /// Batch ids submitted but not yet collected. The staleness-K fleet
+    /// schedule keeps several generations in flight at once; the set is
+    /// what tells a collect loop whether a foreign shard result belongs
+    /// to a live sibling (park it) or a discarded batch (drop it).
+    in_flight: BTreeSet<u64>,
+    /// Shard results that arrived while a *different* live batch was
+    /// being collected, parked until their own batch's collect drains
+    /// them. Completion order across batches is a thread-timing artifact;
+    /// parking is what keeps each batch's assembly a pure function of its
+    /// own row set (docs/DETERMINISM.md).
+    parked: VecDeque<WorkerMsg>,
 }
 
 /// Split the row queue into contiguous, size-balanced shards: at most
@@ -222,7 +233,8 @@ impl RolloutEngine {
             workers,
             pool: None,
             next_batch_id: 0,
-            in_flight: false,
+            in_flight: BTreeSet::new(),
+            parked: VecDeque::new(),
         }
     }
 
@@ -275,12 +287,15 @@ impl RolloutEngine {
     }
 
     /// Start generating `batch` on the pool and return immediately — the
-    /// pipelined schedule's prefetch. `br` is the profile's rollout batch
+    /// async schedules' prefetch. `br` is the profile's rollout batch
     /// size (`engine.meta.config.rollout_batch`), which bounds how finely
-    /// the rows are sharded. At most one batch may be in flight. Under a
-    /// `[budget]` the submitted wave covers only the probe quota; the
-    /// budget extra wave runs inside [`Self::collect`], after the probe
-    /// outcomes are assembled.
+    /// the rows are sharded. Several batches may be in flight at once
+    /// (the staleness-K ready-batch queue); each one's shard results are
+    /// keyed by batch id and collected independently. Under a `[budget]`
+    /// the submitted wave covers only the probe quota; the budget extra
+    /// wave runs inside [`Self::collect`], after the probe outcomes are
+    /// assembled — per batch, so every in-flight generation runs its own
+    /// probe barrier.
     pub fn submit(&mut self, br: usize, batch: GenBatch) -> Result<PendingGen> {
         let rows = plan_rows(&batch.problems, probe_n(&batch), batch.run_seed, batch.iter);
         self.submit_rows(rows, Arc::new(batch), br)
@@ -292,9 +307,6 @@ impl RolloutEngine {
         batch: Arc<GenBatch>,
         br: usize,
     ) -> Result<PendingGen> {
-        if self.in_flight {
-            bail!("a rollout generation batch is already in flight");
-        }
         let batch_id = self.next_batch_id;
         self.next_batch_id += 1;
         let shards = shard_rows(&rows, self.workers.max(1), br);
@@ -305,7 +317,7 @@ impl RolloutEngine {
                 .send(Job { batch_id, shard_idx, attempt: 0, rows, batch: Arc::clone(&batch) })
                 .map_err(|_| anyhow!("rollout worker threads exited; pool is gone"))?;
         }
-        self.in_flight = true;
+        self.in_flight.insert(batch_id);
         Ok(PendingGen { batch_id, shards: n_shards, br, batch })
     }
 
@@ -323,9 +335,10 @@ impl RolloutEngine {
     /// same probe history before any extra slot is granted.
     pub fn collect(&mut self, pending: PendingGen) -> Result<(Vec<PromptGroup>, InferenceStats)> {
         // collect() consumes the in-flight batch whatever happens next —
-        // a broken pool must surface its own error on later submits, not
-        // a misleading "already in flight".
-        self.in_flight = false;
+        // its stragglers must be dropped (not parked) once it is no
+        // longer live, and a broken pool must surface its own error on
+        // later submits.
+        self.in_flight.remove(&pending.batch_id);
         let workers = self.workers.max(1);
         let pool = self
             .pool
@@ -337,7 +350,14 @@ impl RolloutEngine {
             kept: Vec::new(),
             stats: InferenceStats::default(),
         };
-        collect_wave(pool, &pending, pending.shards, &mut wave)?;
+        collect_wave(
+            pool,
+            &pending,
+            pending.shards,
+            &mut wave,
+            &mut self.parked,
+            &self.in_flight,
+        )?;
         if let Some(spec) = pending.batch.budget {
             let extras = plan_extra_rows(&pending.batch, spec, &wave.kept, &mut wave.stats);
             if !extras.is_empty() {
@@ -357,7 +377,14 @@ impl RolloutEngine {
                         })?;
                     wave.next_shard_idx += 1;
                 }
-                collect_wave(pool, &pending, n_shards, &mut wave)?;
+                collect_wave(
+                    pool,
+                    &pending,
+                    n_shards,
+                    &mut wave,
+                    &mut self.parked,
+                    &self.in_flight,
+                )?;
             }
         }
         Ok(assemble(&pending.batch, wave.kept, wave.stats))
@@ -377,11 +404,19 @@ struct WaveState {
 
 /// Drain `outstanding` shards of `pending` from the pool, retrying failed
 /// attempts per the batch's fault plan. One wave of the collect loop.
+///
+/// With several batches in flight, shard results interleave on the one
+/// result channel: results already parked for `pending` are consumed
+/// first, results for a *live* sibling batch (in `live`) are parked for
+/// that batch's own collect, and stragglers of discarded batches are
+/// dropped.
 fn collect_wave(
     pool: &Pool,
     pending: &PendingGen,
     outstanding: usize,
     wave: &mut WaveState,
+    parked: &mut VecDeque<WorkerMsg>,
+    live: &BTreeSet<u64>,
 ) -> Result<()> {
     let plan = pending.batch.faults.clone();
     let mut alive = wave.alive;
@@ -390,8 +425,13 @@ fn collect_wave(
     let stats = &mut wave.stats;
     let mut outstanding = outstanding;
     let mut last_lost_reason = String::new();
+    let is_ours = |m: &WorkerMsg| {
+        matches!(m, WorkerMsg::Shard { batch_id, .. } if *batch_id == pending.batch_id)
+    };
     while outstanding > 0 {
-        let msg = if alive > 0 {
+        let msg = if let Some(pos) = parked.iter().position(is_ours) {
+            parked.remove(pos).expect("position found above")
+        } else if alive > 0 {
             pool.result_rx
                 .recv()
                 .map_err(|_| anyhow!("rollout workers hung up mid-batch"))?
@@ -414,6 +454,11 @@ fn collect_wave(
             }
             WorkerMsg::Shard { batch_id, attempt, rows, result } => {
                 if batch_id != pending.batch_id {
+                    if live.contains(&batch_id) {
+                        // a queued sibling's shard finished early: park
+                        // it for that batch's own collect loop
+                        parked.push_back(WorkerMsg::Shard { batch_id, attempt, rows, result });
+                    }
                     continue; // stragglers of a discarded batch
                 }
                 (attempt, rows, result)

@@ -216,6 +216,14 @@ impl UpdateEngine {
     /// Replayed rows pack after the fresh rows in canonical order; pass
     /// `&[]` for the no-replay path, which is bit-identical to the
     /// pre-replay engine.
+    ///
+    /// `stale_floor`: when the staleness-K fleet schedule consumed a
+    /// generation batch two or more policy versions old, the **fresh**
+    /// rows' behaviour log-probs are floored at `-ln(rho_max)` too —
+    /// the same truncated-importance-sampling bound replayed rows always
+    /// carry. `None` (staleness <= 1, i.e. both legacy schedules) leaves
+    /// fresh rows untouched and the numerics bit-identical.
+    #[allow(clippy::too_many_arguments)]
     pub fn run(
         &mut self,
         engine: &Engine,
@@ -224,6 +232,7 @@ impl UpdateEngine {
         groups: &[PromptGroup],
         selected: &[SelectedRollout],
         replay: &[StoredRow],
+        stale_floor: Option<f64>,
         cfg: &RunConfig,
     ) -> Result<UpdateOut> {
         let bu = engine.meta.config.update_batch;
@@ -242,6 +251,18 @@ impl UpdateEngine {
                 r.record.old_lp.iter().map(|&l| truncate_old_lp(l, cfg.replay.rho_max)).collect()
             })
             .collect();
+        // Fresh rows consumed at staleness >= 2 get the same floor (the
+        // fleet schedule's off-policy soundness bound); `None` keeps the
+        // borrowed originals and every f32 rounding step bit-identical.
+        let stale_lp: Option<Vec<Vec<f32>>> = stale_floor.map(|rho| {
+            selected
+                .iter()
+                .map(|sel| {
+                    let r = &groups[sel.group_idx].rollouts[sel.rollout_idx];
+                    r.old_lp.iter().map(|&l| truncate_old_lp(l, rho)).collect()
+                })
+                .collect()
+        });
         self.accum.reset();
         let mut loss_sum = 0f64;
         let mut clip_sum = 0f64;
@@ -259,7 +280,10 @@ impl UpdateEngine {
                             tokens: &r.tokens,
                             pad_len: r.pad_len,
                             gen_mask: &r.gen_mask,
-                            old_lp: &r.old_lp,
+                            old_lp: match &stale_lp {
+                                Some(lp) => &lp[i],
+                                None => &r.old_lp,
+                            },
                             ref_lp: &r.ref_lp,
                             advantage: sel.advantage,
                         }

@@ -20,9 +20,12 @@
 //! generating iteration *t+1* (on the rollout pool, against the
 //! pre-update policy) while phase 3 of iteration *t* runs on this thread;
 //! the hwsim clock then charges `max(inference, update)` for the
-//! overlapped portion. The recorder logs simulated and real time plus the
-//! per-iteration overlap savings so every figure can be regenerated from
-//! the CSVs.
+//! overlapped portion. With `[fleet]` configured, both schedules are
+//! special cases of the staleness-K two-fleet model (see
+//! [`crate::coordinator::exec`]): up to `max_staleness` batches queue
+//! ahead, and the recorder logs per-iteration staleness, queue depth and
+//! fleet utilization alongside the overlap savings so every figure can be
+//! regenerated from the CSVs.
 
 use crate::config::RunConfig;
 use crate::coordinator::ckpt as resume;
@@ -255,6 +258,11 @@ pub struct IterStats {
     /// Simulated time hidden by overlapping this iteration's generation
     /// with the previous update (zero under the sync schedule).
     pub sim_overlap_saved: f64,
+    /// Realized staleness of the consumed batch (iter − born); 0 under
+    /// the sync schedule and ≤ `fleet.max_staleness` by construction.
+    pub fleet_staleness: usize,
+    /// Ready-batch queue depth after this step's refill.
+    pub fleet_queue_depth: usize,
 }
 
 /// The leader: owns engine, parameters, clock, metrics and the RL loop.
@@ -505,7 +513,27 @@ impl Trainer {
             sim_update: r.sim_update,
             sim_step: r.sim_step,
             sim_overlap_saved: r.sim_overlap_saved,
+            fleet_staleness: r.fleet_staleness,
+            fleet_queue_depth: r.fleet_queue_depth,
         };
+        // running staleness statistics, recomputed from the recorded rows
+        // via integer sums so a resumed run reproduces them bit-exactly
+        let fleet_replicas = self.cfg.fleet.inference_replicas.max(1);
+        let mut prior_sum = 0usize;
+        let mut prior_max = 0usize;
+        for row in &self.recorder.iters {
+            prior_sum += row.fleet_staleness;
+            prior_max = prior_max.max(row.fleet_staleness);
+        }
+        let n_rows = self.recorder.iters.len() + 1;
+        let fleet_mean_staleness = (prior_sum + r.fleet_staleness) as f64 / n_rows as f64;
+        let fleet_max_staleness = prior_max.max(r.fleet_staleness);
+        let fleet_inf_util = if r.sim_step > 0.0 {
+            r.sim_inference / (fleet_replicas as f64 * r.sim_step)
+        } else {
+            0.0
+        };
+        let fleet_upd_util = if r.sim_step > 0.0 { r.sim_update / r.sim_step } else { 0.0 };
         self.recorder.push_iter(IterRow {
             iter,
             sim_time: self.clock.now(),
@@ -547,6 +575,14 @@ impl Trainer {
             retry_time: r.retry_time,
             budget_extra_rows: r.budget_extra_rows,
             budget_saturated_groups: r.budget_saturated_groups,
+            fleet_replicas,
+            fleet_staleness: r.fleet_staleness,
+            fleet_mean_staleness,
+            fleet_max_staleness,
+            fleet_queue_depth: r.fleet_queue_depth,
+            fleet_queue_block_time: 0.0,
+            fleet_inf_util,
+            fleet_upd_util,
         });
         Ok(stats)
     }
@@ -681,16 +717,22 @@ impl Trainer {
             prompt_cursor: next_iter as u64 * ppi,
             clock_now: self.clock.now(),
             clock_overlap_saved: self.clock.overlap_saved(),
-            last_update_time: self.exec.last_update_time(),
             store: self.store.clone(),
             base: self.base.clone(),
             ref_params: self.ref_params.as_deref().cloned(),
             ref_lora: self.ref_lora.as_deref().cloned(),
-            inflight: self.exec.pending_info().map(|(i, b)| resume::InflightGen {
-                iter: i,
-                params: (*b.params).clone(),
-                lora: b.lora.as_deref().cloned(),
-            }),
+            queued: self
+                .exec
+                .queued_info()
+                .into_iter()
+                .map(|(i, born, overlap, b)| resume::InflightGen {
+                    iter: i,
+                    born,
+                    overlap,
+                    params: (*b.params).clone(),
+                    lora: b.lora.as_deref().cloned(),
+                })
+                .collect(),
             replay_rows: self.exec.replay_store().contents().to_vec(),
             iter_rows: self.recorder.iters.clone(),
             eval_rows: self.recorder.evals.clone(),
@@ -730,15 +772,15 @@ impl Trainer {
         self.ref_params = st.ref_params.map(std::sync::Arc::new);
         self.ref_lora = st.ref_lora.map(std::sync::Arc::new);
         self.clock = SimClock::restore(st.clock_now, st.clock_overlap_saved);
-        self.exec.set_last_update_time(st.last_update_time);
         self.exec.set_replay(ReplayStore::from_rows(st.replay_rows));
         self.recorder = Recorder { iters: st.iter_rows, evals: st.eval_rows };
         self.prompt_cursor = st.prompt_cursor;
         self.start_iter = st.next_iter;
-        if let Some(inf) = st.inflight {
-            // rebuild the killed run's in-flight prefetch from its saved
-            // behaviour snapshot — regeneration replays the identical
-            // one-step-off-policy rollouts (per-row counter RNG)
+        for inf in st.queued {
+            // rebuild the killed run's ready-batch queue in order from the
+            // saved behaviour snapshots — regeneration replays the
+            // identical off-policy rollouts (per-row counter RNG) and the
+            // saved overlap credit charges the identical hidden time
             let batch = build_gen_batch(
                 &self.cfg,
                 &self.engine,
@@ -753,7 +795,7 @@ impl Trainer {
             );
             self.prompt_cursor += self.cfg.run.prompts_per_iter as u64;
             let br = self.engine.meta.config.rollout_batch;
-            self.exec.restore_pending(inf.iter, br, batch)?;
+            self.exec.restore_queued(inf.iter, inf.born, inf.overlap, br, batch)?;
         }
         eprintln!(
             "[train {}] resumed from {path:?} at iteration {}",

@@ -1,0 +1,297 @@
+//! Fleet study — the disaggregated two-fleet design space across
+//! `R × K × shards`.
+//!
+//! Not a paper figure: this driver prices the staleness-K async schedule
+//! (`[fleet]`) entirely on the cost model, so it runs without artifacts.
+//! Every cell runs the *same* update sequence (same batch count, same
+//! post-selection m), so wall-clock to finish it is the cost-to-accuracy
+//! proxy: the learning curve against the update index is fixed, and only
+//! the realized staleness (reported per cell) shifts it. Traffic is the
+//! synthetic `[fleet]` model — bursty arrivals, heterogeneous prompt and
+//! generation lengths, a backlog priced at batch granularity so millions
+//! of queued prompts cost nothing per prompt.
+//!
+//! Shapes that must reproduce (asserted by this module's tests):
+//!
+//! * wall-clock is **non-increasing in R** at every (K, shards), and
+//!   strictly decreases from R = 1 while generation-bound;
+//! * the best async cell strictly beats the legacy pipelined point
+//!   (R = 1, K = 1) at the same shard count, which itself strictly beats
+//!   sync (K = 0);
+//! * realized staleness never exceeds K.
+
+use crate::hwsim::fleet::simulate;
+use crate::hwsim::{FleetSection, FleetSpec, HwModel, TrafficModel};
+use crate::metrics::{ascii_plot, write_csv_rows, CsvRow};
+use anyhow::Result;
+use std::path::Path;
+
+/// Inference replica counts swept.
+const R_SWEEP: [usize; 4] = [1, 2, 4, 8];
+/// Staleness bounds swept (0 = sync, 1 = the legacy pipelined bound).
+const K_SWEEP: [usize; 4] = [0, 1, 2, 4];
+/// Update-fleet shard counts swept.
+const SHARD_SWEEP: [usize; 3] = [1, 2, 4];
+/// Generation batches produced (= updates consumed) per cell.
+const UPDATES: usize = 64;
+/// Rollouts decoded per generation batch (the paper's default n).
+const ROWS_PER_BATCH: usize = 64;
+/// Prompts drawn from the traffic backlog per batch.
+const PROMPTS_PER_BATCH: u64 = 64;
+/// Rollouts each update trains on (post-selection m).
+const UPDATE_ROLLOUTS: usize = 16;
+/// Decode chunk the replicas run.
+const DECODE_CHUNK: usize = 16;
+/// Traffic-model seed (sampled lengths replay exactly).
+const SEED: u64 = 17;
+
+/// One (R, K, shards) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct FleetRow {
+    /// Inference replicas `R`.
+    pub replicas: usize,
+    /// Staleness bound `K`.
+    pub max_staleness: usize,
+    /// Update-fleet shard count.
+    pub shards: usize,
+    /// Simulated makespan of the fixed update sequence (sim seconds) —
+    /// the cost-to-accuracy proxy.
+    pub wall_clock: f64,
+    /// Makespan of the sync cell (R = 1, K = 0) at the same shard count
+    /// divided by this cell's — the speed-up the async schedule buys.
+    pub speedup_vs_sync: f64,
+    /// Fraction of replica-seconds spent decoding.
+    pub inference_util: f64,
+    /// Fraction of the makespan the update fleet spent updating.
+    pub update_util: f64,
+    /// Mean ready-queue depth sampled at admissions.
+    pub mean_queue_depth: f64,
+    /// Deepest the ready queue ever got.
+    pub max_queue_depth: usize,
+    /// Total replica-seconds blocked on a full queue.
+    pub queue_block_time: f64,
+    /// Mean realized staleness over consumed batches.
+    pub mean_staleness: f64,
+    /// Largest realized staleness (never exceeds K).
+    pub max_staleness_seen: usize,
+    /// Realized staleness histogram, `;`-joined counts for s = 0..=K.
+    pub staleness_hist: String,
+}
+
+impl CsvRow for FleetRow {
+    fn csv_header() -> &'static str {
+        "replicas,max_staleness,shards,wall_clock,speedup_vs_sync,inference_util,update_util,\
+         mean_queue_depth,max_queue_depth,queue_block_time,mean_staleness,max_staleness_seen,\
+         staleness_hist"
+    }
+
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.replicas,
+            self.max_staleness,
+            self.shards,
+            self.wall_clock,
+            self.speedup_vs_sync,
+            self.inference_util,
+            self.update_util,
+            self.mean_queue_depth,
+            self.max_queue_depth,
+            self.queue_block_time,
+            self.mean_staleness,
+            self.max_staleness_seen,
+            self.staleness_hist
+        )
+    }
+}
+
+/// The traffic every cell is driven with: the `[fleet]` defaults (bursty
+/// arrivals every `traffic_gap` seconds), seeded for exact replay.
+fn traffic() -> TrafficModel {
+    TrafficModel::new(&FleetSection::default(), SEED)
+}
+
+fn cell(k: usize, replicas: usize, shards: usize) -> FleetSpec {
+    FleetSpec {
+        replicas,
+        max_staleness: k,
+        queue_capacity: k,
+        updates: UPDATES,
+        rows_per_batch: ROWS_PER_BATCH,
+        prompts_per_batch: PROMPTS_PER_BATCH,
+        decode_chunk: DECODE_CHUNK,
+        update_rollouts: UPDATE_ROLLOUTS,
+        shards,
+        micro_batch: 0,
+        lora: false,
+    }
+}
+
+/// Build the sweep grid (row-major: shards, then K, then R).
+pub fn sweep(hw: &HwModel) -> Vec<FleetRow> {
+    let t = traffic();
+    let mut rows = Vec::with_capacity(SHARD_SWEEP.len() * K_SWEEP.len() * R_SWEEP.len());
+    for &shards in &SHARD_SWEEP {
+        let sync_wall = simulate(hw, &t, &cell(0, 1, shards)).wall_clock;
+        for &k in &K_SWEEP {
+            for &r in &R_SWEEP {
+                let rep = simulate(hw, &t, &cell(k, r, shards));
+                let hist: Vec<String> = rep.staleness_hist.iter().map(|c| c.to_string()).collect();
+                rows.push(FleetRow {
+                    replicas: r,
+                    max_staleness: k,
+                    shards,
+                    wall_clock: rep.wall_clock,
+                    speedup_vs_sync: sync_wall / rep.wall_clock.max(1e-12),
+                    inference_util: rep.inference_util,
+                    update_util: rep.update_util,
+                    mean_queue_depth: rep.mean_queue_depth,
+                    max_queue_depth: rep.max_queue_depth,
+                    queue_block_time: rep.queue_block_time,
+                    mean_staleness: rep.mean_staleness,
+                    max_staleness_seen: rep.max_staleness_seen,
+                    staleness_hist: hist.join(";"),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Run the study: write `<out_dir>/fleet.csv` and
+/// `<out_dir>/fleet_util.txt` (the utilization plot artifact), and print
+/// the makespan and utilization curves.
+pub fn run(out_dir: &str) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let hw = HwModel::default();
+    let rows = sweep(&hw);
+    write_csv_rows(Path::new(&format!("{out_dir}/fleet.csv")), &rows)?;
+
+    let mid_shards = SHARD_SWEEP[1];
+    let curve = |k: usize, f: &dyn Fn(&FleetRow) -> f64| -> Vec<(f64, f64)> {
+        rows.iter()
+            .filter(|r| r.max_staleness == k && r.shards == mid_shards)
+            .map(|r| (r.replicas as f64, f(r)))
+            .collect()
+    };
+    let wall_curves: Vec<(String, Vec<(f64, f64)>)> =
+        K_SWEEP.iter().map(|&k| (format!("K={k}"), curve(k, &|r| r.wall_clock))).collect();
+    let wall_series: Vec<(&str, &[(f64, f64)])> =
+        wall_curves.iter().map(|(n, p)| (n.as_str(), p.as_slice())).collect();
+    println!(
+        "Fleet study: simulated makespan vs inference replicas R \
+         (shards = {mid_shards}, {UPDATES} updates, n = {ROWS_PER_BATCH} -> m = {UPDATE_ROLLOUTS})"
+    );
+    println!("{}", ascii_plot(&wall_series, 64, 14));
+
+    let util_curves: Vec<(String, Vec<(f64, f64)>)> =
+        K_SWEEP.iter().map(|&k| (format!("K={k}"), curve(k, &|r| r.inference_util))).collect();
+    let util_series: Vec<(&str, &[(f64, f64)])> =
+        util_curves.iter().map(|(n, p)| (n.as_str(), p.as_slice())).collect();
+    let util_plot = format!(
+        "Fleet study: inference-fleet utilization vs replicas R (shards = {mid_shards})\n{}",
+        ascii_plot(&util_series, 64, 14)
+    );
+    println!("{util_plot}");
+    std::fs::write(format!("{out_dir}/fleet_util.txt"), &util_plot)?;
+
+    for &k in &K_SWEEP {
+        let at = |r: usize| {
+            rows.iter()
+                .find(|c| c.max_staleness == k && c.replicas == r && c.shards == mid_shards)
+                .expect("swept")
+        };
+        println!(
+            "  K={k}: R=1 {:>8.1}s | R=8 {:>8.1}s ({:.2}x vs sync) | \
+             queue depth {:.2} | staleness mean {:.2} max {} | hist {}",
+            at(1).wall_clock,
+            at(8).wall_clock,
+            at(8).speedup_vs_sync,
+            at(8).mean_queue_depth,
+            at(8).mean_staleness,
+            at(8).max_staleness_seen,
+            at(8).staleness_hist,
+        );
+    }
+    println!(
+        "  (replicas buy wall-clock until the staleness window or the \
+         update fleet binds — K widens the window, shards shrink the update)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row<'a>(rows: &'a [FleetRow], r: usize, k: usize, s: usize) -> &'a FleetRow {
+        rows.iter()
+            .find(|c| c.replicas == r && c.max_staleness == k && c.shards == s)
+            .expect("cell swept")
+    }
+
+    /// Acceptance shapes: wall-clock non-increasing in R everywhere,
+    /// strictly decreasing from R = 1 whenever the schedule allows any
+    /// overlap (K >= 1), and the staleness contract holds in every cell.
+    #[test]
+    fn wall_clock_decreases_in_replicas_until_bound() {
+        let rows = sweep(&HwModel::default());
+        assert_eq!(rows.len(), SHARD_SWEEP.len() * K_SWEEP.len() * R_SWEEP.len());
+        for &s in &SHARD_SWEEP {
+            for &k in &K_SWEEP {
+                let walls: Vec<f64> =
+                    R_SWEEP.iter().map(|&r| row(&rows, r, k, s).wall_clock).collect();
+                for w in walls.windows(2) {
+                    assert!(
+                        w[1] <= w[0] + 1e-9,
+                        "replicas slowed the fleet down at K={k}, shards={s}: {walls:?}"
+                    );
+                }
+                if k >= 1 {
+                    assert!(
+                        walls[1] < walls[0],
+                        "R=2 must strictly beat R=1 at K={k}, shards={s}: {walls:?}"
+                    );
+                }
+            }
+        }
+        for c in &rows {
+            assert!(c.max_staleness_seen <= c.max_staleness, "staleness contract violated");
+            assert!((0.0..=1.0 + 1e-9).contains(&c.inference_util));
+            assert!((0.0..=1.0 + 1e-9).contains(&c.update_util));
+            assert!(c.queue_block_time >= 0.0 && c.mean_queue_depth >= 0.0);
+        }
+    }
+
+    /// The schedule ladder at fixed shards: sync (K=0, R=1) is strictly
+    /// slowest, legacy pipelined (K=1, R=1) strictly improves on it, and
+    /// the deepest async cell strictly improves on pipelined.
+    #[test]
+    fn async_beats_pipelined_beats_sync() {
+        let rows = sweep(&HwModel::default());
+        for &s in &SHARD_SWEEP {
+            let sync = row(&rows, 1, 0, s).wall_clock;
+            let pipelined = row(&rows, 1, 1, s).wall_clock;
+            let deep = row(&rows, 8, 4, s).wall_clock;
+            assert!(pipelined < sync, "pipelined must beat sync at shards={s}");
+            assert!(deep < pipelined, "R=8,K=4 must beat pipelined at shards={s}");
+            assert!(row(&rows, 1, 0, s).speedup_vs_sync == 1.0);
+            assert!(row(&rows, 8, 4, s).speedup_vs_sync > 1.0);
+        }
+    }
+
+    /// The CSV schema round-trips with matching column counts, and the
+    /// histogram column accounts for every consumed batch.
+    #[test]
+    fn fleet_row_csv_shape() {
+        let rows = sweep(&HwModel::default());
+        let header_cols = FleetRow::csv_header().replace(char::is_whitespace, "");
+        let n = header_cols.split(',').count();
+        for r in &rows {
+            assert_eq!(r.csv_row().split(',').count(), n);
+            let total: u64 = r.staleness_hist.split(';').map(|c| c.parse::<u64>().unwrap()).sum();
+            assert_eq!(total, UPDATES as u64, "histogram loses batches");
+            assert_eq!(r.staleness_hist.split(';').count(), r.max_staleness + 1);
+        }
+    }
+}

@@ -13,6 +13,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod faults;
+pub mod fleet;
 pub mod kv;
 pub mod prune;
 pub mod reuse;
@@ -24,7 +25,7 @@ use crate::config::{
     AlgoSection, BudgetSection, CkptSection, ReplaySection, RolloutSection, RunConfig, RunSection,
     SftSection, UpdateSection,
 };
-use crate::hwsim::{FaultSection, HwModel};
+use crate::hwsim::{FaultSection, FleetSection, HwModel};
 use anyhow::Result;
 use std::path::Path;
 
@@ -140,6 +141,9 @@ pub struct CfgBuilder {
     pub budget_width_threshold: f64,
     /// The whole `[faults]` section (fault injection is off by default).
     pub faults: FaultSection,
+    /// The whole `[fleet]` section (defaults reproduce the legacy
+    /// single-box schedules).
+    pub fleet: FleetSection,
     /// The whole `[ckpt]` section (resume snapshots are off by default).
     pub ckpt: CkptSection,
     /// `sft.steps` (0 = no SFT warm-up section).
@@ -192,6 +196,7 @@ impl Default for CfgBuilder {
             budget_max_per_prompt: BudgetSection::default().max_per_prompt,
             budget_width_threshold: BudgetSection::default().width_threshold,
             faults: FaultSection::default(),
+            fleet: FleetSection::default(),
             ckpt: CkptSection::default(),
             sft_steps: 0,
             sft_lr: 2e-3,
@@ -255,6 +260,7 @@ impl CfgBuilder {
                 width_threshold: self.budget_width_threshold,
             },
             faults: self.faults.clone(),
+            fleet: self.fleet.clone(),
             ckpt: self.ckpt.clone(),
             sft: if self.sft_steps > 0 {
                 Some(SftSection {

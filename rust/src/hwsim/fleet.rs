@@ -1,0 +1,729 @@
+//! Disaggregated two-fleet execution model (`[fleet]`).
+//!
+//! The paper's core asymmetry — rollout generation is embarrassingly
+//! parallel and memory-light while policy updates are communication-heavy
+//! — argues for *disaggregated* deployment: an elastic fleet of `R`
+//! inference replicas (each a worker-pool box running the chunked/pruned
+//! decode driver) feeding one small sharded update fleet through a
+//! bounded ready-batch queue. The binary `sync | pipelined` schedule is
+//! the degenerate case of a **staleness-K** contract:
+//!
+//! * a batch generated under `params(t)` may only be consumed by
+//!   `update(t')` when `t' − t <= K`;
+//! * admission blocks the producing replica's clock while the queue is
+//!   full;
+//! * `K = 0` is the sync schedule (generation waits for every prior
+//!   update) and `K = 1` with `R = 1` is the pipelined schedule (exactly
+//!   one batch in flight) — the executor reproduces both **bitwise**
+//!   (see `docs/DETERMINISM.md` and `rust/tests/fleet_golden.rs`).
+//!
+//! This module holds the `[fleet]` config section, the bounded
+//! [`ReadyQueue`] with depth/block telemetry, a deterministic synthetic
+//! [`TrafficModel`] (bursty arrivals, heterogeneous prompt/gen lengths,
+//! millions of queued prompts at batch-granular cost), and [`simulate`] —
+//! a discrete-event two-fleet simulator with per-replica [`SimClock`]s
+//! that prices an R × K × shards cell entirely on the cost model
+//! (`pods exp fleet` sweeps it; no artifacts needed).
+
+use super::{HwModel, Schedule, SimClock};
+use crate::util::rng::Rng;
+use crate::util::toml::SectionView;
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+
+/// `[fleet]` — disaggregated two-fleet execution and its traffic model.
+///
+/// `inference_replicas` and `max_staleness` shape the *executor* (how
+/// many generation batches may be in flight, and how stale a consumed
+/// batch may be); the `traffic_*` keys shape only the synthetic traffic
+/// the cost-model-only fleet simulator is driven with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSection {
+    /// Inference replicas `R` feeding the update fleet. Each replica is a
+    /// worker-pool box running the chunked decode driver; the executor
+    /// assigns generation batch `t` to replica `t mod R`.
+    pub inference_replicas: usize,
+    /// Staleness bound `K`: a batch generated under `params(t)` may only
+    /// be consumed by `update(t')` when `t' − t <= K`. Absent, the bound
+    /// is derived from `hwsim.schedule` (`sync` → 0, `pipelined` → 1);
+    /// present, it must agree with the schedule (`sync` requires 0,
+    /// `pipelined` requires >= 1).
+    pub max_staleness: Option<usize>,
+    /// Ready-batch queue capacity; admission blocks the producing
+    /// replica while the queue holds this many unconsumed batches.
+    /// `0` (default) derives the capacity from the staleness bound.
+    pub queue_capacity: usize,
+    /// Backlog size of the synthetic traffic model: prompts queued for
+    /// processing. Batch-granular simulation keeps millions cheap.
+    pub traffic_prompts: u64,
+    /// Prompts arriving per burst (arrivals are bursty, not smooth).
+    pub traffic_burst: usize,
+    /// Simulated seconds between bursts.
+    pub traffic_gap: f64,
+    /// Minimum sampled prompt length (tokens).
+    pub traffic_prompt_len_min: usize,
+    /// Maximum sampled prompt length (tokens).
+    pub traffic_prompt_len_max: usize,
+    /// Minimum sampled generated length (tokens).
+    pub traffic_gen_len_min: usize,
+    /// Maximum sampled generated length (tokens).
+    pub traffic_gen_len_max: usize,
+}
+
+impl Default for FleetSection {
+    fn default() -> Self {
+        Self {
+            inference_replicas: 1,
+            max_staleness: None,
+            queue_capacity: 0,
+            traffic_prompts: 1_000_000,
+            traffic_burst: 256,
+            traffic_gap: 4.0,
+            traffic_prompt_len_min: 16,
+            traffic_prompt_len_max: 64,
+            traffic_gen_len_min: 8,
+            traffic_gen_len_max: 64,
+        }
+    }
+}
+
+impl FleetSection {
+    /// Parse from a `[fleet]` config section; absent keys keep defaults.
+    pub fn from_section(sec: &SectionView) -> Result<Self> {
+        let d = Self::default();
+        let max_staleness = match sec.get("max_staleness") {
+            Some(v) => Some(v.as_usize().map_err(|e| anyhow!("fleet.max_staleness: {e}"))?),
+            None => None,
+        };
+        let fl = Self {
+            inference_replicas: sec.usize_or("inference_replicas", d.inference_replicas)?,
+            max_staleness,
+            queue_capacity: sec.usize_or("queue_capacity", d.queue_capacity)?,
+            traffic_prompts: sec.u64_or("traffic_prompts", d.traffic_prompts)?,
+            traffic_burst: sec.usize_or("traffic_burst", d.traffic_burst)?,
+            traffic_gap: sec.f64_or("traffic_gap", d.traffic_gap)?,
+            traffic_prompt_len_min: sec
+                .usize_or("traffic_prompt_len_min", d.traffic_prompt_len_min)?,
+            traffic_prompt_len_max: sec
+                .usize_or("traffic_prompt_len_max", d.traffic_prompt_len_max)?,
+            traffic_gen_len_min: sec.usize_or("traffic_gen_len_min", d.traffic_gen_len_min)?,
+            traffic_gen_len_max: sec.usize_or("traffic_gen_len_max", d.traffic_gen_len_max)?,
+        };
+        fl.validate()?;
+        Ok(fl)
+    }
+
+    /// Reject degenerate sections at parse time (the cross-check against
+    /// `hwsim.schedule` lives in `RunConfig::validate`, which sees both
+    /// sections).
+    pub fn validate(&self) -> Result<()> {
+        if self.inference_replicas == 0 {
+            bail!(
+                "fleet.inference_replicas must be >= 1 (0 replicas cannot \
+                 generate; use 1 for the single-box schedules)"
+            );
+        }
+        if self.traffic_prompts == 0 {
+            bail!("fleet.traffic_prompts must be >= 1 (an empty backlog drives nothing)");
+        }
+        if self.traffic_burst == 0 {
+            bail!("fleet.traffic_burst must be >= 1 (arrivals come in bursts of at least one)");
+        }
+        if !(self.traffic_gap >= 0.0 && self.traffic_gap.is_finite()) {
+            bail!("fleet.traffic_gap must be finite and >= 0 (got {})", self.traffic_gap);
+        }
+        if self.traffic_prompt_len_min == 0
+            || self.traffic_prompt_len_min > self.traffic_prompt_len_max
+        {
+            bail!(
+                "fleet.traffic_prompt_len_min must be >= 1 and <= traffic_prompt_len_max \
+                 (got {}..={})",
+                self.traffic_prompt_len_min,
+                self.traffic_prompt_len_max
+            );
+        }
+        if self.traffic_gen_len_min == 0 || self.traffic_gen_len_min > self.traffic_gen_len_max {
+            bail!(
+                "fleet.traffic_gen_len_min must be >= 1 and <= traffic_gen_len_max \
+                 (got {}..={})",
+                self.traffic_gen_len_min,
+                self.traffic_gen_len_max
+            );
+        }
+        Ok(())
+    }
+
+    /// The effective staleness bound `K` under `schedule`: the explicit
+    /// `max_staleness` when set, else the schedule's legacy bound
+    /// (`sync` → 0, `pipelined` → 1). The executor's prefetch depth and
+    /// the off-policy floor both key off this value.
+    pub fn effective_staleness(&self, schedule: Schedule) -> usize {
+        self.max_staleness.unwrap_or(match schedule {
+            Schedule::Sync => 0,
+            Schedule::Pipelined => 1,
+        })
+    }
+
+    /// The effective ready-queue capacity under `schedule`: the explicit
+    /// `queue_capacity` when set, else the staleness bound (a deeper
+    /// queue than `K` could only hold batches that expire before they
+    /// are eligible).
+    pub fn effective_queue_capacity(&self, schedule: Schedule) -> usize {
+        if self.queue_capacity == 0 {
+            self.effective_staleness(schedule)
+        } else {
+            self.queue_capacity
+        }
+    }
+}
+
+/// One entry of a [`ReadyQueue`]: the payload plus the params version it
+/// was generated under (the origin iteration `t` of the staleness
+/// contract).
+#[derive(Debug, Clone)]
+pub struct QueueEntry<T> {
+    /// Params version / iteration the batch was generated under.
+    pub origin: u64,
+    /// The queued payload (a ready generation batch).
+    pub item: T,
+}
+
+/// Bounded FIFO of ready generation batches with staleness-gated
+/// consumption and depth/block telemetry.
+///
+/// Producers [`push`](Self::push) completed batches tagged with the
+/// params version they were generated under; the consumer
+/// [`pop_eligible`](Self::pop_eligible)s the *oldest* entry, and only
+/// when its realized staleness at the consuming version is within the
+/// bound. Consumption order is therefore a pure function of generation
+/// history — never of which replica produced a batch or how the worker
+/// pool was partitioned.
+#[derive(Debug, Clone)]
+pub struct ReadyQueue<T> {
+    capacity: usize,
+    entries: VecDeque<QueueEntry<T>>,
+    pushes: u64,
+    depth_sum: u64,
+    max_depth: usize,
+    block_time: f64,
+}
+
+impl<T> ReadyQueue<T> {
+    /// An empty queue of `capacity` batches (`0` = unbounded).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            entries: VecDeque::new(),
+            pushes: 0,
+            depth_sum: 0,
+            max_depth: 0,
+            block_time: 0.0,
+        }
+    }
+
+    /// Batches currently queued.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True when an admission would exceed the capacity (never for an
+    /// unbounded queue).
+    pub fn is_full(&self) -> bool {
+        self.capacity != 0 && self.entries.len() >= self.capacity
+    }
+
+    /// Admit a completed batch generated under params version `origin`.
+    /// Callers gate on [`Self::is_full`]; admission past capacity is an
+    /// accounting bug.
+    pub fn push(&mut self, origin: u64, item: T) {
+        debug_assert!(!self.is_full(), "ReadyQueue admission past capacity");
+        self.entries.push_back(QueueEntry { origin, item });
+        self.pushes += 1;
+        self.depth_sum += self.entries.len() as u64;
+        self.max_depth = self.max_depth.max(self.entries.len());
+    }
+
+    /// Record simulated seconds a producer spent blocked on a full queue.
+    pub fn record_block(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative block time {dt}");
+        self.block_time += dt;
+    }
+
+    /// Origin version of the oldest queued batch, if any.
+    pub fn front_origin(&self) -> Option<u64> {
+        self.entries.front().map(|e| e.origin)
+    }
+
+    /// Consume the oldest batch iff its realized staleness at
+    /// `consume_version` is within `k` (`consume_version − origin <= k`).
+    /// Returns `None` when the queue is empty or the head is not yet
+    /// eligible under the contract.
+    pub fn pop_eligible(&mut self, consume_version: u64, k: usize) -> Option<QueueEntry<T>> {
+        let head = self.entries.front()?;
+        if consume_version.saturating_sub(head.origin) > k as u64 {
+            return None;
+        }
+        self.entries.pop_front()
+    }
+
+    /// Mean queue depth sampled at admission events.
+    pub fn depth_mean(&self) -> f64 {
+        if self.pushes == 0 {
+            0.0
+        } else {
+            self.depth_sum as f64 / self.pushes as f64
+        }
+    }
+
+    /// Deepest the queue ever got.
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    /// Total simulated seconds producers spent blocked on a full queue.
+    pub fn block_time(&self) -> f64 {
+        self.block_time
+    }
+
+    /// Total admissions over the queue's lifetime.
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+}
+
+/// Deterministic synthetic traffic: a backlog of prompts arriving in
+/// bursts, with per-row prompt/gen lengths sampled from a batch-keyed
+/// stream. All quantities are closed-form or batch-granular, so a
+/// backlog of millions of prompts costs nothing per prompt.
+#[derive(Debug, Clone)]
+pub struct TrafficModel {
+    burst: usize,
+    gap: f64,
+    prompt_len: (usize, usize),
+    gen_len: (usize, usize),
+    seed: u64,
+}
+
+impl TrafficModel {
+    /// Build the traffic model a `[fleet]` section describes, seeded so
+    /// sampled lengths replay exactly.
+    pub fn new(fleet: &FleetSection, seed: u64) -> Self {
+        Self {
+            burst: fleet.traffic_burst.max(1),
+            gap: fleet.traffic_gap,
+            prompt_len: (fleet.traffic_prompt_len_min, fleet.traffic_prompt_len_max),
+            gen_len: (fleet.traffic_gen_len_min, fleet.traffic_gen_len_max),
+            seed,
+        }
+    }
+
+    /// Arrival time of prompt `index` (0-based): bursts of `burst`
+    /// prompts land together every `gap` seconds, starting at t = 0.
+    pub fn arrival_time(&self, index: u64) -> f64 {
+        (index / self.burst as u64) as f64 * self.gap
+    }
+
+    /// Arrival time of the *last* prompt of a contiguous batch
+    /// (`count >= 1` prompts starting at `first`) — when the whole batch
+    /// is present and generation may start.
+    pub fn batch_arrival(&self, first: u64, count: u64) -> f64 {
+        self.arrival_time(first + count.max(1) - 1)
+    }
+
+    /// Batch-keyed RNG stream: batch `b` always samples the same
+    /// lengths, independent of every other batch.
+    fn batch_rng(&self, batch: u64) -> Rng {
+        Rng::seed_from_u64(self.seed ^ batch.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Per-rollout generated lengths for batch `batch` (`rows` rollouts),
+    /// uniform in the configured range.
+    pub fn gen_lens(&self, batch: u64, rows: usize) -> Vec<usize> {
+        let mut rng = self.batch_rng(batch);
+        (0..rows)
+            .map(|_| rng.gen_range_inclusive(self.gen_len.0 as i64, self.gen_len.1 as i64) as usize)
+            .collect()
+    }
+
+    /// Total prompt tokens of batch `batch` (`prompts` heterogeneous
+    /// prompts), sampled from a stream disjoint from [`Self::gen_lens`].
+    pub fn prompt_tokens(&self, batch: u64, prompts: usize) -> usize {
+        let mut rng = self.batch_rng(batch ^ 0x5151_5151_5151_5151);
+        (0..prompts)
+            .map(|_| {
+                rng.gen_range_inclusive(self.prompt_len.0 as i64, self.prompt_len.1 as i64) as usize
+            })
+            .sum()
+    }
+}
+
+/// One cell of the two-fleet design space [`simulate`] prices.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// Inference replicas `R` (each a worker-pool box).
+    pub replicas: usize,
+    /// Staleness bound `K`.
+    pub max_staleness: usize,
+    /// Ready-queue capacity (`0` = unbounded).
+    pub queue_capacity: usize,
+    /// Updates to run (= generation batches to consume).
+    pub updates: usize,
+    /// Rollouts decoded per generation batch.
+    pub rows_per_batch: usize,
+    /// Prompts drawn from the traffic backlog per batch.
+    pub prompts_per_batch: u64,
+    /// Decode chunk the replicas run.
+    pub decode_chunk: usize,
+    /// Rollouts each update trains on (post-selection).
+    pub update_rollouts: usize,
+    /// Data-parallel shards of the update fleet.
+    pub shards: usize,
+    /// Rows per update micro-batch (0 = memory ceiling).
+    pub micro_batch: usize,
+    /// LoRA update discount on optimizer/comm traffic.
+    pub lora: bool,
+}
+
+/// What one [`simulate`] run measured.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Simulated makespan: when the last update finished.
+    pub wall_clock: f64,
+    /// Fraction of replica-seconds spent decoding (vs idle/blocked).
+    pub inference_util: f64,
+    /// Fraction of the makespan the update fleet spent updating.
+    pub update_util: f64,
+    /// Mean ready-queue depth sampled at admissions.
+    pub mean_queue_depth: f64,
+    /// Deepest the ready queue ever got.
+    pub max_queue_depth: usize,
+    /// Total replica-seconds blocked on a full queue.
+    pub queue_block_time: f64,
+    /// `staleness_hist[s]` = batches consumed at realized staleness `s`.
+    pub staleness_hist: Vec<u64>,
+    /// Mean realized staleness over all consumed batches.
+    pub mean_staleness: f64,
+    /// Largest realized staleness (never exceeds the bound).
+    pub max_staleness_seen: usize,
+    /// Prompts drained from the traffic backlog.
+    pub prompts_drained: u64,
+}
+
+/// Price a two-fleet cell on the cost model alone.
+///
+/// Discrete-event simulation in batch production order: batch `i` is
+/// generated on replica `i mod R` (its own [`SimClock`]), may only
+/// *start* once at most `K` earlier batches remain unconsumed (that is
+/// the staleness contract enforced at the producer: the batch will be
+/// consumed as update `i`, under a version at least `i − K`), waits for
+/// its prompts to arrive, blocks on a full ready queue, and is consumed
+/// FIFO by the sequential sharded update fleet. Realized staleness of
+/// batch `i` is `i` minus the updates finished when its generation
+/// started; the simulator asserts it never exceeds `K`.
+pub fn simulate(hw: &HwModel, traffic: &TrafficModel, spec: &FleetSpec) -> FleetReport {
+    let r = spec.replicas.max(1);
+    let k = spec.max_staleness;
+    let cap = spec.queue_capacity;
+    let upd = hw
+        .update_cost(spec.update_rollouts, spec.shards, spec.micro_batch, spec.lora)
+        .total;
+    let mut replicas: Vec<SimClock> = (0..r).map(|_| SimClock::new()).collect();
+    let mut busy = vec![0.0f64; r];
+    let mut queue: ReadyQueue<usize> = ReadyQueue::new(cap);
+    // FIFO consumption order == production order, so per-batch times are
+    // computable in one forward pass.
+    let mut upd_start = vec![0.0f64; spec.updates];
+    let mut upd_finish = vec![0.0f64; spec.updates];
+    let mut hist = vec![0u64; k + 1];
+    let mut staleness_sum = 0u64;
+    let mut max_seen = 0usize;
+    let mut gen_total = 0.0f64;
+    for i in 0..spec.updates {
+        let rep = i % r;
+        let first_prompt = i as u64 * spec.prompts_per_batch;
+        let arrival = traffic.batch_arrival(first_prompt, spec.prompts_per_batch);
+        // staleness throttle: batch i is consumed as update i under
+        // version i, generated under version v >= i − K ⟺ update
+        // i − K − 1 has finished before generation starts
+        let throttle = if i > k { upd_finish[i - k - 1] } else { 0.0 };
+        let free = replicas[rep].now();
+        let start = free.max(arrival).max(throttle);
+        replicas[rep].advance(start - free); // idle: waiting on arrival/throttle
+        let lens = traffic.gen_lens(i as u64, spec.rows_per_batch);
+        let prompt_tokens =
+            traffic.prompt_tokens(i as u64, (spec.prompts_per_batch as usize).max(1));
+        // one batched prompt pass at the saturated floor + chunked decode
+        let gen = hw.chunked_inference_time(&lens, spec.decode_chunk)
+            + prompt_tokens as f64 * hw.tok_time_floor / hw.workers.max(1) as f64;
+        replicas[rep].advance(gen);
+        busy[rep] += gen;
+        gen_total += gen;
+        let done = replicas[rep].now();
+        // queue admission: space opens when update i − cap pops its batch
+        let admit_at = if cap > 0 && i >= cap { upd_start[i - cap] } else { 0.0 };
+        let ready = done.max(admit_at);
+        queue.record_block(ready - done);
+        replicas[rep].advance(ready - done);
+        // drain entries the update fleet consumed before this admission,
+        // then admit — keeps the queue's depth telemetry honest
+        while queue
+            .front_origin()
+            .is_some_and(|o| upd_start[o as usize] <= ready && (o as usize) < i)
+        {
+            let popped = queue.pop_eligible(u64::MAX, usize::MAX);
+            debug_assert!(popped.is_some());
+        }
+        queue.push(i as u64, i);
+        // sequential update fleet consumes FIFO
+        let prev_finish = if i > 0 { upd_finish[i - 1] } else { 0.0 };
+        upd_start[i] = ready.max(prev_finish);
+        upd_finish[i] = upd_start[i] + upd;
+        // realized staleness: updates finished before generation started
+        let v = upd_finish[..i].partition_point(|&f| f <= start);
+        let s = i - v;
+        assert!(s <= k, "staleness contract violated: batch {i} consumed at staleness {s} > {k}");
+        hist[s] += 1;
+        staleness_sum += s as u64;
+        max_seen = max_seen.max(s);
+    }
+    let wall = if spec.updates > 0 { upd_finish[spec.updates - 1] } else { 0.0 };
+    let batches = spec.updates.max(1) as f64;
+    FleetReport {
+        wall_clock: wall,
+        inference_util: if wall > 0.0 { gen_total / (r as f64 * wall) } else { 0.0 },
+        update_util: if wall > 0.0 { spec.updates as f64 * upd / wall } else { 0.0 },
+        mean_queue_depth: queue.depth_mean(),
+        max_queue_depth: queue.max_depth(),
+        queue_block_time: queue.block_time(),
+        staleness_hist: hist,
+        mean_staleness: staleness_sum as f64 / batches,
+        max_staleness_seen: max_seen,
+        prompts_drained: spec.updates as u64 * spec.prompts_per_batch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+
+    fn flat_traffic() -> TrafficModel {
+        // degenerate ranges + one giant instantaneous burst: constant
+        // per-batch cost, arrivals never limit
+        TrafficModel {
+            burst: usize::MAX / 2,
+            gap: 0.0,
+            prompt_len: (32, 32),
+            gen_len: (32, 32),
+            seed: 7,
+        }
+    }
+
+    fn spec(replicas: usize, k: usize) -> FleetSpec {
+        FleetSpec {
+            replicas,
+            max_staleness: k,
+            queue_capacity: k,
+            updates: 12,
+            rows_per_batch: 64,
+            prompts_per_batch: 1,
+            decode_chunk: 16,
+            update_rollouts: 16,
+            shards: 2,
+            micro_batch: 0,
+            lora: false,
+        }
+    }
+
+    #[test]
+    fn section_defaults_and_effective_bounds() {
+        let fl = FleetSection::default();
+        fl.validate().unwrap();
+        assert_eq!(fl.inference_replicas, 1);
+        assert_eq!(fl.max_staleness, None);
+        // schedule-derived bounds: the legacy schedules are the special
+        // cases K=0 and K=1
+        assert_eq!(fl.effective_staleness(Schedule::Sync), 0);
+        assert_eq!(fl.effective_staleness(Schedule::Pipelined), 1);
+        assert_eq!(fl.effective_queue_capacity(Schedule::Sync), 0);
+        assert_eq!(fl.effective_queue_capacity(Schedule::Pipelined), 1);
+        let deep = FleetSection { max_staleness: Some(3), ..FleetSection::default() };
+        assert_eq!(deep.effective_staleness(Schedule::Pipelined), 3);
+        assert_eq!(deep.effective_queue_capacity(Schedule::Pipelined), 3);
+        let capped = FleetSection {
+            max_staleness: Some(3),
+            queue_capacity: 2,
+            ..FleetSection::default()
+        };
+        assert_eq!(capped.effective_queue_capacity(Schedule::Pipelined), 2);
+    }
+
+    #[test]
+    fn section_validation_rejects_degenerate() {
+        let cases: [(FleetSection, &str); 5] = [
+            (
+                FleetSection { inference_replicas: 0, ..Default::default() },
+                "fleet.inference_replicas",
+            ),
+            (FleetSection { traffic_burst: 0, ..Default::default() }, "fleet.traffic_burst"),
+            (FleetSection { traffic_gap: f64::NAN, ..Default::default() }, "fleet.traffic_gap"),
+            (
+                FleetSection { traffic_prompt_len_min: 0, ..Default::default() },
+                "fleet.traffic_prompt_len_min",
+            ),
+            (
+                FleetSection { traffic_gen_len_min: 65, ..Default::default() },
+                "fleet.traffic_gen_len_min",
+            ),
+        ];
+        for (fl, want) in cases {
+            let err = fl.validate().unwrap_err().to_string();
+            assert!(err.contains(want), "undescriptive error: {err}");
+        }
+    }
+
+    #[test]
+    fn ready_queue_gates_on_staleness_and_tracks_telemetry() {
+        let mut q: ReadyQueue<&str> = ReadyQueue::new(2);
+        assert!(q.is_empty() && !q.is_full());
+        q.push(0, "a");
+        q.push(1, "b");
+        assert!(q.is_full());
+        assert_eq!(q.front_origin(), Some(0));
+        // consuming at version 2 with K=1 leaves the origin-0 head stale
+        assert!(q.pop_eligible(2, 1).is_none());
+        // within the bound the oldest entry pops first
+        let e = q.pop_eligible(1, 1).unwrap();
+        assert_eq!((e.origin, e.item), (0, "a"));
+        assert_eq!(q.pop_eligible(1, 0).unwrap().item, "b");
+        assert!(q.pop_eligible(0, 9).is_none(), "empty queue pops nothing");
+        // telemetry: two admissions at depths 1 and 2
+        assert_eq!(q.pushes(), 2);
+        assert_eq!(q.max_depth(), 2);
+        assert!((q.depth_mean() - 1.5).abs() < 1e-12);
+        q.record_block(0.25);
+        q.record_block(0.5);
+        assert!((q.block_time() - 0.75).abs() < 1e-12);
+        // unbounded queue never fills
+        let mut u: ReadyQueue<u32> = ReadyQueue::new(0);
+        for i in 0..64 {
+            u.push(i, 0);
+        }
+        assert!(!u.is_full());
+    }
+
+    #[test]
+    fn traffic_arrivals_are_bursty_and_lengths_deterministic() {
+        let fl = FleetSection {
+            traffic_burst: 4,
+            traffic_gap: 2.0,
+            ..FleetSection::default()
+        };
+        let t = TrafficModel::new(&fl, 0);
+        // burst arithmetic: prompts 0..=3 land at t=0, 4..=7 at t=2, ...
+        assert_eq!(t.arrival_time(0), 0.0);
+        assert_eq!(t.arrival_time(3), 0.0);
+        assert_eq!(t.arrival_time(4), 2.0);
+        assert_eq!(t.arrival_time(11), 4.0);
+        // a batch is present when its last prompt lands
+        assert_eq!(t.batch_arrival(0, 4), 0.0);
+        assert_eq!(t.batch_arrival(0, 5), 2.0);
+        // closed form handles backlog-scale indices without iteration
+        assert_eq!(t.arrival_time(4_000_000_000), 2_000_000_000.0);
+        // sampled lengths: deterministic per batch, in range, batch-keyed
+        let a = t.gen_lens(3, 32);
+        assert_eq!(a, t.gen_lens(3, 32));
+        assert!(a.iter().all(|&l| (8..=64).contains(&l)));
+        assert_ne!(a, t.gen_lens(4, 32), "batches must sample disjoint streams");
+        let p = t.prompt_tokens(3, 8);
+        assert_eq!(p, t.prompt_tokens(3, 8));
+        assert!((8 * 16..=8 * 64).contains(&p));
+    }
+
+    /// K=0 with one replica is the sync schedule: every batch waits for
+    /// every prior update, so the makespan is the exact serial sum. K=1
+    /// matches the pipelined steady state: first generation exposed,
+    /// then `max(gen, upd)` per step, then the last update.
+    #[test]
+    fn sim_reproduces_sync_and_pipelined_closed_forms() {
+        let hw = HwModel::default();
+        let t = flat_traffic();
+        let s0 = spec(1, 0);
+        let gen = hw.chunked_inference_time(&t.gen_lens(0, s0.rows_per_batch), s0.decode_chunk)
+            + t.prompt_tokens(0, 1) as f64 * hw.tok_time_floor;
+        let upd = hw.update_cost(s0.update_rollouts, s0.shards, 0, false).total;
+        let r0 = simulate(&hw, &t, &s0);
+        assert!((r0.wall_clock - s0.updates as f64 * (gen + upd)).abs() < 1e-9);
+        assert_eq!(r0.max_staleness_seen, 0);
+        assert_eq!(r0.staleness_hist, vec![s0.updates as u64]);
+        assert_eq!(r0.queue_block_time, 0.0);
+        let s1 = spec(1, 1);
+        let r1 = simulate(&hw, &t, &s1);
+        let want = gen + (s1.updates - 1) as f64 * gen.max(upd) + upd;
+        assert!((r1.wall_clock - want).abs() < 1e-9, "pipelined {} vs {want}", r1.wall_clock);
+        assert!(r1.wall_clock < r0.wall_clock);
+        assert!(r1.max_staleness_seen <= 1);
+    }
+
+    /// The acceptance shape: wall-clock is non-increasing in R and
+    /// strictly decreases until the update fleet is the bottleneck.
+    #[test]
+    fn wall_clock_decreases_in_replicas_until_update_bound() {
+        let hw = HwModel::default();
+        let t = flat_traffic();
+        let mut last = f64::INFINITY;
+        let mut walls = Vec::new();
+        for r in [1usize, 2, 4, 8] {
+            let mut s = spec(r, 4);
+            s.queue_capacity = 4;
+            s.updates = 24;
+            let rep = simulate(&hw, &t, &s);
+            assert!(rep.wall_clock <= last + 1e-9, "R={r} slowed the fleet down");
+            // never below the update-fleet lower bound
+            let upd = hw.update_cost(s.update_rollouts, s.shards, 0, false).total;
+            assert!(rep.wall_clock >= s.updates as f64 * upd - 1e-9);
+            last = rep.wall_clock;
+            walls.push(rep.wall_clock);
+        }
+        assert!(walls[1] < walls[0], "R=2 must strictly beat R=1 while generation-bound");
+    }
+
+    /// Realized staleness never exceeds K, utilizations stay in [0, 1],
+    /// and the histogram accounts for every batch — across random cells.
+    #[test]
+    fn staleness_bound_holds_across_random_cells() {
+        for_cases(60, |rng| {
+            let hw = HwModel::default();
+            let fl = FleetSection {
+                traffic_burst: rng.gen_range_inclusive(1, 64) as usize,
+                traffic_gap: rng.gen_range_inclusive(0, 40) as f64 / 10.0,
+                ..FleetSection::default()
+            };
+            let t = TrafficModel::new(&fl, rng.next_u64());
+            let s = FleetSpec {
+                replicas: rng.gen_range_inclusive(1, 6) as usize,
+                max_staleness: rng.gen_range_inclusive(0, 4) as usize,
+                queue_capacity: rng.gen_range_inclusive(0, 4) as usize,
+                updates: rng.gen_range_inclusive(1, 20) as usize,
+                rows_per_batch: rng.gen_range_inclusive(1, 32) as usize,
+                prompts_per_batch: rng.gen_range_inclusive(1, 4) as u64,
+                decode_chunk: 16,
+                update_rollouts: rng.gen_range_inclusive(1, 32) as usize,
+                shards: rng.gen_range_inclusive(1, 4) as usize,
+                micro_batch: 0,
+                lora: false,
+            };
+            let rep = simulate(&hw, &t, &s);
+            assert!(rep.max_staleness_seen <= s.max_staleness);
+            assert!(rep.staleness_hist.iter().sum::<u64>() == s.updates as u64);
+            assert!((0.0..=1.0 + 1e-9).contains(&rep.inference_util));
+            assert!((0.0..=1.0 + 1e-9).contains(&rep.update_util));
+            assert!(rep.wall_clock >= 0.0 && rep.queue_block_time >= 0.0);
+        });
+    }
+}

@@ -24,10 +24,18 @@
 //! uses stored behaviour log-probs). Under overlap the clock charges
 //! `max(inference, update)` instead of the sum — [`SimClock`] tracks the
 //! hidden time as `overlap_saved`.
+//!
+//! Both schedules are special cases of the staleness-K disaggregated
+//! two-fleet model in [`fleet`]: `R` inference replicas feed the sharded
+//! update fleet through a bounded ready-batch queue, and a batch
+//! generated under `params(t)` may be consumed by `update(t')` only when
+//! `t' − t <= K` (`sync` ≡ K=0, `pipelined` ≡ K=1 with R=1).
 
 pub mod faults;
+pub mod fleet;
 
 pub use faults::{FaultKind, FaultPlan, FaultSection};
+pub use fleet::{FleetReport, FleetSection, FleetSpec, ReadyQueue, TrafficModel};
 
 use anyhow::{anyhow, Result};
 

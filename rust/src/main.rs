@@ -3,7 +3,7 @@
 //! ```text
 //! pods train --config configs/setting_a.toml [--iterations N]
 //! pods eval  --ckpt results/base_arith_300.ckpt --task arith --split test --chunk 16
-//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|budget|reuse|kv|faults|table3|all [--setting a] [--quick] [--probe]
+//! pods exp   fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|fleet|prune|budget|reuse|kv|faults|table3|all [--setting a] [--quick] [--probe]
 //! pods info  --profile base
 //! pods bench-check [--fresh BENCH_e2e.json] [--baseline rust/benches/BENCH_baseline.json] [--bless] [--require-baseline]
 //! pods config-docs [--check] [--out docs/CONFIG.md]
@@ -32,13 +32,13 @@ USAGE:
              (crash recovery; bit-identical to the uninterrupted run)
   pods eval  --ckpt <path> [--task arith|poly|mcq] [--split train|test|platinum]
              [--profile NAME] [--problems N] [--chunk C]
-  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|prune|budget|reuse|kv|faults|table3|all>
+  pods exp   <fig1|fig3|fig4|fig5|fig6|fig7|sched|shard|fleet|prune|budget|reuse|kv|faults|table3|all>
              [--setting a-f] [--quick] [--out-dir DIR] [--probe]
   pods info  [--profile NAME]
   pods bench-check [--fresh PATH] [--baseline PATH] [--max-regression FRAC]
              [--min-speedup RATIO] [--min-prune-speedup RATIO]
-             [--min-replay-speedup RATIO] [--min-kv-speedup RATIO] [--bless]
-             [--require-baseline]
+             [--min-replay-speedup RATIO] [--min-kv-speedup RATIO]
+             [--min-fleet-speedup RATIO] [--bless] [--require-baseline]
              --bless regenerates the committed baseline from the fresh
              report instead of checking against it
              --require-baseline makes a missing or entry-less baseline a
@@ -203,6 +203,7 @@ fn main() -> Result<()> {
                 "fig7" => exp::fig7::run(&artifacts, scale, &out_dir)?,
                 "sched" => exp::sched::run(&artifacts, scale, &out_dir)?,
                 "shard" => exp::shard::run(&out_dir)?,
+                "fleet" => exp::fleet::run(&out_dir)?,
                 "prune" => exp::prune::run(&out_dir)?,
                 "budget" => exp::budget::run(&out_dir)?,
                 "reuse" => exp::reuse::run(&out_dir)?,
@@ -218,6 +219,7 @@ fn main() -> Result<()> {
                     exp::fig7::run(&artifacts, scale, &out_dir)?;
                     exp::sched::run(&artifacts, scale, &out_dir)?;
                     exp::shard::run(&out_dir)?;
+                    exp::fleet::run(&out_dir)?;
                     exp::prune::run(&out_dir)?;
                     exp::budget::run(&out_dir)?;
                     exp::reuse::run(&out_dir)?;
@@ -274,12 +276,22 @@ fn main() -> Result<()> {
                     std::path::Path::new(&baseline),
                 )?;
                 println!("{line}");
+                // print the blessed file's content hash so the commit that
+                // records it can be matched to later bench-check logs
+                let h = pods::util::bench::baseline_hash(std::path::Path::new(&baseline))?;
+                println!("baseline hash: {h}");
                 return Ok(());
             }
             let max_reg: f64 = args.get_or("max-regression", "0.15").parse()?;
             let require_baseline = args.has("require-baseline");
             if require_baseline && !std::path::Path::new(&baseline).exists() {
                 bail!("--require-baseline: no baseline at {baseline} (record one with --bless)");
+            }
+            if std::path::Path::new(&baseline).exists() {
+                // identify which baseline revision this log compared
+                // against (the git blob hash of the committed file)
+                let h = pods::util::bench::baseline_hash(std::path::Path::new(&baseline))?;
+                println!("baseline {baseline} hash: {h}");
             }
             let report = pods::util::bench::check_regression(
                 std::path::Path::new(&fresh),
@@ -371,6 +383,22 @@ fn main() -> Result<()> {
                 Some(line) => println!("{line}"),
                 None => {
                     println!("kv speedup guard: comparison arms absent from {fresh} — skipped")
+                }
+            }
+            // same-run floor for the staleness-K fleet schedule: the R>1
+            // arm keeps two generation batches in flight, so the worker
+            // pool rides through each batch's straggler tail and must not
+            // fall behind the depth-1 pipelined arm of the same workload
+            let min_fleet: f64 = args.get_or("min-fleet-speedup", "1.0").parse()?;
+            match pods::util::bench::check_speedup(
+                std::path::Path::new(&fresh),
+                "e2e step pods fleet (r=2, k=2, 4w)",
+                "e2e step pods pipelined (4w)",
+                min_fleet,
+            )? {
+                Some(line) => println!("{line}"),
+                None => {
+                    println!("fleet speedup guard: comparison arms absent from {fresh} — skipped")
                 }
             }
         }

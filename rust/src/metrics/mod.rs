@@ -130,6 +130,31 @@ pub struct IterRow {
     /// Groups whose probe reward bracket was already narrower than
     /// `budget.width_threshold` (zero when disabled).
     pub budget_saturated_groups: usize,
+    /// Inference replicas the `[fleet]` schedule ran with (1 = the legacy
+    /// single-pool schedules).
+    pub fleet_replicas: usize,
+    /// Realized staleness of the batch this update consumed — its target
+    /// iteration minus the iteration whose policy generated it. 0 under
+    /// sync, ≤ 1 under legacy pipelined, ≤ `fleet.max_staleness` always.
+    pub fleet_staleness: usize,
+    /// Running mean of `fleet_staleness` over iterations so far
+    /// (recomputed from recorded rows, so resume reproduces it bitwise).
+    pub fleet_mean_staleness: f64,
+    /// Running max of `fleet_staleness` over iterations so far.
+    pub fleet_max_staleness: usize,
+    /// Ready-batch queue depth after this iteration's refill.
+    pub fleet_queue_depth: usize,
+    /// Simulated time producers spent blocked on queue admission. Always
+    /// zero in the training executor (its refill is demand-driven); the
+    /// `exp fleet` cost model reports non-zero blocking under bursty
+    /// traffic.
+    pub fleet_queue_block_time: f64,
+    /// Inference-fleet utilization this iteration:
+    /// `sim_inference_time / (replicas × sim_step_time)`.
+    pub fleet_inf_util: f64,
+    /// Update-fleet utilization this iteration:
+    /// `sim_update_time / sim_step_time`.
+    pub fleet_upd_util: f64,
 }
 
 impl CsvRow for IterRow {
@@ -142,13 +167,15 @@ impl CsvRow for IterRow {
          replay_rows_used,replay_store_size,replay_mean_staleness,\
          prefill_calls,prefill_calls_saved,kv_peak_bytes,\
          faults_injected,shard_retries,rows_lost,retry_time,\
-         budget_extra_rows,budget_saturated_groups"
+         budget_extra_rows,budget_saturated_groups,\
+         fleet_replicas,fleet_staleness,fleet_mean_staleness,fleet_max_staleness,\
+         fleet_queue_depth,fleet_queue_block_time,fleet_inf_util,fleet_upd_util"
     }
 
     fn csv_row(&self) -> String {
         format!(
             "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},\
-             {},{},{},{},{},{},{},{},{},{},{},{}",
+             {},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.iter,
             self.sim_time,
             self.real_time,
@@ -188,7 +215,15 @@ impl CsvRow for IterRow {
             self.rows_lost,
             self.retry_time,
             self.budget_extra_rows,
-            self.budget_saturated_groups
+            self.budget_saturated_groups,
+            self.fleet_replicas,
+            self.fleet_staleness,
+            self.fleet_mean_staleness,
+            self.fleet_max_staleness,
+            self.fleet_queue_depth,
+            self.fleet_queue_block_time,
+            self.fleet_inf_util,
+            self.fleet_upd_util
         )
     }
 }
@@ -248,6 +283,14 @@ impl IterRow {
             retry_time: p!(37),
             budget_extra_rows: p!(38),
             budget_saturated_groups: p!(39),
+            fleet_replicas: p!(40),
+            fleet_staleness: p!(41),
+            fleet_mean_staleness: p!(42),
+            fleet_max_staleness: p!(43),
+            fleet_queue_depth: p!(44),
+            fleet_queue_block_time: p!(45),
+            fleet_inf_util: p!(46),
+            fleet_upd_util: p!(47),
         })
     }
 }
@@ -473,14 +516,17 @@ mod tests {
              replay_rows_used,replay_store_size,replay_mean_staleness,\
              prefill_calls,prefill_calls_saved,kv_peak_bytes,\
              faults_injected,shard_retries,rows_lost,retry_time,\
-             budget_extra_rows,budget_saturated_groups"
+             budget_extra_rows,budget_saturated_groups,\
+             fleet_replicas,fleet_staleness,fleet_mean_staleness,fleet_max_staleness,\
+             fleet_queue_depth,fleet_queue_block_time,fleet_inf_util,fleet_upd_util"
                 .replace(char::is_whitespace, "")
         );
         // new columns append at the end, so CSVs from older runs stay
         // parseable by position-tolerant readers
         let cols: Vec<&str> = header.split(',').collect();
+        assert_eq!(cols.len(), 48);
         assert_eq!(
-            cols[cols.len() - 19..].to_vec(),
+            cols[cols.len() - 27..].to_vec(),
             vec![
                 "gen_tokens_decoded",
                 "gen_tokens_wasted",
@@ -500,7 +546,15 @@ mod tests {
                 "rows_lost",
                 "retry_time",
                 "budget_extra_rows",
-                "budget_saturated_groups"
+                "budget_saturated_groups",
+                "fleet_replicas",
+                "fleet_staleness",
+                "fleet_mean_staleness",
+                "fleet_max_staleness",
+                "fleet_queue_depth",
+                "fleet_queue_block_time",
+                "fleet_inf_util",
+                "fleet_upd_util"
             ]
         );
     }
@@ -550,6 +604,14 @@ mod tests {
             retry_time: 1.25,
             budget_extra_rows: 24,
             budget_saturated_groups: 3,
+            fleet_replicas: 2,
+            fleet_staleness: 2,
+            fleet_mean_staleness: 1.25,
+            fleet_max_staleness: 2,
+            fleet_queue_depth: 3,
+            fleet_queue_block_time: 0.5,
+            fleet_inf_util: 0.421875,
+            fleet_upd_util: 0.473684,
         };
         let header = IterRow::csv_header().replace(char::is_whitespace, "");
         let line = row.csv_row();
@@ -583,6 +645,14 @@ mod tests {
         assert_eq!(get("retry_time"), "1.25");
         assert_eq!(get("budget_extra_rows"), "24");
         assert_eq!(get("budget_saturated_groups"), "3");
+        assert_eq!(get("fleet_replicas"), "2");
+        assert_eq!(get("fleet_staleness"), "2");
+        assert_eq!(get("fleet_mean_staleness"), "1.25");
+        assert_eq!(get("fleet_max_staleness"), "2");
+        assert_eq!(get("fleet_queue_depth"), "3");
+        assert_eq!(get("fleet_queue_block_time"), "0.5");
+        assert_eq!(get("fleet_inf_util"), "0.421875");
+        assert_eq!(get("fleet_upd_util"), "0.473684");
         // the overlap identity the exec layer maintains:
         // step + saved == inference + update
         let step: f64 = get("sim_step_time").parse().unwrap();
@@ -614,6 +684,8 @@ mod tests {
             schedule: "pipelined".into(),
             retry_time: 0.7,
             kv_peak_bytes: 1 << 40,
+            fleet_mean_staleness: 1.0 / 7.0,
+            fleet_inf_util: 2.0 / 3.0,
             ..Default::default()
         };
         let line = row.csv_row();

@@ -207,6 +207,8 @@ pub fn check_regression(
     let fresh_tp = load_throughputs(fresh)?;
     let base_tp = load_throughputs(baseline)?;
     if base_tp.is_empty() {
+        // one warning per check, not one per fresh arm: this fires before
+        // the per-arm loop so a 13-arm report doesn't print 13 copies
         let msg = format!(
             "baseline {} carries no throughput entries — the regression guard is \
              checking nothing; re-record it with `cargo bench --bench e2e_step && \
@@ -273,6 +275,32 @@ pub fn bless_baseline(fresh: &Path, baseline: &Path) -> anyhow::Result<String> {
         baseline.display(),
         tps.len()
     ))
+}
+
+/// Identify a baseline file for CI logs: the git blob hash (what `git
+/// ls-files -s` shows for the committed file) when git is runnable, so a
+/// bench-check log line can be matched to the exact baseline revision it
+/// compared against; an FNV-1a-64 content hash otherwise. Both forms are
+/// prefixed so readers can tell which scheme produced them.
+pub fn baseline_hash(path: &Path) -> anyhow::Result<String> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading baseline {}: {e}", path.display()))?;
+    if let Ok(out) = std::process::Command::new("git").arg("hash-object").arg(path).output() {
+        if out.status.success() {
+            if let Ok(s) = String::from_utf8(out.stdout) {
+                let s = s.trim();
+                if !s.is_empty() {
+                    return Ok(format!("git:{s}"));
+                }
+            }
+        }
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in &bytes {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    Ok(format!("fnv1a64:{h:016x}"))
 }
 
 /// Same-run early-exit speedup guard: compares the chunked arm's rollout
@@ -397,10 +425,12 @@ mod tests {
         let base = dir.path().join("base.json");
         let fresh = dir.path().join("fresh.json");
         write_report(&base, &[]);
-        write_report(&fresh, &[("e2e step a", 100.0)]);
+        // several fresh arms on purpose: the warning must be emitted once
+        // per check, not once per arm
+        write_report(&fresh, &[("e2e step a", 100.0), ("e2e step b", 50.0), ("e2e step c", 2.0)]);
         let rep = check_regression(&fresh, &base, 0.15).unwrap();
         assert!(rep.regressions.is_empty(), "empty baseline must not fail the check");
-        assert_eq!(rep.warnings.len(), 1, "{:?}", rep.warnings);
+        assert_eq!(rep.warnings.len(), 1, "exactly one warning, not per-arm: {:?}", rep.warnings);
         assert!(rep.warnings[0].contains("no throughput entries"), "{:?}", rep.warnings);
         assert!(rep.warnings[0].contains("--bless"), "warning must say how to fix it");
         // a populated baseline warns about nothing
@@ -476,5 +506,27 @@ mod tests {
         // either arm absent: skip, don't fail
         assert!(check_speedup(&fresh, "chunked", "nope", 1.2).unwrap().is_none());
         assert!(check_speedup(&fresh, "nope", "full-G", 1.2).unwrap().is_none());
+    }
+
+    /// The baseline-hash line in bench-check logs: stable for identical
+    /// bytes, distinct for different bytes, and always scheme-prefixed so
+    /// a log line identifies which baseline revision it compared against.
+    #[test]
+    fn baseline_hash_is_content_addressed() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let a = dir.path().join("a.json");
+        let b = dir.path().join("b.json");
+        let c = dir.path().join("c.json");
+        std::fs::write(&a, "same").unwrap();
+        std::fs::write(&b, "same").unwrap();
+        std::fs::write(&c, "different").unwrap();
+        let ha = baseline_hash(&a).unwrap();
+        let hb = baseline_hash(&b).unwrap();
+        let hc = baseline_hash(&c).unwrap();
+        assert_eq!(ha, hb, "identical bytes must hash identically");
+        assert_ne!(ha, hc, "different bytes must hash differently");
+        assert!(ha.starts_with("git:") || ha.starts_with("fnv1a64:"), "{ha}");
+        // a missing file is a descriptive error, not a panic
+        assert!(baseline_hash(&dir.path().join("absent.json")).is_err());
     }
 }

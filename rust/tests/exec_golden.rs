@@ -106,8 +106,9 @@ fn sync_executor_reproduces_sequential_reference() {
     .unwrap();
     let mut ref_store = ParamStore::new(params0);
     let mut ref_update = UpdateEngine::new(ref_store.len());
-    let want =
-        ref_update.run(&tr.engine, &mut ref_store, None, &groups, &selected, &[], &c).unwrap();
+    let want = ref_update
+        .run(&tr.engine, &mut ref_store, None, &groups, &selected, &[], None, &c)
+        .unwrap();
 
     // ---- the executor ------------------------------------------------
     let stats = tr.train_iteration(0).unwrap();

@@ -1,0 +1,231 @@
+//! Goldens for the staleness-K two-fleet schedule (`[fleet]`).
+//!
+//! * The legacy schedules are special cases of the unified executor, not
+//!   parallel code paths: an explicit `[fleet]` section pinning K=0
+//!   reproduces the sync schedule, and (R=1, K=1) reproduces the
+//!   pipelined schedule, bit for bit — trained parameters, simulated
+//!   clock, and both CSVs (modulo the process-wall-clock column).
+//! * Realized staleness is bounded by K, and queue admission order is a
+//!   pure function of generation history (docs/DETERMINISM.md): trained
+//!   parameters and the per-iteration staleness/queue-depth telemetry
+//!   are bit-invariant to worker-pool size and replica count — only
+//!   clock *accounting* may move with R.
+//! * Every train-CSV row survives a header-faithful `from_csv_row`
+//!   round trip bitwise, for real runs and for randomized rows.
+//!
+//! Trainer-level tests are skipped when artifacts are absent (CI without
+//! `make artifacts`); the CSV row property always runs.
+
+mod common;
+
+use pods::config::RunConfig;
+use pods::coordinator::scheduler::Trainer;
+use pods::hwsim::FleetSection;
+use pods::metrics::{CsvRow, IterRow};
+use pods::util::prop;
+
+/// A small-but-real run config on the shared tiny fixture, with the
+/// schedule/worker/fleet knobs this suite exercises. `out_sub` isolates
+/// each arm's CSVs; the directory is wiped so stale state cannot leak.
+fn cfg(
+    name: &str,
+    schedule: &str,
+    workers: usize,
+    iterations: usize,
+    fleet: FleetSection,
+    out_sub: &str,
+) -> RunConfig {
+    let out = std::env::temp_dir().join("pods_fleet_golden").join(out_sub);
+    std::fs::remove_dir_all(&out).ok();
+    let mut b = common::tiny_builder(name, "pods_fleet_golden");
+    b.schedule = schedule.into();
+    b.workers = workers;
+    b.iterations = iterations;
+    b.fleet = fleet;
+    b.out_dir = out.to_string_lossy().into_owned();
+    b.build().unwrap()
+}
+
+/// One CSV row with the wall-clock column blanked — `real_time` (index 2)
+/// measures this process, not the simulated run, so it is the one column
+/// two equivalent runs cannot and need not reproduce.
+fn strip_realtime(row: &str) -> String {
+    row.split(',')
+        .enumerate()
+        .map(|(i, f)| if i == 2 { "_" } else { f })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Assert two trainers landed on identical parameters, simulated clock
+/// and CSVs (modulo `real_time`).
+fn assert_runs_bit_identical(a: &Trainer, b: &Trainer, what: &str) {
+    assert_eq!(a.store.params, b.store.params, "{what}: trained parameters diverged");
+    assert_eq!(
+        a.clock.now().to_bits(),
+        b.clock.now().to_bits(),
+        "{what}: simulated clock diverged ({} vs {})",
+        a.clock.now(),
+        b.clock.now()
+    );
+    assert_eq!(
+        a.clock.overlap_saved().to_bits(),
+        b.clock.overlap_saved().to_bits(),
+        "{what}: overlap accounting diverged"
+    );
+    assert_eq!(a.recorder.iters.len(), b.recorder.iters.len(), "{what}: iter rows");
+    for (ra, rb) in a.recorder.iters.iter().zip(&b.recorder.iters) {
+        assert_eq!(
+            strip_realtime(&ra.csv_row()),
+            strip_realtime(&rb.csv_row()),
+            "{what}: iter CSV row {} diverged",
+            ra.iter
+        );
+    }
+    assert_eq!(a.recorder.evals.len(), b.recorder.evals.len(), "{what}: eval rows");
+    for (ra, rb) in a.recorder.evals.iter().zip(&b.recorder.evals) {
+        assert_eq!(strip_realtime(&ra.csv_row()), strip_realtime(&rb.csv_row()), "{what}: eval");
+    }
+}
+
+/// Tentpole golden (a): pinning `max_staleness = 0` explicitly is the
+/// sync schedule — the derived and the explicit config run the identical
+/// executor path, bit for bit.
+#[test]
+fn explicit_k0_reproduces_sync_bitwise() {
+    let Some(dir) = common::artifacts() else { return };
+    let legacy = cfg("fleet_sync_legacy", "sync", 1, 2, FleetSection::default(), "sync_legacy");
+    let pinned = FleetSection { max_staleness: Some(0), ..FleetSection::default() };
+    let explicit = cfg("fleet_sync_k0", "sync", 1, 2, pinned, "sync_k0");
+    let a = common::train(&dir, legacy, 2);
+    let b = common::train(&dir, explicit, 2);
+    assert_runs_bit_identical(&a, &b, "sync vs explicit K=0");
+    assert!(
+        a.recorder.iters.iter().all(|r| r.fleet_staleness == 0 && r.fleet_queue_depth == 0),
+        "the sync schedule must realize zero staleness and keep the queue empty"
+    );
+}
+
+/// Tentpole golden (b): (R=1, K=1) is the pipelined schedule — the old
+/// single-slot prefetch is the depth-1 special case of the ready-batch
+/// queue, not a parallel code path.
+#[test]
+fn explicit_r1_k1_reproduces_pipelined_bitwise() {
+    let Some(dir) = common::artifacts() else { return };
+    let legacy = cfg("fleet_pipe", "pipelined", 1, 3, FleetSection::default(), "pipe_legacy");
+    let pinned = FleetSection {
+        inference_replicas: 1,
+        max_staleness: Some(1),
+        ..FleetSection::default()
+    };
+    let explicit = cfg("fleet_pipe_k1", "pipelined", 1, 3, pinned, "pipe_k1");
+    let a = common::train(&dir, legacy, 3);
+    let b = common::train(&dir, explicit, 3);
+    assert_runs_bit_identical(&a, &b, "pipelined vs explicit (R=1, K=1)");
+    assert!(
+        a.recorder.iters.iter().all(|r| r.fleet_staleness <= 1),
+        "pipelined realized staleness must stay within K = 1"
+    );
+    assert!(
+        a.recorder.iters.iter().any(|r| r.fleet_staleness == 1),
+        "steady-state pipelined steps must consume one-step-stale batches"
+    );
+}
+
+/// Property: realized staleness never exceeds K, and queue admission
+/// order is a pure function of generation history — trained parameters
+/// and the staleness/queue-depth telemetry are bit-invariant to the
+/// worker-pool size and to the replica count. (The simulated clock is
+/// *meant* to move with both — that is the cost model — so it is
+/// deliberately not compared across the grid.)
+#[test]
+fn staleness_bounded_and_admission_order_is_history_not_partition() {
+    let Some(dir) = common::artifacts() else { return };
+    let k = 2usize;
+    let iters = 4usize;
+    let run = |workers: usize, replicas: usize| {
+        let fl = FleetSection {
+            inference_replicas: replicas,
+            max_staleness: Some(k),
+            ..FleetSection::default()
+        };
+        let sub = format!("grid_{workers}w_{replicas}r");
+        let c = cfg("fleet_grid", "pipelined", workers, iters, fl, &sub);
+        common::train(&dir, c, iters)
+    };
+    let reference = run(1, 1);
+    assert!(
+        reference.recorder.iters.iter().all(|r| r.fleet_staleness <= k),
+        "realized staleness exceeded the configured bound K = {k}"
+    );
+    assert!(
+        reference.recorder.iters.iter().any(|r| r.fleet_staleness > 1),
+        "a depth-{k} queue must realize staleness beyond the pipelined 1 at steady state"
+    );
+    for (workers, replicas) in [(4, 1), (1, 2), (4, 2)] {
+        let other = run(workers, replicas);
+        let what = format!("{workers} workers, R={replicas}");
+        assert_eq!(
+            reference.store.params, other.store.params,
+            "{what}: partition/replica count changed trained parameters"
+        );
+        for (ra, rb) in reference.recorder.iters.iter().zip(&other.recorder.iters) {
+            assert_eq!(
+                (ra.fleet_staleness, ra.fleet_queue_depth),
+                (rb.fleet_staleness, rb.fleet_queue_depth),
+                "{what}: admission history moved with the partition at iter {}",
+                ra.iter
+            );
+        }
+    }
+}
+
+/// Every recorded train-CSV row from a real staleness-K run parses back
+/// through [`IterRow::from_csv_row`] and re-serializes bitwise, and the
+/// row column count matches the header.
+#[test]
+fn real_run_csv_rows_roundtrip_bitwise() {
+    let Some(dir) = common::artifacts() else { return };
+    let fl = FleetSection { max_staleness: Some(2), ..FleetSection::default() };
+    let c = cfg("fleet_csv", "pipelined", 1, 3, fl, "csv_roundtrip");
+    let tr = common::train(&dir, c, 3);
+    let n_cols = IterRow::csv_header().split(',').count();
+    assert!(!tr.recorder.iters.is_empty());
+    for row in &tr.recorder.iters {
+        let line = row.csv_row();
+        assert_eq!(line.split(',').count(), n_cols, "row/header column mismatch: {line}");
+        let parsed = IterRow::from_csv_row(&line).expect("recorded row must parse");
+        assert_eq!(parsed.csv_row(), line, "CSV row did not round-trip bitwise");
+    }
+}
+
+/// The same round trip as a pure property over randomized rows — runs
+/// without artifacts, covering the fleet telemetry columns' full f64
+/// range rather than just the values a tiny run happens to produce.
+#[test]
+fn randomized_csv_rows_roundtrip_bitwise() {
+    let n_cols = IterRow::csv_header().split(',').count();
+    prop::for_cases(64, |rng| {
+        let row = IterRow {
+            iter: rng.below(10_000),
+            sim_time: rng.f64() * 1e4,
+            real_time: rng.f64(),
+            sim_inference_time: rng.f64() * 100.0,
+            sim_update_time: rng.f64() * 10.0,
+            train_reward: rng.f64() as f32,
+            fleet_replicas: 1 + rng.below(8),
+            fleet_staleness: rng.below(5),
+            fleet_mean_staleness: rng.f64() * 4.0,
+            fleet_max_staleness: rng.below(5),
+            fleet_queue_depth: rng.below(9),
+            fleet_queue_block_time: rng.f64() * 50.0,
+            fleet_inf_util: rng.f64(),
+            fleet_upd_util: rng.f64(),
+            ..IterRow::default()
+        };
+        let line = row.csv_row();
+        assert_eq!(line.split(',').count(), n_cols, "row/header column mismatch: {line}");
+        let parsed = IterRow::from_csv_row(&line).expect("randomized row must parse");
+        assert_eq!(parsed.csv_row(), line, "CSV row did not round-trip bitwise");
+    });
+}
